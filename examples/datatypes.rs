@@ -1,0 +1,95 @@
+//! Data-type flexibility demo (the paper's Table 2 axis).
+//!
+//! Builds the best kernel for every supported data type (FP16/32/64,
+//! uint8/16/32), prints the Table-2-style summary, and then executes the
+//! integer and double-precision AOT artifacts via PJRT to show the
+//! type-generic path runs end-to-end — including exact integer matmul.
+//!
+//! Run: `cargo run --release --example datatypes`
+
+use anyhow::{Context, Result};
+use fcamm::coordinator::{build_kernel, BuildOutcome};
+use fcamm::datatype::DataType;
+use fcamm::device::catalog::vcu1525;
+use fcamm::model::selection::SelectionOptions;
+use fcamm::runtime::engine::HostTensor;
+use fcamm::runtime::Runtime;
+use fcamm::util::rng::Rng;
+use fcamm::util::table::{fmt_f, fmt_pct, Table};
+
+fn main() -> Result<()> {
+    // --- Model: one build per data type.
+    let device = vcu1525();
+    let mut table = Table::new(vec![
+        "Data type", "x_p", "y_c", "x_tot", "y_tot", "Freq [MHz]", "Perf [GOp/s]",
+        "GOp/J", "Op/Byte", "LUT", "DSP", "BRAM",
+    ]);
+    for dt in DataType::ALL {
+        let BuildOutcome::Success(r) = build_kernel(device, dt, SelectionOptions::default())
+        else {
+            println!("{dt}: no feasible kernel");
+            continue;
+        };
+        let c = r.config;
+        table.row(vec![
+            dt.name().to_string(),
+            c.tiling.x_p.to_string(),
+            c.tiling.y_c.to_string(),
+            c.tiling.x_tot().to_string(),
+            c.tiling.y_tot().to_string(),
+            fmt_f(c.f_hz / 1e6, 1),
+            fmt_f(r.perf_gops, 0),
+            fmt_f(r.eff_gopj, 1),
+            fmt_f(r.intensity_op_b, 0),
+            fmt_pct(c.util.luts, 0),
+            fmt_pct(c.util.dsps, 0),
+            fmt_pct(c.bram_frac, 0),
+        ]);
+    }
+    println!("model-selected kernels per data type ({}):", device.name);
+    print!("{}", table.render());
+
+    // --- Runtime: type-generic execution through PJRT.
+    let rt = Runtime::open(Runtime::default_dir())
+        .context("artifacts missing — run `make artifacts` first")?;
+    let mut rng = Rng::new(99);
+
+    // Exact unsigned 32-bit matmul.
+    let kernel = rt.kernel("mmm_u32_128")?;
+    let spec = kernel.spec.clone();
+    let (m, n, k) = (spec.m, spec.n, spec.k);
+    let a: Vec<u32> = (0..m * k).map(|_| rng.gen_range(0, 100) as u32).collect();
+    let b: Vec<u32> = (0..k * n).map(|_| rng.gen_range(0, 100) as u32).collect();
+    let out = kernel.execute(&[HostTensor::U32(a.clone()), HostTensor::U32(b.clone())])?;
+    let HostTensor::U32(out) = out else { anyhow::bail!("expected u32") };
+    let spot: u64 = (0..k).map(|kk| a[kk] as u64 * b[kk * n] as u64).sum();
+    assert_eq!(out[0] as u64, spot);
+    println!("\nuint32 artifact: exact integer matmul verified (C[0][0] = {spot})");
+
+    // Double precision.
+    let kernel = rt.kernel("mmm_f64_128")?;
+    let spec = kernel.spec.clone();
+    let (m, n, k) = (spec.m, spec.n, spec.k);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.next_f64() - 0.5).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.next_f64() - 0.5).collect();
+    let out = kernel.execute(&[HostTensor::F64(a.clone()), HostTensor::F64(b.clone())])?;
+    let HostTensor::F64(out) = out else { anyhow::bail!("expected f64") };
+    let want: f64 = (0..k).map(|kk| a[kk] * b[kk * n]).sum();
+    assert!((out[0] - want).abs() < 1e-10);
+    println!("float64 artifact: verified to 1e-10 (C[0][0] = {want:.6})");
+
+    // Transposed-A variant (the Sec. 4.3 on-the-fly transposition path).
+    let kernel = rt.kernel("mmm_at_f32_128")?;
+    let spec = kernel.spec.clone();
+    let (m, n, k) = (spec.m, spec.n, spec.k);
+    let at = rng.fill_normal_f32(k * m); // stored as (k, m)
+    let b = rng.fill_normal_f32(k * n);
+    let out = kernel.execute(&[HostTensor::F32(at.clone()), HostTensor::F32(b.clone())])?;
+    let out = out.as_f32().unwrap();
+    let want: f64 = (0..k).map(|kk| at[kk * m] as f64 * b[kk * n] as f64).sum();
+    assert!((out[0] as f64 - want).abs() < 1e-2 * (1.0 + want.abs()));
+    println!("transposed-A artifact: verified (column-contiguous DDR reads, Sec. 4.3)");
+
+    println!("\ndatatypes OK");
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! End-to-end validation driver (DESIGN.md experiment `e2e`).
+//!
+//! Proves all layers compose on a real workload:
+//!
+//! 1. **Build** — Sec.-5.1 parameter selection for FP32 on the VCU1525,
+//!    through the routing/frequency model (the paper's 8–24 h P&R gate).
+//! 2. **Simulate** — the generated architecture at paper scale (16384³)
+//!    and at the workload scale, verifying the simulated communication
+//!    volume against Eq. 6 (the paper's own Sec.-5.4 check).
+//! 3. **Execute** — a real 512³ GEMM through the L1 Pallas kernel (AOT →
+//!    HLO text → PJRT) driven by the L3 tiled scheduler, validated
+//!    against the host reference AND against the element-level hardware
+//!    simulator running the *same* schedule on the same data.
+//! 4. **Report** — the headline metrics, recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e`
+
+use anyhow::{bail, Context, Result};
+use fcamm::coordinator::{build_kernel, BuildOutcome};
+use fcamm::datatype::{DataType, Semiring};
+use fcamm::device::catalog::vcu1525;
+use fcamm::model::io;
+use fcamm::model::selection::SelectionOptions;
+use fcamm::model::tiling::TilingConfig;
+use fcamm::runtime::Runtime;
+use fcamm::schedule::TiledExecutor;
+use fcamm::sim::exact::{reference_matmul, ExactSim};
+use fcamm::sim::simulate_timeline;
+use fcamm::util::rng::Rng;
+
+fn main() -> Result<()> {
+    println!("=== FCAMM end-to-end validation ===\n");
+
+    // ---------- 1. Build flow ----------------------------------------
+    let device = vcu1525();
+    let report = match build_kernel(device, DataType::F32, SelectionOptions::default()) {
+        BuildOutcome::Success(r) => r,
+        other => bail!("build flow failed: {other:?}"),
+    };
+    let cfg = report.config;
+    println!("[1/4] build: {} -> {}", device.name, cfg.tiling);
+    println!(
+        "      N_c {} | {:.1} MHz | LUT {:.0}% DSP {:.0}% BRAM {:.0}%",
+        cfg.n_c(),
+        cfg.f_hz / 1e6,
+        cfg.util.luts * 100.0,
+        cfg.util.dsps * 100.0,
+        cfg.bram_frac * 100.0
+    );
+    println!(
+        "      modeled @16384³: {:.0} GOp/s, {:.1} GOp/J, {:.0} Op/Byte, {:.2} GB/s",
+        report.perf_gops, report.eff_gopj, report.intensity_op_b, report.bandwidth_gb_s
+    );
+
+    // ---------- 2. Simulation + Eq.-6 verification --------------------
+    let (m_l, n_l, k_l) = (16384u64, 16384u64, 16384u64);
+    let sim_large = simulate_timeline(cfg.tiling, m_l, n_l, k_l);
+    let q_analytic = io::q_elements_hardware(cfg.tiling, m_l, n_l, k_l);
+    if sim_large.q_elements() != q_analytic {
+        bail!("Q mismatch: sim {} vs Eq.6 {}", sim_large.q_elements(), q_analytic);
+    }
+    println!("\n[2/4] simulate 16384³ on the generated architecture:");
+    println!(
+        "      {:.2}s wallclock-on-fpga | {:.0} GOp/s | efficiency {:.3}",
+        sim_large.time_s(cfg.f_hz),
+        sim_large.performance_ops(cfg.f_hz) / 1e9,
+        sim_large.compute_efficiency(cfg.n_c())
+    );
+    println!(
+        "      Q = {:.2} GB == Eq. 6 (paper's Sec.-5.4 verification) | avg BW {:.2} GB/s",
+        sim_large.q_bytes(DataType::F32) as f64 / 1e9,
+        sim_large.bandwidth_bytes_per_sec(DataType::F32, cfg.f_hz) / 1e9
+    );
+    // Communication-avoidance headline: vs the naive schedule.
+    let naive = fcamm::sim::baseline::naive_q(m_l, n_l, k_l);
+    println!(
+        "      communication avoided: {:.0}x less off-chip traffic than naive",
+        naive / sim_large.q_elements() as f64
+    );
+
+    // ---------- 3. Real numerics through the full stack ---------------
+    let rt = Runtime::open(Runtime::default_dir())
+        .context("artifacts missing — run `make artifacts` first")?;
+    println!("\n[3/4] execute 512³ via Pallas->HLO->PJRT (platform: {}):", rt.engine().platform());
+    let exec = TiledExecutor::from_runtime(&rt)?;
+    let size = 512usize;
+    let mut rng = Rng::new(777);
+    let a = rng.fill_normal_f32(size * size);
+    let b = rng.fill_normal_f32(size * size);
+    let run = exec.matmul(&a, &b, size, size, size)?;
+    println!(
+        "      {:?} wallclock | {} artifact steps | {:.1} Mmadd/s host-side",
+        run.wall,
+        run.steps_executed,
+        run.madds_per_sec() / 1e6
+    );
+
+    // Host reference.
+    let expected = reference_matmul(Semiring::PlusTimes, &a, &b, size, size, size);
+    let mut max_err = 0f64;
+    for (got, want) in run.c.iter().zip(&expected) {
+        max_err = max_err.max(((got - want).abs() / (1.0 + want.abs())) as f64);
+    }
+    if max_err > 1e-4 {
+        bail!("PJRT vs reference: max rel err {max_err:.2e}");
+    }
+    println!("      vs host reference: max rel err {max_err:.2e}  OK");
+
+    // Element-level hardware simulator on the same data (scaled-down
+    // chain so the 512³ run stays quick): the third independent
+    // implementation of the schedule.
+    let t_hw = TilingConfig { x_c: 1, y_c: 8, x_p: 16, y_p: 1, x_t: 8, y_t: 16, x_b: 1, y_b: 1 };
+    let hw = ExactSim::new(t_hw).run(&a, &b, size, size, size);
+    let mut max_err_hw = 0f64;
+    for (got, want) in hw.c.iter().zip(&run.c) {
+        max_err_hw = max_err_hw.max(((got - want).abs() / (1.0 + want.abs())) as f64);
+    }
+    if max_err_hw > 1e-3 {
+        bail!("hardware-sim vs PJRT: max rel err {max_err_hw:.2e}");
+    }
+    println!("      vs element-level hardware sim: max rel err {max_err_hw:.2e}  OK");
+    println!(
+        "      hw-sim counters: {} cycles, Q = {} elements (== Eq.6: {})",
+        hw.report.total_cycles(),
+        hw.report.q_elements(),
+        hw.report.q_elements() == io::q_elements_hardware(t_hw, 512, 512, 512)
+    );
+
+    // ---------- 4. Headline ------------------------------------------
+    println!("\n[4/4] headline (record in EXPERIMENTS.md):");
+    println!(
+        "      paper Table 2 FP32: 409 GOp/s @ 145.7 MHz, 302 Op/Byte, 10.9 GOp/J"
+    );
+    println!(
+        "      this model:         {:.0} GOp/s @ {:.1} MHz, {:.0} Op/Byte, {:.1} GOp/J",
+        report.perf_gops,
+        cfg.f_hz / 1e6,
+        report.intensity_op_b,
+        report.eff_gopj
+    );
+    println!("\ne2e OK — all layers compose.");
+    Ok(())
+}

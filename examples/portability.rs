@@ -1,0 +1,75 @@
+//! Portability demo: the paper's "we do not assume the target hardware"
+//! claim (Sec. 1), exercised across the device catalog.
+//!
+//! Runs the full Sec.-5.1 build flow for FP32 (and FP16) on every
+//! cataloged device — Xilinx multi-SLR, Xilinx monolithic, Intel
+//! Stratix 10 / Arria 10 (native FP DSPs, M20K blocks), and the tiny test
+//! device — printing what the model derives for each: the whole point of
+//! expressing the design in hardware constants is that this table falls
+//! out of the same code path.
+//!
+//! Run: `cargo run --release --example portability`
+
+use anyhow::Result;
+use fcamm::coordinator::{build_kernel, BuildOutcome};
+use fcamm::datatype::DataType;
+use fcamm::device::catalog::all_devices;
+use fcamm::model::selection::SelectionOptions;
+use fcamm::util::table::{fmt_f, fmt_pct, Table};
+
+fn main() -> Result<()> {
+    for dt in [DataType::F32, DataType::F16] {
+        println!("== {dt} kernels across the catalog ==");
+        let mut t = Table::new(vec![
+            "Device", "x_p", "y_c", "N_c", "Tile", "Freq [MHz]", "Perf [GOp/s]",
+            "GOp/J", "Op/Byte", "LUT", "DSP", "BRAM",
+        ]);
+        for dev in all_devices() {
+            match build_kernel(dev, dt, SelectionOptions::default()) {
+                BuildOutcome::Success(r) => {
+                    let c = r.config;
+                    t.row(vec![
+                        dev.name.to_string(),
+                        c.tiling.x_p.to_string(),
+                        c.tiling.y_c.to_string(),
+                        c.n_c().to_string(),
+                        format!("{}x{}", c.tiling.x_tot(), c.tiling.y_tot()),
+                        fmt_f(c.f_hz / 1e6, 1),
+                        fmt_f(r.perf_gops, 0),
+                        fmt_f(r.eff_gopj, 1),
+                        fmt_f(r.intensity_op_b, 0),
+                        fmt_pct(c.util.luts, 0),
+                        fmt_pct(c.util.dsps, 0),
+                        fmt_pct(c.bram_frac, 0),
+                    ]);
+                }
+                BuildOutcome::NoFeasibleConfig => {
+                    t.row(vec![
+                        dev.name.to_string(),
+                        "-".into(), "-".into(), "-".into(), "infeasible".into(),
+                        "-".into(), "-".into(), "-".into(), "-".into(),
+                        "-".into(), "-".into(), "-".into(),
+                    ]);
+                }
+                BuildOutcome::RoutingFailure(v) => {
+                    t.row(vec![
+                        dev.name.to_string(),
+                        "-".into(), "-".into(), "-".into(),
+                        format!("routing: {}", v[0]),
+                        "-".into(), "-".into(), "-".into(), "-".into(),
+                        "-".into(), "-".into(), "-".into(),
+                    ]);
+                }
+            }
+        }
+        print!("{}", t.render());
+        println!();
+    }
+
+    println!("observations (asserted in coordinator_integration tests):");
+    println!("  - Stratix 10's native FP DSPs make FP32 DSP-bound instead of LUT-bound;");
+    println!("  - the monolithic device keeps higher clocks at high utilization (no SLR cliff);");
+    println!("  - the toy device still yields a correct, tiny kernel — same code path.");
+    println!("\nportability OK");
+    Ok(())
+}

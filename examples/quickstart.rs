@@ -1,0 +1,71 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. Pick a device from the catalog and run the paper's Sec.-5.1
+//!    parameter selection for FP32.
+//! 2. Simulate the generated architecture on a medium GEMM.
+//! 3. Execute a real GEMM through the AOT-compiled Pallas kernel via
+//!    PJRT and check the numerics.
+//!
+//! Run (after `make artifacts`): `cargo run --release --example quickstart`
+
+use anyhow::{Context, Result};
+use fcamm::coordinator::{build_kernel, BuildOutcome};
+use fcamm::datatype::DataType;
+use fcamm::device::catalog::vcu1525;
+use fcamm::model::selection::SelectionOptions;
+use fcamm::runtime::Runtime;
+use fcamm::schedule::TiledExecutor;
+use fcamm::sim::simulate_timeline;
+use fcamm::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // --- 1. Model: build the best FP32 kernel for the paper's board.
+    let device = vcu1525();
+    let report = match build_kernel(device, DataType::F32, SelectionOptions::default()) {
+        BuildOutcome::Success(r) => r,
+        other => anyhow::bail!("build failed: {other:?}"),
+    };
+    let cfg = report.config;
+    println!("[model] {} kernel on {}:", cfg.dt, device.name);
+    println!("[model]   tiling {}", cfg.tiling);
+    println!("[model]   N_c = {}, f = {:.1} MHz", cfg.n_c(), cfg.f_hz / 1e6);
+    println!(
+        "[model]   modeled {:.0} GOp/s, {:.0} Op/Byte, {:.2} GB/s off-chip",
+        report.perf_gops, report.intensity_op_b, report.bandwidth_gb_s
+    );
+
+    // --- 2. Simulator: run the architecture on a 4096³ GEMM.
+    let sim = simulate_timeline(cfg.tiling, 4096, 4096, 4096);
+    println!(
+        "[sim]   4096³: {} cycles, {:.1} ms, {:.0} GOp/s, Q = {} MB",
+        sim.total_cycles(),
+        sim.time_s(cfg.f_hz) * 1e3,
+        sim.performance_ops(cfg.f_hz) / 1e9,
+        sim.q_bytes(DataType::F32) / (1 << 20),
+    );
+
+    // --- 3. Runtime: real numerics through Pallas → HLO → PJRT.
+    let rt = Runtime::open(Runtime::default_dir())
+        .context("artifacts missing — run `make artifacts` first")?;
+    let exec = TiledExecutor::from_runtime(&rt)?;
+    let size = 256usize;
+    let mut rng = Rng::new(2024);
+    let a = rng.fill_normal_f32(size * size);
+    let b = rng.fill_normal_f32(size * size);
+    let run = exec.matmul(&a, &b, size, size, size)?;
+    println!(
+        "[pjrt]  {size}³ in {:?} over {} artifact steps",
+        run.wall, run.steps_executed
+    );
+
+    // Verify one output row against a host-side dot product.
+    let i = 17usize;
+    for j in [0usize, 100, 255] {
+        let expected: f64 =
+            (0..size).map(|kk| a[i * size + kk] as f64 * b[kk * size + j] as f64).sum();
+        let got = run.c[i * size + j] as f64;
+        assert!((got - expected).abs() < 1e-2 * (1.0 + expected.abs()));
+    }
+    println!("[pjrt]  numerics verified — quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,121 @@
+"""AOT driver: lower every ModelSpec to HLO *text* + a manifest.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+
+This writes every artifact from ``model.default_specs()`` into the directory
+of ``--out``, plus ``manifest.json`` describing shapes/dtypes/ops for the
+Rust runtime, plus the default ``model.hlo.txt`` (a copy of the quickstart
+spec) that the Makefile uses as its freshness stamp.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+
+# FP64 artifacts require x64 mode; this is build-time-only code, so flipping
+# the global flag here is safe (tests import this module before jax.numpy
+# use for the same reason).
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text, with return_tuple=True.
+
+    ``return_tuple=True`` makes every artifact's output a 1-tuple so the
+    Rust side can uniformly unwrap with ``to_tuple1()``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: model.ModelSpec) -> str:
+    fn, args = spec.build()
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def manifest_entry(spec: model.ModelSpec, filename: str) -> dict:
+    return {
+        "name": spec.name,
+        "file": filename,
+        "op": spec.op,
+        "dtype": spec.dtype,
+        "m": spec.m,
+        "n": spec.n,
+        "k": spec.k,
+        "block": list(spec.block),
+        "inputs": [
+            {"shape": list(shape), "dtype": dt}
+            for shape, dt in spec.input_shapes()
+        ],
+        "output": {
+            "shape": list(spec.output_shape()[0]),
+            "dtype": spec.output_shape()[1],
+        },
+    }
+
+
+def build_artifacts(out_dir: str, specs=None, default_name: str = "model.hlo.txt",
+                    verbose: bool = True) -> dict:
+    """Lower all specs into ``out_dir``; return the manifest dict."""
+    specs = list(specs if specs is not None else model.default_specs())
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for spec in specs:
+        filename = f"{spec.name}.hlo.txt"
+        text = lower_spec(spec)
+        path = os.path.join(out_dir, filename)
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"  {spec.name}: {spec.op} {spec.dtype} "
+                  f"{spec.m}x{spec.n}x{spec.k} -> {filename} "
+                  f"({len(text)} chars)", file=sys.stderr)
+        entries.append(manifest_entry(spec, filename))
+
+    manifest = {"version": 1, "default": specs[0].name, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Makefile freshness stamp: default artifact under the canonical name.
+    default_src = os.path.join(out_dir, entries[0]["file"])
+    with open(default_src) as f, open(os.path.join(out_dir, default_name), "w") as g:
+        g.write(f.read())
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts/model.hlo.txt",
+                        help="path of the default artifact; its directory "
+                             "receives all artifacts + manifest.json")
+    args = parser.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    default_name = os.path.basename(args.out)
+    manifest = build_artifacts(out_dir, default_name=default_name)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+          f"to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Distance product (tropical / min-plus semiring) kernel entry point.
+
+The paper (Sec. 5.2) highlights that the architecture's compute units can be
+re-specified, "e.g., to compute the distance product by replacing multiply
+and add with add and minimum". The Pallas implementation shares the full
+memory-tile machinery in ``mmm.py``; this module is the named entry point.
+"""
+
+from __future__ import annotations
+
+from .mmm import matmul
+
+__all__ = ["distance_product"]
+
+
+def distance_product(a, b, *, bm: int = 64, bn: int = 64, bk: int = 32,
+                     out_dtype=None):
+    """C[i,j] = min_k (A[i,k] + B[k,j]) with the memory-tile decomposition."""
+    return matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                  semiring="min_plus")

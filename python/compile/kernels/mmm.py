@@ -1,0 +1,200 @@
+"""L1: Pallas memory-tile outer-product matrix-multiplication kernels.
+
+This is the compute hot-spot of the paper ("Flexible Communication Avoiding
+Matrix Multiplication on FPGA with High-Level Synthesis", de Fine Licht et
+al.), re-expressed for the TPU programming model per DESIGN.md
+§Hardware-Adaptation:
+
+  * The paper's *memory tile* (the ``x_tot × y_tot`` output block buffered
+    in BRAM across the full ``k`` loop) becomes the Pallas output block held
+    in VMEM across the ``k`` grid dimension: the output ``BlockSpec`` index
+    map ignores the ``k`` grid index, so the same VMEM block accumulates for
+    all ``k`` steps and is written back ("drained") exactly once per
+    ``(i_mem, j_mem)`` tile — the paper's sequential drain phase (Sec. 4.4).
+  * The paper's *compute tile* (``N_c`` parallel multiply-adds per cycle)
+    becomes one MXU-shaped ``(bm, bk) @ (bk, bn)`` block contraction per
+    grid step.
+  * The Feed A / Feed B / Transpose streaming modules become ``BlockSpec``
+    index maps describing the HBM→VMEM schedule; the transposed-A variant
+    reads ``A`` stored column-major (i.e. as ``Aᵀ``), matching Sec. 4.3.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute, while interpret mode lowers
+to plain HLO that round-trips through ``artifacts/*.hlo.txt`` into the Rust
+runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "matmul",
+    "matmul_transposed_a",
+    "matmul_accumulate",
+    "validate_block_shapes",
+]
+
+
+def validate_block_shapes(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> None:
+    """Check the grid decomposition evenly tiles the iteration space.
+
+    Mirrors the paper's constraint that the memory tile sizes are built from
+    integer multiples of the inner tiling layers (Eq. 4): we do not support
+    ragged edges in the kernel itself — the Rust scheduler pads instead,
+    exactly like the HLS kernel requires padded matrix sizes.
+    """
+    for name, v in (("bm", bm), ("bn", bn), ("bk", bk)):
+        if v <= 0:
+            raise ValueError(f"{name}={v} must be positive")
+    if m % bm != 0:
+        raise ValueError(f"m={m} not divisible by block bm={bm}")
+    if n % bn != 0:
+        raise ValueError(f"n={n} not divisible by block bn={bn}")
+    if k % bk != 0:
+        raise ValueError(f"k={k} not divisible by block bk={bk}")
+
+
+def _pallas_matmul(
+    a,
+    b,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype=None,
+    transpose_a: bool = False,
+    semiring: str = "plus_times",
+):
+    """Shared implementation for all matmul entry points."""
+    if transpose_a:
+        k, m = a.shape
+    else:
+        m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: A gives k={k}, B gives k={k2}")
+    validate_block_shapes(m, n, k, bm, bn, bk)
+    out_dtype = out_dtype or a.dtype
+
+    grid = (m // bm, n // bn, k // bk)
+
+    if transpose_a:
+        # A is stored as (k, m): read a (bk, bm) block and transpose in VMEM.
+        # This is the paper's on-the-fly Transpose module (Sec. 4.3) — the
+        # DDR-side read is contiguous (row-major over k-major storage), the
+        # re-ordering happens on-chip.
+        a_spec = pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
+    else:
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    # The output index map ignores kk: the memory tile stays resident in
+    # VMEM for the whole k loop (the paper's full-S reuse, no double
+    # buffering of C).
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    # ``init`` must be a plain Python scalar: pallas kernels may not capture
+    # traced array constants.
+    if semiring == "plus_times":
+        init = 0
+    elif semiring == "min_plus":
+        if jnp.issubdtype(jnp.dtype(out_dtype), jnp.floating):
+            init = float("inf")
+        else:
+            init = int(jnp.iinfo(out_dtype).max)
+    else:
+        raise ValueError(f"unknown semiring {semiring!r}")
+
+    if semiring == "min_plus":
+        def kernel(a_ref, b_ref, o_ref):
+            @pl.when(pl.program_id(2) == 0)
+            def _init():
+                o_ref[...] = jnp.full_like(o_ref, init)
+
+            a_blk = a_ref[...]
+            if transpose_a:
+                a_blk = a_blk.T
+            # (bm, bk, bn) tropical "products", reduced over k, then merged
+            # into the resident memory tile.
+            prod = a_blk[:, :, None] + b_ref[...][None, :, :]
+            o_ref[...] = jnp.minimum(o_ref[...], jnp.min(prod, axis=1))
+    else:
+        def kernel(a_ref, b_ref, o_ref):
+            @pl.when(pl.program_id(2) == 0)
+            def _init():
+                o_ref[...] = jnp.full_like(o_ref, init)
+
+            a_blk = a_ref[...]
+            if transpose_a:
+                a_blk = a_blk.T
+            o_ref[...] += jnp.dot(a_blk, b_ref[...], preferred_element_type=o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,
+    )(a, b)
+
+
+def matmul(a, b, *, bm: int = 64, bn: int = 64, bk: int = 32, out_dtype=None,
+           semiring: str = "plus_times"):
+    """C = A·B with the memory-tile decomposition.
+
+    ``a: (m, k)``, ``b: (k, n)``; ``(bm, bn)`` is the memory tile resident
+    in VMEM, ``bk`` the compute-tile depth per grid step.
+    """
+    return _pallas_matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                          semiring=semiring)
+
+
+def matmul_transposed_a(at, b, *, bm: int = 64, bn: int = 64, bk: int = 32,
+                        out_dtype=None, semiring: str = "plus_times"):
+    """C = Aᵀ·B where ``at`` is A stored transposed, shape ``(k, m)``.
+
+    The paper's Sec.-4.3 configuration: A is consumed column-wise, so
+    passing it pre-transposed (or transposing on the fly) keeps DDR reads
+    contiguous. Here the contiguous read is the ``(bk, bm)`` block of
+    ``at``; the in-VMEM transpose is the Transpose module.
+    """
+    return _pallas_matmul(at, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                          transpose_a=True, semiring=semiring)
+
+
+def matmul_accumulate(c, a, b, *, bm: int = 64, bn: int = 64, bk: int = 32):
+    """C' = C + A·B — the host-side accumulation step.
+
+    The Rust L3 scheduler implements the *outer* loops of Listing 2 (the
+    memory-tile iteration over n, m and the k loop across memory tiles);
+    each step hands one ``(x_tot, y_tot)`` tile plus a k-slab to this
+    artifact and accumulates partial results, exactly the ``|W_B,i|``
+    partial-result writebacks of Eq. 3 when k exceeds one slab.
+    """
+    return c + _pallas_matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=c.dtype)
+
+
+def matmul_reference_blocked(a, b, *, bm: int, bn: int, bk: int):
+    """Non-pallas blocked matmul with the identical loop structure.
+
+    Used by tests to show the grid decomposition (not pallas itself)
+    produces the right reduction order.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    validate_block_shapes(m, n, k, bm, bn, bk)
+    out = jnp.zeros((m, n), dtype=a.dtype)
+    for i in range(m // bm):
+        for j in range(n // bn):
+            acc = jnp.zeros((bm, bn), dtype=a.dtype)
+            for kk in range(k // bk):
+                acc = acc + a[i * bm:(i + 1) * bm, kk * bk:(kk + 1) * bk] @ \
+                    b[kk * bk:(kk + 1) * bk, j * bn:(j + 1) * bn]
+            out = out.at[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn].set(acc)
+    return out

@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in ``kernels/mmm.py`` has its semantics defined here in the
+most direct jnp form. pytest (and hypothesis sweeps) assert allclose between
+the pallas implementations and these references across shapes, dtypes, and
+block configurations — this is the core correctness signal of the build
+path (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["matmul", "matmul_transposed_a", "matmul_accumulate", "min_plus"]
+
+
+def matmul(a, b, out_dtype=None):
+    """Classical C = A·B (Listing 1 of the paper)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(
+        a.astype(out_dtype), b.astype(out_dtype)
+    ).astype(out_dtype)
+
+
+def matmul_transposed_a(at, b, out_dtype=None):
+    """C = Aᵀ·B for A stored transposed as ``(k, m)``."""
+    return matmul(at.T, b, out_dtype)
+
+
+def matmul_accumulate(c, a, b):
+    """C' = C + A·B."""
+    return c + matmul(a, b, c.dtype)
+
+
+def min_plus(a, b, out_dtype=None):
+    """Distance product over the (min, +) tropical semiring.
+
+    ``C[i, j] = min_k (A[i, k] + B[k, j])`` — the paper's Sec.-5.2 example
+    of swapping the compute units' operation.
+    """
+    out_dtype = out_dtype or a.dtype
+    a = a.astype(out_dtype)
+    b = b.astype(out_dtype)
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)

@@ -1,0 +1,131 @@
+"""L2: the JAX compute graph the Rust runtime executes, built on L1 kernels.
+
+Each entry point returns a *jittable function plus example arguments*; the
+AOT driver (``aot.py``) lowers them to HLO text. The functions are the
+paper's Listing-2 loop nest split at the host boundary:
+
+  * the inner loops (compute tile, block tile, per-memory-tile k loop) live
+    inside the Pallas grid of one artifact invocation;
+  * the outer loops (iteration over memory tiles of C and k slabs) live in
+    the Rust scheduler (``rust/src/schedule/``), which calls these
+    artifacts per tile.
+
+Python is build-time only: none of this is imported at runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mmm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """One lowerable computation = one PJRT executable in the Rust runtime.
+
+    Field names mirror the manifest schema consumed by
+    ``rust/src/runtime/artifact.rs``.
+    """
+
+    name: str
+    op: str                  # "matmul" | "matmul_acc" | "matmul_at" | "distance"
+    dtype: str               # jnp dtype name as seen by the Rust side
+    m: int
+    n: int
+    k: int
+    block: Tuple[int, int, int]   # (bm, bn, bk) pallas memory/compute tile
+
+    def dtype_obj(self):
+        return jnp.dtype(self.dtype)
+
+    def input_shapes(self) -> Sequence[Tuple[Tuple[int, ...], str]]:
+        """(shape, dtype) per positional argument, in call order."""
+        d = self.dtype
+        if self.op == "matmul":
+            return [((self.m, self.k), d), ((self.k, self.n), d)]
+        if self.op == "matmul_at":
+            return [((self.k, self.m), d), ((self.k, self.n), d)]
+        if self.op == "matmul_acc":
+            return [((self.m, self.n), d), ((self.m, self.k), d),
+                    ((self.k, self.n), d)]
+        if self.op == "distance":
+            return [((self.m, self.k), d), ((self.k, self.n), d)]
+        raise ValueError(f"unknown op {self.op!r}")
+
+    def output_shape(self) -> Tuple[Tuple[int, ...], str]:
+        return ((self.m, self.n), self.dtype)
+
+    def build(self) -> Tuple[Callable, Sequence[jax.ShapeDtypeStruct]]:
+        """Return (fn, example_args) ready for jax.jit(...).lower(...)."""
+        bm, bn, bk = self.block
+        mmm.validate_block_shapes(self.m, self.n, self.k, bm, bn, bk)
+
+        if self.op == "matmul":
+            def fn(a, b):
+                return (mmm.matmul(a, b, bm=bm, bn=bn, bk=bk),)
+        elif self.op == "matmul_at":
+            def fn(at, b):
+                return (mmm.matmul_transposed_a(at, b, bm=bm, bn=bn, bk=bk),)
+        elif self.op == "matmul_acc":
+            def fn(c, a, b):
+                return (mmm.matmul_accumulate(c, a, b, bm=bm, bn=bn, bk=bk),)
+        elif self.op == "distance":
+            def fn(a, b):
+                return (mmm.matmul(a, b, bm=bm, bn=bn, bk=bk,
+                                   semiring="min_plus"),)
+        else:
+            raise ValueError(f"unknown op {self.op!r}")
+
+        args = [jax.ShapeDtypeStruct(shape, jnp.dtype(dt))
+                for shape, dt in self.input_shapes()]
+        return fn, args
+
+
+def reference_for(spec: ModelSpec) -> Callable:
+    """The oracle computing the same function as ``spec`` (tests only)."""
+    from .kernels import ref
+
+    return {
+        "matmul": ref.matmul,
+        "matmul_at": ref.matmul_transposed_a,
+        "matmul_acc": ref.matmul_accumulate,
+        "distance": ref.min_plus,
+    }[spec.op]
+
+
+def default_specs() -> Sequence[ModelSpec]:
+    """The artifact set shipped by ``make artifacts``.
+
+    Shapes are deliberately modest: interpret-mode Pallas lowers the grid to
+    an HLO loop, and the Rust scheduler composes these tiles into arbitrary
+    problem sizes (Listing 2's outer loops), so tile-sized artifacts suffice
+    for any m×n×k.
+    """
+    specs = [
+        # Quickstart / default artifact (also written as model.hlo.txt).
+        ModelSpec("mmm_f32_256", "matmul", "float32", 256, 256, 256, (64, 64, 32)),
+        # Memory-tile accumulation steps used by the Rust tiled scheduler.
+        # Block (128, 128, 64) is the §Perf-tuned production shape: two
+        # k-grid steps keep the in-VMEM C accumulation exercised while
+        # minimizing grid overhead (2.7x faster than (64, 64, 32) on the
+        # XLA-CPU hot path; VMEM estimate 128 KiB — see EXPERIMENTS.md).
+        ModelSpec("mmm_acc_f32_128", "matmul_acc", "float32", 128, 128, 128, (128, 128, 64)),
+        ModelSpec("mmm_acc_f32_64", "matmul_acc", "float32", 64, 64, 64, (32, 32, 16)),
+        # Transposed-A variant (paper Sec. 4.3 on-the-fly transposition).
+        ModelSpec("mmm_at_f32_128", "matmul_at", "float32", 128, 128, 128, (64, 64, 32)),
+        # Distance product (paper Sec. 5.2 semiring flexibility).
+        ModelSpec("dist_f32_128", "distance", "float32", 128, 128, 128, (64, 64, 32)),
+        # Integer paths (paper Table 2 uint8/16/32; XLA CPU executes s32/u32).
+        ModelSpec("mmm_i32_128", "matmul", "int32", 128, 128, 128, (64, 64, 32)),
+        ModelSpec("mmm_u32_128", "matmul", "uint32", 128, 128, 128, (64, 64, 32)),
+        # Double precision (paper Table 2 FP64 row).
+        ModelSpec("mmm_f64_128", "matmul", "float64", 128, 128, 128, (64, 64, 32)),
+        # Non-square memory tile, mirroring Table 2's x_tot ≠ y_tot configs.
+        ModelSpec("mmm_f32_128x192", "matmul", "float32", 128, 192, 64, (64, 48, 32)),
+    ]
+    return specs

@@ -1,0 +1,84 @@
+"""AOT path tests: HLO text generation + manifest schema.
+
+These guard the python→rust interchange contract: HLO *text* with a 1-tuple
+return, and a manifest whose schema ``rust/src/runtime/artifact.rs`` parses.
+"""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import aot, model
+
+SMALL_SPECS = [
+    model.ModelSpec("tiny_mmm", "matmul", "float32", 8, 8, 8, (4, 4, 4)),
+    model.ModelSpec("tiny_acc", "matmul_acc", "float32", 8, 8, 8, (4, 4, 4)),
+    model.ModelSpec("tiny_i32", "matmul", "int32", 8, 8, 8, (4, 4, 4)),
+]
+
+
+def test_lower_spec_produces_hlo_text():
+    text = aot.lower_spec(SMALL_SPECS[0])
+    assert text.startswith("HloModule")
+    # entry layout mentions both f32 inputs and the tuple-wrapped output
+    assert "f32[8,8]" in text
+    assert "->(f32[8,8]" in text.replace(" ", "")
+
+
+def test_lower_spec_tuple_return():
+    """return_tuple=True: the rust side unwraps with to_tuple1()."""
+    text = aot.lower_spec(SMALL_SPECS[0])
+    first_line = text.splitlines()[0]
+    assert "(f32[8,8]" in first_line  # output is a tuple type
+
+
+def test_build_artifacts_writes_files_and_manifest(tmp_path):
+    manifest = aot.build_artifacts(str(tmp_path), SMALL_SPECS, verbose=False)
+    files = sorted(os.listdir(tmp_path))
+    assert "manifest.json" in files
+    assert "model.hlo.txt" in files
+    for spec in SMALL_SPECS:
+        assert f"{spec.name}.hlo.txt" in files
+
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk == manifest
+    assert on_disk["version"] == 1
+    assert on_disk["default"] == "tiny_mmm"
+    assert len(on_disk["artifacts"]) == len(SMALL_SPECS)
+
+    entry = on_disk["artifacts"][0]
+    assert entry["name"] == "tiny_mmm"
+    assert entry["op"] == "matmul"
+    assert entry["dtype"] == "float32"
+    assert entry["block"] == [4, 4, 4]
+    assert entry["inputs"] == [
+        {"shape": [8, 8], "dtype": "float32"},
+        {"shape": [8, 8], "dtype": "float32"},
+    ]
+    assert entry["output"] == {"shape": [8, 8], "dtype": "float32"}
+
+
+def test_default_stamp_is_copy_of_first_artifact(tmp_path):
+    aot.build_artifacts(str(tmp_path), SMALL_SPECS, verbose=False)
+    stamp = (tmp_path / "model.hlo.txt").read_text()
+    first = (tmp_path / "tiny_mmm.hlo.txt").read_text()
+    assert stamp == first
+
+
+def test_integer_artifact_layout(tmp_path):
+    text = aot.lower_spec(SMALL_SPECS[2])
+    assert "s32[8,8]" in text
+
+
+def test_default_specs_lower():
+    """Every shipped spec lowers to nonempty HLO (shrunk shapes for speed)."""
+    for s in model.default_specs():
+        small = model.ModelSpec(s.name, s.op, s.dtype, 8, 8, 8, (4, 4, 4))
+        text = aot.lower_spec(small)
+        assert text.startswith("HloModule")
+        assert len(text) > 500

@@ -1,0 +1,272 @@
+"""Kernel-vs-reference correctness: the CORE signal of the build path.
+
+Hypothesis sweeps the Pallas kernels' shapes, dtypes, and block
+configurations and asserts allclose against the pure-jnp oracles in
+``kernels/ref.py``.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, mmm, ref
+
+FLOAT_TOL = dict(rtol=1e-4, atol=1e-5)
+F64_TOL = dict(rtol=1e-10, atol=1e-12)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+    return jnp.asarray(rng.integers(0, 64, shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic spot checks (fast, always run first)
+# ---------------------------------------------------------------------------
+
+class TestMatmulBasic:
+    def test_identity(self):
+        eye = jnp.eye(32, dtype=jnp.float32)
+        a = _rand((32, 32), jnp.float32, 1)
+        out = mmm.matmul(a, eye, bm=16, bn=16, bk=8)
+        np.testing.assert_allclose(out, a, **FLOAT_TOL)
+
+    def test_zeros(self):
+        a = _rand((32, 16), jnp.float32, 2)
+        z = jnp.zeros((16, 24), dtype=jnp.float32)
+        out = mmm.matmul(a, z, bm=16, bn=8, bk=8)
+        np.testing.assert_array_equal(out, jnp.zeros((32, 24)))
+
+    def test_single_block(self):
+        """bm=m, bn=n, bk=k: the whole problem is one memory tile."""
+        a = _rand((16, 16), jnp.float32, 3)
+        b = _rand((16, 16), jnp.float32, 4)
+        out = mmm.matmul(a, b, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(out, ref.matmul(a, b), **FLOAT_TOL)
+
+    def test_bk_one_outer_product(self):
+        """bk=1 is literally the paper's rank-1 outer-product schedule."""
+        a = _rand((8, 4), jnp.float32, 5)
+        b = _rand((4, 8), jnp.float32, 6)
+        out = mmm.matmul(a, b, bm=4, bn=4, bk=1)
+        np.testing.assert_allclose(out, ref.matmul(a, b), **FLOAT_TOL)
+
+    def test_rectangular_tiles(self):
+        a = _rand((64, 32), jnp.float32, 7)
+        b = _rand((32, 96), jnp.float32, 8)
+        out = mmm.matmul(a, b, bm=32, bn=24, bk=16)
+        np.testing.assert_allclose(out, ref.matmul(a, b), **FLOAT_TOL)
+
+    def test_rejects_nondivisible(self):
+        a = _rand((30, 16), jnp.float32, 9)
+        b = _rand((16, 32), jnp.float32, 10)
+        with pytest.raises(ValueError, match="not divisible"):
+            mmm.matmul(a, b, bm=16, bn=16, bk=8)
+
+    def test_rejects_contraction_mismatch(self):
+        a = _rand((16, 16), jnp.float32, 11)
+        b = _rand((32, 16), jnp.float32, 12)
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            mmm.matmul(a, b, bm=16, bn=16, bk=8)
+
+    def test_rejects_nonpositive_block(self):
+        with pytest.raises(ValueError):
+            mmm.validate_block_shapes(16, 16, 16, 0, 16, 16)
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_float(self, dtype):
+        a = _rand((32, 32), dtype, 20)
+        b = _rand((32, 32), dtype, 21)
+        tol = F64_TOL if dtype == jnp.float64 else FLOAT_TOL
+        out = mmm.matmul(a, b, bm=16, bn=16, bk=8)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(out, ref.matmul(a, b), **tol)
+
+    @pytest.mark.parametrize("dtype", [jnp.int32, jnp.uint32, jnp.int16, jnp.uint16, jnp.int8, jnp.uint8])
+    def test_integer_exact(self, dtype):
+        # Small values so int8 accumulation does not overflow (k=16, max
+        # product 7*7=49, 16*49 < 127 requires values < 3; use 0..2).
+        rng = np.random.default_rng(22)
+        hi = 3 if jnp.dtype(dtype).itemsize == 1 else 16
+        a = jnp.asarray(rng.integers(0, hi, (16, 16)), dtype=dtype)
+        b = jnp.asarray(rng.integers(0, hi, (16, 16)), dtype=dtype)
+        out = mmm.matmul(a, b, bm=8, bn=8, bk=8)
+        assert out.dtype == dtype
+        np.testing.assert_array_equal(out, ref.matmul(a, b))
+
+    def test_bfloat16(self):
+        a = _rand((32, 32), jnp.bfloat16, 23)
+        b = _rand((32, 32), jnp.bfloat16, 24)
+        out = mmm.matmul(a, b, bm=16, bn=16, bk=16)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            out.astype(jnp.float32),
+            ref.matmul(a, b).astype(jnp.float32),
+            rtol=0.25, atol=0.25,
+        )
+
+
+class TestTransposedA:
+    def test_matches_plain(self):
+        a = _rand((64, 32), jnp.float32, 30)
+        b = _rand((32, 48), jnp.float32, 31)
+        plain = mmm.matmul(a, b, bm=32, bn=16, bk=8)
+        transposed = mmm.matmul_transposed_a(a.T, b, bm=32, bn=16, bk=8)
+        np.testing.assert_allclose(plain, transposed, **FLOAT_TOL)
+
+    def test_vs_ref(self):
+        at = _rand((32, 64), jnp.float32, 32)
+        b = _rand((32, 48), jnp.float32, 33)
+        out = mmm.matmul_transposed_a(at, b, bm=32, bn=24, bk=16)
+        np.testing.assert_allclose(out, ref.matmul_transposed_a(at, b), **FLOAT_TOL)
+
+
+class TestAccumulate:
+    def test_vs_ref(self):
+        c = _rand((32, 48), jnp.float32, 40)
+        a = _rand((32, 16), jnp.float32, 41)
+        b = _rand((16, 48), jnp.float32, 42)
+        out = mmm.matmul_accumulate(c, a, b, bm=16, bn=16, bk=8)
+        np.testing.assert_allclose(out, ref.matmul_accumulate(c, a, b), **FLOAT_TOL)
+
+    def test_zero_c_equals_matmul(self):
+        a = _rand((32, 16), jnp.float32, 43)
+        b = _rand((16, 32), jnp.float32, 44)
+        z = jnp.zeros((32, 32), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            mmm.matmul_accumulate(z, a, b, bm=16, bn=16, bk=8),
+            mmm.matmul(a, b, bm=16, bn=16, bk=8),
+            **FLOAT_TOL,
+        )
+
+    def test_k_split_associativity(self):
+        """Host-side k-slab accumulation == single-shot matmul.
+
+        This is exactly the contract the Rust scheduler relies on when it
+        splits k across multiple artifact invocations (Listing 2's k loop
+        over memory tiles).
+        """
+        a = _rand((32, 64), jnp.float32, 45)
+        b = _rand((64, 32), jnp.float32, 46)
+        c = jnp.zeros((32, 32), dtype=jnp.float32)
+        for s in range(4):
+            c = mmm.matmul_accumulate(
+                c, a[:, s * 16:(s + 1) * 16], b[s * 16:(s + 1) * 16, :],
+                bm=16, bn=16, bk=8)
+        np.testing.assert_allclose(c, ref.matmul(a, b), rtol=1e-3, atol=1e-4)
+
+
+class TestDistanceProduct:
+    def test_vs_ref(self):
+        a = _rand((32, 16), jnp.float32, 50)
+        b = _rand((16, 24), jnp.float32, 51)
+        out = distance.distance_product(a, b, bm=16, bn=8, bk=8)
+        np.testing.assert_allclose(out, ref.min_plus(a, b), **FLOAT_TOL)
+
+    def test_integer_exact(self):
+        a = _rand((16, 16), jnp.int32, 52)
+        b = _rand((16, 16), jnp.int32, 53)
+        out = distance.distance_product(a, b, bm=8, bn=8, bk=4)
+        np.testing.assert_array_equal(out, ref.min_plus(a, b))
+
+    def test_shortest_path_triangle(self):
+        """3-node graph: distance product of adjacency = 2-hop distances."""
+        inf = jnp.inf
+        adj = jnp.array([[0., 1., inf, inf],
+                         [inf, 0., 1., inf],
+                         [inf, inf, 0., 1.],
+                         [1., inf, inf, 0.]], dtype=jnp.float32)
+        two_hop = distance.distance_product(adj, adj, bm=2, bn=2, bk=2)
+        np.testing.assert_allclose(two_hop, ref.min_plus(adj, adj))
+        assert two_hop[0, 2] == 2.0   # 0 -> 1 -> 2
+        assert two_hop[3, 1] == 2.0   # 3 -> 0 -> 1
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes × blocks × dtypes
+# ---------------------------------------------------------------------------
+
+block_multiple = st.sampled_from([1, 2, 4])
+
+
+@st.composite
+def matmul_case(draw):
+    """Random (m, n, k, bm, bn, bk) with blocks dividing dims."""
+    bm = draw(st.sampled_from([2, 4, 8, 16]))
+    bn = draw(st.sampled_from([2, 4, 8, 16]))
+    bk = draw(st.sampled_from([1, 2, 4, 8]))
+    m = bm * draw(block_multiple)
+    n = bn * draw(block_multiple)
+    k = bk * draw(block_multiple)
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, n, k, bm, bn, bk, seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(matmul_case())
+def test_matmul_f32_sweep(case):
+    m, n, k, bm, bn, bk, seed = case
+    a = _rand((m, k), jnp.float32, seed)
+    b = _rand((k, n), jnp.float32, seed + 1)
+    out = mmm.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, ref.matmul(a, b), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(matmul_case())
+def test_matmul_i32_sweep_exact(case):
+    m, n, k, bm, bn, bk, seed = case
+    a = _rand((m, k), jnp.int32, seed)
+    b = _rand((k, n), jnp.int32, seed + 1)
+    out = mmm.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(out, ref.matmul(a, b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(matmul_case())
+def test_transposed_a_sweep(case):
+    m, n, k, bm, bn, bk, seed = case
+    at = _rand((k, m), jnp.float32, seed)
+    b = _rand((k, n), jnp.float32, seed + 1)
+    out = mmm.matmul_transposed_a(at, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, ref.matmul_transposed_a(at, b),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(matmul_case())
+def test_distance_sweep(case):
+    m, n, k, bm, bn, bk, seed = case
+    a = _rand((m, k), jnp.float32, seed)
+    b = _rand((k, n), jnp.float32, seed + 1)
+    out = distance.distance_product(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, ref.min_plus(a, b), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(matmul_case())
+def test_accumulate_sweep(case):
+    m, n, k, bm, bn, bk, seed = case
+    c = _rand((m, n), jnp.float32, seed + 2)
+    a = _rand((m, k), jnp.float32, seed)
+    b = _rand((k, n), jnp.float32, seed + 1)
+    out = mmm.matmul_accumulate(c, a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, ref.matmul_accumulate(c, a, b),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_blocked_reference_matches_ref():
+    """The non-pallas blocked loop nest also matches the oracle."""
+    a = _rand((32, 16), jnp.float32, 60)
+    b = _rand((16, 24), jnp.float32, 61)
+    out = mmm.matmul_reference_blocked(a, b, bm=16, bn=8, bk=4)
+    np.testing.assert_allclose(out, ref.matmul(a, b), **FLOAT_TOL)

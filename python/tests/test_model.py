@@ -1,0 +1,94 @@
+"""L2 ModelSpec tests: shapes, builders, and spec-vs-oracle numerics."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _inputs_for(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for shape, dt in spec.input_shapes():
+        if jnp.issubdtype(jnp.dtype(dt), jnp.floating):
+            out.append(jnp.asarray(rng.standard_normal(shape), dtype=dt))
+        else:
+            out.append(jnp.asarray(rng.integers(0, 16, shape), dtype=dt))
+    return out
+
+
+class TestSpecShapes:
+    def test_matmul_shapes(self):
+        spec = model.ModelSpec("t", "matmul", "float32", 8, 12, 16, (4, 4, 4))
+        assert spec.input_shapes() == [((8, 16), "float32"), ((16, 12), "float32")]
+        assert spec.output_shape() == ((8, 12), "float32")
+
+    def test_matmul_at_shapes(self):
+        spec = model.ModelSpec("t", "matmul_at", "float32", 8, 12, 16, (4, 4, 4))
+        assert spec.input_shapes()[0] == ((16, 8), "float32")
+
+    def test_matmul_acc_shapes(self):
+        spec = model.ModelSpec("t", "matmul_acc", "float32", 8, 12, 16, (4, 4, 4))
+        assert [s for s, _ in spec.input_shapes()] == [(8, 12), (8, 16), (16, 12)]
+
+    def test_unknown_op_raises(self):
+        spec = model.ModelSpec("t", "nope", "float32", 8, 8, 8, (4, 4, 4))
+        with pytest.raises(ValueError):
+            spec.input_shapes()
+        with pytest.raises(ValueError):
+            spec.build()
+
+    def test_invalid_block_raises(self):
+        spec = model.ModelSpec("t", "matmul", "float32", 8, 8, 8, (3, 4, 4))
+        with pytest.raises(ValueError):
+            spec.build()
+
+
+OPS_TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["matmul", "matmul_at", "matmul_acc", "distance"])
+def test_spec_matches_reference(op):
+    spec = model.ModelSpec("t", op, "float32", 16, 24, 8, (8, 8, 4))
+    fn, args = spec.build()
+    assert len(args) == len(spec.input_shapes())
+    inputs = _inputs_for(spec)
+    (out,) = fn(*inputs)
+    oracle = model.reference_for(spec)
+    np.testing.assert_allclose(out, oracle(*inputs), **OPS_TOL)
+    assert out.shape == spec.output_shape()[0]
+
+
+def test_default_specs_all_buildable_and_distinct():
+    specs = model.default_specs()
+    names = [s.name for s in specs]
+    assert len(set(names)) == len(names)
+    ops = {s.op for s in specs}
+    assert {"matmul", "matmul_acc", "matmul_at", "distance"} <= ops
+    dtypes = {s.dtype for s in specs}
+    assert {"float32", "float64", "int32", "uint32"} <= dtypes
+    for s in specs:
+        # build() validates block divisibility for every shipped spec
+        fn, args = s.build()
+        assert callable(fn)
+
+
+def test_default_specs_small_numerics():
+    """Shrunken copies of every shipped spec still match the oracle."""
+    for s in model.default_specs():
+        small = model.ModelSpec(s.name, s.op, s.dtype, 16, 16, 16, (8, 8, 4))
+        fn, _ = small.build()
+        inputs = _inputs_for(small, seed=7)
+        (out,) = fn(*inputs)
+        oracle = model.reference_for(small)
+        expected = oracle(*inputs)
+        if jnp.issubdtype(jnp.dtype(s.dtype), jnp.floating):
+            np.testing.assert_allclose(out, expected, rtol=1e-4, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(out, expected)

@@ -1,0 +1,126 @@
+//! Ablation bench: quantify each design decision the paper argues for
+//! (DESIGN.md §6 calls these out; not a numbered paper figure, but each
+//! corresponds to a claim in Secs. 4.1–4.4 and 5.3).
+//!
+//!  A. Sequential drain vs double-buffered C       (Sec. 4.4, √2)
+//!  B. Transpose module vs element-wise A reads    (Sec. 4.3, 16×)
+//!  C. 1-D chain vs 2-D grid vs broadcast fan-out  (Sec. 4.1, SLR buses)
+//!  D. Outer-product vs k-innermost schedule       (Sec. 4.2)
+//!  E. BRAM-only vs +UltraRAM fast memory          (Sec. 5.3 note)
+//!
+//! Run: `cargo bench --bench ablation`
+
+use fcamm::datatype::DataType;
+use fcamm::device::catalog::vcu1525;
+use fcamm::model::selection::derive_tiling;
+use fcamm::model::{io, kinner, ultraram};
+use fcamm::sim::{bandwidth, baseline, grid2d};
+use fcamm::util::table::{fmt_f, Table};
+
+fn main() {
+    let device = vcu1525();
+    let dt = DataType::F32;
+    let (x_p, y_c) = (192u64, 8u64);
+    let tiling = derive_tiling(&device, dt, x_p, y_c).expect("tiling");
+    let s = tiling.memory_tile_elements(); // ≈ usable fast memory
+
+    // ---------------- A. drain strategy --------------------------------
+    println!("== A. sequential drain (this work) vs double-buffered C (Dou/Kumar) ==");
+    let db = baseline::double_buffered(s, x_p, y_c).expect("db design");
+    let mut t = Table::new(vec!["Design", "Tile", "Intensity [madd/elem]", "Penalty"]);
+    t.row(vec![
+        "sequential drain (full S)".to_string(),
+        format!("{}x{}", tiling.x_tot(), tiling.y_tot()),
+        fmt_f(io::computational_intensity(tiling.x_tot(), tiling.y_tot()), 1),
+        "1.00x".to_string(),
+    ]);
+    t.row(vec![
+        "double-buffered C (S/2)".to_string(),
+        format!("{}x{}", db.x_tot, db.y_tot),
+        fmt_f(db.intensity, 1),
+        format!("{:.2}x", db.intensity_penalty()),
+    ]);
+    print!("{}", t.render());
+    println!("paper's claim: prior double-buffered designs lose √2 = 1.41x\n");
+
+    // ---------------- B. transpose module ------------------------------
+    println!("== B. on-the-fly transpose vs element-wise column reads (Sec. 4.3) ==");
+    let bw = bandwidth::analyze(&device, dt, tiling, 145.7e6);
+    let mut t = Table::new(vec!["A-read strategy", "Effective DDR BW [GB/s]", "Stream feasible?"]);
+    t.row(vec![
+        "transpose module (bursts)".to_string(),
+        fmt_f(bw.supply_with_transpose / 1e9, 2),
+        format!("yes ({:.1}% of supply)", bw.stream_utilization * 100.0),
+    ]);
+    let util_without = bw.stream_demand_bytes_per_sec / bw.supply_without_transpose;
+    t.row(vec![
+        "element-wise column reads".to_string(),
+        fmt_f(bw.supply_without_transpose / 1e9, 2),
+        if util_without <= 1.0 { "yes".to_string() } else { format!("NO ({util_without:.1}x oversubscribed)") },
+    ]);
+    print!("{}", t.render());
+    println!("transpose benefit: {:.0}x effective bandwidth\n", bw.transpose_benefit());
+
+    // ---------------- C. PE topology -----------------------------------
+    println!("== C. interconnect: 1-D chain vs 2-D grid vs broadcast (Sec. 4.1) ==");
+    let n_p = x_p;
+    let grid_dims = (16u64, 12u64); // 192 PEs as a 16x12 grid
+    let chain = grid2d::chain_1d_interconnect(n_p, device.chiplets);
+    let grid = grid2d::grid_2d_interconnect(grid_dims.0, grid_dims.1, device.chiplets);
+    let bcast = grid2d::broadcast_interconnect(grid_dims.0, grid_dims.1);
+    let mut t = Table::new(vec!["Topology", "Total buses", "Max fan-out", "Buses per SLR gap"]);
+    for (name, r) in [
+        ("1-D chain (this work)", chain),
+        ("2-D grid (Fig. 4)", grid),
+        ("naive broadcast", bcast),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            r.total_buses.to_string(),
+            r.max_fan_out.to_string(),
+            r.buses_per_slr_crossing.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("paper's claim: only 3 buses must cross each chiplet gap in the chain\n");
+
+    // ---------------- D. schedule: outer product vs k-inner -------------
+    println!("== D. outer-product vs k-innermost schedule (Sec. 4.2) ==");
+    let mut t = Table::new(vec!["Data type", "Outer intensity", "k-inner intensity", "Advantage"]);
+    for dt in [DataType::F32, DataType::F64, DataType::U32] {
+        let (xo, yo) = io::best_tile_shape(s, x_p, y_c).unwrap();
+        let outer = io::computational_intensity(xo, yo);
+        let inner = kinner::best_kinner_schedule(dt, s, x_p, y_c).unwrap();
+        t.row(vec![
+            dt.name().to_string(),
+            fmt_f(outer, 1),
+            fmt_f(inner.intensity, 1),
+            format!("{:.3}x", outer / inner.intensity),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(k-inner pays panel double-buffers scaled by accumulation latency)\n");
+
+    // ---------------- E. UltraRAM --------------------------------------
+    println!("== E. BRAM-only vs +UltraRAM fast memory (Sec. 5.3 note) ==");
+    let plan = ultraram::derive_uram_tiling(&device, dt, x_p, y_c, ultraram::VU9P_URAM_BLOCKS)
+        .expect("uram plan");
+    let mut t = Table::new(vec!["Memory", "S [elements]", "Tile", "Intensity", "BW @409 GOp/s [MB/s]"]);
+    let bw_of = |i: f64| 409e9 / (2.0 * i / dt.bytes() as f64) / 1e6;
+    t.row(vec![
+        "BRAM only (paper)".to_string(),
+        s.to_string(),
+        format!("{}x{}", tiling.x_tot(), tiling.y_tot()),
+        fmt_f(plan.bram_intensity, 1),
+        fmt_f(bw_of(plan.bram_intensity), 0),
+    ]);
+    t.row(vec![
+        "URAM C-buffer".to_string(),
+        plan.s_elements.to_string(),
+        format!("{}x{}", plan.tiling.x_tot(), plan.tiling.y_tot()),
+        fmt_f(plan.intensity, 1),
+        fmt_f(bw_of(plan.intensity), 0),
+    ]);
+    print!("{}", t.render());
+    println!("URAM intensity gain: {:.2}x (≈ √(capacity gain))", plan.intensity_gain());
+}

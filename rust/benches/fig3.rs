@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 3 (usable memory blocks vs parallelism — the
+//! Eq. 9 quantization sawtooth) and time the memory model.
+//!
+//! Run: `cargo bench --bench fig3`
+
+use fcamm::coordinator::report;
+use fcamm::device::catalog::vcu1525;
+use fcamm::util::bench::Bench;
+
+fn main() {
+    println!("== Fig. 3 reproduction ==");
+    let (points, table) = report::fig3(vcu1525());
+    print!("{}", table.render());
+    let caption = points.iter().find(|p| p.n_pes == 144).expect("caption point");
+    println!("\npaper caption check: x_c*y_c=8, x_p*y_p=144 -> {:.1}% (paper: 60.4%)",
+        caption.utilization * 100.0);
+    assert!((caption.utilization - 0.604).abs() < 0.001);
+
+    Bench::new().run("generate fig3", || report::fig3(vcu1525()).0.len());
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 7 (strong scaling, FP32, 16384³: performance
+//! and post-route frequency vs parallelism) and time the sweep.
+//!
+//! Run: `cargo bench --bench fig7`
+
+use fcamm::coordinator::report;
+use fcamm::device::catalog::vcu1525;
+use fcamm::util::bench::Bench;
+
+fn main() {
+    println!("== Fig. 7 reproduction ==");
+    let (points, table) = report::fig7(vcu1525());
+    print!("{}", table.render());
+    println!("\nshape checks:");
+    let first = points.first().unwrap();
+    let last = points.last().unwrap();
+    println!("  200 MHz before first SLR crossing: {}", (first.freq_mhz - 200.0).abs() < 1e-6);
+    println!("  frequency degrades at full chip:   {}", last.freq_mhz < 180.0);
+    let best = points.iter().map(|p| p.perf_gops).fold(0.0f64, f64::max);
+    println!("  peak {best:.0} GOp/s (paper: 409 measured at x_p=192)");
+
+    Bench::new().run("generate fig7", || report::fig7(vcu1525()).0.len());
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig. 8 (fraction of peak compute throughput vs
+//! matrix size, small vs large parallelism — the drain-phase cost of
+//! Sec. 4.4) and time the timeline simulations behind it.
+//!
+//! Run: `cargo bench --bench fig8`
+
+use fcamm::coordinator::report;
+use fcamm::device::catalog::vcu1525;
+use fcamm::model::selection::derive_tiling;
+use fcamm::datatype::DataType;
+use fcamm::sim::simulate_timeline;
+use fcamm::util::bench::Bench;
+
+fn main() {
+    println!("== Fig. 8 reproduction ==");
+    let (points, table) = report::fig8(vcu1525());
+    print!("{}", table.render());
+    let last = points.last().unwrap();
+    println!("\nshape checks:");
+    println!("  large matrices approach peak: small-N_c {:.3}, large-N_c {:.3}",
+        last.eff_small_nc, last.eff_large_nc);
+    println!("  small matrices punish large N_c more: {}",
+        points[0].eff_small_nc > points[0].eff_large_nc);
+
+    let t = derive_tiling(&vcu1525(), DataType::F32, 192, 8).unwrap();
+    Bench::new().run("timeline sim 16384^3 (paper scale)", || {
+        simulate_timeline(t, 16384, 16384, 16384).total_cycles()
+    });
+}

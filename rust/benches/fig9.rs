@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig. 9 (FP32 arithmetic intensity and average
+//! bandwidth vs memory tile size, with the simulated communication
+//! volume verified against Eq. 6 — the paper's own check in Sec. 5.4)
+//! plus the double-buffered √2-penalty ablation.
+//!
+//! Run: `cargo bench --bench fig9`
+
+use fcamm::coordinator::report;
+use fcamm::device::catalog::vcu1525;
+use fcamm::util::bench::Bench;
+
+fn main() {
+    println!("== Fig. 9 reproduction ==");
+    let (points, table) = report::fig9(vcu1525());
+    print!("{}", table.render());
+    let last = points.last().unwrap();
+    println!("\nshape checks:");
+    println!("  all volumes match Eq. 6: {}", points.iter().all(|p| p.q_verified));
+    println!("  largest tile: {:.0} Op/Byte at {:.0} GOp/s, {:.0} MB/s \
+              (paper: ~300 Op/Byte, 350 MB/s at 100 GOp/s)",
+        last.intensity_op_b, last.perf_gops, last.bandwidth_gb_s * 1e3);
+    println!("  double-buffer penalty at full tile: {:.2}x (theory: 1.41x)",
+        last.intensity_op_b / last.intensity_db_op_b);
+
+    Bench::new().run("generate fig9", || report::fig9(vcu1525()).0.len());
+}

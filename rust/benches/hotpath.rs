@@ -1,0 +1,78 @@
+//! Bench: the hot paths of every layer, for the §Perf optimization pass
+//! (EXPERIMENTS.md). Not a paper figure — this is the repo's own
+//! performance harness.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use fcamm::datatype::DataType;
+use fcamm::device::catalog::vcu1525;
+use fcamm::model::selection::{derive_tiling, select_parameters, SelectionOptions};
+use fcamm::model::tiling::TilingConfig;
+use fcamm::model::{compute, io};
+use fcamm::runtime::Runtime;
+use fcamm::schedule::loopnest;
+use fcamm::schedule::TiledExecutor;
+use fcamm::sim::exact::ExactSim;
+use fcamm::sim::simulate_timeline;
+use fcamm::util::bench::Bench;
+use fcamm::util::rng::Rng;
+
+fn main() {
+    let device = vcu1525();
+    let bench = Bench::new();
+
+    // --- L3 model / simulator hot paths ------------------------------
+    let paper = TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 };
+    bench.run("timeline sim 16384^3", || {
+        simulate_timeline(paper, 16384, 16384, 16384).total_cycles()
+    });
+    bench.run("timeline sim ragged 10000x9999x8191", || {
+        simulate_timeline(paper, 10_000, 9_999, 8_191).total_cycles()
+    });
+    bench.run("q_elements_hardware 16384^3", || {
+        io::q_elements_hardware(paper, 16384, 16384, 16384)
+    });
+    bench.run("total_cycles 16384^3", || compute::total_cycles(paper, 16384, 16384, 16384));
+
+    bench.run("derive_tiling x_p=192", || {
+        derive_tiling(&device, DataType::F32, 192, 8).unwrap()
+    });
+    bench.run("best_tile_shape S=1.5M", || {
+        io::best_tile_shape(1_572_864, 192, 8).unwrap()
+    });
+    bench.run("select_parameters FP32 (full flow)", || {
+        select_parameters(device, DataType::F32, SelectionOptions::default()).unwrap()
+    });
+
+    // Element-level simulator (real data movement).
+    let t_small = TilingConfig { x_c: 1, y_c: 4, x_p: 8, y_p: 1, x_t: 4, y_t: 8, x_b: 1, y_b: 1 };
+    let mut rng = Rng::new(1);
+    let (m, n, k) = (64usize, 64usize, 64usize);
+    let a = rng.fill_normal_f32(m * k);
+    let b = rng.fill_normal_f32(k * n);
+    let sim = ExactSim::new(t_small);
+    bench.run("exact sim 64^3 (N_c=32)", || sim.run(&a, &b, m, n, k).report.total_cycles());
+
+    // Loop-nest enumeration (invariant-test machinery).
+    bench.run("loopnest visits 32x32x8", || loopnest::visits(t_small, 32, 32, 8).len());
+
+    // --- Runtime (PJRT) hot path --------------------------------------
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::open(dir).expect("runtime");
+        let exec = TiledExecutor::from_runtime(&rt).expect("executor");
+        let a256 = rng.fill_normal_f32(256 * 256);
+        let b256 = rng.fill_normal_f32(256 * 256);
+        let slow = Bench::slow();
+        slow.run("pjrt tiled matmul 256^3 (8 steps)", || {
+            exec.matmul(&a256, &b256, 256, 256, 256).unwrap().steps_executed
+        });
+        let a128 = rng.fill_normal_f32(128 * 128);
+        let b128 = rng.fill_normal_f32(128 * 128);
+        slow.run("pjrt tiled matmul 128^3 (1 step)", || {
+            exec.matmul(&a128, &b128, 128, 128, 128).unwrap().steps_executed
+        });
+    } else {
+        println!("(artifacts missing — skipping PJRT hot-path benches)");
+    }
+}

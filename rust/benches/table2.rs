@@ -1,0 +1,30 @@
+//! Bench: regenerate the paper's Table 2 (best kernel per data type) and
+//! time the full build flow per data type.
+//!
+//! Run: `cargo bench --bench table2`
+
+use fcamm::coordinator::report;
+use fcamm::coordinator::{build_kernel, BuildOutcome};
+use fcamm::datatype::DataType;
+use fcamm::device::catalog::vcu1525;
+use fcamm::model::selection::SelectionOptions;
+use fcamm::util::bench::Bench;
+
+fn main() {
+    let device = vcu1525();
+    println!("== Table 2 reproduction (model vs paper) ==");
+    let (rows, table) = report::table2(device);
+    print!("{}", table.render());
+    assert_eq!(rows.len(), 18);
+
+    println!("\n== build-flow latency per data type (paper: 8-24 h of P&R each) ==");
+    let bench = Bench::new();
+    for dt in DataType::ALL {
+        bench.run(&format!("build {dt}"), || {
+            match build_kernel(device, dt, SelectionOptions::default()) {
+                BuildOutcome::Success(r) => r.perf_gops,
+                other => panic!("{other:?}"),
+            }
+        });
+    }
+}

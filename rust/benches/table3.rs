@@ -1,0 +1,25 @@
+//! Bench: regenerate the paper's Table 3 (comparison with prior FPGA
+//! implementations) — prior rows are the published numbers (none of
+//! those implementations are open source; the paper compares the same
+//! way), our row comes from the model-driven build flow.
+//!
+//! Run: `cargo bench --bench table3`
+
+use fcamm::coordinator::report;
+use fcamm::device::catalog::vcu1525;
+use fcamm::util::bench::Bench;
+
+fn main() {
+    println!("== Table 3 reproduction ==");
+    let (rows, table) = report::table3(vcu1525());
+    print!("{}", table.render());
+    assert_eq!(rows.len(), 8);
+    let ours = rows.last().unwrap();
+    println!("\nshape checks:");
+    println!("  FP32 beats all prior except Moss/HARPv2: {}",
+        rows.iter().filter(|r| r.perf_fp32_gops.unwrap_or(0.0) > ours.perf_fp32_gops.unwrap()).count() == 1);
+    println!("  only open-source row is ours: {}",
+        rows.iter().filter(|r| r.open_source).count() == 1);
+
+    Bench::new().run("generate table3", || report::table3(vcu1525()).0.len());
+}

@@ -1,0 +1,151 @@
+//! The kernel build flow: Sec. 5.1's "fully automated end-to-end fashion".
+//!
+//! `select → route-check → frequency/power estimate → report`. The paper
+//! pays 8–24 hours of Vivado per probe; the model-driven flow answers in
+//! microseconds with the same decision structure (including the failure
+//! modes: configs beyond the routing wall are rejected, at-risk configs
+//! flagged).
+
+use crate::datatype::DataType;
+use crate::device::Device;
+use crate::model::frequency::Routability;
+use crate::model::selection::{self, KernelConfig, SelectionOptions};
+use crate::model::tiling::TilingConfig;
+
+use super::routing::{check_routing, RoutingViolation};
+
+/// Result of a build attempt.
+#[derive(Debug)]
+pub enum BuildOutcome {
+    /// Routes cleanly; report attached.
+    Success(BuildReport),
+    /// Model found no feasible configuration at all.
+    NoFeasibleConfig,
+    /// A requested explicit configuration failed routing.
+    RoutingFailure(Vec<RoutingViolation>),
+}
+
+/// Everything Table 2 reports about one kernel, derived from the model.
+#[derive(Debug, Clone)]
+pub struct BuildReport {
+    pub config: KernelConfig,
+    /// Modeled at the paper's reference problem (16384³ by default).
+    pub reference_mnk: (u64, u64, u64),
+    pub perf_gops: f64,
+    pub power_w: f64,
+    pub eff_gopj: f64,
+    pub intensity_op_b: f64,
+    pub bandwidth_gb_s: f64,
+    /// At-risk flag (85–90% utilization: may take the 24-hour path).
+    pub at_risk: bool,
+}
+
+impl BuildReport {
+    pub fn from_config(config: KernelConfig, reference_mnk: (u64, u64, u64)) -> BuildReport {
+        let (m, n, k) = reference_mnk;
+        let perf = config.performance_ops(m, n, k);
+        BuildReport {
+            config,
+            reference_mnk,
+            perf_gops: perf / 1e9,
+            power_w: config.power_w(),
+            eff_gopj: config.efficiency_ops_per_joule(m, n, k) / 1e9,
+            intensity_op_b: config.arithmetic_intensity(),
+            bandwidth_gb_s: config.bandwidth_bytes_per_sec(m, n, k) / 1e9,
+            at_risk: config.routability == Routability::AtRisk,
+        }
+    }
+}
+
+/// Build the best kernel for (device, dtype) via parameter selection.
+pub fn build_kernel(device: Device, dt: DataType, opts: SelectionOptions) -> BuildOutcome {
+    match selection::select_parameters(device, dt, opts) {
+        None => BuildOutcome::NoFeasibleConfig,
+        Some(config) => {
+            let violations = check_routing(&device, dt, config.tiling);
+            if violations.is_empty() {
+                BuildOutcome::Success(BuildReport::from_config(config, opts.reference_mnk))
+            } else {
+                BuildOutcome::RoutingFailure(violations)
+            }
+        }
+    }
+}
+
+/// Build a user-specified configuration (the "explicit config" path of
+/// the HLS flow — lets callers reproduce the paper's exact Table 2 tiles).
+pub fn build_explicit(
+    device: Device,
+    dt: DataType,
+    tiling: TilingConfig,
+    reference_mnk: (u64, u64, u64),
+) -> BuildOutcome {
+    let violations = check_routing(&device, dt, tiling);
+    // The paper's own kernels sit at up to 90% BRAM (our feeder
+    // accounting adds a few points on top of theirs — the FP16 config
+    // lands at ~94%) — allow those at-risk builds but reject hard
+    // violations.
+    let hard: Vec<RoutingViolation> = violations
+        .into_iter()
+        .filter(|v| !matches!(v, RoutingViolation::UtilizationWall { fraction } if *fraction <= 0.94))
+        .collect();
+    if !hard.is_empty() {
+        return BuildOutcome::RoutingFailure(hard);
+    }
+    let config = KernelConfig::derive(device, dt, tiling);
+    BuildOutcome::Success(BuildReport::from_config(config, reference_mnk))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::catalog::vcu1525;
+    use crate::model::selection::SelectionOptions;
+
+    #[test]
+    fn builds_all_table2_dtypes() {
+        for dt in DataType::ALL {
+            match build_kernel(vcu1525(), dt, SelectionOptions::default()) {
+                BuildOutcome::Success(report) => {
+                    assert!(report.perf_gops > 50.0, "{dt}: {}", report.perf_gops);
+                    assert!(report.power_w > 20.0 && report.power_w < 60.0, "{dt}");
+                    assert!(report.eff_gopj > 1.0, "{dt}");
+                    assert!(report.bandwidth_gb_s < 19.2, "{dt}: within one DIMM");
+                }
+                other => panic!("{dt}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_paper_fp32_builds() {
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 };
+        match build_explicit(vcu1525(), DataType::F32, t, (16384, 16384, 16384)) {
+            BuildOutcome::Success(r) => {
+                assert!((r.perf_gops - 409.0).abs() / 409.0 < 0.12, "{}", r.perf_gops);
+                assert!((r.intensity_op_b - 302.0).abs() < 5.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_infeasible_fails_routing() {
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 1024, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 };
+        match build_explicit(vcu1525(), DataType::F64, t, (1024, 1024, 1024)) {
+            BuildOutcome::RoutingFailure(v) => assert!(!v.is_empty()),
+            other => panic!("expected routing failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tiny_budget_no_config() {
+        let mut dev = vcu1525();
+        dev.resources = crate::device::ResourceVec::new(1000.0, 1000.0, 2.0);
+        dev.memory_blocks = 4;
+        match build_kernel(dev, DataType::F64, SelectionOptions::default()) {
+            BuildOutcome::NoFeasibleConfig => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

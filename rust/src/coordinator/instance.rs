@@ -1,0 +1,284 @@
+//! Kernel instance generation: the concrete Fig.-5 module layout for a
+//! built configuration — the analogue of the HLS code the paper's
+//! toolflow emits, as a structured description.
+//!
+//! Sec. 4.5: the final architecture consists of `4 + N_p` modules (Read
+//! A, Transpose, Feed B, Store C, and the PE chain), connected by FIFOs
+//! whose depths follow Sec. 4.3, with the PE chain placed "snake-like"
+//! across the SLRs. This module derives all of it from a
+//! [`KernelConfig`], so tests can pin structural invariants (module
+//! counts, FIFO sizing, per-PE BRAM shares, SLR crossing counts) that
+//! the paper states in prose.
+
+use crate::model::selection::KernelConfig;
+use crate::util::table::Table;
+
+/// One module of the Fig.-5 layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Module {
+    /// Reads A column slabs from DDR (wide bursts).
+    ReadA,
+    /// Reorders A bursts into chain-distribution order (Sec. 4.3).
+    Transpose,
+    /// Buffers the outer-product row of B (double buffered).
+    FeedB,
+    /// Processing element `index` in the 1-D chain.
+    Pe { index: u64, slr: u64 },
+    /// Writes drained C tiles back to DDR at the chain head.
+    StoreC,
+}
+
+/// A FIFO connection between modules.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Connection {
+    pub from: String,
+    pub to: String,
+    /// Depth in elements.
+    pub depth: u64,
+    /// Bus width in bits.
+    pub width_bits: u64,
+}
+
+/// The fully-elaborated kernel instance.
+#[derive(Debug, Clone)]
+pub struct KernelInstance {
+    pub config: KernelConfig,
+    pub modules: Vec<Module>,
+    pub connections: Vec<Connection>,
+    /// BRAM blocks dedicated to each PE's C partition (Eq. 8 share).
+    pub brams_per_pe: u64,
+    /// C elements stored per PE (`x_tot·y_tot/N_p`, Sec. 4.5).
+    pub c_elements_per_pe: u64,
+    /// SLR index of each PE under snake placement.
+    pub pe_slr: Vec<u64>,
+    /// Chain edges that cross an SLR boundary.
+    pub slr_crossings: u64,
+}
+
+impl KernelInstance {
+    /// Elaborate the module layout for a configuration.
+    pub fn elaborate(config: KernelConfig) -> KernelInstance {
+        let t = config.tiling;
+        let n_p = t.n_pes();
+        let dt_bits = config.dt.bits();
+
+        // Snake placement: PEs fill SLRs in chain order, proportionally
+        // to the chip's logic the design occupies.
+        let slr_count = config.device.chiplets.count.max(1);
+        let logic_frac = config.util.max_fraction().clamp(0.0, 1.0);
+        let occupied_slrs = ((logic_frac * slr_count as f64).ceil() as u64).clamp(1, slr_count);
+        let pes_per_slr = n_p.div_ceil(occupied_slrs);
+        let pe_slr: Vec<u64> = (0..n_p).map(|i| i / pes_per_slr).collect();
+        let slr_crossings = pe_slr.windows(2).filter(|w| w[0] != w[1]).count() as u64;
+
+        let mut modules = vec![Module::ReadA, Module::Transpose, Module::FeedB];
+        modules.extend((0..n_p).map(|i| Module::Pe { index: i, slr: pe_slr[i as usize] }));
+        modules.push(Module::StoreC);
+
+        // FIFO connections. Depths per the architecture:
+        //  * Read A → Transpose: one DDR burst (512 bits of elements);
+        //  * Transpose → chain: one A column at chain-distribution order;
+        //  * Feed B → chain: one B row segment (double buffered);
+        //  * PE i → PE i+1: register-stage FIFOs (A fwd, B fwd, C drain);
+        //  * chain head → Store C: one drain beat per cycle.
+        let burst_elems = (512 / dt_bits).max(1);
+        let mut connections = vec![
+            Connection {
+                from: "ReadA".into(),
+                to: "Transpose".into(),
+                depth: burst_elems,
+                width_bits: 512,
+            },
+            Connection {
+                from: "Transpose".into(),
+                to: "PE[0]".into(),
+                // Sec. 4.3: depth ≥ x_b·x_t per lane; aggregate = x_tot.
+                depth: t.x_tot(),
+                width_bits: dt_bits,
+            },
+            Connection {
+                from: "FeedB".into(),
+                to: "PE[0]".into(),
+                depth: 2 * t.y_tot(), // double buffer
+                width_bits: dt_bits * t.y_c,
+            },
+        ];
+        for i in 0..n_p.saturating_sub(1) {
+            // Three buses per PE transition (A, B, C — Sec. 4.1).
+            for (tag, width) in [("A", dt_bits), ("B", dt_bits * t.y_c), ("C", dt_bits * t.y_c)] {
+                connections.push(Connection {
+                    from: format!("PE[{i}]"),
+                    to: format!("PE[{}]", i + 1),
+                    depth: 2,
+                    width_bits: width,
+                });
+                let _ = tag;
+            }
+        }
+        connections.push(Connection {
+            from: "PE[0]".into(),
+            to: "StoreC".into(),
+            depth: burst_elems.max(t.y_c),
+            width_bits: dt_bits * t.y_c,
+        });
+
+        KernelInstance {
+            brams_per_pe: config.n_b / n_p.max(1),
+            c_elements_per_pe: t.memory_tile_elements() / n_p.max(1),
+            pe_slr,
+            slr_crossings,
+            modules,
+            connections,
+            config,
+        }
+    }
+
+    /// Total module count — the paper's "4 + N_p modules".
+    pub fn module_count(&self) -> u64 {
+        self.modules.len() as u64
+    }
+
+    /// Buses crossing SLR gaps (3 per crossing for the chain).
+    pub fn crossing_buses(&self) -> u64 {
+        3 * self.slr_crossings
+    }
+
+    /// Human-readable instance summary (the `fcamm instance` output).
+    pub fn render(&self) -> String {
+        let t = self.config.tiling;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "kernel instance: {} on {}\n  tiling {}\n  modules: {} (4 + N_p={})\n",
+            self.config.dt,
+            self.config.device.name,
+            t,
+            self.module_count(),
+            t.n_pes()
+        ));
+        out.push_str(&format!(
+            "  per PE: {} BRAM blocks, {} C elements\n  SLR span: {:?} ({} chain crossings, {} buses per gap)\n",
+            self.brams_per_pe,
+            self.c_elements_per_pe,
+            self.pe_slr.iter().max().map(|m| m + 1).unwrap_or(1),
+            self.slr_crossings,
+            if self.slr_crossings > 0 { 3 } else { 0 },
+        ));
+        let mut table = Table::new(vec!["Connection", "Depth [elems]", "Width [bits]"]);
+        for c in self.connections.iter().take(4) {
+            table.row(vec![format!("{} -> {}", c.from, c.to), c.depth.to_string(), c.width_bits.to_string()]);
+        }
+        table.row(vec![
+            format!("PE[i] -> PE[i+1] (x{})", t.n_pes().saturating_sub(1)),
+            "2".into(),
+            format!("{} + 2x{}", self.config.dt.bits(), self.config.dt.bits() * t.y_c),
+        ]);
+        out.push_str(&table.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+    use crate::device::catalog::vcu1525;
+    use crate::model::selection::{select_parameters, KernelConfig, SelectionOptions};
+    use crate::model::tiling::TilingConfig;
+
+    fn paper_fp32_instance() -> KernelInstance {
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 };
+        KernelInstance::elaborate(KernelConfig::derive(vcu1525(), DataType::F32, t))
+    }
+
+    #[test]
+    fn four_plus_np_modules() {
+        // Sec. 4.5: "consists of 4 + N_p modules".
+        let inst = paper_fp32_instance();
+        assert_eq!(inst.module_count(), 4 + 192);
+    }
+
+    #[test]
+    fn per_pe_shares_match_section_4_5() {
+        let inst = paper_fp32_instance();
+        // 1536 BRAMs over 192 PEs = 8 per PE; 960·1632/192 elements.
+        assert_eq!(inst.brams_per_pe, 8);
+        assert_eq!(inst.c_elements_per_pe, 960 * 1632 / 192);
+        // Per-PE storage fits the per-PE BRAM share.
+        let s_b = inst.config.device.block_spec.elements_per_block(DataType::F32);
+        assert!(inst.c_elements_per_pe <= inst.brams_per_pe * s_b);
+    }
+
+    #[test]
+    fn snake_placement_crossing_count() {
+        // The 82%-LUT FP32 kernel spans all 3 SLRs: exactly 2 chain
+        // crossings, 3 buses each — matching the chiplet model.
+        let inst = paper_fp32_instance();
+        assert_eq!(inst.slr_crossings, 2);
+        assert_eq!(inst.crossing_buses(), 6);
+        let expected = inst
+            .config
+            .device
+            .chiplets
+            .crossings_for_fraction(inst.config.util.max_fraction());
+        assert_eq!(inst.slr_crossings, expected);
+    }
+
+    #[test]
+    fn transpose_fifo_depth_holds_a_column() {
+        let inst = paper_fp32_instance();
+        let transpose = inst
+            .connections
+            .iter()
+            .find(|c| c.from == "Transpose")
+            .unwrap();
+        assert_eq!(transpose.depth, 960); // x_tot
+        let feed_b = inst.connections.iter().find(|c| c.from == "FeedB").unwrap();
+        assert_eq!(feed_b.depth, 2 * 1632); // double-buffered row
+        assert_eq!(feed_b.width_bits, 32 * 8); // y_c-wide bus = 256 bit ≤ w_p,max
+    }
+
+    #[test]
+    fn chain_edges_have_three_buses() {
+        let inst = paper_fp32_instance();
+        let pe0_to_pe1 = inst
+            .connections
+            .iter()
+            .filter(|c| c.from == "PE[0]" && c.to == "PE[1]")
+            .count();
+        assert_eq!(pe0_to_pe1, 3); // A, B, C
+    }
+
+    #[test]
+    fn bus_widths_respect_device_cap() {
+        for dt in DataType::ALL {
+            let Some(cfg) = select_parameters(vcu1525(), dt, SelectionOptions::default()) else {
+                continue;
+            };
+            let inst = KernelInstance::elaborate(cfg);
+            for c in &inst.connections {
+                assert!(
+                    c.width_bits <= cfg.device.max_bus_bits,
+                    "{dt}: {} -> {} is {} bits",
+                    c.from,
+                    c.to,
+                    c.width_bits
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_kernel_stays_in_one_slr() {
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 16, y_p: 1, x_t: 16, y_t: 64, x_b: 1, y_b: 1 };
+        let inst = KernelInstance::elaborate(KernelConfig::derive(vcu1525(), DataType::F32, t));
+        assert_eq!(inst.slr_crossings, 0);
+        assert_eq!(inst.crossing_buses(), 0);
+    }
+
+    #[test]
+    fn render_mentions_key_facts() {
+        let text = paper_fp32_instance().render();
+        assert!(text.contains("4 + N_p=192"), "{text}");
+        assert!(text.contains("8 BRAM blocks"), "{text}");
+    }
+}

@@ -1,0 +1,25 @@
+//! The coordinator: the paper's build-and-run flow as a service.
+//!
+//! * [`routing`] — static routing-feasibility checks (bus widths, SLR
+//!   crossings, fan-out, memory-step feasibility): the constraints that
+//!   cost the paper 4–24 hours of place-and-route per probe, evaluated
+//!   here in microseconds from the model.
+//! * [`build`] — the kernel build flow: parameter selection → routing
+//!   check → frequency estimate → a [`build::BuildReport`] equivalent to
+//!   one row of Table 2.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation from the model + simulator (the bench targets and the
+//!   CLI both print through here).
+//! * [`service`] — a multi-threaded GEMM service over the PJRT runtime:
+//!   the "MMM as a component of larger applications" deployment mode the
+//!   paper's introduction motivates (bandwidth-conserving matmul offload).
+
+pub mod build;
+pub mod instance;
+pub mod report;
+pub mod routing;
+pub mod service;
+
+pub use build::{build_kernel, BuildOutcome, BuildReport};
+pub use instance::KernelInstance;
+pub use service::{GemmRequest, GemmResponse, GemmService};

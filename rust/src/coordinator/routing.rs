@@ -1,0 +1,218 @@
+//! Routing-feasibility checks (Sec. 2 "Resources", Sec. 4.1).
+//!
+//! These are the constraints the paper enforces by construction (constant
+//! fan-out, ≤3 buses per SLR gap, bounded bus width) or discovers
+//! empirically (utilization wall). The build flow runs them before
+//! accepting a configuration — the model-level stand-in for the 8–24-hour
+//! place-and-route gate.
+
+use crate::datatype::DataType;
+use crate::device::Device;
+use crate::model::frequency::{routability, Routability, UtilizationProfile};
+use crate::model::memory;
+use crate::model::resource;
+use crate::model::tiling::TilingConfig;
+use crate::sim::grid2d::chain_1d_interconnect;
+
+/// A specific violated constraint.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoutingViolation {
+    /// `y_c·w_c` (or `x_c·w_c`) exceeds the device bus-width cap
+    /// (Eq. 2's `w_p,max` constraints).
+    BusTooWide { bus_bits: u64, max_bits: u64 },
+    /// More buses must cross an SLR gap than the device provides.
+    SlrCrossingOversubscribed { buses: u64, max: u64 },
+    /// Eq. 1 violated (logic over budget).
+    LogicOverBudget,
+    /// Eq. 8's N_b,min exceeds the device's block count.
+    MemoryStepInfeasible { n_b_min: u64, available: u64 },
+    /// The 1-D chain pipeline-depth constraint (Sec. 4.1) fails.
+    PipelineTooShallow { compute_tiles: u64, pes: u64 },
+    /// Utilization beyond the empirical 90% routing wall.
+    UtilizationWall { fraction: f64 },
+    /// Sec. 4.2: consecutive accumulations into the same C address are
+    /// separated by one outer product; with floating point this must
+    /// exceed the accumulator latency or the pipeline stalls.
+    AccumulationHazard { distance: u64, latency: u64 },
+}
+
+impl std::fmt::Display for RoutingViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RoutingViolation::BusTooWide { bus_bits, max_bits } => {
+                write!(f, "PE bus {bus_bits} bit exceeds w_p,max = {max_bits} bit")
+            }
+            RoutingViolation::SlrCrossingOversubscribed { buses, max } => {
+                write!(f, "{buses} buses per SLR gap exceed the {max} available")
+            }
+            RoutingViolation::LogicOverBudget => write!(f, "Eq. 1 violated: logic over budget"),
+            RoutingViolation::MemoryStepInfeasible { n_b_min, available } => {
+                write!(f, "N_b,min = {n_b_min} exceeds {available} memory blocks")
+            }
+            RoutingViolation::PipelineTooShallow { compute_tiles, pes } => {
+                write!(f, "{compute_tiles} compute tiles < {pes} PE pipeline stages")
+            }
+            RoutingViolation::UtilizationWall { fraction } => {
+                write!(f, "utilization {:.0}% beyond the ~90% routing wall", fraction * 100.0)
+            }
+            RoutingViolation::AccumulationHazard { distance, latency } => {
+                write!(
+                    f,
+                    "accumulation collision every {distance} cycles < {latency}-cycle FP adder latency (Sec. 4.2)"
+                )
+            }
+        }
+    }
+}
+
+/// Run every static routing check for a configuration.
+pub fn check_routing(device: &Device, dt: DataType, tiling: TilingConfig) -> Vec<RoutingViolation> {
+    let mut violations = Vec::new();
+
+    // Bus width constraints of Eq. 2: x_c·w_c and y_c·w_c ≤ w_p,max.
+    for units in [tiling.x_c, tiling.y_c] {
+        let bus = units * dt.bits();
+        if bus > device.max_bus_bits {
+            violations.push(RoutingViolation::BusTooWide {
+                bus_bits: bus,
+                max_bits: device.max_bus_bits,
+            });
+        }
+    }
+
+    // SLR crossings: the 1-D chain needs 3 buses per gap.
+    let interconnect = chain_1d_interconnect(tiling.n_pes(), device.chiplets);
+    if interconnect.buses_per_slr_crossing > device.chiplets.max_crossing_buses {
+        violations.push(RoutingViolation::SlrCrossingOversubscribed {
+            buses: interconnect.buses_per_slr_crossing,
+            max: device.chiplets.max_crossing_buses,
+        });
+    }
+
+    // Eq. 1.
+    if !resource::fits(device, dt, tiling) {
+        violations.push(RoutingViolation::LogicOverBudget);
+    }
+
+    // Eq. 8 feasibility.
+    let n_b_min = memory::n_b_min(device, dt, tiling.n_pes(), tiling.pe_granularity());
+    if n_b_min > device.memory_blocks {
+        violations.push(RoutingViolation::MemoryStepInfeasible {
+            n_b_min,
+            available: device.memory_blocks,
+        });
+    }
+
+    // Sec. 4.1 pipeline depth.
+    if !tiling.satisfies_pipeline_depth() {
+        violations.push(RoutingViolation::PipelineTooShallow {
+            compute_tiles: tiling.cycles_per_outer_product(),
+            pes: tiling.n_pes(),
+        });
+    }
+
+    // Sec. 4.2 loop-carried accumulation: collisions on a C address are
+    // one outer product apart; floating point needs that to exceed the
+    // accumulator latency ("do not obstruct pipelining for practical
+    // memory tile sizes").
+    let latency = dt.accumulation_latency();
+    if tiling.accumulation_distance() < latency {
+        violations.push(RoutingViolation::AccumulationHazard {
+            distance: tiling.accumulation_distance(),
+            latency,
+        });
+    }
+
+    // Empirical utilization wall.
+    let util = resource::utilization(device, dt, tiling);
+    let bram = memory::bram_utilization(device, dt, tiling);
+    let profile = UtilizationProfile { luts: util.luts, dsps: util.dsps, bram };
+    if routability(profile) == Routability::Unroutable {
+        violations.push(RoutingViolation::UtilizationWall {
+            fraction: util.max_fraction().max(bram),
+        });
+    }
+
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::catalog::vcu1525;
+
+    fn paper_fp32() -> TilingConfig {
+        TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 }
+    }
+
+    #[test]
+    fn paper_config_routes() {
+        assert!(check_routing(&vcu1525(), DataType::F32, paper_fp32()).is_empty());
+    }
+
+    #[test]
+    fn detects_wide_bus() {
+        let mut t = paper_fp32();
+        t.y_c = 32; // 32 × 32 bit = 1024 > 512
+        let v = check_routing(&vcu1525(), DataType::F32, t);
+        assert!(v.iter().any(|x| matches!(x, RoutingViolation::BusTooWide { .. })), "{v:?}");
+    }
+
+    #[test]
+    fn detects_logic_overbudget() {
+        let mut t = paper_fp32();
+        t.x_p = 1024;
+        let v = check_routing(&vcu1525(), DataType::F64, t);
+        assert!(v.contains(&RoutingViolation::LogicOverBudget), "{v:?}");
+    }
+
+    #[test]
+    fn detects_memory_step_infeasible() {
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 2000, y_p: 1, x_t: 2, y_t: 1000, x_b: 1, y_b: 1 };
+        let v = check_routing(&vcu1525(), DataType::F32, t);
+        assert!(
+            v.iter().any(|x| matches!(x, RoutingViolation::MemoryStepInfeasible { .. })),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn detects_shallow_pipeline() {
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 64, y_p: 1, x_t: 1, y_t: 4, x_b: 1, y_b: 1 };
+        let v = check_routing(&vcu1525(), DataType::F32, t);
+        assert!(
+            v.iter().any(|x| matches!(x, RoutingViolation::PipelineTooShallow { .. })),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn detects_accumulation_hazard() {
+        // A 1-PE FP32 chain with a 2x2-compute-tile memory tile collides
+        // every 4 cycles — under the 8-cycle FP32 adder latency.
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 1, y_p: 1, x_t: 2, y_t: 2, x_b: 1, y_b: 1 };
+        let v = check_routing(&vcu1525(), DataType::F32, t);
+        assert!(
+            v.iter().any(|x| matches!(x, RoutingViolation::AccumulationHazard { .. })),
+            "{v:?}"
+        );
+        // The same tile with integer accumulation (1 cycle) is fine.
+        let v_int = check_routing(&vcu1525(), DataType::U32, t);
+        assert!(
+            !v_int.iter().any(|x| matches!(x, RoutingViolation::AccumulationHazard { .. })),
+            "{v_int:?}"
+        );
+    }
+
+    #[test]
+    fn violations_display() {
+        for v in [
+            RoutingViolation::BusTooWide { bus_bits: 1024, max_bits: 512 },
+            RoutingViolation::LogicOverBudget,
+            RoutingViolation::UtilizationWall { fraction: 0.97 },
+            RoutingViolation::AccumulationHazard { distance: 4, latency: 8 },
+        ] {
+            assert!(!v.to_string().is_empty());
+        }
+    }
+}

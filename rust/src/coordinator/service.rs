@@ -1,0 +1,205 @@
+//! GEMM service: the deployment mode the paper's introduction motivates.
+//!
+//! "MMM is typically used as a component of larger applications, where it
+//! co-exists with … memory bound operations, which benefit from a larger
+//! share of the bandwidth" (Sec. 1). This service is that component: a
+//! multi-worker request loop in front of the PJRT runtime, executing
+//! GEMMs through the communication-avoiding tiled schedule, with
+//! per-request latency and aggregate throughput accounting.
+//!
+//! Built on std threads + channels (the offline environment provides no
+//! tokio; a thread-per-worker pool is also the more faithful analogue of
+//! fixed hardware kernel instances on an FPGA). PJRT client handles are
+//! not `Send` (the `xla` crate wraps `Rc` internals), so each worker owns
+//! a *private* runtime — mirroring one compiled kernel instance per
+//! hardware partition.
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::runtime::Runtime;
+use crate::schedule::TiledExecutor;
+
+/// One matmul job.
+#[derive(Debug, Clone)]
+pub struct GemmRequest {
+    pub id: u64,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Row-major m×k.
+    pub a: Vec<f32>,
+    /// Row-major k×n.
+    pub b: Vec<f32>,
+}
+
+/// Completed job.
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub c: Vec<f32>,
+    pub latency: Duration,
+    /// PJRT invocations performed for this request.
+    pub steps: usize,
+    /// Worker that served the request.
+    pub worker: usize,
+}
+
+enum Job {
+    Run(GemmRequest, mpsc::Sender<Result<GemmResponse>>),
+    Shutdown,
+}
+
+/// Aggregate counters.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub total_steps: AtomicU64,
+    pub total_madds: AtomicU64,
+}
+
+/// A pool of workers, each owning a private PJRT runtime over the same
+/// artifacts directory.
+pub struct GemmService {
+    tx: Mutex<mpsc::Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub stats: Arc<ServiceStats>,
+    next_id: AtomicU64,
+}
+
+impl GemmService {
+    /// Start `n_workers` workers over `artifacts_dir`. Blocks until every
+    /// worker has compiled its executable (so first-request latency is
+    /// steady-state).
+    pub fn start(artifacts_dir: PathBuf, n_workers: usize) -> Result<GemmService> {
+        assert!(n_workers >= 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats = Arc::new(ServiceStats::default());
+        let mut workers = Vec::new();
+        for worker_id in 0..n_workers {
+            let rx = rx.clone();
+            let stats = stats.clone();
+            let ready = ready_tx.clone();
+            let dir = artifacts_dir.clone();
+            workers.push(std::thread::spawn(move || {
+                // Per-worker runtime: PJRT handles are not Send.
+                let exec = match Runtime::open(&dir)
+                    .and_then(|rt| TiledExecutor::from_runtime(&rt))
+                {
+                    Ok(exec) => {
+                        let _ = ready.send(Ok(()));
+                        exec
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(Job::Run(req, reply)) => {
+                            let t0 = Instant::now();
+                            let result = exec.matmul(&req.a, &req.b, req.m, req.n, req.k);
+                            let out = match result {
+                                Ok(run) => {
+                                    stats.completed.fetch_add(1, Ordering::Relaxed);
+                                    stats
+                                        .total_steps
+                                        .fetch_add(run.steps_executed as u64, Ordering::Relaxed);
+                                    stats.total_madds.fetch_add(
+                                        (req.m * req.n * req.k) as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                    Ok(GemmResponse {
+                                        id: req.id,
+                                        c: run.c,
+                                        latency: t0.elapsed(),
+                                        steps: run.steps_executed,
+                                        worker: worker_id,
+                                    })
+                                }
+                                Err(e) => {
+                                    stats.failed.fetch_add(1, Ordering::Relaxed);
+                                    Err(e)
+                                }
+                            };
+                            let _ = reply.send(out);
+                        }
+                        Ok(Job::Shutdown) | Err(_) => break,
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..n_workers {
+            ready_rx
+                .recv()
+                .context("worker died during startup")?
+                .context("worker failed to initialize")?;
+        }
+        Ok(GemmService { tx: Mutex::new(tx), workers, stats, next_id: AtomicU64::new(0) })
+    }
+
+    /// Submit a job; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> mpsc::Receiver<Result<GemmResponse>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = GemmRequest { id, m, n, k, a, b };
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Run(req, reply_tx))
+            .expect("service workers gone");
+        reply_rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn matmul_blocking(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> Result<GemmResponse> {
+        self.submit(m, n, k, a, b)
+            .recv()
+            .context("service dropped the request")?
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(mut self) {
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in 0..self.workers.len() {
+                let _ = tx.send(Job::Shutdown);
+            }
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for GemmService {
+    fn drop(&mut self) {
+        let tx = self.tx.lock().unwrap();
+        for _ in 0..self.workers.len() {
+            let _ = tx.send(Job::Shutdown);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Data types and semirings supported by the architecture.
+//!
+//! The paper's flexibility claims (Sec. 1, 5.2): arbitrary data types
+//! (floating point of several precisions, integers) and pluggable
+//! compute-unit operations (e.g. the distance product's add/min replacing
+//! multiply/add). [`DataType`] carries the bit width `w_c` used throughout
+//! the model (Eq. 8's `⌈w_c·x_c y_c / w_b⌉`, BRAM port configuration,
+//! bus-width constraints), and [`cost`] tabulates the per-compute-unit
+//! resource consumption `r_c` on each device family.
+
+pub mod cost;
+pub mod semiring;
+
+pub use semiring::Semiring;
+
+/// Numeric type of the matrix elements — one row of the paper's Table 2
+/// evaluation per variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DataType {
+    F16,
+    F32,
+    F64,
+    U8,
+    U16,
+    U32,
+}
+
+impl DataType {
+    /// All types evaluated in the paper's Table 2, in paper order.
+    pub const ALL: [DataType; 6] = [
+        DataType::F16,
+        DataType::F32,
+        DataType::F64,
+        DataType::U8,
+        DataType::U16,
+        DataType::U32,
+    ];
+
+    /// Bit width `w_c` of one element.
+    pub fn bits(self) -> u64 {
+        match self {
+            DataType::U8 => 8,
+            DataType::F16 | DataType::U16 => 16,
+            DataType::F32 | DataType::U32 => 32,
+            DataType::F64 => 64,
+        }
+    }
+
+    pub fn bytes(self) -> u64 {
+        self.bits() / 8
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DataType::F16 | DataType::F32 | DataType::F64)
+    }
+
+    /// Paper-style name (Table 2 rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            DataType::F16 => "FP16",
+            DataType::F32 => "FP32",
+            DataType::F64 => "FP64",
+            DataType::U8 => "uint8",
+            DataType::U16 => "uint16",
+            DataType::U32 => "uint32",
+        }
+    }
+
+    /// The dtype string used by the artifact manifest (numpy names).
+    pub fn manifest_name(self) -> &'static str {
+        match self {
+            DataType::F16 => "float16",
+            DataType::F32 => "float32",
+            DataType::F64 => "float64",
+            DataType::U8 => "uint8",
+            DataType::U16 => "uint16",
+            DataType::U32 => "uint32",
+        }
+    }
+
+    pub fn from_manifest_name(s: &str) -> Option<DataType> {
+        Some(match s {
+            "float16" => DataType::F16,
+            "float32" => DataType::F32,
+            "float64" => DataType::F64,
+            "uint8" => DataType::U8,
+            "uint16" => DataType::U16,
+            "uint32" => DataType::U32,
+            // The integer artifacts may also be signed on the XLA side;
+            // width is what matters to the model.
+            "int8" => DataType::U8,
+            "int16" => DataType::U16,
+            "int32" => DataType::U32,
+            _ => return None,
+        })
+    }
+
+    /// Floating point accumulation has a multi-cycle latency on FPGA
+    /// fabric (no native accumulate), creating the loop-carried dependency
+    /// the decomposition works around (Sec. 4.2). Integer accumulation is
+    /// single-cycle.
+    pub fn accumulation_latency(self) -> u64 {
+        match self {
+            DataType::F16 => 6,
+            DataType::F32 => 8,
+            DataType::F64 => 12,
+            DataType::U8 | DataType::U16 | DataType::U32 => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for DataType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for DataType {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let lower = s.to_ascii_lowercase();
+        Ok(match lower.as_str() {
+            "fp16" | "f16" | "half" | "float16" => DataType::F16,
+            "fp32" | "f32" | "float" | "float32" => DataType::F32,
+            "fp64" | "f64" | "double" | "float64" => DataType::F64,
+            "u8" | "uint8" => DataType::U8,
+            "u16" | "uint16" => DataType::U16,
+            "u32" | "uint32" => DataType::U32,
+            _ => return Err(format!("unknown data type {s:?}")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(DataType::U8.bits(), 8);
+        assert_eq!(DataType::F16.bits(), 16);
+        assert_eq!(DataType::F32.bits(), 32);
+        assert_eq!(DataType::F64.bits(), 64);
+        assert_eq!(DataType::F64.bytes(), 8);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for dt in DataType::ALL {
+            let parsed: DataType = dt.name().parse().unwrap();
+            assert_eq!(parsed, dt);
+            assert_eq!(DataType::from_manifest_name(dt.manifest_name()), Some(dt));
+        }
+        assert!("quux".parse::<DataType>().is_err());
+    }
+
+    #[test]
+    fn float_accumulation_has_latency() {
+        for dt in DataType::ALL {
+            if dt.is_float() {
+                assert!(dt.accumulation_latency() > 1, "{dt}");
+            } else {
+                assert_eq!(dt.accumulation_latency(), 1, "{dt}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_manifest_aliases() {
+        assert_eq!(DataType::from_manifest_name("int32"), Some(DataType::U32));
+        assert_eq!(DataType::from_manifest_name("bogus"), None);
+    }
+}

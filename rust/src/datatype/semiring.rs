@@ -1,0 +1,122 @@
+//! Semirings: the algebra executed by a compute unit.
+//!
+//! The paper (Sec. 5.2): "the operations performed by compute units can be
+//! specified, e.g., to compute the distance product by replacing multiply
+//! and add with add and minimum". The L1 Pallas kernels implement the same
+//! two semirings (`plus_times`, `min_plus`); this Rust-side definition is
+//! used by the host reference implementation, the exact simulator (which
+//! moves real data), and the verifier.
+
+/// The (⊕, ⊗) pair a compute unit evaluates per cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Semiring {
+    /// Classical ring: ⊕ = +, ⊗ = ×  (MMM, Listing 1).
+    PlusTimes,
+    /// Tropical: ⊕ = min, ⊗ = +  (distance product / shortest paths).
+    MinPlus,
+}
+
+impl Semiring {
+    /// Identity of ⊕ (the accumulator initialization).
+    pub fn zero_f32(self) -> f32 {
+        match self {
+            Semiring::PlusTimes => 0.0,
+            Semiring::MinPlus => f32::INFINITY,
+        }
+    }
+
+    pub fn zero_f64(self) -> f64 {
+        match self {
+            Semiring::PlusTimes => 0.0,
+            Semiring::MinPlus => f64::INFINITY,
+        }
+    }
+
+    /// ⊕ (accumulate).
+    #[inline(always)]
+    pub fn add_f32(self, a: f32, b: f32) -> f32 {
+        match self {
+            Semiring::PlusTimes => a + b,
+            Semiring::MinPlus => a.min(b),
+        }
+    }
+
+    #[inline(always)]
+    pub fn add_f64(self, a: f64, b: f64) -> f64 {
+        match self {
+            Semiring::PlusTimes => a + b,
+            Semiring::MinPlus => a.min(b),
+        }
+    }
+
+    /// ⊗ (the "multiply").
+    #[inline(always)]
+    pub fn mul_f32(self, a: f32, b: f32) -> f32 {
+        match self {
+            Semiring::PlusTimes => a * b,
+            Semiring::MinPlus => a + b,
+        }
+    }
+
+    #[inline(always)]
+    pub fn mul_f64(self, a: f64, b: f64) -> f64 {
+        match self {
+            Semiring::PlusTimes => a * b,
+            Semiring::MinPlus => a + b,
+        }
+    }
+
+    /// The manifest `op` string of artifacts computing this semiring.
+    pub fn name(self) -> &'static str {
+        match self {
+            Semiring::PlusTimes => "plus_times",
+            Semiring::MinPlus => "min_plus",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plus_times_is_arithmetic() {
+        let s = Semiring::PlusTimes;
+        assert_eq!(s.mul_f32(3.0, 4.0), 12.0);
+        assert_eq!(s.add_f32(3.0, 4.0), 7.0);
+        assert_eq!(s.zero_f32(), 0.0);
+    }
+
+    #[test]
+    fn min_plus_is_tropical() {
+        let s = Semiring::MinPlus;
+        assert_eq!(s.mul_f32(3.0, 4.0), 7.0);
+        assert_eq!(s.add_f32(3.0, 4.0), 3.0);
+        assert_eq!(s.zero_f32(), f32::INFINITY);
+    }
+
+    #[test]
+    fn zero_is_identity_of_add() {
+        for s in [Semiring::PlusTimes, Semiring::MinPlus] {
+            for v in [-2.5f32, 0.0, 7.25] {
+                assert_eq!(s.add_f32(s.zero_f32(), v), v);
+            }
+        }
+    }
+
+    #[test]
+    fn semiring_axioms_distributivity_f64() {
+        // a⊗(b⊕c) == (a⊗b)⊕(a⊗c) for both semirings on sample values.
+        for s in [Semiring::PlusTimes, Semiring::MinPlus] {
+            for a in [-1.0f64, 2.0, 5.5] {
+                for b in [0.5f64, -3.0] {
+                    for c in [4.0f64, 1.25] {
+                        let lhs = s.mul_f64(a, s.add_f64(b, c));
+                        let rhs = s.add_f64(s.mul_f64(a, b), s.mul_f64(a, c));
+                        assert!((lhs - rhs).abs() < 1e-12, "{s:?} {a} {b} {c}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! On-chip memory-block model (Xilinx BRAM / Intel M20K).
+//!
+//! Sec. 3.2.2/5.3 of the paper: the machine contains `N_b` memory blocks,
+//! each storing `s_b` words of the target type with a read/write port of
+//! `w_b` bits per cycle. On UltraScale+ a BRAM36 holds 36 kbit with a
+//! maximum simultaneous-read-write port width of 36 bit, configurable as
+//! 18/36/72-bit ports storing 2048/1024/512 elements respectively; wider
+//! data types coalesce multiple BRAMs.
+
+use crate::datatype::DataType;
+
+/// Characteristics of one class of memory block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryBlockSpec {
+    /// Total storage per block in bits (36 kbit for BRAM36, 20 kbit M20K).
+    pub capacity_bits: u64,
+    /// Maximum port width `w_b` in bits (simultaneous 1R1W per cycle).
+    pub max_port_bits: u64,
+    /// Supported port-width configurations, ascending (e.g. [18, 36, 72]).
+    /// The widest entry may exceed `max_port_bits` when it is achieved by
+    /// ganging the two ports (Xilinx SDP 72-bit mode).
+    pub port_configs: &'static [u64],
+}
+
+/// Xilinx UltraScale+ BRAM36: 36 kbit, 18/36/72-bit configurations
+/// (2048/1024/512 elements — the paper's `s_b,18/36/72 bit` values).
+pub const XILINX_BRAM36: MemoryBlockSpec = MemoryBlockSpec {
+    capacity_bits: 36 * 1024,
+    max_port_bits: 36,
+    port_configs: &[18, 36, 72],
+};
+
+/// Intel Stratix 10 / Arria 10 M20K: 20 kbit, up to 40-bit ports.
+pub const INTEL_M20K: MemoryBlockSpec = MemoryBlockSpec {
+    capacity_bits: 20 * 1024,
+    max_port_bits: 40,
+    port_configs: &[10, 20, 40],
+};
+
+impl MemoryBlockSpec {
+    /// The narrowest supported port configuration that holds one element
+    /// of `dt` per port word. Types narrower than the narrowest config pad
+    /// up (a uint8 occupies an 18-bit port word on BRAM — the paper's model
+    /// only ever reads/writes whole coalesced words, Eq. 8).
+    pub fn port_config_for(self, dt: DataType) -> u64 {
+        let w = dt.bits();
+        for &cfg in self.port_configs {
+            if cfg >= w {
+                return cfg;
+            }
+        }
+        // Wider than the widest config: coalesce multiple blocks; each
+        // block still runs its widest configuration.
+        *self.port_configs.last().unwrap()
+    }
+
+    /// Intrinsic size `s_b`: elements of `dt` one block stores in the
+    /// chosen port configuration. Paper Sec. 5.3: 1024 for FP32, 2048 for
+    /// FP16, 512 for FP64 on BRAM36. Types at most half the port width
+    /// pack multiple elements per port word (accesses are coalesced into
+    /// `w_c·x_c·y_c`-bit words anyway, Eq. 8), so a uint8 BRAM36 holds
+    /// 4608 elements — this is what puts the paper's uint8 kernel at just
+    /// 51% BRAM for a 1980×2176 tile.
+    pub fn elements_per_block(self, dt: DataType) -> u64 {
+        let cfg = self.port_config_for(dt);
+        let w = dt.bits();
+        if 2 * w <= cfg {
+            // Packed: full capacity at element granularity.
+            self.capacity_bits / w
+        } else if w <= cfg {
+            self.capacity_bits / cfg
+        } else {
+            // Element wider than one block's port: it is striped across
+            // ⌈w_c/cfg⌉ ganged blocks, so each block holds proportionally
+            // fewer whole elements.
+            let blocks = w.div_ceil(cfg);
+            self.capacity_bits / cfg / blocks
+        }
+    }
+
+    /// Effective per-cycle access width used in Eq. 8 (`w_b`).
+    pub fn port_bits(self) -> u64 {
+        self.max_port_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bram36_matches_paper_sb_values() {
+        // Paper Sec. 5.3: s_b,36bit = 1024 (FP32), s_b,18bit = 2048 (FP16),
+        // s_b,72bit = 512 (FP64).
+        assert_eq!(XILINX_BRAM36.elements_per_block(DataType::F32), 1024);
+        assert_eq!(XILINX_BRAM36.elements_per_block(DataType::F16), 2048);
+        assert_eq!(XILINX_BRAM36.elements_per_block(DataType::F64), 512);
+    }
+
+    #[test]
+    fn narrow_types_pack_or_pad() {
+        // u8 packs 2 per 18-bit port word → full-capacity density; u16
+        // occupies one 18-bit word per element (paper's u16 kernel: 88%
+        // BRAM for a 1680×2048 tile at s_b = 2048).
+        assert_eq!(XILINX_BRAM36.port_config_for(DataType::U8), 18);
+        assert_eq!(XILINX_BRAM36.elements_per_block(DataType::U8), 4608);
+        assert_eq!(XILINX_BRAM36.elements_per_block(DataType::U16), 2048);
+        assert_eq!(XILINX_BRAM36.elements_per_block(DataType::U32), 1024);
+    }
+
+    #[test]
+    fn paper_bram_columns_from_packing() {
+        // Table 2 BRAM columns: uint8 1980×2176 → 51%; uint16 1680×2048
+        // → 88% (C-buffer-only estimates over 1906 blocks).
+        let u8_blocks = (1980u64 * 2176).div_ceil(XILINX_BRAM36.elements_per_block(DataType::U8));
+        assert!((0.46..0.53).contains(&(u8_blocks as f64 / 1906.0)), "{u8_blocks}");
+        let u16_blocks =
+            (1680u64 * 2048).div_ceil(XILINX_BRAM36.elements_per_block(DataType::U16));
+        assert!((0.85..0.91).contains(&(u16_blocks as f64 / 1906.0)), "{u16_blocks}");
+    }
+
+    #[test]
+    fn port_width_w_b() {
+        assert_eq!(XILINX_BRAM36.port_bits(), 36);
+        assert_eq!(INTEL_M20K.port_bits(), 40);
+    }
+
+    #[test]
+    fn m20k_configs() {
+        assert_eq!(INTEL_M20K.port_config_for(DataType::F32), 40);
+        assert_eq!(INTEL_M20K.elements_per_block(DataType::F32), 512);
+        assert_eq!(INTEL_M20K.port_config_for(DataType::F16), 20);
+        assert_eq!(INTEL_M20K.elements_per_block(DataType::F16), 1024);
+    }
+
+    #[test]
+    fn f64_spans_one_bram_in_72bit_mode() {
+        assert_eq!(XILINX_BRAM36.port_config_for(DataType::F64), 72);
+    }
+}

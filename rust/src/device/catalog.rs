@@ -1,0 +1,183 @@
+//! Device catalog.
+//!
+//! The headline entry is the paper's testbed: the Xilinx VCU1525 board
+//! (Virtex UltraScale+ XCVU9P) with the post-shell resource budget from
+//! Sec. 5.3: 1,033,608 LUTs, 2,174,048 FFs, 6,834 DSPs, 1,906 BRAMs across
+//! three SLRs. Other entries exercise the model's portability claim
+//! (Sec. 1: "We do not assume the target hardware").
+
+use super::bram::{MemoryBlockSpec, INTEL_M20K, XILINX_BRAM36};
+use super::chiplet::ChipletLayout;
+use super::ddr::{DdrSpec, DDR4_2400};
+use super::resources::ResourceVec;
+
+/// Vendor family — selects the compute-unit cost table
+/// (`datatype/cost.rs`): UltraScale+ builds floating point from
+/// DSP+LUT/FF combinations, Intel devices have native FP DSPs (Sec. 3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    XilinxUltraScalePlus,
+    XilinxVirtex7,
+    IntelStratix10,
+    IntelArria10,
+}
+
+/// A concrete FPGA target: every hardware constant the model consumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    pub family: Family,
+    /// Logic resources available to kernels (post-shell).
+    pub resources: ResourceVec,
+    /// Number of memory blocks `N_b,max` available to kernels.
+    pub memory_blocks: u64,
+    pub block_spec: MemoryBlockSpec,
+    pub chiplets: ChipletLayout,
+    pub ddr: DdrSpec,
+    /// Target clock `f_max` in Hz (what the toolflow is asked for).
+    pub f_max_hz: f64,
+    /// Maximum inter-PE data bus width `w_p,max` in bits (Sec. 3.1:
+    /// "typically takes values up to 512 bit").
+    pub max_bus_bits: u64,
+}
+
+/// The paper's testbed: VCU1525 (XCVU9P), SDAccel 5.1 shell, 200 MHz
+/// target. Resource numbers are the paper's exact post-shell budget.
+pub const fn vcu1525() -> Device {
+    Device {
+        name: "VCU1525 (XCVU9P)",
+        family: Family::XilinxUltraScalePlus,
+        resources: ResourceVec { luts: 1_033_608.0, ffs: 2_174_048.0, dsps: 6_834.0 },
+        memory_blocks: 1_906,
+        block_spec: XILINX_BRAM36,
+        chiplets: ChipletLayout { count: 3, max_crossing_buses: 720 },
+        ddr: DDR4_2400,
+        f_max_hz: 200e6,
+        max_bus_bits: 512,
+    }
+}
+
+/// A mid-size monolithic UltraScale+ part (KU115-like): exercises the
+/// no-SLR-penalty path of the frequency model.
+pub const fn monolithic_usp() -> Device {
+    Device {
+        name: "Monolithic US+ (KU115-class)",
+        family: Family::XilinxUltraScalePlus,
+        resources: ResourceVec { luts: 663_360.0, ffs: 1_326_720.0, dsps: 5_520.0 },
+        memory_blocks: 2_160 / 2 * 2 - 96, // 2064 post-shell
+        block_spec: XILINX_BRAM36,
+        chiplets: ChipletLayout::MONOLITHIC,
+        ddr: DDR4_2400,
+        f_max_hz: 250e6,
+        max_bus_bits: 512,
+    }
+}
+
+/// Intel Stratix 10 (GX2800-class): native FP32 DSPs, M20K blocks.
+pub const fn stratix10() -> Device {
+    Device {
+        name: "Stratix 10 GX2800",
+        family: Family::IntelStratix10,
+        resources: ResourceVec { luts: 1_866_240.0, ffs: 3_732_480.0, dsps: 5_760.0 },
+        memory_blocks: 11_721,
+        block_spec: INTEL_M20K,
+        chiplets: ChipletLayout::MONOLITHIC,
+        ddr: DDR4_2400,
+        f_max_hz: 300e6,
+        max_bus_bits: 512,
+    }
+}
+
+/// Intel Arria 10 (GX1150, the HARPv2 FPGA of Moss et al. [27]).
+pub const fn arria10() -> Device {
+    Device {
+        name: "Arria 10 GX1150",
+        family: Family::IntelArria10,
+        resources: ResourceVec { luts: 854_400.0, ffs: 1_708_800.0, dsps: 1_518.0 },
+        memory_blocks: 2_713,
+        block_spec: INTEL_M20K,
+        chiplets: ChipletLayout::MONOLITHIC,
+        ddr: DDR4_2400,
+        f_max_hz: 300e6,
+        max_bus_bits: 512,
+    }
+}
+
+/// A deliberately tiny device for exact-simulation tests: small enough
+/// that the cycle-accurate simulator moves every element.
+pub const fn toy_device() -> Device {
+    Device {
+        name: "toy-fpga",
+        family: Family::XilinxUltraScalePlus,
+        resources: ResourceVec { luts: 40_000.0, ffs: 80_000.0, dsps: 240.0 },
+        memory_blocks: 96,
+        block_spec: XILINX_BRAM36,
+        chiplets: ChipletLayout::MONOLITHIC,
+        ddr: DDR4_2400,
+        f_max_hz: 200e6,
+        max_bus_bits: 512,
+    }
+}
+
+/// All catalog entries (for portability sweeps and `fcamm devices`).
+pub fn all_devices() -> Vec<Device> {
+    vec![vcu1525(), monolithic_usp(), stratix10(), arria10(), toy_device()]
+}
+
+/// Look up a device by (case-insensitive) name prefix.
+pub fn find_device(name: &str) -> Option<Device> {
+    let needle = name.to_ascii_lowercase();
+    all_devices()
+        .into_iter()
+        .find(|d| d.name.to_ascii_lowercase().starts_with(&needle) || needle == "vu9p" && d.name.contains("VU9P"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+
+    #[test]
+    fn vcu1525_matches_paper_budget() {
+        let d = vcu1525();
+        assert_eq!(d.resources.luts, 1_033_608.0);
+        assert_eq!(d.resources.ffs, 2_174_048.0);
+        assert_eq!(d.resources.dsps, 6_834.0);
+        assert_eq!(d.memory_blocks, 1_906);
+        assert_eq!(d.chiplets.count, 3);
+        assert_eq!(d.f_max_hz, 200e6);
+    }
+
+    #[test]
+    fn vcu1525_total_fast_memory_fp32() {
+        // S = N_b * s_b = 1906 * 1024 ≈ 1.95M FP32 elements (7.4 MiB).
+        let d = vcu1525();
+        let s = d.memory_blocks * d.block_spec.elements_per_block(DataType::F32);
+        assert_eq!(s, 1_951_744);
+    }
+
+    #[test]
+    fn catalog_is_nonempty_and_named_uniquely() {
+        let devices = all_devices();
+        assert!(devices.len() >= 4);
+        let mut names: Vec<_> = devices.iter().map(|d| d.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), devices.len());
+    }
+
+    #[test]
+    fn find_by_prefix() {
+        assert!(find_device("VCU1525").is_some());
+        assert!(find_device("vcu").is_some());
+        assert!(find_device("stratix").is_some());
+        assert!(find_device("zzz").is_none());
+    }
+
+    #[test]
+    fn toy_device_is_small() {
+        let d = toy_device();
+        assert!(d.resources.dsps <= 512.0);
+        assert!(d.memory_blocks <= 128);
+    }
+}

@@ -1,0 +1,98 @@
+//! Chiplet (SLR / super-logic-region) topology.
+//!
+//! Sec. 2 of the paper: "The routing challenges are exasperated in FPGA
+//! chips that consist of multiple 'chiplets', such as the Xilinx
+//! UltraScale+ VU9P … which hosts three 'super-logical regions' (SLRs).
+//! Crossing the chiplets consumes highly limited routing resources and
+//! carries a higher timing penalty."
+//!
+//! The 1-D PE chain maps onto the SLRs snake-style (Sec. 4.5); the number
+//! of inter-SLR crossings a design makes is what the frequency model keys
+//! on (each crossing contributes long timing paths, Fig. 7's observed
+//! degradation past the first crossing).
+
+/// Chiplet structure of a device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChipletLayout {
+    /// Number of chiplets/SLRs (1 = monolithic die).
+    pub count: u64,
+    /// Data buses that can cross between adjacent chiplets without
+    /// significant timing penalty (a small number of dedicated Laguna
+    /// routes on UltraScale+).
+    pub max_crossing_buses: u64,
+}
+
+impl ChipletLayout {
+    pub const MONOLITHIC: ChipletLayout = ChipletLayout { count: 1, max_crossing_buses: u64::MAX };
+
+    /// SLR crossings made by a design occupying `logic_fraction` of the
+    /// chip's logic, assuming the placer packs SLRs in order (snake
+    /// placement of the PE chain). A design inside one SLR crosses 0
+    /// times; using the whole chip crosses `count - 1` times.
+    pub fn crossings_for_fraction(self, logic_fraction: f64) -> u64 {
+        if self.count <= 1 {
+            return 0;
+        }
+        let f = logic_fraction.clamp(0.0, 1.0);
+        // Occupied SLRs = ceil(f * count); crossings = occupied - 1.
+        let occupied = (f * self.count as f64).ceil() as u64;
+        occupied.saturating_sub(1)
+    }
+
+    /// Fraction of the chip at which the first crossing appears — the
+    /// paper observes kernels compile at the full 200 MHz "until the first
+    /// chiplet/SLR crossing" (~33% on the 3-SLR VU9P).
+    pub fn first_crossing_fraction(self) -> f64 {
+        if self.count <= 1 {
+            1.0
+        } else {
+            1.0 / self.count as f64
+        }
+    }
+
+    /// Buses the 1-D chain sends across each SLR gap: 3 (A, B, C — Sec.
+    /// 4.1 "only 3 buses must cross the gap"). The 2-D grid variant needs
+    /// a bundle proportional to the grid circumference inside the SLR.
+    pub fn chain_crossing_buses(self) -> u64 {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VU9P_SLRS: ChipletLayout = ChipletLayout { count: 3, max_crossing_buses: 720 };
+
+    #[test]
+    fn crossing_counts_scale_with_occupancy() {
+        assert_eq!(VU9P_SLRS.crossings_for_fraction(0.10), 0);
+        assert_eq!(VU9P_SLRS.crossings_for_fraction(0.33), 0);
+        assert_eq!(VU9P_SLRS.crossings_for_fraction(0.34), 1);
+        assert_eq!(VU9P_SLRS.crossings_for_fraction(0.66), 1);
+        assert_eq!(VU9P_SLRS.crossings_for_fraction(0.70), 2);
+        assert_eq!(VU9P_SLRS.crossings_for_fraction(1.0), 2);
+    }
+
+    #[test]
+    fn monolithic_never_crosses() {
+        assert_eq!(ChipletLayout::MONOLITHIC.crossings_for_fraction(1.0), 0);
+        assert_eq!(ChipletLayout::MONOLITHIC.first_crossing_fraction(), 1.0);
+    }
+
+    #[test]
+    fn first_crossing_threshold_vu9p() {
+        assert!((VU9P_SLRS.first_crossing_fraction() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamps_out_of_range_fractions() {
+        assert_eq!(VU9P_SLRS.crossings_for_fraction(-0.5), 0);
+        assert_eq!(VU9P_SLRS.crossings_for_fraction(42.0), 2);
+    }
+
+    #[test]
+    fn chain_needs_three_buses() {
+        assert_eq!(VU9P_SLRS.chain_crossing_buses(), 3);
+    }
+}

@@ -1,0 +1,94 @@
+//! Off-chip DDR memory model.
+//!
+//! Sec. 4.3 of the paper: "For DDR4 memory, a minimum of 512 bits must be
+//! transferred to make up for the I/O clock multiplier, and much longer
+//! bursts are required to saturate DDR bandwidth in practice." The VCU1525
+//! hosts four DDR4-2400 DIMMs (the paper uses one: "a single DIMM is
+//! sufficient to saturate the kernel", peak 19 200 MB/s — the denominator
+//! of the paper's 1.8 % bandwidth figure in Sec. 5.4).
+
+/// One DDR channel/DIMM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DdrSpec {
+    /// Peak bandwidth in bytes/second (19.2 GB/s for DDR4-2400 x64).
+    pub peak_bytes_per_sec: f64,
+    /// Minimum efficient transfer in bits (the I/O clock multiplier
+    /// granularity; 512 for DDR4).
+    pub min_burst_bits: u64,
+    /// Burst length (beats) after which reads approach peak efficiency.
+    pub efficient_burst_beats: u64,
+    /// Fraction of peak achievable with long sequential bursts.
+    pub sequential_efficiency: f64,
+}
+
+/// DDR4-2400, 64-bit channel (one VCU1525 DIMM).
+pub const DDR4_2400: DdrSpec = DdrSpec {
+    peak_bytes_per_sec: 19.2e9,
+    min_burst_bits: 512,
+    efficient_burst_beats: 64,
+    sequential_efficiency: 0.94,
+};
+
+impl DdrSpec {
+    /// Effective bytes/second for transfers issued as bursts of
+    /// `burst_bits` bits. Short bursts waste the difference up to the
+    /// 512-bit minimum (the column-wise-read problem of Sec. 4.3 that the
+    /// Transpose module exists to fix).
+    pub fn effective_bandwidth(self, burst_bits: u64) -> f64 {
+        let useful = burst_bits.max(1);
+        let transferred = useful.max(self.min_burst_bits);
+        // Long bursts additionally amortize row activation etc.
+        let burst_factor = if useful >= self.min_burst_bits * self.efficient_burst_beats {
+            self.sequential_efficiency
+        } else {
+            // Linear ramp from 60% at one beat toward sequential efficiency.
+            let beats = useful as f64 / self.min_burst_bits as f64;
+            let ramp = 0.6 + 0.4 * (beats / self.efficient_burst_beats as f64).min(1.0);
+            ramp * self.sequential_efficiency
+        };
+        self.peak_bytes_per_sec * (useful as f64 / transferred as f64) * burst_factor
+    }
+
+    /// Wasted-transfer multiplier for element-wise (non-burst) access of a
+    /// `w_c`-bit element: 512-bit minimum / element width. This is the
+    /// penalty for reading A column-wise without the Transpose module.
+    pub fn waste_factor_elementwise(self, element_bits: u64) -> f64 {
+        self.min_burst_bits as f64 / element_bits.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_bursts_hit_sequential_efficiency() {
+        let bw = DDR4_2400.effective_bandwidth(512 * 1024);
+        assert!((bw - 19.2e9 * 0.94).abs() < 1e6);
+    }
+
+    #[test]
+    fn sub_minimum_bursts_waste_bandwidth() {
+        // A single 32-bit element forces a 512-bit transfer: ≤ 1/16 of peak.
+        let bw = DDR4_2400.effective_bandwidth(32);
+        assert!(bw < 19.2e9 / 16.0 * 0.7);
+        assert!(bw > 0.0);
+    }
+
+    #[test]
+    fn efficiency_monotone_in_burst_length() {
+        let mut last = 0.0;
+        for bits in [32, 64, 512, 4096, 32768, 512 * 64, 512 * 1024] {
+            let bw = DDR4_2400.effective_bandwidth(bits);
+            assert!(bw >= last, "bandwidth should not decrease with burst size");
+            last = bw;
+        }
+    }
+
+    #[test]
+    fn waste_factor_for_fp32_column_reads() {
+        // Paper Sec. 4.3: column-wise 32-bit reads waste 16x.
+        assert_eq!(DDR4_2400.waste_factor_elementwise(32), 16.0);
+        assert_eq!(DDR4_2400.waste_factor_elementwise(64), 8.0);
+    }
+}

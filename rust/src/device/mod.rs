@@ -1,0 +1,20 @@
+//! Device substrate: the hardware constants the paper's model is defined
+//! over (Sec. 2–3).
+//!
+//! The paper's central claim is that I/O-optimal MMM can be derived *in
+//! terms of hardware constants*; this module supplies those constants for
+//! a catalog of real devices. The headline target is the Xilinx VCU1525
+//! board (Virtex UltraScale+ XCVU9P, 3 SLR chiplets) with the exact
+//! post-shell resource budget of the paper's Sec. 5.3.
+
+pub mod bram;
+pub mod catalog;
+pub mod chiplet;
+pub mod ddr;
+pub mod resources;
+
+pub use bram::MemoryBlockSpec;
+pub use catalog::{vcu1525, Device};
+pub use chiplet::ChipletLayout;
+pub use ddr::DdrSpec;
+pub use resources::ResourceVec;

@@ -1,0 +1,147 @@
+//! Logic-resource vectors (the paper's `r = [r_1, …, r_d]`).
+//!
+//! The target hardware contains `d` types of logic resources — on Xilinx
+//! UltraScale+ these are LUTs, flip-flops, and DSP slices (Sec. 5.3: "The
+//! resource vector r thus has the dimensions LUTs, FFs, and DSPs"). All
+//! model constraints (Eq. 1, N_c,max) are vector inequalities over this
+//! type. Components are `f64`: calibrated per-compute-unit costs may be
+//! fractional *averages* (e.g. a DSP shared between two 8-bit multipliers),
+//! while device capacities are integral.
+
+/// A quantity of each logic-resource type. Fixed dimensionality d = 3
+/// (LUT, FF, DSP) — memory blocks are modeled separately per Sec. 3.3
+/// ("We model fast memory resources separately as memory blocks").
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec {
+    pub luts: f64,
+    pub ffs: f64,
+    pub dsps: f64,
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec = ResourceVec { luts: 0.0, ffs: 0.0, dsps: 0.0 };
+
+    pub fn new(luts: f64, ffs: f64, dsps: f64) -> Self {
+        ResourceVec { luts, ffs, dsps }
+    }
+
+    /// Component-wise `self + other`.
+    pub fn add(self, other: ResourceVec) -> ResourceVec {
+        ResourceVec::new(self.luts + other.luts, self.ffs + other.ffs, self.dsps + other.dsps)
+    }
+
+    /// Scalar multiply.
+    pub fn scale(self, s: f64) -> ResourceVec {
+        ResourceVec::new(self.luts * s, self.ffs * s, self.dsps * s)
+    }
+
+    /// Component-wise `self ≤ other` (the feasibility test of Eq. 1).
+    pub fn fits_within(self, budget: ResourceVec) -> bool {
+        self.luts <= budget.luts && self.ffs <= budget.ffs && self.dsps <= budget.dsps
+    }
+
+    /// `min_i (budget_i / self_i)` over nonzero components — how many
+    /// copies of `self` fit in `budget` (the paper's
+    /// `N_c,max ≤ min_i (r_i,max / r_i,c)`).
+    pub fn copies_within(self, budget: ResourceVec) -> f64 {
+        let mut m = f64::INFINITY;
+        for (need, have) in [
+            (self.luts, budget.luts),
+            (self.ffs, budget.ffs),
+            (self.dsps, budget.dsps),
+        ] {
+            if need > 0.0 {
+                m = m.min(have / need);
+            }
+        }
+        m
+    }
+
+    /// Component-wise fractions `self_i / budget_i` (utilization report).
+    pub fn fraction_of(self, budget: ResourceVec) -> Utilization {
+        Utilization {
+            luts: self.luts / budget.luts,
+            ffs: self.ffs / budget.ffs,
+            dsps: self.dsps / budget.dsps,
+        }
+    }
+}
+
+impl std::ops::Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, rhs: ResourceVec) -> ResourceVec {
+        ResourceVec::add(self, rhs)
+    }
+}
+
+impl std::ops::Mul<f64> for ResourceVec {
+    type Output = ResourceVec;
+    fn mul(self, s: f64) -> ResourceVec {
+        self.scale(s)
+    }
+}
+
+/// Per-resource utilization fractions of a budget (the % columns of
+/// Table 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    pub luts: f64,
+    pub ffs: f64,
+    pub dsps: f64,
+}
+
+impl Utilization {
+    /// The largest logic-utilization fraction (frequency/routability
+    /// pressure indicator; see `model/frequency.rs`).
+    pub fn max_fraction(self) -> f64 {
+        self.luts.max(self.ffs).max(self.dsps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_arithmetic() {
+        let a = ResourceVec::new(100.0, 200.0, 3.0);
+        let b = ResourceVec::new(1.0, 2.0, 0.5);
+        let s = a + b;
+        assert_eq!(s, ResourceVec::new(101.0, 202.0, 3.5));
+        assert_eq!(b * 2.0, ResourceVec::new(2.0, 4.0, 1.0));
+    }
+
+    #[test]
+    fn fits_within_is_componentwise() {
+        let budget = ResourceVec::new(100.0, 100.0, 10.0);
+        assert!(ResourceVec::new(100.0, 50.0, 10.0).fits_within(budget));
+        assert!(!ResourceVec::new(101.0, 1.0, 1.0).fits_within(budget));
+        assert!(!ResourceVec::new(1.0, 1.0, 10.1).fits_within(budget));
+        assert!(ResourceVec::ZERO.fits_within(budget));
+    }
+
+    #[test]
+    fn copies_within_takes_binding_constraint() {
+        let budget = ResourceVec::new(1000.0, 10_000.0, 60.0);
+        let cu = ResourceVec::new(10.0, 10.0, 2.0); // LUT allows 100, DSP allows 30
+        assert_eq!(cu.copies_within(budget), 30.0);
+    }
+
+    #[test]
+    fn copies_within_ignores_zero_components() {
+        let budget = ResourceVec::new(1000.0, 1000.0, 0.0);
+        let cu = ResourceVec::new(10.0, 1.0, 0.0); // no DSPs needed
+        assert_eq!(cu.copies_within(budget), 100.0);
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let budget = ResourceVec::new(1000.0, 2000.0, 100.0);
+        let used = ResourceVec::new(810.0, 460.0, 48.0);
+        let u = used.fraction_of(budget);
+        assert!((u.luts - 0.81).abs() < 1e-12);
+        assert!((u.ffs - 0.23).abs() < 1e-12);
+        assert!((u.dsps - 0.48).abs() < 1e-12);
+        assert!((u.max_fraction() - 0.81).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,33 @@
+//! # FCAMM — Flexible Communication-Avoiding Matrix Multiplication
+//!
+//! Reproduction of *"Flexible Communication Avoiding Matrix Multiplication
+//! on FPGA with High-Level Synthesis"* (de Fine Licht, Kwasniewski, Hoefler;
+//! FPGA'20) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system: the analytical
+//!   performance/I/O/resource model ([`model`]), the device catalog
+//!   ([`device`]), the cycle-level simulator of the generated hardware
+//!   architecture ([`sim`]), the Listing-2 tile scheduler ([`schedule`]),
+//!   the PJRT runtime that executes AOT-compiled artifacts ([`runtime`]),
+//!   and the kernel-build coordinator + GEMM service ([`coordinator`]).
+//! * **L2** — `python/compile/model.py`: the JAX compute graph, lowered
+//!   once to HLO text by `python/compile/aot.py`.
+//! * **L1** — `python/compile/kernels/`: the Pallas memory-tile
+//!   outer-product kernels (interpret mode).
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + `manifest.json`, and the Rust binary is
+//! self-contained afterwards.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a module and bench target.
+
+pub mod coordinator;
+pub mod datatype;
+pub mod device;
+pub mod model;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod util;
+pub mod verify;

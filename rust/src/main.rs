@@ -1,0 +1,337 @@
+//! `fcamm` — the leader binary: kernel builds, paper reports, simulation,
+//! verification, and PJRT execution from one CLI.
+//!
+//! ```text
+//! fcamm devices                      list the device catalog
+//! fcamm build [--dtype FP32] [--device vcu1525]
+//!                                    run the Sec.-5.1 build flow
+//! fcamm report <table2|table3|fig3|fig7|fig8|fig9|all>
+//!                                    regenerate a paper table/figure
+//! fcamm simulate --size N [--dtype FP32]
+//!                                    timeline-simulate the selected kernel
+//! fcamm run --size N [--artifacts DIR]
+//!                                    execute a real GEMM via PJRT
+//! fcamm verify [--artifacts DIR]     run the cross-layer verification matrix
+//! fcamm service --requests N [--workers W]
+//!                                    demo the GEMM service
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+
+use fcamm::coordinator::{build_kernel, report, BuildOutcome, GemmService};
+use fcamm::datatype::DataType;
+use fcamm::device::catalog::{all_devices, find_device, vcu1525, Device};
+use fcamm::model::selection::SelectionOptions;
+use fcamm::runtime::Runtime;
+use fcamm::schedule::TiledExecutor;
+use fcamm::sim::simulate_timeline;
+use fcamm::util::rng::Rng;
+use fcamm::util::table::{fmt_f, fmt_pct, Table};
+
+/// Tiny argument cursor (offline environment: no clap).
+struct Args {
+    argv: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Args {
+        Args { argv: std::env::args().skip(1).collect() }
+    }
+
+    fn subcommand(&self) -> Option<&str> {
+        self.argv.first().map(String::as_str)
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.argv
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.argv.get(i + 1))
+            .map(String::as_str)
+    }
+
+    fn device(&self) -> Result<Device> {
+        match self.flag("--device") {
+            None => Ok(vcu1525()),
+            Some(name) => find_device(name)
+                .with_context(|| format!("unknown device {name:?}; see `fcamm devices`")),
+        }
+    }
+
+    fn dtype(&self) -> Result<DataType> {
+        match self.flag("--dtype") {
+            None => Ok(DataType::F32),
+            Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e)),
+        }
+    }
+
+    fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("bad {name} value {s:?}")),
+        }
+    }
+
+    fn artifacts_dir(&self) -> std::path::PathBuf {
+        self.flag("--artifacts")
+            .map(Into::into)
+            .unwrap_or_else(Runtime::default_dir)
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::new();
+    match args.subcommand() {
+        Some("devices") => cmd_devices(),
+        Some("build") => cmd_build(&args),
+        Some("instance") => cmd_instance(&args),
+        Some("report") => cmd_report(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("run") => cmd_run(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("service") => cmd_service(&args),
+        Some(other) => bail!("unknown subcommand {other:?} (see source docs)"),
+        None => {
+            println!("fcamm — flexible communication-avoiding matrix multiplication");
+            println!("subcommands: devices build instance report simulate run verify service");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_devices() -> Result<()> {
+    let mut t = Table::new(vec!["Device", "LUTs", "FFs", "DSPs", "Mem blocks", "Chiplets", "f_max"]);
+    for d in all_devices() {
+        t.row(vec![
+            d.name.to_string(),
+            fmt_f(d.resources.luts, 0),
+            fmt_f(d.resources.ffs, 0),
+            fmt_f(d.resources.dsps, 0),
+            d.memory_blocks.to_string(),
+            d.chiplets.count.to_string(),
+            format!("{} MHz", d.f_max_hz / 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_build(args: &Args) -> Result<()> {
+    let device = args.device()?;
+    let dt = args.dtype()?;
+    match build_kernel(device, dt, SelectionOptions::default()) {
+        BuildOutcome::Success(r) => {
+            let cfg = &r.config;
+            println!("build OK: {} on {}", dt, device.name);
+            println!("  tiling       {}", cfg.tiling);
+            println!("  N_c          {}", cfg.n_c());
+            println!("  N_b,min/N_b  {}/{}", cfg.n_b_min, cfg.n_b);
+            println!("  frequency    {} MHz", fmt_f(cfg.f_hz / 1e6, 1));
+            println!(
+                "  utilization  LUT {} FF {} DSP {} BRAM {}",
+                fmt_pct(cfg.util.luts, 0),
+                fmt_pct(cfg.util.ffs, 0),
+                fmt_pct(cfg.util.dsps, 0),
+                fmt_pct(cfg.bram_frac, 0)
+            );
+            println!("  perf @16384³ {} GOp/s", fmt_f(r.perf_gops, 0));
+            println!("  power        {} W ({} GOp/J)", fmt_f(r.power_w, 1), fmt_f(r.eff_gopj, 1));
+            println!("  intensity    {} Op/Byte", fmt_f(r.intensity_op_b, 0));
+            println!("  bandwidth    {} GB/s", fmt_f(r.bandwidth_gb_s, 2));
+            if r.at_risk {
+                println!("  WARNING: 85–90% utilization — may fail the long P&R path");
+            }
+            Ok(())
+        }
+        BuildOutcome::NoFeasibleConfig => {
+            bail!("no feasible configuration for {dt} on {}", device.name)
+        }
+        BuildOutcome::RoutingFailure(v) => {
+            for violation in &v {
+                eprintln!("routing: {violation}");
+            }
+            bail!("routing failed with {} violation(s)", v.len())
+        }
+    }
+}
+
+fn cmd_instance(args: &Args) -> Result<()> {
+    // Elaborate the Fig.-5 module layout (Sec. 4.5) for the selected kernel.
+    let device = args.device()?;
+    let dt = args.dtype()?;
+    match build_kernel(device, dt, SelectionOptions::default()) {
+        BuildOutcome::Success(r) => {
+            let inst = fcamm::coordinator::KernelInstance::elaborate(r.config);
+            print!("{}", inst.render());
+            Ok(())
+        }
+        other => bail!("build failed: {other:?}"),
+    }
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let device = args.device()?;
+    let which = args.argv.get(1).map(String::as_str).unwrap_or("all");
+    let run_one = |name: &str| -> Result<()> {
+        match name {
+            "table2" => {
+                println!("== Table 2: highest-performing kernels per data type ==");
+                print!("{}", report::table2(device).1.render());
+            }
+            "table3" => {
+                println!("== Table 3: comparison with prior FPGA implementations ==");
+                print!("{}", report::table3(device).1.render());
+            }
+            "fig3" => {
+                println!("== Fig. 3: usable memory blocks vs parallelism (FP32) ==");
+                print!("{}", report::fig3(device).1.render());
+            }
+            "fig7" => {
+                println!("== Fig. 7: strong scaling, FP32, 16384³ ==");
+                print!("{}", report::fig7(device).1.render());
+            }
+            "fig8" => {
+                println!("== Fig. 8: fraction of peak throughput vs matrix size ==");
+                print!("{}", report::fig8(device).1.render());
+            }
+            "fig9" => {
+                println!("== Fig. 9: arithmetic intensity vs memory tile size (FP32) ==");
+                print!("{}", report::fig9(device).1.render());
+            }
+            other => bail!("unknown report {other:?}"),
+        }
+        println!();
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["table2", "table3", "fig3", "fig7", "fig8", "fig9"] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let device = args.device()?;
+    let dt = args.dtype()?;
+    let size = args.usize_flag("--size", 4096)? as u64;
+    let cfg = fcamm::model::selection::select_parameters(device, dt, SelectionOptions::default())
+        .context("no feasible configuration")?;
+    let sim = simulate_timeline(cfg.tiling, size, size, size);
+    println!("simulate {dt} {size}³ on {} ({})", device.name, cfg.tiling);
+    println!(
+        "  cycles     {} (compute {}, drain {}, prefetch {})",
+        sim.total_cycles(),
+        sim.compute_cycles,
+        sim.drain_cycles,
+        sim.prefetch_cycles
+    );
+    println!(
+        "  time       {:.3} ms @ {} MHz",
+        sim.time_s(cfg.f_hz) * 1e3,
+        fmt_f(cfg.f_hz / 1e6, 1)
+    );
+    println!("  perf       {} GOp/s", fmt_f(sim.performance_ops(cfg.f_hz) / 1e9, 1));
+    println!("  efficiency {}", fmt_f(sim.compute_efficiency(cfg.n_c()), 3));
+    println!("  Q          {} elements ({} MB)", sim.q_elements(), sim.q_bytes(dt) / (1 << 20));
+    println!(
+        "  bandwidth  {} GB/s",
+        fmt_f(sim.bandwidth_bytes_per_sec(dt, cfg.f_hz) / 1e9, 2)
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let size = args.usize_flag("--size", 256)?;
+    let rt = Runtime::open(args.artifacts_dir())?;
+    println!("PJRT platform: {}", rt.engine().platform());
+    let exec = TiledExecutor::from_runtime(&rt)?;
+    let (tm, tn, tk) = exec.tile_shape();
+    println!("tile artifact: {tm}x{tn}x{tk}");
+    let mut rng = Rng::new(42);
+    let a = rng.fill_normal_f32(size * size);
+    let b = rng.fill_normal_f32(size * size);
+    let run = exec.matmul(&a, &b, size, size, size)?;
+    println!(
+        "ran {size}³ in {:?} ({} steps, {:.2} Mmadd/s)",
+        run.wall,
+        run.steps_executed,
+        run.madds_per_sec() / 1e6
+    );
+    println!("host-boundary transfers: {} elements", run.transfer_elements);
+    // Spot check.
+    let i = size / 2;
+    let j = size / 3;
+    let mut acc = 0f64;
+    for kk in 0..size {
+        acc += a[i * size + kk] as f64 * b[kk * size + j] as f64;
+    }
+    let got = run.c[i * size + j] as f64;
+    if (got - acc).abs() > 1e-2 * (1.0 + acc.abs()) {
+        bail!("numerics check failed: C[{i}][{j}] = {got}, expected {acc}");
+    }
+    println!("numerics spot-check OK");
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = args.artifacts_dir();
+    let rt = match Runtime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("note: runtime unavailable ({e:#}); verifying sim/model layers only");
+            None
+        }
+    };
+    let checks = fcamm::verify::verify_all(rt.as_ref())?;
+    for c in &checks {
+        println!("  [{}] {} — {}", if c.passed { "ok" } else { "FAIL" }, c.name, c.detail);
+    }
+    println!("{} checks passed", checks.len());
+    Ok(())
+}
+
+fn cmd_service(args: &Args) -> Result<()> {
+    let workers = args.usize_flag("--workers", 2)?;
+    let requests = args.usize_flag("--requests", 8)?;
+    let size = args.usize_flag("--size", 200)?;
+    let service = GemmService::start(args.artifacts_dir(), workers)?;
+    println!("gemm service: {workers} workers, {requests} requests of {size}³");
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..requests)
+        .map(|_| {
+            let a = rng.fill_normal_f32(size * size);
+            let b = rng.fill_normal_f32(size * size);
+            service.submit(size, size, size, a, b)
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    for rx in pending {
+        let resp = rx.recv().context("service dropped request")??;
+        latencies.push(resp.latency);
+    }
+    let wall = t0.elapsed();
+    latencies.sort();
+    println!(
+        "completed {} requests in {:?} (p50 {:?}, p95 {:?})",
+        requests,
+        wall,
+        latencies[latencies.len() / 2],
+        latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)],
+    );
+    let madds = service.stats.total_madds.load(std::sync::atomic::Ordering::Relaxed);
+    println!("aggregate throughput: {:.2} Mmadd/s", madds as f64 / wall.as_secs_f64() / 1e6);
+    service.shutdown();
+    Ok(())
+}

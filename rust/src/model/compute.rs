@@ -1,0 +1,232 @@
+//! Computation model (Sec. 3.1, Eq. 2) and the drain-phase efficiency of
+//! Sec. 4.4 (the quantity behind Fig. 8).
+//!
+//! `T = F/(f·N_c)` is the ideal runtime; the realized runtime adds the
+//! sequential drain of each memory tile (Sec. 4.4) and granularity
+//! padding on partial tiles. The generated kernel supports variable
+//! matrix sizes (Sec. 5.2) with *dynamic loop bounds*: a partial memory
+//! tile of `r × c` elements iterates `⌈r/(x_c·x_p)⌉ · ⌈c/(y_c·y_p)⌉`
+//! compute tiles — padding only up to the compute-tile granularity, not
+//! the full memory tile.
+
+use super::tiling::TilingConfig;
+
+/// Ideal execution time (seconds) per Eq. 2: `T = mnk / (f·N_c)`.
+pub fn ideal_time_s(m: u64, n: u64, k: u64, f_hz: f64, n_c: u64) -> f64 {
+    let f_ops = (m as f64) * (n as f64) * (k as f64);
+    f_ops / (f_hz * n_c as f64)
+}
+
+/// Effective loop bounds of one (possibly partial) memory tile holding
+/// `rows × cols` useful elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileDims {
+    /// Compute-tile iterations in i (`⌈rows/(x_c·x_p)⌉`).
+    pub x_tt: u64,
+    /// Compute-tile iterations in j (`⌈cols/(y_c·y_p)⌉`).
+    pub y_tt: u64,
+    /// Rows evaluated (padded to the compute-tile granularity).
+    pub rows_eff: u64,
+    /// Columns evaluated (padded to granularity).
+    pub cols_eff: u64,
+}
+
+/// Loop bounds for a tile covering `rows × cols` (clipped extents).
+pub fn tile_dims(tiling: TilingConfig, rows: u64, cols: u64) -> TileDims {
+    let gx = tiling.x_c * tiling.x_p;
+    let gy = tiling.y_c * tiling.y_p;
+    let x_tt = rows.div_ceil(gx);
+    let y_tt = cols.div_ceil(gy);
+    TileDims { x_tt, y_tt, rows_eff: x_tt * gx, cols_eff: y_tt * gy }
+}
+
+/// Cycle counts for one memory tile with the given loop bounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileCycles {
+    /// Compute phase: `k` outer products × `x_tt·y_tt` compute tiles.
+    pub compute: u64,
+    /// Drain phase: `rows_eff·cols_eff / (y_c·y_p)` cycles (Sec. 4.4) —
+    /// sequential write-out at the chain head preserving the full S.
+    pub drain: u64,
+    /// Initial B-row prefetch before the first outer product (subsequent
+    /// loads overlap compute via the FIFOs).
+    pub prefetch: u64,
+}
+
+impl TileCycles {
+    pub fn total(self) -> u64 {
+        self.compute + self.drain + self.prefetch
+    }
+}
+
+/// Cycle model of one memory tile (Listing 2 / Fig. 5 architecture).
+pub fn tile_cycles(tiling: TilingConfig, dims: TileDims, k: u64) -> TileCycles {
+    let gy = tiling.y_c * tiling.y_p;
+    TileCycles {
+        compute: k * dims.x_tt * dims.y_tt,
+        drain: dims.rows_eff * dims.cols_eff / gy,
+        prefetch: dims.cols_eff / gy,
+    }
+}
+
+/// Iterate the memory-tile grid of an m×n problem: yields the clipped
+/// extents per tile (shared by the cycle model, the I/O model and the
+/// simulators, so they cannot drift apart).
+pub fn for_each_tile(tiling: TilingConfig, m: u64, n: u64, mut f: impl FnMut(u64, u64)) {
+    let (x_tot, y_tot) = (tiling.x_tot(), tiling.y_tot());
+    for tj in 0..n.div_ceil(y_tot) {
+        let cols = (n - tj * y_tot).min(y_tot);
+        for ti in 0..m.div_ceil(x_tot) {
+            let rows = (m - ti * x_tot).min(x_tot);
+            f(rows, cols);
+        }
+    }
+}
+
+/// Total kernel cycles for C = A·B.
+pub fn total_cycles(tiling: TilingConfig, m: u64, n: u64, k: u64) -> u64 {
+    let mut cycles = 0;
+    for_each_tile(tiling, m, n, |rows, cols| {
+        cycles += tile_cycles(tiling, tile_dims(tiling, rows, cols), k).total();
+    });
+    cycles
+}
+
+/// Fraction of peak multiply-add throughput achieved (the y-axis of
+/// Fig. 8): useful ops / (cycles × N_c).
+pub fn compute_efficiency(tiling: TilingConfig, m: u64, n: u64, k: u64) -> f64 {
+    let useful = (m as f64) * (n as f64) * (k as f64);
+    let cycles = total_cycles(tiling, m, n, k) as f64;
+    useful / (cycles * tiling.n_compute_units() as f64)
+}
+
+/// Realized performance in Op/s (2 ops per multiply-add, the paper's
+/// GOp/s convention) at clock `f_hz`.
+pub fn performance_ops(tiling: TilingConfig, m: u64, n: u64, k: u64, f_hz: f64) -> f64 {
+    2.0 * f_hz * tiling.n_compute_units() as f64 * compute_efficiency(tiling, m, n, k)
+}
+
+/// Asymptotic drain-phase efficiency for huge matrices *divisible by the
+/// tile*: compute/(compute+drain) = k/(k + x_p·x_c) — Sec. 4.4's
+/// `nm/y_c` vs `nmk/N_c` argument rearranged.
+pub fn asymptotic_drain_efficiency(tiling: TilingConfig, k: u64) -> f64 {
+    let kf = k as f64;
+    kf / (kf + (tiling.x_p * tiling.x_c) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_fp32() -> TilingConfig {
+        TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 }
+    }
+
+    #[test]
+    fn eq2_ideal_time() {
+        // 1024³ madds at 200 MHz with 1024 units = 1024³/(2e8·1024) s.
+        let t = ideal_time_s(1024, 1024, 1024, 200e6, 1024);
+        assert!((t - 1024.0 * 1024.0 / 200e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_tile_dims() {
+        let t = paper_fp32();
+        let d = tile_dims(t, t.x_tot(), t.y_tot());
+        assert_eq!(d.x_tt, 5);
+        assert_eq!(d.y_tt, 204);
+        assert_eq!(d.rows_eff, 960);
+        assert_eq!(d.cols_eff, 1632);
+    }
+
+    #[test]
+    fn partial_tile_dims_pad_to_granularity() {
+        let t = paper_fp32();
+        let d = tile_dims(t, 64, 100);
+        assert_eq!(d.x_tt, 1); // ceil(64/192)
+        assert_eq!(d.rows_eff, 192);
+        assert_eq!(d.y_tt, 13); // ceil(100/8)
+        assert_eq!(d.cols_eff, 104);
+    }
+
+    #[test]
+    fn tile_cycle_phases() {
+        let t = paper_fp32();
+        let d = tile_dims(t, t.x_tot(), t.y_tot());
+        let c = tile_cycles(t, d, 16384);
+        assert_eq!(c.compute, 16384 * 1020);
+        assert_eq!(c.drain, 1_566_720 / 8);
+        assert_eq!(c.prefetch, 1632 / 8);
+        assert_eq!(c.total(), c.compute + c.drain + c.prefetch);
+    }
+
+    #[test]
+    fn efficiency_approaches_one_for_large_matrices() {
+        let t = paper_fp32();
+        let m = 960 * 4;
+        let n = 1632 * 4;
+        let eff_small = compute_efficiency(t, m, n, 1024);
+        let eff_large = compute_efficiency(t, m, n, 65536);
+        assert!(eff_large > eff_small);
+        assert!(eff_large > 0.98, "{eff_large}");
+        assert!(eff_large <= 1.0);
+    }
+
+    #[test]
+    fn dynamic_bounds_make_ragged_cheap() {
+        // With dynamic loop bounds, m = x_tot + 1 costs one extra
+        // compute-tile row per k step, not a whole extra memory tile.
+        let t = paper_fp32();
+        let base = total_cycles(t, 960, 1632, 1024);
+        let ragged = total_cycles(t, 961, 1632, 1024);
+        let extra = ragged - base;
+        // One extra row of compute tiles (1024·204) + its drain — far less
+        // than a full second tile (≈ base).
+        assert!(extra < base / 3, "extra {extra} vs base {base}");
+    }
+
+    #[test]
+    fn drain_dominates_small_k_at_large_parallelism() {
+        // Fig. 8 right panel: large N_c and small matrices → low fraction.
+        let t = paper_fp32();
+        let eff = compute_efficiency(t, 960, 1632, 256);
+        // drain/compute = x_p/k = 192/256 → eff ≈ 0.57.
+        assert!((0.45..0.70).contains(&eff), "{eff}");
+    }
+
+    #[test]
+    fn partial_tiles_waste_throughput() {
+        let t = paper_fp32();
+        let divisible = compute_efficiency(t, 960 * 2, 1632 * 2, 8192);
+        let ragged = compute_efficiency(t, 960 * 2 - 100, 1632 + 1, 8192);
+        assert!(ragged < divisible);
+    }
+
+    #[test]
+    fn paper_fp32_16k_performance_shape() {
+        // At the published 145.7 MHz, the dynamic-bounds model gives
+        // ≈ 0.98 efficiency → ~439 GOp/s vs the measured 409 (+7%); our
+        // model does not see the residual runtime overheads. Documented in
+        // EXPERIMENTS.md.
+        let t = paper_fp32();
+        let perf = performance_ops(t, 16384, 16384, 16384, 145.7e6);
+        assert!((perf - 409e9).abs() / 409e9 < 0.12, "{:.1} GOp/s", perf / 1e9);
+    }
+
+    #[test]
+    fn asymptotic_efficiency_formula() {
+        let t = paper_fp32();
+        let eff = asymptotic_drain_efficiency(t, 16384);
+        assert!((eff - 16384.0 / (16384.0 + 192.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn performance_bounded_by_peak() {
+        let t = paper_fp32();
+        let peak = 2.0 * 200e6 * 1536.0;
+        for size in [256, 1024, 4096, 16384] {
+            let p = performance_ops(t, size, size, size, 200e6);
+            assert!(p <= peak, "size {size}: {p} > {peak}");
+        }
+    }
+}

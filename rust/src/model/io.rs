@@ -1,0 +1,239 @@
+//! I/O model (Sec. 3.2, Eqs. 3, 5, 6, 7).
+//!
+//! The memory tile computes an outer product: it loads `x_tot` elements of
+//! an A column and `y_tot` elements of a B row per k-step while reusing
+//! `x_tot·y_tot` partial results of C held on chip, giving the
+//! communication volume of Eq. 6 and the computational-intensity objective
+//! of Eq. 5. The optimum without hardware quantization is the square tile
+//! `x_tot = y_tot = √S` (Eq. 7).
+
+/// Eq. 6: total off-chip transfers (elements) for C = A·B with memory
+/// tile `x_tot × y_tot`:
+/// `Q = m·n·(1 + k·(1/x_tot + 1/y_tot))` — one write per C element plus
+/// the A-column/B-row loads for every k-step of every tile.
+pub fn q_elements(m: u64, n: u64, k: u64, x_tot: u64, y_tot: u64) -> f64 {
+    assert!(x_tot > 0 && y_tot > 0, "tile dims must be positive");
+    let mn = (m as f64) * (n as f64);
+    mn * (1.0 + k as f64 * (1.0 / x_tot as f64 + 1.0 / y_tot as f64))
+}
+
+/// Eq. 6 with ceilings — the volume a real kernel moves when m, n are not
+/// multiples of the tile (partial tiles still load full rows/columns of
+/// the covered region). The exact simulator is validated against this.
+pub fn q_elements_exact(m: u64, n: u64, k: u64, x_tot: u64, y_tot: u64) -> u64 {
+    assert!(x_tot > 0 && y_tot > 0, "tile dims must be positive");
+    let tiles_m = m.div_ceil(x_tot);
+    let tiles_n = n.div_ceil(y_tot);
+    let mut q = m * n; // one write per C element
+    for ti in 0..tiles_m {
+        let h = (m - ti * x_tot).min(x_tot);
+        for tj in 0..tiles_n {
+            let w = (n - tj * y_tot).min(y_tot);
+            q += k * (h + w); // A column + B row per k step
+        }
+    }
+    q
+}
+
+/// Eq. 6 as the *hardware* moves it: per (possibly partial) memory tile,
+/// the dynamic loop bounds load `rows_eff + cols_eff` elements per k step
+/// and write `rows_eff·cols_eff` back, where the effective extents are
+/// the clipped extents padded to compute-tile granularity
+/// (`model::compute::tile_dims`). Equals [`q_elements`] exactly when
+/// m, n divide the tile.
+pub fn q_elements_hardware(
+    tiling: crate::model::tiling::TilingConfig,
+    m: u64,
+    n: u64,
+    k: u64,
+) -> u64 {
+    let mut q = 0;
+    crate::model::compute::for_each_tile(tiling, m, n, |rows, cols| {
+        let d = crate::model::compute::tile_dims(tiling, rows, cols);
+        q += k * (d.rows_eff + d.cols_eff) + d.rows_eff * d.cols_eff;
+    });
+    q
+}
+
+/// The I/O lower bound `Q ≥ 2·m·n·k/√S + m·n` implied by Eqs. 6–7 when
+/// all fast memory is usable (`x_tot = y_tot = √S`).
+pub fn q_lower_bound(m: u64, n: u64, k: u64, s_elements: u64) -> f64 {
+    let sqrt_s = (s_elements as f64).sqrt();
+    2.0 * (m as f64) * (n as f64) * (k as f64) / sqrt_s + (m as f64) * (n as f64)
+}
+
+/// Eq. 5's objective: computational intensity `x_tot·y_tot/(x_tot+y_tot)`
+/// — multiply-add operations per loaded element within a memory tile.
+pub fn computational_intensity(x_tot: u64, y_tot: u64) -> f64 {
+    let (x, y) = (x_tot as f64, y_tot as f64);
+    x * y / (x + y)
+}
+
+/// *Arithmetic* intensity in Op/Byte as the paper reports it (Fig. 9,
+/// Table 2): "2× the computational intensity in Eq. 3" — 2 ops (mult +
+/// add) per loaded byte, counting loads only (the C store is excluded,
+/// matching the paper's printed values: FP32 960×1632 → 302 Op/Byte,
+/// uint8 1980×2176 → 2073 Op/Byte). Independent of m, n, k.
+pub fn arithmetic_intensity_op_per_byte(x_tot: u64, y_tot: u64, bytes_per_element: u64) -> f64 {
+    2.0 * computational_intensity(x_tot, y_tot) / bytes_per_element as f64
+}
+
+/// Average off-chip bandwidth (bytes/s) needed to sustain a compute rate
+/// of `ops_per_sec` (Fig. 9's right axis): bandwidth = ops / intensity.
+pub fn bandwidth_required(ops_per_sec: f64, intensity_op_per_byte: f64) -> f64 {
+    ops_per_sec / intensity_op_per_byte
+}
+
+/// Best memory-tile shape `(x_tot, y_tot)` under quantized growth:
+/// `x_tot` must be a multiple of `x_step` (the PE chain length), `y_tot`
+/// a multiple of `y_step` (the PE granularity), and the C tile must fit
+/// in `s_elements` of fast memory. Maximizes Eq. 5's intensity; the
+/// unquantized optimum is the square of Eq. 7.
+pub fn best_tile_shape(
+    s_elements: u64,
+    x_step: u64,
+    y_step: u64,
+) -> Option<(u64, u64)> {
+    assert!(x_step > 0 && y_step > 0);
+    let mut best: Option<(u64, u64, f64)> = None;
+    let max_i = s_elements / x_step / y_step; // y ≥ y_step requires x ≤ S/y_step
+    if max_i == 0 {
+        return None;
+    }
+    // Eq. 7 puts the optimum at x = √S; quantization shifts it by at most
+    // a few steps, so an 8×-wide window around √S (plus both boundaries)
+    // is exhaustive in practice and keeps the scan O(√S/x_step).
+    let sqrt_s = (s_elements as f64).sqrt();
+    let lo_i = ((sqrt_s / 8.0) as u64 / x_step).max(1);
+    let hi_i = (((sqrt_s * 8.0) as u64).div_ceil(x_step)).min(max_i);
+    let candidates = (lo_i..=hi_i).chain([1, max_i]);
+    for i in candidates {
+        let x = i * x_step;
+        if x > s_elements {
+            continue;
+        }
+        let j = (s_elements / x) / y_step;
+        if j == 0 {
+            continue;
+        }
+        let y = j * y_step;
+        let intensity = computational_intensity(x, y);
+        let better = match best {
+            None => true,
+            Some((bx, by, bi)) => {
+                intensity > bi + 1e-9
+                    // tie-break toward squarer tiles for robustness
+                    || ((intensity - bi).abs() <= 1e-9
+                        && x.abs_diff(y) < bx.abs_diff(by))
+            }
+        };
+        if better {
+            best = Some((x, y, intensity));
+        }
+    }
+    best.map(|(x, y, _)| (x, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq6_square_tile() {
+        // m=n=k=1024, tile 256x256: Q = 1024² (1 + 1024 * 2/256) = 1024²·9.
+        let q = q_elements(1024, 1024, 1024, 256, 256);
+        assert!((q - 1024.0 * 1024.0 * 9.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn eq6_exact_matches_analytic_when_divisible() {
+        let q_a = q_elements(1024, 768, 512, 256, 128);
+        let q_e = q_elements_exact(1024, 768, 512, 256, 128);
+        assert!((q_a - q_e as f64).abs() < 1e-6, "{q_a} vs {q_e}");
+    }
+
+    #[test]
+    fn eq6_exact_partial_tiles_cost_more_per_element() {
+        // With ragged edges the exact volume exceeds the analytic formula
+        // evaluated at the same tile (partial tiles still load full border
+        // vectors of their covered region — but fewer of them).
+        let q_e = q_elements_exact(1000, 1000, 500, 256, 256);
+        let q_full_pad = q_elements(1024, 1024, 500, 256, 256);
+        assert!((q_e as f64) < q_full_pad);
+    }
+
+    #[test]
+    fn eq7_square_maximizes_intensity() {
+        let s = 1 << 20;
+        let sq = computational_intensity(1024, 1024);
+        for (x, y) in [(512, 2048), (2048, 512), (256, 4096), (1024, 1023)] {
+            assert!(computational_intensity(x, y) <= sq + 1e-9, "({x},{y})");
+        }
+        // Eq. 7 optimum: intensity = √S/2.
+        assert!((sq - (s as f64).sqrt() / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lower_bound_below_any_feasible_tile() {
+        let s = 1_000_000u64;
+        let lb = q_lower_bound(4096, 4096, 4096, s);
+        // any tile with x·y ≤ S has Q ≥ lower bound
+        for (x, y) in [(1000, 1000), (500, 2000), (100, 10_000)] {
+            assert!(x * y <= s);
+            assert!(q_elements(4096, 4096, 4096, x, y) >= lb * 0.999);
+        }
+    }
+
+    #[test]
+    fn paper_fp32_arithmetic_intensity() {
+        // Table 2 FP32 row: x_tot=960, y_tot=1632, 4 bytes → 302 Op/Byte.
+        let ai = arithmetic_intensity_op_per_byte(960, 1632, 4);
+        assert!((ai - 302.0).abs() < 1.0, "{ai}");
+    }
+
+    #[test]
+    fn paper_uint8_arithmetic_intensity() {
+        // Table 2 uint8 row: 1980×2176, 1 byte → 2073 Op/Byte.
+        let ai = arithmetic_intensity_op_per_byte(1980, 2176, 1);
+        assert!((ai - 2073.0).abs() < 1.0, "{ai}");
+    }
+
+    #[test]
+    fn bandwidth_of_fig9_endpoint() {
+        // Sec. 5.4: "the kernel consumes 350 MB/s at 100 GOp/s" for the
+        // largest FP32 tile — intensity ≈ 286 Op/Byte.
+        let bw = bandwidth_required(100e9, 286.0);
+        assert!((bw - 350e6).abs() < 10e6, "{bw}");
+    }
+
+    #[test]
+    fn best_tile_shape_prefers_square() {
+        // Unconstrained steps: recovers ~√S.
+        let (x, y) = best_tile_shape(1 << 20, 1, 1).unwrap();
+        assert_eq!((x, y), (1024, 1024));
+    }
+
+    #[test]
+    fn best_tile_shape_respects_quantization() {
+        // Paper FP32: S = 1536 BRAM × 1024 = 1,572,864; steps x:192, y:8.
+        let s = 1536u64 * 1024;
+        let (x, y) = best_tile_shape(s, 192, 8).unwrap();
+        assert_eq!(x % 192, 0);
+        assert_eq!(y % 8, 0);
+        assert!(x * y <= s);
+        // Intensity must be at least the paper's chosen 960×1632 tile.
+        let paper = computational_intensity(960, 1632);
+        assert!(computational_intensity(x, y) >= paper - 1e-9);
+    }
+
+    #[test]
+    fn best_tile_shape_none_when_too_small() {
+        assert_eq!(best_tile_shape(64, 128, 1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn q_rejects_zero_tile() {
+        q_elements(8, 8, 8, 0, 8);
+    }
+}

@@ -1,0 +1,148 @@
+//! The k-innermost alternative schedule (Sec. 4.2's second paragraph).
+//!
+//! "For data types such as integers …, or architectures that support
+//! pipelined accumulation of floating point types, it is possible to
+//! make k the innermost loop, optionally tiling n and m further …; the
+//! hardware architecture … is largely the same, but changes the memory
+//! access pattern."
+//!
+//! With k innermost, each output tile of `x_i × y_i` elements is
+//! computed to completion by streaming full `x_i × k` and `k × y_i`
+//! panels: C is written exactly once and never revisited (no partial
+//! sums off-chip), but A/B panels are reloaded per tile, so
+//! `Q = mn + k·mn·(1/x_i + 1/y_i)` — *the same expression as Eq. 6*.
+//! The real differences this module captures:
+//!
+//! * the inner-product tile buffers only `x_i·y_i` accumulators but must
+//!   hold panel *streams*, so fast memory splits between C and the A/B
+//!   panel buffers — the feasible (x_i, y_i) for a given S is smaller
+//!   than the outer-product tile's, costing intensity;
+//! * floating-point accumulation now has a loop-carried dependency every
+//!   cycle (the very hazard Sec. 4.2's outer-product decomposition
+//!   avoids): each accumulator needs `latency` independent interleaved
+//!   streams or stalls by that factor.
+
+use crate::datatype::DataType;
+
+use super::io;
+
+/// Derived properties of a k-innermost schedule on fast memory `S`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KInnerSchedule {
+    pub x_i: u64,
+    pub y_i: u64,
+    /// Elements of S spent on A/B panel buffering (double-buffered
+    /// vectors of the streamed panels).
+    pub panel_elements: u64,
+    /// Computational intensity (madds per loaded element).
+    pub intensity: f64,
+    /// Throughput factor from the accumulation dependency: 1.0 for
+    /// single-cycle (integer) accumulation, `1/latency`-bounded recovery
+    /// via interleaving otherwise.
+    pub accumulation_throughput: f64,
+}
+
+/// Best k-innermost tile within `s_elements` of fast memory.
+///
+/// The C accumulators take `x_i·y_i`; the panel stream buffers take
+/// `2·interleave·(x_i + y_i)` (double-buffered, one vector per
+/// interleaved accumulation stream). Interleave = accumulation latency
+/// (what it takes to keep the FP adder pipeline full).
+pub fn best_kinner_schedule(dt: DataType, s_elements: u64, x_step: u64, y_step: u64) -> Option<KInnerSchedule> {
+    let latency = dt.accumulation_latency();
+    let interleave = latency.max(1);
+    // Panel buffers shrink the budget available to the C accumulators;
+    // solve by scanning the same quantized shapes as the outer-product
+    // tile but charging the panels.
+    let mut best: Option<KInnerSchedule> = None;
+    let mut i = 1u64;
+    while i * x_step <= s_elements {
+        let x = i * x_step;
+        // Budget left for y after accumulators + panels:
+        //   x·y + 2·interleave·(x + y) ≤ S.
+        let denom = x + 2 * interleave;
+        let numer = s_elements.saturating_sub(2 * interleave * x);
+        if numer == 0 {
+            break;
+        }
+        let y_max = numer / denom;
+        let j = y_max / y_step;
+        if j >= 1 {
+            let y = j * y_step;
+            let intensity = io::computational_intensity(x, y);
+            let candidate = KInnerSchedule {
+                x_i: x,
+                y_i: y,
+                panel_elements: 2 * interleave * (x + y),
+                intensity,
+                accumulation_throughput: 1.0, // fully interleaved
+            };
+            if best.map(|b| intensity > b.intensity).unwrap_or(true) {
+                best = Some(candidate);
+            }
+        }
+        // Same windowing trick as best_tile_shape: the optimum is near
+        // √S; step geometrically far from it.
+        let sqrt_s = (s_elements as f64).sqrt() as u64;
+        if x > 8 * sqrt_s {
+            break;
+        }
+        i += 1;
+    }
+    best
+}
+
+/// Intensity ratio outer-product / k-innermost at equal fast memory
+/// (≥ 1: the panel buffers always cost something; the gap grows with
+/// accumulation latency).
+pub fn outer_product_advantage(dt: DataType, s_elements: u64, x_step: u64, y_step: u64) -> Option<f64> {
+    let (xo, yo) = io::best_tile_shape(s_elements, x_step, y_step)?;
+    let outer = io::computational_intensity(xo, yo);
+    let inner = best_kinner_schedule(dt, s_elements, x_step, y_step)?.intensity;
+    Some(outer / inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1536 * 1024;
+
+    #[test]
+    fn kinner_fits_budget() {
+        let s = best_kinner_schedule(DataType::F32, S, 192, 8).expect("schedule");
+        assert!(s.x_i * s.y_i + s.panel_elements <= S);
+        assert_eq!(s.x_i % 192, 0);
+        assert_eq!(s.y_i % 8, 0);
+    }
+
+    #[test]
+    fn outer_product_always_at_least_as_intense() {
+        for dt in [DataType::F32, DataType::U32, DataType::F64] {
+            let adv = outer_product_advantage(dt, S, 192, 8).expect("advantage");
+            assert!(adv >= 1.0 - 1e-9, "{dt}: {adv}");
+        }
+    }
+
+    #[test]
+    fn fp_pays_more_than_integers() {
+        // Higher accumulation latency → bigger panel buffers → lower
+        // intensity: the quantitative version of Sec. 4.2's preference.
+        let adv_f32 = outer_product_advantage(DataType::F32, S, 192, 8).unwrap();
+        let adv_u32 = outer_product_advantage(DataType::U32, S, 192, 8).unwrap();
+        assert!(adv_f32 >= adv_u32, "{adv_f32} vs {adv_u32}");
+    }
+
+    #[test]
+    fn panel_overhead_small_at_large_s() {
+        // For big fast memories the panel buffers are second-order: the
+        // k-inner schedule approaches the outer-product intensity.
+        let adv = outer_product_advantage(DataType::U32, 16 * S, 192, 8).unwrap();
+        assert!(adv < 1.05, "{adv}");
+    }
+
+    #[test]
+    fn none_when_budget_too_small() {
+        assert!(best_kinner_schedule(DataType::F64, 64, 192, 8).is_none());
+    }
+}

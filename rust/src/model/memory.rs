@@ -1,0 +1,163 @@
+//! Memory-block model (Sec. 3.4, Eqs. 8 and 9).
+//!
+//! Every compute unit reads and writes an element of C from fast memory
+//! *every cycle*, which forces a minimum number of parallel memory blocks
+//! `N_b,min` (Eq. 8). Tile growth then happens in steps of `N_b,min`
+//! blocks, so the usable block count is `⌊N_b,max/N_b,min⌋·N_b,min`
+//! (Eq. 9) — the quantization that Fig. 3 plots.
+
+use crate::datatype::DataType;
+use crate::device::Device;
+
+use super::tiling::TilingConfig;
+
+/// Eq. 8: minimum memory blocks to serve all compute units in parallel,
+/// `N_b,min = x_p·y_p·⌈w_c·x_c·y_c / w_b⌉`.
+pub fn n_b_min(device: &Device, dt: DataType, n_pes: u64, pe_granularity: u64) -> u64 {
+    let w_c = dt.bits();
+    let w_b = device.block_spec.port_bits();
+    n_pes * (w_c * pe_granularity).div_ceil(w_b)
+}
+
+/// Eq. 9: usable memory blocks — the largest multiple of `N_b,min` not
+/// exceeding the device's `N_b,max`. Zero when even one step does not fit.
+pub fn n_b_usable(device: &Device, n_b_min: u64) -> u64 {
+    if n_b_min == 0 || n_b_min > device.memory_blocks {
+        return 0;
+    }
+    (device.memory_blocks / n_b_min) * n_b_min
+}
+
+/// Fraction of `N_b,max` that a configuration can exploit (the y-axis of
+/// Fig. 3).
+pub fn block_utilization(device: &Device, dt: DataType, n_pes: u64, pe_granularity: u64) -> f64 {
+    let min = n_b_min(device, dt, n_pes, pe_granularity);
+    n_b_usable(device, min) as f64 / device.memory_blocks as f64
+}
+
+/// Total fast-memory capacity `S = N_b·s_b` (elements of `dt`) for a
+/// given usable block count.
+pub fn fast_memory_elements(device: &Device, dt: DataType, n_b: u64) -> u64 {
+    n_b * device.block_spec.elements_per_block(dt)
+}
+
+/// Memory blocks consumed by a tiling configuration's C buffer:
+/// `⌈x_tot·y_tot / s_b⌉`, which by construction of the hierarchy equals
+/// `x_b·y_b·N_b,min` when `x_t·y_t` fills `s_b` exactly (the BRAM column
+/// of Table 2 is dominated by this buffer, Sec. 4.5).
+pub fn c_buffer_blocks(device: &Device, dt: DataType, tiling: TilingConfig) -> u64 {
+    let s_b = device.block_spec.elements_per_block(dt);
+    tiling.memory_tile_elements().div_ceil(s_b)
+}
+
+/// Memory blocks for the non-C buffers of Fig. 5: the Feed-B row buffer
+/// (`y_tot` elements, double-buffered) and the Read-A/Transpose FIFOs.
+pub fn feeder_blocks(device: &Device, dt: DataType, tiling: TilingConfig) -> u64 {
+    let s_b = device.block_spec.elements_per_block(dt);
+    let b_buffer = (2 * tiling.y_tot()).div_ceil(s_b);
+    // Transpose FIFOs: depth ≥ x_b·x_t per FIFO (Sec. 4.3), y_c FIFOs wide.
+    let fifo_elems = tiling.x_t * tiling.x_b * tiling.y_c;
+    let fifos = fifo_elems.div_ceil(s_b).max(1);
+    b_buffer + fifos
+}
+
+/// Full BRAM accounting for a configuration.
+pub fn total_blocks(device: &Device, dt: DataType, tiling: TilingConfig) -> u64 {
+    c_buffer_blocks(device, dt, tiling) + feeder_blocks(device, dt, tiling)
+}
+
+/// BRAM utilization fraction (Table 2's BRAM column).
+pub fn bram_utilization(device: &Device, dt: DataType, tiling: TilingConfig) -> f64 {
+    total_blocks(device, dt, tiling) as f64 / device.memory_blocks as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::catalog::vcu1525;
+
+    #[test]
+    fn eq8_fp32_paper_values() {
+        // Paper Fig. 3 caption: for x_c·y_c = 8 and x_p·y_p = 144 (FP32,
+        // w_b = 36): N_b,min = 144·⌈256/36⌉ = 144·8 = 1152.
+        let dev = vcu1525();
+        assert_eq!(n_b_min(&dev, DataType::F32, 144, 8), 1152);
+    }
+
+    #[test]
+    fn eq9_fig3_caption_value() {
+        // "For i_c j_c = 8 and i_p j_p = 144, we can utilize 60.4% of
+        // N_b,max": ⌊1906/1152⌋·1152 = 1152; 1152/1906 = 60.4%.
+        let dev = vcu1525();
+        let min = n_b_min(&dev, DataType::F32, 144, 8);
+        assert_eq!(n_b_usable(&dev, min), 1152);
+        let frac = block_utilization(&dev, DataType::F32, 144, 8);
+        assert!((frac - 0.604).abs() < 0.001, "{frac}");
+    }
+
+    #[test]
+    fn eq9_multiple_steps() {
+        // Small N_b,min: many steps fit, waste < N_b,min.
+        let dev = vcu1525();
+        let min = n_b_min(&dev, DataType::F32, 16, 8); // 16*8 = 128
+        assert_eq!(min, 128);
+        let usable = n_b_usable(&dev, min);
+        assert_eq!(usable, 1906 / 128 * 128); // 1792
+        assert!(dev.memory_blocks - usable < min);
+    }
+
+    #[test]
+    fn eq9_worst_case_just_over_half() {
+        // When N_b,min is just over half of N_b,max only one step fits —
+        // the paper's "worst case … only N_b,max/2 + 1 blocks are used".
+        let dev = vcu1525();
+        let min = 954; // > 1906/2 = 953
+        assert_eq!(n_b_usable(&dev, min), 954);
+    }
+
+    #[test]
+    fn eq9_zero_when_infeasible() {
+        let dev = vcu1525();
+        assert_eq!(n_b_usable(&dev, 5000), 0);
+        assert_eq!(n_b_usable(&dev, 0), 0);
+    }
+
+    #[test]
+    fn paper_fp32_c_buffer_is_1530_brams() {
+        // 960·1632 elements / 1024 per BRAM = 1530 — ~80% of 1906,
+        // matching Table 2's FP32 BRAM column.
+        let dev = vcu1525();
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 };
+        assert_eq!(c_buffer_blocks(&dev, DataType::F32, t), 1530);
+        let frac = bram_utilization(&dev, DataType::F32, t);
+        assert!((frac - 0.80).abs() < 0.03, "{frac}");
+    }
+
+    #[test]
+    fn paper_fp16_bram_matches_table2() {
+        // FP16: 1904×1920 / 2048 = 1785 BRAM ≈ 94% (paper reports 90%;
+        // within a few points — the paper's feeder accounting differs).
+        let dev = vcu1525();
+        let t = TilingConfig { x_c: 1, y_c: 16, x_p: 112, y_p: 1, x_t: 17, y_t: 120, x_b: 1, y_b: 1 };
+        assert_eq!(t.x_tot(), 1904);
+        assert_eq!(t.y_tot(), 1920);
+        let frac = bram_utilization(&dev, DataType::F16, t);
+        assert!((0.88..0.97).contains(&frac), "{frac}");
+    }
+
+    #[test]
+    fn fast_memory_capacity() {
+        let dev = vcu1525();
+        assert_eq!(fast_memory_elements(&dev, DataType::F32, 1536), 1536 * 1024);
+        assert_eq!(fast_memory_elements(&dev, DataType::F64, 100), 100 * 512);
+    }
+
+    #[test]
+    fn feeder_blocks_small_but_nonzero() {
+        let dev = vcu1525();
+        let t = TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 };
+        let fb = feeder_blocks(&dev, DataType::F32, t);
+        assert!(fb >= 2, "{fb}");
+        assert!(fb < 40, "{fb}");
+    }
+}

@@ -1,0 +1,31 @@
+//! The paper's optimization model (Sections 2–3 and 5.1).
+//!
+//! Given a [`Device`](crate::device::Device) and a
+//! [`DataType`](crate::datatype::DataType), these modules derive a kernel
+//! configuration that simultaneously maximizes compute performance and
+//! minimizes off-chip I/O, in terms of hardware constants:
+//!
+//! | Paper artifact | Module |
+//! |---|---|
+//! | Eq. 1 (resource constraint), `N_c,max` | [`resource`] |
+//! | Eq. 2 (computation model, `T = F/(f·N_c)`) | [`compute`] |
+//! | Eqs. 3/5/6/7 (I/O model, `Q`, intensity) | [`io`] |
+//! | Eqs. 8/9 (memory blocks, `N_b,min`, `N_b`) | [`memory`] |
+//! | Eq. 4 / Fig. 2 (tiling hierarchy) | [`tiling`] |
+//! | empirical frequency behaviour (Fig. 7, Table 2) | [`frequency`] |
+//! | power/energy (Table 2 power-efficiency column) | [`power`] |
+//! | Sec. 5.1 parameter selection | [`selection`] |
+
+pub mod compute;
+pub mod frequency;
+pub mod io;
+pub mod kinner;
+pub mod memory;
+pub mod power;
+pub mod resource;
+pub mod selection;
+pub mod tiling;
+pub mod ultraram;
+
+pub use selection::{select_parameters, KernelConfig, SelectionOptions};
+pub use tiling::TilingConfig;

@@ -1,0 +1,85 @@
+//! Power/energy model (Table 2's power-efficiency column).
+//!
+//! The paper *measures* board power at the PSU (idle-subtracted, including
+//! the evaluation board and its fan — Sec. 5.4); we invert the six
+//! published (performance, GOp/J) points into a parametric model:
+//!
+//! `P = P_static + (c_lut·u_lut + c_dsp·u_dsp + c_bram·u_bram) · f/f_max`
+//!
+//! with `P_static = 20 W` (board + fan + shell) and dynamic coefficients
+//! 12/10/10 W at full utilization and full clock. Residuals vs. Table 2's
+//! efficiency column are within ~10% (`tests::table2_efficiency_points`).
+
+use crate::device::Device;
+
+use super::frequency::UtilizationProfile;
+
+const P_STATIC_W: f64 = 20.0;
+const C_LUT_W: f64 = 12.0;
+const C_DSP_W: f64 = 10.0;
+const C_BRAM_W: f64 = 10.0;
+
+/// Estimated board power draw (W) for a design at clock `f_hz`.
+pub fn power_w(device: &Device, u: UtilizationProfile, f_hz: f64) -> f64 {
+    let clock_frac = (f_hz / device.f_max_hz).clamp(0.0, 1.0);
+    P_STATIC_W + (C_LUT_W * u.luts + C_DSP_W * u.dsps + C_BRAM_W * u.bram) * clock_frac
+}
+
+/// Power efficiency in Op/J (the paper's GOp/J × 1e9) for a measured or
+/// modeled performance.
+pub fn efficiency_ops_per_joule(perf_ops: f64, power_w: f64) -> f64 {
+    perf_ops / power_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::catalog::vcu1525;
+
+    /// Table 2: (LUT, DSP, BRAM, MHz, GOp/s, GOp/J).
+    const TABLE2: [(f64, f64, f64, f64, f64, f64); 6] = [
+        (0.53, 0.70, 0.90, 171.3, 606.0, 15.1),  // FP16
+        (0.81, 0.48, 0.80, 145.7, 409.0, 10.9),  // FP32
+        (0.38, 0.80, 0.82, 181.2, 132.0, 3.13),  // FP64
+        (0.15, 0.83, 0.51, 186.5, 1544.0, 48.0), // uint8
+        (0.20, 0.69, 0.88, 190.0, 1217.0, 33.1), // uint16
+        (0.58, 0.84, 0.86, 160.6, 505.0, 13.8),  // uint32
+    ];
+
+    #[test]
+    fn table2_efficiency_points() {
+        let dev = vcu1525();
+        for (l, d, b, mhz, gops, gopj) in TABLE2 {
+            let u = UtilizationProfile { luts: l, dsps: d, bram: b };
+            let p = power_w(&dev, u, mhz * 1e6);
+            let est = efficiency_ops_per_joule(gops * 1e9, p) / 1e9;
+            let err = (est - gopj).abs() / gopj;
+            assert!(err < 0.12, "est {est:.1} GOp/J vs paper {gopj} ({:.0}%)", err * 100.0);
+        }
+    }
+
+    #[test]
+    fn power_in_plausible_board_range() {
+        let dev = vcu1525();
+        for (l, d, b, mhz, _, _) in TABLE2 {
+            let p = power_w(&dev, UtilizationProfile { luts: l, dsps: d, bram: b }, mhz * 1e6);
+            assert!((25.0..60.0).contains(&p), "{p} W");
+        }
+    }
+
+    #[test]
+    fn static_floor() {
+        let dev = vcu1525();
+        let idle = power_w(&dev, UtilizationProfile { luts: 0.0, dsps: 0.0, bram: 0.0 }, 0.0);
+        assert_eq!(idle, P_STATIC_W);
+    }
+
+    #[test]
+    fn power_monotone_in_clock_and_utilization() {
+        let dev = vcu1525();
+        let u_lo = UtilizationProfile { luts: 0.2, dsps: 0.2, bram: 0.2 };
+        let u_hi = UtilizationProfile { luts: 0.8, dsps: 0.8, bram: 0.8 };
+        assert!(power_w(&dev, u_lo, 100e6) < power_w(&dev, u_lo, 200e6));
+        assert!(power_w(&dev, u_lo, 200e6) < power_w(&dev, u_hi, 200e6));
+    }
+}

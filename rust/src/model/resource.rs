@@ -1,0 +1,125 @@
+//! Resource model (Eq. 1): which configurations fit on the chip.
+//!
+//! `∀i: N_p(r_{i,p} + r_{i,c}·x_c·y_c) ≤ r_{i,max}` — compute units plus
+//! per-PE orchestration overhead must not exceed the budget. A fixed
+//! shell overhead (Fig. 5's four non-PE modules) is subtracted up front.
+
+use crate::datatype::cost::{compute_unit_cost, pe_overhead, shell_overhead};
+use crate::datatype::DataType;
+use crate::device::resources::{ResourceVec, Utilization};
+use crate::device::Device;
+
+use super::tiling::TilingConfig;
+
+/// Total logic consumed by a tiling configuration (left-hand side of
+/// Eq. 1 plus the shell).
+pub fn logic_used(device: &Device, dt: DataType, tiling: TilingConfig) -> ResourceVec {
+    let r_c = compute_unit_cost(device.family, dt);
+    let r_p = pe_overhead(device.family);
+    let per_pe = r_p + r_c * tiling.pe_granularity() as f64;
+    shell_overhead(device.family) + per_pe * tiling.n_pes() as f64
+}
+
+/// Eq. 1 feasibility (with the shell included).
+pub fn fits(device: &Device, dt: DataType, tiling: TilingConfig) -> bool {
+    logic_used(device, dt, tiling).fits_within(device.resources)
+}
+
+/// Per-resource utilization fractions (Table 2's LUT/FF/DSP columns).
+pub fn utilization(device: &Device, dt: DataType, tiling: TilingConfig) -> Utilization {
+    logic_used(device, dt, tiling).fraction_of(device.resources)
+}
+
+/// `N_c,max` — the hardware ceiling on compute units of type `dt`
+/// (Sec. 3.3 item 1), ignoring PE overhead: `min_i(r_i,max / r_i,c)`.
+pub fn n_c_max(device: &Device, dt: DataType) -> u64 {
+    compute_unit_cost(device.family, dt).copies_within(device.resources) as u64
+}
+
+/// Largest `x_p` (PE count in a 1-D chain with `x_c = 1`) such that the
+/// configuration fits within `max_util · r_max`. The utilization ceiling
+/// models the paper's routability wall: "When resource usage exceeds
+/// 80-90%, kernels fail to route or meet timing entirely" (Sec. 5.4).
+pub fn max_pes_1d(device: &Device, dt: DataType, y_c: u64, max_util: f64) -> u64 {
+    let r_c = compute_unit_cost(device.family, dt);
+    let r_p = pe_overhead(device.family);
+    let shell = shell_overhead(device.family);
+    let per_pe = r_p + r_c * y_c as f64;
+    let budget = ResourceVec::new(
+        device.resources.luts * max_util - shell.luts,
+        device.resources.ffs * max_util - shell.ffs,
+        device.resources.dsps * max_util - shell.dsps,
+    );
+    if budget.luts <= 0.0 || budget.ffs <= 0.0 || budget.dsps < 0.0 {
+        return 0;
+    }
+    per_pe.copies_within(budget) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::catalog::vcu1525;
+
+    fn fp32_paper_tiling() -> TilingConfig {
+        TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 }
+    }
+
+    #[test]
+    fn paper_fp32_config_fits() {
+        let dev = vcu1525();
+        assert!(fits(&dev, DataType::F32, fp32_paper_tiling()));
+    }
+
+    #[test]
+    fn paper_fp32_utilization_close_to_published() {
+        let dev = vcu1525();
+        let u = utilization(&dev, DataType::F32, fp32_paper_tiling());
+        assert!((u.luts - 0.81).abs() < 0.05, "LUT {:.3}", u.luts);
+        assert!((u.ffs - 0.46).abs() < 0.05, "FF {:.3}", u.ffs);
+        assert!((u.dsps - 0.48).abs() < 0.05, "DSP {:.3}", u.dsps);
+    }
+
+    #[test]
+    fn oversubscribed_config_rejected() {
+        let dev = vcu1525();
+        let huge = TilingConfig { x_c: 1, y_c: 64, x_p: 512, y_p: 1, x_t: 1, y_t: 1, x_b: 1, y_b: 1 };
+        assert!(!fits(&dev, DataType::F64, huge));
+    }
+
+    #[test]
+    fn n_c_max_ordering_matches_precision_cost() {
+        // Cheaper types admit more compute units.
+        let dev = vcu1525();
+        let u8_max = n_c_max(&dev, DataType::U8);
+        let f32_max = n_c_max(&dev, DataType::F32);
+        let f64_max = n_c_max(&dev, DataType::F64);
+        assert!(u8_max > f32_max);
+        assert!(f32_max > f64_max);
+        // FP64 is DSP-bound: 6834 / 14.2 ≈ 481.
+        assert!((400..560).contains(&f64_max), "{f64_max}");
+    }
+
+    #[test]
+    fn max_pes_1d_fp32_near_paper_x_p() {
+        // With the 85% routability ceiling, the model's maximum chain
+        // length lands near the paper's chosen x_p = 192.
+        let dev = vcu1525();
+        let x_p = max_pes_1d(&dev, DataType::F32, 8, 0.85);
+        assert!((170..=230).contains(&x_p), "x_p = {x_p}");
+    }
+
+    #[test]
+    fn max_pes_1d_monotone_in_budget() {
+        let dev = vcu1525();
+        let lo = max_pes_1d(&dev, DataType::F32, 8, 0.5);
+        let hi = max_pes_1d(&dev, DataType::F32, 8, 0.9);
+        assert!(lo < hi);
+    }
+
+    #[test]
+    fn max_pes_1d_zero_when_shell_exceeds_budget() {
+        let dev = vcu1525();
+        assert_eq!(max_pes_1d(&dev, DataType::F32, 8, 0.001), 0);
+    }
+}

@@ -1,0 +1,181 @@
+//! The tiling hierarchy of Fig. 2 / Eq. 4.
+//!
+//! Four nested layers decompose the iteration space (Listing 2):
+//!
+//! 1. a *processing element* holds `x_c × y_c` compute units;
+//! 2. a *compute tile* holds `x_p × y_p` PEs — one compute tile is
+//!    evaluated per cycle and contains all `N_c` compute units;
+//! 3. a *block tile* holds `x_t × y_t` compute tiles — filling the
+//!    intrinsic capacity `s_b` of the allocated memory blocks;
+//! 4. a *memory tile* holds `x_b × y_b` block tiles — using all usable
+//!    memory blocks (`⌊N_b/N_b,min⌋` of them).
+//!
+//! The memory tile `M` is the unit of I/O: its dimensions
+//! `x_tot × y_tot` (Eq. 4) determine reuse and hence the communication
+//! volume `Q` (Eq. 6).
+
+/// Complete tiling parameterization of a kernel build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TilingConfig {
+    /// Compute units per PE in i / j (paper fixes `x_c = 1` for the 1-D
+    /// collapsed array, Sec. 4.1).
+    pub x_c: u64,
+    pub y_c: u64,
+    /// PEs per compute tile in i / j (1-D array fixes `y_p = 1`).
+    pub x_p: u64,
+    pub y_p: u64,
+    /// Compute tiles per block tile.
+    pub x_t: u64,
+    pub y_t: u64,
+    /// Block tiles per memory tile.
+    pub x_b: u64,
+    pub y_b: u64,
+}
+
+impl TilingConfig {
+    /// Memory-tile height `x_tot = x_c·x_p·x_t·x_b` (Eq. 4).
+    pub fn x_tot(self) -> u64 {
+        self.x_c * self.x_p * self.x_t * self.x_b
+    }
+
+    /// Memory-tile width `y_tot = y_c·y_p·y_t·y_b` (Eq. 4).
+    pub fn y_tot(self) -> u64 {
+        self.y_c * self.y_p * self.y_t * self.y_b
+    }
+
+    /// Elements of C per memory tile (`|V_i| = x_tot·y_tot`).
+    pub fn memory_tile_elements(self) -> u64 {
+        self.x_tot() * self.y_tot()
+    }
+
+    /// Total number of compute units `N_c = x_c·y_c·x_p·y_p`.
+    pub fn n_compute_units(self) -> u64 {
+        self.x_c * self.y_c * self.x_p * self.y_p
+    }
+
+    /// Number of processing elements `N_p = x_p·y_p`.
+    pub fn n_pes(self) -> u64 {
+        self.x_p * self.y_p
+    }
+
+    /// Compute units per PE (`x_c·y_c`, the PE granularity of Eq. 8).
+    pub fn pe_granularity(self) -> u64 {
+        self.x_c * self.y_c
+    }
+
+    /// Cycles to evaluate one full outer product of the memory tile:
+    /// one compute tile per cycle, `x_t·x_b · y_t·y_b` compute tiles per
+    /// memory tile.
+    pub fn cycles_per_outer_product(self) -> u64 {
+        (self.x_t * self.x_b) * (self.y_t * self.y_b)
+    }
+
+    /// C elements stored per PE (`x_tot·y_tot / N_p`, Sec. 4.5).
+    pub fn elements_per_pe(self) -> u64 {
+        self.memory_tile_elements() / self.n_pes()
+    }
+
+    /// The 1-D collapsed-array invariants of Sec. 4.1: `y_p = 1`,
+    /// `x_c = 1`.
+    pub fn is_1d_chain(self) -> bool {
+        self.y_p == 1 && self.x_c == 1
+    }
+
+    /// Sec. 4.1's pipelining constraint for the 1-D array: results
+    /// propagate through `N_p` PE stages, so a memory tile must contain at
+    /// least as many compute tiles as there are PEs
+    /// (`x_t·y_t·x_b·y_b ≥ N_p` — stated as `y_t x_t ≥ N_p` for the
+    /// single-block-tile case).
+    pub fn satisfies_pipeline_depth(self) -> bool {
+        self.cycles_per_outer_product() >= self.n_pes()
+    }
+
+    /// Accumulation-collision distance (Sec. 4.2): consecutive updates to
+    /// the same C address are separated by `cycles_per_outer_product()`
+    /// cycles; pipelined floating-point accumulation needs this to exceed
+    /// the accumulator latency.
+    pub fn accumulation_distance(self) -> u64 {
+        self.cycles_per_outer_product()
+    }
+
+    /// Basic well-formedness (all factors ≥ 1).
+    pub fn is_valid(self) -> bool {
+        [self.x_c, self.y_c, self.x_p, self.y_p, self.x_t, self.y_t, self.x_b, self.y_b]
+            .iter()
+            .all(|&v| v >= 1)
+    }
+}
+
+impl std::fmt::Display for TilingConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "c({}x{}) p({}x{}) t({}x{}) b({}x{}) -> M({}x{})",
+            self.x_c, self.y_c, self.x_p, self.y_p, self.x_t, self.y_t, self.x_b, self.y_b,
+            self.x_tot(), self.y_tot()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's FP32 Table 2 kernel: x_p=192, y_c=8, memory tile
+    /// 960×1632 (x_t=5, y_t=204, single block tile).
+    pub fn paper_fp32() -> TilingConfig {
+        TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 }
+    }
+
+    #[test]
+    fn eq4_products() {
+        let t = paper_fp32();
+        assert_eq!(t.x_tot(), 960);
+        assert_eq!(t.y_tot(), 1632);
+        assert_eq!(t.memory_tile_elements(), 1_566_720);
+    }
+
+    #[test]
+    fn compute_unit_counts() {
+        let t = paper_fp32();
+        assert_eq!(t.n_compute_units(), 1536);
+        assert_eq!(t.n_pes(), 192);
+        assert_eq!(t.pe_granularity(), 8);
+    }
+
+    #[test]
+    fn chain_shape_and_pipeline_depth() {
+        let t = paper_fp32();
+        assert!(t.is_1d_chain());
+        // 5*204 = 1020 compute tiles ≥ 192 PEs.
+        assert!(t.satisfies_pipeline_depth());
+        assert_eq!(t.cycles_per_outer_product(), 1020);
+    }
+
+    #[test]
+    fn accumulation_distance_exceeds_fp_latency() {
+        // Sec. 4.2: collisions separated by the outer-product length.
+        let t = paper_fp32();
+        assert!(t.accumulation_distance() > 8);
+    }
+
+    #[test]
+    fn per_pe_storage() {
+        let t = paper_fp32();
+        assert_eq!(t.elements_per_pe(), 1_566_720 / 192);
+    }
+
+    #[test]
+    fn validity() {
+        assert!(paper_fp32().is_valid());
+        let mut bad = paper_fp32();
+        bad.x_t = 0;
+        assert!(!bad.is_valid());
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let s = paper_fp32().to_string();
+        assert!(s.contains("M(960x1632)"), "{s}");
+    }
+}

@@ -1,0 +1,174 @@
+//! UltraRAM extension (the paper's Sec.-5.3 note made concrete).
+//!
+//! "For this work, we do not consider UltraRAM … but note that these can
+//! be exploited with the same arguments as for BRAM (according to the
+//! principles in Sec. 3.3)." This module does exactly that: UltraScale+
+//! URAM288 blocks (288 kbit, fixed 72-bit ports, no narrow
+//! configurations) join the fast-memory pool as a second block class, and
+//! Eqs. 8–9 are applied per class. Because a URAM holds 8× the bits of a
+//! BRAM, moving the C buffer into URAM both frees BRAM for feeders and
+//! grows S — raising the Eq.-5 intensity ceiling. The `uram_ablation`
+//! bench quantifies it.
+
+use crate::datatype::DataType;
+use crate::device::bram::MemoryBlockSpec;
+use crate::device::Device;
+
+use super::io;
+use super::memory;
+use super::tiling::TilingConfig;
+
+/// Xilinx UltraScale+ URAM288: 288 kbit, fixed 72-bit read/write ports
+/// (no 18/36-bit modes — narrow types pack like the BRAM packing rule).
+pub const XILINX_URAM288: MemoryBlockSpec = MemoryBlockSpec {
+    capacity_bits: 288 * 1024,
+    max_port_bits: 72,
+    port_configs: &[72],
+};
+
+/// URAM blocks available to kernels on the VU9P after the shell
+/// (960 on the die; the SDAccel shell consumes none of them, but keep a
+/// small margin like the paper's BRAM accounting).
+pub const VU9P_URAM_BLOCKS: u64 = 960;
+
+/// A two-tier fast-memory plan: C buffer in URAM, feeders in BRAM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UramPlan {
+    /// Eq.-8 step size in URAM blocks.
+    pub n_u_min: u64,
+    /// Eq.-9 usable URAM blocks.
+    pub n_u: u64,
+    /// Fast-memory capacity of the URAM tier (elements).
+    pub s_elements: u64,
+    /// Derived memory tile.
+    pub tiling: TilingConfig,
+    /// Eq.-5 intensity of the URAM tile.
+    pub intensity: f64,
+    /// Intensity of the BRAM-only tile at the same chain shape (baseline).
+    pub bram_intensity: f64,
+}
+
+impl UramPlan {
+    /// Intensity gain over BRAM-only ( ≥ 1 when URAM capacity > BRAM's).
+    pub fn intensity_gain(&self) -> f64 {
+        self.intensity / self.bram_intensity
+    }
+}
+
+/// Elements of `dt` per URAM288 (packing rule shared with BRAM).
+pub fn uram_elements_per_block(dt: DataType) -> u64 {
+    XILINX_URAM288.elements_per_block(dt)
+}
+
+/// Eq. 8 for the URAM tier: URAM ports are 72 bit.
+pub fn n_u_min(dt: DataType, n_pes: u64, pe_granularity: u64) -> u64 {
+    let w_c = dt.bits();
+    n_pes * (w_c * pe_granularity).div_ceil(XILINX_URAM288.max_port_bits)
+}
+
+/// Derive the URAM-backed memory tile for a 1-D chain on `device`
+/// (assumed UltraScale+ with `uram_blocks` URAMs), alongside the
+/// BRAM-only baseline.
+pub fn derive_uram_tiling(
+    device: &Device,
+    dt: DataType,
+    x_p: u64,
+    y_c: u64,
+    uram_blocks: u64,
+) -> Option<UramPlan> {
+    // BRAM-only baseline at the same chain shape.
+    let bram_tiling = super::selection::derive_tiling(device, dt, x_p, y_c)?;
+    let bram_intensity =
+        io::computational_intensity(bram_tiling.x_tot(), bram_tiling.y_tot());
+
+    // URAM tier (Eqs. 8–9 with URAM constants).
+    let n_u_min = n_u_min(dt, x_p, y_c);
+    if n_u_min == 0 || n_u_min > uram_blocks {
+        return None;
+    }
+    let n_u = (uram_blocks / n_u_min) * n_u_min;
+    let s = n_u * uram_elements_per_block(dt);
+    let (x_tot, y_tot) = io::best_tile_shape(s, x_p, y_c)?;
+    let tiling = TilingConfig {
+        x_c: 1,
+        y_c,
+        x_p,
+        y_p: 1,
+        x_t: x_tot / x_p,
+        y_t: y_tot / y_c,
+        x_b: 1,
+        y_b: 1,
+    };
+    if !tiling.satisfies_pipeline_depth() {
+        return None;
+    }
+    Some(UramPlan {
+        n_u_min,
+        n_u,
+        s_elements: s,
+        tiling,
+        intensity: io::computational_intensity(x_tot, y_tot),
+        bram_intensity,
+    })
+}
+
+/// Combined-pool upper bound: treat BRAM + URAM as one S (the loosest
+/// application of "the same arguments"; real designs keep the tiers
+/// separate per Eq. 8's port arithmetic, so this bounds the gain).
+pub fn combined_capacity_elements(device: &Device, dt: DataType, uram_blocks: u64) -> u64 {
+    let bram = memory::fast_memory_elements(
+        device,
+        dt,
+        memory::n_b_usable(device, 1).max(device.memory_blocks),
+    );
+    bram + uram_blocks * uram_elements_per_block(dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::catalog::vcu1525;
+
+    #[test]
+    fn uram_stores_8x_bram_bits() {
+        assert_eq!(XILINX_URAM288.capacity_bits, 8 * 36 * 1024);
+        // FP32 packs 2 per 72-bit word: full capacity density.
+        assert_eq!(uram_elements_per_block(DataType::F32), 288 * 1024 / 32);
+        // FP64 occupies one 72-bit word per element.
+        assert_eq!(uram_elements_per_block(DataType::F64), 288 * 1024 / 72);
+    }
+
+    #[test]
+    fn uram_tile_beats_bram_tile_fp32() {
+        // The paper's note: URAM raises S → higher intensity. On the
+        // VU9P, 960 URAM hold ~8.8M FP32 vs BRAM's ~1.7M usable.
+        let plan = derive_uram_tiling(&vcu1525(), DataType::F32, 192, 8, VU9P_URAM_BLOCKS)
+            .expect("uram plan");
+        assert!(plan.s_elements > 5_000_000, "{}", plan.s_elements);
+        assert!(plan.intensity_gain() > 1.5, "{}", plan.intensity_gain());
+        assert!(plan.tiling.memory_tile_elements() <= plan.s_elements);
+        assert_eq!(plan.n_u % plan.n_u_min, 0);
+    }
+
+    #[test]
+    fn uram_eq8_step() {
+        // FP32, y_c = 8: 256 coalesced bits / 72-bit ports = 4 URAM per PE
+        // (vs 8 BRAM per PE at w_b = 36).
+        assert_eq!(n_u_min(DataType::F32, 192, 8), 192 * 4);
+    }
+
+    #[test]
+    fn infeasible_when_too_few_urams() {
+        assert!(derive_uram_tiling(&vcu1525(), DataType::F32, 192, 8, 16).is_none());
+    }
+
+    #[test]
+    fn intensity_scales_like_sqrt_capacity() {
+        // Eq. 7: intensity ∝ √S, so 8x capacity → ~2.8x intensity
+        // (quantization erodes a little).
+        let plan = derive_uram_tiling(&vcu1525(), DataType::F32, 192, 8, VU9P_URAM_BLOCKS)
+            .expect("plan");
+        let gain = plan.intensity_gain();
+        assert!((1.8..3.2).contains(&gain), "{gain}");
+    }
+}

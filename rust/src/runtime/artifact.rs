@@ -1,0 +1,246 @@
+//! Artifact manifest: the schema written by `python/compile/aot.py`.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Shape + dtype of one artifact argument or result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("non-integer dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One lowered computation (one `.hlo.txt` file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// "matmul" | "matmul_acc" | "matmul_at" | "distance".
+    pub op: String,
+    pub dtype: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Pallas (bm, bn, bk) — the L1 memory/compute-tile decomposition.
+    pub block: (usize, usize, usize),
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Value) -> Result<ArtifactSpec> {
+        let get_str = |key: &str| {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("artifact missing {key}"))
+        };
+        let get_dim = |key: &str| {
+            v.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("artifact missing {key}"))
+        };
+        let block = v
+            .get("block")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("artifact missing block"))?;
+        if block.len() != 3 {
+            bail!("block must have 3 entries");
+        }
+        let b = |i: usize| block[i].as_usize().ok_or_else(|| anyhow!("bad block dim"));
+        let inputs = v
+            .get("inputs")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("artifact missing inputs"))?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let output = TensorSpec::from_json(
+            v.get("output").ok_or_else(|| anyhow!("artifact missing output"))?,
+        )?;
+        Ok(ArtifactSpec {
+            name: get_str("name")?,
+            file: get_str("file")?,
+            op: get_str("op")?,
+            dtype: get_str("dtype")?,
+            m: get_dim("m")?,
+            n: get_dim("n")?,
+            k: get_dim("k")?,
+            block: (b(0)?, b(1)?, b(2)?),
+            inputs,
+            output,
+        })
+    }
+
+    /// Whether this artifact computes `C + A·B` (3 inputs) rather than
+    /// `A·B` (2 inputs).
+    pub fn is_accumulate(&self) -> bool {
+        self.op == "matmul_acc"
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub version: u64,
+    pub default: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).context("parsing manifest.json")?;
+        let version = v
+            .get("version")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let default = v
+            .get("default")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("manifest missing default"))?
+            .to_string();
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(ArtifactSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        if !artifacts.iter().any(|a| a.name == default) {
+            bail!("default artifact {default:?} not present");
+        }
+        Ok(Manifest { version, default, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifacts matching an op and dtype, largest tile first — how the
+    /// tile scheduler picks its work granularity.
+    pub fn find_op(&self, op: &str, dtype: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.op == op && a.dtype == dtype)
+            .collect();
+        v.sort_by_key(|a| std::cmp::Reverse(a.m * a.n));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "default": "mmm_f32_256",
+      "artifacts": [
+        {"name": "mmm_f32_256", "file": "mmm_f32_256.hlo.txt",
+         "op": "matmul", "dtype": "float32",
+         "m": 256, "n": 256, "k": 256, "block": [64, 64, 32],
+         "inputs": [{"shape": [256, 256], "dtype": "float32"},
+                    {"shape": [256, 256], "dtype": "float32"}],
+         "output": {"shape": [256, 256], "dtype": "float32"}},
+        {"name": "mmm_acc_f32_64", "file": "mmm_acc_f32_64.hlo.txt",
+         "op": "matmul_acc", "dtype": "float32",
+         "m": 64, "n": 64, "k": 64, "block": [32, 32, 16],
+         "inputs": [{"shape": [64, 64], "dtype": "float32"},
+                    {"shape": [64, 64], "dtype": "float32"},
+                    {"shape": [64, 64], "dtype": "float32"}],
+         "output": {"shape": [64, 64], "dtype": "float32"}},
+        {"name": "mmm_acc_f32_128", "file": "mmm_acc_f32_128.hlo.txt",
+         "op": "matmul_acc", "dtype": "float32",
+         "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+         "inputs": [{"shape": [128, 128], "dtype": "float32"},
+                    {"shape": [128, 128], "dtype": "float32"},
+                    {"shape": [128, 128], "dtype": "float32"}],
+         "output": {"shape": [128, 128], "dtype": "float32"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.find("mmm_f32_256").unwrap();
+        assert_eq!(a.m, 256);
+        assert_eq!(a.block, (64, 64, 32));
+        assert_eq!(a.inputs.len(), 2);
+        assert!(!a.is_accumulate());
+        assert!(m.find("mmm_acc_f32_64").unwrap().is_accumulate());
+    }
+
+    #[test]
+    fn find_op_orders_largest_first() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let accs = m.find_op("matmul_acc", "float32");
+        assert_eq!(accs.len(), 2);
+        assert_eq!(accs[0].m, 128);
+        assert_eq!(accs[1].m, 64);
+        assert!(m.find_op("matmul", "float64").is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"version": 2, "default": "x", "artifacts": []}"#).is_err());
+        assert!(Manifest::parse(
+            r#"{"version": 1, "default": "missing",
+                "artifacts": [{"name": "a", "file": "f", "op": "matmul",
+                               "dtype": "float32", "m": 8, "n": 8, "k": 8,
+                               "block": [4,4,4],
+                               "inputs": [], "output": {"shape": [8,8], "dtype": "float32"}}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { shape: vec![128, 64], dtype: "float32".into() };
+        assert_eq!(t.elements(), 8192);
+    }
+
+    #[test]
+    fn parses_generated_manifest_if_present() {
+        // Guard the real build product when it exists (CI runs after
+        // `make artifacts`).
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).expect("generated manifest parses");
+            assert!(m.find(&m.default).is_some());
+            assert!(!m.find_op("matmul_acc", "float32").is_empty());
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! PJRT engine: compile HLO text, execute with typed host buffers.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Adapted from the reference wiring in /opt/xla-example/load_hlo.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::artifact::ArtifactSpec;
+
+/// Host-side tensor in one of the dtypes the artifacts use. Row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::F64(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+            HostTensor::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            HostTensor::F32(_) => "float32",
+            HostTensor::F64(_) => "float64",
+            HostTensor::I32(_) => "int32",
+            HostTensor::U32(_) => "uint32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let elements: usize = shape.iter().product();
+        if elements != self.len() {
+            bail!("shape {shape:?} has {elements} elements, buffer has {}", self.len());
+        }
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::F64(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+            HostTensor::U32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims).context("reshaping input literal")
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: &str) -> Result<HostTensor> {
+        Ok(match dtype {
+            "float32" => HostTensor::F32(lit.to_vec::<f32>()?),
+            "float64" => HostTensor::F64(lit.to_vec::<f64>()?),
+            "int32" => HostTensor::I32(lit.to_vec::<i32>()?),
+            "uint32" => HostTensor::U32(lit.to_vec::<u32>()?),
+            other => bail!("unsupported runtime dtype {other:?}"),
+        })
+    }
+}
+
+/// The PJRT client (CPU).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile one artifact from HLO text.
+    pub fn load(&self, path: &Path, spec: ArtifactSpec) -> Result<LoadedKernel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF-8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(LoadedKernel { spec, exe })
+    }
+}
+
+/// A compiled executable plus its manifest spec.
+pub struct LoadedKernel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedKernel {
+    /// f32 fast path: build literals straight from borrowed slices (no
+    /// intermediate `Vec` clones — `Literal::vec1` copies from the slice
+    /// into XLA-owned storage anyway) and return the raw output vector.
+    /// This is the GEMM executor's per-step hot path.
+    pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (tensor, tspec) in inputs.iter().zip(&self.spec.inputs) {
+            if tspec.dtype != "float32" {
+                bail!("{}: execute_f32 on non-f32 input", self.spec.name);
+            }
+            let elements: usize = tspec.shape.iter().product();
+            if elements != tensor.len() {
+                bail!("shape {:?} has {elements} elements, buffer has {}", tspec.shape, tensor.len());
+            }
+            let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(tensor).reshape(&dims)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .context("executable produced no output")?
+            .to_literal_sync()?;
+        let out = lit.to_tuple1().context("unwrapping output tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute with host buffers (validated against the manifest shapes);
+    /// returns the single output tensor.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (tensor, tspec) in inputs.iter().zip(&self.spec.inputs) {
+            literals.push(tensor.to_literal(&tspec.shape)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .context("executable produced no output")?
+            .to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().context("unwrapping output tuple")?;
+        HostTensor::from_literal(&out, &self.spec.output.dtype)
+    }
+}

@@ -1,0 +1,77 @@
+//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//!
+//! The interchange contract with the build path (`python/compile/aot.py`):
+//! HLO **text** per computation (xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids) plus
+//! `manifest.json` describing op/shape/dtype per artifact. Every artifact
+//! returns a 1-tuple (`return_tuple=True` at lowering), unwrapped here
+//! with `to_tuple1`.
+//!
+//! Python never runs here — after `make artifacts` the Rust binary is
+//! self-contained.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use engine::{Engine, LoadedKernel};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Manifest + PJRT engine + lazily-compiled executables.
+pub struct Runtime {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    engine: Engine,
+    compiled: std::sync::Mutex<std::collections::BTreeMap<String, std::sync::Arc<LoadedKernel>>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (reads `manifest.json`, starts the PJRT
+    /// CPU client; compilation happens lazily per artifact).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let engine = Engine::new()?;
+        Ok(Runtime { dir, manifest, engine, compiled: Default::default() })
+    }
+
+    /// Default artifacts directory (`$FCAMM_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FCAMM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Compile (or fetch the cached) executable for a named artifact.
+    pub fn kernel(&self, name: &str) -> Result<std::sync::Arc<LoadedKernel>> {
+        if let Some(k) = self.compiled.lock().unwrap().get(name) {
+            return Ok(k.clone());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let kernel = std::sync::Arc::new(self.engine.load(&path, spec)?);
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), kernel.clone());
+        Ok(kernel)
+    }
+
+    /// Names of all artifacts, manifest order.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+}

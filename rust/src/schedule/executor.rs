@@ -1,0 +1,145 @@
+//! Tiled executor: run a [`TilePlan`] against the PJRT runtime.
+//!
+//! For each output tile the executor keeps one accumulator (the "memory
+//! tile" at host granularity), feeds k-slabs through the `matmul_acc`
+//! artifact, and writes the tile back once — the same reuse pattern the
+//! hardware architecture implements in BRAM, with the PJRT boundary
+//! standing in for the off-chip interface. The step/transfer counts are
+//! therefore directly comparable with Eq. 6 (see `verify`).
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::{LoadedKernel, Runtime};
+
+use super::tiles::TilePlan;
+
+/// Execution result + measurements.
+#[derive(Debug)]
+pub struct ExecutorRun {
+    /// Row-major m×n result.
+    pub c: Vec<f32>,
+    pub plan: TilePlan,
+    /// Artifact invocations performed.
+    pub steps_executed: usize,
+    /// Elements shipped across the host↔PJRT boundary.
+    pub transfer_elements: u64,
+    pub wall: Duration,
+}
+
+impl ExecutorRun {
+    /// Achieved multiply-add rate (madd/s) over the wallclock.
+    pub fn madds_per_sec(&self) -> f64 {
+        (self.plan.m as f64 * self.plan.n as f64 * self.plan.k as f64)
+            / self.wall.as_secs_f64()
+    }
+}
+
+/// Drives one `matmul_acc` artifact over arbitrary problem sizes.
+pub struct TiledExecutor {
+    kernel: Arc<LoadedKernel>,
+    tile_m: usize,
+    tile_n: usize,
+    tile_k: usize,
+}
+
+impl TiledExecutor {
+    /// Pick the largest f32 accumulation artifact from the runtime.
+    pub fn from_runtime(rt: &Runtime) -> Result<TiledExecutor> {
+        let spec = rt
+            .manifest
+            .find_op("matmul_acc", "float32")
+            .first()
+            .map(|s| s.name.clone())
+            .context("no float32 matmul_acc artifact in manifest")?;
+        Self::with_artifact(rt, &spec)
+    }
+
+    /// Use a specific accumulation artifact by name.
+    pub fn with_artifact(rt: &Runtime, name: &str) -> Result<TiledExecutor> {
+        let kernel = rt.kernel(name)?;
+        let spec = &kernel.spec;
+        if !spec.is_accumulate() {
+            bail!("artifact {name:?} is {:?}, need matmul_acc", spec.op);
+        }
+        Ok(TiledExecutor { tile_m: spec.m, tile_n: spec.n, tile_k: spec.k, kernel })
+    }
+
+    pub fn tile_shape(&self) -> (usize, usize, usize) {
+        (self.tile_m, self.tile_n, self.tile_k)
+    }
+
+    /// Plan for a given problem.
+    pub fn plan(&self, m: usize, n: usize, k: usize) -> TilePlan {
+        TilePlan::new(m, n, k, self.tile_m, self.tile_n, self.tile_k)
+    }
+
+    /// C = A·B for row-major f32 `a` (m×k), `b` (k×n).
+    pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Result<ExecutorRun> {
+        assert_eq!(a.len(), m * k, "A must be m×k");
+        assert_eq!(b.len(), k * n, "B must be k×n");
+        let plan = self.plan(m, n, k);
+        let t0 = Instant::now();
+
+        let (tm, tn, tk) = (self.tile_m, self.tile_n, self.tile_k);
+        let mut c = vec![0f32; m * n];
+        let mut c_tile = vec![0f32; tm * tn];
+        let mut a_slab = vec![0f32; tm * tk];
+        let mut b_slab = vec![0f32; tk * tn];
+        let mut transfer = 0u64;
+        let mut steps_executed = 0usize;
+        let mut current_tile = usize::MAX; // flattened (ti, tj)
+
+        for step in &plan.steps {
+            let tile_id = step.tj * plan.m.div_ceil(tm) + step.ti;
+            if tile_id != current_tile {
+                // New output tile: flush the previous accumulator...
+                if current_tile != usize::MAX {
+                    unreachable!("plan is tile-major and we flush after the last slab");
+                }
+                current_tile = tile_id;
+                c_tile.fill(0.0);
+            }
+
+            // Pack the padded A slab (rows beyond the problem stay zero).
+            a_slab.fill(0.0);
+            for r in 0..step.rows {
+                let src = (step.row0 + r) * k + step.k0;
+                a_slab[r * tk..r * tk + step.kdepth]
+                    .copy_from_slice(&a[src..src + step.kdepth]);
+            }
+            // Pack the padded B slab.
+            b_slab.fill(0.0);
+            for kk in 0..step.kdepth {
+                let src = (step.k0 + kk) * n + step.col0;
+                b_slab[kk * tn..kk * tn + step.cols]
+                    .copy_from_slice(&b[src..src + step.cols]);
+            }
+
+            // Hot path: slices straight into XLA literals (no clones).
+            let out = self.kernel.execute_f32(&[&c_tile, &a_slab, &b_slab])?;
+            c_tile = out;
+            steps_executed += 1;
+            transfer += (tm * tk + tk * tn + 2 * tm * tn) as u64;
+
+            // Last slab of this tile → drain to C.
+            if step.ks == plan.k.div_ceil(tk) - 1 {
+                for r in 0..step.rows {
+                    let dst = (step.row0 + r) * n + step.col0;
+                    c[dst..dst + step.cols]
+                        .copy_from_slice(&c_tile[r * tn..r * tn + step.cols]);
+                }
+                current_tile = usize::MAX;
+            }
+        }
+
+        Ok(ExecutorRun {
+            c,
+            plan,
+            steps_executed,
+            transfer_elements: transfer,
+            wall: t0.elapsed(),
+        })
+    }
+}

@@ -1,0 +1,175 @@
+//! Listing 2's iteration space, enumerable for invariant checking.
+//!
+//! The pseudocode's 11 nested loops visit every (i, j, k) multiply-add of
+//! the classical MMM exactly once, ordered so that all madds of one
+//! memory tile complete (for all k) before the next tile starts — that
+//! ordering is precisely what bounds the fast-memory footprint to one
+//! memory tile and yields Eq. 6. This module reproduces the nest at
+//! element granularity so property tests can check coverage and ordering
+//! directly.
+
+use crate::model::tiling::TilingConfig;
+
+/// One multiply-add visit: `C[i][j] ⊕= A[i][k] ⊗ B[k][j]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Visit {
+    pub i: u64,
+    pub j: u64,
+    pub k: u64,
+}
+
+/// A memory tile's position and (clipped) extent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryTile {
+    pub ti: u64,
+    pub tj: u64,
+    /// First row/column of C covered.
+    pub row0: u64,
+    pub col0: u64,
+    /// Rows/columns actually inside the m×n problem (≤ x_tot/y_tot).
+    pub rows: u64,
+    pub cols: u64,
+}
+
+/// Memory tiles in schedule order (n-major then m, per Listing 2's
+/// `for n0 … for m0` outermost loops).
+pub fn memory_tiles(tiling: TilingConfig, m: u64, n: u64) -> Vec<MemoryTile> {
+    let (x_tot, y_tot) = (tiling.x_tot(), tiling.y_tot());
+    let mut out = Vec::new();
+    for tj in 0..n.div_ceil(y_tot) {
+        for ti in 0..m.div_ceil(x_tot) {
+            let row0 = ti * x_tot;
+            let col0 = tj * y_tot;
+            out.push(MemoryTile {
+                ti,
+                tj,
+                row0,
+                col0,
+                rows: (m - row0).min(x_tot),
+                cols: (n - col0).min(y_tot),
+            });
+        }
+    }
+    out
+}
+
+/// Enumerate every madd in Listing-2 order (clipped to the real problem).
+/// Small problems only — this is O(m·n·k) and exists for tests.
+pub fn visits(tiling: TilingConfig, m: u64, n: u64, k: u64) -> Vec<Visit> {
+    let mut out = Vec::new();
+    let x_tt = tiling.x_t * tiling.x_b; // tile rows per PE
+    let y_tt = tiling.y_t * tiling.y_b; // compute tiles per tile row
+    for tile in memory_tiles(tiling, m, n) {
+        for kk in 0..k {
+            // One outer product over the memory tile: compute tiles in
+            // (t_row, t_col) order; within a compute tile, all N_c units
+            // fire in the same cycle (enumerated PE-major here).
+            for t_row in 0..x_tt {
+                for t_col in 0..y_tt {
+                    for pe_x in 0..tiling.x_p {
+                        for cu_x in 0..tiling.x_c {
+                            let i = tile.row0
+                                + (pe_x * tiling.x_c + cu_x) * x_tt
+                                + t_row;
+                            if i >= m || (i - tile.row0) >= tile.rows {
+                                continue;
+                            }
+                            for pe_y in 0..tiling.y_p {
+                                for cu_y in 0..tiling.y_c {
+                                    let j = tile.col0
+                                        + t_col * tiling.y_c * tiling.y_p
+                                        + pe_y * tiling.y_c
+                                        + cu_y;
+                                    if j < n && (j - tile.col0) < tile.cols {
+                                        out.push(Visit { i, j, k: kk });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn tiny() -> TilingConfig {
+        TilingConfig { x_c: 1, y_c: 2, x_p: 4, y_p: 1, x_t: 2, y_t: 8, x_b: 1, y_b: 1 }
+    }
+
+    #[test]
+    fn covers_each_madd_exactly_once_divisible() {
+        let t = tiny();
+        let (m, n, k) = (16, 32, 3);
+        let vs = visits(t, m, n, k);
+        assert_eq!(vs.len() as u64, m * n * k);
+        let set: HashSet<Visit> = vs.iter().copied().collect();
+        assert_eq!(set.len() as u64, m * n * k, "duplicates present");
+    }
+
+    #[test]
+    fn covers_each_madd_exactly_once_ragged() {
+        let t = tiny();
+        let (m, n, k) = (13, 21, 5);
+        let vs = visits(t, m, n, k);
+        assert_eq!(vs.len() as u64, m * n * k);
+        let set: HashSet<Visit> = vs.iter().copied().collect();
+        assert_eq!(set.len() as u64, m * n * k);
+    }
+
+    #[test]
+    fn tile_locality_ordering() {
+        // All k-iterations of a tile finish before the next tile starts —
+        // the property that bounds fast memory to one tile.
+        let t = tiny();
+        let (m, n, k) = (16, 32, 4);
+        let tile_of = |v: &Visit| (v.i / t.x_tot(), v.j / t.y_tot());
+        let vs = visits(t, m, n, k);
+        let mut seen_tiles = Vec::new();
+        for v in &vs {
+            let tile = tile_of(v);
+            if seen_tiles.last() != Some(&tile) {
+                assert!(!seen_tiles.contains(&tile), "tile revisited: {tile:?}");
+                seen_tiles.push(tile);
+            }
+        }
+        assert_eq!(seen_tiles.len() as u64, (m / t.x_tot()) * (n / t.y_tot()));
+    }
+
+    #[test]
+    fn k_outer_products_complete_within_tile() {
+        // Within a tile, k advances only after the whole tile is touched.
+        let t = tiny();
+        let vs = visits(t, 8, 16, 3);
+        // single tile: k sequence must be non-decreasing
+        let mut last_k = 0;
+        for v in &vs {
+            assert!(v.k >= last_k);
+            last_k = v.k;
+        }
+    }
+
+    #[test]
+    fn memory_tiles_clip_extents() {
+        let tiles = memory_tiles(tiny(), 13, 21);
+        assert_eq!(tiles.len(), 2 * 2);
+        let last = tiles.last().unwrap();
+        assert_eq!(last.rows, 5); // 13 - 8
+        assert_eq!(last.cols, 5); // 21 - 16
+    }
+
+    #[test]
+    fn matches_simulated_madd_count() {
+        // Useful madds in the simulator == visits enumerated here.
+        let t = tiny();
+        let (m, n, k) = (13, 21, 5);
+        let sim = crate::sim::simulate_timeline(t, m, n, k);
+        assert_eq!(sim.useful_madds, visits(t, m, n, k).len() as u64);
+    }
+}

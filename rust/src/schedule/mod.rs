@@ -1,0 +1,23 @@
+//! The Listing-2 schedule, split at the host boundary.
+//!
+//! The paper's 11-loop nest decomposes into: outer loops over memory
+//! tiles of C and over k (the I/O schedule), and inner loops over block /
+//! compute tiles (the per-cycle hardware schedule). In this repo the
+//! inner loops live inside one AOT artifact invocation (the Pallas grid);
+//! the outer loops live here and drive the PJRT runtime one memory tile
+//! and k-slab at a time:
+//!
+//! * [`loopnest`] — the full iteration-space enumeration (used to prove
+//!   the schedule covers each (i, j, k) exactly once, in tile order);
+//! * [`tiles`] — planning: decompose an arbitrary m×n×k problem into
+//!   steps sized to an available artifact;
+//! * [`executor`] — execution: run the plan against the runtime,
+//!   accumulating partial results exactly as the architecture's C memory
+//!   tile does.
+
+pub mod executor;
+pub mod loopnest;
+pub mod tiles;
+
+pub use executor::{ExecutorRun, TiledExecutor};
+pub use tiles::{Step, TilePlan};

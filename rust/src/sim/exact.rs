@@ -1,0 +1,407 @@
+//! Element-level simulator: real data through the Fig.-5/Fig.-6 pipeline.
+//!
+//! Models the module structure of the final kernel architecture —
+//! Read A → Transpose FIFO → 1-D PE chain (double-buffered A registers,
+//! streamed B, per-PE C partitions) → backward drain through the chain
+//! head — while moving actual `f32` values, so it validates *numerics*
+//! (against the PJRT runtime and the host reference) and *counts*
+//! (against the timeline simulator and Eq. 6) at once.
+//!
+//! Scale target: problems up to a few hundred per dimension; the timeline
+//! simulator covers paper-scale sizes with identical accounting
+//! (`tests::exact_matches_timeline_counts` pins them together).
+
+use crate::datatype::Semiring;
+use crate::model::tiling::TilingConfig;
+
+use super::fifo::Fifo;
+use super::stats::SimReport;
+
+/// Element-level simulation of the 1-D chain architecture.
+#[derive(Debug, Clone)]
+pub struct ExactSim {
+    pub tiling: TilingConfig,
+    pub semiring: Semiring,
+}
+
+/// Result of an exact run: the output matrix plus accounting and module
+/// statistics.
+#[derive(Debug, Clone)]
+pub struct ExactRun {
+    /// Row-major m×n output.
+    pub c: Vec<f32>,
+    pub report: SimReport,
+    /// Peak occupancy of the transpose FIFO (Sec. 4.3 sizing check).
+    pub transpose_fifo_high_water: usize,
+    /// Peak occupancy of the Feed-B stream.
+    pub feed_b_high_water: usize,
+    /// Double-buffer swaps performed across all PEs (A register reloads).
+    pub a_register_swaps: u64,
+}
+
+impl ExactSim {
+    pub fn new(tiling: TilingConfig) -> Self {
+        Self::with_semiring(tiling, Semiring::PlusTimes)
+    }
+
+    pub fn with_semiring(tiling: TilingConfig, semiring: Semiring) -> Self {
+        assert!(tiling.is_valid(), "invalid tiling {tiling}");
+        assert!(
+            tiling.is_1d_chain(),
+            "exact simulator models the collapsed 1-D array (x_c = 1, y_p = 1); got {tiling}"
+        );
+        assert!(
+            tiling.satisfies_pipeline_depth(),
+            "compute tiles per memory tile must cover the chain depth (Sec. 4.1); got {tiling}"
+        );
+        ExactSim { tiling, semiring }
+    }
+
+    /// Run C = A·B for row-major `a` (m×k), `b` (k×n).
+    ///
+    /// Partial memory tiles run with dynamic loop bounds (variable-size
+    /// support, Sec. 5.2): a tile covering `rows × cols` iterates
+    /// `⌈rows/x_p⌉ × ⌈cols/y_c⌉` compute tiles — matching
+    /// `model::compute::tile_dims` and the timeline simulator exactly.
+    pub fn run(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> ExactRun {
+        assert_eq!(a.len(), m * k, "A must be m×k row-major");
+        assert_eq!(b.len(), k * n, "B must be k×n row-major");
+        assert!(m > 0 && n > 0 && k > 0, "empty problem");
+        let t = self.tiling;
+        let (x_tot, y_tot) = (t.x_tot() as usize, t.y_tot() as usize);
+        let x_p = t.x_p as usize;
+        let y_c = t.y_c as usize;
+        let zero = self.semiring.zero_f32();
+
+        let mut report = SimReport { useful_madds: (m * n * k) as u64, ..Default::default() };
+        let mut c = vec![0f32; m * n];
+
+        // Module state. FIFO depths per the architecture: the transpose
+        // FIFOs hold one A column, Feed B one B row of the tile.
+        let mut transpose_fifo: Fifo<f32> = Fifo::new(x_tot.max(1));
+        let mut feed_b: Fifo<f32> = Fifo::new(y_tot.max(1));
+        let mut a_register_swaps = 0u64;
+
+        // Double-buffered A registers (Fig. 6-I).
+        let mut a_cur = vec![0f32; x_p];
+        let mut a_next = vec![0f32; x_p];
+
+        let a_at = |row: usize, col: usize| -> f32 {
+            if row < m && col < k {
+                a[row * k + col]
+            } else {
+                0.0 // granularity padding; padded C cells are discarded
+            }
+        };
+        let b_at = |row: usize, col: usize| -> f32 {
+            if row < k && col < n {
+                b[row * n + col]
+            } else {
+                0.0
+            }
+        };
+
+        // Tile iteration shared with the analytic model.
+        let mut tiles = Vec::new();
+        crate::model::compute::for_each_tile(t, m as u64, n as u64, |rows, cols| {
+            tiles.push((rows as usize, cols as usize));
+        });
+        let (mut row0, mut col0) = (0usize, 0usize);
+        // for_each_tile is tj-outer / ti-inner; track origins accordingly.
+        for (rows, cols) in tiles {
+            let dims = crate::model::compute::tile_dims(t, rows as u64, cols as u64);
+            let (x_tt, y_tt) = (dims.x_tt as usize, dims.y_tt as usize);
+            let rows_eff = dims.rows_eff as usize;
+            let cols_eff = dims.cols_eff as usize;
+            report.tiles += 1;
+
+            // Per-PE C partitions: PE p owns rows [p·x_tt, (p+1)·x_tt) of
+            // the effective tile, stored contiguously (Sec. 4.1).
+            let mut c_part = vec![vec![zero; x_tt * cols_eff]; x_p];
+
+            // --- Prefetch: first B row streams into Feed B before the
+            // first outer product can start (later rows overlap).
+            for j in 0..cols_eff {
+                feed_b.push_expect(b_at(0, col0 + j));
+            }
+            report.io_read_elements += cols_eff as u64;
+            report.prefetch_cycles += (cols_eff / y_c) as u64;
+
+            let mut b_row = vec![0f32; cols_eff];
+
+            for kk in 0..k {
+                // --- Read A column through the Transpose module: the DDR
+                // read is a wide row-major burst; the Transpose module
+                // re-orders it into chain-distribution order
+                // (PE-interleaved: for each t_row, one value per PE)
+                // before pushing into the FIFO (Sec. 4.3).
+                for t_row in 0..x_tt {
+                    for pe in 0..x_p {
+                        transpose_fifo.push_expect(a_at(row0 + pe * x_tt + t_row, kk));
+                    }
+                }
+                report.io_read_elements += rows_eff as u64;
+
+                // --- Feed B: current row kk (prefetched for kk = 0).
+                if kk > 0 {
+                    for j in 0..cols_eff {
+                        feed_b.push_expect(b_at(kk, col0 + j));
+                    }
+                    report.io_read_elements += cols_eff as u64;
+                }
+                for slot in b_row.iter_mut() {
+                    *slot = feed_b.pop_expect();
+                }
+
+                // --- k-th outer product: x_tt rows of compute tiles.
+                for t_row in 0..x_tt {
+                    // A values for this row propagated through the chain
+                    // during the previous row's y_tt compute cycles
+                    // (double buffering, Fig. 6-I); model the swap.
+                    for (pe, next) in a_next.iter_mut().enumerate() {
+                        *next = transpose_fifo.pop_expect();
+                        debug_assert_eq!(
+                            *next,
+                            a_at(row0 + pe * x_tt + t_row, kk),
+                            "transpose order"
+                        );
+                    }
+                    std::mem::swap(&mut a_cur, &mut a_next);
+                    a_register_swaps += x_p as u64;
+
+                    // y_tt compute tiles fire back-to-back along this PE
+                    // row; iterating PE-major over whole row segments is
+                    // numerically identical (the ⊕-reduction is over k,
+                    // which stays outer) and lets the compiler vectorize
+                    // the y_c-wide unit. One cycle per compute tile.
+                    report.compute_cycles += y_tt as u64;
+                    let row_range = t_row * cols_eff..(t_row + 1) * cols_eff;
+                    match self.semiring {
+                        Semiring::PlusTimes => {
+                            for (pe, part) in c_part.iter_mut().enumerate() {
+                                let a_val = a_cur[pe];
+                                for (cell, &bv) in
+                                    part[row_range.clone()].iter_mut().zip(&b_row)
+                                {
+                                    *cell += a_val * bv;
+                                }
+                            }
+                        }
+                        Semiring::MinPlus => {
+                            for (pe, part) in c_part.iter_mut().enumerate() {
+                                let a_val = a_cur[pe];
+                                for (cell, &bv) in
+                                    part[row_range.clone()].iter_mut().zip(&b_row)
+                                {
+                                    *cell = cell.min(a_val + bv);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            // --- Drain: results stream backwards through the chain and
+            // leave at the head, y_c elements per cycle (Sec. 4.4:
+            // sequential, preserving the full fast-memory size S).
+            report.drain_cycles += (rows_eff * cols_eff / y_c) as u64;
+            report.io_write_elements += (rows_eff * cols_eff) as u64;
+            for (pe, part) in c_part.iter().enumerate() {
+                for t_row in 0..x_tt {
+                    let gr = row0 + pe * x_tt + t_row;
+                    if gr >= m || gr >= row0 + rows {
+                        continue;
+                    }
+                    for (jj, &v) in part[t_row * cols_eff..(t_row + 1) * cols_eff].iter().enumerate()
+                    {
+                        let gc = col0 + jj;
+                        if gc < n && jj < cols {
+                            c[gr * n + gc] = v;
+                        }
+                    }
+                }
+            }
+
+            // The FIFOs must be empty between tiles — a schedule invariant.
+            assert!(transpose_fifo.is_empty(), "transpose FIFO residue");
+            assert!(feed_b.is_empty(), "feed-B residue");
+
+            // Advance tile origin (ti-inner, tj-outer order).
+            row0 += x_tot;
+            if row0 >= m {
+                row0 = 0;
+                col0 += y_tot;
+            }
+        }
+
+        ExactRun {
+            c,
+            report,
+            transpose_fifo_high_water: transpose_fifo.high_water,
+            feed_b_high_water: feed_b.high_water,
+            a_register_swaps,
+        }
+    }
+}
+
+/// Host reference matmul over an arbitrary semiring (row-major, f64
+/// accumulation for the PlusTimes ring to bound error independently).
+pub fn reference_matmul(
+    semiring: Semiring,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    match semiring {
+        Semiring::PlusTimes => {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for kk in 0..k {
+                        acc += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                    }
+                    c[i * n + j] = acc as f32;
+                }
+            }
+        }
+        Semiring::MinPlus => {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = f32::INFINITY;
+                    for kk in 0..k {
+                        acc = acc.min(a[i * k + kk] + b[kk * n + j]);
+                    }
+                    c[i * n + j] = acc;
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::chain::simulate_timeline;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> TilingConfig {
+        // x_tot = 8 (4 PEs × 2 rows), y_tot = 16 (y_c=2 × 8 tiles).
+        TilingConfig { x_c: 1, y_c: 2, x_p: 4, y_p: 1, x_t: 2, y_t: 8, x_b: 1, y_b: 1 }
+    }
+
+    fn rand_mat(rng: &mut Rng, len: usize) -> Vec<f32> {
+        rng.fill_normal_f32(len)
+    }
+
+    fn assert_close(actual: &[f32], expected: &[f32], tol: f32) {
+        assert_eq!(actual.len(), expected.len());
+        for (i, (a, e)) in actual.iter().zip(expected).enumerate() {
+            assert!(
+                (a - e).abs() <= tol * (1.0 + e.abs()),
+                "index {i}: {a} vs {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn numerics_match_reference_divisible() {
+        let mut rng = Rng::new(100);
+        let (m, n, k) = (16, 32, 12);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let run = ExactSim::new(tiny()).run(&a, &b, m, n, k);
+        let expected = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+        assert_close(&run.c, &expected, 1e-5);
+    }
+
+    #[test]
+    fn numerics_match_reference_ragged() {
+        let mut rng = Rng::new(101);
+        let (m, n, k) = (13, 21, 7); // nothing divides the 8×16 tile
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let run = ExactSim::new(tiny()).run(&a, &b, m, n, k);
+        let expected = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+        assert_close(&run.c, &expected, 1e-5);
+    }
+
+    #[test]
+    fn min_plus_matches_reference() {
+        let mut rng = Rng::new(102);
+        let (m, n, k) = (8, 16, 9);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let sim = ExactSim::with_semiring(tiny(), Semiring::MinPlus);
+        let run = sim.run(&a, &b, m, n, k);
+        // Padded columns contribute a+0 = a values into padded C cells
+        // only, which are discarded; the real region must be exact.
+        let expected = reference_matmul(Semiring::MinPlus, &a, &b, m, n, k);
+        assert_close(&run.c, &expected, 1e-6);
+    }
+
+    #[test]
+    fn exact_matches_timeline_counts() {
+        // The element simulator and the timeline simulator must agree on
+        // every counter for every configuration — this is what licenses
+        // using the timeline model at paper scale.
+        let mut rng = Rng::new(103);
+        for (t, m, n, k) in [
+            (tiny(), 16, 32, 8),
+            (tiny(), 13, 21, 7),
+            (TilingConfig { x_c: 1, y_c: 4, x_p: 2, y_p: 1, x_t: 3, y_t: 5, x_b: 1, y_b: 1 }, 12, 40, 6),
+            (TilingConfig { x_c: 1, y_c: 1, x_p: 1, y_p: 1, x_t: 4, y_t: 4, x_b: 2, y_b: 2 }, 8, 8, 3),
+        ] {
+            let a = rand_mat(&mut rng, m * k);
+            let b = rand_mat(&mut rng, k * n);
+            let run = ExactSim::new(t).run(&a, &b, m, n, k);
+            let timeline = simulate_timeline(t, m as u64, n as u64, k as u64);
+            assert_eq!(run.report, timeline, "tiling {t}");
+        }
+    }
+
+    #[test]
+    fn transpose_fifo_holds_one_column() {
+        let mut rng = Rng::new(104);
+        let (m, n, k) = (16, 32, 4);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let run = ExactSim::new(tiny()).run(&a, &b, m, n, k);
+        assert_eq!(run.transpose_fifo_high_water, 8); // x_tot
+        assert_eq!(run.feed_b_high_water, 16); // y_tot
+    }
+
+    #[test]
+    fn a_register_swaps_counted() {
+        let mut rng = Rng::new(105);
+        let (m, n, k) = (8, 16, 3);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let run = ExactSim::new(tiny()).run(&a, &b, m, n, k);
+        // swaps = tiles × k × x_tt × x_p = 1 × 3 × 2 × 4.
+        assert_eq!(run.a_register_swaps, 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "1-D array")]
+    fn rejects_2d_tilings() {
+        let t = TilingConfig { x_c: 2, y_c: 2, x_p: 2, y_p: 2, x_t: 2, y_t: 2, x_b: 1, y_b: 1 };
+        let _ = ExactSim::new(t);
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let m = 8;
+        let mut eye = vec![0f32; m * m];
+        for i in 0..m {
+            eye[i * m + i] = 1.0;
+        }
+        let mut rng = Rng::new(106);
+        let b = rand_mat(&mut rng, m * 16);
+        let run = ExactSim::new(tiny()).run(&eye, &b, m, 16, m);
+        assert_close(&run.c, &b, 1e-6);
+    }
+}

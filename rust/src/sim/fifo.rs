@@ -1,0 +1,153 @@
+//! Bounded FIFO channel with occupancy statistics.
+//!
+//! The inter-module connections of Fig. 5 (Read A → Transpose → chain,
+//! Feed B → chain, chain → Store C) are FIFO channels in the HLS design
+//! (hlslib streams). The element simulator uses this type to model them,
+//! and its statistics (high-water mark, stall counts) feed the FIFO-depth
+//! sizing argument of Sec. 4.3 (transpose FIFOs need depth ≥ x_b·x_m).
+
+use std::collections::VecDeque;
+
+/// A bounded single-producer single-consumer queue with stats.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    buf: VecDeque<T>,
+    capacity: usize,
+    /// Peak occupancy observed.
+    pub high_water: usize,
+    /// Total elements ever pushed.
+    pub total_pushed: u64,
+    /// Push attempts rejected because the FIFO was full (back-pressure).
+    pub push_stalls: u64,
+    /// Pop attempts on an empty FIFO (starvation).
+    pub pop_stalls: u64,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Fifo {
+            buf: VecDeque::with_capacity(capacity),
+            capacity,
+            high_water: 0,
+            total_pushed: 0,
+            push_stalls: 0,
+            pop_stalls: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() >= self.capacity
+    }
+
+    /// Try to push; returns `false` (and counts a stall) when full.
+    pub fn push(&mut self, v: T) -> bool {
+        if self.is_full() {
+            self.push_stalls += 1;
+            return false;
+        }
+        self.buf.push_back(v);
+        self.total_pushed += 1;
+        self.high_water = self.high_water.max(self.buf.len());
+        true
+    }
+
+    /// Push that must succeed (models a statically-sized connection that
+    /// the architecture guarantees never overflows).
+    pub fn push_expect(&mut self, v: T) {
+        assert!(
+            self.push(v),
+            "FIFO overflow: capacity {} exceeded (architecture sizing bug)",
+            self.capacity
+        );
+    }
+
+    /// Try to pop; returns `None` (and counts a stall) when empty.
+    pub fn pop(&mut self) -> Option<T> {
+        match self.buf.pop_front() {
+            Some(v) => Some(v),
+            None => {
+                self.pop_stalls += 1;
+                None
+            }
+        }
+    }
+
+    /// Pop that must succeed.
+    pub fn pop_expect(&mut self) -> T {
+        self.pop().expect("FIFO underflow (architecture schedule bug)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            assert!(f.push(i));
+        }
+        for i in 0..4 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_counted() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1));
+        assert!(f.push(2));
+        assert!(!f.push(3));
+        assert_eq!(f.push_stalls, 1);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn starvation_counted() {
+        let mut f: Fifo<u8> = Fifo::new(2);
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.pop_stalls, 1);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i);
+        }
+        f.pop();
+        f.pop();
+        f.push(9);
+        assert_eq!(f.high_water, 5);
+        assert_eq!(f.total_pushed, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "FIFO overflow")]
+    fn push_expect_panics_when_full() {
+        let mut f = Fifo::new(1);
+        f.push_expect(1);
+        f.push_expect(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn zero_capacity_rejected() {
+        let _ = Fifo::<u8>::new(0);
+    }
+}

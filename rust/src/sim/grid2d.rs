@@ -1,0 +1,144 @@
+//! The pre-collapse 2-D PE grid (Sec. 4.1, Fig. 4) — interconnect
+//! analysis justifying the collapse to a 1-D chain.
+//!
+//! The 2-D grid solves the *fan-out* problem (no 1-to-N broadcasts), but
+//! its module topology is a mesh: `3·x_p·y_p` inter-module connections,
+//! and when the grid straddles an SLR boundary, a bundle of buses
+//! proportional to the cut's circumference must cross. The collapsed 1-D
+//! chain needs exactly 3 buses per gap (A, B, C). This module quantifies
+//! both, and verifies that the two layouts perform identical computation
+//! (the collapse changes routing, not the schedule).
+
+use crate::device::ChipletLayout;
+use crate::model::tiling::TilingConfig;
+
+/// Interconnect cost summary for a PE topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InterconnectReport {
+    /// Total inter-module data buses.
+    pub total_buses: u64,
+    /// Maximum fan-out of any single module.
+    pub max_fan_out: u64,
+    /// Buses crossing each chiplet/SLR gap.
+    pub buses_per_slr_crossing: u64,
+}
+
+/// Fig.-4 2-D grid of `x_p × y_p` PEs: per-PE three inputs + three
+/// outputs, feeders on the left/top edges.
+pub fn grid_2d_interconnect(x_p: u64, y_p: u64, chiplets: ChipletLayout) -> InterconnectReport {
+    let total = 3 * x_p * y_p;
+    // An SLR cut slices the grid along one dimension; every PE row (or
+    // column) crossing it carries its A, B and C buses. Snake placement
+    // cuts across the shorter side.
+    let cut_width = x_p.min(y_p);
+    let buses = if chiplets.count > 1 { 3 * cut_width } else { 0 };
+    InterconnectReport {
+        total_buses: total,
+        max_fan_out: 6, // constant per PE — the point of the systolic design
+        buses_per_slr_crossing: buses,
+    }
+}
+
+/// Sec.-4.1 collapsed 1-D chain of `n_p` PEs: 3 buses between consecutive
+/// PEs, 3 buses per SLR gap regardless of scale.
+pub fn chain_1d_interconnect(n_p: u64, chiplets: ChipletLayout) -> InterconnectReport {
+    InterconnectReport {
+        total_buses: 3 * n_p,
+        max_fan_out: 6,
+        buses_per_slr_crossing: if chiplets.count > 1 { chiplets.chain_crossing_buses() } else { 0 },
+    }
+}
+
+/// Naive broadcast design (what the systolic structure avoids): Feed A
+/// fans out to every PE row, Feed B to every column.
+pub fn broadcast_interconnect(x_p: u64, y_p: u64) -> InterconnectReport {
+    InterconnectReport {
+        total_buses: x_p * y_p + x_p + y_p,
+        max_fan_out: x_p.max(y_p), // 1-to-N broadcast — the routing killer
+        buses_per_slr_crossing: 3 * x_p.min(y_p),
+    }
+}
+
+/// A 2-D grid schedule computes the same set of madds as the 1-D chain
+/// with the same `N_c`: cycles are identical, only placement differs.
+/// (The collapse fixes `y_p = 1`, `x_c = 1` and compensates with `y_c` —
+/// Sec. 4.1.) This helper maps a 2-D tiling onto its collapsed equivalent.
+pub fn collapse_to_1d(t2d: TilingConfig) -> TilingConfig {
+    // All y-parallelism (and the PE-internal x_c) folds into the PE
+    // granularity y_c; the tile layers compensate so that x_tot, y_tot —
+    // and with them N_c, the memory tile, and the schedule — are
+    // preserved exactly.
+    let y_c_new = t2d.x_c * t2d.y_c * t2d.y_p;
+    assert_eq!(
+        t2d.y_t % t2d.x_c,
+        0,
+        "collapse requires x_c | y_t to keep y_tot intact (got {t2d})"
+    );
+    TilingConfig {
+        x_c: 1,
+        y_c: y_c_new,
+        x_p: t2d.x_p,
+        y_p: 1,
+        x_t: t2d.x_t * t2d.x_c,
+        y_t: t2d.y_t / t2d.x_c,
+        x_b: t2d.x_b,
+        y_b: t2d.y_b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::chain::simulate_timeline;
+
+    const SLR3: ChipletLayout = ChipletLayout { count: 3, max_crossing_buses: 720 };
+
+    #[test]
+    fn chain_crossing_is_constant_three() {
+        for n_p in [8, 64, 512] {
+            let r = chain_1d_interconnect(n_p, SLR3);
+            assert_eq!(r.buses_per_slr_crossing, 3);
+            assert_eq!(r.total_buses, 3 * n_p);
+        }
+    }
+
+    #[test]
+    fn grid_crossing_grows_with_size() {
+        let small = grid_2d_interconnect(8, 8, SLR3);
+        let large = grid_2d_interconnect(32, 32, SLR3);
+        assert!(large.buses_per_slr_crossing > small.buses_per_slr_crossing);
+        // …while the chain does not.
+        assert_eq!(chain_1d_interconnect(64, SLR3).buses_per_slr_crossing,
+                   chain_1d_interconnect(1024, SLR3).buses_per_slr_crossing);
+    }
+
+    #[test]
+    fn systolic_fan_out_constant_broadcast_not() {
+        let grid = grid_2d_interconnect(16, 16, SLR3);
+        let bcast = broadcast_interconnect(16, 16);
+        assert_eq!(grid.max_fan_out, 6);
+        assert_eq!(bcast.max_fan_out, 16);
+    }
+
+    #[test]
+    fn monolithic_has_no_crossings() {
+        let r = grid_2d_interconnect(16, 16, ChipletLayout::MONOLITHIC);
+        assert_eq!(r.buses_per_slr_crossing, 0);
+    }
+
+    #[test]
+    fn collapse_preserves_compute_and_tile() {
+        // A 2-D 4×4 grid of 2×2-unit PEs vs its 1-D collapse: same N_c,
+        // same memory tile, same simulated cycles.
+        let t2d = TilingConfig { x_c: 2, y_c: 2, x_p: 4, y_p: 4, x_t: 4, y_t: 4, x_b: 2, y_b: 2 };
+        let t1d = collapse_to_1d(t2d);
+        assert!(t1d.is_1d_chain());
+        assert_eq!(t1d.n_compute_units(), t2d.n_compute_units());
+        assert_eq!(t1d.memory_tile_elements(), t2d.memory_tile_elements());
+        let (m, n, k) = (t2d.x_tot() * 2, t2d.y_tot() * 3, 64);
+        let r2d = simulate_timeline(t2d, m, n, k);
+        let r1d = simulate_timeline(t1d, m, n, k);
+        assert_eq!(r2d.compute_cycles, r1d.compute_cycles);
+        assert_eq!(r2d.q_elements(), r1d.q_elements());
+    }
+}

@@ -1,0 +1,32 @@
+//! Simulator of the generated hardware architecture (Figs. 5 and 6).
+//!
+//! The paper's own argument (Sec. 1) is that the instantiated circuit is
+//! *fully deterministic*: every on- and off-chip access is explicit, so a
+//! faithful model of the module pipeline reproduces cycle counts and I/O
+//! volume exactly. Two fidelities share one accounting scheme:
+//!
+//! * [`chain`] — the *timeline* simulator: phase-level cycle/I/O
+//!   accounting per memory tile (prefetch → k outer products → drain),
+//!   valid at any problem scale (16384³ in microseconds).
+//! * [`exact`] — the *element* simulator: moves real data through the
+//!   Read A → Transpose → Feed B → PE-chain → Store C pipeline (double
+//!   buffered A registers, per-PE C partitions, FIFO occupancies) and
+//!   produces the actual output matrix. Used to validate numerics and to
+//!   pin the timeline model (equal counts on every small configuration).
+//!
+//! [`grid2d`] models the pre-collapse 2-D array's interconnect for the
+//! Sec.-4.1 comparison, and [`baseline`] implements the prior-work
+//! double-buffered-C designs (the √2 intensity penalty) plus naive/ideal
+//! reference schedules.
+
+pub mod bandwidth;
+pub mod baseline;
+pub mod chain;
+pub mod exact;
+pub mod fifo;
+pub mod grid2d;
+pub mod stats;
+
+pub use chain::simulate_timeline;
+pub use exact::ExactSim;
+pub use stats::SimReport;

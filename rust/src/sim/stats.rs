@@ -1,0 +1,150 @@
+//! Shared accounting for both simulator fidelities.
+
+use crate::datatype::DataType;
+use crate::model::tiling::TilingConfig;
+
+/// Cycle and I/O totals of one simulated kernel execution.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SimReport {
+    /// Cycles spent evaluating compute tiles.
+    pub compute_cycles: u64,
+    /// Cycles spent draining C memory tiles (sequential phase, Sec. 4.4).
+    pub drain_cycles: u64,
+    /// Cycles spent on un-overlapped prefetch (first B row per tile).
+    pub prefetch_cycles: u64,
+    /// Elements loaded from off-chip memory (A and B).
+    pub io_read_elements: u64,
+    /// Elements stored to off-chip memory (C).
+    pub io_write_elements: u64,
+    /// Memory tiles processed.
+    pub tiles: u64,
+    /// Useful multiply-add operations (unpadded m·n·k).
+    pub useful_madds: u64,
+}
+
+impl SimReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.drain_cycles + self.prefetch_cycles
+    }
+
+    /// Total off-chip transfers Q in elements (the measured counterpart of
+    /// Eq. 6).
+    pub fn q_elements(&self) -> u64 {
+        self.io_read_elements + self.io_write_elements
+    }
+
+    pub fn q_bytes(&self, dt: DataType) -> u64 {
+        self.q_elements() * dt.bytes()
+    }
+
+    /// Wallclock at clock `f_hz`.
+    pub fn time_s(&self, f_hz: f64) -> f64 {
+        self.total_cycles() as f64 / f_hz
+    }
+
+    /// Performance in Op/s (2 ops per madd) at clock `f_hz`.
+    pub fn performance_ops(&self, f_hz: f64) -> f64 {
+        2.0 * self.useful_madds as f64 / self.time_s(f_hz)
+    }
+
+    /// Fraction of peak multiply-add throughput (Fig. 8's y-axis).
+    pub fn compute_efficiency(&self, n_c: u64) -> f64 {
+        self.useful_madds as f64 / (self.total_cycles() as f64 * n_c as f64)
+    }
+
+    /// Average off-chip bandwidth in bytes/s at clock `f_hz` (Fig. 9's
+    /// right axis).
+    pub fn bandwidth_bytes_per_sec(&self, dt: DataType, f_hz: f64) -> f64 {
+        self.q_bytes(dt) as f64 / self.time_s(f_hz)
+    }
+
+    /// Measured arithmetic intensity Op/Byte over *loads* (the paper's
+    /// Fig. 9 convention; see `model::io`).
+    pub fn arithmetic_intensity_loads(&self, dt: DataType) -> f64 {
+        2.0 * self.useful_madds as f64 / (self.io_read_elements * dt.bytes()) as f64
+    }
+}
+
+/// Padded problem dimensions: the architecture always evaluates whole
+/// memory tiles (Sec. 5.2's fixed-size kernels; variable sizes pad).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PaddedProblem {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub m_pad: u64,
+    pub n_pad: u64,
+    pub tiles_m: u64,
+    pub tiles_n: u64,
+}
+
+impl PaddedProblem {
+    pub fn new(tiling: TilingConfig, m: u64, n: u64, k: u64) -> Self {
+        assert!(m > 0 && n > 0 && k > 0, "empty problem");
+        let tiles_m = m.div_ceil(tiling.x_tot());
+        let tiles_n = n.div_ceil(tiling.y_tot());
+        PaddedProblem {
+            m,
+            n,
+            k,
+            m_pad: tiles_m * tiling.x_tot(),
+            n_pad: tiles_n * tiling.y_tot(),
+            tiles_m,
+            tiles_n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_tiling() -> TilingConfig {
+        // x_tot = 8, y_tot = 16.
+        TilingConfig { x_c: 1, y_c: 2, x_p: 4, y_p: 1, x_t: 2, y_t: 8, x_b: 1, y_b: 1 }
+    }
+
+    #[test]
+    fn report_arithmetic() {
+        let r = SimReport {
+            compute_cycles: 800,
+            drain_cycles: 150,
+            prefetch_cycles: 50,
+            io_read_elements: 4000,
+            io_write_elements: 1000,
+            tiles: 2,
+            useful_madds: 8000,
+        };
+        assert_eq!(r.total_cycles(), 1000);
+        assert_eq!(r.q_elements(), 5000);
+        assert_eq!(r.q_bytes(DataType::F32), 20_000);
+        assert!((r.time_s(1e6) - 1e-3).abs() < 1e-12);
+        assert!((r.performance_ops(1e6) - 16e6).abs() < 1.0);
+        assert!((r.compute_efficiency(8) - 1.0).abs() < 1e-12);
+        assert!((r.bandwidth_bytes_per_sec(DataType::F32, 1e6) - 20e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn padding_rounds_up_to_tiles() {
+        let t = tiny_tiling(); // x_tot = 8, y_tot = 16
+        let p = PaddedProblem::new(t, 20, 20, 5);
+        assert_eq!(p.m_pad, 24);
+        assert_eq!(p.n_pad, 32);
+        assert_eq!(p.tiles_m, 3);
+        assert_eq!(p.tiles_n, 2);
+    }
+
+    #[test]
+    fn divisible_problems_unpadded() {
+        let t = tiny_tiling();
+        let p = PaddedProblem::new(t, 16, 32, 7);
+        assert_eq!(p.m_pad, 16);
+        assert_eq!(p.n_pad, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty problem")]
+    fn rejects_empty() {
+        PaddedProblem::new(tiny_tiling(), 0, 4, 4);
+    }
+}

@@ -1,0 +1,166 @@
+//! Criterion-style measurement harness for the `rust/benches/*` targets
+//! (offline stand-in for criterion; `harness = false` in Cargo.toml).
+//!
+//! Reports min / median / mean / p95 over timed iterations after a warmup
+//! phase, plus derived throughput when the caller provides an items-per-iter
+//! count. Paper-reproduction benches use [`Bench::run`] for wallclock and
+//! print their table rows separately.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Stats {
+    /// items/second given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Measurement configuration.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1000),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick configuration for slow (multi-ms) bodies.
+    pub fn slow() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(2000),
+            max_iters: 200,
+        }
+    }
+
+    pub fn with_measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Measure `f`, printing and returning stats. The closure's return value
+    /// is passed through `std::hint::black_box` to keep the work alive.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0usize;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let begin = Instant::now();
+        while begin.elapsed() < self.measure && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        assert!(!samples_ns.is_empty(), "no samples collected for {name}");
+
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            min_ns: samples_ns[0],
+            median_ns: samples_ns[n / 2],
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p95_ns: samples_ns[((n as f64 * 0.95) as usize).min(n - 1)],
+        };
+        println!(
+            "bench {:<40} iters {:>6}  min {:>10}  median {:>10}  mean {:>10}  p95 {:>10}",
+            stats.name,
+            stats.iters,
+            fmt_ns(stats.min_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+        );
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_orders_stats() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            max_iters: 1000,
+        };
+        let mut acc = 0u64;
+        let stats = b.run("spin", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.iters > 0);
+        assert!(stats.min_ns <= stats.median_ns);
+        assert!(stats.median_ns <= stats.p95_ns);
+        assert!(stats.min_ns > 0.0);
+    }
+
+    #[test]
+    fn throughput_is_items_over_median() {
+        let s = Stats {
+            name: "t".into(),
+            iters: 1,
+            min_ns: 1e6,
+            median_ns: 1e6,
+            mean_ns: 1e6,
+            p95_ns: 1e6,
+        };
+        // 1000 items in 1 ms = 1M items/s
+        assert!((s.throughput(1000.0) - 1e6).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(12e9).ends_with("s"));
+    }
+}

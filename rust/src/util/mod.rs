@@ -1,0 +1,15 @@
+//! Substrate utilities built in-repo (the build environment is offline, so
+//! everything beyond the `xla` crate's closure is implemented here):
+//!
+//! * [`json`] — minimal JSON parser for the artifact manifest.
+//! * [`rng`] — SplitMix64 PRNG for workload generation and property tests.
+//! * [`prop`] — a small property-based testing harness.
+//! * [`bench`] — a criterion-style measurement harness for the bench
+//!   targets (`rust/benches/*`).
+//! * [`table`] — ASCII table rendering for the paper-reproduction reports.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

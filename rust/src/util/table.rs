@@ -1,0 +1,139 @@
+//! ASCII table rendering for paper-reproduction reports.
+//!
+//! Every `report`/bench target prints its rows through this module so
+//! Table 2 / Table 3 / the figure series all share one consistent format
+//! (and EXPERIMENTS.md can paste the output verbatim).
+
+/// A simple column-aligned table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with a separator under the header, columns padded to fit.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let cell = &cells[i];
+                line.push_str(cell);
+                for _ in cell.chars().count()..widths[i] {
+                    line.push(' ');
+                }
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `digits` significant-looking decimals, trimming
+/// trailing noise (`fmt_f(409.4, 1)` → `"409.4"`, `fmt_f(409.0, 1)` → `"409"`).
+pub fn fmt_f(v: f64, digits: usize) -> String {
+    let s = format!("{v:.digits$}");
+    if s.contains('.') {
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        s
+    }
+}
+
+/// Format a fraction as a percentage (`0.805` → `"80%"` with digits=0).
+pub fn fmt_pct(frac: f64, digits: usize) -> String {
+    format!("{}%", fmt_f(frac * 100.0, digits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["a", "long-header", "c"]);
+        t.row(vec!["1", "2", "3"]);
+        t.row(vec!["100", "x", "yyyy"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a    "));
+        assert!(lines[1].starts_with("---"));
+        // Columns align: "2" and "x" start at the same offset.
+        let c0 = lines[2].find('2').unwrap();
+        let c1 = lines[3].find('x').unwrap();
+        assert_eq!(c0, c1);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_f(409.44, 1), "409.4");
+        assert_eq!(fmt_f(409.0, 1), "409");
+        assert_eq!(fmt_f(0.5, 2), "0.5");
+        assert_eq!(fmt_pct(0.806, 0), "81%");
+        assert_eq!(fmt_pct(0.5, 1), "50%");
+    }
+
+    #[test]
+    fn empty_and_counts() {
+        let mut t = Table::new(vec!["x"]);
+        assert!(t.is_empty());
+        t.row(vec!["1"]);
+        assert_eq!(t.n_rows(), 1);
+    }
+}

@@ -1,0 +1,223 @@
+//! Integration tests across the PJRT boundary: every shipped artifact
+//! executes and matches the host reference; the tiled executor composes
+//! artifacts into arbitrary problem sizes.
+//!
+//! Requires `make artifacts` to have produced `artifacts/`; tests skip
+//! (with a note) when the directory is absent so the pure-Rust test
+//! suite still runs in isolation.
+
+use fcamm::datatype::Semiring;
+use fcamm::runtime::engine::HostTensor;
+use fcamm::runtime::Runtime;
+use fcamm::schedule::TiledExecutor;
+use fcamm::sim::exact::{reference_matmul, ExactSim};
+use fcamm::util::rng::Rng;
+
+fn open_runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: {} missing (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::open(dir).expect("opening artifacts"))
+}
+
+fn assert_close(actual: &[f32], expected: &[f32], tol: f32) {
+    assert_eq!(actual.len(), expected.len());
+    for (i, (a, e)) in actual.iter().zip(expected).enumerate() {
+        assert!((a - e).abs() <= tol * (1.0 + e.abs()), "index {i}: {a} vs {e}");
+    }
+}
+
+#[test]
+fn every_f32_matmul_artifact_matches_reference() {
+    let Some(rt) = open_runtime() else { return };
+    let mut rng = Rng::new(1);
+    for name in rt.artifact_names() {
+        let kernel = rt.kernel(&name).expect("compile");
+        let spec = &kernel.spec.clone();
+        if spec.dtype != "float32" {
+            continue;
+        }
+        let (m, n, k) = (spec.m, spec.n, spec.k);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let inputs: Vec<HostTensor> = match spec.op.as_str() {
+            "matmul" | "distance" => {
+                vec![HostTensor::F32(a.clone()), HostTensor::F32(b.clone())]
+            }
+            "matmul_at" => {
+                // A is stored transposed: build Aᵀ from a (here `a` is
+                // (k, m) directly per the manifest input shape).
+                vec![HostTensor::F32(a.clone()), HostTensor::F32(b.clone())]
+            }
+            "matmul_acc" => {
+                let c = rng.fill_normal_f32(m * n);
+                vec![HostTensor::F32(c), HostTensor::F32(a.clone()), HostTensor::F32(b.clone())]
+            }
+            other => panic!("unknown op {other}"),
+        };
+        let out = kernel.execute(&inputs).expect("execute");
+        let out = out.as_f32().expect("f32 output").to_vec();
+
+        // Host oracle per op.
+        let expected: Vec<f32> = match spec.op.as_str() {
+            "matmul" => reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k),
+            "distance" => reference_matmul(Semiring::MinPlus, &a, &b, m, n, k),
+            "matmul_at" => {
+                // inputs: at (k × m); compute (atᵀ)·b.
+                let mut at_t = vec![0f32; m * k];
+                for r in 0..k {
+                    for c in 0..m {
+                        at_t[c * k + r] = a[r * m + c];
+                    }
+                }
+                reference_matmul(Semiring::PlusTimes, &at_t, &b, m, n, k)
+            }
+            "matmul_acc" => {
+                let c0 = inputs[0].as_f32().unwrap();
+                reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k)
+                    .iter()
+                    .zip(c0)
+                    .map(|(p, c)| p + c)
+                    .collect()
+            }
+            _ => unreachable!(),
+        };
+        assert_close(&out, &expected, 2e-4);
+        println!("artifact {name}: OK ({m}x{n}x{k})");
+    }
+}
+
+#[test]
+fn integer_artifacts_are_exact() {
+    let Some(rt) = open_runtime() else { return };
+    let mut rng = Rng::new(5);
+    for (name, signed) in [("mmm_i32_128", true), ("mmm_u32_128", false)] {
+        let Ok(kernel) = rt.kernel(name) else {
+            eprintln!("skipping {name}: not in manifest");
+            continue;
+        };
+        let spec = kernel.spec.clone();
+        let (m, n, k) = (spec.m, spec.n, spec.k);
+        let a: Vec<i64> = (0..m * k).map(|_| rng.gen_range(0, 64) as i64).collect();
+        let b: Vec<i64> = (0..k * n).map(|_| rng.gen_range(0, 64) as i64).collect();
+        let inputs = if signed {
+            vec![
+                HostTensor::I32(a.iter().map(|&v| v as i32).collect()),
+                HostTensor::I32(b.iter().map(|&v| v as i32).collect()),
+            ]
+        } else {
+            vec![
+                HostTensor::U32(a.iter().map(|&v| v as u32).collect()),
+                HostTensor::U32(b.iter().map(|&v| v as u32).collect()),
+            ]
+        };
+        let out = kernel.execute(&inputs).expect("execute");
+        // Exact integer check against i64 accumulation.
+        for i in (0..m).step_by(37) {
+            for j in (0..n).step_by(41) {
+                let expected: i64 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                let got = match &out {
+                    HostTensor::I32(v) => v[i * n + j] as i64,
+                    HostTensor::U32(v) => v[i * n + j] as i64,
+                    other => panic!("unexpected dtype {:?}", other.dtype_name()),
+                };
+                assert_eq!(got, expected, "{name} at ({i},{j})");
+            }
+        }
+        println!("artifact {name}: exact");
+    }
+}
+
+#[test]
+fn f64_artifact_matches_reference() {
+    let Some(rt) = open_runtime() else { return };
+    let Ok(kernel) = rt.kernel("mmm_f64_128") else {
+        eprintln!("skipping: no f64 artifact");
+        return;
+    };
+    let spec = kernel.spec.clone();
+    let (m, n, k) = (spec.m, spec.n, spec.k);
+    let mut rng = Rng::new(6);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.next_f64() - 0.5).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.next_f64() - 0.5).collect();
+    let out = kernel
+        .execute(&[HostTensor::F64(a.clone()), HostTensor::F64(b.clone())])
+        .expect("execute");
+    let HostTensor::F64(out) = out else { panic!("expected f64") };
+    for i in (0..m).step_by(29) {
+        for j in (0..n).step_by(31) {
+            let expected: f64 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+            assert!((out[i * n + j] - expected).abs() < 1e-10, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn tiled_executor_matches_reference_and_exact_sim() {
+    let Some(rt) = open_runtime() else { return };
+    let exec = TiledExecutor::from_runtime(&rt).expect("executor");
+    let mut rng = Rng::new(7);
+    for (m, n, k) in [(128, 128, 128), (256, 192, 320), (100, 50, 75), (1, 1, 1), (129, 127, 130)] {
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let run = exec.matmul(&a, &b, m, n, k).expect("matmul");
+        let expected = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+        assert_close(&run.c, &expected, 2e-4);
+        assert_eq!(run.transfer_elements, run.plan.transfer_elements());
+        println!("executor {m}x{n}x{k}: {} steps OK", run.steps_executed);
+    }
+
+    // Against the exact hardware simulator on one aligned case: two
+    // *independent* implementations of the same schedule must agree.
+    let t = fcamm::model::tiling::TilingConfig {
+        x_c: 1, y_c: 4, x_p: 8, y_p: 1, x_t: 4, y_t: 8, x_b: 1, y_b: 1,
+    };
+    let (m, n, k) = (64usize, 64usize, 64usize);
+    let a = rng.fill_normal_f32(m * k);
+    let b = rng.fill_normal_f32(k * n);
+    let sim = ExactSim::new(t).run(&a, &b, m, n, k);
+    let run = exec.matmul(&a, &b, m, n, k).expect("matmul");
+    assert_close(&run.c, &sim.c, 2e-4);
+}
+
+#[test]
+fn executor_uses_smaller_artifact_when_requested() {
+    let Some(rt) = open_runtime() else { return };
+    let Ok(exec) = TiledExecutor::with_artifact(&rt, "mmm_acc_f32_64") else {
+        eprintln!("skipping: no 64-tile artifact");
+        return;
+    };
+    assert_eq!(exec.tile_shape(), (64, 64, 64));
+    let mut rng = Rng::new(8);
+    let (m, n, k) = (100usize, 80usize, 70usize);
+    let a = rng.fill_normal_f32(m * k);
+    let b = rng.fill_normal_f32(k * n);
+    let run = exec.matmul(&a, &b, m, n, k).expect("matmul");
+    let expected = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+    assert_close(&run.c, &expected, 2e-4);
+    assert_eq!(run.steps_executed, 2 * 2 * 2);
+}
+
+#[test]
+fn executor_rejects_non_accumulate_artifact() {
+    let Some(rt) = open_runtime() else { return };
+    let err = TiledExecutor::with_artifact(&rt, "mmm_f32_256");
+    assert!(err.is_err(), "matmul (non-acc) artifact must be rejected");
+}
+
+#[test]
+fn manifest_round_trip_from_disk() {
+    let Some(rt) = open_runtime() else { return };
+    assert!(rt.manifest.version == 1);
+    assert!(rt.manifest.find(&rt.manifest.default).is_some());
+    // All artifact files exist.
+    for a in &rt.manifest.artifacts {
+        assert!(
+            Runtime::default_dir().join(&a.file).exists(),
+            "artifact file {} missing",
+            a.file
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Integration tests for the Listing-2 schedule layer (planning +
+//! iteration-space coverage). PJRT execution is covered by
+//! `runtime_integration.rs`.
+
+use std::collections::HashSet;
+
+use fcamm::model::tiling::TilingConfig;
+use fcamm::schedule::loopnest::{memory_tiles, visits};
+use fcamm::schedule::TilePlan;
+use fcamm::util::prop::{check_n, small_biased};
+
+#[test]
+fn visits_cover_iteration_space_exactly_once() {
+    check_n("loopnest-coverage", 64, |rng| {
+        let t = TilingConfig {
+            x_c: 1,
+            y_c: small_biased(rng, 1, 4),
+            x_p: small_biased(rng, 1, 4),
+            y_p: 1,
+            x_t: small_biased(rng, 1, 4),
+            y_t: small_biased(rng, 1, 6),
+            x_b: 1,
+            y_b: 1,
+        };
+        let m = small_biased(rng, 1, 2 * t.x_tot());
+        let n = small_biased(rng, 1, 2 * t.y_tot());
+        let k = small_biased(rng, 1, 6);
+        let vs = visits(t, m, n, k);
+        assert_eq!(vs.len() as u64, m * n * k, "count {t} {m}x{n}x{k}");
+        let set: HashSet<_> = vs.iter().map(|v| (v.i, v.j, v.k)).collect();
+        assert_eq!(set.len() as u64, m * n * k, "duplicates {t}");
+        for v in &vs {
+            assert!(v.i < m && v.j < n && v.k < k);
+        }
+    });
+}
+
+#[test]
+fn visits_respect_tile_locality() {
+    check_n("loopnest-locality", 32, |rng| {
+        let t = TilingConfig {
+            x_c: 1,
+            y_c: small_biased(rng, 1, 3),
+            x_p: small_biased(rng, 1, 3),
+            y_p: 1,
+            x_t: small_biased(rng, 1, 3),
+            y_t: small_biased(rng, 1, 4),
+            x_b: 1,
+            y_b: 1,
+        };
+        let m = 2 * t.x_tot();
+        let n = 2 * t.y_tot();
+        let vs = visits(t, m, n, 3);
+        let tile_of = |i: u64, j: u64| (i / t.x_tot(), j / t.y_tot());
+        let mut order = Vec::new();
+        for v in &vs {
+            let tile = tile_of(v.i, v.j);
+            if order.last() != Some(&tile) {
+                assert!(!order.contains(&tile), "tile {tile:?} revisited");
+                order.push(tile);
+            }
+        }
+        assert_eq!(order.len(), 4);
+    });
+}
+
+#[test]
+fn memory_tiles_partition_c() {
+    check_n("memory-tiles-partition", 64, |rng| {
+        let t = TilingConfig {
+            x_c: 1,
+            y_c: small_biased(rng, 1, 4),
+            x_p: small_biased(rng, 1, 4),
+            y_p: 1,
+            x_t: small_biased(rng, 1, 4),
+            y_t: small_biased(rng, 1, 6),
+            x_b: 1,
+            y_b: 1,
+        };
+        let m = small_biased(rng, 1, 3 * t.x_tot());
+        let n = small_biased(rng, 1, 3 * t.y_tot());
+        let tiles = memory_tiles(t, m, n);
+        let covered: u64 = tiles.iter().map(|tile| tile.rows * tile.cols).sum();
+        assert_eq!(covered, m * n, "tiles must partition C exactly");
+        for tile in &tiles {
+            assert!(tile.rows >= 1 && tile.rows <= t.x_tot());
+            assert!(tile.cols >= 1 && tile.cols <= t.y_tot());
+            assert!(tile.row0 + tile.rows <= m);
+            assert!(tile.col0 + tile.cols <= n);
+        }
+    });
+}
+
+#[test]
+fn plan_covers_problem_for_random_shapes() {
+    check_n("plan-coverage", 96, |rng| {
+        let tile_m = small_biased(rng, 1, 64) as usize;
+        let tile_n = small_biased(rng, 1, 64) as usize;
+        let tile_k = small_biased(rng, 1, 64) as usize;
+        let m = small_biased(rng, 1, 200) as usize;
+        let n = small_biased(rng, 1, 200) as usize;
+        let k = small_biased(rng, 1, 200) as usize;
+        let plan = TilePlan::new(m, n, k, tile_m, tile_n, tile_k);
+        // Step count and clipping.
+        assert_eq!(
+            plan.n_steps(),
+            m.div_ceil(tile_m) * n.div_ceil(tile_n) * k.div_ceil(tile_k)
+        );
+        let mut rows_covered = 0usize;
+        for s in &plan.steps {
+            assert!(s.rows >= 1 && s.rows <= tile_m);
+            assert!(s.cols >= 1 && s.cols <= tile_n);
+            assert!(s.kdepth >= 1 && s.kdepth <= tile_k);
+            assert!(s.row0 + s.rows <= m);
+            assert!(s.col0 + s.cols <= n);
+            assert!(s.k0 + s.kdepth <= k);
+            if s.ks == 0 {
+                rows_covered += s.rows * s.cols;
+            }
+        }
+        assert_eq!(rows_covered, m * n, "first k-slabs must tile C");
+    });
+}
+
+#[test]
+fn plan_k_slabs_partition_k() {
+    check_n("plan-k-partition", 64, |rng| {
+        let tile = small_biased(rng, 1, 48) as usize;
+        let k = small_biased(rng, 1, 300) as usize;
+        let plan = TilePlan::new(50, 50, k, 64, 64, tile);
+        let covered: usize = plan
+            .steps
+            .iter()
+            .filter(|s| s.ti == 0 && s.tj == 0)
+            .map(|s| s.kdepth)
+            .sum();
+        assert_eq!(covered, k);
+    });
+}
+
+#[test]
+fn plan_is_tile_major() {
+    check_n("plan-tile-major", 32, |rng| {
+        let plan = TilePlan::new(
+            small_biased(rng, 40, 200) as usize,
+            small_biased(rng, 40, 200) as usize,
+            small_biased(rng, 40, 200) as usize,
+            32,
+            32,
+            32,
+        );
+        let mut seen = Vec::new();
+        for s in &plan.steps {
+            let t = (s.ti, s.tj);
+            if seen.last() != Some(&t) {
+                assert!(!seen.contains(&t), "tile {t:?} revisited");
+                seen.push(t);
+            }
+        }
+    });
+}

@@ -1,0 +1,181 @@
+//! Integration tests over the simulators: numerics, cross-fidelity
+//! agreement, semirings, topology collapse.
+
+use fcamm::datatype::Semiring;
+use fcamm::model::tiling::TilingConfig;
+use fcamm::sim::exact::{reference_matmul, ExactSim};
+use fcamm::sim::grid2d::collapse_to_1d;
+use fcamm::sim::simulate_timeline;
+use fcamm::util::prop::{check_n, small_biased};
+use fcamm::util::rng::Rng;
+
+fn random_chain_tiling(rng: &mut Rng) -> TilingConfig {
+    loop {
+        let t = TilingConfig {
+            x_c: 1,
+            y_c: small_biased(rng, 1, 6),
+            x_p: small_biased(rng, 1, 8),
+            y_p: 1,
+            x_t: small_biased(rng, 1, 6),
+            y_t: small_biased(rng, 1, 10),
+            x_b: 1,
+            y_b: 1,
+        };
+        if t.satisfies_pipeline_depth() {
+            return t;
+        }
+    }
+}
+
+fn assert_close(actual: &[f32], expected: &[f32], tol: f32) {
+    assert_eq!(actual.len(), expected.len());
+    for (i, (a, e)) in actual.iter().zip(expected).enumerate() {
+        assert!((a - e).abs() <= tol * (1.0 + e.abs()), "index {i}: {a} vs {e}");
+    }
+}
+
+#[test]
+fn exact_sim_numerics_random_sweep() {
+    check_n("exact-numerics", 48, |rng| {
+        let t = random_chain_tiling(rng);
+        let m = small_biased(rng, 1, 2 * t.x_tot()) as usize;
+        let n = small_biased(rng, 1, 2 * t.y_tot()) as usize;
+        let k = small_biased(rng, 1, 16) as usize;
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let run = ExactSim::new(t).run(&a, &b, m, n, k);
+        let expected = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+        assert_close(&run.c, &expected, 1e-4);
+    });
+}
+
+#[test]
+fn exact_equals_timeline_random_sweep() {
+    check_n("exact-vs-timeline", 48, |rng| {
+        let t = random_chain_tiling(rng);
+        let m = small_biased(rng, 1, 2 * t.x_tot());
+        let n = small_biased(rng, 1, 2 * t.y_tot());
+        let k = small_biased(rng, 1, 12);
+        let a = rng.fill_normal_f32((m * k) as usize);
+        let b = rng.fill_normal_f32((k * n) as usize);
+        let run = ExactSim::new(t).run(&a, &b, m as usize, n as usize, k as usize);
+        let timeline = simulate_timeline(t, m, n, k);
+        assert_eq!(run.report, timeline, "tiling {t} problem {m}x{n}x{k}");
+    });
+}
+
+#[test]
+fn min_plus_distance_product_random_sweep() {
+    check_n("min-plus", 24, |rng| {
+        let t = random_chain_tiling(rng);
+        let m = small_biased(rng, 1, t.x_tot()) as usize;
+        let n = small_biased(rng, 1, t.y_tot()) as usize;
+        let k = small_biased(rng, 1, 12) as usize;
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let sim = ExactSim::with_semiring(t, Semiring::MinPlus);
+        let run = sim.run(&a, &b, m, n, k);
+        let expected = reference_matmul(Semiring::MinPlus, &a, &b, m, n, k);
+        assert_close(&run.c, &expected, 1e-6);
+    });
+}
+
+#[test]
+fn all_pairs_shortest_paths_via_repeated_squaring() {
+    // Distance product applied log₂(V) times = all-pairs shortest paths —
+    // the paper's Sec.-5.2 flexibility claim exercised end-to-end on the
+    // simulated hardware.
+    let v = 8usize;
+    let inf = f32::INFINITY;
+    // Ring graph with one chord.
+    let mut adj = vec![inf; v * v];
+    for i in 0..v {
+        adj[i * v + i] = 0.0;
+        adj[i * v + (i + 1) % v] = 1.0;
+    }
+    adj[0 * v + 4] = 1.5; // chord 0 -> 4
+    let t = TilingConfig { x_c: 1, y_c: 2, x_p: 4, y_p: 1, x_t: 2, y_t: 4, x_b: 1, y_b: 1 };
+    let sim = ExactSim::with_semiring(t, Semiring::MinPlus);
+    let mut dist = adj.clone();
+    for _ in 0..3 {
+        // ceil(log2(8)) squarings
+        dist = sim.run(&dist, &dist, v, v, v).c;
+    }
+    // Floyd-Warshall reference.
+    let mut fw = adj;
+    for kk in 0..v {
+        for i in 0..v {
+            for j in 0..v {
+                let via = fw[i * v + kk] + fw[kk * v + j];
+                if via < fw[i * v + j] {
+                    fw[i * v + j] = via;
+                }
+            }
+        }
+    }
+    assert_close(&dist, &fw, 1e-6);
+    // The chord matters: 0 -> 5 goes through it.
+    assert_eq!(dist[0 * v + 5], 2.5);
+}
+
+#[test]
+fn collapse_2d_to_1d_preserves_results_and_compute() {
+    let t2d = TilingConfig { x_c: 2, y_c: 2, x_p: 2, y_p: 2, x_t: 2, y_t: 4, x_b: 1, y_b: 1 };
+    let t1d = collapse_to_1d(t2d);
+    assert!(t1d.is_1d_chain());
+    assert_eq!(t1d.n_compute_units(), t2d.n_compute_units());
+    assert_eq!(t1d.memory_tile_elements(), t2d.memory_tile_elements());
+
+    let (m, n, k) = (t2d.x_tot() as usize * 2, t2d.y_tot() as usize, 8usize);
+    let mut rng = Rng::new(33);
+    let a = rng.fill_normal_f32(m * k);
+    let b = rng.fill_normal_f32(k * n);
+    let run = ExactSim::new(t1d).run(&a, &b, m, n, k);
+    let expected = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+    assert_close(&run.c, &expected, 1e-4);
+
+    let r2d = simulate_timeline(t2d, m as u64, n as u64, k as u64);
+    let r1d = simulate_timeline(t1d, m as u64, n as u64, k as u64);
+    assert_eq!(r2d.compute_cycles, r1d.compute_cycles);
+    assert_eq!(r2d.q_elements(), r1d.q_elements());
+}
+
+#[test]
+fn fifo_high_water_bounded_by_column_size() {
+    check_n("fifo-bounds", 24, |rng| {
+        let t = random_chain_tiling(rng);
+        let m = small_biased(rng, 1, 2 * t.x_tot()) as usize;
+        let n = small_biased(rng, 1, 2 * t.y_tot()) as usize;
+        let k = small_biased(rng, 1, 8) as usize;
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let run = ExactSim::new(t).run(&a, &b, m, n, k);
+        // Sec. 4.3's sizing: one A column / one B row suffices.
+        assert!(run.transpose_fifo_high_water <= t.x_tot() as usize);
+        assert!(run.feed_b_high_water <= t.y_tot() as usize);
+    });
+}
+
+#[test]
+fn degenerate_single_pe_chain() {
+    // x_p = 1, y_c = 1: a single compute unit — the smallest instance of
+    // the architecture still computes correctly.
+    let t = TilingConfig { x_c: 1, y_c: 1, x_p: 1, y_p: 1, x_t: 2, y_t: 2, x_b: 1, y_b: 1 };
+    let mut rng = Rng::new(44);
+    let (m, n, k) = (5usize, 3usize, 4usize);
+    let a = rng.fill_normal_f32(m * k);
+    let b = rng.fill_normal_f32(k * n);
+    let run = ExactSim::new(t).run(&a, &b, m, n, k);
+    let expected = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+    assert_close(&run.c, &expected, 1e-5);
+    assert_eq!(run.report.useful_madds, (m * n * k) as u64);
+}
+
+#[test]
+fn large_k_drain_negligible() {
+    let t = TilingConfig { x_c: 1, y_c: 4, x_p: 4, y_p: 1, x_t: 4, y_t: 8, x_b: 1, y_b: 1 };
+    let sim = simulate_timeline(t, t.x_tot(), t.y_tot(), 4096);
+    let eff = sim.compute_efficiency(t.n_compute_units());
+    // k/(k + x_p) = 4096/4100 ≈ 0.999.
+    assert!(eff > 0.99, "{eff}");
+}
