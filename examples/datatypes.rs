@@ -7,7 +7,7 @@
 //!
 //! Run: `cargo run --release --example datatypes`
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use fcamm::coordinator::{build_kernel, BuildOutcome};
 use fcamm::datatype::DataType;
 use fcamm::device::catalog::vcu1525;
@@ -50,8 +50,9 @@ fn main() -> Result<()> {
     print!("{}", table.render());
 
     // --- Runtime: type-generic execution through PJRT.
-    let rt = Runtime::open(Runtime::default_dir())
-        .context("artifacts missing — run `make artifacts` first")?;
+    // Generated PJRT artifacts when present, the built-in native
+    // host-reference backend otherwise.
+    let rt = Runtime::open_or_native(Runtime::default_dir())?;
     let mut rng = Rng::new(99);
 
     // Exact unsigned 32-bit matmul.

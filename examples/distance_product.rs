@@ -11,7 +11,7 @@
 //!
 //! Run: `cargo run --release --example distance_product`
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use fcamm::datatype::Semiring;
 use fcamm::model::tiling::TilingConfig;
 use fcamm::runtime::engine::HostTensor;
@@ -83,8 +83,9 @@ fn main() -> Result<()> {
     );
 
     // 3. PJRT: the min-plus Pallas artifact.
-    let rt = Runtime::open(Runtime::default_dir())
-        .context("artifacts missing — run `make artifacts` first")?;
+    // Generated PJRT artifacts when present, the built-in native
+    // host-reference backend otherwise.
+    let rt = Runtime::open_or_native(Runtime::default_dir())?;
     let kernel = rt.kernel("dist_f32_128")?;
     let mut d_rt = adj;
     let t0 = std::time::Instant::now();

@@ -15,7 +15,7 @@
 //!
 //! Run: `cargo run --release --example e2e`
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use fcamm::coordinator::{build_kernel, BuildOutcome};
 use fcamm::datatype::{DataType, Semiring};
 use fcamm::device::catalog::vcu1525;
@@ -79,8 +79,9 @@ fn main() -> Result<()> {
     );
 
     // ---------- 3. Real numerics through the full stack ---------------
-    let rt = Runtime::open(Runtime::default_dir())
-        .context("artifacts missing — run `make artifacts` first")?;
+    // Generated PJRT artifacts when present, the built-in native
+    // host-reference backend otherwise.
+    let rt = Runtime::open_or_native(Runtime::default_dir())?;
     println!("\n[3/4] execute 512³ via Pallas->HLO->PJRT (platform: {}):", rt.engine().platform());
     let exec = TiledExecutor::from_runtime(&rt)?;
     let size = 512usize;

@@ -20,7 +20,7 @@ use std::time::Instant;
 fn main() -> Result<()> {
     let workers = std::thread::available_parallelism().map(|p| p.get().min(4)).unwrap_or(2);
     let service = GemmService::start(Runtime::default_dir(), workers)?;
-    println!("gemm service up: {workers} workers (one PJRT runtime each)");
+    println!("gemm service up: {workers} workers (one private runtime + queue each)");
 
     let mut rng = Rng::new(31337);
     let sizes = [96usize, 128, 160, 200, 256];
@@ -73,8 +73,31 @@ fn main() -> Result<()> {
         q_naive * 4.0 / 1e6
     );
 
+    // Burst mode: a batch of small GEMMs submitted in one call is spread
+    // least-loaded across the worker pool with one queue message per
+    // worker (channel overhead amortized over the burst).
+    let burst = 32;
+    let t1 = Instant::now();
+    let jobs: Vec<_> = (0..burst)
+        .map(|_| {
+            let s = 64usize;
+            (s, s, s, rng.fill_normal_f32(s * s), rng.fill_normal_f32(s * s))
+        })
+        .collect();
+    let (rx, _base_id, count) = service.submit_batch(jobs);
+    let mut batch_transfer = 0u64;
+    for _ in 0..count {
+        let resp = rx.recv().expect("service alive")?;
+        batch_transfer += resp.transfer_elements;
+    }
+    println!(
+        "\nburst of {count} 64³ GEMMs in {:?} ({} elements shipped total)",
+        t1.elapsed(),
+        batch_transfer
+    );
+
     let done = service.stats.completed.load(std::sync::atomic::Ordering::Relaxed);
-    assert_eq!(done, n_requests as u64);
+    assert_eq!(done, n_requests as u64 + burst as u64);
     service.shutdown();
     println!("\ngemm_service OK");
     Ok(())

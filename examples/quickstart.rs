@@ -8,7 +8,7 @@
 //!
 //! Run (after `make artifacts`): `cargo run --release --example quickstart`
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use fcamm::coordinator::{build_kernel, BuildOutcome};
 use fcamm::datatype::DataType;
 use fcamm::device::catalog::vcu1525;
@@ -45,8 +45,9 @@ fn main() -> Result<()> {
     );
 
     // --- 3. Runtime: real numerics through Pallas → HLO → PJRT.
-    let rt = Runtime::open(Runtime::default_dir())
-        .context("artifacts missing — run `make artifacts` first")?;
+    // Generated PJRT artifacts when present, the built-in native
+    // host-reference backend otherwise.
+    let rt = Runtime::open_or_native(Runtime::default_dir())?;
     let exec = TiledExecutor::from_runtime(&rt)?;
     let size = 256usize;
     let mut rng = Rng::new(2024);

@@ -2,7 +2,16 @@
 //! (EXPERIMENTS.md). Not a paper figure — this is the repo's own
 //! performance harness.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath` (add `-- --quick` for the
+//! pre-merge gate). Results are printed and written machine-readable to
+//! `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
+//!
+//! The executor section compares the seed schedule (pack everything every
+//! step, C round-trip per k-slab — `ExecMode::Roundtrip`) against the
+//! communication-avoiding path (host-resident accumulator, slab reuse,
+//! double buffering — `ExecMode::Reuse`), plus a kernel-free pack/plan
+//! microbench isolating the pure host-side packing cost of the two
+//! schedules.
 
 use fcamm::datatype::DataType;
 use fcamm::device::catalog::vcu1525;
@@ -10,39 +19,43 @@ use fcamm::model::selection::{derive_tiling, select_parameters, SelectionOptions
 use fcamm::model::tiling::TilingConfig;
 use fcamm::model::{compute, io};
 use fcamm::runtime::Runtime;
+use fcamm::schedule::executor::{pack_a_slab, pack_b_slab};
 use fcamm::schedule::loopnest;
-use fcamm::schedule::TiledExecutor;
+use fcamm::schedule::{order, ExecMode, Order, TiledExecutor, TilePlan};
 use fcamm::sim::exact::ExactSim;
 use fcamm::sim::simulate_timeline;
-use fcamm::util::bench::Bench;
+use fcamm::util::bench::{self, Bench, Stats};
 use fcamm::util::rng::Rng;
 
 fn main() {
     let device = vcu1525();
-    let bench = Bench::new();
+    let quick = Bench::quick_requested();
+    let bench = Bench::new().maybe_quick();
+    let mut all: Vec<Stats> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
 
     // --- L3 model / simulator hot paths ------------------------------
     let paper = TilingConfig { x_c: 1, y_c: 8, x_p: 192, y_p: 1, x_t: 5, y_t: 204, x_b: 1, y_b: 1 };
-    bench.run("timeline sim 16384^3", || {
+    all.push(bench.run("timeline sim 16384^3", || {
         simulate_timeline(paper, 16384, 16384, 16384).total_cycles()
-    });
-    bench.run("timeline sim ragged 10000x9999x8191", || {
+    }));
+    all.push(bench.run("timeline sim ragged 10000x9999x8191", || {
         simulate_timeline(paper, 10_000, 9_999, 8_191).total_cycles()
-    });
-    bench.run("q_elements_hardware 16384^3", || {
+    }));
+    all.push(bench.run("q_elements_hardware 16384^3", || {
         io::q_elements_hardware(paper, 16384, 16384, 16384)
-    });
-    bench.run("total_cycles 16384^3", || compute::total_cycles(paper, 16384, 16384, 16384));
+    }));
+    all.push(bench.run("total_cycles 16384^3", || compute::total_cycles(paper, 16384, 16384, 16384)));
 
-    bench.run("derive_tiling x_p=192", || {
+    all.push(bench.run("derive_tiling x_p=192", || {
         derive_tiling(&device, DataType::F32, 192, 8).unwrap()
-    });
-    bench.run("best_tile_shape S=1.5M", || {
+    }));
+    all.push(bench.run("best_tile_shape S=1.5M", || {
         io::best_tile_shape(1_572_864, 192, 8).unwrap()
-    });
-    bench.run("select_parameters FP32 (full flow)", || {
+    }));
+    all.push(bench.run("select_parameters FP32 (full flow)", || {
         select_parameters(device, DataType::F32, SelectionOptions::default()).unwrap()
-    });
+    }));
 
     // Element-level simulator (real data movement).
     let t_small = TilingConfig { x_c: 1, y_c: 4, x_p: 8, y_p: 1, x_t: 4, y_t: 8, x_b: 1, y_b: 1 };
@@ -51,28 +64,151 @@ fn main() {
     let a = rng.fill_normal_f32(m * k);
     let b = rng.fill_normal_f32(k * n);
     let sim = ExactSim::new(t_small);
-    bench.run("exact sim 64^3 (N_c=32)", || sim.run(&a, &b, m, n, k).report.total_cycles());
+    all.push(bench.run("exact sim 64^3 (N_c=32)", || sim.run(&a, &b, m, n, k).report.total_cycles()));
 
     // Loop-nest enumeration (invariant-test machinery).
-    bench.run("loopnest visits 32x32x8", || loopnest::visits(t_small, 32, 32, 8).len());
+    all.push(bench.run("loopnest visits 32x32x8", || loopnest::visits(t_small, 32, 32, 8).len()));
 
-    // --- Runtime (PJRT) hot path --------------------------------------
-    let dir = Runtime::default_dir();
-    if dir.join("manifest.json").exists() {
-        let rt = Runtime::open(dir).expect("runtime");
+    // --- Schedule: plan generation + order selection -------------------
+    all.push(bench.run("plan+select order 4096x4096x4096 /128", || {
+        TilePlan::auto(4096, 4096, 4096, 128, 128, 128).n_steps()
+    }));
+
+    // --- Pack/plan microbench: host-side packing cost, old vs new ------
+    // The seed packed both slabs from scratch (full zero-fill + copy) on
+    // every step; the reuse path packs only when the plan's flags say the
+    // slab changed and zero-fills only ragged slabs. Kernel execution is
+    // deliberately excluded: this isolates the communication-avoiding
+    // schedule's own cost.
+    {
+        let (pm, pn, pk) = (512usize, 384usize, 256usize);
+        let (tm, tn, tk) = (128usize, 128usize, 128usize);
+        let pa = rng.fill_normal_f32(pm * pk);
+        let pb = rng.fill_normal_f32(pk * pn);
+        let plan_tm = TilePlan::with_order(pm, pn, pk, tm, tn, tk, Order::TileMajor);
+        let sel = Order::select(pm, pn, pk, tm, tn, tk);
+        let plan_sel = TilePlan::with_order(pm, pn, pk, tm, tn, tk, sel);
+        let mut a_slab = vec![0f32; tm * tk];
+        let mut b_slab = vec![0f32; tk * tn];
+
+        let old = bench.run("pack loop 512x384x256 (seed: fill+pack every step)", || {
+            let mut sink = 0f32;
+            for step in &plan_tm.steps {
+                a_slab.fill(0.0);
+                for r in 0..step.rows {
+                    let src = (step.row0 + r) * pk + step.k0;
+                    a_slab[r * tk..r * tk + step.kdepth]
+                        .copy_from_slice(&pa[src..src + step.kdepth]);
+                }
+                b_slab.fill(0.0);
+                for kk in 0..step.kdepth {
+                    let src = (step.k0 + kk) * pn + step.col0;
+                    b_slab[kk * tn..kk * tn + step.cols]
+                        .copy_from_slice(&pb[src..src + step.cols]);
+                }
+                sink += a_slab[0] + b_slab[0];
+            }
+            sink
+        });
+        let new = bench.run("pack loop 512x384x256 (reuse flags + fill skip)", || {
+            let mut sink = 0f32;
+            for step in &plan_sel.steps {
+                if !step.reuse_a {
+                    pack_a_slab(&mut a_slab, &pa, step, pk, tm, tk);
+                }
+                if !step.reuse_b {
+                    pack_b_slab(&mut b_slab, &pb, step, pn, tk, tn);
+                }
+                sink += a_slab[0] + b_slab[0];
+            }
+            sink
+        });
+        let speedup = old.median_ns / new.median_ns;
+        println!(
+            "pack/plan microbench: {:.2}x faster ({} order), {} -> {} slab ships",
+            speedup,
+            sel.name(),
+            plan_tm.n_steps() * 2,
+            plan_sel.steps.iter().filter(|s| !s.reuse_a).count()
+                + plan_sel.steps.iter().filter(|s| !s.reuse_b).count(),
+        );
+        metrics.push(("pack_loop_speedup".to_string(), speedup));
+        all.push(old);
+        all.push(new);
+    }
+
+    // --- Transfer model: communication avoided by order selection ------
+    // Non-square shape where a sweep order strictly beats tile-major.
+    {
+        let (qm, qn, qk) = (256usize, 512usize, 256usize);
+        let sel = Order::select(qm, qn, qk, 128, 128, 128);
+        let t_tile_major =
+            TilePlan::with_order(qm, qn, qk, 128, 128, 128, Order::TileMajor).transfer_elements();
+        let t_selected = TilePlan::with_order(qm, qn, qk, 128, 128, 128, sel).transfer_elements();
+        let t_naive = order::host_traffic_naive(qm, qn, qk, 128, 128, 128);
+        println!(
+            "transfer model 256x512x256: naive {t_naive}, tile-major {t_tile_major}, {} {t_selected} ({:.1}% of naive)",
+            sel.name(),
+            100.0 * t_selected as f64 / t_naive as f64
+        );
+        metrics.push(("transfer_elements_naive_256x512x256".to_string(), t_naive as f64));
+        metrics.push(("transfer_elements_tile_major_256x512x256".to_string(), t_tile_major as f64));
+        metrics.push(("transfer_elements_selected_256x512x256".to_string(), t_selected as f64));
+        assert!(
+            t_selected < t_tile_major,
+            "selected order must strictly beat tile-major on a non-square shape"
+        );
+    }
+
+    // --- Runtime hot path: seed round-trip vs reuse executor -----------
+    // Uses generated PJRT artifacts when present, the native
+    // host-reference backend otherwise — the schedule comparison is the
+    // same either way.
+    {
+        let rt = Runtime::open_or_native(Runtime::default_dir()).expect("runtime");
+        println!(
+            "runtime backend: {}{}",
+            rt.engine().platform(),
+            if rt.is_native() { " (no artifacts dir)" } else { "" }
+        );
         let exec = TiledExecutor::from_runtime(&rt).expect("executor");
         let a256 = rng.fill_normal_f32(256 * 256);
         let b256 = rng.fill_normal_f32(256 * 256);
-        let slow = Bench::slow();
-        slow.run("pjrt tiled matmul 256^3 (8 steps)", || {
+        let slow = Bench::slow().maybe_quick();
+        let old = slow.run("tiled matmul 256^3 (seed: roundtrip)", || {
+            exec.matmul_with(&a256, &b256, 256, 256, 256, Order::TileMajor, ExecMode::Roundtrip)
+                .unwrap()
+                .steps_executed
+        });
+        let new = slow.run("tiled matmul 256^3 (reuse + double-buffer)", || {
             exec.matmul(&a256, &b256, 256, 256, 256).unwrap().steps_executed
         });
+        let speedup = old.median_ns / new.median_ns;
+        let run_old = exec
+            .matmul_with(&a256, &b256, 256, 256, 256, Order::TileMajor, ExecMode::Roundtrip)
+            .unwrap();
+        let run_new = exec.matmul(&a256, &b256, 256, 256, 256).unwrap();
+        println!(
+            "matmul 256^3: {:.2}x throughput vs seed path; transfers {} -> {} elements ({} order)",
+            speedup,
+            run_old.transfer_elements,
+            run_new.transfer_elements,
+            run_new.order.name()
+        );
+        metrics.push(("matmul256_speedup_vs_roundtrip".to_string(), speedup));
+        metrics.push(("matmul256_transfer_roundtrip".to_string(), run_old.transfer_elements as f64));
+        metrics.push(("matmul256_transfer_reuse".to_string(), run_new.transfer_elements as f64));
+        all.push(old);
+        all.push(new);
+
         let a128 = rng.fill_normal_f32(128 * 128);
         let b128 = rng.fill_normal_f32(128 * 128);
-        slow.run("pjrt tiled matmul 128^3 (1 step)", || {
+        all.push(slow.run("tiled matmul 128^3 (1 step)", || {
             exec.matmul(&a128, &b128, 128, 128, 128).unwrap().steps_executed
-        });
-    } else {
-        println!("(artifacts missing — skipping PJRT hot-path benches)");
+        }));
     }
+
+    let out = std::path::Path::new("BENCH_hotpath.json");
+    bench::write_json(out, "hotpath", quick, &all, &metrics).expect("writing BENCH_hotpath.json");
+    println!("wrote {} ({} entries, {} metrics)", out.display(), all.len(), metrics.len());
 }

@@ -3,20 +3,30 @@
 //! "MMM is typically used as a component of larger applications, where it
 //! co-exists with … memory bound operations, which benefit from a larger
 //! share of the bandwidth" (Sec. 1). This service is that component: a
-//! multi-worker request loop in front of the PJRT runtime, executing
-//! GEMMs through the communication-avoiding tiled schedule, with
-//! per-request latency and aggregate throughput accounting.
+//! multi-worker request loop in front of the runtime, executing GEMMs
+//! through the communication-avoiding tiled schedule, with per-request
+//! latency and aggregate throughput accounting.
+//!
+//! Dispatch design: each worker owns a **private queue** (the seed's
+//! single shared `Mutex<Receiver>` serialized every dispatch behind one
+//! lock — the host-side equivalent of all kernel instances sharing one
+//! DDR port). The submitter picks the least-loaded worker (ties broken
+//! round-robin), so dispatch is wait-free on the worker side and bursts
+//! spread across the pool. [`GemmService::submit_batch`] enqueues a burst
+//! of small GEMMs with one channel round-trip per worker instead of one
+//! per request.
 //!
 //! Built on std threads + channels (the offline environment provides no
 //! tokio; a thread-per-worker pool is also the more faithful analogue of
 //! fixed hardware kernel instances on an FPGA). PJRT client handles are
-//! not `Send` (the `xla` crate wraps `Rc` internals), so each worker owns
-//! a *private* runtime — mirroring one compiled kernel instance per
-//! hardware partition.
+//! not `Send`, so each worker owns a *private* runtime — mirroring one
+//! compiled kernel instance per hardware partition. Without generated
+//! artifacts the workers fall back to the native host-reference runtime,
+//! so the service runs end-to-end in any environment.
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -42,14 +52,17 @@ pub struct GemmResponse {
     pub id: u64,
     pub c: Vec<f32>,
     pub latency: Duration,
-    /// PJRT invocations performed for this request.
+    /// Artifact invocations performed for this request.
     pub steps: usize,
+    /// Elements shipped across the host↔device boundary (measured).
+    pub transfer_elements: u64,
     /// Worker that served the request.
     pub worker: usize,
 }
 
 enum Job {
     Run(GemmRequest, mpsc::Sender<Result<GemmResponse>>),
+    Batch(Vec<GemmRequest>, mpsc::Sender<Result<GemmResponse>>),
     Shutdown,
 }
 
@@ -60,36 +73,92 @@ pub struct ServiceStats {
     pub failed: AtomicU64,
     pub total_steps: AtomicU64,
     pub total_madds: AtomicU64,
+    pub total_transfer_elements: AtomicU64,
 }
 
-/// A pool of workers, each owning a private PJRT runtime over the same
-/// artifacts directory.
-pub struct GemmService {
+/// Dispatch weight of one request: pending *work*, not request count,
+/// so a burst of small GEMMs is not queued behind one giant one.
+fn work_units(m: usize, n: usize, k: usize) -> u64 {
+    ((m * n * k) as u64).max(1)
+}
+
+struct WorkerHandle {
+    /// Private queue into this worker. `Mutex` only guards concurrent
+    /// submitters hitting the *same* worker; workers never contend.
     tx: Mutex<mpsc::Sender<Job>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Work units (madds) submitted but not yet completed on this worker.
+    pending: Arc<AtomicU64>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// A pool of workers, each owning a private runtime over the same
+/// artifacts directory (or the native fallback) and a private job queue.
+pub struct GemmService {
+    workers: Vec<WorkerHandle>,
+    /// Rotation cursor for tie-breaking among equally loaded workers.
+    rr: AtomicUsize,
     pub stats: Arc<ServiceStats>,
     next_id: AtomicU64,
 }
 
+fn serve_one(
+    exec: &TiledExecutor,
+    stats: &ServiceStats,
+    worker_id: usize,
+    req: GemmRequest,
+    reply: &mpsc::Sender<Result<GemmResponse>>,
+) {
+    let t0 = Instant::now();
+    let result = exec.matmul(&req.a, &req.b, req.m, req.n, req.k);
+    let out = match result {
+        Ok(run) => {
+            stats.completed.fetch_add(1, Ordering::Relaxed);
+            stats
+                .total_steps
+                .fetch_add(run.steps_executed as u64, Ordering::Relaxed);
+            stats
+                .total_madds
+                .fetch_add((req.m * req.n * req.k) as u64, Ordering::Relaxed);
+            stats
+                .total_transfer_elements
+                .fetch_add(run.transfer_elements, Ordering::Relaxed);
+            Ok(GemmResponse {
+                id: req.id,
+                c: run.c,
+                latency: t0.elapsed(),
+                steps: run.steps_executed,
+                transfer_elements: run.transfer_elements,
+                worker: worker_id,
+            })
+        }
+        Err(e) => {
+            stats.failed.fetch_add(1, Ordering::Relaxed);
+            Err(e)
+        }
+    };
+    let _ = reply.send(out);
+}
+
 impl GemmService {
-    /// Start `n_workers` workers over `artifacts_dir`. Blocks until every
-    /// worker has compiled its executable (so first-request latency is
+    /// Start `n_workers` workers over `artifacts_dir` (native fallback
+    /// when the directory holds no manifest). Blocks until every worker
+    /// has compiled its executable (so first-request latency is
     /// steady-state).
     pub fn start(artifacts_dir: PathBuf, n_workers: usize) -> Result<GemmService> {
         assert!(n_workers >= 1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let stats = Arc::new(ServiceStats::default());
         let mut workers = Vec::new();
         for worker_id in 0..n_workers {
-            let rx = rx.clone();
+            let (tx, rx) = mpsc::channel::<Job>();
+            let pending = Arc::new(AtomicU64::new(0));
+            let worker_pending = pending.clone();
             let stats = stats.clone();
             let ready = ready_tx.clone();
             let dir = artifacts_dir.clone();
-            workers.push(std::thread::spawn(move || {
+            let join = std::thread::spawn(move || {
                 // Per-worker runtime: PJRT handles are not Send.
-                let exec = match Runtime::open(&dir)
+                let exec = match Runtime::open_or_native(&dir)
                     .and_then(|rt| TiledExecutor::from_runtime(&rt))
                 {
                     Ok(exec) => {
@@ -102,40 +171,24 @@ impl GemmService {
                     }
                 };
                 loop {
-                    let job = { rx.lock().unwrap().recv() };
-                    match job {
+                    match rx.recv() {
                         Ok(Job::Run(req, reply)) => {
-                            let t0 = Instant::now();
-                            let result = exec.matmul(&req.a, &req.b, req.m, req.n, req.k);
-                            let out = match result {
-                                Ok(run) => {
-                                    stats.completed.fetch_add(1, Ordering::Relaxed);
-                                    stats
-                                        .total_steps
-                                        .fetch_add(run.steps_executed as u64, Ordering::Relaxed);
-                                    stats.total_madds.fetch_add(
-                                        (req.m * req.n * req.k) as u64,
-                                        Ordering::Relaxed,
-                                    );
-                                    Ok(GemmResponse {
-                                        id: req.id,
-                                        c: run.c,
-                                        latency: t0.elapsed(),
-                                        steps: run.steps_executed,
-                                        worker: worker_id,
-                                    })
-                                }
-                                Err(e) => {
-                                    stats.failed.fetch_add(1, Ordering::Relaxed);
-                                    Err(e)
-                                }
-                            };
-                            let _ = reply.send(out);
+                            let w = work_units(req.m, req.n, req.k);
+                            serve_one(&exec, &stats, worker_id, req, &reply);
+                            worker_pending.fetch_sub(w, Ordering::Relaxed);
+                        }
+                        Ok(Job::Batch(reqs, reply)) => {
+                            for req in reqs {
+                                let w = work_units(req.m, req.n, req.k);
+                                serve_one(&exec, &stats, worker_id, req, &reply);
+                                worker_pending.fetch_sub(w, Ordering::Relaxed);
+                            }
                         }
                         Ok(Job::Shutdown) | Err(_) => break,
                     }
                 }
-            }));
+            });
+            workers.push(WorkerHandle { tx: Mutex::new(tx), pending, join: Some(join) });
         }
         drop(ready_tx);
         for _ in 0..n_workers {
@@ -144,7 +197,40 @@ impl GemmService {
                 .context("worker died during startup")?
                 .context("worker failed to initialize")?;
         }
-        Ok(GemmService { tx: Mutex::new(tx), workers, stats, next_id: AtomicU64::new(0) })
+        Ok(GemmService {
+            workers,
+            rr: AtomicUsize::new(0),
+            stats,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Least-loaded worker by pending work units; ties broken by a
+    /// rotating cursor so equally idle workers are used round-robin.
+    fn pick_worker(&self) -> usize {
+        let n = self.workers.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_pending = self.workers[start].pending.load(Ordering::Relaxed);
+        for off in 1..n {
+            let idx = (start + off) % n;
+            let p = self.workers[idx].pending.load(Ordering::Relaxed);
+            if p < best_pending {
+                best = idx;
+                best_pending = p;
+            }
+        }
+        best
+    }
+
+    fn enqueue(&self, worker: usize, job: Job, weight: u64) {
+        let w = &self.workers[worker];
+        w.pending.fetch_add(weight, Ordering::Relaxed);
+        w.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .expect("service workers gone");
     }
 
     /// Submit a job; returns a receiver for the response.
@@ -158,13 +244,56 @@ impl GemmService {
     ) -> mpsc::Receiver<Result<GemmResponse>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
+        let weight = work_units(m, n, k);
         let req = GemmRequest { id, m, n, k, a, b };
-        self.tx
-            .lock()
-            .unwrap()
-            .send(Job::Run(req, reply_tx))
-            .expect("service workers gone");
+        let worker = self.pick_worker();
+        self.enqueue(worker, Job::Run(req, reply_tx), weight);
         reply_rx
+    }
+
+    /// Submit a burst of GEMMs in one go: jobs are spread over the pool
+    /// (least-loaded first) and each worker receives its whole share as a
+    /// single queue message, amortizing channel overhead for many small
+    /// requests. Returns a receiver yielding one response per job (in
+    /// completion order — match by `GemmResponse::id`, which counts up
+    /// from the returned base id) and the number of jobs submitted.
+    pub fn submit_batch(
+        &self,
+        jobs: Vec<(usize, usize, usize, Vec<f32>, Vec<f32>)>,
+    ) -> (mpsc::Receiver<Result<GemmResponse>>, u64, usize) {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let count = jobs.len();
+        let base_id = self.next_id.fetch_add(count as u64, Ordering::Relaxed);
+        let mut shares: Vec<Vec<GemmRequest>> = (0..self.workers.len()).map(|_| Vec::new()).collect();
+        let mut share_weights: Vec<u64> = vec![0; self.workers.len()];
+        for (i, (m, n, k, a, b)) in jobs.into_iter().enumerate() {
+            let weight = work_units(m, n, k);
+            let req = GemmRequest { id: base_id + i as u64, m, n, k, a, b };
+            // Least-loaded by pending work *plus* the share built so far
+            // (worker counters don't move until the shares are enqueued
+            // below).
+            let start = self.rr.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+            let mut best = start;
+            let mut best_pending = u64::MAX;
+            for off in 0..self.workers.len() {
+                let idx = (start + off) % self.workers.len();
+                let p = self.workers[idx].pending.load(Ordering::Relaxed) + share_weights[idx];
+                if p < best_pending {
+                    best = idx;
+                    best_pending = p;
+                }
+            }
+            shares[best].push(req);
+            share_weights[best] += weight;
+        }
+        for (worker, share) in shares.into_iter().enumerate() {
+            if share.is_empty() {
+                continue;
+            }
+            self.enqueue(worker, Job::Batch(share, reply_tx.clone()), share_weights[worker]);
+        }
+        drop(reply_tx);
+        (reply_rx, base_id, count)
     }
 
     /// Convenience: submit and wait.
@@ -181,25 +310,38 @@ impl GemmService {
             .context("service dropped the request")?
     }
 
+    /// Number of workers in the pool.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Pending work units per worker (submitted, not yet completed).
+    pub fn pending_work(&self) -> Vec<u64> {
+        self.workers
+            .iter()
+            .map(|w| w.pending.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    fn send_shutdown(&self) {
+        for w in &self.workers {
+            let _ = w.tx.lock().unwrap().send(Job::Shutdown);
+        }
+    }
+
     /// Stop accepting work and join the workers.
     pub fn shutdown(mut self) {
-        {
-            let tx = self.tx.lock().unwrap();
-            for _ in 0..self.workers.len() {
-                let _ = tx.send(Job::Shutdown);
+        self.send_shutdown();
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
             }
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
         }
     }
 }
 
 impl Drop for GemmService {
     fn drop(&mut self) {
-        let tx = self.tx.lock().unwrap();
-        for _ in 0..self.workers.len() {
-            let _ = tx.send(Job::Shutdown);
-        }
+        self.send_shutdown();
     }
 }

@@ -9,8 +9,10 @@
 //!                                    regenerate a paper table/figure
 //! fcamm simulate --size N [--dtype FP32]
 //!                                    timeline-simulate the selected kernel
-//! fcamm run --size N [--artifacts DIR]
-//!                                    execute a real GEMM via PJRT
+//! fcamm run --size N [--artifacts DIR] [--order auto|tile|arow|bcol]
+//!           [--mode reuse|roundtrip]
+//!                                    execute a real GEMM (PJRT artifacts
+//!                                    when present, native backend else)
 //! fcamm verify [--artifacts DIR]     run the cross-layer verification matrix
 //! fcamm service --requests N [--workers W]
 //!                                    demo the GEMM service
@@ -24,7 +26,7 @@ use fcamm::datatype::DataType;
 use fcamm::device::catalog::{all_devices, find_device, vcu1525, Device};
 use fcamm::model::selection::SelectionOptions;
 use fcamm::runtime::Runtime;
-use fcamm::schedule::TiledExecutor;
+use fcamm::schedule::{ExecMode, Order, TiledExecutor};
 use fcamm::sim::simulate_timeline;
 use fcamm::util::rng::Rng;
 use fcamm::util::table::{fmt_f, fmt_pct, Table};
@@ -253,22 +255,39 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let size = args.usize_flag("--size", 256)?;
-    let rt = Runtime::open(args.artifacts_dir())?;
-    println!("PJRT platform: {}", rt.engine().platform());
+    let rt = Runtime::open_or_native(args.artifacts_dir())?;
+    println!("execution platform: {}", rt.engine().platform());
     let exec = TiledExecutor::from_runtime(&rt)?;
     let (tm, tn, tk) = exec.tile_shape();
     println!("tile artifact: {tm}x{tn}x{tk}");
+    let order = match args.flag("--order") {
+        None | Some("auto") => Order::select(size, size, size, tm, tn, tk),
+        Some("tile") => Order::TileMajor,
+        Some("arow") => Order::ARowSweep,
+        Some("bcol") => Order::BColSweep,
+        Some(other) => bail!("unknown --order {other:?} (auto|tile|arow|bcol)"),
+    };
+    let mode = match args.flag("--mode") {
+        None | Some("reuse") => ExecMode::Reuse,
+        Some("roundtrip") => ExecMode::Roundtrip,
+        Some(other) => bail!("unknown --mode {other:?} (reuse|roundtrip)"),
+    };
     let mut rng = Rng::new(42);
     let a = rng.fill_normal_f32(size * size);
     let b = rng.fill_normal_f32(size * size);
-    let run = exec.matmul(&a, &b, size, size, size)?;
+    let run = exec.matmul_with(&a, &b, size, size, size, order, mode)?;
     println!(
-        "ran {size}³ in {:?} ({} steps, {:.2} Mmadd/s)",
+        "ran {size}³ in {:?} ({} steps, {:.2} Mmadd/s, {} order, {mode:?} mode)",
         run.wall,
         run.steps_executed,
-        run.madds_per_sec() / 1e6
+        run.madds_per_sec() / 1e6,
+        run.order.name(),
     );
-    println!("host-boundary transfers: {} elements", run.transfer_elements);
+    println!(
+        "host-boundary transfers: {} elements ({} for the no-reuse roundtrip schedule)",
+        run.transfer_elements,
+        run.plan.transfer_elements_naive()
+    );
     // Spot check.
     let i = size / 2;
     let j = size / 3;
@@ -286,8 +305,13 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_verify(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
-    let rt = match Runtime::open(&dir) {
-        Ok(rt) => Some(rt),
+    let rt = match Runtime::open_or_native(&dir) {
+        Ok(rt) => {
+            if rt.is_native() {
+                eprintln!("note: no artifacts at {}; verifying against the native backend", dir.display());
+            }
+            Some(rt)
+        }
         Err(e) => {
             eprintln!("note: runtime unavailable ({e:#}); verifying sim/model layers only");
             None

@@ -1,13 +1,25 @@
-//! PJRT engine: compile HLO text, execute with typed host buffers.
+//! Execution engine: compile artifacts, execute with typed host buffers.
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Adapted from the reference wiring in /opt/xla-example/load_hlo.
+//! Two backends sit behind one API:
+//!
+//! * **PJRT** (cargo feature `pjrt`) — wraps the `xla` crate (PJRT C
+//!   API): `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `client.compile` → `execute`. Adapted from the reference wiring in
+//!   /opt/xla-example/load_hlo. Requires the vendored `xla` crate (the
+//!   offline build environment cannot fetch it, so the feature is off by
+//!   default).
+//! * **Native** (default) — the pure-Rust host-reference interpreter in
+//!   [`super::native`], executing the op semantics recorded in the
+//!   manifest spec. Same shapes, same validation, deterministic
+//!   ascending-k accumulation.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 use std::path::Path;
 
 use super::artifact::ArtifactSpec;
+use super::native;
 
 /// Host-side tensor in one of the dtypes the artifacts use. Row-major.
 #[derive(Debug, Clone, PartialEq)]
@@ -48,6 +60,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
         let elements: usize = shape.iter().product();
@@ -63,6 +76,7 @@ impl HostTensor {
         lit.reshape(&dims).context("reshaping input literal")
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal, dtype: &str) -> Result<HostTensor> {
         Ok(match dtype {
             "float32" => HostTensor::F32(lit.to_vec::<f32>()?),
@@ -74,51 +88,98 @@ impl HostTensor {
     }
 }
 
-/// The PJRT client (CPU).
+enum EngineBackend {
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtClient),
+    Native,
+}
+
+/// The execution client (PJRT CPU when the `pjrt` feature is enabled,
+/// native host-reference interpreter otherwise).
 pub struct Engine {
-    client: xla::PjRtClient,
+    backend: EngineBackend,
 }
 
 impl Engine {
+    /// Default engine: PJRT when compiled in, native otherwise.
     pub fn new() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client })
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Engine { backend: EngineBackend::Pjrt(client) })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Ok(Engine { backend: EngineBackend::Native })
+        }
+    }
+
+    /// The native host-reference engine, regardless of features.
+    pub fn native() -> Engine {
+        Engine { backend: EngineBackend::Native }
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, EngineBackend::Native)
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            EngineBackend::Pjrt(client) => client.platform_name(),
+            EngineBackend::Native => "native-host-reference".to_string(),
+        }
     }
 
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            EngineBackend::Pjrt(client) => client.device_count(),
+            EngineBackend::Native => 1,
+        }
     }
 
-    /// Load + compile one artifact from HLO text.
+    /// Load + compile one artifact. The PJRT backend parses the HLO text
+    /// at `path`; the native backend interprets the spec directly (the
+    /// file is advisory and may not exist).
     pub fn load(&self, path: &Path, spec: ArtifactSpec) -> Result<LoadedKernel> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-UTF-8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", spec.name))?;
-        Ok(LoadedKernel { spec, exe })
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            EngineBackend::Pjrt(client) => {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-UTF-8 artifact path")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", spec.name))?;
+                Ok(LoadedKernel { spec, exe: KernelExe::Pjrt(exe) })
+            }
+            EngineBackend::Native => {
+                let _ = path;
+                Ok(LoadedKernel { spec, exe: KernelExe::Native })
+            }
+        }
     }
 }
 
-/// A compiled executable plus its manifest spec.
+enum KernelExe {
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtLoadedExecutable),
+    Native,
+}
+
+/// A compiled (or natively interpreted) executable plus its manifest spec.
 pub struct LoadedKernel {
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exe: KernelExe,
 }
 
 impl LoadedKernel {
-    /// f32 fast path: build literals straight from borrowed slices (no
-    /// intermediate `Vec` clones — `Literal::vec1` copies from the slice
-    /// into XLA-owned storage anyway) and return the raw output vector.
-    /// This is the GEMM executor's per-step hot path.
+    /// f32 fast path: borrowed slices in, raw output vector out — no
+    /// intermediate `Vec` clones. This is the GEMM executor's per-step
+    /// hot path.
     pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
@@ -128,29 +189,79 @@ impl LoadedKernel {
                 inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (tensor, tspec) in inputs.iter().zip(&self.spec.inputs) {
             if tspec.dtype != "float32" {
                 bail!("{}: execute_f32 on non-f32 input", self.spec.name);
             }
             let elements: usize = tspec.shape.iter().product();
             if elements != tensor.len() {
-                bail!("shape {:?} has {elements} elements, buffer has {}", tspec.shape, tensor.len());
+                bail!(
+                    "shape {:?} has {elements} elements, buffer has {}",
+                    tspec.shape,
+                    tensor.len()
+                );
             }
-            let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(tensor).reshape(&dims)?);
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.spec.name))?;
-        let lit = result
-            .first()
-            .and_then(|d| d.first())
-            .context("executable produced no output")?
-            .to_literal_sync()?;
-        let out = lit.to_tuple1().context("unwrapping output tuple")?;
-        Ok(out.to_vec::<f32>()?)
+        match &self.exe {
+            #[cfg(feature = "pjrt")]
+            KernelExe::Pjrt(exe) => {
+                let mut literals = Vec::with_capacity(inputs.len());
+                for (tensor, tspec) in inputs.iter().zip(&self.spec.inputs) {
+                    let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+                    literals.push(xla::Literal::vec1(tensor).reshape(&dims)?);
+                }
+                let result = exe
+                    .execute::<xla::Literal>(&literals)
+                    .with_context(|| format!("executing {}", self.spec.name))?;
+                let lit = result
+                    .first()
+                    .and_then(|d| d.first())
+                    .context("executable produced no output")?
+                    .to_literal_sync()?;
+                let out = lit.to_tuple1().context("unwrapping output tuple")?;
+                Ok(out.to_vec::<f32>()?)
+            }
+            KernelExe::Native => native::execute_f32(&self.spec, inputs),
+        }
+    }
+
+    /// Accumulate-from-zero fast path for `matmul_acc` artifacts: the C
+    /// input is a known constant (all zeros), so the native backend
+    /// materializes nothing for it, and a caching transport ships it at
+    /// most once per kernel. This is what lets the tiled executor keep
+    /// its accumulator host-resident and charge the zero template once
+    /// per run. The PJRT backend still rebuilds the zero literal per
+    /// call (constant-literal caching there is future work — until then
+    /// its real C-in traffic is `tm·tn` per step, not once).
+    pub fn execute_f32_zero_acc(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        if self.spec.inputs.len() != 3 {
+            bail!("{}: zero-acc path requires a matmul_acc artifact", self.spec.name);
+        }
+        for tspec in &self.spec.inputs {
+            if tspec.dtype != "float32" {
+                bail!("{}: execute_f32 on non-f32 input", self.spec.name);
+            }
+        }
+        for (tensor, tspec) in [a, b].into_iter().zip(&self.spec.inputs[1..]) {
+            let elements: usize = tspec.shape.iter().product();
+            if elements != tensor.len() {
+                bail!(
+                    "shape {:?} has {elements} elements, buffer has {}",
+                    tspec.shape,
+                    tensor.len()
+                );
+            }
+        }
+        match &self.exe {
+            #[cfg(feature = "pjrt")]
+            KernelExe::Pjrt(_) => {
+                let zero = vec![0f32; self.spec.inputs[0].shape.iter().product()];
+                self.execute_f32(&[zero.as_slice(), a, b])
+            }
+            KernelExe::Native => {
+                Ok(native::gemm_f32(None, a, b, self.spec.m, self.spec.n, self.spec.k))
+            }
+        }
     }
 
     /// Execute with host buffers (validated against the manifest shapes);
@@ -164,21 +275,46 @@ impl LoadedKernel {
                 inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (tensor, tspec) in inputs.iter().zip(&self.spec.inputs) {
-            literals.push(tensor.to_literal(&tspec.shape)?);
+            let elements: usize = tspec.shape.iter().product();
+            if elements != tensor.len() {
+                bail!(
+                    "{}: shape {:?} has {elements} elements, buffer has {}",
+                    self.spec.name,
+                    tspec.shape,
+                    tensor.len()
+                );
+            }
+            if tspec.dtype != tensor.dtype_name() {
+                bail!(
+                    "{}: expected {} input, got {}",
+                    self.spec.name,
+                    tspec.dtype,
+                    tensor.dtype_name()
+                );
+            }
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.spec.name))?;
-        let lit = result
-            .first()
-            .and_then(|d| d.first())
-            .context("executable produced no output")?
-            .to_literal_sync()?;
-        // Artifacts are lowered with return_tuple=True: unwrap the 1-tuple.
-        let out = lit.to_tuple1().context("unwrapping output tuple")?;
-        HostTensor::from_literal(&out, &self.spec.output.dtype)
+        match &self.exe {
+            #[cfg(feature = "pjrt")]
+            KernelExe::Pjrt(exe) => {
+                let mut literals = Vec::with_capacity(inputs.len());
+                for (tensor, tspec) in inputs.iter().zip(&self.spec.inputs) {
+                    literals.push(tensor.to_literal(&tspec.shape)?);
+                }
+                let result = exe
+                    .execute::<xla::Literal>(&literals)
+                    .with_context(|| format!("executing {}", self.spec.name))?;
+                let lit = result
+                    .first()
+                    .and_then(|d| d.first())
+                    .context("executable produced no output")?
+                    .to_literal_sync()?;
+                // Artifacts are lowered with return_tuple=True: unwrap the
+                // 1-tuple.
+                let out = lit.to_tuple1().context("unwrapping output tuple")?;
+                HostTensor::from_literal(&out, &self.spec.output.dtype)
+            }
+            KernelExe::Native => native::execute(&self.spec, inputs),
+        }
     }
 }

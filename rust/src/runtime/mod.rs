@@ -1,25 +1,89 @@
-//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//! Execution runtime: load AOT artifacts and execute them on the request
+//! path.
 //!
 //! The interchange contract with the build path (`python/compile/aot.py`):
 //! HLO **text** per computation (xla_extension 0.5.1 rejects jax ≥ 0.5's
 //! 64-bit-id serialized protos; the text parser reassigns ids) plus
 //! `manifest.json` describing op/shape/dtype per artifact. Every artifact
-//! returns a 1-tuple (`return_tuple=True` at lowering), unwrapped here
-//! with `to_tuple1`.
+//! returns a 1-tuple (`return_tuple=True` at lowering), unwrapped with
+//! `to_tuple1` on the PJRT backend.
 //!
 //! Python never runs here — after `make artifacts` the Rust binary is
-//! self-contained.
+//! self-contained. When no artifacts directory exists (or the `pjrt`
+//! feature is off), [`Runtime::native_default`] provides a built-in
+//! manifest executed by the native host-reference backend, so the whole
+//! host pipeline — scheduler, executor, service — still runs end-to-end.
 
 pub mod artifact;
 pub mod engine;
+pub mod native;
 
 pub use artifact::{ArtifactSpec, Manifest};
-pub use engine::{Engine, LoadedKernel};
+pub use engine::{Engine, HostTensor, LoadedKernel};
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
-/// Manifest + PJRT engine + lazily-compiled executables.
+/// Built-in manifest served by the native backend: the same artifact
+/// inventory `make artifacts` would produce, minus the HLO files. The
+/// 16³ accumulate tile exists for fast property tests; 128³ is the
+/// default the executor picks (largest `matmul_acc`).
+const NATIVE_MANIFEST: &str = r#"{
+  "version": 1,
+  "default": "mmm_acc_f32_128",
+  "artifacts": [
+    {"name": "mmm_acc_f32_128", "file": "native", "op": "matmul_acc",
+     "dtype": "float32", "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+     "inputs": [{"shape": [128, 128], "dtype": "float32"},
+                {"shape": [128, 128], "dtype": "float32"},
+                {"shape": [128, 128], "dtype": "float32"}],
+     "output": {"shape": [128, 128], "dtype": "float32"}},
+    {"name": "mmm_acc_f32_64", "file": "native", "op": "matmul_acc",
+     "dtype": "float32", "m": 64, "n": 64, "k": 64, "block": [32, 32, 16],
+     "inputs": [{"shape": [64, 64], "dtype": "float32"},
+                {"shape": [64, 64], "dtype": "float32"},
+                {"shape": [64, 64], "dtype": "float32"}],
+     "output": {"shape": [64, 64], "dtype": "float32"}},
+    {"name": "mmm_acc_f32_16", "file": "native", "op": "matmul_acc",
+     "dtype": "float32", "m": 16, "n": 16, "k": 16, "block": [8, 8, 8],
+     "inputs": [{"shape": [16, 16], "dtype": "float32"},
+                {"shape": [16, 16], "dtype": "float32"},
+                {"shape": [16, 16], "dtype": "float32"}],
+     "output": {"shape": [16, 16], "dtype": "float32"}},
+    {"name": "mmm_f32_256", "file": "native", "op": "matmul",
+     "dtype": "float32", "m": 256, "n": 256, "k": 256, "block": [64, 64, 32],
+     "inputs": [{"shape": [256, 256], "dtype": "float32"},
+                {"shape": [256, 256], "dtype": "float32"}],
+     "output": {"shape": [256, 256], "dtype": "float32"}},
+    {"name": "dist_f32_128", "file": "native", "op": "distance",
+     "dtype": "float32", "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+     "inputs": [{"shape": [128, 128], "dtype": "float32"},
+                {"shape": [128, 128], "dtype": "float32"}],
+     "output": {"shape": [128, 128], "dtype": "float32"}},
+    {"name": "mmm_at_f32_128", "file": "native", "op": "matmul_at",
+     "dtype": "float32", "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+     "inputs": [{"shape": [128, 128], "dtype": "float32"},
+                {"shape": [128, 128], "dtype": "float32"}],
+     "output": {"shape": [128, 128], "dtype": "float32"}},
+    {"name": "mmm_u32_128", "file": "native", "op": "matmul",
+     "dtype": "uint32", "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+     "inputs": [{"shape": [128, 128], "dtype": "uint32"},
+                {"shape": [128, 128], "dtype": "uint32"}],
+     "output": {"shape": [128, 128], "dtype": "uint32"}},
+    {"name": "mmm_i32_128", "file": "native", "op": "matmul",
+     "dtype": "int32", "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+     "inputs": [{"shape": [128, 128], "dtype": "int32"},
+                {"shape": [128, 128], "dtype": "int32"}],
+     "output": {"shape": [128, 128], "dtype": "int32"}},
+    {"name": "mmm_f64_128", "file": "native", "op": "matmul",
+     "dtype": "float64", "m": 128, "n": 128, "k": 128, "block": [32, 32, 16],
+     "inputs": [{"shape": [128, 128], "dtype": "float64"},
+                {"shape": [128, 128], "dtype": "float64"}],
+     "output": {"shape": [128, 128], "dtype": "float64"}}
+  ]
+}"#;
+
+/// Manifest + engine + lazily-compiled executables.
 pub struct Runtime {
     dir: PathBuf,
     pub manifest: Manifest,
@@ -28,8 +92,8 @@ pub struct Runtime {
 }
 
 impl Runtime {
-    /// Open an artifacts directory (reads `manifest.json`, starts the PJRT
-    /// CPU client; compilation happens lazily per artifact).
+    /// Open an artifacts directory (reads `manifest.json`, starts the
+    /// default engine; compilation happens lazily per artifact).
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
@@ -38,6 +102,35 @@ impl Runtime {
         let manifest = Manifest::parse(&text)?;
         let engine = Engine::new()?;
         Ok(Runtime { dir, manifest, engine, compiled: Default::default() })
+    }
+
+    /// A runtime over the built-in native manifest: no files on disk, all
+    /// execution through the host-reference backend.
+    pub fn native_default() -> Result<Runtime> {
+        let manifest = Manifest::parse(NATIVE_MANIFEST)?;
+        Ok(Runtime {
+            dir: PathBuf::from("<native>"),
+            manifest,
+            engine: Engine::native(),
+            compiled: Default::default(),
+        })
+    }
+
+    /// Open `dir` when it holds generated artifacts, else fall back to
+    /// the built-in native runtime. The standard entry point for benches,
+    /// examples, and the service.
+    pub fn open_or_native(dir: impl AsRef<Path>) -> Result<Runtime> {
+        if dir.as_ref().join("manifest.json").exists() {
+            Self::open(dir)
+        } else {
+            Self::native_default()
+        }
+    }
+
+    /// Whether this runtime executes through the native host-reference
+    /// backend (no PJRT).
+    pub fn is_native(&self) -> bool {
+        self.engine.is_native()
     }
 
     /// Default artifacts directory (`$FCAMM_ARTIFACTS` or `./artifacts`).
@@ -73,5 +166,43 @@ impl Runtime {
     /// Names of all artifacts, manifest order.
     pub fn artifact_names(&self) -> Vec<String> {
         self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_default_serves_kernels() {
+        let rt = Runtime::native_default().expect("native runtime");
+        assert!(rt.is_native());
+        assert_eq!(rt.manifest.default, "mmm_acc_f32_128");
+        let k = rt.kernel("mmm_acc_f32_16").expect("kernel");
+        assert_eq!(k.spec.m, 16);
+        // Identity-ish smoke test: C = 0 + I·B == B.
+        let mut eye = vec![0f32; 16 * 16];
+        for i in 0..16 {
+            eye[i * 16 + i] = 1.0;
+        }
+        let b: Vec<f32> = (0..256).map(|v| v as f32 * 0.5).collect();
+        let zero = vec![0f32; 256];
+        let out = k.execute_f32(&[&zero, &eye, &b]).unwrap();
+        assert_eq!(out, b);
+    }
+
+    #[test]
+    fn open_or_native_falls_back() {
+        let rt = Runtime::open_or_native("/definitely/not/a/real/dir").expect("fallback");
+        assert!(rt.is_native());
+    }
+
+    #[test]
+    fn native_manifest_lists_accumulators_largest_first() {
+        let rt = Runtime::native_default().unwrap();
+        let accs = rt.manifest.find_op("matmul_acc", "float32");
+        assert_eq!(accs.len(), 3);
+        assert_eq!(accs[0].m, 128);
+        assert_eq!(accs[2].m, 16);
     }
 }

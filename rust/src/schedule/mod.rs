@@ -9,15 +9,22 @@
 //!
 //! * [`loopnest`] — the full iteration-space enumeration (used to prove
 //!   the schedule covers each (i, j, k) exactly once, in tile order);
+//! * [`order`] — traversal orders over the step grid plus the Eq.6-style
+//!   host-traffic cost model that picks the minimal-transfer order per
+//!   problem shape;
 //! * [`tiles`] — planning: decompose an arbitrary m×n×k problem into
-//!   steps sized to an available artifact;
-//! * [`executor`] — execution: run the plan against the runtime,
-//!   accumulating partial results exactly as the architecture's C memory
-//!   tile does.
+//!   steps sized to an available artifact, carrying per-step reuse and
+//!   drain metadata;
+//! * [`executor`] — execution: run the plan against the runtime with a
+//!   host-resident accumulator, slab reuse, and double-buffered packing
+//!   (the communication-avoiding path), or in the seed's round-trip mode
+//!   for baseline comparison.
 
 pub mod executor;
 pub mod loopnest;
+pub mod order;
 pub mod tiles;
 
-pub use executor::{ExecutorRun, TiledExecutor};
+pub use executor::{ExecMode, ExecutorRun, TiledExecutor};
+pub use order::Order;
 pub use tiles::{Step, TilePlan};

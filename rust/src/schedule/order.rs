@@ -1,0 +1,253 @@
+//! Traversal orders for a [`TilePlan`](super::TilePlan) and the
+//! Eq.6-style host-traffic cost model that picks between them.
+//!
+//! The paper minimizes DDR↔BRAM traffic by choosing how the loop nest
+//! walks the iteration space (Eq. 6: total I/O falls as on-chip reuse
+//! rises). The same degree of freedom exists one level up, at the
+//! host↔PJRT boundary: a k-slab of A is a function of `(ti, ks)` only and
+//! a k-slab of B of `(tj, ks)` only, so the order in which the executor
+//! walks the `(ti, tj, ks)` step grid decides how often a packed slab can
+//! be reused instead of re-shipped. Three orders are provided:
+//!
+//! * [`Order::TileMajor`] — the seed order (`tj → ti → ks`): one output
+//!   tile at a time, every step ships fresh A and B slabs. Minimum live
+//!   accumulator state (one tile), maximum slab traffic.
+//! * [`Order::ARowSweep`] — `ti → ks → tj`: holds one A slab resident and
+//!   sweeps it across a row of output tiles; A ships `⌈m/tm⌉·⌈k/tk⌉`
+//!   times instead of once per step.
+//! * [`Order::BColSweep`] — `tj → ks → ti`: the transpose; holds one B
+//!   slab resident down a column of output tiles.
+//!
+//! [`Order::select`] evaluates [`host_traffic`] for each candidate and
+//! returns the cheapest (ties prefer `TileMajor`, which keeps the least
+//! accumulator state). The model counts exactly what the reuse-aware
+//! executor ships, so `TilePlan::transfer_elements()` (a sum over step
+//! flags), `host_traffic()` (an index walk, no allocation), and the
+//! executor's measured `transfer_elements` are pinned together by tests.
+
+use std::fmt;
+
+/// A traversal order over the `(ti, tj, ks)` step grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Order {
+    /// `tj → ti → ks` — the seed order: all k-slabs of one output tile,
+    /// then the next tile.
+    TileMajor,
+    /// `ti → ks → tj` — reuse each packed A slab across a row of tiles.
+    ARowSweep,
+    /// `tj → ks → ti` — reuse each packed B slab down a column of tiles.
+    BColSweep,
+}
+
+impl Order {
+    /// Every available order, in tie-break preference order.
+    pub const ALL: [Order; 3] = [Order::TileMajor, Order::ARowSweep, Order::BColSweep];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Order::TileMajor => "tile-major",
+            Order::ARowSweep => "a-row-sweep",
+            Order::BColSweep => "b-col-sweep",
+        }
+    }
+
+    /// Pick the order with minimal modeled host traffic for this problem
+    /// shape. Ties keep the earliest entry of [`Order::ALL`], i.e.
+    /// tile-major (least live accumulator state).
+    pub fn select(m: usize, n: usize, k: usize, tm: usize, tn: usize, tk: usize) -> Order {
+        let mut best = Order::ALL[0];
+        let mut best_cost = host_traffic(best, m, n, k, tm, tn, tk);
+        for &cand in &Order::ALL[1..] {
+            let cost = host_traffic(cand, m, n, k, tm, tn, tk);
+            if cost < best_cost {
+                best = cand;
+                best_cost = cost;
+            }
+        }
+        best
+    }
+}
+
+impl fmt::Display for Order {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Enumerate the step grid `(ti, tj, ks)` in the given order.
+///
+/// Every order keeps `ks` ascending within each output tile, so partial
+/// sums accumulate in the same per-element sequence regardless of order —
+/// that is what makes all traversals bit-identical.
+pub fn emit(
+    order: Order,
+    tiles_m: usize,
+    tiles_n: usize,
+    slabs_k: usize,
+    mut f: impl FnMut(usize, usize, usize),
+) {
+    match order {
+        Order::TileMajor => {
+            for tj in 0..tiles_n {
+                for ti in 0..tiles_m {
+                    for ks in 0..slabs_k {
+                        f(ti, tj, ks);
+                    }
+                }
+            }
+        }
+        Order::ARowSweep => {
+            for ti in 0..tiles_m {
+                for ks in 0..slabs_k {
+                    for tj in 0..tiles_n {
+                        f(ti, tj, ks);
+                    }
+                }
+            }
+        }
+        Order::BColSweep => {
+            for tj in 0..tiles_n {
+                for ks in 0..slabs_k {
+                    for ti in 0..tiles_m {
+                        f(ti, tj, ks);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Modeled host↔device traffic (elements) for the reuse-aware executor
+/// under `order`: the Eq. 6 analogue at the host boundary.
+///
+/// Counts one A slab (`tm·tk`) whenever `(ti, ks)` changes between
+/// consecutive steps, one B slab (`tk·tn`) whenever `(tj, ks)` changes,
+/// one partial-C tile out (`tm·tn`) per step, plus the zero C-in template
+/// shipped once per run (the accumulator itself stays host-resident).
+pub fn host_traffic(
+    order: Order,
+    m: usize,
+    n: usize,
+    k: usize,
+    tm: usize,
+    tn: usize,
+    tk: usize,
+) -> u64 {
+    let a_el = (tm * tk) as u64;
+    let b_el = (tk * tn) as u64;
+    let c_el = (tm * tn) as u64;
+    let mut total = c_el; // zero C-in template, shipped once
+    let mut prev: Option<(usize, usize, usize)> = None;
+    emit(order, m.div_ceil(tm), n.div_ceil(tn), k.div_ceil(tk), |ti, tj, ks| {
+        let ship_a = prev.map_or(true, |(pti, _, pks)| (pti, pks) != (ti, ks));
+        let ship_b = prev.map_or(true, |(_, ptj, pks)| (ptj, pks) != (tj, ks));
+        if ship_a {
+            total += a_el;
+        }
+        if ship_b {
+            total += b_el;
+        }
+        total += c_el;
+        prev = Some((ti, tj, ks));
+    });
+    total
+}
+
+/// Modeled traffic for the seed's no-reuse round-trip schedule: every
+/// step ships A, B, and the C accumulator in *and* out. This is the
+/// baseline the reuse-aware executor is measured against.
+pub fn host_traffic_naive(m: usize, n: usize, k: usize, tm: usize, tn: usize, tk: usize) -> u64 {
+    let steps = (m.div_ceil(tm) * n.div_ceil(tn) * k.div_ceil(tk)) as u64;
+    steps * (tm * tk + tk * tn + 2 * tm * tn) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_covers_grid_exactly_once_every_order() {
+        for order in Order::ALL {
+            let mut seen = std::collections::HashSet::new();
+            let mut count = 0usize;
+            emit(order, 3, 2, 4, |ti, tj, ks| {
+                assert!(ti < 3 && tj < 2 && ks < 4);
+                assert!(seen.insert((ti, tj, ks)), "{order}: duplicate");
+                count += 1;
+            });
+            assert_eq!(count, 3 * 2 * 4, "{order}");
+        }
+    }
+
+    #[test]
+    fn emit_keeps_ks_ascending_per_tile() {
+        for order in Order::ALL {
+            let mut last_ks = std::collections::HashMap::new();
+            emit(order, 3, 3, 5, |ti, tj, ks| {
+                let prev = last_ks.insert((ti, tj), ks);
+                assert_eq!(prev.map_or(0, |p| p + 1), ks, "{order}: ks out of order");
+            });
+        }
+    }
+
+    #[test]
+    fn square_costs_match_hand_count() {
+        // 256^3 over 128^3 tiles: TM = TN = TK = 2, 8 steps, tile = 16384.
+        let t = 16384u64;
+        // Tile-major: A and B ship every step.
+        assert_eq!(
+            host_traffic(Order::TileMajor, 256, 256, 256, 128, 128, 128),
+            8 * t + 8 * t + 8 * t + t
+        );
+        // A-row sweep: A ships once per (ti, ks) = 4 times.
+        assert_eq!(
+            host_traffic(Order::ARowSweep, 256, 256, 256, 128, 128, 128),
+            4 * t + 8 * t + 8 * t + t
+        );
+        assert_eq!(
+            host_traffic(Order::BColSweep, 256, 256, 256, 128, 128, 128),
+            8 * t + 4 * t + 8 * t + t
+        );
+    }
+
+    #[test]
+    fn naive_matches_seed_formula() {
+        // Seed model: steps × (A + B + 2C).
+        assert_eq!(host_traffic_naive(128, 128, 128, 128, 128, 128), 4 * 16384);
+        assert_eq!(host_traffic_naive(256, 256, 256, 128, 128, 128), 8 * 4 * 16384);
+    }
+
+    #[test]
+    fn reuse_never_exceeds_naive() {
+        for (m, n, k) in [(128, 128, 128), (256, 512, 256), (100, 300, 50), (1, 1, 1)] {
+            for order in Order::ALL {
+                assert!(
+                    host_traffic(order, m, n, k, 128, 128, 128)
+                        <= host_traffic_naive(m, n, k, 128, 128, 128),
+                    "{order} {m}x{n}x{k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn select_prefers_sweeps_on_wide_and_tall_problems() {
+        // Wide C (many tile columns): hold A resident, sweep the row.
+        assert_eq!(Order::select(128, 1024, 256, 128, 128, 128), Order::ARowSweep);
+        // Tall C (many tile rows): hold B resident, sweep the column.
+        assert_eq!(Order::select(1024, 128, 256, 128, 128, 128), Order::BColSweep);
+        // Single tile: everything ties, keep tile-major.
+        assert_eq!(Order::select(64, 64, 64, 128, 128, 128), Order::TileMajor);
+    }
+
+    #[test]
+    fn select_is_argmin() {
+        for (m, n, k) in [(200, 100, 300), (512, 384, 256), (64, 640, 64), (13, 21, 5)] {
+            let best = Order::select(m, n, k, 128, 64, 32);
+            let cost = |o| host_traffic(o, m, n, k, 128, 64, 32);
+            for o in Order::ALL {
+                assert!(cost(best) <= cost(o), "{m}x{n}x{k}: {best} vs {o}");
+            }
+        }
+    }
+}

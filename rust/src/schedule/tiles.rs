@@ -6,6 +6,15 @@
 //! k-slabs — Listing 2's outer loops with the artifact as the inner
 //! kernel. Edge tiles are zero-padded, mirroring the hardware's
 //! whole-tile evaluation.
+//!
+//! A plan carries its traversal [`Order`] and per-step reuse/drain
+//! metadata, so the executor never has to infer schedule structure from
+//! step positions: `reuse_a`/`reuse_b` say whether the previously packed
+//! slab is still valid, and `drain` marks the last step that touches an
+//! output tile under *this* order (computed by scanning the actual step
+//! sequence, not assumed from tile-major layout).
+
+use super::order::{self, Order};
 
 /// One artifact invocation in the plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,6 +32,15 @@ pub struct Step {
     /// k-range covered (clipped).
     pub k0: usize,
     pub kdepth: usize,
+    /// The A slab packed for the previous step is identical (same
+    /// `(ti, ks)`), so the executor may skip packing and shipping it.
+    pub reuse_a: bool,
+    /// The B slab packed for the previous step is identical (same
+    /// `(tj, ks)`).
+    pub reuse_b: bool,
+    /// This is the last step of the traversal touching output tile
+    /// `(ti, tj)`: accumulator state for the tile can be retired after it.
+    pub drain: bool,
 }
 
 /// A complete plan for one GEMM.
@@ -34,41 +52,77 @@ pub struct TilePlan {
     pub tile_m: usize,
     pub tile_n: usize,
     pub tile_k: usize,
+    /// Traversal order the steps were generated in.
+    pub order: Order,
     pub steps: Vec<Step>,
 }
 
 impl TilePlan {
     /// Plan an m×n×k GEMM on an artifact computing
-    /// `C(tile_m×tile_n) += A(tile_m×tile_k)·B(tile_k×tile_n)`.
-    ///
-    /// Step order is tile-major (all k-slabs of one output tile before the
-    /// next tile) — the same reuse order as the hardware memory tile, so
-    /// only one C tile is live at a time.
+    /// `C(tile_m×tile_n) += A(tile_m×tile_k)·B(tile_k×tile_n)`, in the
+    /// seed's tile-major order (all k-slabs of one output tile before the
+    /// next tile — only one C tile live at a time).
     pub fn new(m: usize, n: usize, k: usize, tile_m: usize, tile_n: usize, tile_k: usize) -> TilePlan {
+        Self::with_order(m, n, k, tile_m, tile_n, tile_k, Order::TileMajor)
+    }
+
+    /// Plan with the traversal order the host-traffic model picks as
+    /// cheapest for this problem shape (Eq. 6 at the host boundary).
+    pub fn auto(m: usize, n: usize, k: usize, tile_m: usize, tile_n: usize, tile_k: usize) -> TilePlan {
+        Self::with_order(m, n, k, tile_m, tile_n, tile_k, Order::select(m, n, k, tile_m, tile_n, tile_k))
+    }
+
+    /// Plan with an explicit traversal order.
+    pub fn with_order(
+        m: usize,
+        n: usize,
+        k: usize,
+        tile_m: usize,
+        tile_n: usize,
+        tile_k: usize,
+        order: Order,
+    ) -> TilePlan {
         assert!(m > 0 && n > 0 && k > 0, "empty problem");
         assert!(tile_m > 0 && tile_n > 0 && tile_k > 0, "empty tile");
-        let mut steps = Vec::new();
-        for tj in 0..n.div_ceil(tile_n) {
-            for ti in 0..m.div_ceil(tile_m) {
-                for ks in 0..k.div_ceil(tile_k) {
-                    let row0 = ti * tile_m;
-                    let col0 = tj * tile_n;
-                    let k0 = ks * tile_k;
-                    steps.push(Step {
-                        ti,
-                        tj,
-                        ks,
-                        row0,
-                        col0,
-                        rows: (m - row0).min(tile_m),
-                        cols: (n - col0).min(tile_n),
-                        k0,
-                        kdepth: (k - k0).min(tile_k),
-                    });
-                }
+        let tiles_m = m.div_ceil(tile_m);
+        let tiles_n = n.div_ceil(tile_n);
+        let slabs_k = k.div_ceil(tile_k);
+        let mut steps: Vec<Step> = Vec::with_capacity(tiles_m * tiles_n * slabs_k);
+        order::emit(order, tiles_m, tiles_n, slabs_k, |ti, tj, ks| {
+            let row0 = ti * tile_m;
+            let col0 = tj * tile_n;
+            let k0 = ks * tile_k;
+            let (reuse_a, reuse_b) = match steps.last() {
+                Some(p) => ((p.ti, p.ks) == (ti, ks), (p.tj, p.ks) == (tj, ks)),
+                None => (false, false),
+            };
+            steps.push(Step {
+                ti,
+                tj,
+                ks,
+                row0,
+                col0,
+                rows: (m - row0).min(tile_m),
+                cols: (n - col0).min(tile_n),
+                k0,
+                kdepth: (k - k0).min(tile_k),
+                reuse_a,
+                reuse_b,
+                drain: false,
+            });
+        });
+        // Mark drains by scanning the actual sequence backwards: the first
+        // time a tile is seen from the end is its last touch. This is
+        // order-agnostic — no assumption of tile-major contiguity.
+        let mut retired = vec![false; tiles_m * tiles_n];
+        for s in steps.iter_mut().rev() {
+            let tile = s.tj * tiles_m + s.ti;
+            if !retired[tile] {
+                retired[tile] = true;
+                s.drain = true;
             }
         }
-        TilePlan { m, n, k, tile_m, tile_n, tile_k, steps }
+        TilePlan { m, n, k, tile_m, tile_n, tile_k, order, steps }
     }
 
     /// Number of artifact invocations.
@@ -76,10 +130,35 @@ impl TilePlan {
         self.steps.len()
     }
 
-    /// Host↔device traffic in elements if each step ships its padded A, B
-    /// (and C in/out for accumulation steps): the executor's measured
-    /// counterpart of Eq. 6 at the host boundary.
+    /// Host↔device traffic in elements for the reuse-aware executor
+    /// running *this* plan: one A/B slab per step that does not reuse the
+    /// previous one, one partial-C tile out per step, plus the zero C-in
+    /// template shipped once (the accumulator stays host-resident).
+    ///
+    /// Pinned equal to `order::host_traffic(self.order, ..)` and to the
+    /// executor's measured `transfer_elements` by tests.
     pub fn transfer_elements(&self) -> u64 {
+        let a_el = (self.tile_m * self.tile_k) as u64;
+        let b_el = (self.tile_k * self.tile_n) as u64;
+        let c_el = (self.tile_m * self.tile_n) as u64;
+        let mut total = c_el; // zero C-in template
+        for s in &self.steps {
+            if !s.reuse_a {
+                total += a_el;
+            }
+            if !s.reuse_b {
+                total += b_el;
+            }
+            total += c_el;
+        }
+        total
+    }
+
+    /// The seed's no-reuse accounting: every step ships its padded A and
+    /// B slabs plus the C accumulator in *and* out. This is what the
+    /// round-trip executor mode actually moves, and the baseline the
+    /// reuse-aware path is compared against.
+    pub fn transfer_elements_naive(&self) -> u64 {
         let per_step = (self.tile_m * self.tile_k)  // A slab
             + (self.tile_k * self.tile_n)           // B slab
             + 2 * (self.tile_m * self.tile_n); // C in + out
@@ -110,29 +189,31 @@ mod tests {
     }
 
     #[test]
-    fn covers_problem_exactly() {
-        let p = TilePlan::new(300, 170, 90, 128, 64, 32);
-        // Every output cell covered by exactly one (ti, tj) tile; every k
-        // by exactly one slab within it.
-        let mut cells: HashSet<(usize, usize)> = HashSet::new();
-        for s in &p.steps {
-            if s.ks != 0 {
-                continue;
-            }
-            for r in s.row0..s.row0 + s.rows {
-                for c in s.col0..s.col0 + s.cols {
-                    assert!(cells.insert((r, c)), "cell ({r},{c}) covered twice");
+    fn covers_problem_exactly_in_every_order() {
+        for order in Order::ALL {
+            let p = TilePlan::with_order(300, 170, 90, 128, 64, 32, order);
+            // Every output cell covered by exactly one (ti, tj) tile; every
+            // k by exactly one slab within it.
+            let mut cells: HashSet<(usize, usize)> = HashSet::new();
+            for s in &p.steps {
+                if s.ks != 0 {
+                    continue;
+                }
+                for r in s.row0..s.row0 + s.rows {
+                    for c in s.col0..s.col0 + s.cols {
+                        assert!(cells.insert((r, c)), "cell ({r},{c}) covered twice");
+                    }
                 }
             }
+            assert_eq!(cells.len(), 300 * 170);
+            let k_covered: usize = p
+                .steps
+                .iter()
+                .filter(|s| s.ti == 0 && s.tj == 0)
+                .map(|s| s.kdepth)
+                .sum();
+            assert_eq!(k_covered, 90);
         }
-        assert_eq!(cells.len(), 300 * 170);
-        let k_covered: usize = p
-            .steps
-            .iter()
-            .filter(|s| s.ti == 0 && s.tj == 0)
-            .map(|s| s.kdepth)
-            .sum();
-        assert_eq!(k_covered, 90);
     }
 
     #[test]
@@ -155,7 +236,63 @@ mod tests {
     fn transfer_accounting() {
         let p = TilePlan::new(128, 128, 128, 128, 128, 128);
         assert_eq!(p.n_steps(), 1);
+        // Single step: A + B + partial out + zero C-in template.
         assert_eq!(p.transfer_elements(), (128 * 128 * 4) as u64);
+        assert_eq!(p.transfer_elements_naive(), (128 * 128 * 4) as u64);
+    }
+
+    #[test]
+    fn transfer_matches_traffic_model_for_every_order() {
+        for order in Order::ALL {
+            for (m, n, k) in [(256, 256, 256), (256, 512, 256), (200, 100, 300), (13, 21, 5)] {
+                let p = TilePlan::with_order(m, n, k, 128, 128, 128, order);
+                assert_eq!(
+                    p.transfer_elements(),
+                    super::super::order::host_traffic(order, m, n, k, 128, 128, 128),
+                    "{order} {m}x{n}x{k}"
+                );
+                assert_eq!(
+                    p.transfer_elements_naive(),
+                    super::super::order::host_traffic_naive(m, n, k, 128, 128, 128),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_flags_reflect_slab_identity() {
+        let p = TilePlan::with_order(256, 512, 256, 128, 128, 128, Order::ARowSweep);
+        for pair in p.steps.windows(2) {
+            let (prev, cur) = (&pair[0], &pair[1]);
+            assert_eq!(cur.reuse_a, (prev.ti, prev.ks) == (cur.ti, cur.ks));
+            assert_eq!(cur.reuse_b, (prev.tj, prev.ks) == (cur.tj, cur.ks));
+        }
+        assert!(!p.steps[0].reuse_a && !p.steps[0].reuse_b);
+        // A-row sweep over 4 tile columns: 3 of 4 steps in each (ti, ks)
+        // group reuse A.
+        let a_ships = p.steps.iter().filter(|s| !s.reuse_a).count();
+        assert_eq!(a_ships, 2 * 2); // tiles_m × slabs_k
+    }
+
+    #[test]
+    fn drain_marks_last_touch_per_tile_in_every_order() {
+        for order in Order::ALL {
+            let p = TilePlan::with_order(300, 170, 90, 64, 64, 32, order);
+            let mut last_touch = std::collections::HashMap::new();
+            for (i, s) in p.steps.iter().enumerate() {
+                last_touch.insert((s.ti, s.tj), i);
+            }
+            for (i, s) in p.steps.iter().enumerate() {
+                assert_eq!(
+                    s.drain,
+                    last_touch[&(s.ti, s.tj)] == i,
+                    "{order}: step {i} drain flag wrong"
+                );
+            }
+            // Exactly one drain per tile.
+            let drains = p.steps.iter().filter(|s| s.drain).count();
+            assert_eq!(drains, last_touch.len());
+        }
     }
 
     #[test]

@@ -74,6 +74,22 @@ impl Bench {
         self
     }
 
+    /// Whether `--quick` was passed on the command line
+    /// (`cargo bench --bench hotpath -- --quick`): the pre-merge-gate
+    /// mode that trades statistical depth for wallclock.
+    pub fn quick_requested() -> bool {
+        std::env::args().any(|a| a == "--quick")
+    }
+
+    /// Shrink the measurement budget when `--quick` was requested.
+    pub fn maybe_quick(mut self) -> Self {
+        if Self::quick_requested() {
+            self.warmup = self.warmup.min(Duration::from_millis(10));
+            self.measure = self.measure.min(Duration::from_millis(150));
+        }
+        self
+    }
+
     /// Measure `f`, printing and returning stats. The closure's return value
     /// is passed through `std::hint::black_box` to keep the work alive.
     pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Stats {
@@ -116,6 +132,61 @@ impl Bench {
         );
         stats
     }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write collected bench results as a machine-readable JSON document:
+/// `{"bench", "quick", "entries": [per-Stats objects], "metrics":
+/// {name: value}}`. The `metrics` map carries derived numbers (speedups,
+/// modeled transfer volumes) so the perf trajectory can be tracked
+/// across PRs by diffing the file.
+pub fn write_json(
+    path: &std::path::Path,
+    bench: &str,
+    quick: bool,
+    stats: &[Stats],
+    metrics: &[(String, f64)],
+) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"entries\": [\n");
+    for (i, st) in stats.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"min_ns\": {}, \"median_ns\": {}, \"mean_ns\": {}, \"p95_ns\": {}}}{}\n",
+            json_escape(&st.name),
+            st.iters,
+            json_num(st.min_ns),
+            json_num(st.median_ns),
+            json_num(st.mean_ns),
+            json_num(st.p95_ns),
+            if i + 1 < stats.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"metrics\": {\n");
+    for (i, (name, value)) in metrics.iter().enumerate() {
+        s.push_str(&format!(
+            "    \"{}\": {}{}\n",
+            json_escape(name),
+            json_num(*value),
+            if i + 1 < metrics.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  }\n}\n");
+    std::fs::write(path, s)
 }
 
 #[cfg(test)]
@@ -162,5 +233,51 @@ mod tests {
         assert!(fmt_ns(12_000.0).contains("µs"));
         assert!(fmt_ns(12_000_000.0).contains("ms"));
         assert!(fmt_ns(12e9).ends_with("s"));
+    }
+
+    #[test]
+    fn write_json_round_trips_through_parser() {
+        let stats = vec![
+            Stats {
+                name: "pack \"old\"".into(),
+                iters: 7,
+                min_ns: 1.0,
+                median_ns: 2.5,
+                mean_ns: 3.0,
+                p95_ns: 4.0,
+            },
+            Stats {
+                name: "pack new".into(),
+                iters: 9,
+                min_ns: 0.5,
+                median_ns: 1.0,
+                mean_ns: 1.5,
+                p95_ns: 2.0,
+            },
+        ];
+        let metrics = vec![("pack_speedup".to_string(), 2.5f64)];
+        let path = std::env::temp_dir().join("fcamm_bench_json_test.json");
+        write_json(&path, "hotpath", true, &stats, &metrics).expect("write");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let v = crate::util::json::parse(&text).expect("valid JSON");
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("hotpath"));
+        assert_eq!(v.get("quick").unwrap().as_bool(), Some(true));
+        let entries = v.get("entries").unwrap().as_array().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("name").unwrap().as_str(), Some("pack \"old\""));
+        assert_eq!(entries[1].get("iters").unwrap().as_u64(), Some(9));
+        let m = v.get("metrics").unwrap().get("pack_speedup").unwrap();
+        assert!((m.as_f64().unwrap() - 2.5).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn write_json_handles_empty_metrics() {
+        let path = std::env::temp_dir().join("fcamm_bench_json_empty.json");
+        write_json(&path, "x", false, &[], &[]).expect("write");
+        let text = std::fs::read_to_string(&path).expect("read");
+        let v = crate::util::json::parse(&text).expect("valid JSON");
+        assert_eq!(v.get("entries").unwrap().as_array().unwrap().len(), 0);
+        let _ = std::fs::remove_file(&path);
     }
 }

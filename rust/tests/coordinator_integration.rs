@@ -159,6 +159,67 @@ fn gemm_service_blocking_api() {
 }
 
 #[test]
+fn gemm_service_runs_on_native_fallback() {
+    // No artifacts required: workers fall back to the native
+    // host-reference runtime, so the per-worker-queue dispatch path is
+    // exercised in every environment.
+    let service =
+        GemmService::start(std::path::PathBuf::from("/nonexistent/artifacts"), 2).expect("service");
+    assert_eq!(service.n_workers(), 2);
+    let mut rng = Rng::new(21);
+    let (m, n, k) = (40usize, 24usize, 32usize);
+    let a = rng.fill_normal_f32(m * k);
+    let b = rng.fill_normal_f32(k * n);
+    let resp = service.matmul_blocking(m, n, k, a.clone(), b.clone()).expect("run");
+    let expected = reference_matmul(fcamm::datatype::Semiring::PlusTimes, &a, &b, m, n, k);
+    for (got, want) in resp.c.iter().zip(&expected) {
+        assert!((got - want).abs() <= 2e-4 * (1.0 + want.abs()));
+    }
+    assert!(resp.transfer_elements > 0);
+    assert_eq!(service.stats.completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    service.shutdown();
+}
+
+#[test]
+fn gemm_service_batch_spreads_and_matches_reference() {
+    let service =
+        GemmService::start(std::path::PathBuf::from("/nonexistent/artifacts"), 3).expect("service");
+    let mut rng = Rng::new(22);
+    let mut jobs = Vec::new();
+    let mut expected = std::collections::HashMap::new();
+    let sizes = [(24usize, 16usize, 20usize), (16, 16, 16), (30, 10, 8), (8, 40, 12)];
+    for i in 0..8u64 {
+        let (m, n, k) = sizes[i as usize % sizes.len()];
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        expected.insert(
+            i,
+            reference_matmul(fcamm::datatype::Semiring::PlusTimes, &a, &b, m, n, k),
+        );
+        jobs.push((m, n, k, a, b));
+    }
+    let (rx, base_id, count) = service.submit_batch(jobs);
+    assert_eq!(count, 8);
+    let mut workers_seen = std::collections::HashSet::new();
+    let mut seen_ids = std::collections::HashSet::new();
+    for _ in 0..count {
+        let resp = rx.recv().expect("batch response").expect("success");
+        workers_seen.insert(resp.worker);
+        assert!(resp.id >= base_id && resp.id < base_id + count as u64);
+        assert!(seen_ids.insert(resp.id), "duplicate response id");
+        let want = &expected[&(resp.id - base_id)];
+        for (g, w) in resp.c.iter().zip(want) {
+            assert!((g - w).abs() <= 2e-4 * (1.0 + w.abs()));
+        }
+    }
+    // The channel is closed once all responses are in.
+    assert!(rx.recv().is_err());
+    assert!(workers_seen.len() >= 2, "batch should spread across workers");
+    assert_eq!(service.stats.completed.load(std::sync::atomic::Ordering::Relaxed), 8);
+    service.shutdown();
+}
+
+#[test]
 fn table3_ours_is_the_only_open_source_row() {
     let (rows, _) = report::table3(vcu1525());
     let open: Vec<_> = rows.iter().filter(|r| r.open_source).collect();

@@ -1,0 +1,190 @@
+//! Property tests for the communication-avoiding schedule: every
+//! traversal order must produce bit-identical results, and measured
+//! transfers must equal the cost model's prediction — across ragged
+//! shapes, both execution modes, always (the native host-reference
+//! backend needs no generated artifacts).
+
+use fcamm::datatype::Semiring;
+use fcamm::runtime::Runtime;
+use fcamm::schedule::{order, ExecMode, Order, TiledExecutor, TilePlan};
+use fcamm::sim::exact::reference_matmul;
+use fcamm::util::prop::{check_n, small_biased};
+use fcamm::util::rng::Rng;
+
+fn native_exec(tile: &str) -> (Runtime, usize) {
+    let rt = Runtime::native_default().expect("native runtime");
+    let t = rt.manifest.find(tile).expect("tile artifact").m;
+    (rt, t)
+}
+
+/// Host reference with the executor's exact accumulation bracketing:
+/// per output tile, one f32 partial per k-slab (ascending k inside the
+/// slab, padded region included), partials added in ascending slab
+/// order. The reuse-mode executor must match this bit-for-bit for every
+/// traversal order.
+fn slabbed_reference(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    t: usize,
+) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for ks in 0..k.div_ceil(t) {
+        let k0 = ks * t;
+        for i in 0..m {
+            for j in 0..n {
+                let mut partial = 0f32;
+                for kk in k0..k0 + t {
+                    // Padded region multiplies as zero, exactly like the
+                    // packed slabs.
+                    if kk < k {
+                        partial += a[i * k + kk] * b[kk * n + j];
+                    } else {
+                        partial += 0.0;
+                    }
+                }
+                c[i * n + j] += partial;
+            }
+        }
+    }
+    c
+}
+
+fn assert_close(actual: &[f32], expected: &[f32], tol: f32, what: &str) {
+    assert_eq!(actual.len(), expected.len(), "{what}: length");
+    for (i, (x, e)) in actual.iter().zip(expected).enumerate() {
+        assert!(
+            (x - e).abs() <= tol * (1.0 + e.abs()),
+            "{what}: index {i}: {x} vs {e}"
+        );
+    }
+}
+
+#[test]
+fn all_orders_bit_identical_and_match_host_reference() {
+    let (rt, t) = native_exec("mmm_acc_f32_16");
+    let exec = TiledExecutor::with_artifact(&rt, "mmm_acc_f32_16").expect("executor");
+    check_n("orders-bit-identical", 24, |rng| {
+        let m = small_biased(rng, 1, 70) as usize;
+        let n = small_biased(rng, 1, 70) as usize;
+        let k = small_biased(rng, 1, 70) as usize;
+        let mut data = Rng::new(rng.next_u64());
+        let a = data.fill_normal_f32(m * k);
+        let b = data.fill_normal_f32(k * n);
+
+        // Reuse mode: bit-identical across every traversal order, and
+        // bit-identical to the slab-bracketed host reference.
+        let expected = slabbed_reference(&a, &b, m, n, k, t);
+        let mut reuse_runs = Vec::new();
+        for o in Order::ALL {
+            let run = exec.matmul_with(&a, &b, m, n, k, o, ExecMode::Reuse).expect("matmul");
+            assert_eq!(
+                run.c, expected,
+                "{o}: reuse-mode result must be bit-identical to the slabbed host reference \
+                 ({m}x{n}x{k}, tile {t})"
+            );
+            reuse_runs.push(run);
+        }
+
+        // Roundtrip mode (device-side accumulator chain): also
+        // order-invariant, and within fp tolerance of the f64 oracle.
+        let first = exec
+            .matmul_with(&a, &b, m, n, k, Order::ALL[0], ExecMode::Roundtrip)
+            .expect("roundtrip");
+        for &o in &Order::ALL[1..] {
+            let run = exec.matmul_with(&a, &b, m, n, k, o, ExecMode::Roundtrip).expect("roundtrip");
+            assert_eq!(run.c, first.c, "{o}: roundtrip order-invariance ({m}x{n}x{k})");
+        }
+
+        // Both modes agree with the f64-accumulated oracle to fp tolerance.
+        let oracle = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+        assert_close(&reuse_runs[0].c, &oracle, 2e-4, "reuse vs oracle");
+        assert_close(&first.c, &oracle, 2e-4, "roundtrip vs oracle");
+    });
+}
+
+#[test]
+fn measured_transfer_equals_cost_model_for_every_order() {
+    let (rt, t) = native_exec("mmm_acc_f32_16");
+    let exec = TiledExecutor::with_artifact(&rt, "mmm_acc_f32_16").expect("executor");
+    check_n("transfer-pinned", 24, |rng| {
+        let m = small_biased(rng, 1, 60) as usize;
+        let n = small_biased(rng, 1, 60) as usize;
+        let k = small_biased(rng, 1, 60) as usize;
+        let mut data = Rng::new(rng.next_u64());
+        let a = data.fill_normal_f32(m * k);
+        let b = data.fill_normal_f32(k * n);
+        for o in Order::ALL {
+            let plan = TilePlan::with_order(m, n, k, t, t, t, o);
+            let modeled = order::host_traffic(o, m, n, k, t, t, t);
+            assert_eq!(plan.transfer_elements(), modeled, "{o}: plan vs model {m}x{n}x{k}");
+
+            let run = exec.matmul_with(&a, &b, m, n, k, o, ExecMode::Reuse).expect("matmul");
+            assert_eq!(
+                run.transfer_elements, modeled,
+                "{o}: measured vs model {m}x{n}x{k}"
+            );
+            assert_eq!(run.transfer_elements, run.plan.transfer_elements());
+
+            let naive = exec.matmul_with(&a, &b, m, n, k, o, ExecMode::Roundtrip).expect("matmul");
+            assert_eq!(
+                naive.transfer_elements,
+                order::host_traffic_naive(m, n, k, t, t, t),
+                "{o}: roundtrip measured vs naive model"
+            );
+            assert_eq!(naive.transfer_elements, naive.plan.transfer_elements_naive());
+            assert!(run.transfer_elements <= naive.transfer_elements);
+        }
+    });
+}
+
+#[test]
+fn auto_selection_is_argmin_and_beats_tile_major_when_nonsquare() {
+    check_n("selection-argmin", 64, |rng| {
+        let t = small_biased(rng, 1, 48) as usize;
+        let m = small_biased(rng, 1, 200) as usize;
+        let n = small_biased(rng, 1, 200) as usize;
+        let k = small_biased(rng, 1, 200) as usize;
+        let best = Order::select(m, n, k, t, t, t);
+        let cost = |o| order::host_traffic(o, m, n, k, t, t, t);
+        for o in Order::ALL {
+            assert!(cost(best) <= cost(o), "select not argmin for {m}x{n}x{k}/{t}");
+        }
+    });
+    // A concrete non-square shape where the sweep strictly wins.
+    let tm_cost = order::host_traffic(Order::TileMajor, 256, 512, 256, 128, 128, 128);
+    let sel = Order::select(256, 512, 256, 128, 128, 128);
+    let sel_cost = order::host_traffic(sel, 256, 512, 256, 128, 128, 128);
+    assert!(sel != Order::TileMajor);
+    assert!(
+        sel_cost < tm_cost,
+        "selected {sel} ({sel_cost}) must strictly beat tile-major ({tm_cost})"
+    );
+}
+
+#[test]
+fn default_matmul_uses_selected_order_and_larger_tiles_work() {
+    // The public `matmul` entry point (128³ default artifact): auto order,
+    // reuse mode, ragged shape.
+    let rt = Runtime::native_default().expect("native runtime");
+    let exec = TiledExecutor::from_runtime(&rt).expect("executor");
+    assert_eq!(exec.tile_shape(), (128, 128, 128));
+    let mut rng = Rng::new(99);
+    let (m, n, k) = (130usize, 260usize, 70usize);
+    let a = rng.fill_normal_f32(m * k);
+    let b = rng.fill_normal_f32(k * n);
+    let run = exec.matmul(&a, &b, m, n, k).expect("matmul");
+    assert_eq!(run.order, Order::select(m, n, k, 128, 128, 128));
+    assert_eq!(run.steps_executed, 2 * 3 * 1);
+    assert_eq!(run.transfer_elements, run.plan.transfer_elements());
+    let oracle = reference_matmul(Semiring::PlusTimes, &a, &b, m, n, k);
+    assert_close(&run.c, &oracle, 2e-4, "auto matmul vs oracle");
+}
+
+#[test]
+fn non_accumulate_artifact_is_rejected() {
+    let rt = Runtime::native_default().expect("native runtime");
+    assert!(TiledExecutor::with_artifact(&rt, "mmm_f32_256").is_err());
+}

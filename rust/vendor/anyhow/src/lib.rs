@@ -1,0 +1,220 @@
+//! Offline, API-compatible shim for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the subset of anyhow that fcamm uses: an opaque [`Error`]
+//! carrying a rendered message chain, the [`Result`] alias, the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the [`Context`] extension
+//! trait for `Result` and `Option`.
+//!
+//! Deliberate simplifications vs the real crate: the error is stored as a
+//! flattened string chain (sources are rendered eagerly with `: `
+//! separators, which is also what `{:#}` prints in anyhow), and there is
+//! no downcasting or backtrace capture. Nothing in this repo relies on
+//! either.
+
+use std::fmt::{self, Debug, Display};
+
+/// Opaque error: a rendered message chain.
+///
+/// Like `anyhow::Error`, this type deliberately does NOT implement
+/// `std::error::Error` — that is what makes the blanket
+/// `From<E: std::error::Error>` impl and the twin `Context` impls
+/// coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with an outer context message (`context: inner`).
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Render the full source chain eagerly.
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+/// Attach context to errors (and missing `Option` values).
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Coherent with the impl above because `Error` does not implement
+// `std::error::Error` (the same trick the real anyhow uses).
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let what = "tile";
+        let e = anyhow!("bad {what} at {}", 7);
+        assert_eq!(e.to_string(), "bad tile at 7");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_err() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), _> = Err(io_err());
+        let e = r.context("opening artifact").unwrap_err();
+        assert_eq!(e.to_string(), "opening artifact: missing");
+
+        let r: Result<(), Error> = Err(anyhow!("inner"));
+        let e = r.with_context(|| format!("layer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "layer 2: inner");
+
+        let o: Option<u32> = None;
+        let e = o.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn alternate_display_matches_plain() {
+        let e = anyhow!("ctx").context("outer");
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+        assert_eq!(format!("{e:?}"), "outer: ctx");
+    }
+}

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Standard pre-merge gate: build, test, and a quick hot-path bench run
+# (writes BENCH_hotpath.json at the repo root for perf tracking).
+#
+# Usage: scripts/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo bench --bench hotpath -- --quick =="
+cargo bench --bench hotpath -- --quick
+
+echo "== check.sh: all gates passed =="
