@@ -12,12 +12,20 @@
 //! double buffering — `ExecMode::Reuse`), plus a kernel-free pack/plan
 //! microbench isolating the pure host-side packing cost of the two
 //! schedules.
+//!
+//! The kernel section compares the seed's naive triple loop against the
+//! blocked semiring microkernel engine (`runtime::kernel`) on a 512³ f32
+//! matmul (GF/s, seed-vs-blocked speedup, thread count) and the min-plus
+//! distance product (Gops/s), asserting bit-identical results; the
+//! `kernel512_*` / `distance256_*` metrics in `BENCH_hotpath.json` are
+//! the regression tripwire for the native compute path.
 
 use fcamm::datatype::DataType;
 use fcamm::device::catalog::vcu1525;
 use fcamm::model::selection::{derive_tiling, select_parameters, SelectionOptions};
 use fcamm::model::tiling::TilingConfig;
 use fcamm::model::{compute, io};
+use fcamm::runtime::kernel::{self, oracle, ALayout, MinPlusF32, PlusTimesF32};
 use fcamm::runtime::Runtime;
 use fcamm::schedule::executor::{pack_a_slab, pack_b_slab};
 use fcamm::schedule::loopnest;
@@ -45,7 +53,9 @@ fn main() {
     all.push(bench.run("q_elements_hardware 16384^3", || {
         io::q_elements_hardware(paper, 16384, 16384, 16384)
     }));
-    all.push(bench.run("total_cycles 16384^3", || compute::total_cycles(paper, 16384, 16384, 16384)));
+    all.push(
+        bench.run("total_cycles 16384^3", || compute::total_cycles(paper, 16384, 16384, 16384)),
+    );
 
     all.push(bench.run("derive_tiling x_p=192", || {
         derive_tiling(&device, DataType::F32, 192, 8).unwrap()
@@ -64,7 +74,9 @@ fn main() {
     let a = rng.fill_normal_f32(m * k);
     let b = rng.fill_normal_f32(k * n);
     let sim = ExactSim::new(t_small);
-    all.push(bench.run("exact sim 64^3 (N_c=32)", || sim.run(&a, &b, m, n, k).report.total_cycles()));
+    all.push(
+        bench.run("exact sim 64^3 (N_c=32)", || sim.run(&a, &b, m, n, k).report.total_cycles()),
+    );
 
     // Loop-nest enumeration (invariant-test machinery).
     all.push(bench.run("loopnest visits 32x32x8", || loopnest::visits(t_small, 32, 32, 8).len()));
@@ -160,6 +172,88 @@ fn main() {
         );
     }
 
+    // --- Native microkernel engine: seed naive loop vs blocked ---------
+    // The compute kernel every native-backend call bottoms out on. The
+    // seed's naive triple loop (kept as `kernel::oracle`) is the
+    // baseline; the blocked engine adds register microtiles, packed L2
+    // panels, and row-panel threads (`PALLAS_NATIVE_THREADS` override).
+    // Results are bit-identical by contract — asserted here on the full
+    // benched shapes, pinned across ragged shapes by
+    // `rust/tests/kernel_property.rs`.
+    {
+        let threads = kernel::native_threads();
+        let (gm, gn, gk) = (512usize, 512usize, 512usize);
+        let ka = rng.fill_normal_f32(gm * gk);
+        let kb = rng.fill_normal_f32(gk * gn);
+        let flops = 2.0 * (gm * gn * gk) as f64;
+        let slow = Bench::slow().maybe_quick();
+        // The closures stash their last result so the bit-identity check
+        // below reuses the already-benched outputs (inputs are fixed, so
+        // every iteration produces the same vectors) instead of paying
+        // for an extra untimed 512³ pass of each kernel.
+        let mut naive_out: Vec<f32> = Vec::new();
+        let naive = slow.run("kernel 512^3 f32 (seed: naive triple loop)", || {
+            naive_out = oracle::gemm_f32(None, &ka, &kb, gm, gn, gk);
+            naive_out.len()
+        });
+        let mut blocked_out: Vec<f32> = Vec::new();
+        let blocked = slow.run(&format!("kernel 512^3 f32 (blocked, {threads} threads)"), || {
+            blocked_out = kernel::gemm(PlusTimesF32, None, &ka, ALayout::RowMajor, &kb, gm, gn, gk);
+            blocked_out.len()
+        });
+        let speedup = naive.median_ns / blocked.median_ns;
+        println!(
+            "kernel engine 512^3 f32: naive {:.2} GF/s -> blocked {:.2} GF/s ({:.2}x, {} threads)",
+            naive.gops(flops),
+            blocked.gops(flops),
+            speedup,
+            threads
+        );
+        assert_eq!(
+            blocked_out, naive_out,
+            "blocked f32 kernel must be bit-identical to the naive oracle"
+        );
+        metrics.push(("kernel512_naive_gflops".to_string(), naive.gops(flops)));
+        metrics.push(("kernel512_blocked_gflops".to_string(), blocked.gops(flops)));
+        metrics.push(("kernel512_speedup".to_string(), speedup));
+        metrics.push(("native_threads".to_string(), threads as f64));
+        all.push(naive);
+        all.push(blocked);
+
+        // Min-plus (distance product) through the same engine: the ops
+        // rate counts one add + one min per lane step.
+        let (dm, dn, dk) = (256usize, 256usize, 256usize);
+        let da = rng.fill_normal_f32(dm * dk);
+        let db = rng.fill_normal_f32(dk * dn);
+        let dops = 2.0 * (dm * dn * dk) as f64;
+        let mut dist_naive_out: Vec<f32> = Vec::new();
+        let dist_naive = slow.run("distance 256^3 min-plus (seed: naive)", || {
+            dist_naive_out = oracle::distance_f32(&da, &db, dm, dn, dk);
+            dist_naive_out.len()
+        });
+        let mut dist_blocked_out: Vec<f32> = Vec::new();
+        let dist_blocked = slow.run("distance 256^3 min-plus (blocked engine)", || {
+            dist_blocked_out =
+                kernel::gemm(MinPlusF32, None, &da, ALayout::RowMajor, &db, dm, dn, dk);
+            dist_blocked_out.len()
+        });
+        let dist_speedup = dist_naive.median_ns / dist_blocked.median_ns;
+        println!(
+            "kernel engine distance 256^3: naive {:.2} Gops/s -> blocked {:.2} Gops/s ({:.2}x)",
+            dist_naive.gops(dops),
+            dist_blocked.gops(dops),
+            dist_speedup
+        );
+        assert_eq!(
+            dist_blocked_out, dist_naive_out,
+            "blocked min-plus kernel must be bit-identical to the naive oracle"
+        );
+        metrics.push(("distance256_blocked_gops".to_string(), dist_blocked.gops(dops)));
+        metrics.push(("distance256_speedup".to_string(), dist_speedup));
+        all.push(dist_naive);
+        all.push(dist_blocked);
+    }
+
     // --- Runtime hot path: seed round-trip vs reuse executor -----------
     // Uses generated PJRT artifacts when present, the native
     // host-reference backend otherwise — the schedule comparison is the
@@ -196,7 +290,8 @@ fn main() {
             run_new.order.name()
         );
         metrics.push(("matmul256_speedup_vs_roundtrip".to_string(), speedup));
-        metrics.push(("matmul256_transfer_roundtrip".to_string(), run_old.transfer_elements as f64));
+        metrics
+            .push(("matmul256_transfer_roundtrip".to_string(), run_old.transfer_elements as f64));
         metrics.push(("matmul256_transfer_reuse".to_string(), run_new.transfer_elements as f64));
         all.push(old);
         all.push(new);

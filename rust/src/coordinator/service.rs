@@ -22,7 +22,11 @@
 //! not `Send`, so each worker owns a *private* runtime — mirroring one
 //! compiled kernel instance per hardware partition. Without generated
 //! artifacts the workers fall back to the native host-reference runtime,
-//! so the service runs end-to-end in any environment.
+//! so the service runs end-to-end in any environment. Native workers
+//! compute through the blocked microkernel engine (`runtime::kernel`),
+//! whose auto thread policy keeps tile-sized calls single-threaded —
+//! worker-level parallelism is the scaling axis here, not nested kernel
+//! threads.
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;

@@ -73,6 +73,19 @@ impl Semiring {
             Semiring::MinPlus => "min_plus",
         }
     }
+
+    /// The semiring a manifest artifact `op` evaluates (`None` for ops
+    /// the runtime does not know). The native backend's blocked
+    /// microkernel engine (`runtime::kernel`) monomorphizes these onto
+    /// its `SemiringOps` instantiations — plus-times for the matmul
+    /// family, min-plus for the distance product.
+    pub fn for_op(op: &str) -> Option<Semiring> {
+        match op {
+            "matmul" | "matmul_acc" | "matmul_at" => Some(Semiring::PlusTimes),
+            "distance" => Some(Semiring::MinPlus),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +115,16 @@ mod tests {
                 assert_eq!(s.add_f32(s.zero_f32(), v), v);
             }
         }
+    }
+
+    #[test]
+    fn for_op_maps_matmul_family_and_distance() {
+        for op in ["matmul", "matmul_acc", "matmul_at"] {
+            assert_eq!(Semiring::for_op(op), Some(Semiring::PlusTimes), "{op}");
+        }
+        assert_eq!(Semiring::for_op("distance"), Some(Semiring::MinPlus));
+        assert_eq!(Semiring::for_op("cholesky"), None);
+        assert_eq!(Semiring::for_op(""), None);
     }
 
     #[test]

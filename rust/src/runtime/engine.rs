@@ -10,8 +10,11 @@
 //!   default).
 //! * **Native** (default) — the pure-Rust host-reference interpreter in
 //!   [`super::native`], executing the op semantics recorded in the
-//!   manifest spec. Same shapes, same validation, deterministic
-//!   ascending-k accumulation.
+//!   manifest spec through the blocked semiring microkernel engine
+//!   ([`super::kernel`]: register microtiles, packed L2 panels,
+//!   row-panel threads — `PALLAS_NATIVE_THREADS` overrides the width).
+//!   Same shapes, same validation, deterministic ascending-k
+//!   accumulation, bit-identical to the seed's naive loops.
 
 use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,736 @@
+//! Tiled semiring microkernel engine: the native backend's compute core.
+//!
+//! The paper executes every workload through one two-level tiling
+//! discipline — register-resident *compute tiles* fed by fast-memory
+//! *memory tiles* sized to the on-chip budget (Eq. 6), replicated across
+//! a PE grid. This module mirrors that hierarchy on the host CPU so the
+//! native reference backend is a measurable baseline rather than a
+//! cache-hostile stub:
+//!
+//! * **Register microtile** (`MR`×`NR` accumulators, [`microkernel`]) —
+//!   the compute tile: one ⊕/⊗ per lane per `k` step, held in registers
+//!   across the whole packed panel depth.
+//! * **Packed panels** (`MC`×`KC` of A, `KC`×`NC` of B, [`BlockConfig`])
+//!   — the memory tile: operands are repacked into microtile-major
+//!   layout so the microkernel streams contiguously, and transposed-A
+//!   inputs are handled *by the packing routine*, not by a separate
+//!   kernel.
+//! * **Row-panel thread bands** ([`gemm_with`]) — the PE grid: the `m`
+//!   dimension splits into per-thread bands under `std::thread::scope`,
+//!   `PALLAS_NATIVE_THREADS` overriding the auto width.
+//!
+//! Everything is generic over a [`SemiringOps`] instantiation, so
+//! plus-times (f32 / f64 / wrapping integers) and min-plus (the distance
+//! product) share one code path — the software analogue of the paper's
+//! Sec. 5.2 "replace multiply and add with add and minimum".
+//!
+//! **Bit-exactness contract:** for every output element the engine folds
+//! contributions in ascending `k` with a single accumulator, starting
+//! from the ⊕-identity (or the C input), exactly like the seed's naive
+//! triple loop — panels are visited in ascending `pc`, the microkernel
+//! walks `kk` ascending, and each row belongs to exactly one thread
+//! band. Blocked results are therefore **bit-identical** to the
+//! [`oracle`] kernels for every semiring, which the property tests pin
+//! (`rust/tests/kernel_property.rs`).
+
+// GEMM entry points necessarily carry (semiring, config, c0, a, layout,
+// b, m, n, k); bundling them into a struct would obscure the BLAS-shaped
+// call sites. The zero-fill edges of the packing routines index with
+// computed offsets a range-loop expresses most directly.
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+
+/// Microtile rows (A-side register blocking).
+pub const MR: usize = 8;
+/// Microtile columns (B-side register blocking; one or two SIMD vectors
+/// after autovectorization).
+pub const NR: usize = 8;
+
+/// Env var overriding the thread-band width (`0`/unset/invalid = auto).
+pub const THREADS_ENV: &str = "PALLAS_NATIVE_THREADS";
+
+/// Hard cap on thread bands, whatever the override says.
+const MAX_THREADS: usize = 64;
+
+/// Below this `m·n·k`, the auto thread policy stays single-threaded: a
+/// 128³ executor tile (2 Mi madds) is served faster without spawn
+/// overhead, and the executor / GEMM service already parallelize at the
+/// tile and worker level. An explicit `BlockConfig::threads` or
+/// `PALLAS_NATIVE_THREADS` override is honored exactly, bypassing this.
+const PAR_MIN_OPS: u128 = 4 * 1024 * 1024;
+
+/// The (⊕, ⊗) algebra a microkernel lane evaluates, as a zero-sized
+/// instantiation so the innermost loop monomorphizes (no per-element
+/// dispatch). The runtime-level [`crate::datatype::Semiring`] enum maps
+/// manifest ops onto these instantiations via `Semiring::for_op`.
+pub trait SemiringOps: Copy + Send + Sync {
+    /// Element type flowing through the kernel.
+    type Elem: Copy + Send + Sync + PartialEq + std::fmt::Debug;
+
+    /// ⊕-identity: the accumulator initialization (0, +∞, …).
+    fn zero(self) -> Self::Elem;
+
+    /// One lane step: `acc ⊕ (a ⊗ b)`, written exactly as the naive
+    /// reference loop writes it so results stay bit-identical.
+    fn fma(self, acc: Self::Elem, a: Self::Elem, b: Self::Elem) -> Self::Elem;
+}
+
+/// Classical ring on f32: ⊕ = +, ⊗ = × (MMM).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlusTimesF32;
+
+impl SemiringOps for PlusTimesF32 {
+    type Elem = f32;
+    #[inline(always)]
+    fn zero(self) -> f32 {
+        0.0
+    }
+    #[inline(always)]
+    fn fma(self, acc: f32, a: f32, b: f32) -> f32 {
+        acc + a * b
+    }
+}
+
+/// Classical ring on f64.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlusTimesF64;
+
+impl SemiringOps for PlusTimesF64 {
+    type Elem = f64;
+    #[inline(always)]
+    fn zero(self) -> f64 {
+        0.0
+    }
+    #[inline(always)]
+    fn fma(self, acc: f64, a: f64, b: f64) -> f64 {
+        acc + a * b
+    }
+}
+
+/// Wrapping i32 ring (XLA integer-matmul semantics). Accumulating in
+/// wrapping i32 is exactly the seed's "accumulate in i64, truncate to
+/// 32 bits at the end": truncation mod 2³² is a ring homomorphism, so
+/// products and sums may be reduced lane-local and the output emitted in
+/// one pass — no intermediate `Vec<i64>`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlusTimesI32Wrap;
+
+impl SemiringOps for PlusTimesI32Wrap {
+    type Elem = i32;
+    #[inline(always)]
+    fn zero(self) -> i32 {
+        0
+    }
+    #[inline(always)]
+    fn fma(self, acc: i32, a: i32, b: i32) -> i32 {
+        acc.wrapping_add(a.wrapping_mul(b))
+    }
+}
+
+/// Wrapping u32 ring (same mod-2³² argument as [`PlusTimesI32Wrap`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlusTimesU32Wrap;
+
+impl SemiringOps for PlusTimesU32Wrap {
+    type Elem = u32;
+    #[inline(always)]
+    fn zero(self) -> u32 {
+        0
+    }
+    #[inline(always)]
+    fn fma(self, acc: u32, a: u32, b: u32) -> u32 {
+        acc.wrapping_add(a.wrapping_mul(b))
+    }
+}
+
+/// Tropical semiring on f32: ⊕ = min, ⊗ = + (distance product). The
+/// comparison is written `cand < acc` — the exact predicate of the naive
+/// distance loop — so NaN/∞ handling and tie-breaking are bit-identical
+/// to the oracle, which `f32::min` would not guarantee.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinPlusF32;
+
+impl SemiringOps for MinPlusF32 {
+    type Elem = f32;
+    #[inline(always)]
+    fn zero(self) -> f32 {
+        f32::INFINITY
+    }
+    #[inline(always)]
+    fn fma(self, acc: f32, a: f32, b: f32) -> f32 {
+        let cand = a + b;
+        if cand < acc {
+            cand
+        } else {
+            acc
+        }
+    }
+}
+
+/// How the A operand is stored. Transposition is absorbed by the packing
+/// routine — the microkernel never knows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ALayout {
+    /// Row-major `m`×`k` (plain matmul).
+    RowMajor,
+    /// Row-major `k`×`m` storage of Aᵀ (the `matmul_at` artifacts).
+    Transposed,
+}
+
+/// Cache-blocking parameters. Defaults target a ~64 KiB A panel (half an
+/// L2 way budget at f32) and a B panel that stays resident across the
+/// whole `ic` sweep; tests shrink these to single digits to force ragged
+/// panel edges on small matrices.
+#[derive(Debug, Clone)]
+pub struct BlockConfig {
+    /// A-panel rows (`MC`).
+    pub mc: usize,
+    /// Shared panel depth (`KC`).
+    pub kc: usize,
+    /// B-panel columns (`NC`).
+    pub nc: usize,
+    /// Exact thread-band count; `None` = `PALLAS_NATIVE_THREADS` if set,
+    /// else the auto policy (single-threaded below [`PAR_MIN_OPS`],
+    /// `available_parallelism` above).
+    pub threads: Option<usize>,
+}
+
+impl Default for BlockConfig {
+    fn default() -> Self {
+        BlockConfig { mc: 64, kc: 256, nc: 512, threads: None }
+    }
+}
+
+/// Thread-band width a default-config large GEMM runs with: the env
+/// override when set, else `available_parallelism`. Benches record this
+/// next to their GF/s numbers.
+pub fn native_threads() -> usize {
+    env_threads().unwrap_or_else(default_threads)
+}
+
+fn env_threads() -> Option<usize> {
+    threads_override(std::env::var(THREADS_ENV).ok().as_deref())
+}
+
+/// Parse a `PALLAS_NATIVE_THREADS` value; `None`/empty/non-numeric/`0`
+/// all mean "auto".
+fn threads_override(raw: Option<&str>) -> Option<usize> {
+    let t = raw?.trim().parse::<usize>().ok()?;
+    if t == 0 {
+        None
+    } else {
+        Some(t.min(MAX_THREADS))
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_THREADS)
+}
+
+/// Resolve how many row bands to run for an `m`×`n`×`k` problem.
+fn band_count(cfg: &BlockConfig, m: usize, n: usize, k: usize) -> usize {
+    band_count_from(cfg.threads.or_else(env_threads), m, n, k)
+}
+
+/// [`band_count`] with the explicit-override resolution already done
+/// (`requested` = `BlockConfig::threads` or the env var); pure, so tests
+/// pin the policy without touching process environment.
+fn band_count_from(requested: Option<usize>, m: usize, n: usize, k: usize) -> usize {
+    let t = match requested {
+        Some(t) => t.max(1),
+        None => {
+            let ops = m as u128 * n as u128 * k as u128;
+            if ops < PAR_MIN_OPS {
+                1
+            } else {
+                default_threads()
+            }
+        }
+    };
+    // Never hand a band fewer rows than one microtile can cover.
+    t.min(m.div_ceil(MR)).max(1)
+}
+
+/// Blocked semiring GEMM with default [`BlockConfig`]:
+/// `out = c0 ⊕ (A ⊗ B)` element-wise over the semiring, `c0` defaulting
+/// to the ⊕-identity matrix. `a` is `m`×`k` row-major (or `k`×`m` when
+/// `layout` is [`ALayout::Transposed`]), `b` is `k`×`n` row-major.
+pub fn gemm<S: SemiringOps>(
+    sr: S,
+    c0: Option<&[S::Elem]>,
+    a: &[S::Elem],
+    layout: ALayout,
+    b: &[S::Elem],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Vec<S::Elem> {
+    gemm_with(sr, &BlockConfig::default(), c0, a, layout, b, m, n, k)
+}
+
+/// [`gemm`] with explicit blocking parameters (tests force tiny panels
+/// and exact thread counts through this).
+pub fn gemm_with<S: SemiringOps>(
+    sr: S,
+    cfg: &BlockConfig,
+    c0: Option<&[S::Elem]>,
+    a: &[S::Elem],
+    layout: ALayout,
+    b: &[S::Elem],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Vec<S::Elem> {
+    assert!(cfg.mc > 0 && cfg.kc > 0 && cfg.nc > 0, "block sizes must be positive");
+    assert_eq!(a.len(), m * k, "A buffer does not match {m}x{k}");
+    assert_eq!(b.len(), k * n, "B buffer does not match {k}x{n}");
+    let mut out = match c0 {
+        Some(c) => {
+            assert_eq!(c.len(), m * n, "C buffer does not match {m}x{n}");
+            c.to_vec()
+        }
+        None => vec![sr.zero(); m * n],
+    };
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+
+    let bands = band_count(cfg, m, n, k);
+    if bands <= 1 {
+        gemm_band(sr, cfg, &mut out, a, layout, b, m, 0, m, n, k);
+        return out;
+    }
+
+    let base = m / bands;
+    let extra = m % bands;
+    let mut rest: &mut [S::Elem] = &mut out;
+    std::thread::scope(|scope| {
+        let mut row0 = 0usize;
+        for band in 0..bands {
+            let rows = base + usize::from(band < extra);
+            let taken = std::mem::take(&mut rest);
+            let (mine, tail) = taken.split_at_mut(rows * n);
+            rest = tail;
+            scope.spawn(move || gemm_band(sr, cfg, mine, a, layout, b, m, row0, rows, n, k));
+            row0 += rows;
+        }
+    });
+    out
+}
+
+/// One thread band: the full MC/KC/NC blocked walk over rows
+/// `[row0, row0+rows)`. `out` is that band's `rows`×`n` window of C.
+/// Panel order is `jc` → `pc` → `ic`, so every output element sees its
+/// `k` contributions in ascending order (the bit-exactness contract).
+///
+/// Each band packs its own B panels rather than sharing one packed
+/// buffer across threads: redundant pack work is `bands/m` of the
+/// compute (a few percent at typical widths) and buys fully independent
+/// bands — no barrier per `(jc, pc)` panel, no shared mutable state —
+/// mirroring the paper's PEs each owning a private operand stream.
+fn gemm_band<S: SemiringOps>(
+    sr: S,
+    cfg: &BlockConfig,
+    out: &mut [S::Elem],
+    a: &[S::Elem],
+    layout: ALayout,
+    b: &[S::Elem],
+    m: usize,
+    row0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    let mut packed_a = vec![sr.zero(); cfg.mc.next_multiple_of(MR) * cfg.kc];
+    let mut packed_b = vec![sr.zero(); cfg.kc * cfg.nc.next_multiple_of(NR)];
+
+    let mut jc = 0;
+    while jc < n {
+        let nc = cfg.nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = cfg.kc.min(k - pc);
+            pack_b(sr, &mut packed_b, b, n, pc, jc, kc, nc);
+            let mut ic = 0;
+            while ic < rows {
+                let mc = cfg.mc.min(rows - ic);
+                pack_a(sr, &mut packed_a, a, layout, m, k, row0 + ic, mc, pc, kc);
+                for jrb in 0..nc.div_ceil(NR) {
+                    let j0 = jrb * NR;
+                    let jv = NR.min(nc - j0);
+                    let pb = &packed_b[jrb * kc * NR..][..kc * NR];
+                    for irb in 0..mc.div_ceil(MR) {
+                        let i0 = irb * MR;
+                        let iv = MR.min(mc - i0);
+                        let pa = &packed_a[irb * kc * MR..][..kc * MR];
+                        let mut acc = [[sr.zero(); NR]; MR];
+                        for (i, arow) in acc.iter_mut().enumerate().take(iv) {
+                            let crow = &out[(ic + i0 + i) * n + jc + j0..][..jv];
+                            arow[..jv].copy_from_slice(crow);
+                        }
+                        microkernel(sr, &mut acc, pa, pb, kc);
+                        for (i, arow) in acc.iter().enumerate().take(iv) {
+                            let crow = &mut out[(ic + i0 + i) * n + jc + j0..][..jv];
+                            crow.copy_from_slice(&arow[..jv]);
+                        }
+                    }
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// The register-tile compute kernel: `MR`×`NR` accumulators over a
+/// `kc`-deep pair of packed micropanels. Lanes beyond the valid edge
+/// carry padding; their results are simply never stored back.
+#[inline(always)]
+fn microkernel<S: SemiringOps>(
+    sr: S,
+    acc: &mut [[S::Elem; NR]; MR],
+    pa: &[S::Elem],
+    pb: &[S::Elem],
+    kc: usize,
+) {
+    debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
+    for kk in 0..kc {
+        let av: [S::Elem; MR] = pa[kk * MR..(kk + 1) * MR].try_into().unwrap();
+        let bv: [S::Elem; NR] = pb[kk * NR..(kk + 1) * NR].try_into().unwrap();
+        for (arow, &ai) in acc.iter_mut().zip(av.iter()) {
+            for (lane, &bj) in arow.iter_mut().zip(bv.iter()) {
+                *lane = sr.fma(*lane, ai, bj);
+            }
+        }
+    }
+}
+
+/// Pack an `mc`×`kc` A panel (rows `row0..row0+mc`, depth `pc..pc+kc`)
+/// into microtile-major layout: per `MR`-row block, `MR` lane values
+/// contiguous per `k` step. Transposed-A storage is absorbed here — the
+/// two match arms read `a[row][k]` vs `a[k][row]` — and ragged lane
+/// edges pad with the ⊕-identity (padding lanes are never stored back,
+/// so the value is immaterial; the identity keeps them finite).
+fn pack_a<S: SemiringOps>(
+    sr: S,
+    packed: &mut [S::Elem],
+    a: &[S::Elem],
+    layout: ALayout,
+    m: usize,
+    k: usize,
+    row0: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+) {
+    for irb in 0..mc.div_ceil(MR) {
+        let base = irb * kc * MR;
+        let i0 = irb * MR;
+        let iv = MR.min(mc - i0);
+        match layout {
+            ALayout::RowMajor => {
+                for i in 0..iv {
+                    let src = &a[(row0 + i0 + i) * k + pc..][..kc];
+                    for (kk, &v) in src.iter().enumerate() {
+                        packed[base + kk * MR + i] = v;
+                    }
+                }
+                for i in iv..MR {
+                    for kk in 0..kc {
+                        packed[base + kk * MR + i] = sr.zero();
+                    }
+                }
+            }
+            ALayout::Transposed => {
+                for kk in 0..kc {
+                    let src = &a[(pc + kk) * m + row0 + i0..][..iv];
+                    let dst = &mut packed[base + kk * MR..][..MR];
+                    dst[..iv].copy_from_slice(src);
+                    for lane in dst[iv..].iter_mut() {
+                        *lane = sr.zero();
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack a `kc`×`nc` B panel (depth `pc..pc+kc`, columns `jc..jc+nc`)
+/// into microtile-major layout: per `NR`-column block, `NR` lane values
+/// contiguous per `k` step, ragged edges padded with the ⊕-identity.
+fn pack_b<S: SemiringOps>(
+    sr: S,
+    packed: &mut [S::Elem],
+    b: &[S::Elem],
+    n: usize,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+) {
+    for jrb in 0..nc.div_ceil(NR) {
+        let base = jrb * kc * NR;
+        let j0 = jrb * NR;
+        let jv = NR.min(nc - j0);
+        for kk in 0..kc {
+            let src = &b[(pc + kk) * n + jc + j0..][..jv];
+            let dst = &mut packed[base + kk * NR..][..NR];
+            dst[..jv].copy_from_slice(src);
+            for lane in dst[jv..].iter_mut() {
+                *lane = sr.zero();
+            }
+        }
+    }
+}
+
+/// Naive triple-loop reference kernels — the seed implementation,
+/// verbatim. **Not on any production path**: unit and property tests use
+/// them as the semantics oracle, and `benches/hotpath.rs` as the
+/// measured baseline the blocked engine is compared against.
+pub mod oracle {
+    /// `out = c0 + a·b` (or `a·b` when `c0` is `None`), f32,
+    /// ascending-k accumulation per element.
+    pub fn gemm_f32(
+        c0: Option<&[f32]>,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Vec<f32> {
+        let mut out = match c0 {
+            Some(c) => c.to_vec(),
+            None => vec![0f32; m * n],
+        };
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                let brow = &b[kk * n..kk * n + n];
+                let orow = &mut out[i * n..i * n + n];
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `out = aᵀ·b` where `a` is stored (k × m).
+    pub fn gemm_at_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for kk in 0..k {
+            let arow = &a[kk * m..kk * m + m];
+            let brow = &b[kk * n..kk * n + n];
+            for i in 0..m {
+                let aik = arow[i];
+                let orow = &mut out[i * n..i * n + n];
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Min-plus (tropical) matrix product: the distance-product workload.
+    pub fn distance_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut out = vec![f32::INFINITY; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                let brow = &b[kk * n..kk * n + n];
+                let orow = &mut out[i * n..i * n + n];
+                for j in 0..n {
+                    let cand = aik + brow[j];
+                    if cand < orow[j] {
+                        orow[j] = cand;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Integer matmul accumulated in i64 (the seed's wide-accumulator
+    /// path; truncate to the storage width afterwards).
+    pub fn gemm_i64<T: Copy + Into<i64>>(
+        a: &[T],
+        b: &[T],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Vec<i64> {
+        let mut out = vec![0i64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let aik: i64 = a[i * k + kk].into();
+                for j in 0..n {
+                    out[i * n + j] =
+                        out[i * n + j].wrapping_add(aik.wrapping_mul(b[kk * n + j].into()));
+                }
+            }
+        }
+        out
+    }
+
+    /// f64 matmul, ascending-k accumulation.
+    pub fn gemm_f64(a: &[f64], b: &[f64], m: usize, n: usize, k: usize) -> Vec<f64> {
+        let mut out = vec![0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                for j in 0..n {
+                    out[i * n + j] += aik * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> BlockConfig {
+        // Single-digit panels: every shape below exercises ragged panel
+        // edges and multiple pc/ic/jc iterations.
+        BlockConfig { mc: 5, kc: 3, nc: 7, threads: Some(1) }
+    }
+
+    #[test]
+    fn blocked_f32_bit_identical_to_oracle_across_shapes() {
+        let mut rng = Rng::new(11);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (1, 17, 9),
+            (23, 1, 6),
+            (8, 8, 8),
+            (9, 17, 5),
+            (16, 24, 32),
+            (33, 29, 41),
+        ] {
+            let a = rng.fill_normal_f32(m * k);
+            let b = rng.fill_normal_f32(k * n);
+            let want = oracle::gemm_f32(None, &a, &b, m, n, k);
+            for cfg in [BlockConfig::default(), tiny_cfg()] {
+                let got = gemm_with(PlusTimesF32, &cfg, None, &a, ALayout::RowMajor, &b, m, n, k);
+                assert_eq!(got, want, "shape {m}x{n}x{k} cfg {cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn c0_accumulation_bit_identical() {
+        let mut rng = Rng::new(12);
+        let (m, n, k) = (13, 11, 7);
+        let c0 = rng.fill_normal_f32(m * n);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let want = oracle::gemm_f32(Some(&c0), &a, &b, m, n, k);
+        let got =
+            gemm_with(PlusTimesF32, &tiny_cfg(), Some(&c0), &a, ALayout::RowMajor, &b, m, n, k);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn transposed_a_matches_at_oracle() {
+        let mut rng = Rng::new(13);
+        let (m, n, k) = (14, 10, 9);
+        let at = rng.fill_normal_f32(k * m); // stored (k, m)
+        let b = rng.fill_normal_f32(k * n);
+        let want = oracle::gemm_at_f32(&at, &b, m, n, k);
+        for cfg in [BlockConfig::default(), tiny_cfg()] {
+            let got = gemm_with(PlusTimesF32, &cfg, None, &at, ALayout::Transposed, &b, m, n, k);
+            assert_eq!(got, want, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn min_plus_matches_distance_oracle() {
+        let mut rng = Rng::new(14);
+        let (m, n, k) = (12, 19, 8);
+        let mut a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        a[3] = f32::INFINITY; // unreachable edge survives the min-fold
+        let want = oracle::distance_f32(&a, &b, m, n, k);
+        let got = gemm_with(MinPlusF32, &tiny_cfg(), None, &a, ALayout::RowMajor, &b, m, n, k);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn wrapping_i32_equals_i64_truncation_under_overflow() {
+        let mut rng = Rng::new(15);
+        let (m, n, k) = (9, 7, 11);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.next_u32() as i32).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.next_u32() as i32).collect();
+        let want: Vec<i32> =
+            oracle::gemm_i64(&a, &b, m, n, k).iter().map(|&v| v as i32).collect();
+        let got =
+            gemm_with(PlusTimesI32Wrap, &tiny_cfg(), None, &a, ALayout::RowMajor, &b, m, n, k);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn f64_matches_oracle() {
+        let (m, n, k) = (10, 6, 13);
+        let a: Vec<f64> = (0..m * k).map(|v| (v as f64).sin()).collect();
+        let b: Vec<f64> = (0..k * n).map(|v| (v as f64).cos()).collect();
+        let want = oracle::gemm_f64(&a, &b, m, n, k);
+        let got = gemm_with(PlusTimesF64, &tiny_cfg(), None, &a, ALayout::RowMajor, &b, m, n, k);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn explicit_thread_override_is_exact_and_bit_identical() {
+        let mut rng = Rng::new(16);
+        let (m, n, k) = (37, 19, 23);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let want = oracle::gemm_f32(None, &a, &b, m, n, k);
+        for threads in [2, 3, 5] {
+            let cfg = BlockConfig { threads: Some(threads), ..tiny_cfg() };
+            assert_eq!(band_count_from(Some(threads), m, n, k), threads.min(m.div_ceil(MR)));
+            let got = gemm_with(PlusTimesF32, &cfg, None, &a, ALayout::RowMajor, &b, m, n, k);
+            assert_eq!(got, want, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_return_identity_or_empty() {
+        // k = 0: nothing to accumulate — C stays at c0 / the ⊕-identity.
+        let got = gemm(PlusTimesF32, None, &[], ALayout::RowMajor, &[], 3, 4, 0);
+        assert_eq!(got, vec![0f32; 12]);
+        let got = gemm(MinPlusF32, None, &[], ALayout::RowMajor, &[], 2, 2, 0);
+        assert_eq!(got, vec![f32::INFINITY; 4]);
+        let c0 = vec![1.5f32; 6];
+        let got = gemm(PlusTimesF32, Some(&c0), &[], ALayout::RowMajor, &[], 2, 3, 0);
+        assert_eq!(got, c0);
+        // m = 0 / n = 0: empty output.
+        assert!(gemm(PlusTimesF32, None, &[], ALayout::RowMajor, &[0.0; 8], 0, 2, 4).is_empty());
+        assert!(gemm(PlusTimesF32, None, &[0.0; 8], ALayout::RowMajor, &[], 2, 0, 4).is_empty());
+    }
+
+    #[test]
+    fn auto_band_policy_keeps_executor_tiles_single_threaded() {
+        // 128³ (one executor tile) stays on the calling thread…
+        assert_eq!(band_count_from(None, 128, 128, 128), 1);
+        // …and a band never gets fewer rows than one microtile.
+        assert_eq!(band_count_from(Some(64), 9, 512, 512), 2);
+        assert_eq!(band_count_from(Some(64), 1, 512, 512), 1);
+        // Explicit overrides bypass the size threshold exactly.
+        assert_eq!(band_count_from(Some(3), 128, 128, 128), 3);
+    }
+
+    #[test]
+    fn threads_override_parsing() {
+        assert_eq!(threads_override(None), None);
+        assert_eq!(threads_override(Some("")), None);
+        assert_eq!(threads_override(Some("0")), None);
+        assert_eq!(threads_override(Some("junk")), None);
+        assert_eq!(threads_override(Some(" 6 ")), Some(6));
+        assert_eq!(threads_override(Some("4096")), Some(MAX_THREADS));
+    }
+}

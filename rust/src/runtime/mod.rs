@@ -16,6 +16,7 @@
 
 pub mod artifact;
 pub mod engine;
+pub mod kernel;
 pub mod native;
 
 pub use artifact::{ArtifactSpec, Manifest};

@@ -8,19 +8,34 @@
 //! host pipeline with bit-reproducible numerics even when no PJRT runtime
 //! (or no generated artifacts directory) is available.
 //!
-//! Accumulation order is deliberately fixed — ascending `k`, f32
-//! accumulator, starting from the C input — so a chained
-//! `matmul_acc` over k-slabs reproduces the plain sequential-k sum
-//! exactly, and all plan traversal orders are bit-identical (the
-//! property the schedule tests pin).
+//! All ops execute through the blocked semiring microkernel engine
+//! ([`super::kernel`]): `matmul`, `matmul_acc`, and `matmul_at` are
+//! plus-times instantiations (transposed A absorbed by the packing
+//! routine), `distance` is the min-plus instantiation, and the integer
+//! dtypes accumulate wrapping-in-width in one pass (mod-2³² equivalent
+//! to the seed's accumulate-in-i64-then-truncate, without the second
+//! allocation).
+//!
+//! Accumulation order is deliberately fixed — ascending `k`, starting
+//! from the C input (or the ⊕-identity) — so a chained `matmul_acc` over
+//! k-slabs reproduces the plain sequential-k sum exactly, all plan
+//! traversal orders are bit-identical (the property the schedule tests
+//! pin), and every blocked result is bit-identical to the seed's naive
+//! loops (kept as [`super::kernel::oracle`]).
 
 use anyhow::{bail, Result};
 
+use crate::datatype::Semiring;
+
 use super::artifact::ArtifactSpec;
 use super::engine::HostTensor;
+use super::kernel::{
+    self, ALayout, MinPlusF32, PlusTimesF32, PlusTimesF64, PlusTimesI32Wrap, PlusTimesU32Wrap,
+};
 
 /// `out = c0 + a·b` (or `a·b` when `c0` is `None`), f32, ascending-k
-/// accumulation per element.
+/// accumulation per element. Thin wrapper over the blocked engine, kept
+/// as the executor's zero-acc entry point.
 pub fn gemm_f32(
     c0: Option<&[f32]>,
     a: &[f32],
@@ -29,100 +44,42 @@ pub fn gemm_f32(
     n: usize,
     k: usize,
 ) -> Vec<f32> {
-    let mut out = match c0 {
-        Some(c) => c.to_vec(),
-        None => vec![0f32; m * n],
-    };
-    for i in 0..m {
-        for kk in 0..k {
-            let aik = a[i * k + kk];
-            let brow = &b[kk * n..kk * n + n];
-            let orow = &mut out[i * n..i * n + n];
-            for j in 0..n {
-                orow[j] += aik * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// `out = aᵀ·b` where `a` is stored (k × m).
-fn gemm_at_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut out = vec![0f32; m * n];
-    for kk in 0..k {
-        let arow = &a[kk * m..kk * m + m];
-        let brow = &b[kk * n..kk * n + n];
-        for i in 0..m {
-            let aik = arow[i];
-            let orow = &mut out[i * n..i * n + n];
-            for j in 0..n {
-                orow[j] += aik * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// Min-plus (tropical) matrix product: the distance-product workload.
-fn distance_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut out = vec![f32::INFINITY; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let aik = a[i * k + kk];
-            let brow = &b[kk * n..kk * n + n];
-            let orow = &mut out[i * n..i * n + n];
-            for j in 0..n {
-                let cand = aik + brow[j];
-                if cand < orow[j] {
-                    orow[j] = cand;
-                }
-            }
-        }
-    }
-    out
+    kernel::gemm(PlusTimesF32, c0, a, ALayout::RowMajor, b, m, n, k)
 }
 
 /// f32 fast path mirroring `LoadedKernel::execute_f32`: inputs are
 /// pre-validated against the spec shapes by the caller.
+///
+/// The algebra is chosen by [`Semiring::for_op`] — an op unknown to the
+/// datatype layer is rejected here, so the dispatch table and the
+/// semiring mapping cannot silently diverge; within plus-times the op
+/// string then selects accumulation (`matmul_acc`) or the transposed-A
+/// packing (`matmul_at`).
 pub fn execute_f32(spec: &ArtifactSpec, inputs: &[&[f32]]) -> Result<Vec<f32>> {
     let (m, n, k) = (spec.m, spec.n, spec.k);
-    match spec.op.as_str() {
-        "matmul" => Ok(gemm_f32(None, inputs[0], inputs[1], m, n, k)),
-        "matmul_acc" => Ok(gemm_f32(Some(inputs[0]), inputs[1], inputs[2], m, n, k)),
-        "matmul_at" => Ok(gemm_at_f32(inputs[0], inputs[1], m, n, k)),
-        "distance" => Ok(distance_f32(inputs[0], inputs[1], m, n, k)),
-        other => bail!("native backend: unsupported op {other:?}"),
-    }
-}
-
-fn gemm_i64<T: Copy + Into<i64>>(a: &[T], b: &[T], m: usize, n: usize, k: usize) -> Vec<i64> {
-    let mut out = vec![0i64; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let aik: i64 = a[i * k + kk].into();
-            for j in 0..n {
-                out[i * n + j] = out[i * n + j].wrapping_add(aik.wrapping_mul(b[kk * n + j].into()));
-            }
+    let Some(semiring) = Semiring::for_op(&spec.op) else {
+        bail!("native backend: unsupported op {:?}", spec.op);
+    };
+    match (semiring, spec.op.as_str()) {
+        (Semiring::MinPlus, _) => {
+            Ok(kernel::gemm(MinPlusF32, None, inputs[0], ALayout::RowMajor, inputs[1], m, n, k))
+        }
+        (Semiring::PlusTimes, "matmul") => Ok(gemm_f32(None, inputs[0], inputs[1], m, n, k)),
+        (Semiring::PlusTimes, "matmul_acc") => {
+            Ok(gemm_f32(Some(inputs[0]), inputs[1], inputs[2], m, n, k))
+        }
+        (Semiring::PlusTimes, "matmul_at") => {
+            Ok(kernel::gemm(PlusTimesF32, None, inputs[0], ALayout::Transposed, inputs[1], m, n, k))
+        }
+        (Semiring::PlusTimes, other) => {
+            bail!("native backend: plus-times op {other:?} has no kernel instantiation")
         }
     }
-    out
-}
-
-fn gemm_f64(a: &[f64], b: &[f64], m: usize, n: usize, k: usize) -> Vec<f64> {
-    let mut out = vec![0f64; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let aik = a[i * k + kk];
-            for j in 0..n {
-                out[i * n + j] += aik * b[kk * n + j];
-            }
-        }
-    }
-    out
 }
 
 /// Typed path mirroring `LoadedKernel::execute`: dispatch on the spec's
-/// dtype. Integer matmuls use wrapping arithmetic (matching XLA).
+/// dtype. Integer matmuls use wrapping arithmetic (matching XLA),
+/// accumulated in-width in a single pass.
 pub fn execute(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<HostTensor> {
     let (m, n, k) = (spec.m, spec.n, spec.k);
     match spec.dtype.as_str() {
@@ -141,20 +98,20 @@ pub fn execute(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<HostTensor>
             Ok(HostTensor::F32(execute_f32(spec, &f32_inputs)?))
         }
         "float64" => match (spec.op.as_str(), inputs) {
-            ("matmul", [HostTensor::F64(a), HostTensor::F64(b)]) => {
-                Ok(HostTensor::F64(gemm_f64(a, b, m, n, k)))
-            }
+            ("matmul", [HostTensor::F64(a), HostTensor::F64(b)]) => Ok(HostTensor::F64(
+                kernel::gemm(PlusTimesF64, None, a, ALayout::RowMajor, b, m, n, k),
+            )),
             _ => bail!("{}: unsupported float64 op/inputs", spec.name),
         },
         "int32" => match (spec.op.as_str(), inputs) {
             ("matmul", [HostTensor::I32(a), HostTensor::I32(b)]) => Ok(HostTensor::I32(
-                gemm_i64(a, b, m, n, k).iter().map(|&v| v as i32).collect(),
+                kernel::gemm(PlusTimesI32Wrap, None, a, ALayout::RowMajor, b, m, n, k),
             )),
             _ => bail!("{}: unsupported int32 op/inputs", spec.name),
         },
         "uint32" => match (spec.op.as_str(), inputs) {
             ("matmul", [HostTensor::U32(a), HostTensor::U32(b)]) => Ok(HostTensor::U32(
-                gemm_i64(a, b, m, n, k).iter().map(|&v| v as u32).collect(),
+                kernel::gemm(PlusTimesU32Wrap, None, a, ALayout::RowMajor, b, m, n, k),
             )),
             _ => bail!("{}: unsupported uint32 op/inputs", spec.name),
         },
@@ -165,6 +122,7 @@ pub fn execute(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<HostTensor>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::kernel::oracle;
     use crate::runtime::Manifest;
     use crate::util::rng::Rng;
 
@@ -197,6 +155,17 @@ mod tests {
     }
 
     #[test]
+    fn unknown_op_is_rejected_via_semiring_mapping() {
+        // Dispatch consults `Semiring::for_op` first: an op the datatype
+        // layer doesn't know must fail cleanly, not panic on inputs.
+        let mut s = spec("matmul", 2, 2, 2);
+        s.op = "qr".into();
+        let a = [0f32; 4];
+        let err = execute_f32(&s, &[&a, &a]).unwrap_err();
+        assert!(err.to_string().contains("unsupported op"), "{err}");
+    }
+
+    #[test]
     fn matmul_matches_f64_reference() {
         let (m, n, k) = (7, 9, 11);
         let mut rng = Rng::new(3);
@@ -210,6 +179,16 @@ mod tests {
                 assert!((out[i * n + j] as f64 - exact).abs() < 1e-4, "({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_seed_oracle() {
+        let (m, n, k) = (33, 21, 40);
+        let mut rng = Rng::new(7);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let out = execute_f32(&spec("matmul", m, n, k), &[&a, &b]).unwrap();
+        assert_eq!(out, oracle::gemm_f32(None, &a, &b, m, n, k));
     }
 
     #[test]
@@ -241,6 +220,7 @@ mod tests {
         let at = rng.fill_normal_f32(k * m); // stored (k, m)
         let b = rng.fill_normal_f32(k * n);
         let out = execute_f32(&spec("matmul_at", m, n, k), &[&at, &b]).unwrap();
+        assert_eq!(out, oracle::gemm_at_f32(&at, &b, m, n, k), "vs seed oracle");
         let mut a = vec![0f32; m * k];
         for r in 0..k {
             for c in 0..m {
@@ -268,6 +248,7 @@ mod tests {
                 assert_eq!(out[i * n + j], exact);
             }
         }
+        assert_eq!(out, oracle::distance_f32(&a, &b, m, n, k), "vs seed oracle");
     }
 
     #[test]
@@ -286,5 +267,33 @@ mod tests {
                 assert_eq!(out[i * n + j] as i64, exact);
             }
         }
+    }
+
+    #[test]
+    fn integer_gemm_wraps_like_i64_truncation() {
+        // Overflowing values: one-pass wrapping-in-width accumulation
+        // must match the seed's widen-to-i64-then-truncate, for both
+        // signed and unsigned storage.
+        let (m, n, k) = (6, 5, 9);
+        let mut rng = Rng::new(8);
+        let ai: Vec<i32> = (0..m * k).map(|_| rng.next_u32() as i32).collect();
+        let bi: Vec<i32> = (0..k * n).map(|_| rng.next_u32() as i32).collect();
+        let mut s = spec("matmul", m, n, k);
+        s.dtype = "int32".into();
+        let out = execute(&s, &[HostTensor::I32(ai.clone()), HostTensor::I32(bi.clone())]).unwrap();
+        let HostTensor::I32(out) = out else { panic!("dtype") };
+        let want: Vec<i32> =
+            oracle::gemm_i64(&ai, &bi, m, n, k).iter().map(|&v| v as i32).collect();
+        assert_eq!(out, want);
+
+        let au: Vec<u32> = (0..m * k).map(|_| rng.next_u32()).collect();
+        let bu: Vec<u32> = (0..k * n).map(|_| rng.next_u32()).collect();
+        let mut s = spec("matmul", m, n, k);
+        s.dtype = "uint32".into();
+        let out = execute(&s, &[HostTensor::U32(au.clone()), HostTensor::U32(bu.clone())]).unwrap();
+        let HostTensor::U32(out) = out else { panic!("dtype") };
+        let want: Vec<u32> =
+            oracle::gemm_i64(&au, &bu, m, n, k).iter().map(|&v| v as u32).collect();
+        assert_eq!(out, want);
     }
 }

@@ -28,6 +28,13 @@
 //! is preserved as [`ExecMode::Roundtrip`] so benches can measure the
 //! win, and `transfer_elements` is *measured* from slabs actually shipped
 //! — pinned against `TilePlan::transfer_elements()` by tests.
+//!
+//! On the native backend each per-step kernel call lands on the blocked
+//! semiring microkernel engine (`runtime::kernel`). Tile-sized calls
+//! (≤128³) stay below the engine's auto-parallelism threshold, so the
+//! executor's own helper thread and the service's worker pool are never
+//! oversubscribed by nested kernel threads unless
+//! `PALLAS_NATIVE_THREADS` explicitly forces a width.
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;

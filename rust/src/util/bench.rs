@@ -24,6 +24,13 @@ impl Stats {
     pub fn throughput(&self, items: f64) -> f64 {
         items / (self.median_ns * 1e-9)
     }
+
+    /// Giga-operations/second given `ops` useful operations per
+    /// iteration (2·m·n·k for a GEMM: one ⊗ and one ⊕ per lane step —
+    /// GF/s for plus-times, Gops/s for min-plus).
+    pub fn gops(&self, ops: f64) -> f64 {
+        self.throughput(ops) * 1e-9
+    }
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -225,6 +232,8 @@ mod tests {
         };
         // 1000 items in 1 ms = 1M items/s
         assert!((s.throughput(1000.0) - 1e6).abs() < 1e-3);
+        // … which is 1e-3 Gops/s.
+        assert!((s.gops(1000.0) - 1e-3).abs() < 1e-12);
     }
 
     #[test]

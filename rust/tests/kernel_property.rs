@@ -1,0 +1,172 @@
+//! Property tests: the blocked semiring microkernel engine vs the naive
+//! seed oracle, bit-identical across ragged shapes, semirings, block
+//! configurations, and thread counts.
+//!
+//! The engine's contract (`runtime::kernel` module docs) is that every
+//! output element folds its `k` contributions in ascending order with a
+//! single accumulator, exactly like the seed's triple loops — so results
+//! must match the oracle *bit for bit*, not approximately, for every
+//! panel/microtile raggedness the blocking can produce. Shapes here
+//! deliberately include 1×N, M×1, and `k = 0`, and block sizes shrink to
+//! single digits so small matrices still cross many panel boundaries.
+
+use fcamm::runtime::kernel::{
+    self, oracle, ALayout, BlockConfig, MinPlusF32, PlusTimesF32, PlusTimesF64, PlusTimesI32Wrap,
+    PlusTimesU32Wrap,
+};
+use fcamm::util::prop;
+use fcamm::util::rng::Rng;
+
+/// Ragged shape generator: mostly arbitrary small dims, with the
+/// degenerate classes the blocking must survive forced in regularly.
+fn shape(rng: &mut Rng) -> (usize, usize, usize) {
+    let d = |rng: &mut Rng| prop::small_biased(rng, 1, 40) as usize;
+    match rng.gen_range(0, 6) {
+        0 => (1, d(rng), d(rng)),          // single output row
+        1 => (d(rng), 1, d(rng)),          // single output column
+        2 => (d(rng), d(rng), 0),          // nothing to accumulate
+        3 => (d(rng), d(rng), 1),          // one rank-1 update
+        _ => (d(rng), d(rng), d(rng)),
+    }
+}
+
+/// Block configs from degenerate (1×1×1 panels) through a few microtiles
+/// wide, with an exact thread-band override of 1–4.
+fn config(rng: &mut Rng) -> BlockConfig {
+    BlockConfig {
+        mc: prop::small_biased(rng, 1, 3 * kernel::MR as u64) as usize,
+        kc: prop::small_biased(rng, 1, 12) as usize,
+        nc: prop::small_biased(rng, 1, 3 * kernel::NR as u64) as usize,
+        threads: Some(1 + rng.gen_range(0, 4) as usize),
+    }
+}
+
+#[test]
+fn prop_f32_plus_times_bit_identical_to_oracle() {
+    prop::check("f32 blocked == naive oracle", |rng| {
+        let (m, n, k) = shape(rng);
+        let cfg = config(rng);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let c0 = if rng.next_u64() & 1 == 0 { Some(rng.fill_normal_f32(m * n)) } else { None };
+        let want = oracle::gemm_f32(c0.as_deref(), &a, &b, m, n, k);
+        let c0 = c0.as_deref();
+        let got = kernel::gemm_with(PlusTimesF32, &cfg, c0, &a, ALayout::RowMajor, &b, m, n, k);
+        assert_eq!(got, want, "{m}x{n}x{k} cfg {cfg:?}");
+    });
+}
+
+#[test]
+fn prop_transposed_a_bit_identical_to_at_oracle() {
+    prop::check("transposed-A packing == gemm_at oracle", |rng| {
+        let (m, n, k) = shape(rng);
+        let cfg = config(rng);
+        let at = rng.fill_normal_f32(k * m); // stored (k, m)
+        let b = rng.fill_normal_f32(k * n);
+        let want = oracle::gemm_at_f32(&at, &b, m, n, k);
+        let got =
+            kernel::gemm_with(PlusTimesF32, &cfg, None, &at, ALayout::Transposed, &b, m, n, k);
+        assert_eq!(got, want, "{m}x{n}x{k} cfg {cfg:?}");
+    });
+}
+
+#[test]
+fn prop_min_plus_bit_identical_to_distance_oracle() {
+    prop::check("min-plus blocked == distance oracle", |rng| {
+        let (m, n, k) = shape(rng);
+        let cfg = config(rng);
+        let mut a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        // Sprinkle unreachable edges: ∞ must fold through min untouched.
+        for v in a.iter_mut() {
+            if rng.gen_range(0, 8) == 0 {
+                *v = f32::INFINITY;
+            }
+        }
+        let want = oracle::distance_f32(&a, &b, m, n, k);
+        let got = kernel::gemm_with(MinPlusF32, &cfg, None, &a, ALayout::RowMajor, &b, m, n, k);
+        assert_eq!(got, want, "{m}x{n}x{k} cfg {cfg:?}");
+    });
+}
+
+#[test]
+fn prop_f64_bit_identical_to_oracle() {
+    prop::check("f64 blocked == naive oracle", |rng| {
+        let (m, n, k) = shape(rng);
+        let cfg = config(rng);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let want = oracle::gemm_f64(&a, &b, m, n, k);
+        let got = kernel::gemm_with(PlusTimesF64, &cfg, None, &a, ALayout::RowMajor, &b, m, n, k);
+        assert_eq!(got, want, "{m}x{n}x{k} cfg {cfg:?}");
+    });
+}
+
+#[test]
+fn prop_wrapping_integers_equal_i64_truncation() {
+    prop::check("wrapping i32/u32 == i64-accumulate-truncate oracle", |rng| {
+        let (m, n, k) = shape(rng);
+        let cfg = config(rng);
+        // Full-range values: products and sums overflow constantly, so
+        // this pins the mod-2³² equivalence, not just small-number math.
+        let ai: Vec<i32> = (0..m * k).map(|_| rng.next_u32() as i32).collect();
+        let bi: Vec<i32> = (0..k * n).map(|_| rng.next_u32() as i32).collect();
+        let want: Vec<i32> =
+            oracle::gemm_i64(&ai, &bi, m, n, k).iter().map(|&v| v as i32).collect();
+        let got =
+            kernel::gemm_with(PlusTimesI32Wrap, &cfg, None, &ai, ALayout::RowMajor, &bi, m, n, k);
+        assert_eq!(got, want, "i32 {m}x{n}x{k} cfg {cfg:?}");
+
+        let au: Vec<u32> = ai.iter().map(|&v| v as u32).collect();
+        let bu: Vec<u32> = bi.iter().map(|&v| v as u32).collect();
+        let want: Vec<u32> =
+            oracle::gemm_i64(&au, &bu, m, n, k).iter().map(|&v| v as u32).collect();
+        let got =
+            kernel::gemm_with(PlusTimesU32Wrap, &cfg, None, &au, ALayout::RowMajor, &bu, m, n, k);
+        assert_eq!(got, want, "u32 {m}x{n}x{k} cfg {cfg:?}");
+    });
+}
+
+#[test]
+fn prop_k_slab_chaining_bit_identical() {
+    // The executor's contract: accumulating k-slabs through c0 chaining
+    // reproduces the one-shot product bit-exactly, whatever the blocking.
+    prop::check("k-slab chaining == one shot", |rng| {
+        let d = |rng: &mut Rng| prop::small_biased(rng, 1, 24) as usize;
+        let (m, n) = (d(rng), d(rng));
+        let k = 2 + prop::small_biased(rng, 0, 22) as usize;
+        let cfg = config(rng);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let full = kernel::gemm_with(PlusTimesF32, &cfg, None, &a, ALayout::RowMajor, &b, m, n, k);
+
+        let split = 1 + rng.gen_range(0, k as u64 - 1) as usize;
+        let a_lo: Vec<f32> = (0..m).flat_map(|i| a[i * k..i * k + split].to_vec()).collect();
+        let a_hi: Vec<f32> = (0..m).flat_map(|i| a[i * k + split..(i + 1) * k].to_vec()).collect();
+        let b_lo = &b[..split * n];
+        let b_hi = &b[split * n..];
+        let c1 = kernel::gemm_with(
+            PlusTimesF32,
+            &cfg,
+            None,
+            &a_lo,
+            ALayout::RowMajor,
+            b_lo,
+            m,
+            n,
+            split,
+        );
+        let c2 = kernel::gemm_with(
+            PlusTimesF32,
+            &cfg,
+            Some(&c1),
+            &a_hi,
+            ALayout::RowMajor,
+            b_hi,
+            m,
+            n,
+            k - split,
+        );
+        assert_eq!(c2, full, "{m}x{n}x{k} split {split} cfg {cfg:?}");
+    });
+}

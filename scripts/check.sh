@@ -1,10 +1,25 @@
 #!/usr/bin/env bash
-# Standard pre-merge gate: build, test, and a quick hot-path bench run
-# (writes BENCH_hotpath.json at the repo root for perf tracking).
+# Standard pre-merge gate: format + lint, build, test, and a quick
+# hot-path bench run (writes BENCH_hotpath.json at the repo root for
+# perf tracking, including the seed-vs-blocked kernel speedup metrics).
 #
 # Usage: scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --all -- --check
+else
+  echo "(rustfmt component unavailable; skipping)"
+fi
+
+echo "== cargo clippy -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "(clippy component unavailable; skipping)"
+fi
 
 echo "== cargo build --release =="
 cargo build --release
