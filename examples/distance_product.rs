@@ -3,15 +3,19 @@
 //! product by replacing multiply and add with add and minimum").
 //!
 //! Builds a small road-network-style graph, then computes all-pairs
-//! shortest paths three ways and cross-checks them:
+//! shortest paths four ways and cross-checks them:
 //!   1. Floyd–Warshall on the host (oracle);
 //!   2. repeated distance-product squaring on the element-level hardware
 //!      simulator (real data through the PE chain);
-//!   3. repeated squaring through the min-plus Pallas artifact via PJRT.
+//!   3. repeated squaring through the min-plus Pallas artifact via PJRT;
+//!   4. min-plus requests through `GemmService` — the distance product
+//!      riding the full communication-avoiding tiled schedule (typed
+//!      data path, host-resident min-accumulator).
 //!
 //! Run: `cargo run --release --example distance_product`
 
 use anyhow::Result;
+use fcamm::coordinator::{GemmJob, GemmService};
 use fcamm::datatype::Semiring;
 use fcamm::model::tiling::TilingConfig;
 use fcamm::runtime::engine::HostTensor;
@@ -87,7 +91,7 @@ fn main() -> Result<()> {
     // host-reference backend otherwise.
     let rt = Runtime::open_or_native(Runtime::default_dir())?;
     let kernel = rt.kernel("dist_f32_128")?;
-    let mut d_rt = adj;
+    let mut d_rt = adj.clone();
     let t0 = std::time::Instant::now();
     for _ in 0..squarings {
         let out = kernel
@@ -101,6 +105,26 @@ fn main() -> Result<()> {
         "pjrt (pallas min-plus kernel): same result in {:?} — matches Floyd–Warshall",
         t0.elapsed()
     );
+
+    // 4. GemmService: min-plus requests through the full
+    //    communication-avoiding schedule (typed data path). Each
+    //    squaring is one service request; the executor tiles it, keeps
+    //    the min-accumulator host-resident, and reuses packed slabs.
+    let service = GemmService::start(Runtime::default_dir(), 2)?;
+    let mut d_svc = adj;
+    let t1 = std::time::Instant::now();
+    for _ in 0..squarings {
+        let resp = service.blocking(GemmJob::min_plus(v, v, v, d_svc.clone(), d_svc))?;
+        d_svc = resp.c.as_f32().expect("f32 result").to_vec();
+    }
+    for (got, want) in d_svc.iter().zip(&oracle) {
+        assert!((got - want).abs() <= 1e-3 * (1.0 + want.abs()));
+    }
+    println!(
+        "gemm service (min-plus, communication-avoiding schedule): same result in {:?}",
+        t1.elapsed()
+    );
+    service.shutdown();
 
     // Sample a few distances for the curious.
     println!("\nsample shortest paths:");

@@ -11,8 +11,9 @@
 //! Run: `cargo run --release --example gemm_service`
 
 use anyhow::Result;
-use fcamm::coordinator::GemmService;
-use fcamm::runtime::Runtime;
+use fcamm::coordinator::{GemmJob, GemmService};
+use fcamm::datatype::Semiring;
+use fcamm::runtime::{HostTensor, Runtime};
 use fcamm::sim::baseline;
 use fcamm::util::rng::Rng;
 use std::time::Instant;
@@ -78,10 +79,10 @@ fn main() -> Result<()> {
     // worker (channel overhead amortized over the burst).
     let burst = 32;
     let t1 = Instant::now();
-    let jobs: Vec<_> = (0..burst)
+    let jobs: Vec<GemmJob> = (0..burst)
         .map(|_| {
             let s = 64usize;
-            (s, s, s, rng.fill_normal_f32(s * s), rng.fill_normal_f32(s * s))
+            GemmJob::f32(s, s, s, rng.fill_normal_f32(s * s), rng.fill_normal_f32(s * s))
         })
         .collect();
     let (rx, _base_id, count) = service.submit_batch(jobs);
@@ -96,8 +97,43 @@ fn main() -> Result<()> {
         batch_transfer
     );
 
+    // Typed requests: the same pool serves every algebra the runtime
+    // instantiates (Sec. 5.2's flexibility claim as a service). An f64
+    // HPC-style GEMM and a min-plus distance query ride the same queues,
+    // dispatch weighting, and communication-avoiding schedule as the f32
+    // traffic above — f64 jobs weigh 2× per madd in the least-loaded
+    // dispatch, so a wide burst cannot pile onto one worker.
+    let s = 160usize;
+    let a64: Vec<f64> = (0..s * s).map(|_| rng.next_f64() - 0.5).collect();
+    let b64: Vec<f64> = (0..s * s).map(|_| rng.next_f64() - 0.5).collect();
+    let f64_resp = service.blocking(GemmJob::new(
+        s,
+        s,
+        s,
+        HostTensor::F64(a64),
+        HostTensor::F64(b64),
+        Semiring::PlusTimes,
+    ))?;
+    println!(
+        "\ntyped f64 {s}³ GEMM: {:?} on worker {} ({} steps)",
+        f64_resp.latency, f64_resp.worker, f64_resp.steps
+    );
+    let mp_resp = service.blocking(GemmJob::min_plus(
+        s,
+        s,
+        s,
+        rng.fill_normal_f32(s * s),
+        rng.fill_normal_f32(s * s),
+    ))?;
+    println!(
+        "typed min-plus {s}³ distance product: {:?} on worker {} ({} dtype)",
+        mp_resp.latency,
+        mp_resp.worker,
+        mp_resp.c.dtype_name()
+    );
+
     let done = service.stats.completed.load(std::sync::atomic::Ordering::Relaxed);
-    assert_eq!(done, n_requests as u64 + burst as u64);
+    assert_eq!(done, n_requests as u64 + burst as u64 + 2);
     service.shutdown();
     println!("\ngemm_service OK");
     Ok(())

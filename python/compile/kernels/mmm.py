@@ -180,6 +180,17 @@ def matmul_accumulate(c, a, b, *, bm: int = 64, bn: int = 64, bk: int = 32):
     return c + _pallas_matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=c.dtype)
 
 
+def distance_accumulate(c, a, b, *, bm: int = 64, bn: int = 64, bk: int = 32):
+    """C' = min(C, min-plus(A, B)) — the accumulation step of the
+    distance product (same ⊕-fold as ``matmul_accumulate``, with the
+    semiring's min replacing add), letting the Rust tiled scheduler
+    drive min-plus workloads across k-slabs exactly like classical GEMM.
+    """
+    prod = _pallas_matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=c.dtype,
+                          semiring="min_plus")
+    return jnp.minimum(c, prod)
+
+
 def matmul_reference_blocked(a, b, *, bm: int, bn: int, bk: int):
     """Non-pallas blocked matmul with the identical loop structure.
 

@@ -11,7 +11,13 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["matmul", "matmul_transposed_a", "matmul_accumulate", "min_plus"]
+__all__ = [
+    "matmul",
+    "matmul_transposed_a",
+    "matmul_accumulate",
+    "min_plus",
+    "min_plus_accumulate",
+]
 
 
 def matmul(a, b, out_dtype=None):
@@ -42,3 +48,8 @@ def min_plus(a, b, out_dtype=None):
     a = a.astype(out_dtype)
     b = b.astype(out_dtype)
     return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def min_plus_accumulate(c, a, b):
+    """C' = min(C, min-plus(A, B)) — the tropical accumulation step."""
+    return jnp.minimum(c, min_plus(a, b, c.dtype))

@@ -33,7 +33,8 @@ class ModelSpec:
     """
 
     name: str
-    op: str                  # "matmul" | "matmul_acc" | "matmul_at" | "distance"
+    op: str                  # "matmul" | "matmul_acc" | "matmul_at" |
+                             # "distance" | "distance_acc"
     dtype: str               # jnp dtype name as seen by the Rust side
     m: int
     n: int
@@ -50,7 +51,7 @@ class ModelSpec:
             return [((self.m, self.k), d), ((self.k, self.n), d)]
         if self.op == "matmul_at":
             return [((self.k, self.m), d), ((self.k, self.n), d)]
-        if self.op == "matmul_acc":
+        if self.op in ("matmul_acc", "distance_acc"):
             return [((self.m, self.n), d), ((self.m, self.k), d),
                     ((self.k, self.n), d)]
         if self.op == "distance":
@@ -78,6 +79,9 @@ class ModelSpec:
             def fn(a, b):
                 return (mmm.matmul(a, b, bm=bm, bn=bn, bk=bk,
                                    semiring="min_plus"),)
+        elif self.op == "distance_acc":
+            def fn(c, a, b):
+                return (mmm.distance_accumulate(c, a, b, bm=bm, bn=bn, bk=bk),)
         else:
             raise ValueError(f"unknown op {self.op!r}")
 
@@ -95,6 +99,7 @@ def reference_for(spec: ModelSpec) -> Callable:
         "matmul_at": ref.matmul_transposed_a,
         "matmul_acc": ref.matmul_accumulate,
         "distance": ref.min_plus,
+        "distance_acc": ref.min_plus_accumulate,
     }[spec.op]
 
 
@@ -118,13 +123,20 @@ def default_specs() -> Sequence[ModelSpec]:
         ModelSpec("mmm_acc_f32_64", "matmul_acc", "float32", 64, 64, 64, (32, 32, 16)),
         # Transposed-A variant (paper Sec. 4.3 on-the-fly transposition).
         ModelSpec("mmm_at_f32_128", "matmul_at", "float32", 128, 128, 128, (64, 64, 32)),
-        # Distance product (paper Sec. 5.2 semiring flexibility).
+        # Distance product (paper Sec. 5.2 semiring flexibility), plus its
+        # accumulation step so the Rust tiled scheduler can drive min-plus
+        # workloads across k-slabs (typed data path).
         ModelSpec("dist_f32_128", "distance", "float32", 128, 128, 128, (64, 64, 32)),
-        # Integer paths (paper Table 2 uint8/16/32; XLA CPU executes s32/u32).
+        ModelSpec("dist_acc_f32_128", "distance_acc", "float32", 128, 128, 128, (64, 64, 32)),
+        # Integer paths (paper Table 2 uint8/16/32; XLA CPU executes s32/u32),
+        # with accumulation steps for the tiled scheduler.
         ModelSpec("mmm_i32_128", "matmul", "int32", 128, 128, 128, (64, 64, 32)),
         ModelSpec("mmm_u32_128", "matmul", "uint32", 128, 128, 128, (64, 64, 32)),
-        # Double precision (paper Table 2 FP64 row).
+        ModelSpec("mmm_acc_i32_128", "matmul_acc", "int32", 128, 128, 128, (64, 64, 32)),
+        ModelSpec("mmm_acc_u32_128", "matmul_acc", "uint32", 128, 128, 128, (64, 64, 32)),
+        # Double precision (paper Table 2 FP64 row) + accumulation step.
         ModelSpec("mmm_f64_128", "matmul", "float64", 128, 128, 128, (64, 64, 32)),
+        ModelSpec("mmm_acc_f64_128", "matmul_acc", "float64", 128, 128, 128, (64, 64, 32)),
         # Non-square memory tile, mirroring Table 2's x_tot ≠ y_tot configs.
         ModelSpec("mmm_f32_128x192", "matmul", "float32", 128, 192, 64, (64, 48, 32)),
     ]

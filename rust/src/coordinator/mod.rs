@@ -22,4 +22,4 @@ pub mod service;
 
 pub use build::{build_kernel, BuildOutcome, BuildReport};
 pub use instance::KernelInstance;
-pub use service::{GemmRequest, GemmResponse, GemmService};
+pub use service::{GemmJob, GemmRequest, GemmResponse, GemmService};

@@ -7,14 +7,25 @@
 //! through the communication-avoiding tiled schedule, with per-request
 //! latency and aggregate throughput accounting.
 //!
+//! Requests are **typed**: a [`GemmRequest`] carries [`HostTensor`]
+//! operands plus the [`Semiring`] to evaluate, so f32/f64/wrapping-i32/
+//! wrapping-u32 plus-times GEMM and the min-plus distance product all
+//! flow through the same queueing, dispatch, and executor machinery —
+//! the paper's Sec. 5.2 flexibility claim served end-to-end
+//! ([`GemmService::submit`] remains the f32 convenience constructor).
+//! Each worker resolves `(semiring, dtype)` to a [`TiledExecutor`]
+//! lazily and caches it, mirroring one compiled kernel instance per
+//! algebra per hardware partition.
+//!
 //! Dispatch design: each worker owns a **private queue** (the seed's
 //! single shared `Mutex<Receiver>` serialized every dispatch behind one
 //! lock — the host-side equivalent of all kernel instances sharing one
 //! DDR port). The submitter picks the least-loaded worker (ties broken
-//! round-robin), so dispatch is wait-free on the worker side and bursts
-//! spread across the pool. [`GemmService::submit_batch`] enqueues a burst
-//! of small GEMMs with one channel round-trip per worker instead of one
-//! per request.
+//! round-robin) by pending *bytes of multiply-add work* — madds scaled
+//! by element width, so a burst of f64 jobs does not overload one queue
+//! the way madd-count weighting would. [`GemmService::submit_batch`]
+//! enqueues a burst of small GEMMs with one channel round-trip per
+//! worker instead of one per request.
 //!
 //! Built on std threads + channels (the offline environment provides no
 //! tokio; a thread-per-worker pool is also the more faithful analogue of
@@ -28,16 +39,63 @@
 //! worker-level parallelism is the scaling axis here, not nested kernel
 //! threads.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::runtime::Runtime;
+use crate::datatype::Semiring;
+use crate::runtime::{HostTensor, Runtime};
 use crate::schedule::TiledExecutor;
 
-/// One matmul job.
+/// One typed job, before it is assigned an id: the unit
+/// [`GemmService::submit_typed`] and [`GemmService::submit_batch`] take.
+#[derive(Debug, Clone)]
+pub struct GemmJob {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Row-major m×k.
+    pub a: HostTensor,
+    /// Row-major k×n.
+    pub b: HostTensor,
+    /// The (⊕, ⊗) algebra to evaluate.
+    pub semiring: Semiring,
+}
+
+impl GemmJob {
+    pub fn new(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: HostTensor,
+        b: HostTensor,
+        semiring: Semiring,
+    ) -> GemmJob {
+        GemmJob { m, n, k, a, b, semiring }
+    }
+
+    /// The classic deployment: f32 plus-times matmul.
+    pub fn f32(m: usize, n: usize, k: usize, a: Vec<f32>, b: Vec<f32>) -> GemmJob {
+        Self::new(m, n, k, HostTensor::F32(a), HostTensor::F32(b), Semiring::PlusTimes)
+    }
+
+    /// Min-plus distance product over f32 (APSP-style workloads).
+    pub fn min_plus(m: usize, n: usize, k: usize, a: Vec<f32>, b: Vec<f32>) -> GemmJob {
+        Self::new(m, n, k, HostTensor::F32(a), HostTensor::F32(b), Semiring::MinPlus)
+    }
+
+    /// Dispatch weight: pending *bytes of multiply-add work*, so neither
+    /// a burst of small GEMMs behind one giant one nor a burst of wide
+    /// f64 jobs behind same-madd f32 ones can pile onto one queue.
+    fn weight(&self) -> u64 {
+        work_units(self.m, self.n, self.k, self.a.element_bytes())
+    }
+}
+
+/// One matmul job in flight (a [`GemmJob`] plus its assigned id).
 #[derive(Debug, Clone)]
 pub struct GemmRequest {
     pub id: u64,
@@ -45,16 +103,18 @@ pub struct GemmRequest {
     pub n: usize,
     pub k: usize,
     /// Row-major m×k.
-    pub a: Vec<f32>,
+    pub a: HostTensor,
     /// Row-major k×n.
-    pub b: Vec<f32>,
+    pub b: HostTensor,
+    pub semiring: Semiring,
 }
 
 /// Completed job.
 #[derive(Debug)]
 pub struct GemmResponse {
     pub id: u64,
-    pub c: Vec<f32>,
+    /// Result in the request's dtype.
+    pub c: HostTensor,
     pub latency: Duration,
     /// Artifact invocations performed for this request.
     pub steps: usize,
@@ -80,17 +140,21 @@ pub struct ServiceStats {
     pub total_transfer_elements: AtomicU64,
 }
 
-/// Dispatch weight of one request: pending *work*, not request count,
-/// so a burst of small GEMMs is not queued behind one giant one.
-fn work_units(m: usize, n: usize, k: usize) -> u64 {
-    ((m * n * k) as u64).max(1)
+/// Dispatch weight of one request: madds scaled by element width
+/// (normalized so f32 keeps its historical madd-count weight).
+fn work_units(m: usize, n: usize, k: usize, elem_bytes: u64) -> u64 {
+    ((m as u64) * (n as u64) * (k as u64))
+        .saturating_mul(elem_bytes.max(1))
+        .div_euclid(4)
+        .max(1)
 }
 
 struct WorkerHandle {
     /// Private queue into this worker. `Mutex` only guards concurrent
     /// submitters hitting the *same* worker; workers never contend.
     tx: Mutex<mpsc::Sender<Job>>,
-    /// Work units (madds) submitted but not yet completed on this worker.
+    /// Work units (width-scaled madds) submitted but not yet completed
+    /// on this worker.
     pending: Arc<AtomicU64>,
     join: Option<std::thread::JoinHandle<()>>,
 }
@@ -105,15 +169,50 @@ pub struct GemmService {
     next_id: AtomicU64,
 }
 
+/// Per-worker executor inventory: one [`TiledExecutor`] per
+/// `(semiring, dtype)` pair actually requested, resolved lazily from the
+/// worker's private runtime. Keys use the `&'static` dtype names
+/// `HostTensor::dtype_name` hands out, so the steady-state cache-hit
+/// path allocates nothing. (Keying by `DataType` instead would collide
+/// `int32` with `uint32` — the model layer deliberately folds signed
+/// aliases to their width.)
+struct ExecutorCache {
+    rt: Runtime,
+    map: HashMap<(Semiring, &'static str), TiledExecutor>,
+}
+
+impl ExecutorCache {
+    fn executor(&mut self, semiring: Semiring, dtype: &'static str) -> Result<&TiledExecutor> {
+        use std::collections::hash_map::Entry;
+        match self.map.entry((semiring, dtype)) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(v) => {
+                let exec = TiledExecutor::for_algebra(&self.rt, semiring, dtype)
+                    .with_context(|| format!("building {semiring}/{dtype} executor"))?;
+                Ok(v.insert(exec))
+            }
+        }
+    }
+}
+
 fn serve_one(
-    exec: &TiledExecutor,
+    cache: &mut ExecutorCache,
     stats: &ServiceStats,
     worker_id: usize,
     req: GemmRequest,
     reply: &mpsc::Sender<Result<GemmResponse>>,
 ) {
     let t0 = Instant::now();
-    let result = exec.matmul(&req.a, &req.b, req.m, req.n, req.k);
+    let GemmRequest { id, m, n, k, a, b, semiring } = req;
+    let dtype = a.dtype_name();
+    let result = (|| {
+        if a.dtype_name() != b.dtype_name() {
+            bail!("operand dtype mismatch: A is {}, B is {}", a.dtype_name(), b.dtype_name());
+        }
+        let exec = cache.executor(semiring, dtype)?;
+        exec.run_tensor(&a, &b, m, n, k)
+    })()
+    .with_context(|| format!("request {id}: {m}x{n}x{k} {dtype} {semiring}"));
     let out = match result {
         Ok(run) => {
             stats.completed.fetch_add(1, Ordering::Relaxed);
@@ -122,12 +221,12 @@ fn serve_one(
                 .fetch_add(run.steps_executed as u64, Ordering::Relaxed);
             stats
                 .total_madds
-                .fetch_add((req.m * req.n * req.k) as u64, Ordering::Relaxed);
+                .fetch_add((m * n * k) as u64, Ordering::Relaxed);
             stats
                 .total_transfer_elements
                 .fetch_add(run.transfer_elements, Ordering::Relaxed);
             Ok(GemmResponse {
-                id: req.id,
+                id,
                 c: run.c,
                 latency: t0.elapsed(),
                 steps: run.steps_executed,
@@ -146,8 +245,9 @@ fn serve_one(
 impl GemmService {
     /// Start `n_workers` workers over `artifacts_dir` (native fallback
     /// when the directory holds no manifest). Blocks until every worker
-    /// has compiled its executable (so first-request latency is
-    /// steady-state).
+    /// has compiled its default executable (so first-request latency is
+    /// steady-state); executors for other algebras compile lazily on
+    /// first use.
     pub fn start(artifacts_dir: PathBuf, n_workers: usize) -> Result<GemmService> {
         assert!(n_workers >= 1);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -161,13 +261,18 @@ impl GemmService {
             let ready = ready_tx.clone();
             let dir = artifacts_dir.clone();
             let join = std::thread::spawn(move || {
-                // Per-worker runtime: PJRT handles are not Send.
-                let exec = match Runtime::open_or_native(&dir)
-                    .and_then(|rt| TiledExecutor::from_runtime(&rt))
-                {
-                    Ok(exec) => {
+                // Per-worker runtime: PJRT handles are not Send. Warm the
+                // default f32 plus-times executor eagerly.
+                let mut cache = match Runtime::open_or_native(&dir).and_then(|rt| {
+                    let exec = TiledExecutor::from_runtime(&rt)
+                        .context("building default float32 executor")?;
+                    let mut map = HashMap::new();
+                    map.insert((Semiring::PlusTimes, "float32"), exec);
+                    Ok(ExecutorCache { rt, map })
+                }) {
+                    Ok(cache) => {
                         let _ = ready.send(Ok(()));
-                        exec
+                        cache
                     }
                     Err(e) => {
                         let _ = ready.send(Err(e));
@@ -177,14 +282,14 @@ impl GemmService {
                 loop {
                     match rx.recv() {
                         Ok(Job::Run(req, reply)) => {
-                            let w = work_units(req.m, req.n, req.k);
-                            serve_one(&exec, &stats, worker_id, req, &reply);
+                            let w = work_units(req.m, req.n, req.k, req.a.element_bytes());
+                            serve_one(&mut cache, &stats, worker_id, req, &reply);
                             worker_pending.fetch_sub(w, Ordering::Relaxed);
                         }
                         Ok(Job::Batch(reqs, reply)) => {
                             for req in reqs {
-                                let w = work_units(req.m, req.n, req.k);
-                                serve_one(&exec, &stats, worker_id, req, &reply);
+                                let w = work_units(req.m, req.n, req.k, req.a.element_bytes());
+                                serve_one(&mut cache, &stats, worker_id, req, &reply);
                                 worker_pending.fetch_sub(w, Ordering::Relaxed);
                             }
                         }
@@ -227,17 +332,47 @@ impl GemmService {
         best
     }
 
+    /// Hand a job to a worker's private queue. A closed queue (worker
+    /// thread gone) is reported through the job's own reply channel with
+    /// full request context rather than panicking the submitter.
     fn enqueue(&self, worker: usize, job: Job, weight: u64) {
         let w = &self.workers[worker];
         w.pending.fetch_add(weight, Ordering::Relaxed);
-        w.tx
+        let send_result = w
+            .tx
             .lock()
-            .unwrap()
-            .send(job)
-            .expect("service workers gone");
+            .unwrap_or_else(|e| e.into_inner())
+            .send(job);
+        if let Err(mpsc::SendError(job)) = send_result {
+            w.pending.fetch_sub(weight, Ordering::Relaxed);
+            let err = |req: &GemmRequest| {
+                self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                anyhow::anyhow!(
+                    "worker {worker} queue closed; request {} ({}x{}x{} {} {}) dropped",
+                    req.id,
+                    req.m,
+                    req.n,
+                    req.k,
+                    req.a.dtype_name(),
+                    req.semiring
+                )
+            };
+            match job {
+                Job::Run(req, reply) => {
+                    let _ = reply.send(Err(err(&req)));
+                }
+                Job::Batch(reqs, reply) => {
+                    for req in &reqs {
+                        let _ = reply.send(Err(err(req)));
+                    }
+                }
+                Job::Shutdown => {}
+            }
+        }
     }
 
-    /// Submit a job; returns a receiver for the response.
+    /// Convenience: submit an f32 plus-times job; returns a receiver for
+    /// the response.
     pub fn submit(
         &self,
         m: usize,
@@ -246,33 +381,43 @@ impl GemmService {
         a: Vec<f32>,
         b: Vec<f32>,
     ) -> mpsc::Receiver<Result<GemmResponse>> {
+        self.submit_typed(GemmJob::f32(m, n, k, a, b))
+    }
+
+    /// Submit a typed job (any dtype/semiring pair the runtime serves);
+    /// returns a receiver for the response.
+    pub fn submit_typed(&self, job: GemmJob) -> mpsc::Receiver<Result<GemmResponse>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        let weight = work_units(m, n, k);
-        let req = GemmRequest { id, m, n, k, a, b };
+        let weight = job.weight();
+        let GemmJob { m, n, k, a, b, semiring } = job;
+        let req = GemmRequest { id, m, n, k, a, b, semiring };
         let worker = self.pick_worker();
         self.enqueue(worker, Job::Run(req, reply_tx), weight);
         reply_rx
     }
 
-    /// Submit a burst of GEMMs in one go: jobs are spread over the pool
-    /// (least-loaded first) and each worker receives its whole share as a
-    /// single queue message, amortizing channel overhead for many small
-    /// requests. Returns a receiver yielding one response per job (in
-    /// completion order — match by `GemmResponse::id`, which counts up
-    /// from the returned base id) and the number of jobs submitted.
+    /// Submit a burst of jobs in one go: jobs are spread over the pool
+    /// (least-loaded first, weighted by element width) and each worker
+    /// receives its whole share as a single queue message, amortizing
+    /// channel overhead for many small requests. Returns a receiver
+    /// yielding one response per job (in completion order — match by
+    /// `GemmResponse::id`, which counts up from the returned base id)
+    /// and the number of jobs submitted.
     pub fn submit_batch(
         &self,
-        jobs: Vec<(usize, usize, usize, Vec<f32>, Vec<f32>)>,
+        jobs: Vec<GemmJob>,
     ) -> (mpsc::Receiver<Result<GemmResponse>>, u64, usize) {
         let (reply_tx, reply_rx) = mpsc::channel();
         let count = jobs.len();
         let base_id = self.next_id.fetch_add(count as u64, Ordering::Relaxed);
-        let mut shares: Vec<Vec<GemmRequest>> = (0..self.workers.len()).map(|_| Vec::new()).collect();
+        let mut shares: Vec<Vec<GemmRequest>> =
+            (0..self.workers.len()).map(|_| Vec::new()).collect();
         let mut share_weights: Vec<u64> = vec![0; self.workers.len()];
-        for (i, (m, n, k, a, b)) in jobs.into_iter().enumerate() {
-            let weight = work_units(m, n, k);
-            let req = GemmRequest { id: base_id + i as u64, m, n, k, a, b };
+        for (i, job) in jobs.into_iter().enumerate() {
+            let weight = job.weight();
+            let GemmJob { m, n, k, a, b, semiring } = job;
+            let req = GemmRequest { id: base_id + i as u64, m, n, k, a, b, semiring };
             // Least-loaded by pending work *plus* the share built so far
             // (worker counters don't move until the shares are enqueued
             // below).
@@ -300,7 +445,7 @@ impl GemmService {
         (reply_rx, base_id, count)
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit an f32 plus-times job and wait.
     pub fn matmul_blocking(
         &self,
         m: usize,
@@ -309,7 +454,12 @@ impl GemmService {
         a: Vec<f32>,
         b: Vec<f32>,
     ) -> Result<GemmResponse> {
-        self.submit(m, n, k, a, b)
+        self.blocking(GemmJob::f32(m, n, k, a, b))
+    }
+
+    /// Submit a typed job and wait for the response.
+    pub fn blocking(&self, job: GemmJob) -> Result<GemmResponse> {
+        self.submit_typed(job)
             .recv()
             .context("service dropped the request")?
     }
@@ -329,7 +479,11 @@ impl GemmService {
 
     fn send_shutdown(&self) {
         for w in &self.workers {
-            let _ = w.tx.lock().unwrap().send(Job::Shutdown);
+            let _ = w
+                .tx
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .send(Job::Shutdown);
         }
     }
 
@@ -347,5 +501,35 @@ impl GemmService {
 impl Drop for GemmService {
     fn drop(&mut self) {
         self.send_shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn work_units_scale_with_element_width() {
+        // f32 keeps its historical madd-count weight; f64 doubles it.
+        assert_eq!(work_units(64, 64, 64, 4), 64 * 64 * 64);
+        assert_eq!(work_units(64, 64, 64, 8), 2 * 64 * 64 * 64);
+        assert_eq!(work_units(0, 8, 8, 4), 1, "floor at one unit");
+    }
+
+    #[test]
+    fn job_weights_use_operand_width() {
+        let f32_job = GemmJob::f32(32, 32, 32, vec![0.0; 32 * 32], vec![0.0; 32 * 32]);
+        let f64_job = GemmJob::new(
+            32,
+            32,
+            32,
+            HostTensor::F64(vec![0.0; 32 * 32]),
+            HostTensor::F64(vec![0.0; 32 * 32]),
+            Semiring::PlusTimes,
+        );
+        assert_eq!(f64_job.weight(), 2 * f32_job.weight());
+        let mp = GemmJob::min_plus(32, 32, 32, vec![0.0; 32 * 32], vec![0.0; 32 * 32]);
+        assert_eq!(mp.weight(), f32_job.weight(), "min-plus f32 weighs like f32");
+        assert_eq!(mp.semiring, Semiring::MinPlus);
     }
 }

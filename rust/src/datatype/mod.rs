@@ -78,6 +78,15 @@ impl DataType {
         }
     }
 
+    /// Bytes per element for a manifest dtype string, defaulting to a
+    /// word (4 bytes) for names the model does not know. The single
+    /// width source shared by the runtime (`HostTensor::element_bytes`)
+    /// and the scheduler's cache-fit artifact choice, so dispatch
+    /// weighting and tile selection can never disagree.
+    pub fn manifest_bytes(s: &str) -> u64 {
+        Self::from_manifest_name(s).map_or(4, Self::bytes)
+    }
+
     pub fn from_manifest_name(s: &str) -> Option<DataType> {
         Some(match s {
             "float16" => DataType::F16,
@@ -143,6 +152,16 @@ mod tests {
         assert_eq!(DataType::F32.bits(), 32);
         assert_eq!(DataType::F64.bits(), 64);
         assert_eq!(DataType::F64.bytes(), 8);
+    }
+
+    #[test]
+    fn manifest_bytes_covers_runtime_dtypes_and_falls_back() {
+        for (name, bytes) in
+            [("float32", 4), ("float64", 8), ("int32", 4), ("uint32", 4), ("float16", 2)]
+        {
+            assert_eq!(DataType::manifest_bytes(name), bytes, "{name}");
+        }
+        assert_eq!(DataType::manifest_bytes("bogus"), 4, "unknown dtypes default to a word");
     }
 
     #[test]

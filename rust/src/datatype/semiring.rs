@@ -78,13 +78,29 @@ impl Semiring {
     /// the runtime does not know). The native backend's blocked
     /// microkernel engine (`runtime::kernel`) monomorphizes these onto
     /// its `SemiringOps` instantiations — plus-times for the matmul
-    /// family, min-plus for the distance product.
+    /// family, min-plus for the distance-product family.
     pub fn for_op(op: &str) -> Option<Semiring> {
         match op {
             "matmul" | "matmul_acc" | "matmul_at" => Some(Semiring::PlusTimes),
-            "distance" => Some(Semiring::MinPlus),
+            "distance" | "distance_acc" => Some(Semiring::MinPlus),
             _ => None,
         }
+    }
+
+    /// The manifest `op` of the accumulation artifact (`C ⊕ A⊗B`, 3
+    /// inputs) for this semiring — what the tiled executor drives one
+    /// step at a time.
+    pub fn acc_op(self) -> &'static str {
+        match self {
+            Semiring::PlusTimes => "matmul_acc",
+            Semiring::MinPlus => "distance_acc",
+        }
+    }
+}
+
+impl std::fmt::Display for Semiring {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -122,9 +138,18 @@ mod tests {
         for op in ["matmul", "matmul_acc", "matmul_at"] {
             assert_eq!(Semiring::for_op(op), Some(Semiring::PlusTimes), "{op}");
         }
-        assert_eq!(Semiring::for_op("distance"), Some(Semiring::MinPlus));
+        for op in ["distance", "distance_acc"] {
+            assert_eq!(Semiring::for_op(op), Some(Semiring::MinPlus), "{op}");
+        }
         assert_eq!(Semiring::for_op("cholesky"), None);
         assert_eq!(Semiring::for_op(""), None);
+    }
+
+    #[test]
+    fn acc_op_round_trips_through_for_op() {
+        for s in [Semiring::PlusTimes, Semiring::MinPlus] {
+            assert_eq!(Semiring::for_op(s.acc_op()), Some(s));
+        }
     }
 
     #[test]

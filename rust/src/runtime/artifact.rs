@@ -38,7 +38,8 @@ impl TensorSpec {
 pub struct ArtifactSpec {
     pub name: String,
     pub file: String,
-    /// "matmul" | "matmul_acc" | "matmul_at" | "distance".
+    /// "matmul" | "matmul_acc" | "matmul_at" | "distance" |
+    /// "distance_acc".
     pub op: String,
     pub dtype: String,
     pub m: usize,
@@ -95,10 +96,11 @@ impl ArtifactSpec {
         })
     }
 
-    /// Whether this artifact computes `C + A·B` (3 inputs) rather than
-    /// `A·B` (2 inputs).
+    /// Whether this artifact computes `C ⊕ A⊗B` (3 inputs) rather than
+    /// `A⊗B` (2 inputs) — the accumulation family covers both semirings
+    /// (`matmul_acc` is plus-times, `distance_acc` min-plus).
     pub fn is_accumulate(&self) -> bool {
-        self.op == "matmul_acc"
+        matches!(self.op.as_str(), "matmul_acc" | "distance_acc")
     }
 }
 

@@ -15,13 +15,23 @@
 //!   row-panel threads — `PALLAS_NATIVE_THREADS` overrides the width).
 //!   Same shapes, same validation, deterministic ascending-k
 //!   accumulation, bit-identical to the seed's naive loops.
+//!
+//! The hot entry points are **dtype/semiring-generic**: callers hand a
+//! [`SemiringOps`] instantiation plus borrowed element slices
+//! ([`LoadedKernel::execute_slices`], [`LoadedKernel::execute_zero_acc`])
+//! and monomorphization does the rest — there is no f32-special-cased
+//! path anymore. The enum-level [`LoadedKernel::execute`] remains for
+//! callers holding [`HostTensor`] values (the service boundary).
 
 use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 use std::path::Path;
 
+use crate::datatype::{DataType, Semiring};
+
 use super::artifact::ArtifactSpec;
+use super::kernel::{self, SemiringOps};
 use super::native;
 
 /// Host-side tensor in one of the dtypes the artifacts use. Row-major.
@@ -56,11 +66,28 @@ impl HostTensor {
         }
     }
 
+    /// Bytes per element — the width the dispatch weighting and the
+    /// host cache model (`schedule::tiles`) reason in. Derived from
+    /// [`DataType`] so the model layer and the runtime can never
+    /// disagree about widths.
+    pub fn element_bytes(&self) -> u64 {
+        DataType::manifest_bytes(self.dtype_name())
+    }
+
     pub fn as_f32(&self) -> Option<&[f32]> {
-        match self {
-            HostTensor::F32(v) => Some(v),
-            _ => None,
-        }
+        f32::as_slice(self)
+    }
+
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        f64::as_slice(self)
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        i32::as_slice(self)
+    }
+
+    pub fn as_u32(&self) -> Option<&[u32]> {
+        u32::as_slice(self)
     }
 
     #[cfg(feature = "pjrt")]
@@ -90,6 +117,44 @@ impl HostTensor {
         })
     }
 }
+
+/// Element-level bridge between [`HostTensor`] and typed slices: the
+/// dtypes the runtime moves, each knowing its manifest name and its
+/// enum variant. The typed engine entry points bound their
+/// `SemiringOps::Elem` by this, so one generic code path serves every
+/// dtype without an enum match per call.
+pub trait Element: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
+    /// Manifest dtype string (`"float32"`, …) of this element type.
+    const DTYPE: &'static str;
+
+    /// Borrow the typed slice out of a [`HostTensor`] of this dtype.
+    fn as_slice(t: &HostTensor) -> Option<&[Self]>;
+
+    /// Wrap an owned buffer back into the matching [`HostTensor`].
+    fn wrap(v: Vec<Self>) -> HostTensor;
+}
+
+macro_rules! impl_element {
+    ($ty:ty, $variant:ident, $name:literal) => {
+        impl Element for $ty {
+            const DTYPE: &'static str = $name;
+            fn as_slice(t: &HostTensor) -> Option<&[Self]> {
+                match t {
+                    HostTensor::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+            fn wrap(v: Vec<Self>) -> HostTensor {
+                HostTensor::$variant(v)
+            }
+        }
+    };
+}
+
+impl_element!(f32, F32, "float32");
+impl_element!(f64, F64, "float64");
+impl_element!(i32, I32, "int32");
+impl_element!(u32, U32, "uint32");
 
 enum EngineBackend {
     #[cfg(feature = "pjrt")]
@@ -180,10 +245,31 @@ pub struct LoadedKernel {
 }
 
 impl LoadedKernel {
-    /// f32 fast path: borrowed slices in, raw output vector out — no
-    /// intermediate `Vec` clones. This is the GEMM executor's per-step
-    /// hot path.
-    pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+    /// Reject calls whose compile-time algebra does not match the
+    /// artifact's op — the dispatch table and the semiring mapping can
+    /// never silently diverge.
+    fn check_algebra<S: SemiringOps>(&self, sr: S) -> Result<()> {
+        match Semiring::for_op(&self.spec.op) {
+            Some(s) if s == sr.algebra() => Ok(()),
+            Some(s) => bail!(
+                "{}: artifact op {:?} computes {s}, caller algebra is {}",
+                self.spec.name,
+                self.spec.op,
+                sr.algebra()
+            ),
+            None => bail!("{}: unsupported op {:?}", self.spec.name, self.spec.op),
+        }
+    }
+
+    /// Typed fast path: borrowed element slices in, raw output vector
+    /// out — no intermediate `HostTensor` clones. Monomorphized per
+    /// [`SemiringOps`] instantiation; this is the GEMM executor's
+    /// per-step hot path for every dtype and semiring.
+    pub fn execute_slices<S>(&self, sr: S, inputs: &[&[S::Elem]]) -> Result<Vec<S::Elem>>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
@@ -192,65 +278,22 @@ impl LoadedKernel {
                 inputs.len()
             );
         }
+        self.check_algebra(sr)?;
         for (tensor, tspec) in inputs.iter().zip(&self.spec.inputs) {
-            if tspec.dtype != "float32" {
-                bail!("{}: execute_f32 on non-f32 input", self.spec.name);
-            }
-            let elements: usize = tspec.shape.iter().product();
-            if elements != tensor.len() {
+            if tspec.dtype != S::Elem::DTYPE {
                 bail!(
-                    "shape {:?} has {elements} elements, buffer has {}",
-                    tspec.shape,
-                    tensor.len()
+                    "{}: expected {} input, got {}",
+                    self.spec.name,
+                    tspec.dtype,
+                    S::Elem::DTYPE
                 );
             }
-        }
-        match &self.exe {
-            #[cfg(feature = "pjrt")]
-            KernelExe::Pjrt(exe) => {
-                let mut literals = Vec::with_capacity(inputs.len());
-                for (tensor, tspec) in inputs.iter().zip(&self.spec.inputs) {
-                    let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
-                    literals.push(xla::Literal::vec1(tensor).reshape(&dims)?);
-                }
-                let result = exe
-                    .execute::<xla::Literal>(&literals)
-                    .with_context(|| format!("executing {}", self.spec.name))?;
-                let lit = result
-                    .first()
-                    .and_then(|d| d.first())
-                    .context("executable produced no output")?
-                    .to_literal_sync()?;
-                let out = lit.to_tuple1().context("unwrapping output tuple")?;
-                Ok(out.to_vec::<f32>()?)
-            }
-            KernelExe::Native => native::execute_f32(&self.spec, inputs),
-        }
-    }
-
-    /// Accumulate-from-zero fast path for `matmul_acc` artifacts: the C
-    /// input is a known constant (all zeros), so the native backend
-    /// materializes nothing for it, and a caching transport ships it at
-    /// most once per kernel. This is what lets the tiled executor keep
-    /// its accumulator host-resident and charge the zero template once
-    /// per run. The PJRT backend still rebuilds the zero literal per
-    /// call (constant-literal caching there is future work — until then
-    /// its real C-in traffic is `tm·tn` per step, not once).
-    pub fn execute_f32_zero_acc(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        if self.spec.inputs.len() != 3 {
-            bail!("{}: zero-acc path requires a matmul_acc artifact", self.spec.name);
-        }
-        for tspec in &self.spec.inputs {
-            if tspec.dtype != "float32" {
-                bail!("{}: execute_f32 on non-f32 input", self.spec.name);
-            }
-        }
-        for (tensor, tspec) in [a, b].into_iter().zip(&self.spec.inputs[1..]) {
-            let elements: usize = tspec.shape.iter().product();
-            if elements != tensor.len() {
+            if tspec.elements() != tensor.len() {
                 bail!(
-                    "shape {:?} has {elements} elements, buffer has {}",
+                    "{}: shape {:?} has {} elements, buffer has {}",
+                    self.spec.name,
                     tspec.shape,
+                    tspec.elements(),
                     tensor.len()
                 );
             }
@@ -258,17 +301,89 @@ impl LoadedKernel {
         match &self.exe {
             #[cfg(feature = "pjrt")]
             KernelExe::Pjrt(_) => {
-                let zero = vec![0f32; self.spec.inputs[0].shape.iter().product()];
-                self.execute_f32(&[zero.as_slice(), a, b])
+                // Detour through the enum path: one extra copy per
+                // buffer vs building literals straight from the borrowed
+                // slices. Accepted for the gated backend until a vendored
+                // xla crate exists to compile against — a zero-copy
+                // generic literal path belongs on `Element` then.
+                let tensors: Vec<HostTensor> =
+                    inputs.iter().map(|s| S::Elem::wrap(s.to_vec())).collect();
+                let out = self.execute(&tensors)?;
+                S::Elem::as_slice(&out).map(<[S::Elem]>::to_vec).ok_or_else(|| {
+                    anyhow::anyhow!("{}: backend returned {}", self.spec.name, out.dtype_name())
+                })
             }
-            KernelExe::Native => {
-                Ok(native::gemm_f32(None, a, b, self.spec.m, self.spec.n, self.spec.k))
+            KernelExe::Native => native::execute_slices(sr, &self.spec, inputs),
+        }
+    }
+
+    /// Accumulate-from-identity fast path for accumulation artifacts
+    /// (`matmul_acc` / `distance_acc`): the C input is a known constant
+    /// (the ⊕-identity matrix — zeros for plus-times, +∞ for min-plus),
+    /// so the native backend materializes nothing for it, and a caching
+    /// transport ships it at most once per kernel. This is what lets the
+    /// tiled executor keep its accumulator host-resident and charge the
+    /// identity template once per run. The PJRT backend still rebuilds
+    /// the literal per call (constant-literal caching there is future
+    /// work — until then its real C-in traffic is `tm·tn` per step, not
+    /// once).
+    pub fn execute_zero_acc<S>(&self, sr: S, a: &[S::Elem], b: &[S::Elem]) -> Result<Vec<S::Elem>>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        if !self.spec.is_accumulate() || self.spec.inputs.len() != 3 {
+            bail!(
+                "{}: zero-acc path requires an accumulation artifact, op is {:?}",
+                self.spec.name,
+                self.spec.op
+            );
+        }
+        self.check_algebra(sr)?;
+        for tspec in &self.spec.inputs {
+            if tspec.dtype != S::Elem::DTYPE {
+                bail!(
+                    "{}: expected {} input, got {}",
+                    self.spec.name,
+                    tspec.dtype,
+                    S::Elem::DTYPE
+                );
             }
+        }
+        for (len, tspec) in [a.len(), b.len()].into_iter().zip(&self.spec.inputs[1..]) {
+            if tspec.elements() != len {
+                bail!(
+                    "{}: shape {:?} has {} elements, buffer has {len}",
+                    self.spec.name,
+                    tspec.shape,
+                    tspec.elements()
+                );
+            }
+        }
+        match &self.exe {
+            #[cfg(feature = "pjrt")]
+            KernelExe::Pjrt(_) => {
+                let zero = vec![sr.zero(); self.spec.inputs[0].elements()];
+                self.execute_slices(sr, &[&zero, a, b])
+            }
+            KernelExe::Native => Ok(kernel::gemm(
+                sr,
+                None,
+                a,
+                kernel::ALayout::RowMajor,
+                b,
+                self.spec.m,
+                self.spec.n,
+                self.spec.k,
+            )),
         }
     }
 
     /// Execute with host buffers (validated against the manifest shapes);
-    /// returns the single output tensor.
+    /// returns the single output tensor. The enum-level entry for
+    /// callers holding [`HostTensor`] values; the native backend
+    /// dispatches onto the same typed kernel instantiations as
+    /// [`Self::execute_slices`].
     pub fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(

@@ -39,6 +39,8 @@
 // computed offsets a range-loop expresses most directly.
 #![allow(clippy::too_many_arguments, clippy::needless_range_loop)]
 
+use crate::datatype::Semiring;
+
 /// Microtile rows (A-side register blocking).
 pub const MR: usize = 8;
 /// Microtile columns (B-side register blocking; one or two SIMD vectors
@@ -72,6 +74,18 @@ pub trait SemiringOps: Copy + Send + Sync {
     /// One lane step: `acc ⊕ (a ⊗ b)`, written exactly as the naive
     /// reference loop writes it so results stay bit-identical.
     fn fma(self, acc: Self::Elem, a: Self::Elem, b: Self::Elem) -> Self::Elem;
+
+    /// ⊕ alone: fold `x` into `acc`, with the same orientation (and, for
+    /// min-plus, the same `<` predicate) as [`SemiringOps::fma`]. This is
+    /// the host-resident accumulator merge of the tiled executor —
+    /// `c ⊕= partial_tile` — so `add(fma-folded partials)` stays
+    /// bit-compatible with a single fma fold.
+    fn add(self, acc: Self::Elem, x: Self::Elem) -> Self::Elem;
+
+    /// The runtime-level algebra this instantiation computes — the bridge
+    /// back to [`crate::datatype::Semiring`], used by the typed engine
+    /// entry points to reject op/algebra mismatches.
+    fn algebra(self) -> Semiring;
 }
 
 /// Classical ring on f32: ⊕ = +, ⊗ = × (MMM).
@@ -88,6 +102,13 @@ impl SemiringOps for PlusTimesF32 {
     fn fma(self, acc: f32, a: f32, b: f32) -> f32 {
         acc + a * b
     }
+    #[inline(always)]
+    fn add(self, acc: f32, x: f32) -> f32 {
+        acc + x
+    }
+    fn algebra(self) -> Semiring {
+        Semiring::PlusTimes
+    }
 }
 
 /// Classical ring on f64.
@@ -103,6 +124,13 @@ impl SemiringOps for PlusTimesF64 {
     #[inline(always)]
     fn fma(self, acc: f64, a: f64, b: f64) -> f64 {
         acc + a * b
+    }
+    #[inline(always)]
+    fn add(self, acc: f64, x: f64) -> f64 {
+        acc + x
+    }
+    fn algebra(self) -> Semiring {
+        Semiring::PlusTimes
     }
 }
 
@@ -124,6 +152,13 @@ impl SemiringOps for PlusTimesI32Wrap {
     fn fma(self, acc: i32, a: i32, b: i32) -> i32 {
         acc.wrapping_add(a.wrapping_mul(b))
     }
+    #[inline(always)]
+    fn add(self, acc: i32, x: i32) -> i32 {
+        acc.wrapping_add(x)
+    }
+    fn algebra(self) -> Semiring {
+        Semiring::PlusTimes
+    }
 }
 
 /// Wrapping u32 ring (same mod-2³² argument as [`PlusTimesI32Wrap`]).
@@ -139,6 +174,13 @@ impl SemiringOps for PlusTimesU32Wrap {
     #[inline(always)]
     fn fma(self, acc: u32, a: u32, b: u32) -> u32 {
         acc.wrapping_add(a.wrapping_mul(b))
+    }
+    #[inline(always)]
+    fn add(self, acc: u32, x: u32) -> u32 {
+        acc.wrapping_add(x)
+    }
+    fn algebra(self) -> Semiring {
+        Semiring::PlusTimes
     }
 }
 
@@ -163,6 +205,17 @@ impl SemiringOps for MinPlusF32 {
         } else {
             acc
         }
+    }
+    #[inline(always)]
+    fn add(self, acc: f32, x: f32) -> f32 {
+        if x < acc {
+            x
+        } else {
+            acc
+        }
+    }
+    fn algebra(self) -> Semiring {
+        Semiring::MinPlus
     }
 }
 
@@ -722,6 +775,43 @@ mod tests {
         assert_eq!(band_count_from(Some(64), 1, 512, 512), 1);
         // Explicit overrides bypass the size threshold exactly.
         assert_eq!(band_count_from(Some(3), 128, 128, 128), 3);
+    }
+
+    #[test]
+    fn host_add_merge_matches_fma_fold() {
+        // The executor merges per-slab partial tiles with `add`; folding
+        // fma-built partials through `add` must equal one continuous fma
+        // fold value-for-value (exact for min-plus and wrapping ints; the
+        // floats are pinned at the executor level by slab-bracketed
+        // references).
+        let mp = MinPlusF32;
+        let seq = [(3.0f32, 1.0f32), (0.5, 0.25), (2.0, -1.5), (f32::INFINITY, 1.0)];
+        let mut direct = mp.zero();
+        for &(a, b) in &seq {
+            direct = mp.fma(direct, a, b);
+        }
+        let p0 = seq[..2].iter().fold(mp.zero(), |acc, &(a, b)| mp.fma(acc, a, b));
+        let p1 = seq[2..].iter().fold(mp.zero(), |acc, &(a, b)| mp.fma(acc, a, b));
+        assert_eq!(mp.add(mp.add(mp.zero(), p0), p1), direct);
+
+        let iw = PlusTimesI32Wrap;
+        let ints = [(i32::MAX, 7), (1 << 30, 3), (-5, i32::MIN)];
+        let mut direct = iw.zero();
+        for &(a, b) in &ints {
+            direct = iw.fma(direct, a, b);
+        }
+        let p0 = iw.fma(iw.zero(), ints[0].0, ints[0].1);
+        let p1 = ints[1..].iter().fold(iw.zero(), |acc, &(a, b)| iw.fma(acc, a, b));
+        assert_eq!(iw.add(iw.add(iw.zero(), p0), p1), direct);
+    }
+
+    #[test]
+    fn ops_report_their_algebra() {
+        assert_eq!(PlusTimesF32.algebra(), Semiring::PlusTimes);
+        assert_eq!(PlusTimesF64.algebra(), Semiring::PlusTimes);
+        assert_eq!(PlusTimesI32Wrap.algebra(), Semiring::PlusTimes);
+        assert_eq!(PlusTimesU32Wrap.algebra(), Semiring::PlusTimes);
+        assert_eq!(MinPlusF32.algebra(), Semiring::MinPlus);
     }
 
     #[test]

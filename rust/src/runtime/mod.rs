@@ -20,15 +20,19 @@ pub mod kernel;
 pub mod native;
 
 pub use artifact::{ArtifactSpec, Manifest};
-pub use engine::{Engine, HostTensor, LoadedKernel};
+pub use engine::{Element, Engine, HostTensor, LoadedKernel};
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Built-in manifest served by the native backend: the same artifact
 /// inventory `make artifacts` would produce, minus the HLO files. The
-/// 16³ accumulate tile exists for fast property tests; 128³ is the
-/// default the executor picks (largest `matmul_acc`).
+/// 16³ accumulate tiles exist for fast property tests; 128³ is the
+/// default the executor picks (largest accumulator that fits the host
+/// cache profile). Every algebra the typed data path serves has an
+/// accumulation artifact — plus-times over f32/f64/int32/uint32
+/// (`matmul_acc`) and min-plus over f32 (`distance_acc`) — so the tiled
+/// executor and the GEMM service run end-to-end for all of them.
 const NATIVE_MANIFEST: &str = r#"{
   "version": 1,
   "default": "mmm_acc_f32_128",
@@ -80,7 +84,55 @@ const NATIVE_MANIFEST: &str = r#"{
      "dtype": "float64", "m": 128, "n": 128, "k": 128, "block": [32, 32, 16],
      "inputs": [{"shape": [128, 128], "dtype": "float64"},
                 {"shape": [128, 128], "dtype": "float64"}],
-     "output": {"shape": [128, 128], "dtype": "float64"}}
+     "output": {"shape": [128, 128], "dtype": "float64"}},
+    {"name": "mmm_acc_f64_128", "file": "native", "op": "matmul_acc",
+     "dtype": "float64", "m": 128, "n": 128, "k": 128, "block": [32, 32, 16],
+     "inputs": [{"shape": [128, 128], "dtype": "float64"},
+                {"shape": [128, 128], "dtype": "float64"},
+                {"shape": [128, 128], "dtype": "float64"}],
+     "output": {"shape": [128, 128], "dtype": "float64"}},
+    {"name": "mmm_acc_f64_16", "file": "native", "op": "matmul_acc",
+     "dtype": "float64", "m": 16, "n": 16, "k": 16, "block": [8, 8, 8],
+     "inputs": [{"shape": [16, 16], "dtype": "float64"},
+                {"shape": [16, 16], "dtype": "float64"},
+                {"shape": [16, 16], "dtype": "float64"}],
+     "output": {"shape": [16, 16], "dtype": "float64"}},
+    {"name": "mmm_acc_i32_128", "file": "native", "op": "matmul_acc",
+     "dtype": "int32", "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+     "inputs": [{"shape": [128, 128], "dtype": "int32"},
+                {"shape": [128, 128], "dtype": "int32"},
+                {"shape": [128, 128], "dtype": "int32"}],
+     "output": {"shape": [128, 128], "dtype": "int32"}},
+    {"name": "mmm_acc_i32_16", "file": "native", "op": "matmul_acc",
+     "dtype": "int32", "m": 16, "n": 16, "k": 16, "block": [8, 8, 8],
+     "inputs": [{"shape": [16, 16], "dtype": "int32"},
+                {"shape": [16, 16], "dtype": "int32"},
+                {"shape": [16, 16], "dtype": "int32"}],
+     "output": {"shape": [16, 16], "dtype": "int32"}},
+    {"name": "mmm_acc_u32_128", "file": "native", "op": "matmul_acc",
+     "dtype": "uint32", "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+     "inputs": [{"shape": [128, 128], "dtype": "uint32"},
+                {"shape": [128, 128], "dtype": "uint32"},
+                {"shape": [128, 128], "dtype": "uint32"}],
+     "output": {"shape": [128, 128], "dtype": "uint32"}},
+    {"name": "mmm_acc_u32_16", "file": "native", "op": "matmul_acc",
+     "dtype": "uint32", "m": 16, "n": 16, "k": 16, "block": [8, 8, 8],
+     "inputs": [{"shape": [16, 16], "dtype": "uint32"},
+                {"shape": [16, 16], "dtype": "uint32"},
+                {"shape": [16, 16], "dtype": "uint32"}],
+     "output": {"shape": [16, 16], "dtype": "uint32"}},
+    {"name": "dist_acc_f32_128", "file": "native", "op": "distance_acc",
+     "dtype": "float32", "m": 128, "n": 128, "k": 128, "block": [64, 64, 32],
+     "inputs": [{"shape": [128, 128], "dtype": "float32"},
+                {"shape": [128, 128], "dtype": "float32"},
+                {"shape": [128, 128], "dtype": "float32"}],
+     "output": {"shape": [128, 128], "dtype": "float32"}},
+    {"name": "dist_acc_f32_16", "file": "native", "op": "distance_acc",
+     "dtype": "float32", "m": 16, "n": 16, "k": 16, "block": [8, 8, 8],
+     "inputs": [{"shape": [16, 16], "dtype": "float32"},
+                {"shape": [16, 16], "dtype": "float32"},
+                {"shape": [16, 16], "dtype": "float32"}],
+     "output": {"shape": [16, 16], "dtype": "float32"}}
   ]
 }"#;
 
@@ -146,9 +198,11 @@ impl Runtime {
     }
 
     /// Compile (or fetch the cached) executable for a named artifact.
+    /// Lock poisoning is survivable: the cache holds only immutable
+    /// compiled handles, so a panicked inserter left valid state.
     pub fn kernel(&self, name: &str) -> Result<std::sync::Arc<LoadedKernel>> {
-        if let Some(k) = self.compiled.lock().unwrap().get(name) {
-            return Ok(k.clone());
+        if let Some(k) = self.compiled.lock().unwrap_or_else(|e| e.into_inner()).get(name) {
+            return Ok(std::sync::Arc::clone(k));
         }
         let spec = self
             .manifest
@@ -159,7 +213,7 @@ impl Runtime {
         let kernel = std::sync::Arc::new(self.engine.load(&path, spec)?);
         self.compiled
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .insert(name.to_string(), kernel.clone());
         Ok(kernel)
     }
@@ -173,6 +227,7 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use kernel::{MinPlusF32, PlusTimesF32};
 
     #[test]
     fn native_default_serves_kernels() {
@@ -188,7 +243,10 @@ mod tests {
         }
         let b: Vec<f32> = (0..256).map(|v| v as f32 * 0.5).collect();
         let zero = vec![0f32; 256];
-        let out = k.execute_f32(&[&zero, &eye, &b]).unwrap();
+        let out = k.execute_slices(PlusTimesF32, &[&zero, &eye, &b]).unwrap();
+        assert_eq!(out, b);
+        // And the identity-template fast path agrees.
+        let out = k.execute_zero_acc(PlusTimesF32, &eye, &b).unwrap();
         assert_eq!(out, b);
     }
 
@@ -205,5 +263,36 @@ mod tests {
         assert_eq!(accs.len(), 3);
         assert_eq!(accs[0].m, 128);
         assert_eq!(accs[2].m, 16);
+    }
+
+    #[test]
+    fn native_manifest_has_an_accumulator_per_algebra() {
+        // The typed data path needs an accumulation artifact for every
+        // (semiring, dtype) the engine instantiates.
+        let rt = Runtime::native_default().unwrap();
+        for (op, dtype) in [
+            ("matmul_acc", "float32"),
+            ("matmul_acc", "float64"),
+            ("matmul_acc", "int32"),
+            ("matmul_acc", "uint32"),
+            ("distance_acc", "float32"),
+        ] {
+            let found = rt.manifest.find_op(op, dtype);
+            assert!(!found.is_empty(), "{op}/{dtype} missing from native manifest");
+            assert!(found.iter().all(|s| s.is_accumulate()), "{op}/{dtype}");
+            assert_eq!(found[0].m, 128, "{op}/{dtype}: largest first");
+        }
+    }
+
+    #[test]
+    fn distance_acc_artifact_folds_from_infinity() {
+        let rt = Runtime::native_default().unwrap();
+        let k = rt.kernel("dist_acc_f32_16").expect("kernel");
+        // d(i,j) through one hop: min over kk of a[i][kk] + b[kk][j];
+        // zero-acc starts from the ⊕-identity (+∞), never 0.
+        let a = vec![1.0f32; 16 * 16];
+        let b = vec![2.0f32; 16 * 16];
+        let out = k.execute_zero_acc(MinPlusF32, &a, &b).unwrap();
+        assert!(out.iter().all(|&v| v == 3.0), "min-plus fold from +∞");
     }
 }

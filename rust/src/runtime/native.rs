@@ -9,113 +9,113 @@
 //! (or no generated artifacts directory) is available.
 //!
 //! All ops execute through the blocked semiring microkernel engine
-//! ([`super::kernel`]): `matmul`, `matmul_acc`, and `matmul_at` are
-//! plus-times instantiations (transposed A absorbed by the packing
-//! routine), `distance` is the min-plus instantiation, and the integer
-//! dtypes accumulate wrapping-in-width in one pass (mod-2³² equivalent
-//! to the seed's accumulate-in-i64-then-truncate, without the second
-//! allocation).
+//! ([`super::kernel`]) via **one dtype/semiring-generic entry point**
+//! ([`execute_slices`]): the op string selects the structure
+//! (accumulating 3-input form, transposed-A packing, or the plain
+//! 2-input product), the [`SemiringOps`] instantiation selects algebra
+//! and element type, and monomorphization produces the same specialized
+//! loops the old per-dtype arms hand-wrote. The enum-level [`execute`]
+//! maps a spec's `(op, dtype)` onto the five supported instantiations —
+//! plus-times over f32/f64/wrapping-i32/wrapping-u32 and min-plus over
+//! f32 (integers accumulate wrapping-in-width in one pass, mod-2³²
+//! equivalent to the seed's accumulate-in-i64-then-truncate).
 //!
 //! Accumulation order is deliberately fixed — ascending `k`, starting
-//! from the C input (or the ⊕-identity) — so a chained `matmul_acc` over
-//! k-slabs reproduces the plain sequential-k sum exactly, all plan
+//! from the C input (or the ⊕-identity) — so a chained accumulation over
+//! k-slabs reproduces the plain sequential-k fold exactly, all plan
 //! traversal orders are bit-identical (the property the schedule tests
 //! pin), and every blocked result is bit-identical to the seed's naive
 //! loops (kept as [`super::kernel::oracle`]).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::datatype::Semiring;
 
 use super::artifact::ArtifactSpec;
-use super::engine::HostTensor;
+use super::engine::{Element, HostTensor};
 use super::kernel::{
     self, ALayout, MinPlusF32, PlusTimesF32, PlusTimesF64, PlusTimesI32Wrap, PlusTimesU32Wrap,
+    SemiringOps,
 };
 
-/// `out = c0 + a·b` (or `a·b` when `c0` is `None`), f32, ascending-k
-/// accumulation per element. Thin wrapper over the blocked engine, kept
-/// as the executor's zero-acc entry point.
-pub fn gemm_f32(
-    c0: Option<&[f32]>,
-    a: &[f32],
-    b: &[f32],
-    m: usize,
-    n: usize,
-    k: usize,
-) -> Vec<f32> {
-    kernel::gemm(PlusTimesF32, c0, a, ALayout::RowMajor, b, m, n, k)
-}
-
-/// f32 fast path mirroring `LoadedKernel::execute_f32`: inputs are
+/// Typed fast path mirroring `LoadedKernel::execute_slices`: inputs are
 /// pre-validated against the spec shapes by the caller.
 ///
-/// The algebra is chosen by [`Semiring::for_op`] — an op unknown to the
-/// datatype layer is rejected here, so the dispatch table and the
-/// semiring mapping cannot silently diverge; within plus-times the op
-/// string then selects accumulation (`matmul_acc`) or the transposed-A
-/// packing (`matmul_at`).
-pub fn execute_f32(spec: &ArtifactSpec, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+/// The algebra is double-checked against [`Semiring::for_op`] — an op
+/// unknown to the datatype layer, or one whose semiring disagrees with
+/// the caller's instantiation, is rejected here, so the dispatch table
+/// and the semiring mapping cannot silently diverge. Within the algebra
+/// the op string then selects accumulation (`*_acc`, 3 inputs) or the
+/// transposed-A packing (`matmul_at`).
+pub fn execute_slices<S: SemiringOps>(
+    sr: S,
+    spec: &ArtifactSpec,
+    inputs: &[&[S::Elem]],
+) -> Result<Vec<S::Elem>> {
     let (m, n, k) = (spec.m, spec.n, spec.k);
     let Some(semiring) = Semiring::for_op(&spec.op) else {
         bail!("native backend: unsupported op {:?}", spec.op);
     };
-    match (semiring, spec.op.as_str()) {
-        (Semiring::MinPlus, _) => {
-            Ok(kernel::gemm(MinPlusF32, None, inputs[0], ALayout::RowMajor, inputs[1], m, n, k))
-        }
-        (Semiring::PlusTimes, "matmul") => Ok(gemm_f32(None, inputs[0], inputs[1], m, n, k)),
-        (Semiring::PlusTimes, "matmul_acc") => {
-            Ok(gemm_f32(Some(inputs[0]), inputs[1], inputs[2], m, n, k))
-        }
-        (Semiring::PlusTimes, "matmul_at") => {
-            Ok(kernel::gemm(PlusTimesF32, None, inputs[0], ALayout::Transposed, inputs[1], m, n, k))
-        }
-        (Semiring::PlusTimes, other) => {
-            bail!("native backend: plus-times op {other:?} has no kernel instantiation")
-        }
+    if semiring != sr.algebra() {
+        bail!(
+            "native backend: op {:?} computes {semiring}, caller algebra is {}",
+            spec.op,
+            sr.algebra()
+        );
+    }
+    if spec.is_accumulate() {
+        let &[c0, a, b] = inputs else {
+            bail!("{}: op {:?} takes 3 inputs, got {}", spec.name, spec.op, inputs.len());
+        };
+        Ok(kernel::gemm(sr, Some(c0), a, ALayout::RowMajor, b, m, n, k))
+    } else {
+        let &[a, b] = inputs else {
+            bail!("{}: op {:?} takes 2 inputs, got {}", spec.name, spec.op, inputs.len());
+        };
+        let layout = if spec.op == "matmul_at" { ALayout::Transposed } else { ALayout::RowMajor };
+        Ok(kernel::gemm(sr, None, a, layout, b, m, n, k))
     }
 }
 
-/// Typed path mirroring `LoadedKernel::execute`: dispatch on the spec's
-/// dtype. Integer matmuls use wrapping arithmetic (matching XLA),
-/// accumulated in-width in a single pass.
+/// Borrow typed slices out of the enum inputs and run [`execute_slices`]
+/// under one concrete instantiation.
+fn run_typed<S>(sr: S, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<HostTensor>
+where
+    S: SemiringOps,
+    S::Elem: Element,
+{
+    let mut slices: Vec<&[S::Elem]> = Vec::with_capacity(inputs.len());
+    for (i, t) in inputs.iter().enumerate() {
+        slices.push(S::Elem::as_slice(t).ok_or_else(|| {
+            anyhow!(
+                "{}: input {i} expected {}, got {}",
+                spec.name,
+                S::Elem::DTYPE,
+                t.dtype_name()
+            )
+        })?);
+    }
+    Ok(S::Elem::wrap(execute_slices(sr, spec, &slices)?))
+}
+
+/// Enum-level path mirroring `LoadedKernel::execute`: map the spec's
+/// `(op, dtype)` onto a kernel instantiation and dispatch. One row per
+/// supported (semiring, dtype) pair — the full flexibility matrix the
+/// native backend serves.
 pub fn execute(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<HostTensor> {
-    let (m, n, k) = (spec.m, spec.n, spec.k);
-    match spec.dtype.as_str() {
-        "float32" => {
-            let mut f32_inputs = Vec::with_capacity(inputs.len());
-            for t in inputs {
-                match t.as_f32() {
-                    Some(v) => f32_inputs.push(v),
-                    None => bail!(
-                        "{}: expected float32 input, got {}",
-                        spec.name,
-                        t.dtype_name()
-                    ),
-                }
-            }
-            Ok(HostTensor::F32(execute_f32(spec, &f32_inputs)?))
-        }
-        "float64" => match (spec.op.as_str(), inputs) {
-            ("matmul", [HostTensor::F64(a), HostTensor::F64(b)]) => Ok(HostTensor::F64(
-                kernel::gemm(PlusTimesF64, None, a, ALayout::RowMajor, b, m, n, k),
-            )),
-            _ => bail!("{}: unsupported float64 op/inputs", spec.name),
-        },
-        "int32" => match (spec.op.as_str(), inputs) {
-            ("matmul", [HostTensor::I32(a), HostTensor::I32(b)]) => Ok(HostTensor::I32(
-                kernel::gemm(PlusTimesI32Wrap, None, a, ALayout::RowMajor, b, m, n, k),
-            )),
-            _ => bail!("{}: unsupported int32 op/inputs", spec.name),
-        },
-        "uint32" => match (spec.op.as_str(), inputs) {
-            ("matmul", [HostTensor::U32(a), HostTensor::U32(b)]) => Ok(HostTensor::U32(
-                kernel::gemm(PlusTimesU32Wrap, None, a, ALayout::RowMajor, b, m, n, k),
-            )),
-            _ => bail!("{}: unsupported uint32 op/inputs", spec.name),
-        },
-        other => bail!("{}: unsupported native dtype {other:?}", spec.name),
+    let Some(semiring) = Semiring::for_op(&spec.op) else {
+        bail!("native backend: unsupported op {:?}", spec.op);
+    };
+    match (semiring, spec.dtype.as_str()) {
+        (Semiring::PlusTimes, "float32") => run_typed(PlusTimesF32, spec, inputs),
+        (Semiring::PlusTimes, "float64") => run_typed(PlusTimesF64, spec, inputs),
+        (Semiring::PlusTimes, "int32") => run_typed(PlusTimesI32Wrap, spec, inputs),
+        (Semiring::PlusTimes, "uint32") => run_typed(PlusTimesU32Wrap, spec, inputs),
+        (Semiring::MinPlus, "float32") => run_typed(MinPlusF32, spec, inputs),
+        (s, other) => bail!(
+            "{}: no native kernel instantiation for {s} over dtype {other:?}",
+            spec.name
+        ),
     }
 }
 
@@ -130,7 +130,7 @@ mod tests {
         // Route through the manifest parser so the spec shape stays in
         // sync with the real schema.
         let inputs = match op {
-            "matmul_acc" => format!(
+            "matmul_acc" | "distance_acc" => format!(
                 r#"[{{"shape": [{m}, {n}], "dtype": "float32"}},
                     {{"shape": [{m}, {k}], "dtype": "float32"}},
                     {{"shape": [{k}, {n}], "dtype": "float32"}}]"#
@@ -154,6 +154,10 @@ mod tests {
         Manifest::parse(&text).unwrap().artifacts[0].clone()
     }
 
+    fn matmul_f32(s: &ArtifactSpec, a: &[f32], b: &[f32]) -> Vec<f32> {
+        execute_slices(PlusTimesF32, s, &[a, b]).unwrap()
+    }
+
     #[test]
     fn unknown_op_is_rejected_via_semiring_mapping() {
         // Dispatch consults `Semiring::for_op` first: an op the datatype
@@ -161,8 +165,20 @@ mod tests {
         let mut s = spec("matmul", 2, 2, 2);
         s.op = "qr".into();
         let a = [0f32; 4];
-        let err = execute_f32(&s, &[&a, &a]).unwrap_err();
+        let err = execute_slices(PlusTimesF32, &s, &[&a, &a]).unwrap_err();
         assert!(err.to_string().contains("unsupported op"), "{err}");
+    }
+
+    #[test]
+    fn algebra_mismatch_is_rejected() {
+        // A min-plus instantiation against a plus-times op (and vice
+        // versa) must be a clean error, not silent wrong math.
+        let s = spec("matmul", 2, 2, 2);
+        let a = [0f32; 4];
+        let err = execute_slices(MinPlusF32, &s, &[&a, &a]).unwrap_err();
+        assert!(err.to_string().contains("caller algebra"), "{err}");
+        let d = spec("distance", 2, 2, 2);
+        assert!(execute_slices(PlusTimesF32, &d, &[&a, &a]).is_err());
     }
 
     #[test]
@@ -171,7 +187,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = rng.fill_normal_f32(m * k);
         let b = rng.fill_normal_f32(k * n);
-        let out = execute_f32(&spec("matmul", m, n, k), &[&a, &b]).unwrap();
+        let out = matmul_f32(&spec("matmul", m, n, k), &a, &b);
         for i in 0..m {
             for j in 0..n {
                 let exact: f64 =
@@ -187,7 +203,7 @@ mod tests {
         let mut rng = Rng::new(7);
         let a = rng.fill_normal_f32(m * k);
         let b = rng.fill_normal_f32(k * n);
-        let out = execute_f32(&spec("matmul", m, n, k), &[&a, &b]).unwrap();
+        let out = matmul_f32(&spec("matmul", m, n, k), &a, &b);
         assert_eq!(out, oracle::gemm_f32(None, &a, &b, m, n, k));
     }
 
@@ -199,7 +215,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let a = rng.fill_normal_f32(m * k);
         let b = rng.fill_normal_f32(k * n);
-        let full = execute_f32(&spec("matmul", m, n, k), &[&a, &b]).unwrap();
+        let full = matmul_f32(&spec("matmul", m, n, k), &a, &b);
 
         let half = k / 2;
         let a_lo: Vec<f32> = (0..m).flat_map(|i| a[i * k..i * k + half].to_vec()).collect();
@@ -208,9 +224,32 @@ mod tests {
         let b_hi = b[half * n..].to_vec();
         let zero = vec![0f32; m * n];
         let s = spec("matmul_acc", m, n, half);
-        let c1 = execute_f32(&s, &[&zero, &a_lo, &b_lo]).unwrap();
-        let c2 = execute_f32(&s, &[&c1, &a_hi, &b_hi]).unwrap();
+        let c1 = execute_slices(PlusTimesF32, &s, &[&zero, &a_lo, &b_lo]).unwrap();
+        let c2 = execute_slices(PlusTimesF32, &s, &[&c1, &a_hi, &b_hi]).unwrap();
         assert_eq!(c2, full, "chained slabs must be bit-identical to one shot");
+    }
+
+    #[test]
+    fn distance_acc_chains_like_matmul_acc() {
+        // The min-plus accumulation artifact (the tiled executor's
+        // per-step op for distance workloads): folding a k-split through
+        // the C input must equal the one-shot distance product exactly
+        // (min is associative).
+        let (m, n, k) = (6, 5, 9);
+        let mut rng = Rng::new(14);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let full = oracle::distance_f32(&a, &b, m, n, k);
+
+        let half = k / 2;
+        let a_lo: Vec<f32> = (0..m).flat_map(|i| a[i * k..i * k + half].to_vec()).collect();
+        let a_hi: Vec<f32> = (0..m).flat_map(|i| a[i * k + half..(i + 1) * k].to_vec()).collect();
+        let inf = vec![f32::INFINITY; m * n];
+        let s = spec("distance_acc", m, n, half);
+        let c1 = execute_slices(MinPlusF32, &s, &[&inf, &a_lo, &b[..half * n]]).unwrap();
+        let s2 = spec("distance_acc", m, n, k - half);
+        let c2 = execute_slices(MinPlusF32, &s2, &[&c1, &a_hi, &b[half * n..]]).unwrap();
+        assert_eq!(c2, full);
     }
 
     #[test]
@@ -219,7 +258,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let at = rng.fill_normal_f32(k * m); // stored (k, m)
         let b = rng.fill_normal_f32(k * n);
-        let out = execute_f32(&spec("matmul_at", m, n, k), &[&at, &b]).unwrap();
+        let out = matmul_f32(&spec("matmul_at", m, n, k), &at, &b);
         assert_eq!(out, oracle::gemm_at_f32(&at, &b, m, n, k), "vs seed oracle");
         let mut a = vec![0f32; m * k];
         for r in 0..k {
@@ -227,7 +266,7 @@ mod tests {
                 a[c * k + r] = at[r * m + c];
             }
         }
-        let plain = execute_f32(&spec("matmul", m, n, k), &[&a, &b]).unwrap();
+        let plain = matmul_f32(&spec("matmul", m, n, k), &a, &b);
         for (x, y) in out.iter().zip(&plain) {
             assert!((x - y).abs() < 1e-5);
         }
@@ -239,7 +278,7 @@ mod tests {
         let mut rng = Rng::new(6);
         let a = rng.fill_normal_f32(m * k);
         let b = rng.fill_normal_f32(k * n);
-        let out = execute_f32(&spec("distance", m, n, k), &[&a, &b]).unwrap();
+        let out = execute_slices(MinPlusF32, &spec("distance", m, n, k), &[&a, &b]).unwrap();
         for i in 0..m {
             for j in 0..n {
                 let exact = (0..k)
@@ -295,5 +334,18 @@ mod tests {
         let want: Vec<u32> =
             oracle::gemm_i64(&au, &bu, m, n, k).iter().map(|&v| v as u32).collect();
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn enum_dispatch_rejects_unsupported_pairs() {
+        // min-plus over f64 has no kernel instantiation yet: clean error.
+        let mut s = spec("distance", 2, 2, 2);
+        s.dtype = "float64".into();
+        for t in &mut s.inputs {
+            t.dtype = "float64".into();
+        }
+        let a = HostTensor::F64(vec![0.0; 4]);
+        let err = execute(&s, &[a.clone(), a]).unwrap_err();
+        assert!(err.to_string().contains("no native kernel instantiation"), "{err}");
     }
 }

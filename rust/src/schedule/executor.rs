@@ -1,16 +1,17 @@
-//! Tiled executor: run a [`TilePlan`] against the PJRT runtime.
+//! Tiled executor: run a [`TilePlan`] against the runtime, for **any**
+//! dtype and semiring the kernel engine instantiates.
 //!
 //! The executor applies the paper's DDR↔BRAM discipline at the host↔PJRT
 //! boundary (Eq. 6: reuse minimizes off-chip I/O):
 //!
-//! * **Host-resident accumulator** — partial C tiles accumulate directly
-//!   into the output matrix on the host instead of round-tripping through
-//!   the device once per k-slab. The kernel's C input is the constant
-//!   zero tile (`execute_f32_zero_acc`: never materialized by the native
-//!   backend, cacheable by a PJRT transport), so C traffic drops from
-//!   `2·tm·tn` per step to `tm·tn` out per step plus the template once —
-//!   the analogue of the C memory tile staying resident in BRAM
-//!   (Sec. 4.1).
+//! * **Host-resident accumulator** — partial C tiles fold directly into
+//!   the output matrix on the host (with the semiring's ⊕) instead of
+//!   round-tripping through the device once per k-slab. The kernel's C
+//!   input is the constant ⊕-identity tile (`execute_zero_acc`: never
+//!   materialized by the native backend, cacheable by a PJRT transport),
+//!   so C traffic drops from `2·tm·tn` per step to `tm·tn` out per step
+//!   plus the template once — the analogue of the C memory tile staying
+//!   resident in BRAM (Sec. 4.1).
 //! * **Slab reuse** — the plan's `reuse_a`/`reuse_b` flags (set by the
 //!   traversal [`Order`]) let the executor keep a packed slab and skip
 //!   both the re-pack and the re-ship whenever the next step needs the
@@ -18,11 +19,23 @@
 //! * **Double buffering** — while the kernel executes the current step
 //!   on this thread, a scoped helper thread packs the next step's slabs
 //!   into the inactive halves of two ping-pong buffer pairs. Only plain
-//!   `Vec<f32>` buffers cross threads; the PJRT executable never leaves
-//!   the calling thread. This mirrors the double-buffered memory tiles of
+//!   element buffers cross threads; the PJRT executable never leaves the
+//!   calling thread. This mirrors the double-buffered memory tiles of
 //!   Sec. 4.1.
-//! * **Zero-fill skipping** — full (non-ragged) slabs are packed by pure
-//!   `copy_from_slice`; the zero padding pass runs only for edge tiles.
+//! * **Pad-fill skipping** — full (non-ragged) slabs are packed by pure
+//!   `copy_from_slice`; the ⊕-identity padding pass runs only for edge
+//!   tiles (zeros for plus-times, +∞ for min-plus — the ⊗-annihilator
+//!   either way, so padded lanes never perturb a result).
+//!
+//! Everything below the convenience constructors is generic over a
+//! [`SemiringOps`] instantiation — the same zero-sized-ops
+//! monomorphization `runtime::kernel` uses — so f32/f64/wrapping-integer
+//! plus-times GEMM and the min-plus distance product all flow through
+//! one schedule implementation (the paper's Sec. 5.2 flexibility claim,
+//! carried through the whole host stack instead of stopping at the
+//! microkernel). [`TiledExecutor::matmul`] remains the f32 convenience
+//! wrapper; [`TiledExecutor::run_tensor`] is the enum-level entry the
+//! GEMM service dispatches through.
 //!
 //! The seed's schedule (pack everything every step, C in+out every step)
 //! is preserved as [`ExecMode::Roundtrip`] so benches can measure the
@@ -36,14 +49,22 @@
 //! oversubscribed by nested kernel threads unless
 //! `PALLAS_NATIVE_THREADS` explicitly forces a width.
 
+// run_with necessarily carries (ops, a, b, m, n, k, order, mode): the
+// BLAS-shaped signature the rest of the stack expects.
+#![allow(clippy::too_many_arguments)]
+
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::runtime::{LoadedKernel, Runtime};
+use crate::datatype::{DataType, Semiring};
+use crate::runtime::kernel::{
+    MinPlusF32, PlusTimesF32, PlusTimesF64, PlusTimesI32Wrap, PlusTimesU32Wrap, SemiringOps,
+};
+use crate::runtime::{Element, HostTensor, LoadedKernel, Runtime};
 
 use super::order::Order;
-use super::tiles::{Step, TilePlan};
+use super::tiles::{model_tile_shape, HostCacheProfile, Step, TilePlan};
 
 /// Which accumulation schedule to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,42 +78,66 @@ pub enum ExecMode {
     Roundtrip,
 }
 
-/// Execution result + measurements.
+/// Execution result + measurements. `C` is the output container:
+/// `Vec<f32>` (the default) for the f32 convenience entry points,
+/// `Vec<E>` for [`TiledExecutor::run_with`], [`HostTensor`] for
+/// [`TiledExecutor::run_tensor`].
 #[derive(Debug)]
-pub struct ExecutorRun {
+pub struct ExecutorRun<C = Vec<f32>> {
     /// Row-major m×n result.
-    pub c: Vec<f32>,
+    pub c: C,
     pub plan: TilePlan,
     /// Artifact invocations performed.
     pub steps_executed: usize,
     /// Elements shipped across the host↔device boundary: measured from
     /// the A/B slabs actually packed plus one partial-C tile out per
-    /// step. The constant zero C-in template is charged once per run by
-    /// contract (the native backend never materializes it; the gated
-    /// PJRT backend still re-ships it per call until constant-literal
-    /// caching lands there — see `LoadedKernel::execute_f32_zero_acc`).
+    /// step. The constant ⊕-identity C-in template is charged once per
+    /// run by contract (the native backend never materializes it; the
+    /// gated PJRT backend still re-ships it per call until
+    /// constant-literal caching lands there — see
+    /// `LoadedKernel::execute_zero_acc`).
     pub transfer_elements: u64,
     /// Traversal order the run used.
     pub order: Order,
     pub wall: Duration,
 }
 
-impl ExecutorRun {
-    /// Achieved multiply-add rate (madd/s) over the wallclock.
+impl<C> ExecutorRun<C> {
+    /// Achieved multiply-add (⊗/⊕ pair) rate over the wallclock.
     pub fn madds_per_sec(&self) -> f64 {
         (self.plan.m as f64 * self.plan.n as f64 * self.plan.k as f64)
             / self.wall.as_secs_f64()
     }
+
+    /// Repackage the output container, keeping every measurement.
+    pub fn map_c<U>(self, f: impl FnOnce(C) -> U) -> ExecutorRun<U> {
+        ExecutorRun {
+            c: f(self.c),
+            plan: self.plan,
+            steps_executed: self.steps_executed,
+            transfer_elements: self.transfer_elements,
+            order: self.order,
+            wall: self.wall,
+        }
+    }
 }
 
 /// Pack the (padded) A slab for `step`: rows `row0..row0+rows` of A,
-/// columns `k0..k0+kdepth`, into a `tm×tk` buffer. Zero-fills padding
-/// only when the slab is ragged; full slabs are overwritten by copies
-/// alone.
-pub fn pack_a_slab(dst: &mut [f32], a: &[f32], step: &Step, k: usize, tm: usize, tk: usize) {
+/// columns `k0..k0+kdepth`, into a `tm×tk` buffer. `pad` is the
+/// semiring's ⊕-identity (the ⊗-annihilator); the fill pass runs only
+/// when the slab is ragged — full slabs are overwritten by copies alone.
+pub fn pack_a_slab<E: Copy>(
+    pad: E,
+    dst: &mut [E],
+    a: &[E],
+    step: &Step,
+    k: usize,
+    tm: usize,
+    tk: usize,
+) {
     debug_assert_eq!(dst.len(), tm * tk);
     if step.rows < tm || step.kdepth < tk {
-        dst.fill(0.0);
+        dst.fill(pad);
     }
     for r in 0..step.rows {
         let src = (step.row0 + r) * k + step.k0;
@@ -102,10 +147,18 @@ pub fn pack_a_slab(dst: &mut [f32], a: &[f32], step: &Step, k: usize, tm: usize,
 
 /// Pack the (padded) B slab for `step`: rows `k0..k0+kdepth` of B,
 /// columns `col0..col0+cols`, into a `tk×tn` buffer.
-pub fn pack_b_slab(dst: &mut [f32], b: &[f32], step: &Step, n: usize, tk: usize, tn: usize) {
+pub fn pack_b_slab<E: Copy>(
+    pad: E,
+    dst: &mut [E],
+    b: &[E],
+    step: &Step,
+    n: usize,
+    tk: usize,
+    tn: usize,
+) {
     debug_assert_eq!(dst.len(), tk * tn);
     if step.kdepth < tk || step.cols < tn {
-        dst.fill(0.0);
+        dst.fill(pad);
     }
     for kk in 0..step.kdepth {
         let src = (step.k0 + kk) * n + step.col0;
@@ -119,7 +172,7 @@ pub fn pack_b_slab(dst: &mut [f32], b: &[f32], step: &Step, n: usize, tk: usize,
 const PACK_SPAWN_THRESHOLD: usize = 32 * 1024;
 
 /// Split a ping-pong buffer pair into (read half, write half).
-fn ping_pong(bufs: &mut [Vec<f32>; 2], cur: usize) -> (&[f32], &mut Vec<f32>) {
+fn ping_pong<E>(bufs: &mut [Vec<E>; 2], cur: usize) -> (&[E], &mut Vec<E>) {
     let (lo, hi) = bufs.split_at_mut(1);
     if cur == 0 {
         (lo[0].as_slice(), &mut hi[0])
@@ -128,38 +181,99 @@ fn ping_pong(bufs: &mut [Vec<f32>; 2], cur: usize) -> (&[f32], &mut Vec<f32>) {
     }
 }
 
-/// Drives one `matmul_acc` artifact over arbitrary problem sizes.
+/// Drives one accumulation artifact (`matmul_acc` / `distance_acc`)
+/// over arbitrary problem sizes. The artifact fixes tile shape, dtype,
+/// and semiring; the entry points are monomorphized per element type.
 pub struct TiledExecutor {
     kernel: Arc<LoadedKernel>,
+    semiring: Semiring,
+    dtype: String,
     tile_m: usize,
     tile_n: usize,
     tile_k: usize,
 }
 
 impl TiledExecutor {
-    /// Pick the largest f32 accumulation artifact from the runtime.
+    /// Convenience: the plus-times float32 executor (the classic GEMM
+    /// deployment). Equivalent to
+    /// `for_algebra(rt, Semiring::PlusTimes, "float32")`.
     pub fn from_runtime(rt: &Runtime) -> Result<TiledExecutor> {
-        let spec = rt
-            .manifest
-            .find_op("matmul_acc", "float32")
-            .first()
-            .map(|s| s.name.clone())
-            .context("no float32 matmul_acc artifact in manifest")?;
-        Self::with_artifact(rt, &spec)
+        Self::for_algebra(rt, Semiring::PlusTimes, "float32")
     }
 
-    /// Use a specific accumulation artifact by name.
+    /// Pick an accumulation artifact for `(semiring, dtype)`, preferring
+    /// the largest tile whose per-step working set (A slab + B slab + C
+    /// tile) fits the host cache profile — the dtype-width-aware
+    /// selection `schedule::tiles::model_tile_shape` models: an f64 tile
+    /// occupies twice the bytes of the same-shape f32 tile, so wider
+    /// dtypes may land on smaller artifacts.
+    pub fn for_algebra(rt: &Runtime, semiring: Semiring, dtype: &str) -> Result<TiledExecutor> {
+        Self::for_algebra_with(rt, semiring, dtype, &HostCacheProfile::default())
+    }
+
+    /// [`Self::for_algebra`] under an explicit cache profile: among the
+    /// artifacts whose working set fits the budget, pick the one whose
+    /// working set is closest to the model-derived ideal tile shape for
+    /// this dtype width ([`model_tile_shape`]) — the host analogue of
+    /// sizing the memory tile to the on-chip budget (Eq. 6/7). With no
+    /// fitting artifact, fall back to the smallest available.
+    pub fn for_algebra_with(
+        rt: &Runtime,
+        semiring: Semiring,
+        dtype: &str,
+        profile: &HostCacheProfile,
+    ) -> Result<TiledExecutor> {
+        let op = semiring.acc_op();
+        let candidates = rt.manifest.find_op(op, dtype);
+        if candidates.is_empty() {
+            bail!("no {op}/{dtype} accumulation artifact in manifest ({semiring} semiring)");
+        }
+        let elem_bytes = DataType::manifest_bytes(dtype);
+        let (rm, rn, rk) = model_tile_shape(elem_bytes, profile);
+        let ideal_ws = HostCacheProfile::working_set_bytes(rm, rn, rk, elem_bytes);
+        let spec = candidates
+            .iter()
+            .filter(|s| profile.fits(s.m, s.n, s.k, elem_bytes))
+            .min_by_key(|s| {
+                ideal_ws.abs_diff(HostCacheProfile::working_set_bytes(s.m, s.n, s.k, elem_bytes))
+            })
+            .unwrap_or_else(|| candidates.last().expect("non-empty candidates"));
+        let name = spec.name.clone();
+        Self::with_artifact(rt, &name)
+    }
+
+    /// Use a specific accumulation artifact by name; semiring and dtype
+    /// follow from its manifest spec.
     pub fn with_artifact(rt: &Runtime, name: &str) -> Result<TiledExecutor> {
         let kernel = rt.kernel(name)?;
         let spec = &kernel.spec;
         if !spec.is_accumulate() {
-            bail!("artifact {name:?} is {:?}, need matmul_acc", spec.op);
+            bail!("artifact {name:?} is {:?}, need an accumulation op", spec.op);
         }
-        Ok(TiledExecutor { tile_m: spec.m, tile_n: spec.n, tile_k: spec.k, kernel })
+        let semiring = Semiring::for_op(&spec.op)
+            .with_context(|| format!("artifact {name:?}: op {:?} has no semiring", spec.op))?;
+        Ok(TiledExecutor {
+            semiring,
+            dtype: spec.dtype.clone(),
+            tile_m: spec.m,
+            tile_n: spec.n,
+            tile_k: spec.k,
+            kernel,
+        })
     }
 
     pub fn tile_shape(&self) -> (usize, usize, usize) {
         (self.tile_m, self.tile_n, self.tile_k)
+    }
+
+    /// The (⊕, ⊗) algebra this executor's artifact computes.
+    pub fn semiring(&self) -> Semiring {
+        self.semiring
+    }
+
+    /// Manifest dtype this executor's artifact carries.
+    pub fn dtype(&self) -> &str {
+        &self.dtype
     }
 
     /// Plan for a given problem under the traffic-minimal traversal order.
@@ -167,14 +281,15 @@ impl TiledExecutor {
         TilePlan::auto(m, n, k, self.tile_m, self.tile_n, self.tile_k)
     }
 
-    /// C = A·B for row-major f32 `a` (m×k), `b` (k×n), using the
-    /// communication-avoiding path under the cost-model-selected order.
+    /// Convenience: C = A·B for row-major f32 `a` (m×k), `b` (k×n) over
+    /// plus-times, using the communication-avoiding path under the
+    /// cost-model-selected order.
     pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Result<ExecutorRun> {
-        let order = Order::select(m, n, k, self.tile_m, self.tile_n, self.tile_k);
-        self.matmul_with(a, b, m, n, k, order, ExecMode::Reuse)
+        self.run(PlusTimesF32, a, b, m, n, k)
     }
 
-    /// C = A·B with an explicit traversal order and execution mode.
+    /// Convenience: f32 plus-times with an explicit traversal order and
+    /// execution mode.
     pub fn matmul_with(
         &self,
         a: &[f32],
@@ -185,14 +300,86 @@ impl TiledExecutor {
         order: Order,
         mode: ExecMode,
     ) -> Result<ExecutorRun> {
-        assert_eq!(a.len(), m * k, "A must be m×k");
-        assert_eq!(b.len(), k * n, "B must be k×n");
+        self.run_with(PlusTimesF32, a, b, m, n, k, order, mode)
+    }
+
+    /// C = A ⊗⊕ B over the executor's semiring, auto order, reuse mode:
+    /// the typed entry point every dtype shares.
+    pub fn run<S>(
+        &self,
+        sr: S,
+        a: &[S::Elem],
+        b: &[S::Elem],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<ExecutorRun<Vec<S::Elem>>>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        let order = Order::select(m, n, k, self.tile_m, self.tile_n, self.tile_k);
+        self.run_with(sr, a, b, m, n, k, order, ExecMode::Reuse)
+    }
+
+    /// [`Self::run`] with an explicit traversal order and execution mode.
+    pub fn run_with<S>(
+        &self,
+        sr: S,
+        a: &[S::Elem],
+        b: &[S::Elem],
+        m: usize,
+        n: usize,
+        k: usize,
+        order: Order,
+        mode: ExecMode,
+    ) -> Result<ExecutorRun<Vec<S::Elem>>>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        if sr.algebra() != self.semiring {
+            bail!(
+                "executor artifact {:?} computes {}, caller algebra is {}",
+                self.kernel.spec.name,
+                self.semiring,
+                sr.algebra()
+            );
+        }
+        if S::Elem::DTYPE != self.dtype {
+            bail!(
+                "executor artifact {:?} is {}, caller elements are {}",
+                self.kernel.spec.name,
+                self.dtype,
+                S::Elem::DTYPE
+            );
+        }
+        if m == 0 || n == 0 || k == 0 {
+            bail!("empty problem {m}x{n}x{k}");
+        }
+        if a.len() != m * k {
+            bail!("A buffer has {} elements, problem needs {m}x{k}", a.len());
+        }
+        if b.len() != k * n {
+            bail!("B buffer has {} elements, problem needs {k}x{n}", b.len());
+        }
         let plan = TilePlan::with_order(m, n, k, self.tile_m, self.tile_n, self.tile_k, order);
         let t0 = Instant::now();
         let (c, transfer, steps_executed) = match mode {
-            ExecMode::Reuse => self.run_reuse(&plan, a, b)?,
-            ExecMode::Roundtrip => self.run_roundtrip(&plan, a, b)?,
-        };
+            ExecMode::Reuse => self.run_reuse(sr, &plan, a, b),
+            ExecMode::Roundtrip => self.run_roundtrip(sr, &plan, a, b),
+        }
+        .with_context(|| {
+            format!(
+                "{}x{}x{} {} {} ({} order, {mode:?} mode)",
+                m,
+                n,
+                k,
+                self.dtype,
+                self.semiring,
+                order.name()
+            )
+        })?;
         Ok(ExecutorRun {
             c,
             plan,
@@ -203,25 +390,72 @@ impl TiledExecutor {
         })
     }
 
+    /// Enum-level entry: dispatch a [`HostTensor`] pair onto the typed
+    /// path matching this executor's algebra (auto order, reuse mode).
+    /// This is the boundary the GEMM service submits through.
+    pub fn run_tensor(
+        &self,
+        a: &HostTensor,
+        b: &HostTensor,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<ExecutorRun<HostTensor>> {
+        use HostTensor as H;
+        match (self.semiring, a, b) {
+            (Semiring::PlusTimes, H::F32(av), H::F32(bv)) => {
+                Ok(self.run(PlusTimesF32, av, bv, m, n, k)?.map_c(H::F32))
+            }
+            (Semiring::PlusTimes, H::F64(av), H::F64(bv)) => {
+                Ok(self.run(PlusTimesF64, av, bv, m, n, k)?.map_c(H::F64))
+            }
+            (Semiring::PlusTimes, H::I32(av), H::I32(bv)) => {
+                Ok(self.run(PlusTimesI32Wrap, av, bv, m, n, k)?.map_c(H::I32))
+            }
+            (Semiring::PlusTimes, H::U32(av), H::U32(bv)) => {
+                Ok(self.run(PlusTimesU32Wrap, av, bv, m, n, k)?.map_c(H::U32))
+            }
+            (Semiring::MinPlus, H::F32(av), H::F32(bv)) => {
+                Ok(self.run(MinPlusF32, av, bv, m, n, k)?.map_c(H::F32))
+            }
+            (semiring, a, b) => bail!(
+                "no executor instantiation for {semiring} over A {} / B {}",
+                a.dtype_name(),
+                b.dtype_name()
+            ),
+        }
+    }
+
     /// The communication-avoiding schedule: host-resident accumulator,
     /// slab reuse, double-buffered packing on a scoped helper thread.
-    fn run_reuse(&self, plan: &TilePlan, a: &[f32], b: &[f32]) -> Result<(Vec<f32>, u64, usize)> {
+    fn run_reuse<S>(
+        &self,
+        sr: S,
+        plan: &TilePlan,
+        a: &[S::Elem],
+        b: &[S::Elem],
+    ) -> Result<(Vec<S::Elem>, u64, usize)>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
         let (tm, tn, tk) = (self.tile_m, self.tile_n, self.tile_k);
         let (m, n, k) = (plan.m, plan.n, plan.k);
-        let mut c = vec![0f32; m * n];
-        let mut a_bufs = [vec![0f32; tm * tk], vec![0f32; tm * tk]];
-        let mut b_bufs = [vec![0f32; tk * tn], vec![0f32; tk * tn]];
+        let pad = sr.zero();
+        let mut c = vec![pad; m * n];
+        let mut a_bufs = [vec![pad; tm * tk], vec![pad; tm * tk]];
+        let mut b_bufs = [vec![pad; tk * tn], vec![pad; tk * tn]];
         let mut a_cur = 0usize;
         let mut b_cur = 0usize;
-        // The zero C-in template is a constant: the native backend never
-        // materializes it (`execute_f32_zero_acc`) and a caching
+        // The ⊕-identity C-in template is a constant: the native backend
+        // never materializes it (`execute_zero_acc`) and a caching
         // transport ships it at most once — charge it once per run.
         let mut transfer = (tm * tn) as u64;
         let mut steps_executed = 0usize;
 
         // Prologue: pack the first step's slabs on this thread.
-        pack_a_slab(&mut a_bufs[0], a, &plan.steps[0], k, tm, tk);
-        pack_b_slab(&mut b_bufs[0], b, &plan.steps[0], n, tk, tn);
+        pack_a_slab(pad, &mut a_bufs[0], a, &plan.steps[0], k, tm, tk);
+        pack_b_slab(pad, &mut b_bufs[0], b, &plan.steps[0], n, tk, tn);
         transfer += (tm * tk + tk * tn) as u64;
 
         for i in 0..plan.steps.len() {
@@ -233,48 +467,54 @@ impl TiledExecutor {
 
             // Execute the current step while the next step's slabs are
             // packed into the inactive ping-pong buffers. Large packs
-            // overlap on a scoped helper thread (only plain f32 buffers
-            // cross; the kernel handle stays on this thread); small
-            // packs run inline, where a thread spawn would cost more
-            // than the copy it hides.
+            // overlap on a scoped helper thread (only plain element
+            // buffers cross; the kernel handle stays on this thread);
+            // small packs run inline, where a thread spawn would cost
+            // more than the copy it hides.
             let pack_elems = next.map_or(0, |ns| {
                 (if ns.reuse_a { 0 } else { tm * tk }) + (if ns.reuse_b { 0 } else { tk * tn })
             });
             let out = if pack_elems >= PACK_SPAWN_THRESHOLD {
-                std::thread::scope(|scope| -> Result<Vec<f32>> {
+                std::thread::scope(|scope| -> Result<Vec<S::Elem>> {
                     let ns = next.expect("pack_elems > 0 implies a next step");
                     let packer = scope.spawn(move || {
                         if !ns.reuse_a {
-                            pack_a_slab(a_write, a, &ns, k, tm, tk);
+                            pack_a_slab(pad, a_write, a, &ns, k, tm, tk);
                         }
                         if !ns.reuse_b {
-                            pack_b_slab(b_write, b, &ns, n, tk, tn);
+                            pack_b_slab(pad, b_write, b, &ns, n, tk, tn);
                         }
                     });
-                    let out = kernel.execute_f32_zero_acc(a_read, b_read);
+                    let out = kernel.execute_zero_acc(sr, a_read, b_read);
                     packer.join().expect("slab packer panicked");
                     out
-                })?
+                })
             } else {
                 if let Some(ns) = next {
                     if !ns.reuse_a {
-                        pack_a_slab(a_write, a, &ns, k, tm, tk);
+                        pack_a_slab(pad, a_write, a, &ns, k, tm, tk);
                     }
                     if !ns.reuse_b {
-                        pack_b_slab(b_write, b, &ns, n, tk, tn);
+                        pack_b_slab(pad, b_write, b, &ns, n, tk, tn);
                     }
                 }
-                kernel.execute_f32_zero_acc(a_read, b_read)?
-            };
+                kernel.execute_zero_acc(sr, a_read, b_read)
+            }
+            .with_context(|| {
+                format!(
+                    "step {i} (tile ({}, {}) k-slab {})",
+                    step.ti, step.tj, step.ks
+                )
+            })?;
             steps_executed += 1;
             transfer += (tm * tn) as u64; // partial C tile out
 
-            // Accumulate the partial tile into the host-resident C.
+            // ⊕-fold the partial tile into the host-resident C.
             for r in 0..step.rows {
                 let dst = (step.row0 + r) * n + step.col0;
                 let src = r * tn;
                 for j in 0..step.cols {
-                    c[dst + j] += out[src + j];
+                    c[dst + j] = sr.add(c[dst + j], out[src + j]);
                 }
             }
 
@@ -294,35 +534,46 @@ impl TiledExecutor {
     }
 
     /// The seed schedule, kept as the measurable baseline: every step
-    /// packs both slabs from scratch (full zero-fill) and round-trips
+    /// packs both slabs from scratch (full pad-fill) and round-trips
     /// the C accumulator through the device. Correct under any traversal
     /// order thanks to the per-step `drain` metadata: accumulator tiles
     /// are created on first touch and retired exactly at their drain
     /// step (the seed's `unreachable!` tile-switch inference is gone).
-    fn run_roundtrip(&self, plan: &TilePlan, a: &[f32], b: &[f32]) -> Result<(Vec<f32>, u64, usize)> {
+    fn run_roundtrip<S>(
+        &self,
+        sr: S,
+        plan: &TilePlan,
+        a: &[S::Elem],
+        b: &[S::Elem],
+    ) -> Result<(Vec<S::Elem>, u64, usize)>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
         let (tm, tn, tk) = (self.tile_m, self.tile_n, self.tile_k);
         let (m, n, k) = (plan.m, plan.n, plan.k);
+        let pad = sr.zero();
         let tiles_m = m.div_ceil(tm);
         let tiles_n = n.div_ceil(tn);
-        let mut c = vec![0f32; m * n];
-        let mut acc: Vec<Option<Vec<f32>>> = vec![None; tiles_m * tiles_n];
-        let mut a_slab = vec![0f32; tm * tk];
-        let mut b_slab = vec![0f32; tk * tn];
+        let mut c = vec![pad; m * n];
+        let mut acc: Vec<Option<Vec<S::Elem>>> = vec![None; tiles_m * tiles_n];
+        let mut a_slab = vec![pad; tm * tk];
+        let mut b_slab = vec![pad; tk * tn];
         let mut transfer = 0u64;
         let mut steps_executed = 0usize;
 
-        for step in &plan.steps {
+        for (i, step) in plan.steps.iter().enumerate() {
             let tile = step.tj * tiles_m + step.ti;
             if acc[tile].is_none() {
-                acc[tile] = Some(vec![0f32; tm * tn]);
+                acc[tile] = Some(vec![pad; tm * tn]);
             }
 
-            a_slab.fill(0.0);
+            a_slab.fill(pad);
             for r in 0..step.rows {
                 let src = (step.row0 + r) * k + step.k0;
                 a_slab[r * tk..r * tk + step.kdepth].copy_from_slice(&a[src..src + step.kdepth]);
             }
-            b_slab.fill(0.0);
+            b_slab.fill(pad);
             for kk in 0..step.kdepth {
                 let src = (step.k0 + kk) * n + step.col0;
                 b_slab[kk * tn..kk * tn + step.cols].copy_from_slice(&b[src..src + step.cols]);
@@ -331,7 +582,13 @@ impl TiledExecutor {
             let c_in = acc[tile].as_ref().expect("accumulator present");
             let out = self
                 .kernel
-                .execute_f32(&[c_in.as_slice(), a_slab.as_slice(), b_slab.as_slice()])?;
+                .execute_slices(sr, &[c_in.as_slice(), a_slab.as_slice(), b_slab.as_slice()])
+                .with_context(|| {
+                    format!(
+                        "step {i} (tile ({}, {}) k-slab {})",
+                        step.ti, step.tj, step.ks
+                    )
+                })?;
             steps_executed += 1;
             transfer += (tm * tk + tk * tn + 2 * tm * tn) as u64;
 

@@ -13,12 +13,14 @@
 //!   host-traffic cost model that picks the minimal-transfer order per
 //!   problem shape;
 //! * [`tiles`] — planning: decompose an arbitrary m×n×k problem into
-//!   steps sized to an available artifact, carrying per-step reuse and
+//!   steps sized to an available artifact (or to the model-derived tile
+//!   shape of [`tiles::model_tile_shape`]), carrying per-step reuse and
 //!   drain metadata;
 //! * [`executor`] — execution: run the plan against the runtime with a
 //!   host-resident accumulator, slab reuse, and double-buffered packing
 //!   (the communication-avoiding path), or in the seed's round-trip mode
-//!   for baseline comparison.
+//!   for baseline comparison — generic over every dtype/semiring the
+//!   kernel engine instantiates.
 
 pub mod executor;
 pub mod loopnest;
@@ -27,4 +29,4 @@ pub mod tiles;
 
 pub use executor::{ExecMode, ExecutorRun, TiledExecutor};
 pub use order::Order;
-pub use tiles::{Step, TilePlan};
+pub use tiles::{model_tile_shape, HostCacheProfile, Step, TilePlan};

@@ -16,6 +16,74 @@
 
 use super::order::{self, Order};
 
+/// Host-side fast-memory budget: the BRAM analogue at the host↔device
+/// boundary. The paper sizes its memory tile to the on-chip budget
+/// (Eq. 6: communication falls as the resident tile grows); on the host
+/// the same role is played by the cache level the packed slabs and the
+/// live C tile must stay resident in while a step executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostCacheProfile {
+    /// Usable capacity in bytes (per-core L2 slice by default — the
+    /// level the microkernel's packed panels stream out of).
+    pub capacity_bytes: u64,
+}
+
+impl HostCacheProfile {
+    /// Conservative per-core L2 slice on current x86/ARM server parts.
+    pub const DEFAULT_CAPACITY_BYTES: u64 = 1 << 20;
+
+    pub fn with_capacity(capacity_bytes: u64) -> HostCacheProfile {
+        HostCacheProfile { capacity_bytes }
+    }
+
+    /// Bytes the per-step working set of a `(tm, tn, tk)` tile occupies:
+    /// **two** A slabs and **two** B slabs (the reuse-mode executor
+    /// double-buffers both pairs, mirroring the paper's double-buffered
+    /// memory tiles) plus the C tile.
+    pub fn working_set_bytes(tm: usize, tn: usize, tk: usize, elem_bytes: u64) -> u64 {
+        (2 * (tm as u64 * tk as u64 + tk as u64 * tn as u64) + tm as u64 * tn as u64)
+            * elem_bytes
+    }
+
+    /// Whether a tile shape's working set fits this budget — the test
+    /// [`crate::schedule::TiledExecutor`] applies when choosing among
+    /// fixed-shape artifacts for a dtype.
+    pub fn fits(&self, tm: usize, tn: usize, tk: usize, elem_bytes: u64) -> bool {
+        Self::working_set_bytes(tm, tn, tk, elem_bytes) <= self.capacity_bytes
+    }
+}
+
+impl Default for HostCacheProfile {
+    fn default() -> Self {
+        HostCacheProfile { capacity_bytes: Self::DEFAULT_CAPACITY_BYTES }
+    }
+}
+
+/// Tile dims are kept multiples of this quantum (two 8-lane register
+/// microtiles of `runtime::kernel`) so model-chosen tiles decompose
+/// evenly into the engine's compute tiles — the host analogue of the
+/// paper's `x_p`/`y_c` quantization steps in Eq. 6's optimization.
+pub const TILE_QUANTUM: usize = 16;
+
+/// Model-derived default tile shape for an element width under a host
+/// cache budget — Eq. 6/7 transplanted to the host boundary. Half the
+/// budget goes to the output tile (the host-resident accumulator, the
+/// role BRAM-resident C plays in the paper), maximized for computational
+/// intensity by `model::io::best_tile_shape` (square under quantization,
+/// Eq. 7); the other half holds the **double-buffered** A and B slab
+/// pairs (Sec. 4.1), which bounds the slab depth by
+/// `tk ≤ S/2/(2·(tm + tn))`. Wider dtypes therefore get smaller tiles —
+/// exactly how Table 2's per-dtype `x_tot × y_tot` shrink as `w_c`
+/// grows.
+pub fn model_tile_shape(elem_bytes: u64, profile: &HostCacheProfile) -> (usize, usize, usize) {
+    let q = TILE_QUANTUM as u64;
+    // Never model below one quantum tile, however small the budget.
+    let s = (profile.capacity_bytes / elem_bytes.max(1)).max(3 * q * q);
+    let (tm, tn) = crate::model::io::best_tile_shape(s / 2, q, q).unwrap_or((q, q));
+    let tk = ((s / 2) / (2 * (tm + tn)) / q * q).max(q);
+    (tm as usize, tn as usize, tk as usize)
+}
+
 /// One artifact invocation in the plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Step {
@@ -70,6 +138,23 @@ impl TilePlan {
     /// cheapest for this problem shape (Eq. 6 at the host boundary).
     pub fn auto(m: usize, n: usize, k: usize, tile_m: usize, tile_n: usize, tile_k: usize) -> TilePlan {
         Self::with_order(m, n, k, tile_m, tile_n, tile_k, Order::select(m, n, k, tile_m, tile_n, tile_k))
+    }
+
+    /// Plan with *model-derived* tile dims instead of caller-supplied
+    /// constants: [`model_tile_shape`] picks `(tile_m, tile_n, tile_k)`
+    /// from the dtype width and the host cache profile, then the traffic
+    /// model picks the traversal order. This is the planning entry for
+    /// callers whose tile shape is free (host-side blocking, artifact
+    /// generation sizing) rather than fixed by a compiled kernel.
+    pub fn auto_model(
+        m: usize,
+        n: usize,
+        k: usize,
+        elem_bytes: u64,
+        profile: &HostCacheProfile,
+    ) -> TilePlan {
+        let (tm, tn, tk) = model_tile_shape(elem_bytes, profile);
+        Self::auto(m, n, k, tm, tn, tk)
     }
 
     /// Plan with an explicit traversal order.
@@ -299,5 +384,60 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn rejects_empty() {
         TilePlan::new(0, 8, 8, 4, 4, 4);
+    }
+
+    #[test]
+    fn model_tiles_fit_budget_and_quantum() {
+        let profile = HostCacheProfile::default();
+        for elem_bytes in [4u64, 8] {
+            let (tm, tn, tk) = model_tile_shape(elem_bytes, &profile);
+            assert_eq!(tm % TILE_QUANTUM, 0, "{elem_bytes}B: tm quantized");
+            assert_eq!(tn % TILE_QUANTUM, 0, "{elem_bytes}B: tn quantized");
+            assert_eq!(tk % TILE_QUANTUM, 0, "{elem_bytes}B: tk quantized");
+            assert!(
+                HostCacheProfile::working_set_bytes(tm, tn, tk, elem_bytes)
+                    <= profile.capacity_bytes,
+                "{elem_bytes}B: ({tm},{tn},{tk}) working set over budget"
+            );
+            // The C tile alone respects its half-budget share (Eq. 6's
+            // resident-tile constraint).
+            assert!((tm * tn) as u64 * elem_bytes <= profile.capacity_bytes / 2 + 1);
+        }
+    }
+
+    #[test]
+    fn wider_dtypes_get_smaller_model_tiles() {
+        // Table 2's pattern at the host: f64 tiles must not exceed f32
+        // tiles in any dimension, and must be strictly smaller in area.
+        let profile = HostCacheProfile::default();
+        let (m4, n4, k4) = model_tile_shape(4, &profile);
+        let (m8, n8, k8) = model_tile_shape(8, &profile);
+        assert!(m8 <= m4 && n8 <= n4 && k8 <= k4);
+        assert!(m8 * n8 < m4 * n4);
+        // Sanity: with the default 1 MiB budget the f32 C tile is a few
+        // hundred elements square — big enough to amortize, far above
+        // the quantum floor.
+        assert!(m4 >= 128 && n4 >= 128, "({m4},{n4})");
+    }
+
+    #[test]
+    fn tiny_budget_clamps_to_quantum() {
+        let profile = HostCacheProfile::with_capacity(64);
+        let (tm, tn, tk) = model_tile_shape(8, &profile);
+        assert_eq!((tm, tn, tk), (TILE_QUANTUM, TILE_QUANTUM, TILE_QUANTUM));
+    }
+
+    #[test]
+    fn auto_model_plans_cover_the_problem() {
+        let p = TilePlan::auto_model(1000, 700, 900, 4, &HostCacheProfile::default());
+        assert_eq!(
+            p.n_steps(),
+            1000usize.div_ceil(p.tile_m) * 700usize.div_ceil(p.tile_n)
+                * 900usize.div_ceil(p.tile_k)
+        );
+        assert_eq!(p.order, Order::select(1000, 700, 900, p.tile_m, p.tile_n, p.tile_k));
+        let covered: usize =
+            p.steps.iter().filter(|s| s.ks == 0).map(|s| s.rows * s.cols).sum();
+        assert_eq!(covered, 1000 * 700);
     }
 }

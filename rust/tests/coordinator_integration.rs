@@ -4,7 +4,7 @@
 
 use fcamm::coordinator::report;
 use fcamm::coordinator::routing::check_routing;
-use fcamm::coordinator::{build_kernel, BuildOutcome, GemmService};
+use fcamm::coordinator::{build_kernel, BuildOutcome, GemmJob, GemmService};
 use fcamm::datatype::DataType;
 use fcamm::device::catalog::{all_devices, vcu1525};
 use fcamm::model::selection::SelectionOptions;
@@ -127,7 +127,8 @@ fn gemm_service_concurrent_correctness() {
     for (rx, expected) in jobs {
         let resp = rx.recv().expect("response").expect("success");
         workers_seen.insert(resp.worker);
-        for (i, (a, e)) in resp.c.iter().zip(&expected).enumerate() {
+        let c = resp.c.as_f32().expect("f32 result");
+        for (i, (a, e)) in c.iter().zip(&expected).enumerate() {
             assert!((a - e).abs() <= 2e-4 * (1.0 + e.abs()), "idx {i}");
         }
     }
@@ -151,7 +152,7 @@ fn gemm_service_blocking_api() {
     let resp = service.matmul_blocking(m, n, k, a.clone(), b.clone()).expect("run");
     let expected =
         reference_matmul(fcamm::datatype::Semiring::PlusTimes, &a, &b, m, n, k);
-    for (got, want) in resp.c.iter().zip(&expected) {
+    for (got, want) in resp.c.as_f32().expect("f32 result").iter().zip(&expected) {
         assert!((got - want).abs() <= 2e-4 * (1.0 + want.abs()));
     }
     assert!(resp.latency.as_nanos() > 0);
@@ -172,7 +173,7 @@ fn gemm_service_runs_on_native_fallback() {
     let b = rng.fill_normal_f32(k * n);
     let resp = service.matmul_blocking(m, n, k, a.clone(), b.clone()).expect("run");
     let expected = reference_matmul(fcamm::datatype::Semiring::PlusTimes, &a, &b, m, n, k);
-    for (got, want) in resp.c.iter().zip(&expected) {
+    for (got, want) in resp.c.as_f32().expect("f32 result").iter().zip(&expected) {
         assert!((got - want).abs() <= 2e-4 * (1.0 + want.abs()));
     }
     assert!(resp.transfer_elements > 0);
@@ -196,7 +197,7 @@ fn gemm_service_batch_spreads_and_matches_reference() {
             i,
             reference_matmul(fcamm::datatype::Semiring::PlusTimes, &a, &b, m, n, k),
         );
-        jobs.push((m, n, k, a, b));
+        jobs.push(GemmJob::f32(m, n, k, a, b));
     }
     let (rx, base_id, count) = service.submit_batch(jobs);
     assert_eq!(count, 8);
@@ -208,7 +209,7 @@ fn gemm_service_batch_spreads_and_matches_reference() {
         assert!(resp.id >= base_id && resp.id < base_id + count as u64);
         assert!(seen_ids.insert(resp.id), "duplicate response id");
         let want = &expected[&(resp.id - base_id)];
-        for (g, w) in resp.c.iter().zip(want) {
+        for (g, w) in resp.c.as_f32().expect("f32 result").iter().zip(want) {
             assert!((g - w).abs() <= 2e-4 * (1.0 + w.abs()));
         }
     }

@@ -1,0 +1,423 @@
+//! End-to-end tests for the dtype/semiring-generic data path:
+//! `GemmService` → `TiledExecutor` → `runtime::kernel`, pinned against
+//! the seed's naive loops (`kernel::oracle`) for every dtype the engine
+//! instantiates, across every plan traversal order and both execution
+//! modes.
+//!
+//! Bit-exactness contracts exercised here:
+//!
+//! * **Roundtrip mode** chains each tile's accumulator through the
+//!   kernel's C input, so every output element is one continuous
+//!   ascending-k fold — value-identical to the one-shot oracle for
+//!   *every* dtype, however many k-slabs the plan has.
+//! * **Reuse mode** folds per-slab partials into the host-resident C
+//!   with ⊕. For wrapping integers and min-plus, ⊕ is associative, so
+//!   the result is again identical to the one-shot oracle. For floats
+//!   the slab bracketing is part of the contract: results are pinned
+//!   against a slab-bracketed composition of oracle calls (and against
+//!   the one-shot oracle whenever one slab covers k).
+//! * All traversal orders produce identical bits in both modes (every
+//!   order visits a tile's k-slabs ascending).
+
+use fcamm::coordinator::{GemmJob, GemmService};
+use fcamm::datatype::Semiring;
+use fcamm::runtime::kernel::{
+    oracle, MinPlusF32, PlusTimesF32, PlusTimesF64, PlusTimesI32Wrap, PlusTimesU32Wrap,
+    SemiringOps,
+};
+use fcamm::runtime::{Element, HostTensor, Runtime};
+use fcamm::schedule::{ExecMode, HostCacheProfile, Order, TiledExecutor};
+use fcamm::util::rng::Rng;
+
+/// Slab-bracketed reference built from oracle partials: per k-slab, the
+/// full-accuracy oracle on that slice, ⊕-folded into C in ascending slab
+/// order — exactly the reuse-mode executor's accumulation bracketing.
+fn slabbed_oracle<S: SemiringOps>(
+    sr: S,
+    oracle_full: impl Fn(&[S::Elem], &[S::Elem], usize, usize, usize) -> Vec<S::Elem>,
+    a: &[S::Elem],
+    b: &[S::Elem],
+    m: usize,
+    n: usize,
+    k: usize,
+    tk: usize,
+) -> Vec<S::Elem> {
+    let mut c = vec![sr.zero(); m * n];
+    let mut k0 = 0;
+    while k0 < k {
+        let kd = tk.min(k - k0);
+        let a_slab: Vec<S::Elem> = (0..m)
+            .flat_map(|i| a[i * k + k0..i * k + k0 + kd].iter().copied())
+            .collect();
+        let b_slab = b[k0 * n..(k0 + kd) * n].to_vec();
+        let partial = oracle_full(&a_slab, &b_slab, m, n, kd);
+        for (cv, pv) in c.iter_mut().zip(&partial) {
+            *cv = sr.add(*cv, *pv);
+        }
+        k0 += kd;
+    }
+    c
+}
+
+/// Run one dtype through every (order, mode) pair on a 16³-tile
+/// executor and pin the results. `slab_exact` marks associative ⊕
+/// (integers, min-plus), where even multi-slab reuse-mode results must
+/// equal the one-shot oracle.
+fn pin_executor<S>(
+    exec: &TiledExecutor,
+    sr: S,
+    make: impl Fn(&mut Rng, usize) -> Vec<S::Elem>,
+    oracle_full: impl Fn(&[S::Elem], &[S::Elem], usize, usize, usize) -> Vec<S::Elem>,
+    slab_exact: bool,
+) where
+    S: SemiringOps,
+    S::Elem: Element,
+{
+    let (_, _, tk) = exec.tile_shape();
+    let mut rng = Rng::new(0xC0FFEE ^ tk as u64);
+    for &(m, n, k) in &[
+        (1usize, 1usize, 1usize),
+        (16, 16, 16),
+        (40, 25, 33),
+        (17, 50, 64),
+        (33, 20, 90),
+    ] {
+        let a = make(&mut rng, m * k);
+        let b = make(&mut rng, k * n);
+        let one_shot = oracle_full(&a, &b, m, n, k);
+        let slabbed = slabbed_oracle(sr, &oracle_full, &a, &b, m, n, k, tk);
+        if slab_exact {
+            assert_eq!(slabbed, one_shot, "{m}x{n}x{k}: ⊕ associativity");
+        }
+        let mut reuse_first: Option<Vec<S::Elem>> = None;
+        for order in Order::ALL {
+            let reuse = exec
+                .run_with(sr, &a, &b, m, n, k, order, ExecMode::Reuse)
+                .expect("reuse run");
+            assert_eq!(
+                reuse.c, slabbed,
+                "{} {m}x{n}x{k} {order}: reuse vs slab-bracketed oracle",
+                exec.dtype()
+            );
+            if k <= tk || slab_exact {
+                assert_eq!(reuse.c, one_shot, "{m}x{n}x{k} {order}: reuse vs one-shot oracle");
+            }
+            match &reuse_first {
+                None => reuse_first = Some(reuse.c),
+                Some(first) => assert_eq!(&reuse.c, first, "{order}: cross-order identity"),
+            }
+            assert_eq!(
+                reuse.transfer_elements,
+                reuse.plan.transfer_elements(),
+                "{order}: measured transfer vs plan"
+            );
+
+            let round = exec
+                .run_with(sr, &a, &b, m, n, k, order, ExecMode::Roundtrip)
+                .expect("roundtrip run");
+            assert_eq!(
+                round.c, one_shot,
+                "{} {m}x{n}x{k} {order}: roundtrip (c0-chained) vs one-shot oracle",
+                exec.dtype()
+            );
+        }
+    }
+}
+
+#[test]
+fn executor_f32_plus_times_pinned_to_oracle() {
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::with_artifact(&rt, "mmm_acc_f32_16").unwrap();
+    assert_eq!((exec.semiring(), exec.dtype()), (Semiring::PlusTimes, "float32"));
+    pin_executor(
+        &exec,
+        PlusTimesF32,
+        |rng, len| rng.fill_normal_f32(len),
+        |a, b, m, n, k| oracle::gemm_f32(None, a, b, m, n, k),
+        false,
+    );
+}
+
+#[test]
+fn executor_f64_plus_times_pinned_to_oracle() {
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::with_artifact(&rt, "mmm_acc_f64_16").unwrap();
+    assert_eq!((exec.semiring(), exec.dtype()), (Semiring::PlusTimes, "float64"));
+    pin_executor(
+        &exec,
+        PlusTimesF64,
+        |rng, len| (0..len).map(|_| rng.next_f64() * 4.0 - 2.0).collect(),
+        oracle::gemm_f64,
+        false,
+    );
+}
+
+#[test]
+fn executor_wrapping_i32_pinned_to_i64_truncation_oracle() {
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::with_artifact(&rt, "mmm_acc_i32_16").unwrap();
+    pin_executor(
+        &exec,
+        PlusTimesI32Wrap,
+        // Full-range values: overflow constantly, pinning mod-2³² math.
+        |rng, len| (0..len).map(|_| rng.next_u32() as i32).collect(),
+        |a, b, m, n, k| oracle::gemm_i64(a, b, m, n, k).iter().map(|&v| v as i32).collect(),
+        true,
+    );
+}
+
+#[test]
+fn executor_wrapping_u32_pinned_to_i64_truncation_oracle() {
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::with_artifact(&rt, "mmm_acc_u32_16").unwrap();
+    pin_executor(
+        &exec,
+        PlusTimesU32Wrap,
+        |rng, len| (0..len).map(|_| rng.next_u32()).collect(),
+        |a, b, m, n, k| oracle::gemm_i64(a, b, m, n, k).iter().map(|&v| v as u32).collect(),
+        true,
+    );
+}
+
+#[test]
+fn executor_min_plus_pinned_to_distance_oracle() {
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::with_artifact(&rt, "dist_acc_f32_16").unwrap();
+    assert_eq!((exec.semiring(), exec.dtype()), (Semiring::MinPlus, "float32"));
+    pin_executor(
+        &exec,
+        MinPlusF32,
+        |rng, len| {
+            (0..len)
+                .map(|_| {
+                    // Unreachable edges must survive the min-fold (and the
+                    // +∞ slab padding must never win a comparison).
+                    if rng.gen_range(0, 8) == 0 {
+                        f32::INFINITY
+                    } else {
+                        rng.next_f32() * 10.0
+                    }
+                })
+                .collect()
+        },
+        oracle::distance_f32,
+        true,
+    );
+}
+
+#[test]
+fn for_algebra_artifact_choice_is_width_aware() {
+    let rt = Runtime::native_default().unwrap();
+    // Default budget (1 MiB): both f32 and f64 fit the 128³ artifact.
+    let f32_exec = TiledExecutor::for_algebra(&rt, Semiring::PlusTimes, "float32").unwrap();
+    let f64_exec = TiledExecutor::for_algebra(&rt, Semiring::PlusTimes, "float64").unwrap();
+    assert_eq!(f32_exec.tile_shape(), (128, 128, 128));
+    assert_eq!(f64_exec.tile_shape(), (128, 128, 128));
+    // A 512 KiB budget still fits the f32 working set (double-buffered
+    // slab pairs + C tile: (2·2 + 1)·128²·4 = 320 KiB) but not the f64
+    // one (640 KiB): the executor must drop to the smaller f64 artifact
+    // — the host analogue of Table 2's smaller wide-dtype tiles.
+    let tight = HostCacheProfile::with_capacity(512 * 1024);
+    let f32_tight =
+        TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float32", &tight).unwrap();
+    let f64_tight =
+        TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float64", &tight).unwrap();
+    assert_eq!(f32_tight.tile_shape(), (128, 128, 128));
+    assert_eq!(f64_tight.tile_shape(), (16, 16, 16));
+    // Unsupported pair fails with a useful message, not a panic.
+    let err = TiledExecutor::for_algebra(&rt, Semiring::MinPlus, "float64").unwrap_err();
+    assert!(err.to_string().contains("distance_acc/float64"), "{err}");
+}
+
+#[test]
+fn executor_rejects_algebra_and_dtype_mismatches() {
+    let rt = Runtime::native_default().unwrap();
+    let f32_exec = TiledExecutor::with_artifact(&rt, "mmm_acc_f32_16").unwrap();
+    let a = vec![0.0f32; 4];
+    // Plus-times artifact driven with a min-plus instantiation.
+    let err = f32_exec.run_with(MinPlusF32, &a, &a, 2, 2, 2, Order::TileMajor, ExecMode::Reuse);
+    assert!(err.unwrap_err().to_string().contains("caller algebra"));
+    // f32 artifact driven with f64 elements.
+    let a64 = vec![0.0f64; 4];
+    let err = f32_exec.run(PlusTimesF64, &a64, &a64, 2, 2, 2).unwrap_err();
+    assert!(err.to_string().contains("float64"), "{err}");
+    // Enum-level mismatch through run_tensor.
+    let err = f32_exec
+        .run_tensor(&HostTensor::F64(a64.clone()), &HostTensor::F64(a64), 2, 2, 2)
+        .unwrap_err();
+    assert!(err.to_string().contains("float64"), "{err}");
+    // Shape errors carry the offending dimensions.
+    let err = f32_exec.matmul(&a, &a, 3, 3, 3).unwrap_err();
+    assert!(err.to_string().contains("3x3"), "{err}");
+}
+
+#[test]
+fn service_mixed_dtype_burst_end_to_end() {
+    // One burst through the full service path: f32, f64, wrapping-i32,
+    // wrapping-u32, and a min-plus distance product, all on the native
+    // fallback runtime, each checked against its oracle. Shapes span
+    // multiple 128³ tiles in at least one dimension.
+    let service =
+        GemmService::start(std::path::PathBuf::from("/nonexistent/artifacts"), 3).expect("service");
+    let mut rng = Rng::new(0xA11A);
+
+    // f32 (single k-slab → bit-identical to the one-shot oracle).
+    let (m0, n0, k0) = (150usize, 130usize, 96usize);
+    let a0 = rng.fill_normal_f32(m0 * k0);
+    let b0 = rng.fill_normal_f32(k0 * n0);
+    let want0 = oracle::gemm_f32(None, &a0, &b0, m0, n0, k0);
+
+    // f64 (single k-slab).
+    let (m1, n1, k1) = (140usize, 90usize, 100usize);
+    let a1: Vec<f64> = (0..m1 * k1).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+    let b1: Vec<f64> = (0..k1 * n1).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+    let want1 = oracle::gemm_f64(&a1, &b1, m1, n1, k1);
+
+    // Wrapping i32, k spanning three slabs (associative ⊕ → exact).
+    let (m2, n2, k2) = (100usize, 80usize, 300usize);
+    let a2: Vec<i32> = (0..m2 * k2).map(|_| rng.next_u32() as i32).collect();
+    let b2: Vec<i32> = (0..k2 * n2).map(|_| rng.next_u32() as i32).collect();
+    let want2: Vec<i32> =
+        oracle::gemm_i64(&a2, &b2, m2, n2, k2).iter().map(|&v| v as i32).collect();
+
+    // Wrapping u32, two slabs.
+    let (m3, n3, k3) = (90usize, 70usize, 200usize);
+    let a3: Vec<u32> = (0..m3 * k3).map(|_| rng.next_u32()).collect();
+    let b3: Vec<u32> = (0..k3 * n3).map(|_| rng.next_u32()).collect();
+    let want3: Vec<u32> =
+        oracle::gemm_i64(&a3, &b3, m3, n3, k3).iter().map(|&v| v as u32).collect();
+
+    // Min-plus distance product, two slabs (associative ⊕ → exact).
+    let (m4, n4, k4) = (160usize, 120usize, 256usize);
+    let a4 = rng.fill_normal_f32(m4 * k4);
+    let b4 = rng.fill_normal_f32(k4 * n4);
+    let want4 = oracle::distance_f32(&a4, &b4, m4, n4, k4);
+
+    let jobs = vec![
+        GemmJob::f32(m0, n0, k0, a0, b0),
+        GemmJob::new(
+            m1,
+            n1,
+            k1,
+            HostTensor::F64(a1),
+            HostTensor::F64(b1),
+            Semiring::PlusTimes,
+        ),
+        GemmJob::new(
+            m2,
+            n2,
+            k2,
+            HostTensor::I32(a2),
+            HostTensor::I32(b2),
+            Semiring::PlusTimes,
+        ),
+        GemmJob::new(
+            m3,
+            n3,
+            k3,
+            HostTensor::U32(a3),
+            HostTensor::U32(b3),
+            Semiring::PlusTimes,
+        ),
+        GemmJob::min_plus(m4, n4, k4, a4, b4),
+    ];
+    let (rx, base_id, count) = service.submit_batch(jobs);
+    assert_eq!(count, 5);
+    for _ in 0..count {
+        let resp = rx.recv().expect("response").expect("typed request succeeds");
+        assert!(resp.steps > 0 && resp.transfer_elements > 0);
+        match resp.id - base_id {
+            0 => assert_eq!(resp.c, HostTensor::F32(want0.clone()), "f32"),
+            1 => assert_eq!(resp.c, HostTensor::F64(want1.clone()), "f64"),
+            2 => assert_eq!(resp.c, HostTensor::I32(want2.clone()), "i32"),
+            3 => assert_eq!(resp.c, HostTensor::U32(want3.clone()), "u32"),
+            4 => assert_eq!(resp.c, HostTensor::F32(want4.clone()), "min-plus"),
+            other => panic!("unexpected id offset {other}"),
+        }
+    }
+    assert!(rx.recv().is_err(), "batch channel closes after all responses");
+    assert_eq!(service.stats.completed.load(std::sync::atomic::Ordering::Relaxed), 5);
+    assert_eq!(service.stats.failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    service.shutdown();
+}
+
+#[test]
+fn service_reports_context_for_unsupported_algebra() {
+    let service =
+        GemmService::start(std::path::PathBuf::from("/nonexistent/artifacts"), 1).expect("service");
+    // min-plus over f64 has no kernel instantiation: the failure must
+    // carry request id, shape, dtype, and semiring context.
+    let job = GemmJob::new(
+        8,
+        8,
+        8,
+        HostTensor::F64(vec![0.0; 64]),
+        HostTensor::F64(vec![0.0; 64]),
+        Semiring::MinPlus,
+    );
+    let err = service.blocking(job).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("8x8x8"), "{msg}");
+    assert!(msg.contains("float64"), "{msg}");
+    assert!(msg.contains("min_plus"), "{msg}");
+    assert_eq!(service.stats.failed.load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    // Mismatched operand dtypes are also a contextual error.
+    let job = GemmJob::new(
+        4,
+        4,
+        4,
+        HostTensor::F32(vec![0.0; 16]),
+        HostTensor::F64(vec![0.0; 16]),
+        Semiring::PlusTimes,
+    );
+    let err = service.blocking(job).unwrap_err();
+    assert!(err.to_string().contains("dtype mismatch"), "{err}");
+    service.shutdown();
+}
+
+#[test]
+fn min_plus_distance_queries_run_through_the_full_schedule() {
+    // The headline unlock: repeated min-plus squaring (APSP) through the
+    // communication-avoiding executor on a graph bigger than one tile,
+    // cross-checked against Floyd–Warshall.
+    let v = 160usize;
+    let mut rng = Rng::new(4242);
+    let mut adj = vec![f32::INFINITY; v * v];
+    for i in 0..v {
+        adj[i * v + i] = 0.0;
+        adj[i * v + (i + 1) % v] = 1.0 + rng.next_f32() * 9.0;
+    }
+    for _ in 0..2 * v {
+        let i = rng.gen_range_usize(0, v);
+        let j = rng.gen_range_usize(0, v);
+        if i != j {
+            adj[i * v + j] = adj[i * v + j].min(1.0 + rng.next_f32() * 20.0);
+        }
+    }
+    let mut want = adj.clone();
+    for kk in 0..v {
+        for i in 0..v {
+            for j in 0..v {
+                let via = want[i * v + kk] + want[kk * v + j];
+                if via < want[i * v + j] {
+                    want[i * v + j] = via;
+                }
+            }
+        }
+    }
+
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::for_algebra(&rt, Semiring::MinPlus, "float32").unwrap();
+    assert_eq!(exec.tile_shape(), (128, 128, 128), "multi-tile problem");
+    let mut d = adj;
+    for _ in 0..(v as f32).log2().ceil() as usize {
+        d = exec.run(MinPlusF32, &d, &d, v, v, v).expect("distance product").c;
+    }
+    for (got, wv) in d.iter().zip(&want) {
+        assert!(
+            (got - wv).abs() <= 1e-3 * (1.0 + wv.abs()),
+            "APSP mismatch: {got} vs {wv}"
+        );
+    }
+}

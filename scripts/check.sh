@@ -30,4 +30,39 @@ cargo test -q
 echo "== cargo bench --bench hotpath -- --quick =="
 cargo bench --bench hotpath -- --quick
 
+echo "== validate BENCH_hotpath.json =="
+# The quick bench must leave a parseable result file carrying the
+# kernel512 speedup-gate fields (the native compute path's regression
+# tripwire) — a bench that silently stopped writing them would otherwise
+# pass unnoticed.
+required_metrics="kernel512_speedup kernel512_naive_gflops kernel512_blocked_gflops native_threads"
+if [ ! -f BENCH_hotpath.json ]; then
+  echo "BENCH_hotpath.json missing after bench run" >&2
+  exit 1
+fi
+if command -v python3 >/dev/null 2>&1; then
+  REQUIRED_METRICS="$required_metrics" python3 - <<'PY'
+import json, os, sys
+with open("BENCH_hotpath.json") as f:
+    data = json.load(f)
+metrics = data.get("metrics", {})
+missing = [m for m in os.environ["REQUIRED_METRICS"].split() if m not in metrics]
+if missing:
+    sys.exit(f"BENCH_hotpath.json missing metrics: {missing}")
+if not data.get("entries"):
+    sys.exit("BENCH_hotpath.json has no bench entries")
+print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx over %d entries"
+      % (metrics["kernel512_speedup"], len(data["entries"])))
+PY
+else
+  # No python3: fall back to a field-presence grep.
+  for metric in $required_metrics; do
+    if ! grep -q "\"$metric\"" BENCH_hotpath.json; then
+      echo "BENCH_hotpath.json missing metric $metric" >&2
+      exit 1
+    fi
+  done
+  echo "BENCH_hotpath.json OK (grep check; python3 unavailable)"
+fi
+
 echo "== check.sh: all gates passed =="
