@@ -20,8 +20,10 @@
 //! `kernel512_*` / `distance256_*` metrics in `BENCH_hotpath.json` are
 //! the regression tripwire for the native compute path.
 
+use fcamm::coordinator::{ClusterService, GemmJob};
 use fcamm::datatype::DataType;
 use fcamm::device::catalog::vcu1525;
+use fcamm::sim::grid2d::sharded_traffic;
 use fcamm::model::selection::{derive_tiling, select_parameters, SelectionOptions};
 use fcamm::model::tiling::TilingConfig;
 use fcamm::model::{compute, io};
@@ -339,6 +341,70 @@ fn main() {
             oracle::distance_f32(&amp, &bmp, sz, sz, sz),
             "min-plus executor must be bit-identical to the distance oracle"
         );
+    }
+
+    // --- Sharded multi-device layer: 1-device vs 4-device fleet --------
+    // One 512³ f32 GEMM fanned out over N independent native runtimes by
+    // the model-driven shard planner (schedule::shard): the planner
+    // minimizes the busiest device's host traffic and keeps k unsplit on
+    // ties, so the fleet result stays bit-identical to the single-device
+    // run. model == plan == sim == measured is asserted in-bench.
+    {
+        let n_dev = 4usize;
+        let c1 = ClusterService::start(Runtime::default_dir(), 1).expect("1-device cluster");
+        let c4 = ClusterService::start(Runtime::default_dir(), n_dev)
+            .expect("multi-device cluster");
+        let sz = 512usize;
+        let flops = 2.0 * (sz * sz * sz) as f64;
+        let ca = rng.fill_normal_f32(sz * sz);
+        let cb = rng.fill_normal_f32(sz * sz);
+        let job = GemmJob::f32(sz, sz, sz, ca, cb);
+        let slow = Bench::slow().maybe_quick();
+        let one = slow.run("cluster gemm 512^3 f32 (1 device)", || {
+            c1.run(&job).unwrap().steps_executed
+        });
+        let four = slow.run(&format!("cluster gemm 512^3 f32 ({n_dev} devices)"), || {
+            c4.run(&job).unwrap().steps_executed
+        });
+        let speedup = one.median_ns / four.median_ns;
+        let run1 = c1.run(&job).unwrap();
+        let run4 = c4.run(&job).unwrap();
+        println!(
+            "cluster 512^3 f32: 1 dev {:.2} GF/s -> {} grid {:.2} GF/s ({:.2}x); \
+             max/device transfer {} -> {} elements",
+            one.gops(flops),
+            run4.plan.grid,
+            four.gops(flops),
+            speedup,
+            run1.plan.max_device_transfer(ExecMode::Reuse),
+            run4.plan.max_device_transfer(ExecMode::Reuse),
+        );
+        assert_eq!(
+            run4.transfer_elements,
+            run4.plan.predicted_transfer_elements(ExecMode::Reuse),
+            "cluster measured transfer must equal the shard plan's prediction"
+        );
+        assert_eq!(
+            sharded_traffic(&run4.plan, ExecMode::Reuse).per_device,
+            run4.per_device_transfer,
+            "sim replay must equal the cluster's per-device measurements"
+        );
+        if run4.plan.grid.dk == 1 {
+            assert_eq!(run4.c, run1.c, "dk=1 fleet must be bit-identical to 1 device");
+        }
+        metrics.push(("cluster_f32_512_gflops".to_string(), four.gops(flops)));
+        metrics.push(("cluster_f32_512_gflops_1dev".to_string(), one.gops(flops)));
+        metrics.push(("cluster_f32_512_speedup_vs_1dev".to_string(), speedup));
+        metrics.push(("cluster_shards".to_string(), run4.plan.n_shards() as f64));
+        metrics.push(("cluster_devices".to_string(), n_dev as f64));
+        metrics.push((
+            "cluster_max_device_transfer".to_string(),
+            run4.plan.max_device_transfer(ExecMode::Reuse) as f64,
+        ));
+        all.push(one);
+        all.push(four);
+        c1.shutdown();
+        c4.shutdown();
     }
 
     let out = std::path::Path::new("BENCH_hotpath.json");

@@ -1,0 +1,704 @@
+//! Cluster execution: one GEMM fanned out over a grid of devices.
+//!
+//! [`ClusterService`] (deployment alias [`ShardedGemm`]) owns N device
+//! workers, each wrapping an independent [`Runtime`] instance behind the
+//! [`ShardBackend`] trait. One typed [`GemmJob`] is decomposed by the
+//! model-driven shard planner ([`crate::schedule::shard`]) into a
+//! `dr × dc × dk` device grid — the paper's PE-grid partitioning lifted
+//! to fleet scale — and each shard runs through that device's
+//! communication-avoiding [`TiledExecutor`]. Partial results of a k-split
+//! are ⊕-reduced on the host in **fixed ascending-k order**
+//! ([`fold_partials`]), so non-associative semirings (f32/f64 plus-times)
+//! produce the same bits on every run; C blocks are then pasted into the
+//! output exactly once.
+//!
+//! Failure surface: a shard that fails (or panics — the worker catches
+//! unwinds, so one bad shard never takes a device worker down) is
+//! reported with full context — shard grid coordinates, device id, dtype,
+//! semiring, and how many sibling shards still completed. The remaining
+//! shards run to completion, the pool stays healthy for the next job, and
+//! `shutdown` joins every worker thread. The conformance suite
+//! (`rust/tests/cluster_conformance.rs`) drives these paths with a mock
+//! backend.
+//!
+//! Like the GEMM service, workers are std threads with private queues
+//! (PJRT client handles are not `Send`, so production backends are
+//! constructed *inside* their worker thread; pre-built backends — native
+//! runtimes, test mocks — can be injected with
+//! [`ClusterService::start_with_backends`]).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::datatype::Semiring;
+use crate::runtime::kernel::{
+    MinPlusF32, PlusTimesF32, PlusTimesF64, PlusTimesI32Wrap, PlusTimesU32Wrap, SemiringOps,
+};
+use crate::runtime::{HostTensor, Runtime};
+use crate::schedule::shard::{DeviceTile, Shard, ShardGrid, ShardPlan};
+use crate::schedule::{ExecMode, HostCacheProfile, TiledExecutor};
+
+use super::service::GemmJob;
+
+/// One shard's execution result: the partial C block plus the same
+/// measurements [`crate::schedule::ExecutorRun`] reports.
+#[derive(Debug)]
+pub struct ShardOutput {
+    /// `rows × cols` partial (full value when the grid leaves k unsplit).
+    pub c: HostTensor,
+    /// Elements this device exchanged with the host (measured).
+    pub transfer_elements: u64,
+    /// Artifact invocations performed.
+    pub steps: usize,
+}
+
+/// The per-device execution surface the cluster drives. The production
+/// implementation is [`RuntimeBackend`] (a [`Runtime`] + per-algebra
+/// [`TiledExecutor`] cache); the fault-injection tests substitute mocks
+/// that fail or panic on chosen shard coordinates.
+pub trait ShardBackend: Send + 'static {
+    /// Device slot this backend serves (used in error context).
+    fn device_id(&self) -> usize;
+
+    /// Tile shape this device's executor will drive for an algebra —
+    /// what the shard planner's cost model needs per device.
+    fn tile_shape(
+        &mut self,
+        semiring: Semiring,
+        dtype: &'static str,
+    ) -> Result<(usize, usize, usize)>;
+
+    /// Execute one shard: operand blocks are already carved out of the
+    /// full tensors (`a_block` is `rows × kdepth`, `b_block` is
+    /// `kdepth × cols`).
+    fn run_shard(
+        &mut self,
+        shard: &Shard,
+        semiring: Semiring,
+        a_block: &HostTensor,
+        b_block: &HostTensor,
+        mode: ExecMode,
+    ) -> Result<ShardOutput>;
+}
+
+/// Production backend: one independent [`Runtime`] with a lazy
+/// per-`(semiring, dtype)` executor cache, artifact choice governed by
+/// this device's [`HostCacheProfile`] (heterogeneous fleets get
+/// per-device tile shapes, which the planner's cost model sees).
+pub struct RuntimeBackend {
+    device: usize,
+    rt: Runtime,
+    profile: HostCacheProfile,
+    cache: HashMap<(Semiring, &'static str), TiledExecutor>,
+}
+
+impl RuntimeBackend {
+    pub fn new(device: usize, rt: Runtime, profile: HostCacheProfile) -> RuntimeBackend {
+        RuntimeBackend { device, rt, profile, cache: HashMap::new() }
+    }
+
+    fn executor(&mut self, semiring: Semiring, dtype: &'static str) -> Result<&TiledExecutor> {
+        use std::collections::hash_map::Entry;
+        match self.cache.entry((semiring, dtype)) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(v) => {
+                let exec =
+                    TiledExecutor::for_algebra_with(&self.rt, semiring, dtype, &self.profile)
+                        .with_context(|| format!("building {semiring}/{dtype} executor"))?;
+                Ok(v.insert(exec))
+            }
+        }
+    }
+}
+
+impl ShardBackend for RuntimeBackend {
+    fn device_id(&self) -> usize {
+        self.device
+    }
+
+    fn tile_shape(
+        &mut self,
+        semiring: Semiring,
+        dtype: &'static str,
+    ) -> Result<(usize, usize, usize)> {
+        Ok(self.executor(semiring, dtype)?.tile_shape())
+    }
+
+    fn run_shard(
+        &mut self,
+        shard: &Shard,
+        semiring: Semiring,
+        a_block: &HostTensor,
+        b_block: &HostTensor,
+        mode: ExecMode,
+    ) -> Result<ShardOutput> {
+        let dtype = a_block.dtype_name();
+        let exec = self.executor(semiring, dtype)?;
+        let run = exec.run_tensor_with(
+            a_block,
+            b_block,
+            shard.rows,
+            shard.cols,
+            shard.kdepth,
+            shard.plan.order,
+            mode,
+        )?;
+        Ok(ShardOutput {
+            c: run.c,
+            transfer_elements: run.transfer_elements,
+            steps: run.steps_executed,
+        })
+    }
+}
+
+/// ⊕-fold one partial into the accumulator block, elementwise, using the
+/// same [`SemiringOps::add`] orientation the executor's host-resident
+/// accumulator uses — `acc[i] = acc[i] ⊕ part[i]`. The cluster applies
+/// this in ascending-k shard order only; that fixed order is what keeps
+/// non-associative f32/f64 reductions deterministic (pinned by the
+/// conformance suite).
+pub fn fold_partials(semiring: Semiring, acc: &mut HostTensor, part: &HostTensor) -> Result<()> {
+    if acc.len() != part.len() {
+        bail!("partial has {} elements, accumulator {}", part.len(), acc.len());
+    }
+    fn fold<S: SemiringOps>(sr: S, acc: &mut [S::Elem], part: &[S::Elem]) {
+        for (a, p) in acc.iter_mut().zip(part) {
+            *a = sr.add(*a, *p);
+        }
+    }
+    use HostTensor as H;
+    match (semiring, acc, part) {
+        (Semiring::PlusTimes, H::F32(a), H::F32(p)) => fold(PlusTimesF32, a, p),
+        (Semiring::PlusTimes, H::F64(a), H::F64(p)) => fold(PlusTimesF64, a, p),
+        (Semiring::PlusTimes, H::I32(a), H::I32(p)) => fold(PlusTimesI32Wrap, a, p),
+        (Semiring::PlusTimes, H::U32(a), H::U32(p)) => fold(PlusTimesU32Wrap, a, p),
+        (Semiring::MinPlus, H::F32(a), H::F32(p)) => fold(MinPlusF32, a, p),
+        (semiring, acc, part) => bail!(
+            "no ⊕ instantiation for {semiring} over accumulator {} / partial {}",
+            acc.dtype_name(),
+            part.dtype_name()
+        ),
+    }
+    Ok(())
+}
+
+/// A sharded execution's result + measurements.
+#[derive(Debug)]
+pub struct ClusterRun {
+    /// Row-major m×n result in the job's dtype.
+    pub c: HostTensor,
+    /// The decomposition that ran.
+    pub plan: ShardPlan,
+    /// Artifact invocations across all shards.
+    pub steps_executed: usize,
+    /// Total elements exchanged with the host across the fleet
+    /// (measured; pinned equal to
+    /// `plan.predicted_transfer_elements(mode)` by tests).
+    pub transfer_elements: u64,
+    /// Measured per-device transfer (idle device slots report 0).
+    pub per_device_transfer: Vec<u64>,
+    pub wall: Duration,
+}
+
+impl ClusterRun {
+    /// Achieved multiply-add (⊗/⊕ pair) rate over the wallclock.
+    pub fn madds_per_sec(&self) -> f64 {
+        (self.plan.m as f64 * self.plan.n as f64 * self.plan.k as f64)
+            / self.wall.as_secs_f64()
+    }
+}
+
+struct ShardTask {
+    index: usize,
+    shard: Shard,
+    semiring: Semiring,
+    mode: ExecMode,
+    /// Full-problem strides for operand extraction.
+    a_stride: usize,
+    b_stride: usize,
+    a: Arc<HostTensor>,
+    b: Arc<HostTensor>,
+    reply: mpsc::Sender<(usize, Result<ShardOutput>)>,
+}
+
+enum DeviceMsg {
+    TileShape {
+        semiring: Semiring,
+        dtype: &'static str,
+        reply: mpsc::Sender<Result<(usize, usize, usize)>>,
+    },
+    Shard(Box<ShardTask>),
+    Shutdown,
+}
+
+struct DeviceHandle {
+    /// Private queue into this device worker; the mutex only guards
+    /// concurrent submitters.
+    tx: Mutex<mpsc::Sender<DeviceMsg>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One device worker: serve tile-shape queries and shard executions
+/// until shutdown. Shard panics are caught and converted into contextual
+/// errors so the worker (and the rest of the fleet) keeps serving.
+fn worker_loop(mut backend: Box<dyn ShardBackend>, rx: mpsc::Receiver<DeviceMsg>) {
+    let device = backend.device_id();
+    loop {
+        match rx.recv() {
+            Ok(DeviceMsg::TileShape { semiring, dtype, reply }) => {
+                let result = backend
+                    .tile_shape(semiring, dtype)
+                    .with_context(|| format!("device {device}: tile shape for {semiring}/{dtype}"));
+                let _ = reply.send(result);
+            }
+            Ok(DeviceMsg::Shard(task)) => {
+                let ShardTask { index, shard, semiring, mode, a_stride, b_stride, a, b, reply } =
+                    *task;
+                let result = (|| -> Result<ShardOutput> {
+                    let a_block = a.extract_block(
+                        a_stride, shard.row0, shard.rows, shard.k0, shard.kdepth,
+                    )?;
+                    let b_block = b.extract_block(
+                        b_stride, shard.k0, shard.kdepth, shard.col0, shard.cols,
+                    )?;
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        backend.run_shard(&shard, semiring, &a_block, &b_block, mode)
+                    })) {
+                        Ok(r) => r,
+                        Err(payload) => Err(anyhow!(
+                            "shard execution panicked: {}",
+                            panic_message(payload.as_ref())
+                        )),
+                    }
+                })()
+                .with_context(|| {
+                    format!(
+                        "shard (di {}, dj {}, dk {}) [{}x{}x{}] on device {device}",
+                        shard.di, shard.dj, shard.dks, shard.rows, shard.cols, shard.kdepth
+                    )
+                });
+                let _ = reply.send((index, result));
+            }
+            Ok(DeviceMsg::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+/// A fleet of device workers serving sharded GEMMs.
+pub struct ClusterService {
+    devices: Vec<DeviceHandle>,
+}
+
+/// The deployment this module exists for: one GEMM, sharded. An alias so
+/// call sites can name the data-path role (`ShardedGemm::start(..)`)
+/// rather than the pool mechanics.
+pub type ShardedGemm = ClusterService;
+
+impl ClusterService {
+    /// Start `n_devices` workers over `artifacts_dir` (native fallback
+    /// when the directory holds no manifest), all with the default host
+    /// cache profile.
+    pub fn start(artifacts_dir: PathBuf, n_devices: usize) -> Result<ClusterService> {
+        Self::start_with_profiles(artifacts_dir, vec![HostCacheProfile::default(); n_devices])
+    }
+
+    /// Start one worker per profile; device `i` selects artifacts under
+    /// `profiles[i]` (a heterogeneous fleet gets per-device tile shapes,
+    /// which the shard planner's cost model accounts for). Runtimes are
+    /// constructed inside their worker threads (PJRT handles are not
+    /// `Send`); startup blocks until every device opened its runtime.
+    pub fn start_with_profiles(
+        artifacts_dir: PathBuf,
+        profiles: Vec<HostCacheProfile>,
+    ) -> Result<ClusterService> {
+        assert!(!profiles.is_empty(), "cluster needs at least one device");
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut devices = Vec::new();
+        for (device, profile) in profiles.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<DeviceMsg>();
+            let ready = ready_tx.clone();
+            let dir = artifacts_dir.clone();
+            let join = std::thread::spawn(move || {
+                let backend = match Runtime::open_or_native(&dir)
+                    .with_context(|| format!("device {device}: opening runtime"))
+                {
+                    Ok(rt) => {
+                        let _ = ready.send(Ok(()));
+                        RuntimeBackend::new(device, rt, profile)
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(Box::new(backend), rx);
+            });
+            devices.push(DeviceHandle { tx: Mutex::new(tx), join: Some(join) });
+        }
+        drop(ready_tx);
+        for _ in 0..devices.len() {
+            ready_rx
+                .recv()
+                .context("device worker died during startup")?
+                .context("device worker failed to initialize")?;
+        }
+        Ok(ClusterService { devices })
+    }
+
+    /// Start over pre-built backends (native runtimes, test mocks).
+    /// Backend `i` must report `device_id() == i` — shard-to-device
+    /// routing is positional.
+    pub fn start_with_backends(backends: Vec<Box<dyn ShardBackend>>) -> Result<ClusterService> {
+        if backends.is_empty() {
+            bail!("cluster needs at least one device backend");
+        }
+        let mut devices = Vec::new();
+        for (i, backend) in backends.into_iter().enumerate() {
+            if backend.device_id() != i {
+                bail!("backend at slot {i} reports device_id {}", backend.device_id());
+            }
+            let (tx, rx) = mpsc::channel::<DeviceMsg>();
+            let join = std::thread::spawn(move || worker_loop(backend, rx));
+            devices.push(DeviceHandle { tx: Mutex::new(tx), join: Some(join) });
+        }
+        Ok(ClusterService { devices })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn send(&self, device: usize, msg: DeviceMsg) -> Result<()> {
+        self.devices[device]
+            .tx
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .send(msg)
+            .map_err(|_| anyhow!("device {device} worker queue closed"))
+    }
+
+    /// Per-device tile shapes for an algebra — the planner's cost-model
+    /// input, queried from each device's actual executor. Queries fan
+    /// out before any reply is awaited, so a cold fleet builds its N
+    /// executors concurrently rather than one device at a time.
+    pub fn device_tiles(
+        &self,
+        semiring: Semiring,
+        dtype: &'static str,
+    ) -> Result<Vec<DeviceTile>> {
+        let mut pending = Vec::with_capacity(self.devices.len());
+        for device in 0..self.devices.len() {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.send(device, DeviceMsg::TileShape { semiring, dtype, reply: reply_tx })?;
+            pending.push(reply_rx);
+        }
+        let mut tiles = Vec::with_capacity(pending.len());
+        for (device, reply_rx) in pending.into_iter().enumerate() {
+            let shape = reply_rx
+                .recv()
+                .map_err(|_| anyhow!("device {device} worker died during tile query"))??;
+            tiles.push(DeviceTile::from(shape));
+        }
+        Ok(tiles)
+    }
+
+    /// Model-driven decomposition of an `m×n×k` problem for this fleet
+    /// and algebra (no execution).
+    pub fn plan(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        semiring: Semiring,
+        dtype: &'static str,
+    ) -> Result<ShardPlan> {
+        Ok(ShardPlan::plan(m, n, k, &self.device_tiles(semiring, dtype)?))
+    }
+
+    /// Execute a job under the planner's grid, communication-avoiding
+    /// mode. Operands are read from the job by reference (cloned once
+    /// into shared buffers for the fan-out).
+    pub fn run(&self, job: &GemmJob) -> Result<ClusterRun> {
+        self.run_with(job, ExecMode::Reuse)
+    }
+
+    /// [`Self::run`] with an explicit execution mode.
+    pub fn run_with(&self, job: &GemmJob, mode: ExecMode) -> Result<ClusterRun> {
+        validate_job(job).with_context(|| job_context(job, self.n_devices()))?;
+        let plan = self
+            .plan(job.m, job.n, job.k, job.semiring, job.a.dtype_name())
+            .with_context(|| job_context(job, self.n_devices()))?;
+        self.execute_plan(job, plan, mode)
+    }
+
+    /// Execute under an explicit device grid (the conformance suite's
+    /// entry: pin every grid shape, not just the planner's pick). A grid
+    /// that is empty, larger than the fleet, or finer than the problem
+    /// is a contextual error, not a panic.
+    pub fn run_on_grid(
+        &self,
+        job: &GemmJob,
+        grid: ShardGrid,
+        mode: ExecMode,
+    ) -> Result<ClusterRun> {
+        (|| -> Result<()> {
+            validate_job(job)?;
+            if grid.dr == 0 || grid.dc == 0 || grid.dk == 0 {
+                bail!("empty device grid {grid}");
+            }
+            if grid.dr > job.m || grid.dc > job.n || grid.dk > job.k {
+                bail!(
+                    "grid {grid} splits finer than the {}x{}x{} problem",
+                    job.m,
+                    job.n,
+                    job.k
+                );
+            }
+            if grid.size() > self.n_devices() {
+                bail!("grid {grid} needs {} devices, fleet has {}", grid.size(), self.n_devices());
+            }
+            Ok(())
+        })()
+        .with_context(|| job_context(job, self.n_devices()))?;
+        let tiles = self
+            .device_tiles(job.semiring, job.a.dtype_name())
+            .with_context(|| job_context(job, self.n_devices()))?;
+        let plan = ShardPlan::with_grid(job.m, job.n, job.k, grid, &tiles);
+        self.execute_plan(job, plan, mode)
+    }
+
+    /// Fan a validated plan out over the fleet. Callers have already
+    /// validated the job (`validate_job`) and sized the grid.
+    fn execute_plan(&self, job: &GemmJob, plan: ShardPlan, mode: ExecMode) -> Result<ClusterRun> {
+        let t0 = Instant::now();
+        let (m, n, k) = (job.m, job.n, job.k);
+
+        // Fan out: one task per shard, one shard per device worker.
+        let a = Arc::new(job.a.clone());
+        let b = Arc::new(job.b.clone());
+        let (reply_tx, reply_rx) = mpsc::channel::<(usize, Result<ShardOutput>)>();
+        for (index, shard) in plan.shards.iter().enumerate() {
+            self.send(
+                shard.device,
+                DeviceMsg::Shard(Box::new(ShardTask {
+                    index,
+                    shard: shard.clone(),
+                    semiring: job.semiring,
+                    mode,
+                    a_stride: k,
+                    b_stride: n,
+                    a: a.clone(),
+                    b: b.clone(),
+                    reply: reply_tx.clone(),
+                })),
+            )
+            .with_context(|| job_context(job, self.n_devices()))?;
+        }
+        drop(reply_tx);
+
+        // Collect every shard's reply (failures included — sibling shards
+        // always run to completion; a dead worker closes the channel).
+        let mut outputs: Vec<Option<Result<ShardOutput>>> = Vec::new();
+        outputs.resize_with(plan.n_shards(), || None);
+        while let Ok((index, result)) = reply_rx.recv() {
+            outputs[index] = Some(result);
+        }
+        for (index, slot) in outputs.iter_mut().enumerate() {
+            if slot.is_none() {
+                let s = &plan.shards[index];
+                *slot = Some(Err(anyhow!(
+                    "device {} worker died before completing shard (di {}, dj {}, dk {})",
+                    s.device,
+                    s.di,
+                    s.dj,
+                    s.dks
+                )));
+            }
+        }
+        let completed = outputs
+            .iter()
+            .filter(|o| matches!(o, Some(Ok(_))))
+            .count();
+        if completed < plan.n_shards() {
+            // Surface the first failure in shard order, with fleet context.
+            let err = outputs
+                .iter_mut()
+                .find_map(|o| match o.take() {
+                    Some(Err(e)) => Some(e),
+                    _ => None,
+                })
+                .expect("at least one shard failed");
+            return Err(err.context(format!(
+                "{} ({completed}/{} sibling shards completed)",
+                job_context(job, self.n_devices()),
+                plan.n_shards() - 1
+            )));
+        }
+        let outputs: Vec<ShardOutput> = outputs
+            .into_iter()
+            .map(|o| o.expect("collected").expect("all completed"))
+            .collect();
+
+        // Reduce + assemble: shards are in (di, dj, dks) lexicographic
+        // order, so each (di, dj) block's k-partials are contiguous and
+        // ascending — fold them in that order (deterministic bracketing),
+        // then paste the block into C exactly once.
+        let mut c = job.a.zeros_like(m * n);
+        let mut transfer = 0u64;
+        let mut steps = 0usize;
+        let mut per_device = vec![0u64; plan.n_devices];
+        for (s, out) in plan.shards.iter().zip(&outputs) {
+            transfer += out.transfer_elements;
+            steps += out.steps;
+            per_device[s.device] += out.transfer_elements;
+        }
+        let mut outputs = outputs.into_iter();
+        let mut i = 0;
+        while i < plan.n_shards() {
+            let s0 = &plan.shards[i];
+            let mut block = outputs.next().expect("one output per shard").c;
+            let mut j = i + 1;
+            while j < plan.n_shards() && plan.shards[j].dks != 0 {
+                let part = outputs.next().expect("one output per shard").c;
+                fold_partials(job.semiring, &mut block, &part).with_context(|| {
+                    format!(
+                        "reducing shard (di {}, dj {}, dk {}): {}",
+                        plan.shards[j].di,
+                        plan.shards[j].dj,
+                        plan.shards[j].dks,
+                        job_context(job, self.n_devices())
+                    )
+                })?;
+                j += 1;
+            }
+            c.paste_block(n, s0.row0, s0.rows, s0.col0, s0.cols, &block)
+                .with_context(|| job_context(job, self.n_devices()))?;
+            i = j;
+        }
+
+        Ok(ClusterRun {
+            c,
+            plan,
+            steps_executed: steps,
+            transfer_elements: transfer,
+            per_device_transfer: per_device,
+            wall: t0.elapsed(),
+        })
+    }
+
+    fn send_shutdown(&self) {
+        for d in &self.devices {
+            let _ = d.tx.lock().unwrap_or_else(|e| e.into_inner()).send(DeviceMsg::Shutdown);
+        }
+    }
+
+    /// Stop accepting work and join every device worker thread.
+    pub fn shutdown(mut self) {
+        self.send_shutdown();
+        for d in &mut self.devices {
+            if let Some(join) = d.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+impl Drop for ClusterService {
+    fn drop(&mut self) {
+        self.send_shutdown();
+    }
+}
+
+/// Shape/dtype validation shared by every cluster entry point — the
+/// same rejections the executor path makes, surfaced as contextual
+/// errors *before* the shard planner (whose asserts would otherwise
+/// panic on degenerate input).
+fn validate_job(job: &GemmJob) -> Result<()> {
+    let (m, n, k) = (job.m, job.n, job.k);
+    if m == 0 || n == 0 || k == 0 {
+        bail!("empty problem {m}x{n}x{k}");
+    }
+    if job.a.dtype_name() != job.b.dtype_name() {
+        bail!(
+            "operand dtype mismatch: A is {}, B is {}",
+            job.a.dtype_name(),
+            job.b.dtype_name()
+        );
+    }
+    if job.a.len() != m * k {
+        bail!("A buffer has {} elements, problem needs {m}x{k}", job.a.len());
+    }
+    if job.b.len() != k * n {
+        bail!("B buffer has {} elements, problem needs {k}x{n}", job.b.len());
+    }
+    Ok(())
+}
+
+fn job_context(job: &GemmJob, n_devices: usize) -> String {
+    format!(
+        "cluster gemm {}x{}x{} {} {} over {n_devices} devices",
+        job.m,
+        job.n,
+        job.k,
+        job.a.dtype_name(),
+        job.semiring
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_partials_follows_semiring_add() {
+        let mut acc = HostTensor::F32(vec![1.0, 5.0]);
+        fold_partials(Semiring::PlusTimes, &mut acc, &HostTensor::F32(vec![2.0, -1.0])).unwrap();
+        assert_eq!(acc, HostTensor::F32(vec![3.0, 4.0]));
+        let mut acc = HostTensor::F32(vec![1.0, 5.0]);
+        fold_partials(Semiring::MinPlus, &mut acc, &HostTensor::F32(vec![2.0, -1.0])).unwrap();
+        assert_eq!(acc, HostTensor::F32(vec![1.0, -1.0]));
+        // Wrapping integers fold mod 2³².
+        let mut acc = HostTensor::I32(vec![i32::MAX]);
+        fold_partials(Semiring::PlusTimes, &mut acc, &HostTensor::I32(vec![1])).unwrap();
+        assert_eq!(acc, HostTensor::I32(vec![i32::MIN]));
+    }
+
+    #[test]
+    fn fold_partials_rejects_mismatches() {
+        let mut acc = HostTensor::F32(vec![0.0; 2]);
+        let err = fold_partials(Semiring::PlusTimes, &mut acc, &HostTensor::F32(vec![0.0; 3]))
+            .unwrap_err();
+        assert!(err.to_string().contains("3 elements"), "{err}");
+        let err = fold_partials(Semiring::MinPlus, &mut acc, &HostTensor::F64(vec![0.0; 2]))
+            .unwrap_err();
+        assert!(err.to_string().contains("min_plus"), "{err}");
+        // min-plus over f64 has no kernel instantiation either.
+        let mut acc64 = HostTensor::F64(vec![0.0; 1]);
+        assert!(
+            fold_partials(Semiring::MinPlus, &mut acc64, &HostTensor::F64(vec![0.0; 1])).is_err()
+        );
+    }
+
+    #[test]
+    fn backends_must_be_positional() {
+        let rt = Runtime::native_default().unwrap();
+        let backend = RuntimeBackend::new(3, rt, HostCacheProfile::default());
+        let backends: Vec<Box<dyn ShardBackend>> = vec![Box::new(backend)];
+        let err = ClusterService::start_with_backends(backends).unwrap_err();
+        assert!(err.to_string().contains("device_id 3"), "{err}");
+    }
+}

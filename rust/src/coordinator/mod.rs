@@ -13,13 +13,21 @@
 //! * [`service`] — a multi-threaded GEMM service over the PJRT runtime:
 //!   the "MMM as a component of larger applications" deployment mode the
 //!   paper's introduction motivates (bandwidth-conserving matmul offload).
+//! * [`cluster`] — the scale-out axis: one GEMM sharded over a grid of
+//!   independent runtime instances by the model-driven planner in
+//!   [`crate::schedule::shard`], with a deterministic ascending-k
+//!   reduction and per-shard failure context — the routing-feasibility
+//!   story of [`routing`] replayed at the fleet level (each device link
+//!   carries its own share; the host sees the aggregate).
 
 pub mod build;
+pub mod cluster;
 pub mod instance;
 pub mod report;
 pub mod routing;
 pub mod service;
 
 pub use build::{build_kernel, BuildOutcome, BuildReport};
+pub use cluster::{ClusterRun, ClusterService, RuntimeBackend, ShardBackend, ShardedGemm};
 pub use instance::KernelInstance;
 pub use service::{GemmJob, GemmRequest, GemmResponse, GemmService};

@@ -90,6 +90,110 @@ impl HostTensor {
         u32::as_slice(self)
     }
 
+    /// Copy the `rows × cols` block at `(row0, col0)` out of this
+    /// row-major matrix with `stride` columns — how the cluster carves a
+    /// shard's A/B operand blocks out of the full tensors.
+    pub fn extract_block(
+        &self,
+        stride: usize,
+        row0: usize,
+        rows: usize,
+        col0: usize,
+        cols: usize,
+    ) -> Result<HostTensor> {
+        if col0 + cols > stride || (row0 + rows) * stride > self.len() {
+            bail!(
+                "block {rows}x{cols} at ({row0}, {col0}) exceeds a {}-element matrix \
+                 of stride {stride}",
+                self.len()
+            );
+        }
+        fn block<E: Copy>(
+            v: &[E],
+            stride: usize,
+            row0: usize,
+            rows: usize,
+            col0: usize,
+            cols: usize,
+        ) -> Vec<E> {
+            let mut out = Vec::with_capacity(rows * cols);
+            for r in 0..rows {
+                let src = (row0 + r) * stride + col0;
+                out.extend_from_slice(&v[src..src + cols]);
+            }
+            out
+        }
+        Ok(match self {
+            HostTensor::F32(v) => HostTensor::F32(block(v, stride, row0, rows, col0, cols)),
+            HostTensor::F64(v) => HostTensor::F64(block(v, stride, row0, rows, col0, cols)),
+            HostTensor::I32(v) => HostTensor::I32(block(v, stride, row0, rows, col0, cols)),
+            HostTensor::U32(v) => HostTensor::U32(block(v, stride, row0, rows, col0, cols)),
+        })
+    }
+
+    /// Paste a `rows × cols` `block` into this row-major matrix (stride
+    /// `stride` columns) at `(row0, col0)` — the cluster's C assembly.
+    /// Geometry arguments follow [`Self::extract_block`]'s order
+    /// (`row0, rows, col0, cols`) so the two can't be silently mixed up.
+    pub fn paste_block(
+        &mut self,
+        stride: usize,
+        row0: usize,
+        rows: usize,
+        col0: usize,
+        cols: usize,
+        block: &HostTensor,
+    ) -> Result<()> {
+        if block.len() != rows * cols {
+            bail!("block buffer has {} elements, geometry is {rows}x{cols}", block.len());
+        }
+        if col0 + cols > stride || (row0 + rows) * stride > self.len() {
+            bail!(
+                "block {rows}x{cols} at ({row0}, {col0}) exceeds a {}-element matrix \
+                 of stride {stride}",
+                self.len()
+            );
+        }
+        fn paste<E: Copy>(
+            dst: &mut [E],
+            src: &[E],
+            stride: usize,
+            row0: usize,
+            col0: usize,
+            rows: usize,
+            cols: usize,
+        ) {
+            for r in 0..rows {
+                let d = (row0 + r) * stride + col0;
+                dst[d..d + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+            }
+        }
+        match (self, block) {
+            (HostTensor::F32(d), HostTensor::F32(s)) => paste(d, s, stride, row0, col0, rows, cols),
+            (HostTensor::F64(d), HostTensor::F64(s)) => paste(d, s, stride, row0, col0, rows, cols),
+            (HostTensor::I32(d), HostTensor::I32(s)) => paste(d, s, stride, row0, col0, rows, cols),
+            (HostTensor::U32(d), HostTensor::U32(s)) => paste(d, s, stride, row0, col0, rows, cols),
+            (dst, src) => bail!(
+                "paste dtype mismatch: destination {}, block {}",
+                dst.dtype_name(),
+                src.dtype_name()
+            ),
+        }
+        Ok(())
+    }
+
+    /// A zero-filled tensor of the same dtype as `self` with `len`
+    /// elements (the value is irrelevant when every cell is overwritten,
+    /// as in the cluster's exactly-once C assembly).
+    pub fn zeros_like(&self, len: usize) -> HostTensor {
+        match self {
+            HostTensor::F32(_) => HostTensor::F32(vec![0.0; len]),
+            HostTensor::F64(_) => HostTensor::F64(vec![0.0; len]),
+            HostTensor::I32(_) => HostTensor::I32(vec![0; len]),
+            HostTensor::U32(_) => HostTensor::U32(vec![0; len]),
+        }
+    }
+
     #[cfg(feature = "pjrt")]
     fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
@@ -433,6 +537,49 @@ impl LoadedKernel {
                 HostTensor::from_literal(&out, &self.spec.output.dtype)
             }
             KernelExe::Native => native::execute(&self.spec, inputs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_and_paste_round_trip() {
+        // 3x4 matrix, pull the center 2x2, paste it elsewhere.
+        let t = HostTensor::I32((0..12).collect());
+        let block = t.extract_block(4, 1, 2, 1, 2).unwrap();
+        assert_eq!(block, HostTensor::I32(vec![5, 6, 9, 10]));
+        let mut dst = t.zeros_like(12);
+        dst.paste_block(4, 0, 2, 2, 2, &block).unwrap();
+        assert_eq!(dst, HostTensor::I32(vec![0, 0, 5, 6, 0, 0, 9, 10, 0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn block_ops_validate_bounds_and_dtype() {
+        let t = HostTensor::F32(vec![0.0; 12]);
+        assert!(t.extract_block(4, 2, 2, 0, 2).is_err(), "row overrun");
+        assert!(t.extract_block(4, 0, 1, 3, 2).is_err(), "col overrun");
+        let mut dst = HostTensor::F32(vec![0.0; 12]);
+        let wrong = HostTensor::F64(vec![0.0; 4]);
+        let err = dst.paste_block(4, 0, 2, 0, 2, &wrong).unwrap_err();
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+        let short = HostTensor::F32(vec![0.0; 3]);
+        assert!(dst.paste_block(4, 0, 2, 0, 2, &short).is_err(), "length check");
+    }
+
+    #[test]
+    fn zeros_like_preserves_dtype() {
+        for t in [
+            HostTensor::F32(vec![1.0]),
+            HostTensor::F64(vec![1.0]),
+            HostTensor::I32(vec![1]),
+            HostTensor::U32(vec![1]),
+        ] {
+            let z = t.zeros_like(5);
+            assert_eq!(z.dtype_name(), t.dtype_name());
+            assert_eq!(z.len(), 5);
         }
     }
 }

@@ -180,6 +180,25 @@ impl Runtime {
         }
     }
 
+    /// Open `n` independent runtime instances over the same artifacts
+    /// directory (native fallback per instance when no manifest exists)
+    /// — a fleet for *pre-built* cluster backends
+    /// (`coordinator::cluster::ClusterService::start_with_backends`;
+    /// the profile-based start path instead opens one runtime inside
+    /// each worker thread, since PJRT handles are not `Send`). Each
+    /// instance owns its engine and compiled-kernel cache, mirroring
+    /// one runtime per hardware partition; failures carry the instance
+    /// index.
+    pub fn open_many(dir: impl AsRef<Path>, n: usize) -> Result<Vec<Runtime>> {
+        let dir = dir.as_ref();
+        (0..n)
+            .map(|i| {
+                Self::open_or_native(dir)
+                    .with_context(|| format!("opening runtime instance {i} of {n}"))
+            })
+            .collect()
+    }
+
     /// Whether this runtime executes through the native host-reference
     /// backend (no PJRT).
     pub fn is_native(&self) -> bool {
@@ -254,6 +273,18 @@ mod tests {
     fn open_or_native_falls_back() {
         let rt = Runtime::open_or_native("/definitely/not/a/real/dir").expect("fallback");
         assert!(rt.is_native());
+    }
+
+    #[test]
+    fn open_many_yields_independent_instances() {
+        let fleet = Runtime::open_many("/definitely/not/a/real/dir", 3).expect("fleet");
+        assert_eq!(fleet.len(), 3);
+        for rt in &fleet {
+            assert!(rt.is_native());
+            assert_eq!(rt.manifest.default, "mmm_acc_f32_128");
+            rt.kernel("mmm_acc_f32_16").expect("every instance serves kernels");
+        }
+        assert!(Runtime::open_many("/definitely/not/a/real/dir", 0).unwrap().is_empty());
     }
 
     #[test]

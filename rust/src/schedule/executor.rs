@@ -401,22 +401,39 @@ impl TiledExecutor {
         n: usize,
         k: usize,
     ) -> Result<ExecutorRun<HostTensor>> {
+        let order = Order::select(m, n, k, self.tile_m, self.tile_n, self.tile_k);
+        self.run_tensor_with(a, b, m, n, k, order, ExecMode::Reuse)
+    }
+
+    /// [`Self::run_tensor`] with an explicit traversal order and
+    /// execution mode — the per-shard entry the cluster drives, where
+    /// the shard plan has already fixed both.
+    pub fn run_tensor_with(
+        &self,
+        a: &HostTensor,
+        b: &HostTensor,
+        m: usize,
+        n: usize,
+        k: usize,
+        order: Order,
+        mode: ExecMode,
+    ) -> Result<ExecutorRun<HostTensor>> {
         use HostTensor as H;
         match (self.semiring, a, b) {
             (Semiring::PlusTimes, H::F32(av), H::F32(bv)) => {
-                Ok(self.run(PlusTimesF32, av, bv, m, n, k)?.map_c(H::F32))
+                Ok(self.run_with(PlusTimesF32, av, bv, m, n, k, order, mode)?.map_c(H::F32))
             }
             (Semiring::PlusTimes, H::F64(av), H::F64(bv)) => {
-                Ok(self.run(PlusTimesF64, av, bv, m, n, k)?.map_c(H::F64))
+                Ok(self.run_with(PlusTimesF64, av, bv, m, n, k, order, mode)?.map_c(H::F64))
             }
             (Semiring::PlusTimes, H::I32(av), H::I32(bv)) => {
-                Ok(self.run(PlusTimesI32Wrap, av, bv, m, n, k)?.map_c(H::I32))
+                Ok(self.run_with(PlusTimesI32Wrap, av, bv, m, n, k, order, mode)?.map_c(H::I32))
             }
             (Semiring::PlusTimes, H::U32(av), H::U32(bv)) => {
-                Ok(self.run(PlusTimesU32Wrap, av, bv, m, n, k)?.map_c(H::U32))
+                Ok(self.run_with(PlusTimesU32Wrap, av, bv, m, n, k, order, mode)?.map_c(H::U32))
             }
             (Semiring::MinPlus, H::F32(av), H::F32(bv)) => {
-                Ok(self.run(MinPlusF32, av, bv, m, n, k)?.map_c(H::F32))
+                Ok(self.run_with(MinPlusF32, av, bv, m, n, k, order, mode)?.map_c(H::F32))
             }
             (semiring, a, b) => bail!(
                 "no executor instantiation for {semiring} over A {} / B {}",

@@ -20,13 +20,21 @@
 //!   host-resident accumulator, slab reuse, and double-buffered packing
 //!   (the communication-avoiding path), or in the seed's round-trip mode
 //!   for baseline comparison — generic over every dtype/semiring the
-//!   kernel engine instantiates.
+//!   kernel engine instantiates;
+//! * [`shard`] — one level further out: partition a single GEMM across a
+//!   `dr × dc × dk` *device grid* (C ownership per device, optional
+//!   k-split with a fixed-order reduction), choosing the split that
+//!   minimizes the maximum per-device host traffic under the same Eq.6
+//!   cost model — the paper's PE-grid decomposition replayed at fleet
+//!   scale, executed by [`crate::coordinator::cluster`].
 
 pub mod executor;
 pub mod loopnest;
 pub mod order;
+pub mod shard;
 pub mod tiles;
 
 pub use executor::{ExecMode, ExecutorRun, TiledExecutor};
 pub use order::Order;
+pub use shard::{DeviceTile, Shard, ShardGrid, ShardPlan};
 pub use tiles::{model_tile_shape, HostCacheProfile, Step, TilePlan};

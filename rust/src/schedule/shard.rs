@@ -1,0 +1,492 @@
+//! Shard planning: decompose one GEMM across a *grid of devices*.
+//!
+//! The paper's Eq. 6/7 I/O model sizes a memory tile to one device's
+//! fast-memory budget; this module lifts the same model one level up and
+//! partitions a single m×n×k problem over a `dr × dc × dk` grid of
+//! devices, exactly the way the paper partitions a memory tile across a
+//! PE grid (Sec. 4.1) — C ownership is split `dr × dc` ways, and the k
+//! dimension may additionally split `dk` ways, with the partial results
+//! ⊕-reduced on the host in a **fixed ascending-k order** so that
+//! non-associative semirings (f32/f64 plus-times) stay deterministic.
+//!
+//! Each device slot carries the tile shape its executor will drive
+//! ([`DeviceTile`], usually queried from the device's actual artifact
+//! inventory under its [`HostCacheProfile`]); the planner evaluates every
+//! candidate grid with the existing Eq.6-style host-traffic model
+//! ([`super::order::host_traffic`]) and picks the split that minimizes
+//! the **maximum per-device traffic** — the critical path of a fleet of
+//! devices streaming concurrently — breaking ties by total traffic, then
+//! by fewest k-splits (cheapest reduction, least bracketing), then by
+//! fewest row splits (the enumeration keeps the smallest `dr`, so a
+//! tied pure column split like 1×4×1 wins over its 4×1×1 transpose).
+//!
+//! The resulting [`ShardPlan`] embeds one [`TilePlan`] per shard, so its
+//! predicted traffic is *the same accounting* the per-device executors
+//! measure at run time: `predicted_transfer_elements()` is pinned equal
+//! to the cluster's measured transfers and to the independent replay in
+//! [`crate::sim::grid2d::sharded_traffic`] by the conformance suite.
+
+use super::executor::ExecMode;
+use super::order::{self, Order};
+use super::tiles::{model_tile_shape, HostCacheProfile, TilePlan};
+
+/// The tile shape one device's executor drives — its artifact dims, or
+/// the model-derived shape when planning without a concrete runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceTile {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl DeviceTile {
+    pub fn new(m: usize, n: usize, k: usize) -> DeviceTile {
+        DeviceTile { m, n, k }
+    }
+
+    /// The model-derived tile for a dtype width under a cache budget
+    /// ([`model_tile_shape`]) — planning without a manifest.
+    pub fn model(elem_bytes: u64, profile: &HostCacheProfile) -> DeviceTile {
+        let (m, n, k) = model_tile_shape(elem_bytes, profile);
+        DeviceTile { m, n, k }
+    }
+}
+
+impl From<(usize, usize, usize)> for DeviceTile {
+    fn from((m, n, k): (usize, usize, usize)) -> DeviceTile {
+        DeviceTile { m, n, k }
+    }
+}
+
+/// A `dr × dc × dk` device grid: C ownership splits `dr × dc` ways,
+/// k splits `dk` ways (the paper's PE-grid axes plus the Strassen-style
+/// sub-multiplication split recombined by a deterministic reduction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShardGrid {
+    pub dr: usize,
+    pub dc: usize,
+    pub dk: usize,
+}
+
+impl ShardGrid {
+    pub fn new(dr: usize, dc: usize, dk: usize) -> ShardGrid {
+        ShardGrid { dr, dc, dk }
+    }
+
+    /// Devices the grid occupies.
+    pub fn size(&self) -> usize {
+        self.dr * self.dc * self.dk
+    }
+}
+
+impl std::fmt::Display for ShardGrid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.dr, self.dc, self.dk)
+    }
+}
+
+/// One device's share of the problem: a C block (owned exclusively
+/// unless the grid splits k, in which case `dk` shards share `(di, dj)`
+/// and are ⊕-reduced ascending `dks`) plus the [`TilePlan`] its executor
+/// runs over the sub-problem.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// Device slot serving this shard (shards are assigned to devices in
+    /// `(di, dj, dks)` lexicographic order, one shard per device).
+    pub device: usize,
+    /// Grid coordinates.
+    pub di: usize,
+    pub dj: usize,
+    pub dks: usize,
+    /// C-region owned (rows `row0..row0+rows`, cols `col0..col0+cols`).
+    pub row0: usize,
+    pub rows: usize,
+    pub col0: usize,
+    pub cols: usize,
+    /// k-range contributed.
+    pub k0: usize,
+    pub kdepth: usize,
+    /// The tile plan the owning device's executor runs: the same object
+    /// the executor re-derives, so plan-predicted and run-measured
+    /// traffic can never diverge.
+    pub plan: TilePlan,
+}
+
+/// A complete device-grid decomposition of one GEMM.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub grid: ShardGrid,
+    /// Device slots available when the plan was made (≥ `grid.size()`;
+    /// slots beyond the grid stay idle).
+    pub n_devices: usize,
+    /// Shards in `(di, dj, dks)` lexicographic order — also the fixed
+    /// reduction order: within one `(di, dj)` block, ascending `dks`.
+    pub shards: Vec<Shard>,
+}
+
+/// Balanced contiguous split of `extent` into `parts`: chunk `idx` gets
+/// `extent/parts` elements, the first `extent%parts` chunks one extra.
+fn chunk(extent: usize, parts: usize, idx: usize) -> (usize, usize) {
+    debug_assert!(idx < parts && parts <= extent);
+    let base = extent / parts;
+    let rem = extent % parts;
+    let start = idx * base + idx.min(rem);
+    (start, base + usize::from(idx < rem))
+}
+
+/// Minimal modeled host traffic (elements) of one device executing a
+/// `sub_m × sub_n × sub_k` sub-problem on `tile` — the Eq.6-style cost
+/// [`Order::select`] minimizes, evaluated without building a plan.
+fn device_traffic(sub_m: usize, sub_n: usize, sub_k: usize, tile: DeviceTile) -> u64 {
+    Order::ALL
+        .iter()
+        .map(|&o| order::host_traffic(o, sub_m, sub_n, sub_k, tile.m, tile.n, tile.k))
+        .min()
+        .expect("non-empty order set")
+}
+
+impl ShardPlan {
+    /// Decompose with an explicit grid. Each shard's sub-plan uses its
+    /// device's tile shape under the traffic-minimal traversal order
+    /// ([`TilePlan::auto`]); shards map to device slots in `(di, dj,
+    /// dks)` lexicographic order.
+    pub fn with_grid(
+        m: usize,
+        n: usize,
+        k: usize,
+        grid: ShardGrid,
+        tiles: &[DeviceTile],
+    ) -> ShardPlan {
+        assert!(m > 0 && n > 0 && k > 0, "empty problem");
+        assert!(grid.dr > 0 && grid.dc > 0 && grid.dk > 0, "empty grid");
+        assert!(
+            grid.dr <= m && grid.dc <= n && grid.dk <= k,
+            "grid {grid} does not fit problem {m}x{n}x{k}"
+        );
+        assert!(
+            grid.size() <= tiles.len(),
+            "grid {grid} needs {} devices, have {}",
+            grid.size(),
+            tiles.len()
+        );
+        let mut shards = Vec::with_capacity(grid.size());
+        for di in 0..grid.dr {
+            let (row0, rows) = chunk(m, grid.dr, di);
+            for dj in 0..grid.dc {
+                let (col0, cols) = chunk(n, grid.dc, dj);
+                for dks in 0..grid.dk {
+                    let (k0, kdepth) = chunk(k, grid.dk, dks);
+                    let device = (di * grid.dc + dj) * grid.dk + dks;
+                    let t = tiles[device];
+                    shards.push(Shard {
+                        device,
+                        di,
+                        dj,
+                        dks,
+                        row0,
+                        rows,
+                        col0,
+                        cols,
+                        k0,
+                        kdepth,
+                        plan: TilePlan::auto(rows, cols, kdepth, t.m, t.n, t.k),
+                    });
+                }
+            }
+        }
+        ShardPlan { m, n, k, grid, n_devices: tiles.len(), shards }
+    }
+
+    /// Model-driven decomposition: evaluate every grid `dr·dc·dk ≤
+    /// n_devices` that fits the problem and keep the one minimizing the
+    /// **maximum per-device host traffic** (the concurrent fleet's
+    /// critical path), ties broken by total traffic, then fewest
+    /// k-splits, then fewest row splits (the enumeration order: `dk`
+    /// ascending outermost, `dr` ascending next, so a tied 1×4×1 beats
+    /// 4×1×1). With one device this degenerates to a 1×1×1 grid — the
+    /// single-device [`TilePlan`] path.
+    pub fn plan(m: usize, n: usize, k: usize, tiles: &[DeviceTile]) -> ShardPlan {
+        assert!(m > 0 && n > 0 && k > 0, "empty problem");
+        assert!(!tiles.is_empty(), "no devices");
+        let n_dev = tiles.len();
+        let mut best: Option<(u64, u64, ShardGrid)> = None;
+        for dk in 1..=n_dev.min(k) {
+            for dr in 1..=(n_dev / dk).min(m) {
+                for dc in 1..=(n_dev / (dk * dr)).min(n) {
+                    let grid = ShardGrid { dr, dc, dk };
+                    let (mut max_t, mut total_t) = (0u64, 0u64);
+                    for di in 0..dr {
+                        let (_, rows) = chunk(m, dr, di);
+                        for dj in 0..dc {
+                            let (_, cols) = chunk(n, dc, dj);
+                            for dks in 0..dk {
+                                let (_, kdepth) = chunk(k, dk, dks);
+                                let device = (di * dc + dj) * dk + dks;
+                                let t = device_traffic(rows, cols, kdepth, tiles[device]);
+                                max_t = max_t.max(t);
+                                total_t += t;
+                            }
+                        }
+                    }
+                    // Strict lexicographic improvement keeps the earliest
+                    // candidate on ties: dk ascending (fewest k-splits),
+                    // then dr ascending (fewest row splits).
+                    if best.map_or(true, |(bm, bt, _)| (max_t, total_t) < (bm, bt)) {
+                        best = Some((max_t, total_t, grid));
+                    }
+                }
+            }
+        }
+        let (_, _, grid) = best.expect("at least the 1x1x1 grid is always feasible");
+        Self::with_grid(m, n, k, grid, tiles)
+    }
+
+    /// [`Self::plan`] from per-device cache profiles alone: tile shapes
+    /// come from the Eq. 6/7 host model ([`model_tile_shape`]) instead of
+    /// a concrete artifact inventory.
+    pub fn plan_model(
+        m: usize,
+        n: usize,
+        k: usize,
+        elem_bytes: u64,
+        profiles: &[HostCacheProfile],
+    ) -> ShardPlan {
+        let tiles: Vec<DeviceTile> =
+            profiles.iter().map(|p| DeviceTile::model(elem_bytes, p)).collect();
+        Self::plan(m, n, k, &tiles)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total predicted host↔device traffic (elements) across the fleet:
+    /// the sum of every shard's [`TilePlan`] accounting for the given
+    /// execution mode. Pinned equal to the cluster's measured transfers
+    /// and to [`crate::sim::grid2d::sharded_traffic`].
+    pub fn predicted_transfer_elements(&self, mode: ExecMode) -> u64 {
+        self.shards.iter().map(|s| shard_transfer(s, mode)).sum()
+    }
+
+    /// Predicted traffic per device slot (idle slots report 0).
+    pub fn per_device_transfer(&self, mode: ExecMode) -> Vec<u64> {
+        let mut per = vec![0u64; self.n_devices];
+        for s in &self.shards {
+            per[s.device] += shard_transfer(s, mode);
+        }
+        per
+    }
+
+    /// The critical-path traffic the planner minimized.
+    pub fn max_device_transfer(&self, mode: ExecMode) -> u64 {
+        self.per_device_transfer(mode).into_iter().max().unwrap_or(0)
+    }
+
+    /// Elements the host ⊕-reduces across shards: every `(di, dj)` block
+    /// is folded `dk - 1` times (zero when k is unsplit).
+    pub fn reduction_elements(&self) -> u64 {
+        self.shards
+            .iter()
+            .filter(|s| s.dks > 0)
+            .map(|s| (s.rows * s.cols) as u64)
+            .sum()
+    }
+}
+
+/// One shard's predicted traffic under an execution mode — the same
+/// accounting the per-device executor measures.
+pub fn shard_transfer(shard: &Shard, mode: ExecMode) -> u64 {
+    match mode {
+        ExecMode::Reuse => shard.plan.transfer_elements(),
+        ExecMode::Roundtrip => shard.plan.transfer_elements_naive(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{HashMap, HashSet};
+
+    const T16: DeviceTile = DeviceTile { m: 16, n: 16, k: 16 };
+    const T128: DeviceTile = DeviceTile { m: 128, n: 128, k: 128 };
+
+    fn tiles(n: usize, t: DeviceTile) -> Vec<DeviceTile> {
+        vec![t; n]
+    }
+
+    #[test]
+    fn chunks_are_balanced_and_cover() {
+        for (extent, parts) in [(10, 3), (97, 4), (5, 5), (8, 1), (3, 2)] {
+            let mut next = 0;
+            let mut sizes = Vec::new();
+            for i in 0..parts {
+                let (start, len) = chunk(extent, parts, i);
+                assert_eq!(start, next, "{extent}/{parts} chunk {i} contiguous");
+                assert!(len > 0);
+                sizes.push(len);
+                next = start + len;
+            }
+            assert_eq!(next, extent, "{extent}/{parts} covers");
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{extent}/{parts} balanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn with_grid_covers_c_exactly_once_and_k_exactly_once() {
+        for (grid, shape) in [
+            (ShardGrid::new(1, 1, 1), (48, 48, 48)),
+            (ShardGrid::new(1, 3, 1), (97, 83, 61)),
+            (ShardGrid::new(2, 2, 1), (130, 70, 45)),
+            (ShardGrid::new(2, 2, 2), (33, 29, 34)),
+        ] {
+            let (m, n, k) = shape;
+            let p = ShardPlan::with_grid(m, n, k, grid, &tiles(grid.size(), T16));
+            // C ownership: the dks == 0 shards tile C exactly once.
+            let mut cells: HashSet<(usize, usize)> = HashSet::new();
+            for s in p.shards.iter().filter(|s| s.dks == 0) {
+                for r in s.row0..s.row0 + s.rows {
+                    for c in s.col0..s.col0 + s.cols {
+                        assert!(cells.insert((r, c)), "{grid}: cell ({r},{c}) owned twice");
+                    }
+                }
+            }
+            assert_eq!(cells.len(), m * n, "{grid}: C covered");
+            // k coverage per (di, dj): contiguous ascending, sums to k.
+            let mut by_block: HashMap<(usize, usize), Vec<&Shard>> = HashMap::new();
+            for s in &p.shards {
+                by_block.entry((s.di, s.dj)).or_default().push(s);
+            }
+            for (block, ss) in by_block {
+                let mut k_next = 0;
+                for s in &ss {
+                    assert_eq!(s.k0, k_next, "{grid} {block:?}: k contiguous ascending");
+                    k_next += s.kdepth;
+                }
+                assert_eq!(k_next, k, "{grid} {block:?}: k covered");
+            }
+            // Geometry mirrored into each shard's tile plan.
+            for s in &p.shards {
+                assert_eq!((s.plan.m, s.plan.n, s.plan.k), (s.rows, s.cols, s.kdepth));
+            }
+        }
+    }
+
+    #[test]
+    fn shards_map_to_distinct_devices_in_lexicographic_order() {
+        let grid = ShardGrid::new(2, 3, 2);
+        let p = ShardPlan::with_grid(64, 96, 40, grid, &tiles(12, T16));
+        assert_eq!(p.n_shards(), 12);
+        for (i, s) in p.shards.iter().enumerate() {
+            assert_eq!(s.device, i, "one shard per device, plan order");
+        }
+        // Lexicographic (di, dj, dks).
+        let coords: Vec<_> = p.shards.iter().map(|s| (s.di, s.dj, s.dks)).collect();
+        let mut sorted = coords.clone();
+        sorted.sort();
+        assert_eq!(coords, sorted);
+    }
+
+    #[test]
+    fn single_device_degenerates_to_one_shard() {
+        let p = ShardPlan::plan(200, 100, 50, &tiles(1, T128));
+        assert_eq!(p.grid, ShardGrid::new(1, 1, 1));
+        assert_eq!(p.n_shards(), 1);
+        let s = &p.shards[0];
+        assert_eq!((s.rows, s.cols, s.kdepth), (200, 100, 50));
+        assert_eq!(s.plan, TilePlan::auto(200, 100, 50, 128, 128, 128));
+    }
+
+    #[test]
+    fn planner_cuts_max_device_traffic_vs_single_device() {
+        let single = ShardPlan::plan(512, 512, 512, &tiles(1, T128));
+        let fleet = ShardPlan::plan(512, 512, 512, &tiles(4, T128));
+        assert!(fleet.grid.size() > 1, "planner uses the fleet");
+        assert!(
+            fleet.max_device_transfer(ExecMode::Reuse)
+                < single.max_device_transfer(ExecMode::Reuse),
+            "sharding must cut the per-device critical path"
+        );
+    }
+
+    #[test]
+    fn planner_choice_is_argmin_over_max_device_traffic() {
+        let devs = tiles(4, T128);
+        let p = ShardPlan::plan(512, 512, 512, &devs);
+        let best = p.max_device_transfer(ExecMode::Reuse);
+        for (dr, dc, dk) in [(4, 1, 1), (1, 4, 1), (1, 1, 4), (2, 2, 1), (2, 1, 2), (1, 2, 2)] {
+            let cand =
+                ShardPlan::with_grid(512, 512, 512, ShardGrid::new(dr, dc, dk), &devs);
+            assert!(
+                best <= cand.max_device_transfer(ExecMode::Reuse),
+                "{dr}x{dc}x{dk} beats the planner's {}",
+                p.grid
+            );
+        }
+    }
+
+    #[test]
+    fn planner_ties_prefer_fewest_k_splits() {
+        // On a cubic problem several splits tie on per-device traffic;
+        // the k-unsplit candidate must win (no reduction, no f32
+        // re-bracketing).
+        let p = ShardPlan::plan(512, 512, 512, &tiles(4, T128));
+        assert_eq!(p.grid.dk, 1, "ties keep k unsplit (got {})", p.grid);
+        assert_eq!(p.reduction_elements(), 0);
+    }
+
+    #[test]
+    fn planner_respects_problem_dimensions() {
+        // A 1-row problem cannot split rows; an 8-deep k cannot split 16
+        // ways even with 16 devices.
+        let p = ShardPlan::plan(1, 64, 8, &tiles(16, T16));
+        assert_eq!(p.grid.dr, 1);
+        assert!(p.grid.dk <= 8);
+        assert!(p.grid.size() <= 16);
+    }
+
+    #[test]
+    fn predicted_traffic_is_the_sum_of_shard_plans() {
+        let p = ShardPlan::with_grid(97, 83, 61, ShardGrid::new(2, 2, 2), &tiles(8, T16));
+        for mode in [ExecMode::Reuse, ExecMode::Roundtrip] {
+            let per = p.per_device_transfer(mode);
+            assert_eq!(per.len(), 8);
+            let total: u64 = per.iter().sum();
+            assert_eq!(total, p.predicted_transfer_elements(mode));
+            assert_eq!(per.iter().copied().max().unwrap(), p.max_device_transfer(mode));
+            for s in &p.shards {
+                assert_eq!(per[s.device], shard_transfer(s, mode));
+            }
+        }
+        // 2 k-splits: each of the 4 C blocks is folded once.
+        assert_eq!(p.reduction_elements(), 97 * 83);
+    }
+
+    #[test]
+    fn plan_model_uses_width_aware_tiles() {
+        let profiles = vec![HostCacheProfile::default(); 4];
+        let p4 = ShardPlan::plan_model(1024, 1024, 512, 4, &profiles);
+        let p8 = ShardPlan::plan_model(1024, 1024, 512, 8, &profiles);
+        assert!(p4.grid.size() > 1 && p8.grid.size() > 1);
+        // Wider dtypes plan on smaller tiles (Table 2's pattern), so the
+        // f64 decomposition never uses a larger tile than the f32 one.
+        let t4 = &p4.shards[0].plan;
+        let t8 = &p8.shards[0].plan;
+        assert!(t8.tile_m * t8.tile_n <= t4.tile_m * t4.tile_n);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn with_grid_rejects_oversized_grid() {
+        ShardPlan::with_grid(2, 8, 8, ShardGrid::new(4, 1, 1), &tiles(4, T16));
+    }
+
+    #[test]
+    #[should_panic(expected = "devices")]
+    fn with_grid_rejects_too_few_devices() {
+        ShardPlan::with_grid(64, 64, 64, ShardGrid::new(2, 2, 1), &tiles(3, T16));
+    }
+}

@@ -41,6 +41,43 @@ impl BandwidthReport {
     }
 }
 
+/// Host-link demand of a sharded (multi-device) run: every device
+/// streams its own share concurrently within one wall-clock window, so
+/// each device link carries `per_device` bytes while the host's link
+/// complex carries the sum — the cluster-level analogue of the
+/// grid-vs-chain fan-out argument ([`super::grid2d`]): scale-out divides
+/// the per-link stream, not the aggregate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterDemand {
+    /// Aggregate bytes crossing the host boundary.
+    pub total_bytes: u64,
+    /// Bytes on the busiest device link (the critical path the shard
+    /// planner minimizes).
+    pub max_device_bytes: u64,
+    /// Aggregate sustained demand over the window (bytes/s).
+    pub aggregate_bytes_per_sec: f64,
+    /// Busiest single link's sustained demand (bytes/s).
+    pub bottleneck_bytes_per_sec: f64,
+}
+
+/// Demand of a sharded run from its per-device transfer counts (as
+/// measured by the cluster or replayed by [`super::grid2d::sharded_traffic`]).
+pub fn cluster_demand(
+    per_device_elements: &[u64],
+    elem_bytes: u64,
+    window_secs: f64,
+) -> ClusterDemand {
+    assert!(window_secs > 0.0, "window must be positive");
+    let total_bytes: u64 = per_device_elements.iter().sum::<u64>() * elem_bytes;
+    let max_device_bytes = per_device_elements.iter().copied().max().unwrap_or(0) * elem_bytes;
+    ClusterDemand {
+        total_bytes,
+        max_device_bytes,
+        aggregate_bytes_per_sec: total_bytes as f64 / window_secs,
+        bottleneck_bytes_per_sec: max_device_bytes as f64 / window_secs,
+    }
+}
+
 /// Analyze a configuration's off-chip demand vs DDR supply.
 pub fn analyze(device: &Device, dt: DataType, tiling: TilingConfig, f_hz: f64) -> BandwidthReport {
     let bytes = dt.bytes() as f64;
@@ -110,6 +147,21 @@ mod tests {
     fn drain_demand_is_y_c_wide() {
         let r = analyze(&vcu1525(), DataType::F32, paper_fp32(), 200e6);
         assert!((r.drain_demand_bytes_per_sec - 8.0 * 4.0 * 200e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn cluster_demand_splits_bottleneck_from_aggregate() {
+        // Four devices moving [4, 3, 2, 1] Mi elements of f32 in 0.5 s.
+        let per: Vec<u64> = [4u64, 3, 2, 1].iter().map(|&x| x << 20).collect();
+        let d = cluster_demand(&per, 4, 0.5);
+        assert_eq!(d.total_bytes, 10 * (1 << 20) * 4);
+        assert_eq!(d.max_device_bytes, 4 * (1 << 20) * 4);
+        assert!((d.aggregate_bytes_per_sec - d.total_bytes as f64 * 2.0).abs() < 1e-6);
+        assert!((d.bottleneck_bytes_per_sec - d.max_device_bytes as f64 * 2.0).abs() < 1e-6);
+        // Single device: the bottleneck *is* the aggregate.
+        let solo = cluster_demand(&per[..1], 4, 0.5);
+        assert_eq!(solo.total_bytes, solo.max_device_bytes);
+        assert_eq!(cluster_demand(&[], 4, 1.0).total_bytes, 0);
     }
 
     #[test]

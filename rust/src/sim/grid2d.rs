@@ -11,6 +11,8 @@
 
 use crate::device::ChipletLayout;
 use crate::model::tiling::TilingConfig;
+use crate::schedule::shard::ShardPlan;
+use crate::schedule::ExecMode;
 
 /// Interconnect cost summary for a PE topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,6 +59,71 @@ pub fn broadcast_interconnect(x_p: u64, y_p: u64) -> InterconnectReport {
         max_fan_out: x_p.max(y_p), // 1-to-N broadcast — the routing killer
         buses_per_slr_crossing: 3 * x_p.min(y_p),
     }
+}
+
+/// Simulated host↔device traffic of a sharded execution.
+///
+/// Produced by [`sharded_traffic`], which *replays* every shard's step
+/// sequence with an explicit resident-slab simulation — the device-grid
+/// analogue of pinning Eq. 6 against the element simulator: the plan's
+/// closed-form accounting, this replay, and the cluster's run-time
+/// measurements must all agree (the conformance suite asserts it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardTraffic {
+    /// Elements each device slot exchanges with the host (idle slots 0).
+    pub per_device: Vec<u64>,
+    /// Fleet-aggregate elements (what the host's link complex carries).
+    pub total: u64,
+    /// The critical-path device — what the shard planner minimized.
+    pub max_device: u64,
+    /// Elements the host ⊕-reduces across k-split shards (host-side
+    /// work, deliberately not counted as device traffic).
+    pub reduction_elements: u64,
+}
+
+/// Replay a [`ShardPlan`] and measure its transfers by simulation.
+///
+/// Unlike `TilePlan::transfer_elements`, which sums the planner's own
+/// `reuse_a`/`reuse_b` flags, this walk re-derives slab residency from
+/// step identity: a device ships an A slab whenever the `(ti, ks)` it
+/// needs differs from the one resident in its buffer, a B slab on
+/// `(tj, ks)` changes, one partial-C tile per step, and (in reuse mode)
+/// the ⊕-identity C-in template once per shard. Round-trip mode re-ships
+/// everything every step, C in and out included — the seed baseline.
+pub fn sharded_traffic(plan: &ShardPlan, mode: ExecMode) -> ShardTraffic {
+    let mut per_device = vec![0u64; plan.n_devices];
+    for shard in &plan.shards {
+        let tp = &shard.plan;
+        let a_el = (tp.tile_m * tp.tile_k) as u64;
+        let b_el = (tp.tile_k * tp.tile_n) as u64;
+        let c_el = (tp.tile_m * tp.tile_n) as u64;
+        let mut moved = 0u64;
+        match mode {
+            ExecMode::Reuse => {
+                moved += c_el; // ⊕-identity template, once per shard
+                let mut resident_a: Option<(usize, usize)> = None;
+                let mut resident_b: Option<(usize, usize)> = None;
+                for s in &tp.steps {
+                    if resident_a != Some((s.ti, s.ks)) {
+                        resident_a = Some((s.ti, s.ks));
+                        moved += a_el;
+                    }
+                    if resident_b != Some((s.tj, s.ks)) {
+                        resident_b = Some((s.tj, s.ks));
+                        moved += b_el;
+                    }
+                    moved += c_el; // partial C tile out
+                }
+            }
+            ExecMode::Roundtrip => {
+                moved = tp.steps.len() as u64 * (a_el + b_el + 2 * c_el);
+            }
+        }
+        per_device[shard.device] += moved;
+    }
+    let total = per_device.iter().sum();
+    let max_device = per_device.iter().copied().max().unwrap_or(0);
+    ShardTraffic { per_device, total, max_device, reduction_elements: plan.reduction_elements() }
 }
 
 /// A 2-D grid schedule computes the same set of madds as the 1-D chain
@@ -140,5 +207,53 @@ mod tests {
         let r1d = simulate_timeline(t1d, m, n, k);
         assert_eq!(r2d.compute_cycles, r1d.compute_cycles);
         assert_eq!(r2d.q_elements(), r1d.q_elements());
+    }
+
+    #[test]
+    fn sharded_traffic_replay_matches_plan_accounting() {
+        use crate::schedule::shard::{DeviceTile, ShardGrid};
+        let tiles = vec![DeviceTile::new(16, 16, 16); 8];
+        for grid in [
+            ShardGrid::new(1, 1, 1),
+            ShardGrid::new(2, 2, 1),
+            ShardGrid::new(2, 2, 2),
+            ShardGrid::new(1, 3, 2),
+        ] {
+            for (m, n, k) in [(97, 83, 61), (48, 48, 48), (130, 70, 45)] {
+                let plan = ShardPlan::with_grid(m, n, k, grid, &tiles);
+                for mode in [ExecMode::Reuse, ExecMode::Roundtrip] {
+                    let sim = sharded_traffic(&plan, mode);
+                    assert_eq!(
+                        sim.total,
+                        plan.predicted_transfer_elements(mode),
+                        "{grid} {m}x{n}x{k} {mode:?}: replay vs plan total"
+                    );
+                    assert_eq!(
+                        sim.per_device,
+                        plan.per_device_transfer(mode),
+                        "{grid} {m}x{n}x{k} {mode:?}: replay vs plan per device"
+                    );
+                    assert_eq!(sim.max_device, plan.max_device_transfer(mode));
+                    assert_eq!(sim.reduction_elements, plan.reduction_elements());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_cuts_per_device_traffic_not_total() {
+        // The fleet's point: splitting C ownership divides each device's
+        // stream, while the aggregate stays in the same ballpark (operand
+        // blocks are replicated across the grid, never multiplied by it).
+        use crate::schedule::shard::{DeviceTile, ShardGrid};
+        let tiles = vec![DeviceTile::new(128, 128, 128); 4];
+        let single =
+            ShardPlan::with_grid(512, 512, 512, ShardGrid::new(1, 1, 1), &tiles);
+        let fleet = ShardPlan::with_grid(512, 512, 512, ShardGrid::new(2, 2, 1), &tiles);
+        let s = sharded_traffic(&single, ExecMode::Reuse);
+        let f = sharded_traffic(&fleet, ExecMode::Reuse);
+        assert!(f.max_device < s.max_device, "{} vs {}", f.max_device, s.max_device);
+        assert!(f.total < 2 * s.total, "replication bounded: {} vs {}", f.total, s.total);
+        assert_eq!(f.reduction_elements, 0, "k unsplit: no host reduction");
     }
 }

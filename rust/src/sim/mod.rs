@@ -15,9 +15,11 @@
 //!   pin the timeline model (equal counts on every small configuration).
 //!
 //! [`grid2d`] models the pre-collapse 2-D array's interconnect for the
-//! Sec.-4.1 comparison, and [`baseline`] implements the prior-work
-//! double-buffered-C designs (the √2 intensity penalty) plus naive/ideal
-//! reference schedules.
+//! Sec.-4.1 comparison — and replays sharded device-grid plans
+//! ([`grid2d::sharded_traffic`]) to pin the shard planner's predicted
+//! host traffic against an independent simulation; [`baseline`]
+//! implements the prior-work double-buffered-C designs (the √2 intensity
+//! penalty) plus naive/ideal reference schedules.
 
 pub mod bandwidth;
 pub mod baseline;
@@ -29,4 +31,5 @@ pub mod stats;
 
 pub use chain::simulate_timeline;
 pub use exact::ExactSim;
+pub use grid2d::{sharded_traffic, ShardTraffic};
 pub use stats::SimReport;

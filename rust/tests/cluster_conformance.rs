@@ -1,0 +1,568 @@
+//! Cross-layer conformance, fault-injection, and traffic-model tests for
+//! the sharded multi-device GEMM layer:
+//! `ClusterService` → shard planner → per-device `TiledExecutor` →
+//! `runtime::kernel`, for every (semiring, dtype) the engine
+//! instantiates.
+//!
+//! Bit-exactness contracts (validated against a numpy float32 trace
+//! simulation before being pinned here):
+//!
+//! * **k-unsplit grids** (1×1, 1×N, N×M with dk = 1): every C element is
+//!   produced by exactly one device running the same ascending-k fold the
+//!   single-device executor runs, so the cluster result is
+//!   **bit-identical to the single-device run** for *every* algebra —
+//!   non-associative f32/f64 plus-times included — in both exec modes.
+//! * **k-split grids** (dk > 1): the host ⊕-reduces per-shard partials in
+//!   fixed ascending-k order. For associative ⊕ (wrapping integers,
+//!   min-plus) the result still equals the one-shot oracle bit-for-bit.
+//!   For floats the k-split re-brackets the fold, so the pinned oracle is
+//!   the **sequential single-device replay**: the same shards run one at
+//!   a time through one executor and folded in the same ascending order
+//!   must reproduce the cluster bits exactly (and the reduction order
+//!   itself is pinned by a crafted catastrophic-cancellation case).
+//! * **Traffic**: plan-predicted == sim-replayed == run-measured
+//!   transfers, per device and in aggregate, for every grid and mode —
+//!   the PR 1 "model == plan == measured" invariant across devices.
+//!
+//! The fault-injection half drives a mock backend that fails or panics on
+//! chosen shard coordinates and asserts the error context (shard coords,
+//! device id, dtype, semiring), that sibling shards still complete, that
+//! the fleet stays healthy for subsequent jobs (panicked workers
+//! included), and that shutdown joins every worker.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use fcamm::coordinator::cluster::{
+    fold_partials, ClusterService, RuntimeBackend, ShardBackend, ShardOutput,
+};
+use fcamm::coordinator::GemmJob;
+use fcamm::datatype::Semiring;
+use fcamm::runtime::kernel::oracle;
+use fcamm::runtime::{HostTensor, Runtime};
+use fcamm::schedule::shard::{Shard, ShardGrid, ShardPlan};
+use fcamm::schedule::{ExecMode, HostCacheProfile, TiledExecutor};
+use fcamm::sim::grid2d::sharded_traffic;
+use fcamm::util::rng::Rng;
+
+/// A 16 KiB host budget admits only the 16³ accumulation artifacts for
+/// every algebra (f32 16³ working set: 5 KiB; f64: 10 KiB; the 64³/128³
+/// tiles blow the budget) — small tiles keep the grids genuinely
+/// multi-tile and multi-slab at test sizes.
+fn tight() -> HostCacheProfile {
+    HostCacheProfile::with_capacity(16 * 1024)
+}
+
+fn tight_cluster(n_devices: usize) -> ClusterService {
+    ClusterService::start_with_profiles(
+        PathBuf::from("/nonexistent/artifacts"),
+        vec![tight(); n_devices],
+    )
+    .expect("cluster starts on the native fallback")
+}
+
+const MODES: [ExecMode; 2] = [ExecMode::Reuse, ExecMode::Roundtrip];
+const GRIDS: [ShardGrid; 4] = [
+    ShardGrid { dr: 1, dc: 1, dk: 1 },
+    ShardGrid { dr: 1, dc: 3, dk: 1 },
+    ShardGrid { dr: 2, dc: 2, dk: 1 },
+    ShardGrid { dr: 2, dc: 2, dk: 2 },
+];
+const SHAPES: [(usize, usize, usize); 3] = [(40, 25, 33), (17, 50, 64), (33, 20, 90)];
+
+/// The five (semiring, dtype) instantiations the kernel engine serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Algebra {
+    F32,
+    F64,
+    I32Wrap,
+    U32Wrap,
+    MinPlusF32,
+}
+
+const ALGEBRAS: [Algebra; 5] =
+    [Algebra::F32, Algebra::F64, Algebra::I32Wrap, Algebra::U32Wrap, Algebra::MinPlusF32];
+
+impl Algebra {
+    fn semiring(self) -> Semiring {
+        match self {
+            Algebra::MinPlusF32 => Semiring::MinPlus,
+            _ => Semiring::PlusTimes,
+        }
+    }
+
+    fn dtype(self) -> &'static str {
+        match self {
+            Algebra::F64 => "float64",
+            Algebra::I32Wrap => "int32",
+            Algebra::U32Wrap => "uint32",
+            _ => "float32",
+        }
+    }
+
+    /// Whether ⊕ is associative — i.e. whether even k-split grids must
+    /// reproduce the one-shot oracle bit-for-bit.
+    fn associative(self) -> bool {
+        !matches!(self, Algebra::F32 | Algebra::F64)
+    }
+
+    fn gen(self, rng: &mut Rng, len: usize) -> HostTensor {
+        match self {
+            Algebra::F32 => HostTensor::F32(rng.fill_normal_f32(len)),
+            Algebra::F64 => {
+                HostTensor::F64((0..len).map(|_| rng.next_f64() * 4.0 - 2.0).collect())
+            }
+            Algebra::I32Wrap => {
+                // Full-range values: constant overflow pins mod-2³² math.
+                HostTensor::I32((0..len).map(|_| rng.next_u32() as i32).collect())
+            }
+            Algebra::U32Wrap => HostTensor::U32((0..len).map(|_| rng.next_u32()).collect()),
+            Algebra::MinPlusF32 => gen_min_plus(rng, len),
+        }
+    }
+
+    /// One-shot naive oracle (the seed's continuous ascending-k fold).
+    fn oracle(self, a: &HostTensor, b: &HostTensor, m: usize, n: usize, k: usize) -> HostTensor {
+        match self {
+            Algebra::F32 => HostTensor::F32(oracle::gemm_f32(
+                None,
+                a.as_f32().unwrap(),
+                b.as_f32().unwrap(),
+                m,
+                n,
+                k,
+            )),
+            Algebra::F64 => {
+                HostTensor::F64(oracle::gemm_f64(a.as_f64().unwrap(), b.as_f64().unwrap(), m, n, k))
+            }
+            Algebra::I32Wrap => HostTensor::I32(
+                oracle::gemm_i64(a.as_i32().unwrap(), b.as_i32().unwrap(), m, n, k)
+                    .iter()
+                    .map(|&v| v as i32)
+                    .collect(),
+            ),
+            Algebra::U32Wrap => HostTensor::U32(
+                oracle::gemm_i64(a.as_u32().unwrap(), b.as_u32().unwrap(), m, n, k)
+                    .iter()
+                    .map(|&v| v as u32)
+                    .collect(),
+            ),
+            Algebra::MinPlusF32 => HostTensor::F32(oracle::distance_f32(
+                a.as_f32().unwrap(),
+                b.as_f32().unwrap(),
+                m,
+                n,
+                k,
+            )),
+        }
+    }
+
+    fn job(self, rng: &mut Rng, m: usize, n: usize, k: usize) -> GemmJob {
+        GemmJob::new(m, n, k, self.gen(rng, m * k), self.gen(rng, k * n), self.semiring())
+    }
+}
+
+/// min-plus generator: finite hops plus unreachable (+∞) edges that must
+/// survive the fold (and the +∞ padding must never win a comparison).
+fn gen_min_plus(rng: &mut Rng, len: usize) -> HostTensor {
+    HostTensor::F32(
+        (0..len)
+            .map(|_| {
+                if rng.gen_range(0, 8) == 0 {
+                    f32::INFINITY
+                } else {
+                    rng.next_f32() * 10.0
+                }
+            })
+            .collect(),
+    )
+}
+
+/// Sequential single-device replay of a shard plan: the same shards run
+/// one at a time through one executor, partials folded in the same
+/// ascending-k order, blocks pasted exactly once. The cluster must
+/// reproduce this bit-for-bit — that is what makes the multi-device path
+/// a pure re-placement of the single-device computation.
+fn replay_oracle(
+    exec: &TiledExecutor,
+    plan: &ShardPlan,
+    job: &GemmJob,
+    mode: ExecMode,
+) -> HostTensor {
+    let (n, k) = (job.n, job.k);
+    let mut c = job.a.zeros_like(job.m * n);
+    let mut i = 0;
+    while i < plan.shards.len() {
+        let s0 = &plan.shards[i];
+        let mut block: Option<HostTensor> = None;
+        let mut j = i;
+        while j < plan.shards.len() {
+            let s: &Shard = &plan.shards[j];
+            if (s.di, s.dj) != (s0.di, s0.dj) {
+                break;
+            }
+            let a_blk = job.a.extract_block(k, s.row0, s.rows, s.k0, s.kdepth).unwrap();
+            let b_blk = job.b.extract_block(n, s.k0, s.kdepth, s.col0, s.cols).unwrap();
+            let part = exec
+                .run_tensor_with(&a_blk, &b_blk, s.rows, s.cols, s.kdepth, s.plan.order, mode)
+                .expect("replay shard")
+                .c;
+            match &mut block {
+                None => block = Some(part),
+                Some(acc) => fold_partials(job.semiring, acc, &part).expect("replay fold"),
+            }
+            j += 1;
+        }
+        c.paste_block(n, s0.row0, s0.rows, s0.col0, s0.cols, &block.unwrap()).unwrap();
+        i = j;
+    }
+    c
+}
+
+#[test]
+fn every_algebra_grid_and_mode_matches_its_oracle_bit_exactly() {
+    let cluster = tight_cluster(8);
+    let rt = Runtime::native_default().unwrap();
+    let mut rng = Rng::new(0x5AAD);
+    for algebra in ALGEBRAS {
+        let exec =
+            TiledExecutor::for_algebra_with(&rt, algebra.semiring(), algebra.dtype(), &tight())
+                .expect("single-device executor");
+        assert_eq!(exec.tile_shape(), (16, 16, 16), "{algebra:?}: tight profile picks 16³");
+        for grid in GRIDS {
+            for (m, n, k) in SHAPES {
+                let job = algebra.job(&mut rng, m, n, k);
+                for mode in MODES {
+                    let run = cluster
+                        .run_on_grid(&job, grid, mode)
+                        .expect("cluster run");
+                    assert_eq!(run.plan.grid, grid);
+                    assert_eq!(run.plan.n_shards(), grid.size());
+                    // Deterministic: a second run reproduces the bits.
+                    let again = cluster.run_on_grid(&job, grid, mode).unwrap();
+                    assert_eq!(run.c, again.c, "{algebra:?} {grid} {m}x{n}x{k} {mode:?}");
+                    // Sequential single-device replay: always bit-exact.
+                    let replay = replay_oracle(&exec, &run.plan, &job, mode);
+                    assert_eq!(
+                        run.c, replay,
+                        "{algebra:?} {grid} {m}x{n}x{k} {mode:?}: cluster vs replay"
+                    );
+                    // k-unsplit grids: bit-exact vs the one-piece
+                    // single-device run, every algebra.
+                    if grid.dk == 1 {
+                        let single = exec
+                            .run_tensor_with(
+                                &job.a,
+                                &job.b,
+                                m,
+                                n,
+                                k,
+                                exec.plan(m, n, k).order,
+                                mode,
+                            )
+                            .expect("single-device run");
+                        assert_eq!(
+                            run.c, single.c,
+                            "{algebra:?} {grid} {m}x{n}x{k} {mode:?}: cluster vs single device"
+                        );
+                    }
+                    // Associative ⊕: bit-exact vs the one-shot oracle
+                    // too, k-split grids included.
+                    if algebra.associative() {
+                        let one_shot = algebra.oracle(&job.a, &job.b, m, n, k);
+                        assert_eq!(
+                            run.c, one_shot,
+                            "{algebra:?} {grid} {m}x{n}x{k} {mode:?}: cluster vs one-shot"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn planner_grids_cover_c_once_with_disjoint_ownership_on_every_fleet_size() {
+    for n_devices in [1usize, 2, 3, 4, 5, 6, 7, 8] {
+        let tiles = vec![fcamm::schedule::DeviceTile::new(16, 16, 16); n_devices];
+        for (m, n, k) in [(97, 83, 61), (130, 70, 45), (33, 29, 34), (16, 16, 16)] {
+            let plan = ShardPlan::plan(m, n, k, &tiles);
+            assert!(plan.grid.size() <= n_devices);
+            // Exactly-once C coverage with disjoint ownership.
+            let mut owner = vec![usize::MAX; m * n];
+            for s in plan.shards.iter().filter(|s| s.dks == 0) {
+                for r in s.row0..s.row0 + s.rows {
+                    for c in s.col0..s.col0 + s.cols {
+                        assert_eq!(
+                            owner[r * n + c],
+                            usize::MAX,
+                            "cell ({r},{c}) owned by two shards"
+                        );
+                        owner[r * n + c] = s.device;
+                    }
+                }
+            }
+            assert!(owner.iter().all(|&d| d != usize::MAX), "C fully covered");
+            // k covered exactly once per block, ascending and contiguous.
+            for s0 in plan.shards.iter().filter(|s| s.dks == 0) {
+                let covered: usize = plan
+                    .shards
+                    .iter()
+                    .filter(|s| (s.di, s.dj) == (s0.di, s0.dj))
+                    .map(|s| s.kdepth)
+                    .sum();
+                assert_eq!(covered, k);
+            }
+            // Every shard lands on a real device slot.
+            assert!(plan.shards.iter().all(|s| s.device < n_devices));
+        }
+    }
+}
+
+#[test]
+fn predicted_traffic_equals_sim_replay_and_measured_transfers() {
+    let cluster = tight_cluster(8);
+    let mut rng = Rng::new(0x7AFF1C);
+    for algebra in [Algebra::F32, Algebra::MinPlusF32, Algebra::F64] {
+        for grid in GRIDS {
+            let (m, n, k) = (44, 29, 37);
+            let job = algebra.job(&mut rng, m, n, k);
+            for mode in MODES {
+                let run = cluster.run_on_grid(&job, grid, mode).expect("cluster run");
+                let predicted = run.plan.predicted_transfer_elements(mode);
+                let sim = sharded_traffic(&run.plan, mode);
+                assert_eq!(
+                    run.transfer_elements, predicted,
+                    "{algebra:?} {grid} {mode:?}: measured vs plan"
+                );
+                assert_eq!(sim.total, predicted, "{algebra:?} {grid} {mode:?}: sim vs plan");
+                assert_eq!(
+                    run.per_device_transfer,
+                    sim.per_device,
+                    "{algebra:?} {grid} {mode:?}: per-device measured vs sim"
+                );
+                assert_eq!(
+                    run.per_device_transfer,
+                    run.plan.per_device_transfer(mode),
+                    "{algebra:?} {grid} {mode:?}: per-device measured vs plan"
+                );
+            }
+        }
+    }
+    // The planner's own pick obeys the same pinning end-to-end.
+    let job = Algebra::F32.job(&mut rng, 120, 90, 70);
+    let run = cluster.run(&job).expect("planned run");
+    assert!(run.plan.grid.size() > 1, "fleet is used: {}", run.plan.grid);
+    assert_eq!(run.transfer_elements, run.plan.predicted_transfer_elements(ExecMode::Reuse));
+    assert_eq!(sharded_traffic(&run.plan, ExecMode::Reuse).per_device, run.per_device_transfer);
+    cluster.shutdown();
+}
+
+#[test]
+fn k_reduction_is_ascending_and_the_order_is_observable() {
+    // Catastrophic cancellation makes the fold order observable in f32:
+    // partials (1e8, -1e8, 1.0) give 1.0 when folded ascending,
+    // 0.0 when the tail is folded first.
+    let asc = {
+        let mut acc = HostTensor::F32(vec![1e8]);
+        fold_partials(Semiring::PlusTimes, &mut acc, &HostTensor::F32(vec![-1e8])).unwrap();
+        fold_partials(Semiring::PlusTimes, &mut acc, &HostTensor::F32(vec![1.0])).unwrap();
+        acc
+    };
+    let desc = {
+        let mut acc = HostTensor::F32(vec![-1e8]);
+        fold_partials(Semiring::PlusTimes, &mut acc, &HostTensor::F32(vec![1.0])).unwrap();
+        fold_partials(Semiring::PlusTimes, &mut acc, &HostTensor::F32(vec![1e8])).unwrap();
+        acc
+    };
+    assert_eq!(asc, HostTensor::F32(vec![1.0]));
+    assert_eq!(desc, HostTensor::F32(vec![0.0]));
+
+    // The cluster path must realize the ascending bracketing: a 1×1×3
+    // k-split whose shard partials are exactly (1e8, -1e8, 1.0).
+    let cluster = tight_cluster(3);
+    let job = GemmJob::f32(1, 1, 3, vec![1.0, 1.0, 1.0], vec![1e8, -1e8, 1.0]);
+    for mode in MODES {
+        let run = cluster
+            .run_on_grid(&job, ShardGrid { dr: 1, dc: 1, dk: 3 }, mode)
+            .expect("k-split run");
+        assert_eq!(
+            run.c,
+            HostTensor::F32(vec![1.0]),
+            "{mode:?}: ascending-k reduction is the contract"
+        );
+    }
+    cluster.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Fault {
+    Fail,
+    Panic,
+}
+
+/// Mock device: a real [`RuntimeBackend`] that fails or panics the first
+/// time it sees the armed shard coordinates, then behaves normally —
+/// proving the worker (and the fleet) survives its own faults.
+struct FaultBackend {
+    inner: RuntimeBackend,
+    trigger: (usize, usize, usize),
+    fault: Fault,
+    armed: bool,
+    served: Arc<AtomicUsize>,
+}
+
+impl ShardBackend for FaultBackend {
+    fn device_id(&self) -> usize {
+        self.inner.device_id()
+    }
+
+    fn tile_shape(
+        &mut self,
+        semiring: Semiring,
+        dtype: &'static str,
+    ) -> Result<(usize, usize, usize)> {
+        self.inner.tile_shape(semiring, dtype)
+    }
+
+    fn run_shard(
+        &mut self,
+        shard: &Shard,
+        semiring: Semiring,
+        a_block: &HostTensor,
+        b_block: &HostTensor,
+        mode: ExecMode,
+    ) -> Result<ShardOutput> {
+        if self.armed && (shard.di, shard.dj, shard.dks) == self.trigger {
+            self.armed = false;
+            match self.fault {
+                Fault::Fail => bail!("injected DMA failure"),
+                Fault::Panic => panic!("injected device panic"),
+            }
+        }
+        let out = self.inner.run_shard(shard, semiring, a_block, b_block, mode)?;
+        self.served.fetch_add(1, Ordering::SeqCst);
+        Ok(out)
+    }
+}
+
+fn fault_cluster(
+    n_devices: usize,
+    trigger: (usize, usize, usize),
+    fault: Fault,
+) -> (ClusterService, Arc<AtomicUsize>) {
+    let served = Arc::new(AtomicUsize::new(0));
+    let fleet = Runtime::open_many("/nonexistent/artifacts", n_devices).expect("runtime fleet");
+    let backends: Vec<Box<dyn ShardBackend>> = fleet
+        .into_iter()
+        .enumerate()
+        .map(|(device, rt)| {
+            Box::new(FaultBackend {
+                inner: RuntimeBackend::new(device, rt, tight()),
+                trigger,
+                fault,
+                armed: true,
+                served: served.clone(),
+            }) as Box<dyn ShardBackend>
+        })
+        .collect();
+    (ClusterService::start_with_backends(backends).expect("mock cluster"), served)
+}
+
+#[test]
+fn failed_shard_carries_context_and_siblings_complete() {
+    // Grid 2×2×1: shard (di 1, dj 0) lands on device 2.
+    let (cluster, served) = fault_cluster(4, (1, 0, 0), Fault::Fail);
+    let mut rng = Rng::new(0xFA11);
+    let job = Algebra::F32.job(&mut rng, 40, 25, 33);
+    let grid = ShardGrid { dr: 2, dc: 2, dk: 1 };
+    let err = cluster.run_on_grid(&job, grid, ExecMode::Reuse).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("injected DMA failure"), "{msg}");
+    assert!(msg.contains("shard (di 1, dj 0, dk 0)"), "{msg}");
+    assert!(msg.contains("device 2"), "{msg}");
+    assert!(msg.contains("float32"), "{msg}");
+    assert!(msg.contains("plus_times"), "{msg}");
+    assert!(msg.contains("40x25x33"), "{msg}");
+    assert!(msg.contains("3/3 sibling shards completed"), "{msg}");
+    assert_eq!(served.load(Ordering::SeqCst), 3, "sibling shards ran to completion");
+
+    // The fault disarmed: the same grid (same devices, the failed one
+    // included) now succeeds and matches the bit-exact replay oracle.
+    let run = cluster.run_on_grid(&job, grid, ExecMode::Reuse).expect("fleet recovered");
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float32", &tight())
+        .unwrap();
+    assert_eq!(run.c, replay_oracle(&exec, &run.plan, &job, ExecMode::Reuse));
+    cluster.shutdown(); // joins every worker: no thread leaks
+}
+
+#[test]
+fn panicked_shard_is_contained_and_the_worker_survives() {
+    // Grid 2×2×1: shard (di 0, dj 1) lands on device 1.
+    let (cluster, served) = fault_cluster(4, (0, 1, 0), Fault::Panic);
+    let mut rng = Rng::new(0xDEAD);
+    let job = Algebra::MinPlusF32.job(&mut rng, 33, 20, 45);
+    let grid = ShardGrid { dr: 2, dc: 2, dk: 1 };
+    let err = cluster.run_on_grid(&job, grid, ExecMode::Reuse).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("panicked"), "{msg}");
+    assert!(msg.contains("injected device panic"), "{msg}");
+    assert!(msg.contains("shard (di 0, dj 1, dk 0)"), "{msg}");
+    assert!(msg.contains("device 1"), "{msg}");
+    assert!(msg.contains("min_plus"), "{msg}");
+    assert_eq!(served.load(Ordering::SeqCst), 3, "siblings completed despite the panic");
+
+    // The panicked worker thread is still alive and serving: the same
+    // grid routes shard (0, 1) back to device 1 and now succeeds,
+    // matching the one-shot distance oracle (min-plus ⊕ is associative).
+    let run = cluster.run_on_grid(&job, grid, ExecMode::Reuse).expect("worker survived");
+    assert_eq!(run.c, Algebra::MinPlusF32.oracle(&job.a, &job.b, 33, 20, 45));
+    cluster.shutdown();
+}
+
+#[test]
+fn unsupported_algebra_fails_with_fleet_context() {
+    let cluster = tight_cluster(2);
+    let job = GemmJob::new(
+        8,
+        8,
+        8,
+        HostTensor::F64(vec![0.0; 64]),
+        HostTensor::F64(vec![0.0; 64]),
+        Semiring::MinPlus,
+    );
+    let err = cluster.run(&job).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("8x8x8"), "{msg}");
+    assert!(msg.contains("float64"), "{msg}");
+    assert!(msg.contains("min_plus"), "{msg}");
+    assert!(msg.contains("device 0"), "{msg}");
+
+    // Operand validation happens before fan-out, with the same context.
+    let bad = GemmJob::f32(4, 4, 4, vec![0.0; 15], vec![0.0; 16]);
+    let err = cluster.run(&bad).unwrap_err();
+    assert!(err.to_string().contains("A buffer has 15 elements"), "{err}");
+
+    // Degenerate shapes and grids are contextual errors, never panics.
+    let empty = GemmJob::f32(0, 4, 4, vec![], vec![0.0; 16]);
+    let err = cluster.run(&empty).unwrap_err();
+    assert!(err.to_string().contains("empty problem 0x4x4"), "{err}");
+    let job = GemmJob::f32(4, 4, 4, vec![0.0; 16], vec![0.0; 16]);
+    let err = cluster
+        .run_on_grid(&job, ShardGrid { dr: 2, dc: 2, dk: 2 }, ExecMode::Reuse)
+        .unwrap_err();
+    assert!(err.to_string().contains("needs 8 devices, fleet has 2"), "{err}");
+    let err = cluster
+        .run_on_grid(&job, ShardGrid { dr: 1, dc: 1, dk: 5 }, ExecMode::Reuse)
+        .unwrap_err();
+    assert!(err.to_string().contains("splits finer"), "{err}");
+    cluster.shutdown();
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Standard pre-merge gate: format + lint, build, test, and a quick
 # hot-path bench run (writes BENCH_hotpath.json at the repo root for
-# perf tracking, including the seed-vs-blocked kernel speedup metrics).
+# perf tracking, including the seed-vs-blocked kernel speedup metrics
+# and the sharded-cluster metrics).
 #
 # Usage: scripts/check.sh
 set -euo pipefail
@@ -9,14 +10,24 @@ cd "$(dirname "$0")/.."
 
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
-  cargo fmt --all -- --check
+  if ! fmt_out=$(cargo fmt --all -- --check 2>&1); then
+    printf '%s\n' "$fmt_out"
+    echo "-- files failing rustfmt (run 'cargo fmt' to fix):" >&2
+    printf '%s\n' "$fmt_out" | sed -n 's/^Diff in \(.*\) at line.*/\1/p' | sort -u >&2
+    exit 1
+  fi
 else
   echo "(rustfmt component unavailable; skipping)"
 fi
 
 echo "== cargo clippy -- -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
-  cargo clippy --all-targets -- -D warnings
+  if ! clippy_out=$(cargo clippy --all-targets -- -D warnings 2>&1); then
+    printf '%s\n' "$clippy_out"
+    echo "-- files with clippy findings:" >&2
+    printf '%s\n' "$clippy_out" | sed -n 's/^[[:space:]]*--> \([^:]*\):.*/\1/p' | sort -u >&2
+    exit 1
+  fi
 else
   echo "(clippy component unavailable; skipping)"
 fi
@@ -27,15 +38,24 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo test -q --test cluster_conformance =="
+# The sharded-GEMM conformance suite is the cross-layer gate for the
+# multi-device path (bit-exactness vs single-device oracles, fault
+# injection, traffic pinning) — run it by name so a Cargo.toml slip that
+# unregisters the target fails loudly instead of silently skipping it.
+cargo test -q --test cluster_conformance
+
 echo "== cargo bench --bench hotpath -- --quick =="
 cargo bench --bench hotpath -- --quick
 
 echo "== validate BENCH_hotpath.json =="
 # The quick bench must leave a parseable result file carrying the
 # kernel512 speedup-gate fields (the native compute path's regression
-# tripwire) — a bench that silently stopped writing them would otherwise
-# pass unnoticed.
-required_metrics="kernel512_speedup kernel512_naive_gflops kernel512_blocked_gflops native_threads"
+# tripwire) and the sharded-cluster fields (the multi-device path's) —
+# a bench that silently stopped writing them would otherwise pass
+# unnoticed.
+required_metrics="kernel512_speedup kernel512_naive_gflops kernel512_blocked_gflops \
+native_threads cluster_f32_512_gflops cluster_shards cluster_devices"
 if [ ! -f BENCH_hotpath.json ]; then
   echo "BENCH_hotpath.json missing after bench run" >&2
   exit 1
@@ -51,8 +71,13 @@ if missing:
     sys.exit(f"BENCH_hotpath.json missing metrics: {missing}")
 if not data.get("entries"):
     sys.exit("BENCH_hotpath.json has no bench entries")
-print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx over %d entries"
-      % (metrics["kernel512_speedup"], len(data["entries"])))
+if metrics["cluster_shards"] < 1 or metrics["cluster_devices"] < 1:
+    sys.exit("BENCH_hotpath.json cluster fields are degenerate")
+print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx, cluster %.0f shards on "
+      "%.0f devices at %.2f GF/s, over %d entries"
+      % (metrics["kernel512_speedup"], metrics["cluster_shards"],
+         metrics["cluster_devices"], metrics["cluster_f32_512_gflops"],
+         len(data["entries"])))
 PY
 else
   # No python3: fall back to a field-presence grep.
