@@ -97,6 +97,48 @@ fn main() -> Result<()> {
         batch_transfer
     );
 
+    // Cross-request reuse: many requests sharing one operand (the
+    // dominant serving shape — one weight matrix, many activations).
+    // `SharedOperand` gives B a stable identity; `submit_shared` sweeps
+    // its packed panels into the service-wide cache once, and every job
+    // in the batch ships zero B bytes.
+    let s = 192usize;
+    let shared_b = fcamm::coordinator::SharedOperand::new(HostTensor::F32(
+        rng.fill_normal_f32(s * s),
+    ));
+    let shared_jobs: Vec<GemmJob> = (0..8)
+        .map(|_| {
+            GemmJob::shared_b(
+                s,
+                s,
+                s,
+                HostTensor::F32(rng.fill_normal_f32(s * s)),
+                &shared_b,
+                Semiring::PlusTimes,
+            )
+        })
+        .collect();
+    let t2 = Instant::now();
+    let (rx, _base, shared_count) = service.submit_shared(shared_jobs)?;
+    let mut warm_hits = 0usize;
+    let mut shared_transfer = 0u64;
+    for _ in 0..shared_count {
+        let resp = rx.recv().expect("service alive")?;
+        shared_transfer += resp.transfer_elements;
+        if resp.b_panels.is_cached() {
+            warm_hits += 1;
+        }
+    }
+    let cache = service.panel_counters();
+    println!(
+        "\nshared-B batch of {shared_count} {s}³ GEMMs in {:?}: {warm_hits} cache hits, \
+         {shared_transfer} elements shipped (panel cache: {} hits / {} misses, {} B resident)",
+        t2.elapsed(),
+        cache.hits,
+        cache.misses,
+        cache.resident_bytes,
+    );
+
     // Typed requests: the same pool serves every algebra the runtime
     // instantiates (Sec. 5.2's flexibility claim as a service). An f64
     // HPC-style GEMM and a min-plus distance query ride the same queues,
@@ -133,7 +175,7 @@ fn main() -> Result<()> {
     );
 
     let done = service.stats.completed.load(std::sync::atomic::Ordering::Relaxed);
-    assert_eq!(done, n_requests as u64 + burst as u64 + 2);
+    assert_eq!(done, n_requests as u64 + burst as u64 + 8 + 2);
     service.shutdown();
     println!("\ngemm_service OK");
     Ok(())

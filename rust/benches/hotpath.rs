@@ -19,8 +19,16 @@
 //! distance product (Gops/s), asserting bit-identical results; the
 //! `kernel512_*` / `distance256_*` metrics in `BENCH_hotpath.json` are
 //! the regression tripwire for the native compute path.
+//!
+//! The serving section measures the cross-request reuse layer: a batch
+//! of GEMMs sharing one B operand run as a per-request blocking loop vs
+//! `submit_shared` over the pipelined worker pool with the panel cache.
+//! `shared_b_batch_speedup` (gated ≥1.5x at batch 8, asserted in-bench
+//! and re-checked by scripts/check.sh) and `panel_cache_hit_ratio` are
+//! the serving path's tripwires.
 
-use fcamm::coordinator::{ClusterService, GemmJob};
+use fcamm::coordinator::{ClusterService, GemmJob, GemmService, SharedOperand};
+use fcamm::runtime::HostTensor;
 use fcamm::datatype::DataType;
 use fcamm::device::catalog::vcu1525;
 use fcamm::sim::grid2d::sharded_traffic;
@@ -405,6 +413,125 @@ fn main() {
         all.push(four);
         c1.shutdown();
         c4.shutdown();
+    }
+
+    // --- Serving layer: cross-request reuse + pipelined batch ----------
+    // The dominant serving shape — many GEMMs sharing one operand — run
+    // two ways on the same 4-worker service: a per-request blocking loop
+    // (every request packs and ships B from scratch, no overlap) vs
+    // `submit_shared` (B prepacked into the panel cache once, jobs fanned
+    // out over the pipelined workers, every request hitting the cache).
+    // The ≥1.5x batch-8 speedup and the warm-vs-cold traffic drop are
+    // asserted in-bench; bit-identity between the cached and fresh paths
+    // is asserted on the full benched shape.
+    {
+        let workers = 4usize;
+        let batch = 8usize;
+        let sz = 256usize;
+        let service = GemmService::start(Runtime::default_dir(), workers).expect("service");
+        let b_f32 = rng.fill_normal_f32(sz * sz);
+        let b_shared = SharedOperand::new(HostTensor::F32(b_f32.clone()));
+        let a_mats: Vec<Vec<f32>> = (0..batch).map(|_| rng.fill_normal_f32(sz * sz)).collect();
+        let slow = Bench::slow().maybe_quick();
+
+        let seq = slow.run(&format!("serving {batch}x{sz}^3 shared-B (per-request loop)"), || {
+            let mut steps = 0usize;
+            for a in &a_mats {
+                steps += service
+                    .matmul_blocking(sz, sz, sz, a.clone(), b_f32.clone())
+                    .unwrap()
+                    .steps;
+            }
+            steps
+        });
+        let bat = slow.run(
+            &format!("serving {batch}x{sz}^3 shared-B (submit_shared batch)"),
+            || {
+                let jobs: Vec<GemmJob> = a_mats
+                    .iter()
+                    .map(|a| {
+                        GemmJob::shared_b(
+                            sz,
+                            sz,
+                            sz,
+                            HostTensor::F32(a.clone()),
+                            &b_shared,
+                            Semiring::PlusTimes,
+                        )
+                    })
+                    .collect();
+                let (rx, _base, count) = service.submit_shared(jobs).expect("submit_shared");
+                let mut steps = 0usize;
+                for _ in 0..count {
+                    steps += rx.recv().expect("service alive").expect("job succeeds").steps;
+                }
+                steps
+            },
+        );
+        let speedup = seq.median_ns / bat.median_ns;
+
+        // Bit-identity: the cached-B path reproduces the fresh-pack path.
+        let fresh = service
+            .matmul_blocking(sz, sz, sz, a_mats[0].clone(), b_f32.clone())
+            .unwrap();
+        let cached = service
+            .blocking(GemmJob::shared_b(
+                sz,
+                sz,
+                sz,
+                HostTensor::F32(a_mats[0].clone()),
+                &b_shared,
+                Semiring::PlusTimes,
+            ))
+            .unwrap();
+        assert_eq!(cached.c, fresh.c, "cached-B serving path must be bit-identical");
+
+        // Cold vs warm traffic on a fresh shared operand: the warm
+        // request must record zero B bytes.
+        let cold_op = SharedOperand::new(HostTensor::F32(b_f32.clone()));
+        let cold_job = GemmJob::shared_b(
+            sz,
+            sz,
+            sz,
+            HostTensor::F32(a_mats[0].clone()),
+            &cold_op,
+            Semiring::PlusTimes,
+        );
+        let cold = service.blocking(cold_job.clone()).unwrap();
+        let warm = service.blocking(cold_job).unwrap();
+        assert!(
+            warm.transfer_elements < cold.transfer_elements,
+            "warm shared-B request must ship strictly less ({} vs {})",
+            warm.transfer_elements,
+            cold.transfer_elements
+        );
+
+        let counters = service.panel_counters();
+        let hit_ratio = counters.hit_ratio();
+        println!(
+            "serving {batch}x{sz}^3 shared-B: per-request loop -> batched pipeline {:.2}x; \
+             transfers cold {} -> warm {} elements; panel cache {} hits / {} misses ({:.2} ratio), \
+             peak queue depth {}",
+            speedup,
+            cold.transfer_elements,
+            warm.transfer_elements,
+            counters.hits,
+            counters.misses,
+            hit_ratio,
+            service.stats.peak_queue_depth.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        assert!(
+            speedup >= 1.5,
+            "shared-B batch must be >=1.5x over the per-request loop at batch {batch} \
+             (got {speedup:.2}x)"
+        );
+        metrics.push(("shared_b_batch_speedup".to_string(), speedup));
+        metrics.push(("panel_cache_hit_ratio".to_string(), hit_ratio));
+        metrics.push(("shared_b_transfer_cold_256".to_string(), cold.transfer_elements as f64));
+        metrics.push(("shared_b_transfer_warm_256".to_string(), warm.transfer_elements as f64));
+        all.push(seq);
+        all.push(bat);
+        service.shutdown();
     }
 
     let out = std::path::Path::new("BENCH_hotpath.json");

@@ -6,7 +6,12 @@
 //! model-driven shard planner ([`crate::schedule::shard`]) into a
 //! `dr × dc × dk` device grid — the paper's PE-grid partitioning lifted
 //! to fleet scale — and each shard runs through that device's
-//! communication-avoiding [`TiledExecutor`]. Partial results of a k-split
+//! communication-avoiding [`TiledExecutor`]. Jobs whose operands carry a
+//! stable id (`SharedOperand` / `GemmJob::shared_b`) additionally cache
+//! each device's packed **sub-panels** in a per-device `PanelCache`, so
+//! a batch sharing an operand ships every device's sub-block once and
+//! then reuses it — cross-request communication avoidance at shard
+//! granularity. Partial results of a k-split
 //! are ⊕-reduced on the host in **fixed ascending-k order**
 //! ([`fold_partials`]), so non-associative semirings (f32/f64 plus-times)
 //! produce the same bits on every run; C blocks are then pasted into the
@@ -40,8 +45,12 @@ use crate::runtime::kernel::{
 };
 use crate::runtime::{HostTensor, Runtime};
 use crate::schedule::shard::{DeviceTile, Shard, ShardGrid, ShardPlan};
-use crate::schedule::{ExecMode, HostCacheProfile, TiledExecutor};
+use crate::schedule::{
+    ExecMode, HostCacheProfile, PackedPanels, PanelSide, PanelSource, TiledExecutor,
+};
+use crate::sim::grid2d::CacheCounters;
 
+use super::panel_cache::{PanelCache, PanelKey};
 use super::service::GemmJob;
 
 /// One shard's execution result: the partial C block plus the same
@@ -56,10 +65,46 @@ pub struct ShardOutput {
     pub steps: usize,
 }
 
+/// Operand bundle for one shard execution: the full tensors (shared by
+/// reference across the fan-out) plus extraction strides and the
+/// optional cross-request cache ids. Backends extract their own blocks
+/// — which is what lets a panel-cache hit skip the extraction copy
+/// entirely, not just the pack.
+#[derive(Debug, Clone)]
+pub struct ShardOperands {
+    /// Full row-major m×k A.
+    pub a: Arc<HostTensor>,
+    /// Full row-major k×n B.
+    pub b: Arc<HostTensor>,
+    /// Row stride of A (= k).
+    pub a_stride: usize,
+    /// Row stride of B (= n).
+    pub b_stride: usize,
+    /// Stable operand id for cross-request sub-panel caching of A.
+    pub a_id: Option<u64>,
+    /// Stable operand id for cross-request sub-panel caching of B.
+    pub b_id: Option<u64>,
+}
+
+impl ShardOperands {
+    /// Extract this shard's `rows × kdepth` A block.
+    pub fn a_block(&self, shard: &Shard) -> Result<HostTensor> {
+        self.a
+            .extract_block(self.a_stride, shard.row0, shard.rows, shard.k0, shard.kdepth)
+    }
+
+    /// Extract this shard's `kdepth × cols` B block.
+    pub fn b_block(&self, shard: &Shard) -> Result<HostTensor> {
+        self.b
+            .extract_block(self.b_stride, shard.k0, shard.kdepth, shard.col0, shard.cols)
+    }
+}
+
 /// The per-device execution surface the cluster drives. The production
 /// implementation is [`RuntimeBackend`] (a [`Runtime`] + per-algebra
-/// [`TiledExecutor`] cache); the fault-injection tests substitute mocks
-/// that fail or panic on chosen shard coordinates.
+/// [`TiledExecutor`] cache + a per-device [`PanelCache`] of shard
+/// sub-panels); the fault-injection tests substitute mocks that fail or
+/// panic on chosen shard coordinates.
 pub trait ShardBackend: Send + 'static {
     /// Device slot this backend serves (used in error context).
     fn device_id(&self) -> usize;
@@ -72,45 +117,104 @@ pub trait ShardBackend: Send + 'static {
         dtype: &'static str,
     ) -> Result<(usize, usize, usize)>;
 
-    /// Execute one shard: operand blocks are already carved out of the
-    /// full tensors (`a_block` is `rows × kdepth`, `b_block` is
-    /// `kdepth × cols`).
+    /// Execute one shard against the full operand tensors (the backend
+    /// extracts its own blocks; see [`ShardOperands`]).
     fn run_shard(
         &mut self,
         shard: &Shard,
         semiring: Semiring,
-        a_block: &HostTensor,
-        b_block: &HostTensor,
+        ops: &ShardOperands,
         mode: ExecMode,
     ) -> Result<ShardOutput>;
+
+    /// Sub-panel cache counters for this device (backends without a
+    /// cache report zeros).
+    fn panel_counters(&self) -> CacheCounters {
+        CacheCounters::default()
+    }
 }
 
 /// Production backend: one independent [`Runtime`] with a lazy
 /// per-`(semiring, dtype)` executor cache, artifact choice governed by
 /// this device's [`HostCacheProfile`] (heterogeneous fleets get
-/// per-device tile shapes, which the planner's cost model sees).
+/// per-device tile shapes, which the planner's cost model sees), plus a
+/// per-device [`PanelCache`] (budget
+/// `profile.panel_cache_bytes`) holding this device's **shard
+/// sub-panels**: a batch of jobs sharing an operand re-ships each
+/// device's sub-block only on its first use.
 pub struct RuntimeBackend {
     device: usize,
     rt: Runtime,
     profile: HostCacheProfile,
-    cache: HashMap<(Semiring, &'static str), TiledExecutor>,
+    cache: HashMap<(Semiring, &'static str), Arc<TiledExecutor>>,
+    panels: PanelCache,
 }
 
 impl RuntimeBackend {
     pub fn new(device: usize, rt: Runtime, profile: HostCacheProfile) -> RuntimeBackend {
-        RuntimeBackend { device, rt, profile, cache: HashMap::new() }
+        let panels = PanelCache::new(profile.panel_cache_bytes);
+        RuntimeBackend { device, rt, profile, cache: HashMap::new(), panels }
     }
 
-    fn executor(&mut self, semiring: Semiring, dtype: &'static str) -> Result<&TiledExecutor> {
+    fn executor(&mut self, semiring: Semiring, dtype: &'static str) -> Result<Arc<TiledExecutor>> {
         use std::collections::hash_map::Entry;
         match self.cache.entry((semiring, dtype)) {
-            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Occupied(e) => Ok(e.get().clone()),
             Entry::Vacant(v) => {
                 let exec =
                     TiledExecutor::for_algebra_with(&self.rt, semiring, dtype, &self.profile)
                         .with_context(|| format!("building {semiring}/{dtype} executor"))?;
-                Ok(v.insert(exec))
+                Ok(v.insert(Arc::new(exec)).clone())
             }
+        }
+    }
+}
+
+/// Resolve one shard operand to packed sub-panels: cache-aware for
+/// identified operands (keyed on operand id + the shard's block region —
+/// distinct shards of one operand cache independently), fresh otherwise.
+/// Returns the panels and the elements shipped (the packed set for a
+/// fresh pack, **zero** for a cache hit — which also skips the block
+/// extraction copy entirely).
+fn shard_panels(
+    panels: &mut PanelCache,
+    exec: &TiledExecutor,
+    side: PanelSide,
+    operand_id: Option<u64>,
+    tensor: &HostTensor,
+    stride: usize,
+    region: (usize, usize, usize, usize),
+) -> Result<(Arc<PackedPanels>, u64)> {
+    let (r0, rows, c0, cols) = region;
+    let pack = || -> Result<PackedPanels> {
+        let block = tensor.extract_block(stride, r0, rows, c0, cols)?;
+        match side {
+            PanelSide::A => exec.pack_a_tensor(&block, rows, cols),
+            PanelSide::B => exec.pack_b_tensor(&block, rows, cols),
+        }
+    };
+    match operand_id {
+        None => {
+            let p = Arc::new(pack()?);
+            let shipped = p.elements();
+            Ok((p, shipped))
+        }
+        Some(operand) => {
+            // The key pins the full-operand shape, not just the region:
+            // one id run under two stride interpretations must miss, not
+            // silently reuse the other shape's panels.
+            let key = PanelKey {
+                operand,
+                side,
+                semiring: exec.semiring(),
+                dtype: tensor.dtype_name(),
+                tile: exec.tile_shape(),
+                operand_dims: (tensor.len() / stride.max(1), stride),
+                region,
+            };
+            let (p, src) = panels.get_or_pack(key, pack)?;
+            let shipped = if src == PanelSource::Fresh { p.elements() } else { 0 };
+            Ok((p, shipped))
         }
     }
 }
@@ -132,26 +236,62 @@ impl ShardBackend for RuntimeBackend {
         &mut self,
         shard: &Shard,
         semiring: Semiring,
-        a_block: &HostTensor,
-        b_block: &HostTensor,
+        ops: &ShardOperands,
         mode: ExecMode,
     ) -> Result<ShardOutput> {
-        let dtype = a_block.dtype_name();
+        let dtype = ops.a.dtype_name();
         let exec = self.executor(semiring, dtype)?;
-        let run = exec.run_tensor_with(
-            a_block,
-            b_block,
-            shard.rows,
-            shard.cols,
-            shard.kdepth,
-            shard.plan.order,
-            mode,
+        // Anonymous operands (and round-trip mode, which re-ships by
+        // definition and has no packed analogue) run the fused path —
+        // identical semantics and accounting to the pre-cache layer.
+        if mode == ExecMode::Roundtrip || (ops.a_id.is_none() && ops.b_id.is_none()) {
+            let a_block = ops.a_block(shard)?;
+            let b_block = ops.b_block(shard)?;
+            let run = exec.run_tensor_with(
+                &a_block,
+                &b_block,
+                shard.rows,
+                shard.cols,
+                shard.kdepth,
+                shard.plan.order,
+                mode,
+            )?;
+            return Ok(ShardOutput {
+                c: run.c,
+                transfer_elements: run.transfer_elements,
+                steps: run.steps_executed,
+            });
+        }
+        // Packed path: this device's sub-panels of each operand, cached
+        // across requests under (operand id, block region).
+        let (a_panels, a_shipped) = shard_panels(
+            &mut self.panels,
+            &exec,
+            PanelSide::A,
+            ops.a_id,
+            &ops.a,
+            ops.a_stride,
+            (shard.row0, shard.rows, shard.k0, shard.kdepth),
         )?;
+        let (b_panels, b_shipped) = shard_panels(
+            &mut self.panels,
+            &exec,
+            PanelSide::B,
+            ops.b_id,
+            &ops.b,
+            ops.b_stride,
+            (shard.k0, shard.kdepth, shard.col0, shard.cols),
+        )?;
+        let run = exec.run_packed_tensor(&a_panels, &b_panels, shard.plan.order)?;
         Ok(ShardOutput {
             c: run.c,
-            transfer_elements: run.transfer_elements,
+            transfer_elements: run.transfer_elements + a_shipped + b_shipped,
             steps: run.steps_executed,
         })
+    }
+
+    fn panel_counters(&self) -> CacheCounters {
+        self.panels.counters()
     }
 }
 
@@ -217,11 +357,7 @@ struct ShardTask {
     shard: Shard,
     semiring: Semiring,
     mode: ExecMode,
-    /// Full-problem strides for operand extraction.
-    a_stride: usize,
-    b_stride: usize,
-    a: Arc<HostTensor>,
-    b: Arc<HostTensor>,
+    ops: ShardOperands,
     reply: mpsc::Sender<(usize, Result<ShardOutput>)>,
 }
 
@@ -232,6 +368,9 @@ enum DeviceMsg {
         reply: mpsc::Sender<Result<(usize, usize, usize)>>,
     },
     Shard(Box<ShardTask>),
+    PanelCounters {
+        reply: mpsc::Sender<CacheCounters>,
+    },
     Shutdown,
 }
 
@@ -266,17 +405,10 @@ fn worker_loop(mut backend: Box<dyn ShardBackend>, rx: mpsc::Receiver<DeviceMsg>
                 let _ = reply.send(result);
             }
             Ok(DeviceMsg::Shard(task)) => {
-                let ShardTask { index, shard, semiring, mode, a_stride, b_stride, a, b, reply } =
-                    *task;
+                let ShardTask { index, shard, semiring, mode, ops, reply } = *task;
                 let result = (|| -> Result<ShardOutput> {
-                    let a_block = a.extract_block(
-                        a_stride, shard.row0, shard.rows, shard.k0, shard.kdepth,
-                    )?;
-                    let b_block = b.extract_block(
-                        b_stride, shard.k0, shard.kdepth, shard.col0, shard.cols,
-                    )?;
                     match catch_unwind(AssertUnwindSafe(|| {
-                        backend.run_shard(&shard, semiring, &a_block, &b_block, mode)
+                        backend.run_shard(&shard, semiring, &ops, mode)
                     })) {
                         Ok(r) => r,
                         Err(payload) => Err(anyhow!(
@@ -292,6 +424,9 @@ fn worker_loop(mut backend: Box<dyn ShardBackend>, rx: mpsc::Receiver<DeviceMsg>
                     )
                 });
                 let _ = reply.send((index, result));
+            }
+            Ok(DeviceMsg::PanelCounters { reply }) => {
+                let _ = reply.send(backend.panel_counters());
             }
             Ok(DeviceMsg::Shutdown) | Err(_) => break,
         }
@@ -416,6 +551,28 @@ impl ClusterService {
         Ok(tiles)
     }
 
+    /// Per-device sub-panel cache counters (devices without a cache —
+    /// e.g. test mocks — report zeros). A batch of jobs built from one
+    /// [`crate::coordinator::SharedOperand`] shows one miss per device
+    /// sub-block on the first run and pure hits afterwards.
+    pub fn panel_counters(&self) -> Result<Vec<CacheCounters>> {
+        let mut pending = Vec::with_capacity(self.devices.len());
+        for device in 0..self.devices.len() {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.send(device, DeviceMsg::PanelCounters { reply: reply_tx })?;
+            pending.push(reply_rx);
+        }
+        let mut counters = Vec::with_capacity(pending.len());
+        for (device, reply_rx) in pending.into_iter().enumerate() {
+            counters.push(
+                reply_rx
+                    .recv()
+                    .map_err(|_| anyhow!("device {device} worker died during counter query"))?,
+            );
+        }
+        Ok(counters)
+    }
+
     /// Model-driven decomposition of an `m×n×k` problem for this fleet
     /// and algebra (no execution).
     pub fn plan(
@@ -487,9 +644,10 @@ impl ClusterService {
         let t0 = Instant::now();
         let (m, n, k) = (job.m, job.n, job.k);
 
-        // Fan out: one task per shard, one shard per device worker.
-        let a = Arc::new(job.a.clone());
-        let b = Arc::new(job.b.clone());
+        // Fan out: one task per shard, one shard per device worker. The
+        // operands are Arc-shared — no per-run copy of A or B.
+        let a = job.a.clone();
+        let b = job.b.clone();
         let (reply_tx, reply_rx) = mpsc::channel::<(usize, Result<ShardOutput>)>();
         for (index, shard) in plan.shards.iter().enumerate() {
             self.send(
@@ -499,10 +657,14 @@ impl ClusterService {
                     shard: shard.clone(),
                     semiring: job.semiring,
                     mode,
-                    a_stride: k,
-                    b_stride: n,
-                    a: a.clone(),
-                    b: b.clone(),
+                    ops: ShardOperands {
+                        a: a.clone(),
+                        b: b.clone(),
+                        a_stride: k,
+                        b_stride: n,
+                        a_id: job.a_id,
+                        b_id: job.b_id,
+                    },
                     reply: reply_tx.clone(),
                 })),
             )

@@ -12,7 +12,15 @@
 //!   CLI both print through here).
 //! * [`service`] — a multi-threaded GEMM service over the PJRT runtime:
 //!   the "MMM as a component of larger applications" deployment mode the
-//!   paper's introduction motivates (bandwidth-conserving matmul offload).
+//!   paper's introduction motivates (bandwidth-conserving matmul
+//!   offload). Each worker is a pack → compute → reduce pipeline over
+//!   bounded channels, so consecutive requests overlap stages the way
+//!   the paper's double-buffered memory tiles overlap I/O and compute.
+//! * [`panel_cache`] — the cross-request reuse layer: packed operand
+//!   panels kept resident between requests under a byte budget
+//!   (LRU, carved out of the host cache profile), so shared operands
+//!   pack once and multiply many; hit/miss/eviction counters are pinned
+//!   against an independent `sim::grid2d::replay_lru` simulation.
 //! * [`cluster`] — the scale-out axis: one GEMM sharded over a grid of
 //!   independent runtime instances by the model-driven planner in
 //!   [`crate::schedule::shard`], with a deterministic ascending-k
@@ -23,6 +31,7 @@
 pub mod build;
 pub mod cluster;
 pub mod instance;
+pub mod panel_cache;
 pub mod report;
 pub mod routing;
 pub mod service;
@@ -30,4 +39,8 @@ pub mod service;
 pub use build::{build_kernel, BuildOutcome, BuildReport};
 pub use cluster::{ClusterRun, ClusterService, RuntimeBackend, ShardBackend, ShardedGemm};
 pub use instance::KernelInstance;
-pub use service::{GemmJob, GemmRequest, GemmResponse, GemmService};
+pub use panel_cache::{PanelCache, PanelKey};
+pub use service::{
+    BatchSubmission, GemmJob, GemmRequest, GemmResponse, GemmService, ServiceConfig,
+    SharedOperand,
+};

@@ -1,0 +1,254 @@
+//! Cross-request packed-panel cache: the Eq. 6 reuse argument applied
+//! *between* GEMM requests.
+//!
+//! Every layer below re-packs its operands from scratch per run; when a
+//! serving workload shares an operand across many requests (the dominant
+//! shape of inference- and graph-style traffic), that re-pack — and the
+//! host↔device ship it stands for — is paid N times. The [`PanelCache`]
+//! keeps [`PackedPanels`] sets resident between requests under a byte
+//! budget carved out of the host cache profile
+//! (`HostCacheProfile::panel_cache_bytes`), so a request whose operand
+//! is already packed ships **zero** bytes for it — the cached-operand
+//! term of `order::host_traffic_packed`.
+//!
+//! Policy: exact LRU under a byte budget. An access to a resident key is
+//! a hit and refreshes recency; a miss packs and inserts, evicting
+//! least-recently-used entries until the new set fits; a panel set
+//! larger than the entire budget is returned to the caller but never
+//! cached (oversize bypass). Hit/miss/eviction counters are exported as
+//! [`CacheCounters`] and must match `sim::grid2d::replay_lru` over the
+//! same access trace exactly — the panel-cache test suite pins it.
+//!
+//! Keys carry everything that makes packed bytes reusable: a
+//! caller-assigned **operand id** (see `coordinator::SharedOperand`),
+//! the operand side, the algebra, the packing tile shape, and the
+//! sub-region of the operand the panels cover (the cluster layer caches
+//! per-shard sub-panels of the same operand under distinct regions).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::datatype::Semiring;
+use crate::schedule::{PackedPanels, PanelSide, PanelSource};
+use crate::sim::grid2d::CacheCounters;
+
+/// Identity of one cached panel set.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PanelKey {
+    /// Caller-assigned stable operand id (`SharedOperand::id`).
+    pub operand: u64,
+    pub side: PanelSide,
+    pub semiring: Semiring,
+    pub dtype: &'static str,
+    /// `(tile_m, tile_n, tile_k)` of the packing executor — different
+    /// artifacts pack incompatible layouts.
+    pub tile: (usize, usize, usize),
+    /// Logical `(rows, cols)` of the **full** operand matrix the region
+    /// indexes into. An operand id names bytes, not a shape: the same
+    /// buffer run under two shape interpretations (different strides)
+    /// must not collide on a shared sub-region, so the key pins the
+    /// interpretation too.
+    pub operand_dims: (usize, usize),
+    /// Sub-block of the operand the panels cover, `(row0, rows, col0,
+    /// cols)` in operand coordinates; a full-matrix pack uses
+    /// `(0, rows, 0, cols)`.
+    pub region: (usize, usize, usize, usize),
+}
+
+struct CacheEntry {
+    panels: Arc<PackedPanels>,
+    bytes: u64,
+    last_use: u64,
+}
+
+/// Byte-budgeted LRU cache of packed panel sets.
+pub struct PanelCache {
+    budget_bytes: u64,
+    resident_bytes: u64,
+    tick: u64,
+    map: HashMap<PanelKey, CacheEntry>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PanelCache {
+    pub fn new(budget_bytes: u64) -> PanelCache {
+        PanelCache {
+            budget_bytes,
+            resident_bytes: 0,
+            tick: 0,
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Look a panel set up, counting a hit (and refreshing recency) or a
+    /// miss.
+    pub fn get(&mut self, key: &PanelKey) -> Option<Arc<PackedPanels>> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(entry) => {
+                entry.last_use = self.tick;
+                self.hits += 1;
+                Some(entry.panels.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly packed set, evicting LRU entries until it fits.
+    /// A set larger than the whole budget is silently not cached (the
+    /// caller still owns its `Arc`), matching the replay's oversize
+    /// bypass.
+    pub fn insert(&mut self, key: PanelKey, panels: Arc<PackedPanels>) {
+        let bytes = panels.bytes();
+        if bytes > self.budget_bytes {
+            return;
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.resident_bytes -= old.bytes;
+        }
+        while self.resident_bytes + bytes > self.budget_bytes {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| k.clone())
+                .expect("resident bytes imply resident entries");
+            let evicted = self.map.remove(&victim).expect("victim resident");
+            self.resident_bytes -= evicted.bytes;
+            self.evictions += 1;
+        }
+        self.tick += 1;
+        self.map.insert(key, CacheEntry { panels, bytes, last_use: self.tick });
+        self.resident_bytes += bytes;
+    }
+
+    /// The serving hot path: hit returns the resident set
+    /// ([`PanelSource::Cached`] — zero bytes ship); miss runs `pack`,
+    /// caches the result, and reports [`PanelSource::Fresh`] so the
+    /// caller charges the full packed volume exactly once.
+    pub fn get_or_pack(
+        &mut self,
+        key: PanelKey,
+        pack: impl FnOnce() -> Result<PackedPanels>,
+    ) -> Result<(Arc<PackedPanels>, PanelSource)> {
+        if let Some(panels) = self.get(&key) {
+            return Ok((panels, PanelSource::Cached));
+        }
+        let panels = Arc::new(pack()?);
+        self.insert(key, panels.clone());
+        Ok((panels, PanelSource::Fresh))
+    }
+
+    /// Counter snapshot — comparable field-for-field with
+    /// `sim::grid2d::replay_lru` over the same access trace.
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            resident_bytes: self.resident_bytes,
+            resident_entries: self.map.len() as u64,
+        }
+    }
+
+    /// Resident keys, least-recently-used first — i.e. the order the
+    /// cache would evict them in. Test hook for the eviction-order
+    /// invariant.
+    pub fn lru_keys(&self) -> Vec<PanelKey> {
+        let mut keys: Vec<(&PanelKey, u64)> =
+            self.map.iter().map(|(k, e)| (k, e.last_use)).collect();
+        keys.sort_by_key(|&(_, last_use)| last_use);
+        keys.into_iter().map(|(k, _)| k.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::schedule::{HostCacheProfile, TiledExecutor};
+
+    fn panels(cols: usize) -> PackedPanels {
+        // 16³-tile f32 B panels of `cols.div_ceil(16)` slab columns:
+        // bytes = ceil(16/16)·ceil(cols/16)·16·16·4.
+        let rt = Runtime::native_default().unwrap();
+        let exec = TiledExecutor::for_algebra_with(
+            &rt,
+            Semiring::PlusTimes,
+            "float32",
+            &HostCacheProfile::with_capacity(16 * 1024),
+        )
+        .unwrap();
+        exec.pack_b_tensor(&crate::runtime::HostTensor::F32(vec![0.0; 16 * cols]), 16, cols)
+            .unwrap()
+    }
+
+    fn key(operand: u64, cols: usize) -> PanelKey {
+        PanelKey {
+            operand,
+            side: PanelSide::B,
+            semiring: Semiring::PlusTimes,
+            dtype: "float32",
+            tile: (16, 16, 16),
+            operand_dims: (16, cols),
+            region: (0, 16, 0, cols),
+        }
+    }
+
+    #[test]
+    fn lru_eviction_order_and_budget_are_enforced() {
+        let one_slab = panels(16).bytes(); // 16·16·4 = 1024
+        assert_eq!(one_slab, 1024);
+        let mut cache = PanelCache::new(2 * one_slab);
+        let (_, s1) = cache.get_or_pack(key(1, 16), || Ok(panels(16))).unwrap();
+        let (_, s2) = cache.get_or_pack(key(2, 16), || Ok(panels(16))).unwrap();
+        assert_eq!((s1, s2), (PanelSource::Fresh, PanelSource::Fresh));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(cache.get(&key(1, 16)).is_some());
+        assert_eq!(cache.lru_keys(), vec![key(2, 16), key(1, 16)]);
+        // Inserting 3 evicts exactly 2.
+        let (_, s3) = cache.get_or_pack(key(3, 16), || Ok(panels(16))).unwrap();
+        assert_eq!(s3, PanelSource::Fresh);
+        let c = cache.counters();
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.resident_entries, 2);
+        assert!(c.resident_bytes <= cache.budget_bytes());
+        assert!(cache.get(&key(2, 16)).is_none(), "2 was evicted");
+        assert!(cache.get(&key(1, 16)).is_some(), "1 survived");
+        // An entry wider than the whole budget is served but not cached.
+        let (big, s_big) = cache.get_or_pack(key(9, 64), || Ok(panels(64))).unwrap();
+        assert_eq!(s_big, PanelSource::Fresh);
+        assert!(big.bytes() > cache.budget_bytes());
+        assert_eq!(cache.counters().resident_entries, 2, "oversize bypassed");
+        assert!(cache.get(&key(9, 64)).is_none());
+    }
+
+    #[test]
+    fn counters_match_the_sim_replay_on_a_mixed_trace() {
+        use crate::sim::grid2d::replay_lru;
+        let budget = 3 * 1024;
+        let mut cache = PanelCache::new(budget);
+        let trace: Vec<(u64, usize)> =
+            vec![(1, 16), (2, 16), (1, 16), (3, 32), (2, 16), (1, 16), (4, 64), (3, 32)];
+        let mut accesses = Vec::new();
+        for &(op, cols) in &trace {
+            let (p, _) = cache.get_or_pack(key(op, cols), || Ok(panels(cols))).unwrap();
+            accesses.push((key(op, cols), p.bytes()));
+        }
+        assert_eq!(cache.counters(), replay_lru(budget, &accesses));
+    }
+}

@@ -3,7 +3,7 @@
 //! "MMM is typically used as a component of larger applications, where it
 //! co-exists with … memory bound operations, which benefit from a larger
 //! share of the bandwidth" (Sec. 1). This service is that component: a
-//! multi-worker request loop in front of the runtime, executing GEMMs
+//! multi-worker request pipeline in front of the runtime, executing GEMMs
 //! through the communication-avoiding tiled schedule, with per-request
 //! latency and aggregate throughput accounting.
 //!
@@ -17,29 +17,56 @@
 //! lazily and caches it, mirroring one compiled kernel instance per
 //! algebra per hardware partition.
 //!
-//! Dispatch design: each worker owns a **private queue** (the seed's
-//! single shared `Mutex<Receiver>` serialized every dispatch behind one
-//! lock — the host-side equivalent of all kernel instances sharing one
-//! DDR port). The submitter picks the least-loaded worker (ties broken
-//! round-robin) by pending *bytes of multiply-add work* — madds scaled
-//! by element width, so a burst of f64 jobs does not overload one queue
-//! the way madd-count weighting would. [`GemmService::submit_batch`]
-//! enqueues a burst of small GEMMs with one channel round-trip per
-//! worker instead of one per request.
+//! **Staged pipeline** (this module's communication-avoiding move,
+//! generalizing the executor's intra-GEMM double buffering to
+//! *inter-request* overlap): each worker is three threads connected by
+//! bounded channels —
+//!
+//! * **pack** — validates the request, resolves the executor, and turns
+//!   both operands into first-class [`PackedPanels`] sets. Operands
+//!   carrying a stable id ([`SharedOperand`], [`GemmJob::shared_b`]) go
+//!   through the service-wide [`PanelCache`]: a hit reuses the resident
+//!   panels and ships **zero** operand bytes — the paper's Eq. 6 reuse
+//!   applied across requests.
+//! * **compute** — drives `run_packed_steps` over the panels, streaming
+//!   each partial C tile onward as it is produced.
+//! * **reduce** — ⊕-folds tiles into the host-resident accumulator (the
+//!   same fold, in the same order, as the fused path — bit-identity is
+//!   pinned by tests) and completes the response.
+//!
+//! While request N's tiles are still folding, N+1 is in the kernel and
+//! N+2 is packing — the pipelined stage overlap the HLS-transformations
+//! literature applies inside a kernel, lifted to the serving layer.
+//!
+//! **Bounded queues**: every worker's inbound queue is a
+//! `sync_channel` of [`ServiceConfig::queue_capacity`] messages, so a
+//! sustained overload **blocks** `submit` (backpressure) instead of
+//! growing host memory without limit; live queue depths are surfaced via
+//! [`GemmService::queue_depths`] and the high-water mark in
+//! [`ServiceStats::peak_queue_depth`].
+//!
+//! Dispatch design: each worker owns a private queue; the submitter
+//! picks the least-loaded worker (ties broken round-robin) by pending
+//! *bytes of multiply-add work*. [`GemmService::submit_batch`] enqueues
+//! a burst with one channel round-trip per worker;
+//! [`GemmService::submit_shared`] additionally sweeps a shared B operand
+//! into the panel cache **once** before the fan-out, so every job in the
+//! batch — on any worker — hits.
 //!
 //! Built on std threads + channels (the offline environment provides no
-//! tokio; a thread-per-worker pool is also the more faithful analogue of
+//! tokio; a thread-per-stage pool is also the more faithful analogue of
 //! fixed hardware kernel instances on an FPGA). PJRT client handles are
-//! not `Send`, so each worker owns a *private* runtime — mirroring one
-//! compiled kernel instance per hardware partition. Without generated
-//! artifacts the workers fall back to the native host-reference runtime,
-//! so the service runs end-to-end in any environment. Native workers
-//! compute through the blocked microkernel engine (`runtime::kernel`),
-//! whose auto thread policy keeps tile-sized calls single-threaded —
-//! worker-level parallelism is the scaling axis here, not nested kernel
-//! threads.
+//! not `Send`, so each worker owns a *private* runtime; the pipeline
+//! additionally shares each compiled executor across its own stages via
+//! `Arc`, which the native backend's kernel handles support. Without
+//! generated artifacts the workers fall back to the native
+//! host-reference runtime, so the service runs end-to-end in any
+//! environment. Native workers compute through the blocked microkernel
+//! engine (`runtime::kernel`), whose auto thread policy keeps tile-sized
+//! calls single-threaded — worker-level parallelism is the scaling axis
+//! here, not nested kernel threads.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -48,21 +75,71 @@ use std::time::{Duration, Instant};
 
 use crate::datatype::Semiring;
 use crate::runtime::{HostTensor, Runtime};
-use crate::schedule::TiledExecutor;
+use crate::schedule::executor::{fold_tile, identity_tensor};
+use crate::schedule::{
+    Order, PackedPanels, PanelSide, PanelSource, Step, TiledExecutor, TilePlan,
+};
+use crate::sim::grid2d::CacheCounters;
+
+use super::panel_cache::{PanelCache, PanelKey};
+
+/// Process-wide operand id source: ids must be unique per cache key
+/// space, and caches can outlive any one service, so ids are global.
+static NEXT_OPERAND_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A host operand registered for cross-request reuse: a process-unique
+/// id plus the shared tensor. Jobs built from the same `SharedOperand`
+/// (clones included — cloning aliases, it does not re-register) carry
+/// the same id, which is what lets the panel cache recognize the operand
+/// across requests, workers, and batches.
+#[derive(Debug, Clone)]
+pub struct SharedOperand {
+    id: u64,
+    tensor: Arc<HostTensor>,
+}
+
+impl SharedOperand {
+    pub fn new(tensor: HostTensor) -> SharedOperand {
+        SharedOperand {
+            id: NEXT_OPERAND_ID.fetch_add(1, Ordering::Relaxed),
+            tensor: Arc::new(tensor),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn tensor(&self) -> &HostTensor {
+        &self.tensor
+    }
+}
 
 /// One typed job, before it is assigned an id: the unit
 /// [`GemmService::submit_typed`] and [`GemmService::submit_batch`] take.
+/// Operands are `Arc`-shared so a batch over one [`SharedOperand`] holds
+/// a single B buffer, and the cluster layer fans tensors out without
+/// copying.
 #[derive(Debug, Clone)]
 pub struct GemmJob {
     pub m: usize,
     pub n: usize,
     pub k: usize,
     /// Row-major m×k.
-    pub a: HostTensor,
+    pub a: Arc<HostTensor>,
     /// Row-major k×n.
-    pub b: HostTensor,
+    pub b: Arc<HostTensor>,
     /// The (⊕, ⊗) algebra to evaluate.
     pub semiring: Semiring,
+    /// Stable id for cross-request panel caching of A (`None` → the
+    /// operand is request-private and packs fresh). Crate-private so an
+    /// id can only enter alongside its [`SharedOperand`]'s own tensor
+    /// (via [`GemmJob::shared_a`]) — the cache's "same id ⇒ same bytes"
+    /// invariant is enforced by construction.
+    pub(crate) a_id: Option<u64>,
+    /// Stable id for cross-request panel caching of B (see
+    /// [`GemmJob::shared_b`]).
+    pub(crate) b_id: Option<u64>,
 }
 
 impl GemmJob {
@@ -74,7 +151,16 @@ impl GemmJob {
         b: HostTensor,
         semiring: Semiring,
     ) -> GemmJob {
-        GemmJob { m, n, k, a, b, semiring }
+        GemmJob {
+            m,
+            n,
+            k,
+            a: Arc::new(a),
+            b: Arc::new(b),
+            semiring,
+            a_id: None,
+            b_id: None,
+        }
     }
 
     /// The classic deployment: f32 plus-times matmul.
@@ -85,6 +171,61 @@ impl GemmJob {
     /// Min-plus distance product over f32 (APSP-style workloads).
     pub fn min_plus(m: usize, n: usize, k: usize, a: Vec<f32>, b: Vec<f32>) -> GemmJob {
         Self::new(m, n, k, HostTensor::F32(a), HostTensor::F32(b), Semiring::MinPlus)
+    }
+
+    /// A job whose B operand is shared across requests: B's packed
+    /// panels are cached under the operand's id, so every request after
+    /// the first ships zero B bytes (until eviction). The dominant
+    /// serving shape — one weight/adjacency matrix, many activations.
+    pub fn shared_b(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: HostTensor,
+        b: &SharedOperand,
+        semiring: Semiring,
+    ) -> GemmJob {
+        GemmJob {
+            m,
+            n,
+            k,
+            a: Arc::new(a),
+            b: b.tensor.clone(),
+            semiring,
+            a_id: None,
+            b_id: Some(b.id),
+        }
+    }
+
+    /// The transpose deployment: a shared A swept by per-request Bs.
+    pub fn shared_a(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &SharedOperand,
+        b: HostTensor,
+        semiring: Semiring,
+    ) -> GemmJob {
+        GemmJob {
+            m,
+            n,
+            k,
+            a: a.tensor.clone(),
+            b: Arc::new(b),
+            semiring,
+            a_id: Some(a.id),
+            b_id: None,
+        }
+    }
+
+    /// Stable cache id of A, if shared (set by [`GemmJob::shared_a`]).
+    pub fn a_id(&self) -> Option<u64> {
+        self.a_id
+    }
+
+    /// Stable cache id of B, if shared (set by [`GemmJob::shared_b`]).
+    pub fn b_id(&self) -> Option<u64> {
+        self.b_id
     }
 
     /// Dispatch weight: pending *bytes of multiply-add work*, so neither
@@ -103,10 +244,14 @@ pub struct GemmRequest {
     pub n: usize,
     pub k: usize,
     /// Row-major m×k.
-    pub a: HostTensor,
+    pub a: Arc<HostTensor>,
     /// Row-major k×n.
-    pub b: HostTensor,
+    pub b: Arc<HostTensor>,
     pub semiring: Semiring,
+    /// Cache ids, carried over from the job (see [`GemmJob`] — only
+    /// [`SharedOperand`]-built jobs set them).
+    pub(crate) a_id: Option<u64>,
+    pub(crate) b_id: Option<u64>,
 }
 
 /// Completed job.
@@ -118,15 +263,40 @@ pub struct GemmResponse {
     pub latency: Duration,
     /// Artifact invocations performed for this request.
     pub steps: usize,
-    /// Elements shipped across the host↔device boundary (measured).
+    /// Elements shipped across the host↔device boundary (measured):
+    /// C traffic plus each operand's packed panel set **iff it was
+    /// packed fresh for this request** — a panel-cache hit records zero
+    /// operand bytes, keeping `measured == plan == sim` pinned
+    /// (`TilePlan::transfer_elements_packed`).
     pub transfer_elements: u64,
     /// Worker that served the request.
     pub worker: usize,
+    /// Where A's packed panels came from (`Cached` ⇒ zero A bytes).
+    pub a_panels: PanelSource,
+    /// Where B's packed panels came from.
+    pub b_panels: PanelSource,
+}
+
+/// A prepack instruction: pack one shared operand's panels into the
+/// cache (or confirm they are resident) without running a GEMM.
+struct PrepackJob {
+    operand: u64,
+    tensor: Arc<HostTensor>,
+    side: PanelSide,
+    /// Operand dims: A → (m, k); B → (k, n).
+    rows: usize,
+    cols: usize,
+    semiring: Semiring,
+    /// Dispatch weight charged at enqueue; the worker's pack stage
+    /// releases it once the prepack completes.
+    weight: u64,
+    reply: mpsc::Sender<Result<PanelSource>>,
 }
 
 enum Job {
     Run(GemmRequest, mpsc::Sender<Result<GemmResponse>>),
     Batch(Vec<GemmRequest>, mpsc::Sender<Result<GemmResponse>>),
+    Prepack(Box<PrepackJob>),
     Shutdown,
 }
 
@@ -137,7 +307,11 @@ pub struct ServiceStats {
     pub failed: AtomicU64,
     pub total_steps: AtomicU64,
     pub total_madds: AtomicU64,
+    /// Host↔device elements across all requests **and** prepacks —
+    /// cache hits contribute zero operand bytes by construction.
     pub total_transfer_elements: AtomicU64,
+    /// High-water mark of any worker's inbound queue depth (requests).
+    pub peak_queue_depth: AtomicU64,
 }
 
 /// Dispatch weight of one request: madds scaled by element width
@@ -149,126 +323,496 @@ fn work_units(m: usize, n: usize, k: usize, elem_bytes: u64) -> u64 {
         .max(1)
 }
 
+/// Service tuning: queue bounds and the cache profile the workers build
+/// executors (and the panel cache budget) from.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Per-worker inbound queue bound, in messages (a batch share counts
+    /// as one message). A full queue **blocks** the submitter — the
+    /// backpressure that keeps sustained overload from growing host
+    /// memory without limit.
+    pub queue_capacity: usize,
+    /// Requests in flight between a worker's pack and compute stages
+    /// (the inter-request analogue of the executor's double buffering).
+    pub pipeline_depth: usize,
+    /// Host cache profile: `capacity_bytes` sizes executor tiles,
+    /// `panel_cache_bytes` bounds the shared cross-request panel cache.
+    pub profile: crate::schedule::HostCacheProfile,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            queue_capacity: 64,
+            pipeline_depth: 2,
+            profile: crate::schedule::HostCacheProfile::default(),
+        }
+    }
+}
+
+/// Bound of the compute→reduce tile channel: a few tiles of slack keeps
+/// the kernel from stalling on the fold without letting tiles pile up.
+const REDUCE_CHANNEL_DEPTH: usize = 8;
+
+/// Reply stream of a batch submission: one response per job in
+/// completion order, plus the base request id and the job count.
+pub type BatchSubmission = (mpsc::Receiver<Result<GemmResponse>>, u64, usize);
+
 struct WorkerHandle {
-    /// Private queue into this worker. `Mutex` only guards concurrent
-    /// submitters hitting the *same* worker; workers never contend.
-    tx: Mutex<mpsc::Sender<Job>>,
+    /// Private bounded queue into this worker. `Mutex` only guards
+    /// concurrent submitters hitting the *same* worker; workers never
+    /// contend. A full queue blocks the submitter (backpressure).
+    tx: Mutex<mpsc::SyncSender<Job>>,
     /// Work units (width-scaled madds) submitted but not yet completed
     /// on this worker.
     pending: Arc<AtomicU64>,
+    /// Requests currently waiting in the inbound queue.
+    queued: Arc<AtomicUsize>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
-/// A pool of workers, each owning a private runtime over the same
-/// artifacts directory (or the native fallback) and a private job queue.
+/// A pool of pipelined workers, each owning a private runtime over the
+/// same artifacts directory (or the native fallback) and a private
+/// bounded job queue, all sharing one cross-request panel cache.
 pub struct GemmService {
     workers: Vec<WorkerHandle>,
     /// Rotation cursor for tie-breaking among equally loaded workers.
     rr: AtomicUsize,
     pub stats: Arc<ServiceStats>,
+    panel_cache: Arc<Mutex<PanelCache>>,
+    queue_capacity: usize,
     next_id: AtomicU64,
 }
 
 /// Per-worker executor inventory: one [`TiledExecutor`] per
 /// `(semiring, dtype)` pair actually requested, resolved lazily from the
-/// worker's private runtime. Keys use the `&'static` dtype names
+/// worker's private runtime and shared with the worker's compute stage
+/// via `Arc`. Keys use the `&'static` dtype names
 /// `HostTensor::dtype_name` hands out, so the steady-state cache-hit
 /// path allocates nothing. (Keying by `DataType` instead would collide
 /// `int32` with `uint32` — the model layer deliberately folds signed
 /// aliases to their width.)
 struct ExecutorCache {
     rt: Runtime,
-    map: HashMap<(Semiring, &'static str), TiledExecutor>,
+    profile: crate::schedule::HostCacheProfile,
+    map: HashMap<(Semiring, &'static str), Arc<TiledExecutor>>,
 }
 
 impl ExecutorCache {
-    fn executor(&mut self, semiring: Semiring, dtype: &'static str) -> Result<&TiledExecutor> {
+    fn executor(&mut self, semiring: Semiring, dtype: &'static str) -> Result<Arc<TiledExecutor>> {
         use std::collections::hash_map::Entry;
         match self.map.entry((semiring, dtype)) {
-            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Occupied(e) => Ok(e.get().clone()),
             Entry::Vacant(v) => {
-                let exec = TiledExecutor::for_algebra(&self.rt, semiring, dtype)
-                    .with_context(|| format!("building {semiring}/{dtype} executor"))?;
-                Ok(v.insert(exec))
+                let exec = TiledExecutor::for_algebra_with(
+                    &self.rt,
+                    semiring,
+                    dtype,
+                    &self.profile,
+                )
+                .with_context(|| format!("building {semiring}/{dtype} executor"))?;
+                Ok(v.insert(Arc::new(exec)).clone())
             }
         }
     }
 }
 
-fn serve_one(
+/// Pack one operand into panels, through the shared cache when the
+/// operand carries a stable id (hit ⇒ `Cached` ⇒ zero bytes ship),
+/// fresh otherwise. The pack runs under the cache lock for identified
+/// operands so racing workers pack a given operand at most once and the
+/// counters replay deterministically.
+fn pack_operand(
+    exec: &TiledExecutor,
+    panel_cache: &Mutex<PanelCache>,
+    side: PanelSide,
+    operand_id: Option<u64>,
+    tensor: &HostTensor,
+    rows: usize,
+    cols: usize,
+) -> Result<(Arc<PackedPanels>, PanelSource)> {
+    let pack = || match side {
+        PanelSide::A => exec.pack_a_tensor(tensor, rows, cols),
+        PanelSide::B => exec.pack_b_tensor(tensor, rows, cols),
+    };
+    match operand_id {
+        None => Ok((Arc::new(pack()?), PanelSource::Fresh)),
+        Some(operand) => {
+            let key = PanelKey {
+                operand,
+                side,
+                semiring: exec.semiring(),
+                dtype: tensor.dtype_name(),
+                tile: exec.tile_shape(),
+                operand_dims: (rows, cols),
+                region: (0, rows, 0, cols),
+            };
+            panel_cache
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .get_or_pack(key, pack)
+        }
+    }
+}
+
+/// Everything the compute stage needs for one request.
+struct PackedWork {
+    id: u64,
+    m: usize,
+    n: usize,
+    k: usize,
+    semiring: Semiring,
+    dtype: &'static str,
+    exec: Arc<TiledExecutor>,
+    plan: TilePlan,
+    a: Arc<PackedPanels>,
+    b: Arc<PackedPanels>,
+    a_src: PanelSource,
+    b_src: PanelSource,
+    /// Operand elements shipped at the pack stage (fresh packs only —
+    /// cache hits contribute zero).
+    pre_transfer: u64,
+    weight: u64,
+    t0: Instant,
+    reply: mpsc::Sender<Result<GemmResponse>>,
+}
+
+/// Header the reduce stage needs before tiles start arriving.
+struct ReduceStart {
+    id: u64,
+    m: usize,
+    n: usize,
+    k: usize,
+    semiring: Semiring,
+    dtype: &'static str,
+    /// Row stride of incoming partial tiles.
+    tile_n: usize,
+    a_src: PanelSource,
+    b_src: PanelSource,
+    pre_transfer: u64,
+    weight: u64,
+    t0: Instant,
+    reply: mpsc::Sender<Result<GemmResponse>>,
+}
+
+enum ReduceMsg {
+    Begin(Box<ReduceStart>),
+    Tile(Step, HostTensor),
+    Finish { c_transfer: u64, steps: usize },
+    Abort(anyhow::Error),
+}
+
+/// Pack stage for one request: validate, resolve the executor, pack (or
+/// cache-hit) both operands, and hand the work to the compute stage.
+/// Failures are replied immediately with full request context.
+fn stage_request(
     cache: &mut ExecutorCache,
+    panel_cache: &Mutex<PanelCache>,
     stats: &ServiceStats,
-    worker_id: usize,
+    pending: &AtomicU64,
+    compute_tx: &mpsc::SyncSender<PackedWork>,
     req: GemmRequest,
-    reply: &mpsc::Sender<Result<GemmResponse>>,
+    reply: mpsc::Sender<Result<GemmResponse>>,
 ) {
+    let weight = work_units(req.m, req.n, req.k, req.a.element_bytes());
     let t0 = Instant::now();
-    let GemmRequest { id, m, n, k, a, b, semiring } = req;
-    let dtype = a.dtype_name();
-    let result = (|| {
+    let id = req.id;
+    let ctx = format!(
+        "request {id}: {}x{}x{} {} {}",
+        req.m,
+        req.n,
+        req.k,
+        req.a.dtype_name(),
+        req.semiring
+    );
+    let staged = (|| -> Result<PackedWork> {
+        let GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id } = req;
+        if m == 0 || n == 0 || k == 0 {
+            bail!("empty problem {m}x{n}x{k}");
+        }
         if a.dtype_name() != b.dtype_name() {
             bail!("operand dtype mismatch: A is {}, B is {}", a.dtype_name(), b.dtype_name());
         }
+        let dtype = a.dtype_name();
         let exec = cache.executor(semiring, dtype)?;
-        exec.run_tensor(&a, &b, m, n, k)
+        let (tm, tn, tk) = exec.tile_shape();
+        let order = Order::select(m, n, k, tm, tn, tk);
+        let plan = TilePlan::with_order(m, n, k, tm, tn, tk, order);
+        let (a, a_src) = pack_operand(&exec, panel_cache, PanelSide::A, a_id, &a, m, k)?;
+        let (b, b_src) = pack_operand(&exec, panel_cache, PanelSide::B, b_id, &b, k, n)?;
+        let mut pre_transfer = 0u64;
+        if a_src == PanelSource::Fresh {
+            pre_transfer += a.elements();
+        }
+        if b_src == PanelSource::Fresh {
+            pre_transfer += b.elements();
+        }
+        Ok(PackedWork {
+            id,
+            m,
+            n,
+            k,
+            semiring,
+            dtype,
+            exec,
+            plan,
+            a,
+            b,
+            a_src,
+            b_src,
+            pre_transfer,
+            weight,
+            t0,
+            reply: reply.clone(),
+        })
     })()
-    .with_context(|| format!("request {id}: {m}x{n}x{k} {dtype} {semiring}"));
-    let out = match result {
-        Ok(run) => {
-            stats.completed.fetch_add(1, Ordering::Relaxed);
-            stats
-                .total_steps
-                .fetch_add(run.steps_executed as u64, Ordering::Relaxed);
-            stats
-                .total_madds
-                .fetch_add((m * n * k) as u64, Ordering::Relaxed);
-            stats
-                .total_transfer_elements
-                .fetch_add(run.transfer_elements, Ordering::Relaxed);
-            Ok(GemmResponse {
-                id,
-                c: run.c,
-                latency: t0.elapsed(),
-                steps: run.steps_executed,
-                transfer_elements: run.transfer_elements,
-                worker: worker_id,
-            })
+    .with_context(|| ctx);
+    match staged {
+        Ok(work) => {
+            if compute_tx.send(work).is_err() {
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(anyhow!(
+                    "worker compute stage closed; request {id} dropped"
+                )));
+                pending.fetch_sub(weight, Ordering::Relaxed);
+            }
         }
         Err(e) => {
             stats.failed.fetch_add(1, Ordering::Relaxed);
-            Err(e)
+            let _ = reply.send(Err(e));
+            pending.fetch_sub(weight, Ordering::Relaxed);
         }
-    };
-    let _ = reply.send(out);
+    }
+}
+
+/// Compute stage: drive the packed plan, streaming partial tiles to the
+/// reduce stage as they come off the kernel.
+fn compute_loop(rx: mpsc::Receiver<PackedWork>, reduce_tx: mpsc::SyncSender<ReduceMsg>) {
+    while let Ok(work) = rx.recv() {
+        let PackedWork {
+            id,
+            m,
+            n,
+            k,
+            semiring,
+            dtype,
+            exec,
+            plan,
+            a,
+            b,
+            a_src,
+            b_src,
+            pre_transfer,
+            weight,
+            t0,
+            reply,
+        } = work;
+        let (_, tile_n, _) = exec.tile_shape();
+        let start = ReduceStart {
+            id,
+            m,
+            n,
+            k,
+            semiring,
+            dtype,
+            tile_n,
+            a_src,
+            b_src,
+            pre_transfer,
+            weight,
+            t0,
+            reply,
+        };
+        if reduce_tx.send(ReduceMsg::Begin(Box::new(start))).is_err() {
+            return;
+        }
+        let result = exec
+            .run_packed_steps_tensor(&a, &b, &plan, |step, tile| {
+                let _ = reduce_tx.send(ReduceMsg::Tile(*step, tile));
+            })
+            .with_context(|| format!("request {id}: {m}x{n}x{k} {dtype} {semiring}"));
+        let done = match result {
+            Ok((c_transfer, steps)) => ReduceMsg::Finish { c_transfer, steps },
+            Err(e) => ReduceMsg::Abort(e),
+        };
+        if reduce_tx.send(done).is_err() {
+            return;
+        }
+    }
+}
+
+struct InFlight {
+    start: ReduceStart,
+    c: HostTensor,
+    error: Option<anyhow::Error>,
+}
+
+/// Reduce stage: ⊕-fold partial tiles into the host-resident
+/// accumulator (the identical fold, in the identical order, the fused
+/// executor performs) and complete the response.
+fn reduce_loop(
+    rx: mpsc::Receiver<ReduceMsg>,
+    stats: Arc<ServiceStats>,
+    pending: Arc<AtomicU64>,
+    worker_id: usize,
+) {
+    let mut cur: Option<InFlight> = None;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ReduceMsg::Begin(start) => {
+                let start = *start;
+                match identity_tensor(start.semiring, start.dtype, start.m * start.n) {
+                    Ok(c) => cur = Some(InFlight { start, c, error: None }),
+                    Err(e) => {
+                        cur = Some(InFlight {
+                            start,
+                            c: HostTensor::F32(Vec::new()),
+                            error: Some(e),
+                        })
+                    }
+                }
+            }
+            ReduceMsg::Tile(step, tile) => {
+                if let Some(fl) = cur.as_mut() {
+                    if fl.error.is_none() {
+                        if let Err(e) = fold_tile(
+                            fl.start.semiring,
+                            &mut fl.c,
+                            fl.start.n,
+                            fl.start.tile_n,
+                            &step,
+                            &tile,
+                        ) {
+                            fl.error = Some(e);
+                        }
+                    }
+                }
+            }
+            ReduceMsg::Finish { c_transfer, steps } => {
+                let Some(InFlight { start, c, error }) = cur.take() else { continue };
+                let out = match error {
+                    None => {
+                        let transfer = start.pre_transfer + c_transfer;
+                        stats.completed.fetch_add(1, Ordering::Relaxed);
+                        stats.total_steps.fetch_add(steps as u64, Ordering::Relaxed);
+                        stats
+                            .total_madds
+                            .fetch_add((start.m * start.n * start.k) as u64, Ordering::Relaxed);
+                        stats
+                            .total_transfer_elements
+                            .fetch_add(transfer, Ordering::Relaxed);
+                        Ok(GemmResponse {
+                            id: start.id,
+                            c,
+                            latency: start.t0.elapsed(),
+                            steps,
+                            transfer_elements: transfer,
+                            worker: worker_id,
+                            a_panels: start.a_src,
+                            b_panels: start.b_src,
+                        })
+                    }
+                    Some(e) => {
+                        stats.failed.fetch_add(1, Ordering::Relaxed);
+                        Err(e.context(format!(
+                            "request {}: {}x{}x{} {} {} (reduce stage)",
+                            start.id, start.m, start.n, start.k, start.dtype, start.semiring
+                        )))
+                    }
+                };
+                pending.fetch_sub(start.weight, Ordering::Relaxed);
+                let _ = start.reply.send(out);
+            }
+            ReduceMsg::Abort(e) => {
+                let Some(InFlight { start, .. }) = cur.take() else { continue };
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                pending.fetch_sub(start.weight, Ordering::Relaxed);
+                let _ = start.reply.send(Err(e));
+            }
+        }
+    }
+}
+
+/// Pack-stage handling of a prepack instruction: resolve the executor
+/// for the operand's algebra, pack (or confirm) its panels in the shared
+/// cache, and account the fresh bytes.
+fn handle_prepack(
+    cache: &mut ExecutorCache,
+    panel_cache: &Mutex<PanelCache>,
+    stats: &ServiceStats,
+    job: PrepackJob,
+) {
+    let PrepackJob { operand, tensor, side, rows, cols, semiring, weight: _, reply } = job;
+    let result = (|| -> Result<PanelSource> {
+        let dtype = tensor.dtype_name();
+        let exec = cache.executor(semiring, dtype)?;
+        let (panels, src) =
+            pack_operand(&exec, panel_cache, side, Some(operand), &tensor, rows, cols)?;
+        if src == PanelSource::Fresh {
+            stats
+                .total_transfer_elements
+                .fetch_add(panels.elements(), Ordering::Relaxed);
+        }
+        Ok(src)
+    })()
+    .with_context(|| {
+        format!(
+            "prepack operand {operand}: {} {rows}x{cols} {} {semiring}",
+            side.name(),
+            tensor.dtype_name()
+        )
+    });
+    let _ = reply.send(result);
 }
 
 impl GemmService {
-    /// Start `n_workers` workers over `artifacts_dir` (native fallback
-    /// when the directory holds no manifest). Blocks until every worker
-    /// has compiled its default executable (so first-request latency is
-    /// steady-state); executors for other algebras compile lazily on
-    /// first use.
+    /// Start `n_workers` pipelined workers over `artifacts_dir` (native
+    /// fallback when the directory holds no manifest) with the default
+    /// [`ServiceConfig`]. Blocks until every worker has compiled its
+    /// default executable (so first-request latency is steady-state);
+    /// executors for other algebras compile lazily on first use.
     pub fn start(artifacts_dir: PathBuf, n_workers: usize) -> Result<GemmService> {
+        Self::start_with_config(artifacts_dir, n_workers, ServiceConfig::default())
+    }
+
+    /// [`Self::start`] under explicit queue bounds and cache profile.
+    pub fn start_with_config(
+        artifacts_dir: PathBuf,
+        n_workers: usize,
+        config: ServiceConfig,
+    ) -> Result<GemmService> {
         assert!(n_workers >= 1);
+        let queue_capacity = config.queue_capacity.max(1);
+        let pipeline_depth = config.pipeline_depth.max(1);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let stats = Arc::new(ServiceStats::default());
+        let panel_cache = Arc::new(Mutex::new(PanelCache::new(config.profile.panel_cache_bytes)));
         let mut workers = Vec::new();
         for worker_id in 0..n_workers {
-            let (tx, rx) = mpsc::channel::<Job>();
+            let (tx, rx) = mpsc::sync_channel::<Job>(queue_capacity);
             let pending = Arc::new(AtomicU64::new(0));
+            let queued = Arc::new(AtomicUsize::new(0));
             let worker_pending = pending.clone();
+            let worker_queued = queued.clone();
             let stats = stats.clone();
+            let panel_cache = panel_cache.clone();
             let ready = ready_tx.clone();
             let dir = artifacts_dir.clone();
+            let profile = config.profile;
             let join = std::thread::spawn(move || {
                 // Per-worker runtime: PJRT handles are not Send. Warm the
                 // default f32 plus-times executor eagerly.
                 let mut cache = match Runtime::open_or_native(&dir).and_then(|rt| {
-                    let exec = TiledExecutor::from_runtime(&rt)
-                        .context("building default float32 executor")?;
+                    let exec = TiledExecutor::for_algebra_with(
+                        &rt,
+                        Semiring::PlusTimes,
+                        "float32",
+                        &profile,
+                    )
+                    .context("building default float32 executor")?;
                     let mut map = HashMap::new();
-                    map.insert((Semiring::PlusTimes, "float32"), exec);
-                    Ok(ExecutorCache { rt, map })
+                    map.insert((Semiring::PlusTimes, "float32"), Arc::new(exec));
+                    Ok(ExecutorCache { rt, profile, map })
                 }) {
                     Ok(cache) => {
                         let _ = ready.send(Ok(()));
@@ -279,25 +823,69 @@ impl GemmService {
                         return;
                     }
                 };
+                // Stage channels: bounded, so a slow kernel backpressures
+                // the pack stage instead of buffering panels without
+                // limit, and a slow fold backpressures the kernel.
+                let (compute_tx, compute_rx) =
+                    mpsc::sync_channel::<PackedWork>(pipeline_depth);
+                let (reduce_tx, reduce_rx) =
+                    mpsc::sync_channel::<ReduceMsg>(REDUCE_CHANNEL_DEPTH);
+                let reduce_stats = stats.clone();
+                let reduce_pending = worker_pending.clone();
+                let reduce_join = std::thread::spawn(move || {
+                    reduce_loop(reduce_rx, reduce_stats, reduce_pending, worker_id)
+                });
+                let compute_join =
+                    std::thread::spawn(move || compute_loop(compute_rx, reduce_tx));
                 loop {
                     match rx.recv() {
                         Ok(Job::Run(req, reply)) => {
-                            let w = work_units(req.m, req.n, req.k, req.a.element_bytes());
-                            serve_one(&mut cache, &stats, worker_id, req, &reply);
-                            worker_pending.fetch_sub(w, Ordering::Relaxed);
+                            worker_queued.fetch_sub(1, Ordering::Relaxed);
+                            stage_request(
+                                &mut cache,
+                                &panel_cache,
+                                &stats,
+                                &worker_pending,
+                                &compute_tx,
+                                req,
+                                reply,
+                            );
                         }
                         Ok(Job::Batch(reqs, reply)) => {
+                            worker_queued.fetch_sub(reqs.len(), Ordering::Relaxed);
                             for req in reqs {
-                                let w = work_units(req.m, req.n, req.k, req.a.element_bytes());
-                                serve_one(&mut cache, &stats, worker_id, req, &reply);
-                                worker_pending.fetch_sub(w, Ordering::Relaxed);
+                                stage_request(
+                                    &mut cache,
+                                    &panel_cache,
+                                    &stats,
+                                    &worker_pending,
+                                    &compute_tx,
+                                    req,
+                                    reply.clone(),
+                                );
                             }
+                        }
+                        Ok(Job::Prepack(job)) => {
+                            worker_queued.fetch_sub(1, Ordering::Relaxed);
+                            let weight = job.weight;
+                            handle_prepack(&mut cache, &panel_cache, &stats, *job);
+                            worker_pending.fetch_sub(weight, Ordering::Relaxed);
                         }
                         Ok(Job::Shutdown) | Err(_) => break,
                     }
                 }
+                // Drain the pipeline before the worker exits: close the
+                // pack→compute channel and join both stages.
+                drop(compute_tx);
+                let _ = compute_join.join();
+                let _ = reduce_join.join();
             });
-            workers.push(WorkerHandle { tx: Mutex::new(tx), pending, join: Some(join) });
+            workers.push(WorkerHandle {
+                tx: Mutex::new(tx),
+                pending,
+                queued,
+                join: Some(join),
+            });
         }
         drop(ready_tx);
         for _ in 0..n_workers {
@@ -310,6 +898,8 @@ impl GemmService {
             workers,
             rr: AtomicUsize::new(0),
             stats,
+            panel_cache,
+            queue_capacity,
             next_id: AtomicU64::new(0),
         })
     }
@@ -332,12 +922,15 @@ impl GemmService {
         best
     }
 
-    /// Hand a job to a worker's private queue. A closed queue (worker
-    /// thread gone) is reported through the job's own reply channel with
-    /// full request context rather than panicking the submitter.
-    fn enqueue(&self, worker: usize, job: Job, weight: u64) {
+    /// Hand a job to a worker's bounded queue, blocking while the queue
+    /// is full (submit-side backpressure). A closed queue (worker thread
+    /// gone) is reported through the job's own reply channel with full
+    /// request context rather than panicking the submitter.
+    fn enqueue(&self, worker: usize, job: Job, weight: u64, n_requests: usize) {
         let w = &self.workers[worker];
         w.pending.fetch_add(weight, Ordering::Relaxed);
+        let depth = w.queued.fetch_add(n_requests, Ordering::Relaxed) + n_requests;
+        self.stats.peak_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
         let send_result = w
             .tx
             .lock()
@@ -345,6 +938,7 @@ impl GemmService {
             .send(job);
         if let Err(mpsc::SendError(job)) = send_result {
             w.pending.fetch_sub(weight, Ordering::Relaxed);
+            w.queued.fetch_sub(n_requests, Ordering::Relaxed);
             let err = |req: &GemmRequest| {
                 self.stats.failed.fetch_add(1, Ordering::Relaxed);
                 anyhow::anyhow!(
@@ -366,6 +960,11 @@ impl GemmService {
                         let _ = reply.send(Err(err(req)));
                     }
                 }
+                Job::Prepack(p) => {
+                    let _ = p
+                        .reply
+                        .send(Err(anyhow!("worker {worker} queue closed; prepack dropped")));
+                }
                 Job::Shutdown => {}
             }
         }
@@ -385,15 +984,16 @@ impl GemmService {
     }
 
     /// Submit a typed job (any dtype/semiring pair the runtime serves);
-    /// returns a receiver for the response.
+    /// returns a receiver for the response. Blocks while the picked
+    /// worker's queue is full.
     pub fn submit_typed(&self, job: GemmJob) -> mpsc::Receiver<Result<GemmResponse>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
         let weight = job.weight();
-        let GemmJob { m, n, k, a, b, semiring } = job;
-        let req = GemmRequest { id, m, n, k, a, b, semiring };
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id } = job;
+        let req = GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id };
         let worker = self.pick_worker();
-        self.enqueue(worker, Job::Run(req, reply_tx), weight);
+        self.enqueue(worker, Job::Run(req, reply_tx), weight, 1);
         reply_rx
     }
 
@@ -404,10 +1004,7 @@ impl GemmService {
     /// yielding one response per job (in completion order — match by
     /// `GemmResponse::id`, which counts up from the returned base id)
     /// and the number of jobs submitted.
-    pub fn submit_batch(
-        &self,
-        jobs: Vec<GemmJob>,
-    ) -> (mpsc::Receiver<Result<GemmResponse>>, u64, usize) {
+    pub fn submit_batch(&self, jobs: Vec<GemmJob>) -> BatchSubmission {
         let (reply_tx, reply_rx) = mpsc::channel();
         let count = jobs.len();
         let base_id = self.next_id.fetch_add(count as u64, Ordering::Relaxed);
@@ -416,8 +1013,9 @@ impl GemmService {
         let mut share_weights: Vec<u64> = vec![0; self.workers.len()];
         for (i, job) in jobs.into_iter().enumerate() {
             let weight = job.weight();
-            let GemmJob { m, n, k, a, b, semiring } = job;
-            let req = GemmRequest { id: base_id + i as u64, m, n, k, a, b, semiring };
+            let GemmJob { m, n, k, a, b, semiring, a_id, b_id } = job;
+            let req =
+                GemmRequest { id: base_id + i as u64, m, n, k, a, b, semiring, a_id, b_id };
             // Least-loaded by pending work *plus* the share built so far
             // (worker counters don't move until the shares are enqueued
             // below).
@@ -439,10 +1037,95 @@ impl GemmService {
             if share.is_empty() {
                 continue;
             }
-            self.enqueue(worker, Job::Batch(share, reply_tx.clone()), share_weights[worker]);
+            let n_requests = share.len();
+            self.enqueue(
+                worker,
+                Job::Batch(share, reply_tx.clone()),
+                share_weights[worker],
+                n_requests,
+            );
         }
         drop(reply_tx);
         (reply_rx, base_id, count)
+    }
+
+    /// Submit a batch of jobs that all share one B operand (built with
+    /// [`GemmJob::shared_b`]), sweeping the shared panels **once**: B is
+    /// prepacked into the panel cache before the fan-out, so every job
+    /// in the batch — on any worker — reuses the resident panels and
+    /// ships zero B bytes. This is the paper's operand-reuse logic
+    /// applied at batch granularity.
+    pub fn submit_shared(&self, jobs: Vec<GemmJob>) -> Result<BatchSubmission> {
+        let first = jobs
+            .first()
+            .ok_or_else(|| anyhow!("submit_shared needs at least one job"))?;
+        let operand = first.b_id.ok_or_else(|| {
+            anyhow!("submit_shared jobs must be built with GemmJob::shared_b")
+        })?;
+        let (k, n, semiring) = (first.k, first.n, first.semiring);
+        let dtype = first.b.dtype_name();
+        let tensor = first.b.clone();
+        for job in &jobs {
+            if job.b_id != Some(operand)
+                || job.k != k
+                || job.n != n
+                || job.semiring != semiring
+                || job.b.dtype_name() != dtype
+            {
+                bail!(
+                    "submit_shared jobs must share one B operand: got {}x{}x{} {} {} \
+                     (operand {:?}) against shared {k}x{n} {dtype} {semiring} (operand {operand})",
+                    job.m,
+                    job.n,
+                    job.k,
+                    job.b.dtype_name(),
+                    job.semiring,
+                    job.b_id,
+                );
+            }
+        }
+        self.prepack_raw(operand, tensor, PanelSide::B, k, n, semiring)?;
+        Ok(self.submit_batch(jobs))
+    }
+
+    /// Pack a shared operand's panels into the service cache ahead of
+    /// traffic (or confirm they are resident). Returns where the panels
+    /// came from: `Fresh` if this call packed them, `Cached` if they
+    /// were already resident.
+    pub fn prepack(
+        &self,
+        operand: &SharedOperand,
+        side: PanelSide,
+        rows: usize,
+        cols: usize,
+        semiring: Semiring,
+    ) -> Result<PanelSource> {
+        self.prepack_raw(operand.id, operand.tensor.clone(), side, rows, cols, semiring)
+    }
+
+    fn prepack_raw(
+        &self,
+        operand: u64,
+        tensor: Arc<HostTensor>,
+        side: PanelSide,
+        rows: usize,
+        cols: usize,
+        semiring: Semiring,
+    ) -> Result<PanelSource> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let weight = work_units(rows, cols, 1, tensor.element_bytes());
+        let job = Box::new(PrepackJob {
+            operand,
+            tensor,
+            side,
+            rows,
+            cols,
+            semiring,
+            weight,
+            reply: reply_tx,
+        });
+        self.enqueue(self.pick_worker(), Job::Prepack(job), weight, 1);
+        reply_rx.recv().context("service dropped the prepack")?
     }
 
     /// Convenience: submit an f32 plus-times job and wait.
@@ -477,6 +1160,32 @@ impl GemmService {
             .collect()
     }
 
+    /// Live inbound-queue depth per worker, in requests. The high-water
+    /// mark across the service's lifetime is
+    /// [`ServiceStats::peak_queue_depth`].
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.workers
+            .iter()
+            .map(|w| w.queued.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Per-worker inbound queue bound (messages) — submissions block
+    /// beyond this.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    /// Panel-cache counters: hits/misses/evictions plus residency. Must
+    /// match `sim::grid2d::replay_lru` over the same access trace —
+    /// pinned by the panel-cache suite.
+    pub fn panel_counters(&self) -> CacheCounters {
+        self.panel_cache
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .counters()
+    }
+
     fn send_shutdown(&self) {
         for w in &self.workers {
             let _ = w
@@ -487,7 +1196,8 @@ impl GemmService {
         }
     }
 
-    /// Stop accepting work and join the workers.
+    /// Stop accepting work and join the workers (each worker drains its
+    /// pipeline stages before exiting).
     pub fn shutdown(mut self) {
         self.send_shutdown();
         for w in &mut self.workers {
@@ -531,5 +1241,18 @@ mod tests {
         let mp = GemmJob::min_plus(32, 32, 32, vec![0.0; 32 * 32], vec![0.0; 32 * 32]);
         assert_eq!(mp.weight(), f32_job.weight(), "min-plus f32 weighs like f32");
         assert_eq!(mp.semiring, Semiring::MinPlus);
+    }
+
+    #[test]
+    fn shared_operands_get_unique_ids_and_clones_alias() {
+        let x = SharedOperand::new(HostTensor::F32(vec![0.0; 4]));
+        let y = SharedOperand::new(HostTensor::F32(vec![0.0; 4]));
+        assert_ne!(x.id(), y.id());
+        assert_eq!(x.clone().id(), x.id(), "cloning aliases, it does not re-register");
+        let job = GemmJob::shared_b(2, 2, 2, HostTensor::F32(vec![0.0; 4]), &x, Semiring::PlusTimes);
+        assert_eq!(job.b_id, Some(x.id()));
+        assert_eq!(job.a_id, None);
+        let job = GemmJob::shared_a(2, 2, 2, &y, HostTensor::F32(vec![0.0; 4]), Semiring::PlusTimes);
+        assert_eq!(job.a_id, Some(y.id()));
     }
 }

@@ -26,6 +26,17 @@
 //!   `copy_from_slice`; the ⊕-identity padding pass runs only for edge
 //!   tiles (zeros for plus-times, +∞ for min-plus — the ⊗-annihilator
 //!   either way, so padded lanes never perturb a result).
+//! * **Packing split from compute** — [`TiledExecutor::pack_a`] /
+//!   [`TiledExecutor::pack_b`] materialize an operand's complete slab
+//!   set as a first-class [`PackedPanels`] value, and
+//!   [`TiledExecutor::run_packed`] consumes panel sets with zero packing
+//!   of its own, bit-identical to the fused path. This is what makes
+//!   packed operands cacheable and reusable *across requests* (the
+//!   coordinator's `PanelCache`), the cross-request generalization of
+//!   Eq. 6's reuse argument: pack once, multiply many.
+//!   [`TiledExecutor::run_packed_steps`] further exposes the per-step
+//!   partial tiles so the serving layer can pipeline
+//!   pack → compute → reduce as separate stages over bounded channels.
 //!
 //! Everything below the convenience constructors is generic over a
 //! [`SemiringOps`] instantiation — the same zero-sized-ops
@@ -178,6 +189,177 @@ fn ping_pong<E>(bufs: &mut [Vec<E>; 2], cur: usize) -> (&[E], &mut Vec<E>) {
         (lo[0].as_slice(), &mut hi[0])
     } else {
         (hi[0].as_slice(), &mut lo[0])
+    }
+}
+
+/// Which operand of C = A ⊗⊕ B a packed panel set covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PanelSide {
+    A,
+    B,
+}
+
+impl PanelSide {
+    pub fn name(self) -> &'static str {
+        match self {
+            PanelSide::A => "A",
+            PanelSide::B => "B",
+        }
+    }
+}
+
+/// A fully packed, ⊕-identity-padded panel set for **one operand** of a
+/// tiled GEMM: every distinct slab the schedule can ask for — the
+/// `(ti, ks)` A slabs or `(tj, ks)` B slabs — materialized exactly once,
+/// in the exact layout [`pack_a_slab`]/[`pack_b_slab`] produce, so a run
+/// consuming the panels is bit-identical to the fused pack-and-execute
+/// path.
+///
+/// This is packing split out of compute as a first-class value: produced
+/// by [`TiledExecutor::pack_a`]/[`TiledExecutor::pack_b`], consumed by
+/// [`TiledExecutor::run_packed`], and cacheable across requests by the
+/// coordinator's `PanelCache` (keyed on operand id, algebra, tile shape,
+/// and region). [`elements`](Self::elements) is exactly the volume a
+/// fresh pack ships across the host↔device boundary
+/// (`order::packed_a_elements` / `packed_b_elements`); a cache hit ships
+/// zero.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedPanels {
+    side: PanelSide,
+    semiring: Semiring,
+    /// `(tile_m, tile_n, tile_k)` of the executor that packed the set.
+    tile: (usize, usize, usize),
+    /// Operand dims: A → `(m, k)`; B → `(k, n)`.
+    dims: (usize, usize),
+    /// Slab grid `(outer, slabs_k)`: A → `(tiles_m, slabs_k)`;
+    /// B → `(tiles_n, slabs_k)`.
+    grid: (usize, usize),
+    /// Elements per slab (`tm·tk` for A, `tk·tn` for B).
+    slab_elements: usize,
+    data: HostTensor,
+}
+
+impl PackedPanels {
+    pub fn side(&self) -> PanelSide {
+        self.side
+    }
+
+    pub fn semiring(&self) -> Semiring {
+        self.semiring
+    }
+
+    /// Tile shape the panels were packed for.
+    pub fn tile(&self) -> (usize, usize, usize) {
+        self.tile
+    }
+
+    /// Logical operand dims: A → `(m, k)`; B → `(k, n)`.
+    pub fn dims(&self) -> (usize, usize) {
+        self.dims
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        self.data.dtype_name()
+    }
+
+    /// Number of packed slabs in the set.
+    pub fn n_slabs(&self) -> usize {
+        self.grid.0 * self.grid.1
+    }
+
+    /// Total packed elements — the volume a **fresh** pack ships across
+    /// the host↔device boundary (zero on a cache hit).
+    pub fn elements(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    /// Resident footprint — what a byte-budgeted panel cache charges.
+    pub fn bytes(&self) -> u64 {
+        self.elements() * self.data.element_bytes()
+    }
+
+    /// Element range of the slab at `(outer, ks)` — `outer` is `ti` for
+    /// an A set, `tj` for a B set.
+    fn slab_range(&self, outer: usize, ks: usize) -> std::ops::Range<usize> {
+        debug_assert!(outer < self.grid.0 && ks < self.grid.1);
+        let idx = outer * self.grid.1 + ks;
+        idx * self.slab_elements..(idx + 1) * self.slab_elements
+    }
+}
+
+/// ⊕-identity-filled tensor for a `(semiring, dtype)` pair — the start
+/// value of a host-resident accumulator (zeros for plus-times, +∞ for
+/// min-plus), matching the `pad` the typed executor paths fold onto.
+pub fn identity_tensor(semiring: Semiring, dtype: &str, len: usize) -> Result<HostTensor> {
+    use HostTensor as H;
+    Ok(match (semiring, dtype) {
+        (Semiring::PlusTimes, "float32") => H::F32(vec![PlusTimesF32.zero(); len]),
+        (Semiring::PlusTimes, "float64") => H::F64(vec![PlusTimesF64.zero(); len]),
+        (Semiring::PlusTimes, "int32") => H::I32(vec![PlusTimesI32Wrap.zero(); len]),
+        (Semiring::PlusTimes, "uint32") => H::U32(vec![PlusTimesU32Wrap.zero(); len]),
+        (Semiring::MinPlus, "float32") => H::F32(vec![MinPlusF32.zero(); len]),
+        (semiring, dtype) => bail!("no ⊕-identity instantiation for {semiring} over {dtype}"),
+    })
+}
+
+/// ⊕-fold one partial `tm×tn` tile (row stride `tn`) into the `step`'s
+/// region of a row-major accumulator with `n` columns — the exact
+/// element order the fused executor's host-resident fold uses
+/// (`c = c ⊕ out`), exposed for the serving layer's pipelined reduce
+/// stage so the staged path stays bit-identical to the fused one.
+pub fn fold_tile(
+    semiring: Semiring,
+    c: &mut HostTensor,
+    n: usize,
+    tn: usize,
+    step: &Step,
+    tile: &HostTensor,
+) -> Result<()> {
+    fn fold<S: SemiringOps>(
+        sr: S,
+        c: &mut [S::Elem],
+        n: usize,
+        tn: usize,
+        step: &Step,
+        tile: &[S::Elem],
+    ) -> Result<()> {
+        if step.rows == 0 || step.cols == 0 {
+            return Ok(());
+        }
+        if tile.len() < (step.rows - 1) * tn + step.cols {
+            bail!("partial tile has {} elements, step needs {}x{}", tile.len(), step.rows, step.cols);
+        }
+        if step.col0 + step.cols > n || (step.row0 + step.rows) * n > c.len() {
+            bail!(
+                "step region ({}, {}) {}x{} exceeds a {}-element accumulator of stride {n}",
+                step.row0,
+                step.col0,
+                step.rows,
+                step.cols,
+                c.len()
+            );
+        }
+        for r in 0..step.rows {
+            let dst = (step.row0 + r) * n + step.col0;
+            let src = r * tn;
+            for j in 0..step.cols {
+                c[dst + j] = sr.add(c[dst + j], tile[src + j]);
+            }
+        }
+        Ok(())
+    }
+    use HostTensor as H;
+    match (semiring, c, tile) {
+        (Semiring::PlusTimes, H::F32(c), H::F32(t)) => fold(PlusTimesF32, c, n, tn, step, t),
+        (Semiring::PlusTimes, H::F64(c), H::F64(t)) => fold(PlusTimesF64, c, n, tn, step, t),
+        (Semiring::PlusTimes, H::I32(c), H::I32(t)) => fold(PlusTimesI32Wrap, c, n, tn, step, t),
+        (Semiring::PlusTimes, H::U32(c), H::U32(t)) => fold(PlusTimesU32Wrap, c, n, tn, step, t),
+        (Semiring::MinPlus, H::F32(c), H::F32(t)) => fold(MinPlusF32, c, n, tn, step, t),
+        (semiring, c, tile) => bail!(
+            "no ⊕ instantiation for {semiring} over accumulator {} / tile {}",
+            c.dtype_name(),
+            tile.dtype_name()
+        ),
     }
 }
 
@@ -338,22 +520,7 @@ impl TiledExecutor {
         S: SemiringOps,
         S::Elem: Element,
     {
-        if sr.algebra() != self.semiring {
-            bail!(
-                "executor artifact {:?} computes {}, caller algebra is {}",
-                self.kernel.spec.name,
-                self.semiring,
-                sr.algebra()
-            );
-        }
-        if S::Elem::DTYPE != self.dtype {
-            bail!(
-                "executor artifact {:?} is {}, caller elements are {}",
-                self.kernel.spec.name,
-                self.dtype,
-                S::Elem::DTYPE
-            );
-        }
+        self.check_caller(sr)?;
         if m == 0 || n == 0 || k == 0 {
             bail!("empty problem {m}x{n}x{k}");
         }
@@ -388,6 +555,364 @@ impl TiledExecutor {
             order,
             wall: t0.elapsed(),
         })
+    }
+
+    /// Reject callers whose compile-time algebra or element type does
+    /// not match this executor's artifact.
+    fn check_caller<S>(&self, sr: S) -> Result<()>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        if sr.algebra() != self.semiring {
+            bail!(
+                "executor artifact {:?} computes {}, caller algebra is {}",
+                self.kernel.spec.name,
+                self.semiring,
+                sr.algebra()
+            );
+        }
+        if S::Elem::DTYPE != self.dtype {
+            bail!(
+                "executor artifact {:?} is {}, caller elements are {}",
+                self.kernel.spec.name,
+                self.dtype,
+                S::Elem::DTYPE
+            );
+        }
+        Ok(())
+    }
+
+    /// Reject packed panel sets that were not packed for this executor's
+    /// algebra, dtype, and tile shape, or that cover the wrong operand.
+    fn check_panels(&self, p: &PackedPanels, side: PanelSide) -> Result<()> {
+        if p.side != side {
+            bail!("expected packed {} panels, got {}", side.name(), p.side.name());
+        }
+        if p.semiring != self.semiring || p.dtype_name() != self.dtype {
+            bail!(
+                "packed {} panels are {}/{}, executor artifact {:?} is {}/{}",
+                side.name(),
+                p.semiring,
+                p.dtype_name(),
+                self.kernel.spec.name,
+                self.semiring,
+                self.dtype
+            );
+        }
+        if p.tile != (self.tile_m, self.tile_n, self.tile_k) {
+            bail!(
+                "packed {} panels use tile {:?}, executor tile is {:?}",
+                side.name(),
+                p.tile,
+                (self.tile_m, self.tile_n, self.tile_k)
+            );
+        }
+        Ok(())
+    }
+
+    /// Pack every distinct A slab of a row-major `m×k` operand — the
+    /// pack half of the schedule split out of compute. The result is
+    /// bit-identical input to what the fused path would pack per step,
+    /// reusable across any number of [`Self::run_packed`] calls (and
+    /// cacheable across requests by the coordinator's panel cache).
+    pub fn pack_a<S>(&self, sr: S, a: &[S::Elem], m: usize, k: usize) -> Result<PackedPanels>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        self.check_caller(sr)?;
+        if m == 0 || k == 0 {
+            bail!("empty A operand {m}x{k}");
+        }
+        if a.len() != m * k {
+            bail!("A buffer has {} elements, operand is {m}x{k}", a.len());
+        }
+        let (tm, tk) = (self.tile_m, self.tile_k);
+        let (tiles_m, slabs_k) = (m.div_ceil(tm), k.div_ceil(tk));
+        let pad = sr.zero();
+        let slab = tm * tk;
+        let mut data = vec![pad; tiles_m * slabs_k * slab];
+        for ti in 0..tiles_m {
+            for ks in 0..slabs_k {
+                let (row0, k0) = (ti * tm, ks * tk);
+                let step = Step {
+                    ti,
+                    tj: 0,
+                    ks,
+                    row0,
+                    col0: 0,
+                    rows: (m - row0).min(tm),
+                    cols: 0,
+                    k0,
+                    kdepth: (k - k0).min(tk),
+                    reuse_a: false,
+                    reuse_b: false,
+                    drain: false,
+                };
+                let dst = &mut data[(ti * slabs_k + ks) * slab..][..slab];
+                pack_a_slab(pad, dst, a, &step, k, tm, tk);
+            }
+        }
+        Ok(PackedPanels {
+            side: PanelSide::A,
+            semiring: self.semiring,
+            tile: (self.tile_m, self.tile_n, self.tile_k),
+            dims: (m, k),
+            grid: (tiles_m, slabs_k),
+            slab_elements: slab,
+            data: S::Elem::wrap(data),
+        })
+    }
+
+    /// Pack every distinct B slab of a row-major `k×n` operand (see
+    /// [`Self::pack_a`]).
+    pub fn pack_b<S>(&self, sr: S, b: &[S::Elem], k: usize, n: usize) -> Result<PackedPanels>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        self.check_caller(sr)?;
+        if k == 0 || n == 0 {
+            bail!("empty B operand {k}x{n}");
+        }
+        if b.len() != k * n {
+            bail!("B buffer has {} elements, operand is {k}x{n}", b.len());
+        }
+        let (tn, tk) = (self.tile_n, self.tile_k);
+        let (tiles_n, slabs_k) = (n.div_ceil(tn), k.div_ceil(tk));
+        let pad = sr.zero();
+        let slab = tk * tn;
+        let mut data = vec![pad; tiles_n * slabs_k * slab];
+        for tj in 0..tiles_n {
+            for ks in 0..slabs_k {
+                let (col0, k0) = (tj * tn, ks * tk);
+                let step = Step {
+                    ti: 0,
+                    tj,
+                    ks,
+                    row0: 0,
+                    col0,
+                    rows: 0,
+                    cols: (n - col0).min(tn),
+                    k0,
+                    kdepth: (k - k0).min(tk),
+                    reuse_a: false,
+                    reuse_b: false,
+                    drain: false,
+                };
+                let dst = &mut data[(tj * slabs_k + ks) * slab..][..slab];
+                pack_b_slab(pad, dst, b, &step, n, tk, tn);
+            }
+        }
+        Ok(PackedPanels {
+            side: PanelSide::B,
+            semiring: self.semiring,
+            tile: (self.tile_m, self.tile_n, self.tile_k),
+            dims: (k, n),
+            grid: (tiles_n, slabs_k),
+            slab_elements: slab,
+            data: S::Elem::wrap(data),
+        })
+    }
+
+    /// Execute a plan against pre-packed panel sets, handing each step's
+    /// partial C tile to `emit` in plan order — the compute stage of the
+    /// pack → compute → reduce pipeline, with the ⊕-fold left to the
+    /// caller. Returns `(c_transfer_elements, steps_executed)`: the C
+    /// traffic only (one partial tile out per step plus the ⊕-identity
+    /// template once) — operand traffic is accounted where the panels
+    /// were packed, and is **zero** here by construction, which is
+    /// exactly what makes a cache hit ship zero bytes.
+    pub fn run_packed_steps<S>(
+        &self,
+        sr: S,
+        a: &PackedPanels,
+        b: &PackedPanels,
+        plan: &TilePlan,
+        mut emit: impl FnMut(&Step, Vec<S::Elem>),
+    ) -> Result<(u64, usize)>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        self.check_caller(sr)?;
+        self.check_panels(a, PanelSide::A)?;
+        self.check_panels(b, PanelSide::B)?;
+        if a.dims != (plan.m, plan.k) {
+            bail!("packed A covers {:?}, plan is {}x{}x{}", a.dims, plan.m, plan.n, plan.k);
+        }
+        if b.dims != (plan.k, plan.n) {
+            bail!("packed B covers {:?}, plan is {}x{}x{}", b.dims, plan.m, plan.n, plan.k);
+        }
+        let a_all = S::Elem::as_slice(&a.data).expect("dtype checked");
+        let b_all = S::Elem::as_slice(&b.data).expect("dtype checked");
+        let c_el = (self.tile_m * self.tile_n) as u64;
+        let mut transfer = c_el; // ⊕-identity template, once per run
+        let mut steps_executed = 0usize;
+        for (i, step) in plan.steps.iter().enumerate() {
+            let a_slab = &a_all[a.slab_range(step.ti, step.ks)];
+            let b_slab = &b_all[b.slab_range(step.tj, step.ks)];
+            let out = self.kernel.execute_zero_acc(sr, a_slab, b_slab).with_context(|| {
+                format!("step {i} (tile ({}, {}) k-slab {})", step.ti, step.tj, step.ks)
+            })?;
+            steps_executed += 1;
+            transfer += c_el; // partial C tile out
+            emit(step, out);
+        }
+        Ok((transfer, steps_executed))
+    }
+
+    /// C = A ⊗⊕ B from pre-packed panel sets: the consume half of the
+    /// pack/compute split, **bit-identical** to the fused
+    /// [`Self::run_with`] reuse path under the same order (same kernel
+    /// inputs per step, same host-resident ⊕-fold in the same order —
+    /// pinned by property tests across every algebra). The reported
+    /// `transfer_elements` counts C traffic only; add
+    /// [`PackedPanels::elements`] for each operand packed fresh for this
+    /// run (a cached operand adds zero) to reproduce
+    /// `TilePlan::transfer_elements_packed`.
+    pub fn run_packed<S>(
+        &self,
+        sr: S,
+        a: &PackedPanels,
+        b: &PackedPanels,
+        order: Order,
+    ) -> Result<ExecutorRun<Vec<S::Elem>>>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        self.check_caller(sr)?;
+        self.check_panels(a, PanelSide::A)?;
+        self.check_panels(b, PanelSide::B)?;
+        let (m, ka) = a.dims;
+        let (kb, n) = b.dims;
+        if ka != kb {
+            bail!("packed A is {m}x{ka}, packed B is {kb}x{n}: k mismatch");
+        }
+        let plan = TilePlan::with_order(m, n, ka, self.tile_m, self.tile_n, self.tile_k, order);
+        let t0 = Instant::now();
+        let pad = sr.zero();
+        let tn = self.tile_n;
+        let mut c = vec![pad; m * n];
+        let (transfer, steps_executed) = self
+            .run_packed_steps(sr, a, b, &plan, |step, out| {
+                for r in 0..step.rows {
+                    let dst = (step.row0 + r) * n + step.col0;
+                    let src = r * tn;
+                    for j in 0..step.cols {
+                        c[dst + j] = sr.add(c[dst + j], out[src + j]);
+                    }
+                }
+            })
+            .with_context(|| {
+                format!(
+                    "{m}x{n}x{ka} {} {} packed-panel run ({} order)",
+                    self.dtype,
+                    self.semiring,
+                    order.name()
+                )
+            })?;
+        Ok(ExecutorRun {
+            c,
+            plan,
+            steps_executed,
+            transfer_elements: transfer,
+            order,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Enum-level [`Self::pack_a`]: dispatch a [`HostTensor`] operand
+    /// onto the typed packer matching this executor's algebra.
+    pub fn pack_a_tensor(&self, a: &HostTensor, m: usize, k: usize) -> Result<PackedPanels> {
+        use HostTensor as H;
+        match (self.semiring, a) {
+            (Semiring::PlusTimes, H::F32(v)) => self.pack_a(PlusTimesF32, v, m, k),
+            (Semiring::PlusTimes, H::F64(v)) => self.pack_a(PlusTimesF64, v, m, k),
+            (Semiring::PlusTimes, H::I32(v)) => self.pack_a(PlusTimesI32Wrap, v, m, k),
+            (Semiring::PlusTimes, H::U32(v)) => self.pack_a(PlusTimesU32Wrap, v, m, k),
+            (Semiring::MinPlus, H::F32(v)) => self.pack_a(MinPlusF32, v, m, k),
+            (semiring, a) => {
+                bail!("no packer instantiation for {semiring} over A {}", a.dtype_name())
+            }
+        }
+    }
+
+    /// Enum-level [`Self::pack_b`].
+    pub fn pack_b_tensor(&self, b: &HostTensor, k: usize, n: usize) -> Result<PackedPanels> {
+        use HostTensor as H;
+        match (self.semiring, b) {
+            (Semiring::PlusTimes, H::F32(v)) => self.pack_b(PlusTimesF32, v, k, n),
+            (Semiring::PlusTimes, H::F64(v)) => self.pack_b(PlusTimesF64, v, k, n),
+            (Semiring::PlusTimes, H::I32(v)) => self.pack_b(PlusTimesI32Wrap, v, k, n),
+            (Semiring::PlusTimes, H::U32(v)) => self.pack_b(PlusTimesU32Wrap, v, k, n),
+            (Semiring::MinPlus, H::F32(v)) => self.pack_b(MinPlusF32, v, k, n),
+            (semiring, b) => {
+                bail!("no packer instantiation for {semiring} over B {}", b.dtype_name())
+            }
+        }
+    }
+
+    /// Enum-level [`Self::run_packed`].
+    pub fn run_packed_tensor(
+        &self,
+        a: &PackedPanels,
+        b: &PackedPanels,
+        order: Order,
+    ) -> Result<ExecutorRun<HostTensor>> {
+        use HostTensor as H;
+        match (self.semiring, &a.data) {
+            (Semiring::PlusTimes, H::F32(_)) => {
+                Ok(self.run_packed(PlusTimesF32, a, b, order)?.map_c(H::F32))
+            }
+            (Semiring::PlusTimes, H::F64(_)) => {
+                Ok(self.run_packed(PlusTimesF64, a, b, order)?.map_c(H::F64))
+            }
+            (Semiring::PlusTimes, H::I32(_)) => {
+                Ok(self.run_packed(PlusTimesI32Wrap, a, b, order)?.map_c(H::I32))
+            }
+            (Semiring::PlusTimes, H::U32(_)) => {
+                Ok(self.run_packed(PlusTimesU32Wrap, a, b, order)?.map_c(H::U32))
+            }
+            (Semiring::MinPlus, H::F32(_)) => {
+                Ok(self.run_packed(MinPlusF32, a, b, order)?.map_c(H::F32))
+            }
+            (semiring, data) => bail!(
+                "no packed-run instantiation for {semiring} over {}",
+                data.dtype_name()
+            ),
+        }
+    }
+
+    /// Enum-level [`Self::run_packed_steps`]: each partial tile is handed
+    /// to `emit` as a [`HostTensor`] — the boundary the GEMM service's
+    /// compute stage streams tiles across to its reduce stage.
+    pub fn run_packed_steps_tensor(
+        &self,
+        a: &PackedPanels,
+        b: &PackedPanels,
+        plan: &TilePlan,
+        mut emit: impl FnMut(&Step, HostTensor),
+    ) -> Result<(u64, usize)> {
+        use HostTensor as H;
+        match (self.semiring, &a.data) {
+            (Semiring::PlusTimes, H::F32(_)) => self
+                .run_packed_steps(PlusTimesF32, a, b, plan, |s, t| emit(s, H::F32(t))),
+            (Semiring::PlusTimes, H::F64(_)) => self
+                .run_packed_steps(PlusTimesF64, a, b, plan, |s, t| emit(s, H::F64(t))),
+            (Semiring::PlusTimes, H::I32(_)) => self
+                .run_packed_steps(PlusTimesI32Wrap, a, b, plan, |s, t| emit(s, H::I32(t))),
+            (Semiring::PlusTimes, H::U32(_)) => self
+                .run_packed_steps(PlusTimesU32Wrap, a, b, plan, |s, t| emit(s, H::U32(t))),
+            (Semiring::MinPlus, H::F32(_)) => self
+                .run_packed_steps(MinPlusF32, a, b, plan, |s, t| emit(s, H::F32(t))),
+            (semiring, data) => bail!(
+                "no packed-run instantiation for {semiring} over {}",
+                data.dtype_name()
+            ),
+        }
     }
 
     /// Enum-level entry: dispatch a [`HostTensor`] pair onto the typed
@@ -620,5 +1145,156 @@ impl TiledExecutor {
             }
         }
         Ok((c, transfer, steps_executed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    fn tight_exec(semiring: Semiring, dtype: &str) -> TiledExecutor {
+        let rt = Runtime::native_default().unwrap();
+        // 16 KiB admits only the 16³ artifacts: multi-tile at test sizes.
+        let profile = HostCacheProfile::with_capacity(16 * 1024);
+        TiledExecutor::for_algebra_with(&rt, semiring, dtype, &profile).unwrap()
+    }
+
+    #[test]
+    fn packed_panels_cover_every_slab_once() {
+        let exec = tight_exec(Semiring::PlusTimes, "float32");
+        let (m, k, n) = (40usize, 33usize, 25usize);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| -(i as f32)).collect();
+        let pa = exec.pack_a(PlusTimesF32, &a, m, k).unwrap();
+        let pb = exec.pack_b(PlusTimesF32, &b, k, n).unwrap();
+        assert_eq!(pa.side(), PanelSide::A);
+        assert_eq!(pb.side(), PanelSide::B);
+        assert_eq!(pa.dims(), (m, k));
+        assert_eq!(pb.dims(), (k, n));
+        // 40/16 × 33/16 A slabs of 16², 25/16 × 33/16 B slabs.
+        assert_eq!(pa.n_slabs(), 3 * 3);
+        assert_eq!(pb.n_slabs(), 2 * 3);
+        assert_eq!(pa.elements(), super::super::order::packed_a_elements(m, k, 16, 16));
+        assert_eq!(pb.elements(), super::super::order::packed_b_elements(k, n, 16, 16));
+        assert_eq!(pa.bytes(), pa.elements() * 4);
+    }
+
+    #[test]
+    fn run_packed_is_bit_identical_to_fused_reuse() {
+        let exec = tight_exec(Semiring::PlusTimes, "float32");
+        let (m, n, k) = (40usize, 25usize, 33usize);
+        let mut rng = crate::util::rng::Rng::new(0xBEEF);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let pa = exec.pack_a(PlusTimesF32, &a, m, k).unwrap();
+        let pb = exec.pack_b(PlusTimesF32, &b, k, n).unwrap();
+        for order in Order::ALL {
+            let fused = exec
+                .run_with(PlusTimesF32, &a, &b, m, n, k, order, ExecMode::Reuse)
+                .unwrap();
+            let packed = exec.run_packed(PlusTimesF32, &pa, &pb, order).unwrap();
+            assert_eq!(packed.c, fused.c, "{order}: packed vs fused bits");
+            assert_eq!(packed.steps_executed, fused.steps_executed);
+            // Measured C-only transfer + fresh panel volumes reproduce the
+            // packed cost model exactly.
+            assert_eq!(
+                packed.transfer_elements + pa.elements() + pb.elements(),
+                packed.plan.transfer_elements_packed(
+                    super::super::order::PanelSource::Fresh,
+                    super::super::order::PanelSource::Fresh,
+                ),
+                "{order}: measured vs model"
+            );
+            assert_eq!(
+                packed.transfer_elements,
+                packed.plan.transfer_elements_packed(
+                    super::super::order::PanelSource::Cached,
+                    super::super::order::PanelSource::Cached,
+                ),
+                "{order}: cache hits ship C traffic only"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_panels_are_validated() {
+        let exec = tight_exec(Semiring::PlusTimes, "float32");
+        let a = vec![1.0f32; 32 * 32];
+        let pa = exec.pack_a(PlusTimesF32, &a, 32, 32).unwrap();
+        let pb = exec.pack_b(PlusTimesF32, &a, 32, 32).unwrap();
+        // Sides can't be swapped.
+        let err = exec.run_packed(PlusTimesF32, &pb, &pa, Order::TileMajor).unwrap_err();
+        assert!(err.to_string().contains("packed A"), "{err}");
+        // k mismatch between the panel sets is rejected.
+        let pb_bad = exec.pack_b(PlusTimesF32, &vec![0.0f32; 48 * 32], 48, 32).unwrap();
+        let err = exec.run_packed(PlusTimesF32, &pa, &pb_bad, Order::TileMajor).unwrap_err();
+        assert!(err.to_string().contains("k mismatch"), "{err}");
+        // A min-plus executor rejects plus-times panels.
+        let mp = tight_exec(Semiring::MinPlus, "float32");
+        let err = mp.run_packed_tensor(&pa, &pb, Order::TileMajor).unwrap_err();
+        assert!(err.to_string().contains("min_plus"), "{err}");
+        // Wrong-shape operand buffers are rejected at pack time.
+        assert!(exec.pack_a(PlusTimesF32, &a, 31, 32).is_err());
+        assert!(exec.pack_b(PlusTimesF32, &a, 0, 32).is_err());
+    }
+
+    #[test]
+    fn identity_tensor_matches_semiring_zero() {
+        assert_eq!(
+            identity_tensor(Semiring::PlusTimes, "float32", 2).unwrap(),
+            HostTensor::F32(vec![0.0; 2])
+        );
+        assert_eq!(
+            identity_tensor(Semiring::MinPlus, "float32", 2).unwrap(),
+            HostTensor::F32(vec![f32::INFINITY; 2])
+        );
+        assert_eq!(
+            identity_tensor(Semiring::PlusTimes, "uint32", 1).unwrap(),
+            HostTensor::U32(vec![0])
+        );
+        assert!(identity_tensor(Semiring::MinPlus, "float64", 1).is_err());
+    }
+
+    #[test]
+    fn fold_tile_matches_fused_fold_orientation() {
+        // A 2×2 step region inside a 3×4 accumulator, tile stride 16.
+        let step = Step {
+            ti: 0,
+            tj: 0,
+            ks: 0,
+            row0: 1,
+            col0: 2,
+            rows: 2,
+            cols: 2,
+            k0: 0,
+            kdepth: 1,
+            reuse_a: false,
+            reuse_b: false,
+            drain: true,
+        };
+        let mut c = HostTensor::F32(vec![1.0; 12]);
+        let mut tile = vec![0.0f32; 16 * 16];
+        tile[0] = 10.0;
+        tile[1] = 20.0;
+        tile[16] = 30.0;
+        tile[17] = 40.0;
+        fold_tile(Semiring::PlusTimes, &mut c, 4, 16, &step, &HostTensor::F32(tile.clone()))
+            .unwrap();
+        let got = c.as_f32().unwrap();
+        assert_eq!(&got[6..8], &[11.0, 21.0]);
+        assert_eq!(&got[10..12], &[31.0, 41.0]);
+        assert_eq!(got[0], 1.0, "outside the step region untouched");
+        // min-plus folds with min, not +.
+        let mut c = HostTensor::F32(vec![15.0; 12]);
+        fold_tile(Semiring::MinPlus, &mut c, 4, 16, &step, &HostTensor::F32(tile)).unwrap();
+        assert_eq!(c.as_f32().unwrap()[6], 10.0);
+        assert_eq!(c.as_f32().unwrap()[0], 15.0);
+        // Dtype mismatches are contextual errors.
+        let mut c64 = HostTensor::F64(vec![0.0; 12]);
+        let err =
+            fold_tile(Semiring::PlusTimes, &mut c64, 4, 16, &step, &HostTensor::F32(vec![0.0; 256]))
+                .unwrap_err();
+        assert!(err.to_string().contains("float64"), "{err}");
     }
 }

@@ -20,7 +20,11 @@
 //!   host-resident accumulator, slab reuse, and double-buffered packing
 //!   (the communication-avoiding path), or in the seed's round-trip mode
 //!   for baseline comparison — generic over every dtype/semiring the
-//!   kernel engine instantiates;
+//!   kernel engine instantiates. Packing is also split out as a
+//!   first-class value ([`executor::PackedPanels`], produced by
+//!   `pack_a`/`pack_b`, consumed by `run_packed`) so operands pack once
+//!   and multiply many — the cross-request reuse the coordinator's
+//!   panel cache builds on;
 //! * [`shard`] — one level further out: partition a single GEMM across a
 //!   `dr × dc × dk` *device grid* (C ownership per device, optional
 //!   k-split with a fixed-order reduction), choosing the split that
@@ -34,7 +38,7 @@ pub mod order;
 pub mod shard;
 pub mod tiles;
 
-pub use executor::{ExecMode, ExecutorRun, TiledExecutor};
-pub use order::Order;
+pub use executor::{ExecMode, ExecutorRun, PackedPanels, PanelSide, TiledExecutor};
+pub use order::{Order, PanelSource};
 pub use shard::{DeviceTile, Shard, ShardGrid, ShardPlan};
 pub use tiles::{model_tile_shape, HostCacheProfile, Step, TilePlan};

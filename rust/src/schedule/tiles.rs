@@ -21,19 +21,44 @@ use super::order::{self, Order};
 /// (Eq. 6: communication falls as the resident tile grows); on the host
 /// the same role is played by the cache level the packed slabs and the
 /// live C tile must stay resident in while a step executes.
+///
+/// The profile carries **two** carved-out budgets so the Eq. 6
+/// accounting stays honest across request boundaries:
+///
+/// * [`capacity_bytes`](Self::capacity_bytes) — the per-step working
+///   set's home (per-core L2 slice): sizes the tile shape.
+/// * [`panel_cache_bytes`](Self::panel_cache_bytes) — the shared
+///   slower level (L3 / DRAM slice) where packed operand panels stay
+///   resident *between* requests. This bounds the coordinator's
+///   `PanelCache`; once it overflows, panels are evicted LRU and the
+///   next request for that operand pays the full re-pack — exactly what
+///   the cached-operand term of `order::host_traffic_packed` charges.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HostCacheProfile {
     /// Usable capacity in bytes (per-core L2 slice by default — the
     /// level the microkernel's packed panels stream out of).
     pub capacity_bytes: u64,
+    /// Byte budget for cross-request packed-panel residency (shared
+    /// L3 / DRAM slice; 0 disables panel caching entirely).
+    pub panel_cache_bytes: u64,
 }
 
 impl HostCacheProfile {
     /// Conservative per-core L2 slice on current x86/ARM server parts.
     pub const DEFAULT_CAPACITY_BYTES: u64 = 1 << 20;
 
+    /// Default cross-request panel-cache slice (a conservative share of
+    /// a shared L3 on current server parts).
+    pub const DEFAULT_PANEL_CACHE_BYTES: u64 = 32 << 20;
+
     pub fn with_capacity(capacity_bytes: u64) -> HostCacheProfile {
-        HostCacheProfile { capacity_bytes }
+        HostCacheProfile { capacity_bytes, panel_cache_bytes: Self::DEFAULT_PANEL_CACHE_BYTES }
+    }
+
+    /// Both budgets explicit: the per-step working-set slice *and* the
+    /// cross-request panel-cache slice.
+    pub fn with_budgets(capacity_bytes: u64, panel_cache_bytes: u64) -> HostCacheProfile {
+        HostCacheProfile { capacity_bytes, panel_cache_bytes }
     }
 
     /// Bytes the per-step working set of a `(tm, tn, tk)` tile occupies:
@@ -55,7 +80,10 @@ impl HostCacheProfile {
 
 impl Default for HostCacheProfile {
     fn default() -> Self {
-        HostCacheProfile { capacity_bytes: Self::DEFAULT_CAPACITY_BYTES }
+        HostCacheProfile {
+            capacity_bytes: Self::DEFAULT_CAPACITY_BYTES,
+            panel_cache_bytes: Self::DEFAULT_PANEL_CACHE_BYTES,
+        }
     }
 }
 
@@ -239,6 +267,32 @@ impl TilePlan {
         total
     }
 
+    /// Host↔device traffic in elements for the **packed-panel** path
+    /// running this plan: a `Fresh` operand ships its full packed panel
+    /// set once (every distinct slab exactly once — the floor no
+    /// traversal order can beat), a `Cached` operand ships **zero**
+    /// elements (the panels are already resident from an earlier
+    /// request), and C moves as in the reuse path. This is the
+    /// cross-request reuse term: pinned equal to
+    /// `order::host_traffic_packed`, to the `sim::grid2d::packed_traffic`
+    /// step replay, and to the serving layer's measured counters
+    /// (pack-stage fresh bytes + `run_packed`'s C traffic) by tests.
+    pub fn transfer_elements_packed(
+        &self,
+        a: order::PanelSource,
+        b: order::PanelSource,
+    ) -> u64 {
+        let c_el = (self.tile_m * self.tile_n) as u64;
+        let mut total = c_el * (self.steps.len() as u64 + 1);
+        if a == order::PanelSource::Fresh {
+            total += order::packed_a_elements(self.m, self.k, self.tile_m, self.tile_k);
+        }
+        if b == order::PanelSource::Fresh {
+            total += order::packed_b_elements(self.k, self.n, self.tile_k, self.tile_n);
+        }
+        total
+    }
+
     /// The seed's no-reuse accounting: every step ships its padded A and
     /// B slabs plus the C accumulator in *and* out. This is what the
     /// round-trip executor mode actually moves, and the baseline the
@@ -342,6 +396,42 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn packed_transfer_matches_model_and_never_exceeds_fused() {
+        use super::super::order::{host_traffic_packed, PanelSource};
+        for order in Order::ALL {
+            for (m, n, k) in [(256, 256, 256), (256, 512, 256), (200, 100, 300), (13, 21, 5)] {
+                let p = TilePlan::with_order(m, n, k, 128, 64, 32, order);
+                for a in [PanelSource::Fresh, PanelSource::Cached] {
+                    for b in [PanelSource::Fresh, PanelSource::Cached] {
+                        assert_eq!(
+                            p.transfer_elements_packed(a, b),
+                            host_traffic_packed(m, n, k, 128, 64, 32, a, b),
+                            "{order} {m}x{n}x{k} {a:?}/{b:?}"
+                        );
+                    }
+                }
+                assert!(
+                    p.transfer_elements_packed(PanelSource::Fresh, PanelSource::Fresh)
+                        <= p.transfer_elements(),
+                    "{order} {m}x{n}x{k}: packing once can never ship more than fused reuse"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn profile_carries_both_budgets() {
+        let p = HostCacheProfile::default();
+        assert_eq!(p.panel_cache_bytes, HostCacheProfile::DEFAULT_PANEL_CACHE_BYTES);
+        assert_eq!(
+            HostCacheProfile::with_capacity(4096).panel_cache_bytes,
+            HostCacheProfile::DEFAULT_PANEL_CACHE_BYTES,
+        );
+        let q = HostCacheProfile::with_budgets(4096, 512);
+        assert_eq!((q.capacity_bytes, q.panel_cache_bytes), (4096, 512));
     }
 
     #[test]

@@ -36,9 +36,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 use fcamm::coordinator::cluster::{
-    fold_partials, ClusterService, RuntimeBackend, ShardBackend, ShardOutput,
+    fold_partials, ClusterService, RuntimeBackend, ShardBackend, ShardOperands, ShardOutput,
 };
-use fcamm::coordinator::GemmJob;
+use fcamm::coordinator::{GemmJob, SharedOperand};
 use fcamm::datatype::Semiring;
 use fcamm::runtime::kernel::oracle;
 use fcamm::runtime::{HostTensor, Runtime};
@@ -362,6 +362,60 @@ fn predicted_traffic_equals_sim_replay_and_measured_transfers() {
 }
 
 #[test]
+fn shared_b_sub_panels_cache_across_a_cluster_batch() {
+    // A batch of jobs sharing one B operand: every device packs its B
+    // sub-block once (cold run), then reuses the resident sub-panels —
+    // bit-identical results, zero B bytes on warm runs, counters exact.
+    let cluster = tight_cluster(4);
+    let mut rng = Rng::new(0x5B5B);
+    let (m, n, k) = (40usize, 25usize, 33usize);
+    let grid = ShardGrid { dr: 2, dc: 2, dk: 1 };
+    let b_op = SharedOperand::new(Algebra::F32.gen(&mut rng, k * n));
+    let a_mats: Vec<HostTensor> = (0..3).map(|_| Algebra::F32.gen(&mut rng, m * k)).collect();
+
+    let mut runs = Vec::new();
+    for a in &a_mats {
+        let shared = GemmJob::shared_b(m, n, k, a.clone(), &b_op, Semiring::PlusTimes);
+        let run = cluster.run_on_grid(&shared, grid, ExecMode::Reuse).expect("shared run");
+        // The cached path must reproduce the anonymous (fused-path) job
+        // bit-for-bit.
+        let plain =
+            GemmJob::new(m, n, k, a.clone(), b_op.tensor().clone(), Semiring::PlusTimes);
+        let base = cluster.run_on_grid(&plain, grid, ExecMode::Reuse).expect("plain run");
+        assert_eq!(run.c, base.c, "cached path bit-identical to fused path");
+        runs.push(run);
+    }
+
+    // Transfer pinned against the packed plan accounting: the cold run
+    // ships every shard's A and B sub-panel sets; warm runs hit B and
+    // ship zero B bytes (the double-count fix under test).
+    use fcamm::schedule::PanelSource::{Cached, Fresh};
+    let packed_total = |b_src| -> u64 {
+        runs[0]
+            .plan
+            .shards
+            .iter()
+            .map(|s| s.plan.transfer_elements_packed(Fresh, b_src))
+            .sum()
+    };
+    assert_eq!(runs[0].transfer_elements, packed_total(Fresh), "cold: every sub-panel ships");
+    for run in &runs[1..] {
+        assert_eq!(run.transfer_elements, packed_total(Cached), "warm: zero B bytes");
+    }
+    assert!(runs[1].transfer_elements < runs[0].transfer_elements);
+
+    // Per-device counters: one miss per device's B sub-block on the
+    // cold run, pure hits on the two warm runs (anonymous jobs never
+    // touch the cache).
+    let counters = cluster.panel_counters().expect("counters");
+    let hits: u64 = counters.iter().map(|c| c.hits).sum();
+    let misses: u64 = counters.iter().map(|c| c.misses).sum();
+    assert_eq!(misses, 4, "one miss per device sub-block");
+    assert_eq!(hits, 2 * 4, "two warm runs × four devices");
+    cluster.shutdown();
+}
+
+#[test]
 fn k_reduction_is_ascending_and_the_order_is_observable() {
     // Catastrophic cancellation makes the fold order observable in f32:
     // partials (1e8, -1e8, 1.0) give 1.0 when folded ascending,
@@ -436,8 +490,7 @@ impl ShardBackend for FaultBackend {
         &mut self,
         shard: &Shard,
         semiring: Semiring,
-        a_block: &HostTensor,
-        b_block: &HostTensor,
+        ops: &ShardOperands,
         mode: ExecMode,
     ) -> Result<ShardOutput> {
         if self.armed && (shard.di, shard.dj, shard.dks) == self.trigger {
@@ -447,7 +500,7 @@ impl ShardBackend for FaultBackend {
                 Fault::Panic => panic!("injected device panic"),
             }
         }
-        let out = self.inner.run_shard(shard, semiring, a_block, b_block, mode)?;
+        let out = self.inner.run_shard(shard, semiring, ops, mode)?;
         self.served.fetch_add(1, Ordering::SeqCst);
         Ok(out)
     }

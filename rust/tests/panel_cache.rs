@@ -1,0 +1,393 @@
+//! Cross-request panel-cache conformance: the packed-panel path
+//! (`pack_a`/`pack_b` → `run_packed`) pinned bit-identical to the fused
+//! executor for every (semiring, dtype) instantiation and every
+//! traversal order; traffic pinned measured == plan == cost model ==
+//! sim replay with **zero operand bytes on cache hits**; and the live
+//! `PanelCache` counters pinned against the independent
+//! `sim::grid2d::replay_lru` simulation, eviction order and byte budget
+//! included.
+
+use std::path::PathBuf;
+
+use fcamm::coordinator::{GemmJob, GemmService, ServiceConfig, SharedOperand};
+use fcamm::datatype::Semiring;
+use fcamm::runtime::kernel::oracle;
+use fcamm::runtime::{HostTensor, Runtime};
+use fcamm::schedule::{
+    ExecMode, HostCacheProfile, Order, PanelSource, TiledExecutor, TilePlan,
+};
+use fcamm::sim::grid2d::{packed_traffic, replay_lru};
+use fcamm::util::rng::Rng;
+
+/// A 16 KiB working-set budget admits only the 16³ accumulation
+/// artifacts for every algebra, so test-sized problems are genuinely
+/// multi-tile and multi-slab.
+fn tight() -> HostCacheProfile {
+    HostCacheProfile::with_capacity(16 * 1024)
+}
+
+/// The five (semiring, dtype) instantiations the kernel engine serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Algebra {
+    F32,
+    F64,
+    I32Wrap,
+    U32Wrap,
+    MinPlusF32,
+}
+
+const ALGEBRAS: [Algebra; 5] =
+    [Algebra::F32, Algebra::F64, Algebra::I32Wrap, Algebra::U32Wrap, Algebra::MinPlusF32];
+
+impl Algebra {
+    fn semiring(self) -> Semiring {
+        match self {
+            Algebra::MinPlusF32 => Semiring::MinPlus,
+            _ => Semiring::PlusTimes,
+        }
+    }
+
+    fn dtype(self) -> &'static str {
+        match self {
+            Algebra::F64 => "float64",
+            Algebra::I32Wrap => "int32",
+            Algebra::U32Wrap => "uint32",
+            _ => "float32",
+        }
+    }
+
+    fn associative(self) -> bool {
+        !matches!(self, Algebra::F32 | Algebra::F64)
+    }
+
+    fn gen(self, rng: &mut Rng, len: usize) -> HostTensor {
+        match self {
+            Algebra::F32 => HostTensor::F32(rng.fill_normal_f32(len)),
+            Algebra::F64 => {
+                HostTensor::F64((0..len).map(|_| rng.next_f64() * 4.0 - 2.0).collect())
+            }
+            Algebra::I32Wrap => {
+                HostTensor::I32((0..len).map(|_| rng.next_u32() as i32).collect())
+            }
+            Algebra::U32Wrap => HostTensor::U32((0..len).map(|_| rng.next_u32()).collect()),
+            Algebra::MinPlusF32 => HostTensor::F32(
+                (0..len)
+                    .map(|_| {
+                        if rng.gen_range(0, 8) == 0 {
+                            f32::INFINITY
+                        } else {
+                            rng.next_f32() * 10.0
+                        }
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// One-shot naive oracle (bit-exact target for associative ⊕).
+    fn oracle(self, a: &HostTensor, b: &HostTensor, m: usize, n: usize, k: usize) -> HostTensor {
+        match self {
+            Algebra::I32Wrap => HostTensor::I32(
+                oracle::gemm_i64(a.as_i32().unwrap(), b.as_i32().unwrap(), m, n, k)
+                    .iter()
+                    .map(|&v| v as i32)
+                    .collect(),
+            ),
+            Algebra::U32Wrap => HostTensor::U32(
+                oracle::gemm_i64(a.as_u32().unwrap(), b.as_u32().unwrap(), m, n, k)
+                    .iter()
+                    .map(|&v| v as u32)
+                    .collect(),
+            ),
+            Algebra::MinPlusF32 => HostTensor::F32(oracle::distance_f32(
+                a.as_f32().unwrap(),
+                b.as_f32().unwrap(),
+                m,
+                n,
+                k,
+            )),
+            _ => panic!("one-shot oracle only pinned for associative ⊕"),
+        }
+    }
+}
+
+#[test]
+fn packed_path_bit_identical_to_fused_for_every_algebra_and_order() {
+    let rt = Runtime::native_default().unwrap();
+    let mut rng = Rng::new(0x9A57);
+    for algebra in ALGEBRAS {
+        let exec =
+            TiledExecutor::for_algebra_with(&rt, algebra.semiring(), algebra.dtype(), &tight())
+                .expect("executor");
+        assert_eq!(exec.tile_shape(), (16, 16, 16), "{algebra:?}: tight profile picks 16³");
+        for (m, n, k) in [(40usize, 25usize, 33usize), (17, 50, 64), (16, 16, 16)] {
+            let a = algebra.gen(&mut rng, m * k);
+            let b = algebra.gen(&mut rng, k * n);
+            // Pack once...
+            let pa = exec.pack_a_tensor(&a, m, k).expect("pack A");
+            let pb = exec.pack_b_tensor(&b, k, n).expect("pack B");
+            for order in Order::ALL {
+                let fused = exec
+                    .run_tensor_with(&a, &b, m, n, k, order, ExecMode::Reuse)
+                    .expect("fused run");
+                // ...multiply many: the same panels drive every order,
+                // twice each (the second run is the pure cache-hit
+                // shape), bit-identical to the fused path throughout.
+                let packed = exec.run_packed_tensor(&pa, &pb, order).expect("packed run");
+                let again = exec.run_packed_tensor(&pa, &pb, order).expect("packed rerun");
+                assert_eq!(packed.c, fused.c, "{algebra:?} {order} {m}x{n}x{k}: packed vs fused");
+                assert_eq!(again.c, packed.c, "{algebra:?} {order}: reuse is deterministic");
+                assert_eq!(packed.steps_executed, fused.steps_executed);
+                if algebra.associative() {
+                    assert_eq!(
+                        packed.c,
+                        algebra.oracle(&a, &b, m, n, k),
+                        "{algebra:?} {order}: packed vs one-shot oracle"
+                    );
+                }
+                // Traffic: measured == plan == cost model == sim replay,
+                // for both the fresh-pack and the all-hits accounting.
+                use PanelSource::{Cached, Fresh};
+                let fresh_total = packed.transfer_elements + pa.elements() + pb.elements();
+                assert_eq!(
+                    fresh_total,
+                    packed.plan.transfer_elements_packed(Fresh, Fresh),
+                    "{algebra:?} {order}: measured vs plan (fresh)"
+                );
+                assert_eq!(
+                    fresh_total,
+                    packed_traffic(&packed.plan, Fresh, Fresh),
+                    "{algebra:?} {order}: measured vs sim replay (fresh)"
+                );
+                assert_eq!(
+                    packed.transfer_elements,
+                    packed_traffic(&packed.plan, Cached, Cached),
+                    "{algebra:?} {order}: cache hits ship C traffic only"
+                );
+                assert!(
+                    fresh_total <= fused.transfer_elements,
+                    "{algebra:?} {order}: packing once never ships more than fused reuse"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn service_shared_b_records_zero_operand_bytes_on_hits() {
+    // One worker (deterministic access order), tight tiles so requests
+    // are multi-step. submit_shared sweeps B once; every job then hits.
+    let config = ServiceConfig {
+        queue_capacity: 8,
+        pipeline_depth: 2,
+        profile: tight(),
+    };
+    let service = GemmService::start_with_config(
+        PathBuf::from("/nonexistent/artifacts"),
+        1,
+        config,
+    )
+    .expect("service");
+    let mut rng = Rng::new(0xCAFE);
+    let (m, n, k) = (40usize, 25usize, 33usize);
+    let b: Vec<f32> = rng.fill_normal_f32(k * n);
+    let b_op = SharedOperand::new(HostTensor::F32(b.clone()));
+
+    // The worker's view, rebuilt locally: same profile → same artifact,
+    // order, and plan.
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float32", &tight())
+        .unwrap();
+    let (tm, tn, tk) = exec.tile_shape();
+    let order = Order::select(m, n, k, tm, tn, tk);
+    let plan = TilePlan::with_order(m, n, k, tm, tn, tk, order);
+    let pb = exec.pack_b_tensor(&HostTensor::F32(b.clone()), k, n).unwrap();
+
+    let a_mats: Vec<Vec<f32>> = (0..4).map(|_| rng.fill_normal_f32(m * k)).collect();
+    let jobs: Vec<GemmJob> = a_mats
+        .iter()
+        .map(|a| {
+            GemmJob::shared_b(m, n, k, HostTensor::F32(a.clone()), &b_op, Semiring::PlusTimes)
+        })
+        .collect();
+    let (rx, base_id, count) = service.submit_shared(jobs).expect("submit_shared");
+    assert_eq!(count, 4);
+    use PanelSource::{Cached, Fresh};
+    for _ in 0..count {
+        let resp = rx.recv().expect("response").expect("success");
+        assert_eq!(resp.b_panels, Cached, "prepack swept B before the fan-out");
+        assert_eq!(resp.a_panels, Fresh, "per-request A packs fresh");
+        // Zero B bytes: the double-count fix under test. measured == plan.
+        assert_eq!(resp.transfer_elements, plan.transfer_elements_packed(Fresh, Cached));
+        // Bit-identity with the fused single-executor run.
+        let a = &a_mats[(resp.id - base_id) as usize];
+        let fused = exec
+            .run_tensor_with(
+                &HostTensor::F32(a.clone()),
+                &HostTensor::F32(b.clone()),
+                m,
+                n,
+                k,
+                order,
+                ExecMode::Reuse,
+            )
+            .unwrap();
+        assert_eq!(resp.c, fused.c, "cached-path response vs fused executor");
+    }
+    // Aggregate accounting: the prepack's fresh B panels plus four
+    // C+fresh-A request transfers — nothing counted twice.
+    let total = service
+        .stats
+        .total_transfer_elements
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(
+        total,
+        pb.elements() + count as u64 * plan.transfer_elements_packed(Fresh, Cached)
+    );
+    // Counters: one miss (the prepack), then pure hits.
+    let c = service.panel_counters();
+    assert_eq!(c.misses, 1, "{c:?}");
+    assert_eq!(c.hits, count as u64, "{c:?}");
+    assert_eq!(c.evictions, 0, "{c:?}");
+    service.shutdown();
+}
+
+#[test]
+fn service_counters_match_sim_replay_under_eviction_pressure() {
+    // Panel budget sized for exactly two resident B panel sets: a
+    // three-operand round-robin forces evictions, and the live counters
+    // must equal the independent LRU replay access-for-access.
+    let (m, n, k) = (20usize, 25usize, 33usize);
+    // B panels under 16³ tiles: ceil(25/16) × ceil(33/16) slabs of 16²
+    // f32 = 2 × 3 × 256 × 4 bytes.
+    let panel_bytes = 2 * 3 * 256 * 4u64;
+    let budget = 2 * panel_bytes;
+    let config = ServiceConfig {
+        queue_capacity: 8,
+        pipeline_depth: 2,
+        profile: HostCacheProfile::with_budgets(16 * 1024, budget),
+    };
+    let service = GemmService::start_with_config(
+        PathBuf::from("/nonexistent/artifacts"),
+        1,
+        config,
+    )
+    .expect("service");
+    let mut rng = Rng::new(0xE71C);
+    let ops: Vec<SharedOperand> = (0..3)
+        .map(|_| SharedOperand::new(HostTensor::F32(rng.fill_normal_f32(k * n))))
+        .collect();
+
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float32", &tight())
+        .unwrap();
+    let (tm, tn, tk) = exec.tile_shape();
+    let order = Order::select(m, n, k, tm, tn, tk);
+
+    // Deterministic single-worker trace: X Y X Z Y X.
+    let trace = [0usize, 1, 0, 2, 1, 0];
+    let mut accesses: Vec<(u64, u64)> = Vec::new();
+    for &i in &trace {
+        let a = rng.fill_normal_f32(m * k);
+        let job = GemmJob::shared_b(
+            m,
+            n,
+            k,
+            HostTensor::F32(a.clone()),
+            &ops[i],
+            Semiring::PlusTimes,
+        );
+        let resp = service.blocking(job).expect("request");
+        accesses.push((ops[i].id(), panel_bytes));
+        // Evicted-and-repacked operands still serve bit-exact results.
+        let fused = exec
+            .run_tensor_with(
+                &HostTensor::F32(a),
+                ops[i].tensor(),
+                m,
+                n,
+                k,
+                order,
+                ExecMode::Reuse,
+            )
+            .unwrap();
+        assert_eq!(resp.c, fused.c, "operand {i}: correct across evictions");
+    }
+    let live = service.panel_counters();
+    let replay = replay_lru(budget, &accesses);
+    assert_eq!(live, replay, "live counters vs independent LRU replay");
+    assert!(live.evictions > 0, "the trace must exercise eviction: {live:?}");
+    assert!(live.resident_bytes <= budget, "byte budget holds: {live:?}");
+    // Hand-checked trace: X Y miss-miss, X hit, Z evicts Y, Y evicts X,
+    // X evicts Z.
+    assert_eq!((live.hits, live.misses, live.evictions), (1, 5, 3), "{live:?}");
+    service.shutdown();
+}
+
+#[test]
+fn queues_are_bounded_and_depth_is_surfaced() {
+    let config = ServiceConfig {
+        queue_capacity: 2,
+        pipeline_depth: 1,
+        profile: tight(),
+    };
+    let service = GemmService::start_with_config(
+        PathBuf::from("/nonexistent/artifacts"),
+        1,
+        config,
+    )
+    .expect("service");
+    assert_eq!(service.queue_capacity(), 2, "submit blocks beyond this bound");
+    assert_eq!(service.queue_depths(), vec![0]);
+    let mut rng = Rng::new(0xD3);
+    let jobs: Vec<GemmJob> = (0..6)
+        .map(|_| {
+            GemmJob::f32(24, 16, 20, rng.fill_normal_f32(24 * 20), rng.fill_normal_f32(20 * 16))
+        })
+        .collect();
+    let (rx, _base, count) = service.submit_batch(jobs);
+    for _ in 0..count {
+        rx.recv().expect("response").expect("success");
+    }
+    let peak = service
+        .stats
+        .peak_queue_depth
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(peak >= 1, "queue depth high-water mark recorded (got {peak})");
+    assert_eq!(service.queue_depths(), vec![0], "queue drained");
+    assert_eq!(
+        service.stats.completed.load(std::sync::atomic::Ordering::Relaxed),
+        6
+    );
+    service.shutdown();
+}
+
+#[test]
+fn shared_operands_serve_every_algebra_bit_exactly() {
+    let service = GemmService::start(PathBuf::from("/nonexistent/artifacts"), 2).expect("service");
+    let rt = Runtime::native_default().unwrap();
+    let mut rng = Rng::new(0xA1B2);
+    let (m, n, k) = (40usize, 25usize, 33usize);
+    for algebra in ALGEBRAS {
+        let b_op = SharedOperand::new(algebra.gen(&mut rng, k * n));
+        let a = algebra.gen(&mut rng, m * k);
+        let first = service
+            .blocking(GemmJob::shared_b(m, n, k, a.clone(), &b_op, algebra.semiring()))
+            .unwrap_or_else(|e| panic!("{algebra:?} first: {e:#}"));
+        let second = service
+            .blocking(GemmJob::shared_b(m, n, k, a.clone(), &b_op, algebra.semiring()))
+            .unwrap_or_else(|e| panic!("{algebra:?} second: {e:#}"));
+        assert_eq!(second.b_panels, PanelSource::Cached, "{algebra:?}: warm hit");
+        assert_eq!(first.c, second.c, "{algebra:?}: warm bits == cold bits");
+        assert!(
+            second.transfer_elements < first.transfer_elements,
+            "{algebra:?}: the hit must ship less"
+        );
+        // Pinned against the fused executor under the service's default
+        // profile (same artifact choice → same plan).
+        let exec = TiledExecutor::for_algebra(&rt, algebra.semiring(), algebra.dtype()).unwrap();
+        let fused = exec.run_tensor(&a, b_op.tensor(), m, n, k).unwrap();
+        assert_eq!(first.c, fused.c, "{algebra:?}: service vs fused executor");
+    }
+    service.shutdown();
+}

@@ -45,6 +45,13 @@ echo "== cargo test -q --test cluster_conformance =="
 # unregisters the target fails loudly instead of silently skipping it.
 cargo test -q --test cluster_conformance
 
+echo "== cargo test -q --test panel_cache =="
+# The cross-request reuse gate: packed-panel path bit-identical to the
+# fused executor for every algebra × order, cache hits recording zero
+# operand bytes (measured == plan == sim), and live LRU counters pinned
+# against the independent replay — run by name for the same reason.
+cargo test -q --test panel_cache
+
 echo "== cargo bench --bench hotpath -- --quick =="
 cargo bench --bench hotpath -- --quick
 
@@ -55,7 +62,8 @@ echo "== validate BENCH_hotpath.json =="
 # a bench that silently stopped writing them would otherwise pass
 # unnoticed.
 required_metrics="kernel512_speedup kernel512_naive_gflops kernel512_blocked_gflops \
-native_threads cluster_f32_512_gflops cluster_shards cluster_devices"
+native_threads cluster_f32_512_gflops cluster_shards cluster_devices \
+panel_cache_hit_ratio shared_b_batch_speedup"
 if [ ! -f BENCH_hotpath.json ]; then
   echo "BENCH_hotpath.json missing after bench run" >&2
   exit 1
@@ -73,10 +81,16 @@ if not data.get("entries"):
     sys.exit("BENCH_hotpath.json has no bench entries")
 if metrics["cluster_shards"] < 1 or metrics["cluster_devices"] < 1:
     sys.exit("BENCH_hotpath.json cluster fields are degenerate")
+if not (0.0 <= metrics["panel_cache_hit_ratio"] <= 1.0):
+    sys.exit("BENCH_hotpath.json panel_cache_hit_ratio out of [0, 1]")
+if metrics["shared_b_batch_speedup"] < 1.5:
+    sys.exit("BENCH_hotpath.json shared_b_batch_speedup below the 1.5x gate")
 print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx, cluster %.0f shards on "
-      "%.0f devices at %.2f GF/s, over %d entries"
+      "%.0f devices at %.2f GF/s, shared-B batch %.2fx (hit ratio %.2f), "
+      "over %d entries"
       % (metrics["kernel512_speedup"], metrics["cluster_shards"],
          metrics["cluster_devices"], metrics["cluster_f32_512_gflops"],
+         metrics["shared_b_batch_speedup"], metrics["panel_cache_hit_ratio"],
          len(data["entries"])))
 PY
 else
