@@ -26,8 +26,19 @@
 //! `shared_b_batch_speedup` (gated ≥1.5x at batch 8, asserted in-bench
 //! and re-checked by scripts/check.sh) and `panel_cache_hit_ratio` are
 //! the serving path's tripwires.
+//!
+//! The chaos section injects one deterministic shard failure per
+//! iteration into a fleet and compares it against a fault-free control:
+//! `recovery_overhead_ratio` (gated ≤1.25 by scripts/check.sh) and
+//! `shed_fraction` (deadline admission against a pinned drain rate) are
+//! the fault-tolerance layer's tripwires; bit-identity between the
+//! recovered and fault-free results is asserted in-bench.
 
-use fcamm::coordinator::{ClusterService, GemmJob, GemmService, SharedOperand};
+use fcamm::coordinator::{
+    faulty_native_cluster, ClusterService, FaultKind, FaultPlan, FaultSite, FaultSpec,
+    FaultTrigger, GemmJob, GemmService, ServiceConfig, SharedOperand, SubmitError,
+};
+use fcamm::schedule::HostCacheProfile;
 use fcamm::runtime::HostTensor;
 use fcamm::datatype::DataType;
 use fcamm::device::catalog::vcu1525;
@@ -531,6 +542,121 @@ fn main() {
         metrics.push(("shared_b_transfer_warm_256".to_string(), warm.transfer_elements as f64));
         all.push(seq);
         all.push(bat);
+        service.shutdown();
+    }
+
+    // --- Chaos: recovery overhead + deadline shedding ------------------
+    // One injected shard failure per iteration (the seeded FaultPlan is
+    // rewound at the top of every closure run) against a fault-free
+    // control fleet of the same size. Injected faults fire before any
+    // compute or transfer, so recovery costs one retried shard dispatch
+    // that overlaps the surviving devices' work — the ratio of medians
+    // is the recovery overhead, gated ≤1.25 by scripts/check.sh.
+    // Bit-identity between the recovered and fault-free results, and
+    // the measured-traffic == planned-traffic contract under recovery,
+    // are asserted in-bench.
+    {
+        use std::sync::Arc;
+        let n_dev = 4usize;
+        let sz = 256usize;
+        let plan = Arc::new(FaultPlan::new(
+            0xC4A05,
+            vec![FaultSpec {
+                site: FaultSite::Shard { di: 0, dj: 0, dks: 0 },
+                trigger: FaultTrigger::Once,
+                kind: FaultKind::Fail,
+            }],
+        ));
+        let chaos = faulty_native_cluster(n_dev, HostCacheProfile::default(), plan.clone())
+            .expect("chaos cluster");
+        let control =
+            faulty_native_cluster(n_dev, HostCacheProfile::default(), Arc::new(FaultPlan::none()))
+                .expect("control cluster");
+        let ca = rng.fill_normal_f32(sz * sz);
+        let cb = rng.fill_normal_f32(sz * sz);
+        let job = GemmJob::f32(sz, sz, sz, ca, cb);
+        let slow = Bench::slow().maybe_quick();
+        let clean = slow.run(&format!("chaos gemm {sz}^3 f32 ({n_dev} dev, fault-free)"), || {
+            control.run(&job).unwrap().steps_executed
+        });
+        let faulty = slow.run(
+            &format!("chaos gemm {sz}^3 f32 ({n_dev} dev, 1 injected shard failure)"),
+            || {
+                plan.reset();
+                chaos.run(&job).unwrap().steps_executed
+            },
+        );
+        let ratio = faulty.median_ns / clean.median_ns;
+        plan.reset();
+        let recovered = chaos.run(&job).unwrap();
+        let baseline = control.run(&job).unwrap();
+        assert_eq!(
+            recovered.c, baseline.c,
+            "recovered run must be bit-identical to the fault-free control"
+        );
+        assert_eq!(recovered.recovery.retries, 1, "exactly one injected failure per run");
+        assert_eq!(
+            recovered.transfer_elements,
+            recovered.plan.predicted_transfer_elements(ExecMode::Reuse),
+            "recovery must preserve the measured == planned traffic contract"
+        );
+        println!(
+            "chaos {sz}^3 f32 x{n_dev}: fault-free {:.2}ms -> 1 injected failure {:.2}ms \
+             (overhead ratio {:.3}); {} retry, {}ms simulated backoff, bit-identical",
+            clean.median_ns / 1e6,
+            faulty.median_ns / 1e6,
+            ratio,
+            recovered.recovery.retries,
+            recovered.recovery.simulated_backoff.as_millis(),
+        );
+        metrics.push(("recovery_overhead_ratio".to_string(), ratio));
+        metrics.push(("chaos_retries_per_run".to_string(), recovered.recovery.retries as f64));
+        metrics.push((
+            "chaos_simulated_backoff_ms".to_string(),
+            recovered.recovery.simulated_backoff.as_millis() as f64,
+        ));
+        all.push(clean);
+        all.push(faulty);
+        chaos.shutdown();
+        control.shutdown();
+
+        // Deadline shedding: the admission rate is pinned to 1 work
+        // unit/s, so any deadlined job is infeasible (a 16^3 f32 job
+        // alone is 4096 units of queued work) while jobs without
+        // deadlines are always admitted — shed_fraction is exactly
+        // deterministic at 0.5 over the alternating burst.
+        let service = GemmService::start_with_config(
+            Runtime::default_dir(),
+            2,
+            ServiceConfig { admission_rate: Some(1.0), ..ServiceConfig::default() },
+        )
+        .expect("shedding service");
+        let burst = 8usize;
+        let mut receivers = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..burst {
+            let a = rng.fill_normal_f32(16 * 16);
+            let b = rng.fill_normal_f32(16 * 16);
+            let mut j = GemmJob::f32(16, 16, 16, a, b);
+            if i % 2 == 1 {
+                j = j.with_deadline(std::time::Duration::from_secs(1));
+            }
+            match service.try_submit(j) {
+                Ok(rx) => receivers.push(rx),
+                Err(SubmitError::Rejected { .. }) => shed += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        for rx in receivers {
+            rx.recv().expect("service alive").expect("admitted job completes");
+        }
+        let shed_fraction = shed as f64 / burst as f64;
+        assert_eq!(shed, burst / 2, "every deadlined job must be shed at 1 work-unit/s");
+        println!(
+            "deadline shedding: {shed}/{burst} infeasible-deadline jobs shed with typed \
+             errors (shed_fraction {shed_fraction:.2})"
+        );
+        metrics.push(("shed_fraction".to_string(), shed_fraction));
         service.shutdown();
     }
 

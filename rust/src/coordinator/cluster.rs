@@ -19,12 +19,24 @@
 //!
 //! Failure surface: a shard that fails (or panics — the worker catches
 //! unwinds, so one bad shard never takes a device worker down) is
-//! reported with full context — shard grid coordinates, device id, dtype,
+//! **retried** under [`RetryPolicy`]: bounded attempts per device with
+//! simulated-clock exponential backoff, then **re-dispatch** to a
+//! surviving device. Because the ascending-dk reduction is keyed on
+//! shard *coordinates*, not device ids, a recovered run is bit-identical
+//! to the fault-free run (pinned per (semiring, dtype) by the
+//! fault-tolerance suite). Every outcome feeds the per-device
+//! [`HealthTracker`] (Healthy → Degraded → Quarantined, probation
+//! re-admission via [`ClusterService::probe`]); quarantined devices are
+//! routed around at plan time with
+//! [`crate::schedule::shard::ShardPlan::replan_without`]. A shard that
+//! exhausts its attempts is reported with full context — grid
+//! coordinates, attempt count, every device that touched it, dtype,
 //! semiring, and how many sibling shards still completed. The remaining
-//! shards run to completion, the pool stays healthy for the next job, and
-//! `shutdown` joins every worker thread. The conformance suite
-//! (`rust/tests/cluster_conformance.rs`) drives these paths with a mock
-//! backend.
+//! shards run to completion, the pool stays healthy for the next job,
+//! and `shutdown` (idempotent — double-shutdown and Drop-after-shutdown
+//! are no-ops) joins every worker thread. The conformance and
+//! fault-tolerance suites drive these paths with mock and
+//! [`super::fault::FaultyBackend`]-wrapped backends.
 //!
 //! Like the GEMM service, workers are std threads with private queues
 //! (PJRT client handles are not `Send`, so production backends are
@@ -33,7 +45,7 @@
 //! [`ClusterService::start_with_backends`]).
 
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex};
@@ -46,10 +58,11 @@ use crate::runtime::kernel::{
 use crate::runtime::{HostTensor, Runtime};
 use crate::schedule::shard::{DeviceTile, Shard, ShardGrid, ShardPlan};
 use crate::schedule::{
-    ExecMode, HostCacheProfile, PackedPanels, PanelSide, PanelSource, TiledExecutor,
+    ExecMode, HostCacheProfile, PackedPanels, PanelSide, PanelSource, TiledExecutor, TilePlan,
 };
 use crate::sim::grid2d::CacheCounters;
 
+use super::health::{DeviceHealth, HealthPolicy, HealthTracker, SimClock};
 use super::panel_cache::{PanelCache, PanelKey};
 use super::service::GemmJob;
 
@@ -326,6 +339,62 @@ pub fn fold_partials(semiring: Semiring, acc: &mut HostTensor, part: &HostTensor
     Ok(())
 }
 
+/// Bounds on the cluster's shard retry/re-dispatch machinery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Attempts on one device before the shard moves to another
+    /// (resets when the shard is re-dispatched).
+    pub max_attempts_per_device: u32,
+    /// Hard ceiling on attempts across all devices; the shard's error
+    /// becomes final when it is reached.
+    pub max_total_attempts: u32,
+    /// First-retry backoff; doubles per consecutive failure of a shard.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts_per_device: 2,
+            max_total_attempts: 4,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(1),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail fast: one attempt, no re-dispatch — the pre-recovery
+    /// behavior, used by tests that pin the raw failure surface.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts_per_device: 1, max_total_attempts: 1, ..Default::default() }
+    }
+
+    /// Exponential backoff before the next attempt of a shard that has
+    /// failed `failures` times: `base · 2^(failures-1)`, capped. The
+    /// cluster *accounts* this on a [`SimClock`] rather than sleeping —
+    /// deterministic recovery, full-speed tests.
+    fn backoff(&self, failures: u32) -> Duration {
+        let doublings = failures.saturating_sub(1).min(20);
+        self.backoff_cap.min(self.backoff_base.saturating_mul(1 << doublings))
+    }
+}
+
+/// What recovery cost a cluster run: how many shard attempts were
+/// retried, how many moved to another device, and the exponential
+/// backoff that was accounted (simulated, not slept) between attempts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Shard executions beyond each shard's first attempt.
+    pub retries: u64,
+    /// Retries that moved the shard to a different device.
+    pub redispatches: u64,
+    /// Total simulated backoff accounted between attempts.
+    pub simulated_backoff: Duration,
+}
+
 /// A sharded execution's result + measurements.
 #[derive(Debug)]
 pub struct ClusterRun {
@@ -340,7 +409,13 @@ pub struct ClusterRun {
     /// `plan.predicted_transfer_elements(mode)` by tests).
     pub transfer_elements: u64,
     /// Measured per-device transfer (idle device slots report 0).
+    /// Reflects the devices that *actually ran* each shard: after a
+    /// re-dispatch this matches the replanned `plan`, whose shard
+    /// `device` fields are updated as recovery moves work.
     pub per_device_transfer: Vec<u64>,
+    /// Retry/re-dispatch/backoff accounting (all zero on a fault-free
+    /// run).
+    pub recovery: RecoveryStats,
     pub wall: Duration,
 }
 
@@ -378,7 +453,9 @@ struct DeviceHandle {
     /// Private queue into this device worker; the mutex only guards
     /// concurrent submitters.
     tx: Mutex<mpsc::Sender<DeviceMsg>>,
-    join: Option<std::thread::JoinHandle<()>>,
+    /// Taken exactly once by whichever of `shutdown`/`Drop` runs first
+    /// — the interior mutability that makes shutdown idempotent.
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
@@ -436,6 +513,8 @@ fn worker_loop(mut backend: Box<dyn ShardBackend>, rx: mpsc::Receiver<DeviceMsg>
 /// A fleet of device workers serving sharded GEMMs.
 pub struct ClusterService {
     devices: Vec<DeviceHandle>,
+    retry: RetryPolicy,
+    health: Mutex<HealthTracker>,
 }
 
 /// The deployment this module exists for: one GEMM, sharded. An alias so
@@ -482,7 +561,7 @@ impl ClusterService {
                 };
                 worker_loop(Box::new(backend), rx);
             });
-            devices.push(DeviceHandle { tx: Mutex::new(tx), join: Some(join) });
+            devices.push(DeviceHandle { tx: Mutex::new(tx), join: Mutex::new(Some(join)) });
         }
         drop(ready_tx);
         for _ in 0..devices.len() {
@@ -491,7 +570,7 @@ impl ClusterService {
                 .context("device worker died during startup")?
                 .context("device worker failed to initialize")?;
         }
-        Ok(ClusterService { devices })
+        Ok(Self::assemble(devices))
     }
 
     /// Start over pre-built backends (native runtimes, test mocks).
@@ -508,9 +587,55 @@ impl ClusterService {
             }
             let (tx, rx) = mpsc::channel::<DeviceMsg>();
             let join = std::thread::spawn(move || worker_loop(backend, rx));
-            devices.push(DeviceHandle { tx: Mutex::new(tx), join: Some(join) });
+            devices.push(DeviceHandle { tx: Mutex::new(tx), join: Mutex::new(Some(join)) });
         }
-        Ok(ClusterService { devices })
+        Ok(Self::assemble(devices))
+    }
+
+    fn assemble(devices: Vec<DeviceHandle>) -> ClusterService {
+        let n = devices.len();
+        ClusterService {
+            devices,
+            retry: RetryPolicy::default(),
+            health: Mutex::new(HealthTracker::new(n, HealthPolicy::default())),
+        }
+    }
+
+    /// Replace the retry/re-dispatch bounds (builder style).
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> ClusterService {
+        self.retry = retry;
+        self
+    }
+
+    /// Replace the health thresholds (builder style; resets every
+    /// device's health record).
+    pub fn with_health_policy(self, policy: HealthPolicy) -> ClusterService {
+        let n = self.devices.len();
+        *self.health.lock().unwrap_or_else(|e| e.into_inner()) = HealthTracker::new(n, policy);
+        self
+    }
+
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
+    /// Point-in-time health record of every device — the cluster-stats
+    /// view of the Healthy → Degraded → Quarantined machine.
+    pub fn health_snapshot(&self) -> Vec<DeviceHealth> {
+        self.health.lock().unwrap_or_else(|e| e.into_inner()).snapshot()
+    }
+
+    /// Devices currently out of the serving rotation.
+    pub fn quarantined_devices(&self) -> Vec<usize> {
+        self.health.lock().unwrap_or_else(|e| e.into_inner()).quarantined()
+    }
+
+    fn record_health(&self, device: usize, ok: bool) {
+        self.health.lock().unwrap_or_else(|e| e.into_inner()).record(device, ok);
+    }
+
+    fn device_available(&self, device: usize) -> bool {
+        self.health.lock().unwrap_or_else(|e| e.into_inner()).available(device)
     }
 
     pub fn n_devices(&self) -> usize {
@@ -598,6 +723,7 @@ impl ClusterService {
         validate_job(job).with_context(|| job_context(job, self.n_devices()))?;
         let plan = self
             .plan(job.m, job.n, job.k, job.semiring, job.a.dtype_name())
+            .and_then(|p| self.route_around_quarantine(p))
             .with_context(|| job_context(job, self.n_devices()))?;
         self.execute_plan(job, plan, mode)
     }
@@ -634,86 +760,248 @@ impl ClusterService {
         let tiles = self
             .device_tiles(job.semiring, job.a.dtype_name())
             .with_context(|| job_context(job, self.n_devices()))?;
-        let plan = ShardPlan::with_grid(job.m, job.n, job.k, grid, &tiles);
+        let plan = self
+            .route_around_quarantine(ShardPlan::with_grid(job.m, job.n, job.k, grid, &tiles))
+            .with_context(|| job_context(job, self.n_devices()))?;
         self.execute_plan(job, plan, mode)
     }
 
-    /// Fan a validated plan out over the fleet. Callers have already
+    /// Remap any quarantined device's shards onto the serving rotation
+    /// before dispatch ([`ShardPlan::replan_without`] — geometry and
+    /// per-shard traffic accounting preserved). Errors when quarantine
+    /// has consumed every device the plan relies on.
+    fn route_around_quarantine(&self, mut plan: ShardPlan) -> Result<ShardPlan> {
+        let quarantined = self.health.lock().unwrap_or_else(|e| e.into_inner()).quarantined();
+        for dev in quarantined {
+            if plan.shards.iter().any(|s| s.device == dev) {
+                plan = plan.replan_without(dev).ok_or_else(|| {
+                    anyhow!("device {dev} is quarantined and no serving device remains to take its shards")
+                })?;
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Health probe: run a tiny known-answer GEMM (2x2x2 f32 plus-times)
+    /// on one device and feed the outcome into the health tracker — the
+    /// earned re-admission path for quarantined devices (probation:
+    /// [`HealthPolicy::probation_probes`] consecutive clean probes →
+    /// Healthy; one failed probe → back to Quarantined). Returns whether
+    /// the probe passed; `Err` only for infrastructure failures (dead
+    /// worker, no such slot).
+    pub fn probe(&self, device: usize) -> Result<bool> {
+        if device >= self.n_devices() {
+            bail!("probe: no device slot {device} (fleet has {})", self.n_devices());
+        }
+        let (tile_tx, tile_rx) = mpsc::channel();
+        self.send(
+            device,
+            DeviceMsg::TileShape { semiring: Semiring::PlusTimes, dtype: "float32", reply: tile_tx },
+        )?;
+        let (tm, tn, tk) = match tile_rx
+            .recv()
+            .map_err(|_| anyhow!("device {device} worker died during probe"))?
+        {
+            Ok(shape) => shape,
+            Err(_) => {
+                self.record_health(device, false);
+                return Ok(false);
+            }
+        };
+        let shard = Shard {
+            device,
+            di: 0,
+            dj: 0,
+            dks: 0,
+            row0: 0,
+            rows: 2,
+            col0: 0,
+            cols: 2,
+            k0: 0,
+            kdepth: 2,
+            plan: TilePlan::auto(2, 2, 2, tm, tn, tk),
+        };
+        let ops = ShardOperands {
+            a: Arc::new(HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0])),
+            b: Arc::new(HostTensor::F32(vec![5.0, 6.0, 7.0, 8.0])),
+            a_stride: 2,
+            b_stride: 2,
+            a_id: None,
+            b_id: None,
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.send(
+            device,
+            DeviceMsg::Shard(Box::new(ShardTask {
+                index: 0,
+                shard,
+                semiring: Semiring::PlusTimes,
+                mode: ExecMode::Reuse,
+                ops,
+                reply: reply_tx,
+            })),
+        )?;
+        let (_, result) = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("device {device} worker died during probe"))?;
+        // Known answer: [1 2; 3 4] · [5 6; 7 8] — exact in f32.
+        let passed = match result {
+            Ok(out) => out.c == HostTensor::F32(vec![19.0, 22.0, 43.0, 50.0]),
+            Err(_) => false,
+        };
+        self.record_health(device, passed);
+        Ok(passed)
+    }
+
+    /// Fan a validated plan out over the fleet, with per-shard
+    /// retry/re-dispatch under [`RetryPolicy`]. Callers have already
     /// validated the job (`validate_job`) and sized the grid.
-    fn execute_plan(&self, job: &GemmJob, plan: ShardPlan, mode: ExecMode) -> Result<ClusterRun> {
+    ///
+    /// Recovery invariant: partial results are keyed on shard
+    /// *coordinates* `(di, dj, dks)` — never on the device that produced
+    /// them — and the ascending-dk fold order is fixed by the plan, so a
+    /// run that retried or re-dispatched shards reduces to **the same
+    /// bits** as the fault-free run. The plan's shard `device` fields
+    /// are updated as recovery moves work, so the returned
+    /// `plan.per_device_transfer(mode)` is the accounting for the
+    /// devices that actually executed.
+    fn execute_plan(
+        &self,
+        job: &GemmJob,
+        mut plan: ShardPlan,
+        mode: ExecMode,
+    ) -> Result<ClusterRun> {
         let t0 = Instant::now();
         let (m, n, k) = (job.m, job.n, job.k);
+        let retry = self.retry;
+        let n_shards = plan.n_shards();
 
-        // Fan out: one task per shard, one shard per device worker. The
-        // operands are Arc-shared — no per-run copy of A or B.
-        let a = job.a.clone();
-        let b = job.b.clone();
+        // Operands are Arc-shared — no per-run copy of A or B.
+        let ops = ShardOperands {
+            a: job.a.clone(),
+            b: job.b.clone(),
+            a_stride: k,
+            b_stride: n,
+            a_id: job.a_id,
+            b_id: job.b_id,
+        };
         let (reply_tx, reply_rx) = mpsc::channel::<(usize, Result<ShardOutput>)>();
-        for (index, shard) in plan.shards.iter().enumerate() {
-            self.send(
-                shard.device,
-                DeviceMsg::Shard(Box::new(ShardTask {
+
+        // Per-shard recovery ledgers.
+        let mut outputs: Vec<Option<ShardOutput>> = Vec::new();
+        outputs.resize_with(n_shards, || None);
+        let mut final_errors: Vec<Option<anyhow::Error>> = Vec::new();
+        final_errors.resize_with(n_shards, || None);
+        let mut device_attempts = vec![0u32; n_shards];
+        let mut total_attempts = vec![0u32; n_shards];
+        let mut device_history: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        let mut clock = SimClock::default();
+        let mut recovery = RecoveryStats::default();
+
+        // Dispatch/collect loop: drain the ready queue, then absorb one
+        // reply; failed shards re-enter the queue (same device while the
+        // per-device budget and its health allow, otherwise re-dispatched
+        // to the serving device with the least planned traffic) until
+        // they succeed or exhaust `max_total_attempts`. Siblings keep
+        // running throughout.
+        let mut queue: VecDeque<usize> = (0..n_shards).collect();
+        let mut outstanding = 0usize;
+        loop {
+            while let Some(index) = queue.pop_front() {
+                let device = plan.shards[index].device;
+                device_attempts[index] += 1;
+                total_attempts[index] += 1;
+                if device_history[index].last() != Some(&device) {
+                    device_history[index].push(device);
+                }
+                let task = ShardTask {
                     index,
-                    shard: shard.clone(),
+                    shard: plan.shards[index].clone(),
                     semiring: job.semiring,
                     mode,
-                    ops: ShardOperands {
-                        a: a.clone(),
-                        b: b.clone(),
-                        a_stride: k,
-                        b_stride: n,
-                        a_id: job.a_id,
-                        b_id: job.b_id,
-                    },
+                    ops: ops.clone(),
                     reply: reply_tx.clone(),
-                })),
-            )
-            .with_context(|| job_context(job, self.n_devices()))?;
+                };
+                if self.send(device, DeviceMsg::Shard(Box::new(task))).is_err() {
+                    // A dead worker is a device failure like any other:
+                    // feed it through the same recovery path.
+                    let _ = reply_tx
+                        .send((index, Err(anyhow!("device {device} worker queue closed"))));
+                }
+                outstanding += 1;
+            }
+            if outstanding == 0 {
+                break;
+            }
+            let (index, result) = reply_rx
+                .recv()
+                .expect("reply channel is held open by the dispatcher");
+            outstanding -= 1;
+            let device = plan.shards[index].device;
+            match result {
+                Ok(out) => {
+                    self.record_health(device, true);
+                    outputs[index] = Some(out);
+                }
+                Err(err) => {
+                    self.record_health(device, false);
+                    let attempts = total_attempts[index];
+                    let may_retry = attempts < retry.max_total_attempts;
+                    let in_place = may_retry
+                        && device_attempts[index] < retry.max_attempts_per_device
+                        && self.device_available(device);
+                    // Re-dispatch target: serving device (excluding the
+                    // one that just failed) with the least accumulated
+                    // planned traffic, ties → lowest id.
+                    let target = if may_retry && !in_place {
+                        let per = plan.per_device_transfer(mode);
+                        (0..self.n_devices())
+                            .filter(|&d| d != device && self.device_available(d))
+                            .min_by_key(|&d| (per.get(d).copied().unwrap_or(0), d))
+                    } else {
+                        None
+                    };
+                    if in_place || target.is_some() {
+                        let pause = retry.backoff(attempts);
+                        clock.advance(pause);
+                        recovery.simulated_backoff += pause;
+                        recovery.retries += 1;
+                        if let Some(d) = target {
+                            plan.shards[index].device = d;
+                            device_attempts[index] = 0;
+                            recovery.redispatches += 1;
+                        }
+                        queue.push_back(index);
+                    } else {
+                        let tried = device_history[index]
+                            .iter()
+                            .map(|d| d.to_string())
+                            .collect::<Vec<_>>()
+                            .join(", ");
+                        final_errors[index] = Some(err.context(format!(
+                            "gave up after {attempts} attempt(s) on device(s) [{tried}]"
+                        )));
+                    }
+                }
+            }
         }
         drop(reply_tx);
 
-        // Collect every shard's reply (failures included — sibling shards
-        // always run to completion; a dead worker closes the channel).
-        let mut outputs: Vec<Option<Result<ShardOutput>>> = Vec::new();
-        outputs.resize_with(plan.n_shards(), || None);
-        while let Ok((index, result)) = reply_rx.recv() {
-            outputs[index] = Some(result);
-        }
-        for (index, slot) in outputs.iter_mut().enumerate() {
-            if slot.is_none() {
-                let s = &plan.shards[index];
-                *slot = Some(Err(anyhow!(
-                    "device {} worker died before completing shard (di {}, dj {}, dk {})",
-                    s.device,
-                    s.di,
-                    s.dj,
-                    s.dks
-                )));
-            }
-        }
-        let completed = outputs
-            .iter()
-            .filter(|o| matches!(o, Some(Ok(_))))
-            .count();
-        if completed < plan.n_shards() {
+        let completed = outputs.iter().filter(|o| o.is_some()).count();
+        if completed < n_shards {
             // Surface the first failure in shard order, with fleet context.
-            let err = outputs
+            let err = final_errors
                 .iter_mut()
-                .find_map(|o| match o.take() {
-                    Some(Err(e)) => Some(e),
-                    _ => None,
-                })
+                .find_map(|o| o.take())
                 .expect("at least one shard failed");
             return Err(err.context(format!(
                 "{} ({completed}/{} sibling shards completed)",
                 job_context(job, self.n_devices()),
-                plan.n_shards() - 1
+                n_shards - 1
             )));
         }
-        let outputs: Vec<ShardOutput> = outputs
-            .into_iter()
-            .map(|o| o.expect("collected").expect("all completed"))
-            .collect();
+        let outputs: Vec<ShardOutput> =
+            outputs.into_iter().map(|o| o.expect("all completed")).collect();
 
         // Reduce + assemble: shards are in (di, dj, dks) lexicographic
         // order, so each (di, dj) block's k-partials are contiguous and
@@ -758,6 +1046,7 @@ impl ClusterService {
             steps_executed: steps,
             transfer_elements: transfer,
             per_device_transfer: per_device,
+            recovery,
             wall: t0.elapsed(),
         })
     }
@@ -769,10 +1058,13 @@ impl ClusterService {
     }
 
     /// Stop accepting work and join every device worker thread.
-    pub fn shutdown(mut self) {
+    /// Idempotent: each worker's join handle is taken exactly once, so a
+    /// second `shutdown` (or the `Drop` that follows one) is a no-op.
+    pub fn shutdown(&self) {
         self.send_shutdown();
-        for d in &mut self.devices {
-            if let Some(join) = d.join.take() {
+        for d in &self.devices {
+            let handle = d.join.lock().unwrap_or_else(|e| e.into_inner()).take();
+            if let Some(join) = handle {
                 let _ = join.join();
             }
         }
@@ -781,7 +1073,11 @@ impl ClusterService {
 
 impl Drop for ClusterService {
     fn drop(&mut self) {
-        self.send_shutdown();
+        // Full shutdown, not just a send: a service dropped without an
+        // explicit `shutdown` must still join its worker threads rather
+        // than leak them. After an explicit `shutdown` every join handle
+        // is already taken and this is a no-op.
+        self.shutdown();
     }
 }
 

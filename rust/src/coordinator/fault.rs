@@ -1,0 +1,433 @@
+//! Deterministic fault injection: the chaos harness behind the
+//! fault-tolerance layer.
+//!
+//! A [`FaultPlan`] is a seeded list of [`FaultSpec`]s — *where* a fault
+//! fires ([`FaultSite`]), *when* it fires ([`FaultTrigger`]), and *what*
+//! it does ([`FaultKind`]). The same plan object is injectable at two
+//! choke points:
+//!
+//! * behind [`crate::coordinator::ShardBackend`], via [`FaultyBackend`]
+//!   (or the [`faulty_native_cluster`] helper), so cluster shards fail,
+//!   panic, or stall on chosen grid coordinates / devices / attempts;
+//! * into [`crate::coordinator::GemmService`] workers (via
+//!   `ServiceConfig::fault_plan`), so service requests hit the same
+//!   schedule.
+//!
+//! Determinism is the point: `Probability` triggers draw from a
+//! SplitMix64 hash of `(seed, spec index, site identity, attempt)` —
+//! **not** from a shared stream — so the verdict for a given shard
+//! attempt is a pure function of the plan, independent of thread
+//! interleaving. Two runs of one schedule inject the same faults at the
+//! same points; the recovery suite then pins the recovered output
+//! bit-identical to the fault-free run. [`FaultPlan::reset`] rewinds the
+//! attempt/firing counters so one plan can drive repeated bench
+//! iterations with an identical schedule each time.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::datatype::Semiring;
+use crate::schedule::shard::Shard;
+use crate::schedule::ExecMode;
+use crate::util::rng::Rng;
+
+use super::cluster::{ShardBackend, ShardOperands, ShardOutput};
+use crate::sim::grid2d::CacheCounters;
+
+/// What an injected fault does at its firing point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Return a contextual error (a detectable device-side failure —
+    /// the DMA-timeout class).
+    Fail,
+    /// Panic inside the execution path (the worker's `catch_unwind`
+    /// containment is part of what the suite exercises).
+    Panic,
+    /// Sleep before executing normally (a straggler, not a failure —
+    /// exercises timeout paths without corrupting results).
+    Delay(Duration),
+}
+
+/// Where a fault applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Every shard execution (filtered only by the trigger).
+    AnyShard,
+    /// One shard grid coordinate, on whichever device it lands.
+    Shard { di: usize, dj: usize, dks: usize },
+    /// Every shard executed by one device slot (probes included — a
+    /// broken device fails its probes too).
+    Device(usize),
+    /// Every service-side request (service injection point).
+    AnyRequest,
+    /// One service request id.
+    Request(u64),
+}
+
+/// When a matching site actually fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultTrigger {
+    /// Every matching execution.
+    Always,
+    /// Only the first matching execution (anywhere).
+    Once,
+    /// The first `n` matching executions.
+    FirstN(u32),
+    /// Only the `n`-th attempt (1-based) of a given shard coordinate /
+    /// request — the "heals on retry" and "fails only under retry"
+    /// schedules.
+    OnAttempt(u32),
+    /// Each matching execution independently with probability `p`,
+    /// drawn deterministically from the plan seed and the site identity
+    /// (not from a shared stream — thread interleaving cannot change
+    /// the verdicts).
+    Probability(f64),
+}
+
+/// One injection rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub site: FaultSite,
+    pub trigger: FaultTrigger,
+    pub kind: FaultKind,
+}
+
+#[derive(Debug, Default)]
+struct FaultState {
+    /// Attempt counter per shard coordinate (spans devices: a
+    /// re-dispatched shard keeps counting attempts).
+    shard_attempts: HashMap<(usize, usize, usize), u32>,
+    /// Attempt counter per service request id.
+    request_attempts: HashMap<u64, u32>,
+    /// Firings per spec (drives `Once` / `FirstN`).
+    fired: Vec<u32>,
+    /// Total faults injected (all specs).
+    injected: u64,
+}
+
+/// A seeded, resettable fault schedule. Shareable (`Arc`) across
+/// backends, workers, and the test harness; all mutation is behind one
+/// mutex, and `Probability` verdicts never depend on observation order.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    specs: Vec<FaultSpec>,
+    state: Mutex<FaultState>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, specs: Vec<FaultSpec>) -> FaultPlan {
+        let fired = vec![0; specs.len()];
+        FaultPlan {
+            seed,
+            specs,
+            state: Mutex::new(FaultState { fired, ..FaultState::default() }),
+        }
+    }
+
+    /// A plan that injects nothing (the fault-free control).
+    pub fn none() -> FaultPlan {
+        FaultPlan::new(0, Vec::new())
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Faults injected so far (since construction or the last `reset`).
+    pub fn injected(&self) -> u64 {
+        self.lock().injected
+    }
+
+    /// Rewind every attempt and firing counter: the next execution sees
+    /// the schedule from the top. Lets one plan drive repeated bench
+    /// iterations with an identical fault schedule per iteration.
+    pub fn reset(&self) {
+        let mut st = self.lock();
+        st.shard_attempts.clear();
+        st.request_attempts.clear();
+        st.fired = vec![0; self.specs.len()];
+        st.injected = 0;
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FaultState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Deterministic per-execution coin flip: a pure function of the
+    /// plan seed, the spec index, the site identity, and the attempt
+    /// number. SplitMix64's output on a distinct-key input stream is
+    /// uniform, so `p` is honored in distribution while the verdict for
+    /// any given (site, attempt) is fixed.
+    fn coin(&self, spec_idx: usize, site_key: u64, attempt: u32, p: f64) -> bool {
+        let key = self
+            .seed
+            .wrapping_add((spec_idx as u64).wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add(site_key.wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add((attempt as u64).wrapping_mul(0x94D049BB133111EB));
+        Rng::new(key).next_f64() < p
+    }
+
+    fn evaluate(
+        &self,
+        st: &mut FaultState,
+        matches: impl Fn(&FaultSite) -> bool,
+        site_key: u64,
+        attempt: u32,
+    ) -> Option<FaultKind> {
+        for (i, spec) in self.specs.iter().enumerate() {
+            if !matches(&spec.site) {
+                continue;
+            }
+            let fires = match spec.trigger {
+                FaultTrigger::Always => true,
+                FaultTrigger::Once => st.fired[i] == 0,
+                FaultTrigger::FirstN(n) => st.fired[i] < n,
+                FaultTrigger::OnAttempt(n) => attempt == n,
+                FaultTrigger::Probability(p) => self.coin(i, site_key, attempt, p),
+            };
+            if fires {
+                st.fired[i] += 1;
+                st.injected += 1;
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+
+    /// Consult the plan for one shard execution: `device` is the slot
+    /// about to run it, `(di, dj, dks)` its grid coordinates. Counts the
+    /// attempt (per coordinate, across devices) and returns the first
+    /// matching spec's fault, if any fires.
+    pub fn on_shard(&self, device: usize, di: usize, dj: usize, dks: usize) -> Option<FaultKind> {
+        let mut st = self.lock();
+        let attempt = {
+            let a = st.shard_attempts.entry((di, dj, dks)).or_insert(0);
+            *a += 1;
+            *a
+        };
+        let site_key = ((di as u64) << 42) | ((dj as u64) << 21) | dks as u64;
+        self.evaluate(
+            &mut st,
+            |site| match *site {
+                FaultSite::AnyShard => true,
+                FaultSite::Shard { di: i, dj: j, dks: s } => (i, j, s) == (di, dj, dks),
+                FaultSite::Device(d) => d == device,
+                FaultSite::AnyRequest | FaultSite::Request(_) => false,
+            },
+            site_key,
+            attempt,
+        )
+    }
+
+    /// Consult the plan for one service request (the worker-side
+    /// injection point).
+    pub fn on_request(&self, id: u64) -> Option<FaultKind> {
+        let mut st = self.lock();
+        let attempt = {
+            let a = st.request_attempts.entry(id).or_insert(0);
+            *a += 1;
+            *a
+        };
+        self.evaluate(
+            &mut st,
+            |site| match *site {
+                FaultSite::AnyRequest => true,
+                FaultSite::Request(r) => r == id,
+                _ => false,
+            },
+            id,
+            attempt,
+        )
+    }
+}
+
+/// A [`ShardBackend`] decorator that consults a [`FaultPlan`] before
+/// delegating: `Fail` returns an "injected fault" error, `Panic` panics
+/// (exercising the worker's unwind containment), `Delay` sleeps then
+/// runs normally. Tile-shape and counter queries pass straight through.
+pub struct FaultyBackend<B: ShardBackend> {
+    inner: B,
+    plan: std::sync::Arc<FaultPlan>,
+}
+
+impl<B: ShardBackend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: std::sync::Arc<FaultPlan>) -> FaultyBackend<B> {
+        FaultyBackend { inner, plan }
+    }
+}
+
+impl<B: ShardBackend> ShardBackend for FaultyBackend<B> {
+    fn device_id(&self) -> usize {
+        self.inner.device_id()
+    }
+
+    fn tile_shape(
+        &mut self,
+        semiring: Semiring,
+        dtype: &'static str,
+    ) -> Result<(usize, usize, usize)> {
+        self.inner.tile_shape(semiring, dtype)
+    }
+
+    fn run_shard(
+        &mut self,
+        shard: &Shard,
+        semiring: Semiring,
+        ops: &ShardOperands,
+        mode: ExecMode,
+    ) -> Result<ShardOutput> {
+        match self.plan.on_shard(self.inner.device_id(), shard.di, shard.dj, shard.dks) {
+            Some(FaultKind::Fail) => bail!(
+                "injected fault: device {} refused shard (di {}, dj {}, dk {})",
+                self.inner.device_id(),
+                shard.di,
+                shard.dj,
+                shard.dks
+            ),
+            Some(FaultKind::Panic) => panic!(
+                "injected panic: device {} died on shard (di {}, dj {}, dk {})",
+                self.inner.device_id(),
+                shard.di,
+                shard.dj,
+                shard.dks
+            ),
+            Some(FaultKind::Delay(d)) => {
+                std::thread::sleep(d);
+                self.inner.run_shard(shard, semiring, ops, mode)
+            }
+            None => self.inner.run_shard(shard, semiring, ops, mode),
+        }
+    }
+
+    fn panel_counters(&self) -> CacheCounters {
+        self.inner.panel_counters()
+    }
+}
+
+/// Stand up a native-runtime cluster whose every device backend is
+/// wrapped in a [`FaultyBackend`] consulting one shared plan — the
+/// harness the fault-tolerance suite and the chaos bench both use.
+/// Pass [`FaultPlan::none`] for the fault-free control fleet.
+pub fn faulty_native_cluster(
+    n_devices: usize,
+    profile: crate::schedule::HostCacheProfile,
+    plan: std::sync::Arc<FaultPlan>,
+) -> Result<super::cluster::ClusterService> {
+    use super::cluster::{ClusterService, RuntimeBackend};
+    use crate::runtime::Runtime;
+    let backends = (0..n_devices)
+        .map(|d| {
+            let rt = Runtime::native_default()?;
+            Ok(Box::new(FaultyBackend::new(RuntimeBackend::new(d, rt, profile), plan.clone()))
+                as Box<dyn ShardBackend>)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    ClusterService::start_with_backends(backends)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail_spec(site: FaultSite, trigger: FaultTrigger) -> FaultSpec {
+        FaultSpec { site, trigger, kind: FaultKind::Fail }
+    }
+
+    #[test]
+    fn once_fires_exactly_once_and_reset_rewinds() {
+        let plan = FaultPlan::new(1, vec![fail_spec(FaultSite::AnyShard, FaultTrigger::Once)]);
+        assert_eq!(plan.on_shard(0, 0, 0, 0), Some(FaultKind::Fail));
+        assert_eq!(plan.on_shard(0, 0, 0, 0), None);
+        assert_eq!(plan.on_shard(1, 1, 0, 0), None);
+        assert_eq!(plan.injected(), 1);
+        plan.reset();
+        assert_eq!(plan.on_shard(1, 1, 0, 0), Some(FaultKind::Fail), "reset rewinds");
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn sites_filter_by_coordinate_and_device() {
+        let plan = FaultPlan::new(
+            2,
+            vec![
+                fail_spec(FaultSite::Shard { di: 1, dj: 0, dks: 0 }, FaultTrigger::Always),
+                fail_spec(FaultSite::Device(3), FaultTrigger::Always),
+            ],
+        );
+        assert_eq!(plan.on_shard(0, 0, 0, 0), None);
+        assert_eq!(plan.on_shard(2, 1, 0, 0), Some(FaultKind::Fail), "coords match");
+        assert_eq!(plan.on_shard(3, 0, 1, 0), Some(FaultKind::Fail), "device matches");
+        // Shard sites never fire for requests and vice versa.
+        assert_eq!(plan.on_request(7), None);
+    }
+
+    #[test]
+    fn on_attempt_keys_on_the_shard_coordinate_across_devices() {
+        let plan = FaultPlan::new(
+            3,
+            vec![fail_spec(FaultSite::AnyShard, FaultTrigger::OnAttempt(2))],
+        );
+        assert_eq!(plan.on_shard(0, 0, 0, 0), None, "attempt 1 clean");
+        // Attempt 2 fires even though the shard moved to another device.
+        assert_eq!(plan.on_shard(1, 0, 0, 0), Some(FaultKind::Fail));
+        assert_eq!(plan.on_shard(1, 0, 0, 0), None, "attempt 3 clean");
+        // An independent coordinate has its own attempt counter.
+        assert_eq!(plan.on_shard(0, 0, 1, 0), None);
+    }
+
+    #[test]
+    fn probability_is_deterministic_and_order_independent() {
+        let specs = vec![fail_spec(FaultSite::AnyShard, FaultTrigger::Probability(0.5))];
+        let coords: Vec<(usize, usize, usize)> =
+            (0..4).flat_map(|i| (0..4).map(move |j| (i, j, 0))).collect();
+        let plan_fwd = FaultPlan::new(42, specs.clone());
+        let fwd: Vec<bool> = coords
+            .iter()
+            .map(|&(i, j, s)| plan_fwd.on_shard(0, i, j, s).is_some())
+            .collect();
+        // Same plan observed in reverse order: identical verdicts per
+        // coordinate — the draw depends on the site, not the sequence.
+        let plan_rev = FaultPlan::new(42, specs.clone());
+        let rev: Vec<bool> = coords
+            .iter()
+            .rev()
+            .map(|&(i, j, s)| plan_rev.on_shard(1, i, j, s).is_some())
+            .collect();
+        let rev: Vec<bool> = rev.into_iter().rev().collect();
+        assert_eq!(fwd, rev);
+        // A different seed gives a different schedule (with 16 draws at
+        // p=0.5, collision probability 2^-16).
+        let plan_other = FaultPlan::new(43, specs);
+        let other: Vec<bool> = coords
+            .iter()
+            .map(|&(i, j, s)| plan_other.on_shard(0, i, j, s).is_some())
+            .collect();
+        assert_ne!(fwd, other);
+        // And p is roughly honored.
+        let hits = fwd.iter().filter(|&&b| b).count();
+        assert!((1..16).contains(&hits), "p=0.5 over 16 draws fired {hits} times");
+    }
+
+    #[test]
+    fn first_n_and_request_sites() {
+        let plan = FaultPlan::new(
+            4,
+            vec![
+                FaultSpec {
+                    site: FaultSite::AnyRequest,
+                    trigger: FaultTrigger::FirstN(2),
+                    kind: FaultKind::Delay(Duration::from_millis(1)),
+                },
+                fail_spec(FaultSite::Request(9), FaultTrigger::Always),
+            ],
+        );
+        assert!(matches!(plan.on_request(1), Some(FaultKind::Delay(_))));
+        assert!(matches!(plan.on_request(2), Some(FaultKind::Delay(_))));
+        assert_eq!(plan.on_request(3), None, "FirstN exhausted");
+        assert_eq!(plan.on_request(9), Some(FaultKind::Fail), "later spec still matches");
+    }
+}

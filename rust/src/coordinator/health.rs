@@ -1,0 +1,289 @@
+//! Device health tracking: the fleet's immune system.
+//!
+//! Every per-shard outcome the cluster observes feeds a deterministic
+//! per-device state machine:
+//!
+//! ```text
+//!          failure (≥ degrade_after consecutive)
+//! Healthy ───────────────────────────────────────▶ Degraded
+//!    ▲  ▲       failure (≥ quarantine_after consecutive)   │
+//!    │  └─ success (resets) ◀──────────────────────────────┘
+//!    │                                                     ▼
+//!    │            clean probe × probation_probes      Quarantined
+//!    └────────── Probation ◀──────────────────────────────┘
+//!                    │ failed probe (resets probe count)
+//!                    └───────────────▶ back to Quarantined
+//! ```
+//!
+//! *Healthy* and *Degraded* devices receive work (Degraded is a warning
+//! level: recent consecutive failures, not yet enough to evict).
+//! *Quarantined* devices receive none — the cluster replans around them
+//! ([`crate::schedule::shard::ShardPlan::replan_without`]) and re-dispatches
+//! their in-flight shards to survivors. Re-admission is earned, not
+//! timed: [`crate::coordinator::cluster::ClusterService::probe`] runs a
+//! tiny known-answer GEMM on the quarantined device; after
+//! [`HealthPolicy::probation_probes`] consecutive clean probes the device
+//! returns to Healthy (the probation window), and a single failed probe
+//! sends it back to the start of quarantine.
+//!
+//! The tracker is purely host-side bookkeeping — no wall-clock timers —
+//! so every transition is reproducible from the outcome sequence alone.
+//! Retry backoff likewise runs on a [`SimClock`]: delays are *accounted*
+//! (and surfaced in recovery stats) rather than slept, which keeps the
+//! fault-tolerance suite fast and bit-for-bit deterministic.
+
+use std::time::Duration;
+
+/// Thresholds of the per-device state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HealthPolicy {
+    /// Consecutive failures at which a device is marked Degraded.
+    pub degrade_after: u32,
+    /// Consecutive failures at which a device is Quarantined (stops
+    /// receiving shards until it earns re-admission).
+    pub quarantine_after: u32,
+    /// Consecutive clean probes a quarantined device must serve before
+    /// it is re-admitted as Healthy.
+    pub probation_probes: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { degrade_after: 1, quarantine_after: 3, probation_probes: 2 }
+    }
+}
+
+/// Where a device stands in the health state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    /// Serving normally.
+    Healthy,
+    /// Recent consecutive failures; still serving.
+    Degraded,
+    /// Evicted from the rotation; receives probes only.
+    Quarantined,
+    /// Quarantined but with clean probes accumulating toward
+    /// re-admission.
+    Probation,
+}
+
+impl std::fmt::Display for DeviceState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DeviceState::Healthy => "healthy",
+            DeviceState::Degraded => "degraded",
+            DeviceState::Quarantined => "quarantined",
+            DeviceState::Probation => "probation",
+        })
+    }
+}
+
+/// One device's health record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceHealth {
+    pub device: usize,
+    pub state: DeviceState,
+    /// Consecutive failures since the last success (drives Degraded /
+    /// Quarantined transitions).
+    pub consecutive_failures: u32,
+    /// Consecutive clean probes while quarantined (drives re-admission).
+    pub clean_probes: u32,
+    /// Lifetime outcome counts.
+    pub total_failures: u64,
+    pub total_successes: u64,
+}
+
+impl DeviceHealth {
+    fn new(device: usize) -> DeviceHealth {
+        DeviceHealth {
+            device,
+            state: DeviceState::Healthy,
+            consecutive_failures: 0,
+            clean_probes: 0,
+            total_failures: 0,
+            total_successes: 0,
+        }
+    }
+
+    /// Whether the device is in the serving rotation.
+    pub fn available(&self) -> bool {
+        matches!(self.state, DeviceState::Healthy | DeviceState::Degraded)
+    }
+
+    fn record(&mut self, policy: &HealthPolicy, ok: bool) {
+        if ok {
+            self.total_successes += 1;
+        } else {
+            self.total_failures += 1;
+        }
+        match self.state {
+            DeviceState::Healthy | DeviceState::Degraded => {
+                if ok {
+                    self.consecutive_failures = 0;
+                    self.state = DeviceState::Healthy;
+                } else {
+                    self.consecutive_failures += 1;
+                    self.state = if self.consecutive_failures >= policy.quarantine_after {
+                        self.clean_probes = 0;
+                        DeviceState::Quarantined
+                    } else if self.consecutive_failures >= policy.degrade_after {
+                        DeviceState::Degraded
+                    } else {
+                        DeviceState::Healthy
+                    };
+                }
+            }
+            DeviceState::Quarantined | DeviceState::Probation => {
+                if ok {
+                    self.clean_probes += 1;
+                    if self.clean_probes >= policy.probation_probes {
+                        self.consecutive_failures = 0;
+                        self.clean_probes = 0;
+                        self.state = DeviceState::Healthy;
+                    } else {
+                        self.state = DeviceState::Probation;
+                    }
+                } else {
+                    self.clean_probes = 0;
+                    self.consecutive_failures += 1;
+                    self.state = DeviceState::Quarantined;
+                }
+            }
+        }
+    }
+}
+
+/// Fleet-wide health ledger: one [`DeviceHealth`] per device slot, fed
+/// by per-shard outcomes (and probe outcomes) as the cluster observes
+/// them.
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    policy: HealthPolicy,
+    devices: Vec<DeviceHealth>,
+}
+
+impl HealthTracker {
+    pub fn new(n_devices: usize, policy: HealthPolicy) -> HealthTracker {
+        HealthTracker { policy, devices: (0..n_devices).map(DeviceHealth::new).collect() }
+    }
+
+    pub fn policy(&self) -> HealthPolicy {
+        self.policy
+    }
+
+    /// Record one shard (or probe) outcome on a device.
+    pub fn record(&mut self, device: usize, ok: bool) {
+        let policy = self.policy;
+        self.devices[device].record(&policy, ok);
+    }
+
+    /// Whether a device is in the serving rotation.
+    pub fn available(&self, device: usize) -> bool {
+        self.devices[device].available()
+    }
+
+    pub fn state(&self, device: usize) -> DeviceState {
+        self.devices[device].state
+    }
+
+    /// Devices currently out of the rotation (Quarantined or Probation).
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.devices.iter().filter(|d| !d.available()).map(|d| d.device).collect()
+    }
+
+    /// Devices currently serving.
+    pub fn available_devices(&self) -> Vec<usize> {
+        self.devices.iter().filter(|d| d.available()).map(|d| d.device).collect()
+    }
+
+    /// Point-in-time copy of every device's record.
+    pub fn snapshot(&self) -> Vec<DeviceHealth> {
+        self.devices.clone()
+    }
+}
+
+/// A simulated clock for retry backoff: delays are accumulated, not
+/// slept, so recovery is deterministic and the fault suite runs at full
+/// speed. The accumulated time is reported in the cluster's recovery
+/// stats — the analogue of wall-clock backoff a wire-connected fleet
+/// would pay.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimClock {
+    now: Duration,
+}
+
+impl SimClock {
+    pub fn advance(&mut self, d: Duration) {
+        self.now += d;
+    }
+
+    /// Total simulated time elapsed.
+    pub fn now(&self) -> Duration {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consecutive_failures_walk_healthy_degraded_quarantined() {
+        let mut t = HealthTracker::new(2, HealthPolicy::default());
+        assert_eq!(t.state(0), DeviceState::Healthy);
+        t.record(0, false);
+        assert_eq!(t.state(0), DeviceState::Degraded, "degrade_after=1");
+        assert!(t.available(0), "degraded still serves");
+        t.record(0, false);
+        assert_eq!(t.state(0), DeviceState::Degraded);
+        t.record(0, false);
+        assert_eq!(t.state(0), DeviceState::Quarantined, "quarantine_after=3");
+        assert!(!t.available(0));
+        assert_eq!(t.quarantined(), vec![0]);
+        assert_eq!(t.available_devices(), vec![1]);
+        // Device 1 untouched.
+        assert_eq!(t.state(1), DeviceState::Healthy);
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let mut t = HealthTracker::new(1, HealthPolicy::default());
+        t.record(0, false);
+        t.record(0, false);
+        t.record(0, true);
+        assert_eq!(t.state(0), DeviceState::Healthy, "success resets");
+        assert_eq!(t.snapshot()[0].consecutive_failures, 0);
+        // The streak restarts from zero: two more failures stay short of
+        // the quarantine threshold.
+        t.record(0, false);
+        t.record(0, false);
+        assert_eq!(t.state(0), DeviceState::Degraded);
+    }
+
+    #[test]
+    fn probation_readmits_after_n_clean_probes_and_resets_on_failure() {
+        let policy = HealthPolicy { degrade_after: 1, quarantine_after: 2, probation_probes: 2 };
+        let mut t = HealthTracker::new(1, policy);
+        t.record(0, false);
+        t.record(0, false);
+        assert_eq!(t.state(0), DeviceState::Quarantined);
+        t.record(0, true);
+        assert_eq!(t.state(0), DeviceState::Probation, "one clean probe of two");
+        assert!(!t.available(0), "probation still out of rotation");
+        t.record(0, false);
+        assert_eq!(t.state(0), DeviceState::Quarantined, "failed probe resets");
+        t.record(0, true);
+        t.record(0, true);
+        assert_eq!(t.state(0), DeviceState::Healthy, "re-admitted");
+        assert!(t.available(0));
+        assert_eq!(t.snapshot()[0].consecutive_failures, 0);
+    }
+
+    #[test]
+    fn sim_clock_accumulates() {
+        let mut c = SimClock::default();
+        c.advance(Duration::from_millis(10));
+        c.advance(Duration::from_millis(20));
+        assert_eq!(c.now(), Duration::from_millis(30));
+    }
+}

@@ -27,9 +27,18 @@
 //!   reduction and per-shard failure context — the routing-feasibility
 //!   story of [`routing`] replayed at the fleet level (each device link
 //!   carries its own share; the host sees the aggregate).
+//! * [`health`] — per-device health state machine (Healthy → Degraded →
+//!   Quarantined, probation re-admission via known-answer probes) fed by
+//!   shard outcomes, plus the simulated clock the retry backoff runs on.
+//! * [`fault`] — the deterministic fault-injection harness: a seeded
+//!   [`FaultPlan`] of fail/panic/delay rules injectable behind
+//!   [`ShardBackend`] and into service workers, shared by the
+//!   fault-tolerance suite and the chaos bench.
 
 pub mod build;
 pub mod cluster;
+pub mod fault;
+pub mod health;
 pub mod instance;
 pub mod panel_cache;
 pub mod report;
@@ -37,10 +46,18 @@ pub mod routing;
 pub mod service;
 
 pub use build::{build_kernel, BuildOutcome, BuildReport};
-pub use cluster::{ClusterRun, ClusterService, RuntimeBackend, ShardBackend, ShardedGemm};
+pub use cluster::{
+    ClusterRun, ClusterService, RecoveryStats, RetryPolicy, RuntimeBackend, ShardBackend,
+    ShardedGemm,
+};
+pub use fault::{
+    faulty_native_cluster, FaultKind, FaultPlan, FaultSite, FaultSpec, FaultTrigger,
+    FaultyBackend,
+};
+pub use health::{DeviceHealth, DeviceState, HealthPolicy, HealthTracker, SimClock};
 pub use instance::KernelInstance;
 pub use panel_cache::{PanelCache, PanelKey};
 pub use service::{
     BatchSubmission, GemmJob, GemmRequest, GemmResponse, GemmService, ServiceConfig,
-    SharedOperand,
+    SharedOperand, SubmitError,
 };

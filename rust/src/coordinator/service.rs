@@ -81,11 +81,56 @@ use crate::schedule::{
 };
 use crate::sim::grid2d::CacheCounters;
 
+use super::fault::{FaultKind, FaultPlan};
 use super::panel_cache::{PanelCache, PanelKey};
 
 /// Process-wide operand id source: ids must be unique per cache key
 /// space, and caches can outlive any one service, so ids are global.
 static NEXT_OPERAND_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Typed admission/submission failure — the load-shedding surface of
+/// the deadline-aware entry points. Distinct from a request that was
+/// *accepted* and then failed (those come back through the response
+/// channel): a shed job never entered a queue and cost nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The job's deadline is infeasible against the picked worker's
+    /// queued work at the service's estimated drain rate.
+    Rejected {
+        /// Estimated queueing + service time had the job been accepted.
+        estimated_wait: Duration,
+        /// How much sooner the job would need to arrive to be feasible
+        /// — retry after the backlog has drained by at least this much.
+        retry_after_hint: Duration,
+        /// Work units already pending on the picked worker.
+        queued_work_units: u64,
+    },
+    /// `submit_with_timeout` could not hand the job to a worker queue
+    /// within its bound (sustained overload on every retry).
+    Timeout {
+        /// How long the submitter waited before giving up.
+        waited: Duration,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Rejected { estimated_wait, retry_after_hint, queued_work_units } => {
+                write!(
+                    f,
+                    "job shed: estimated wait {estimated_wait:?} exceeds the deadline \
+                     ({queued_work_units} work units queued); retry after {retry_after_hint:?}"
+                )
+            }
+            SubmitError::Timeout { waited } => {
+                write!(f, "submission timed out after {waited:?} (all worker queues full)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A host operand registered for cross-request reuse: a process-unique
 /// id plus the shared tensor. Jobs built from the same `SharedOperand`
@@ -140,6 +185,14 @@ pub struct GemmJob {
     /// Stable id for cross-request panel caching of B (see
     /// [`GemmJob::shared_b`]).
     pub(crate) b_id: Option<u64>,
+    /// Optional completion deadline, measured from submission. The
+    /// deadline-aware entry points ([`GemmService::try_submit`],
+    /// [`GemmService::submit_with_timeout`]) estimate the picked
+    /// worker's queued work and reject the job with a typed
+    /// [`SubmitError::Rejected`] when it cannot finish in time —
+    /// load-shedding instead of unbounded blocking. `None` (the
+    /// default) means best-effort: never shed.
+    pub deadline: Option<Duration>,
 }
 
 impl GemmJob {
@@ -160,7 +213,14 @@ impl GemmJob {
             semiring,
             a_id: None,
             b_id: None,
+            deadline: None,
         }
+    }
+
+    /// Attach a completion deadline (see [`GemmJob::deadline`]).
+    pub fn with_deadline(mut self, deadline: Duration) -> GemmJob {
+        self.deadline = Some(deadline);
+        self
     }
 
     /// The classic deployment: f32 plus-times matmul.
@@ -194,6 +254,7 @@ impl GemmJob {
             semiring,
             a_id: None,
             b_id: Some(b.id),
+            deadline: None,
         }
     }
 
@@ -215,6 +276,7 @@ impl GemmJob {
             semiring,
             a_id: Some(a.id),
             b_id: None,
+            deadline: None,
         }
     }
 
@@ -312,6 +374,12 @@ pub struct ServiceStats {
     pub total_transfer_elements: AtomicU64,
     /// High-water mark of any worker's inbound queue depth (requests).
     pub peak_queue_depth: AtomicU64,
+    /// Jobs shed by deadline admission control or submission timeout
+    /// (never queued; not counted in `failed`).
+    pub rejected: AtomicU64,
+    /// Work units completed — with the service's elapsed time, the
+    /// measured drain rate the admission estimator divides by.
+    pub completed_work_units: AtomicU64,
 }
 
 /// Dispatch weight of one request: madds scaled by element width
@@ -325,7 +393,7 @@ fn work_units(m: usize, n: usize, k: usize, elem_bytes: u64) -> u64 {
 
 /// Service tuning: queue bounds and the cache profile the workers build
 /// executors (and the panel cache budget) from.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Per-worker inbound queue bound, in messages (a batch share counts
     /// as one message). A full queue **blocks** the submitter — the
@@ -338,6 +406,18 @@ pub struct ServiceConfig {
     /// Host cache profile: `capacity_bytes` sizes executor tiles,
     /// `panel_cache_bytes` bounds the shared cross-request panel cache.
     pub profile: crate::schedule::HostCacheProfile,
+    /// Deadline-admission drain rate override, in work units per second
+    /// (see [`ServiceStats::completed_work_units`]). `None` (default)
+    /// uses the measured rate — `completed_work_units / elapsed` — and
+    /// admits everything until the first completion establishes one.
+    /// Tests pin deterministic shed decisions through this.
+    pub admission_rate: Option<f64>,
+    /// Deterministic fault schedule consulted by every worker's pack
+    /// stage ([`FaultPlan::on_request`]): `Fail`/`Panic` refuse the
+    /// request through its reply channel, `Delay` stalls the pack stage
+    /// (a straggler — what `submit_with_timeout` tests jam queues
+    /// with). `None` injects nothing.
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServiceConfig {
@@ -346,6 +426,8 @@ impl Default for ServiceConfig {
             queue_capacity: 64,
             pipeline_depth: 2,
             profile: crate::schedule::HostCacheProfile::default(),
+            admission_rate: None,
+            fault_plan: None,
         }
     }
 }
@@ -368,7 +450,9 @@ struct WorkerHandle {
     pending: Arc<AtomicU64>,
     /// Requests currently waiting in the inbound queue.
     queued: Arc<AtomicUsize>,
-    join: Option<std::thread::JoinHandle<()>>,
+    /// Taken exactly once by whichever of `shutdown`/`Drop` runs first
+    /// — the interior mutability that makes shutdown idempotent.
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 /// A pool of pipelined workers, each owning a private runtime over the
@@ -382,6 +466,10 @@ pub struct GemmService {
     panel_cache: Arc<Mutex<PanelCache>>,
     queue_capacity: usize,
     next_id: AtomicU64,
+    /// Deadline-admission drain rate override (work units / second).
+    admission_rate: Option<f64>,
+    /// Service start time — denominator of the measured drain rate.
+    started: Instant,
 }
 
 /// Per-worker executor inventory: one [`TiledExecutor`] per
@@ -510,6 +598,7 @@ fn stage_request(
     panel_cache: &Mutex<PanelCache>,
     stats: &ServiceStats,
     pending: &AtomicU64,
+    fault_plan: &Option<Arc<FaultPlan>>,
     compute_tx: &mpsc::SyncSender<PackedWork>,
     req: GemmRequest,
     reply: mpsc::Sender<Result<GemmResponse>>,
@@ -525,6 +614,28 @@ fn stage_request(
         req.a.dtype_name(),
         req.semiring
     );
+    // Injection point for the chaos harness. `Fail` and `Panic` both
+    // refuse the request through its reply channel (the service layer
+    // has no unwind boundary to exercise — that is the cluster worker's
+    // test surface); `Delay` turns the pack stage into a straggler.
+    if let Some(plan) = fault_plan {
+        match plan.on_request(id) {
+            Some(FaultKind::Fail) => {
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(anyhow!("injected fault: {ctx} refused")));
+                pending.fetch_sub(weight, Ordering::Relaxed);
+                return;
+            }
+            Some(FaultKind::Panic) => {
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(anyhow!("injected panic: {ctx} dropped")));
+                pending.fetch_sub(weight, Ordering::Relaxed);
+                return;
+            }
+            Some(FaultKind::Delay(d)) => std::thread::sleep(d),
+            None => {}
+        }
+    }
     let staged = (|| -> Result<PackedWork> {
         let GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id } = req;
         if m == 0 || n == 0 || k == 0 {
@@ -694,6 +805,7 @@ fn reduce_loop(
                     None => {
                         let transfer = start.pre_transfer + c_transfer;
                         stats.completed.fetch_add(1, Ordering::Relaxed);
+                        stats.completed_work_units.fetch_add(start.weight, Ordering::Relaxed);
                         stats.total_steps.fetch_add(steps as u64, Ordering::Relaxed);
                         stats
                             .total_madds
@@ -799,6 +911,7 @@ impl GemmService {
             let ready = ready_tx.clone();
             let dir = artifacts_dir.clone();
             let profile = config.profile;
+            let fault_plan = config.fault_plan.clone();
             let join = std::thread::spawn(move || {
                 // Per-worker runtime: PJRT handles are not Send. Warm the
                 // default f32 plus-times executor eagerly.
@@ -846,6 +959,7 @@ impl GemmService {
                                 &panel_cache,
                                 &stats,
                                 &worker_pending,
+                                &fault_plan,
                                 &compute_tx,
                                 req,
                                 reply,
@@ -859,6 +973,7 @@ impl GemmService {
                                     &panel_cache,
                                     &stats,
                                     &worker_pending,
+                                    &fault_plan,
                                     &compute_tx,
                                     req,
                                     reply.clone(),
@@ -884,7 +999,7 @@ impl GemmService {
                 tx: Mutex::new(tx),
                 pending,
                 queued,
-                join: Some(join),
+                join: Mutex::new(Some(join)),
             });
         }
         drop(ready_tx);
@@ -901,6 +1016,8 @@ impl GemmService {
             panel_cache,
             queue_capacity,
             next_id: AtomicU64::new(0),
+            admission_rate: config.admission_rate,
+            started: Instant::now(),
         })
     }
 
@@ -990,11 +1107,146 @@ impl GemmService {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
         let weight = job.weight();
-        let GemmJob { m, n, k, a, b, semiring, a_id, b_id } = job;
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, deadline: _ } = job;
         let req = GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id };
         let worker = self.pick_worker();
         self.enqueue(worker, Job::Run(req, reply_tx), weight, 1);
         reply_rx
+    }
+
+    /// Estimated drain rate in work units per second: the configured
+    /// [`ServiceConfig::admission_rate`] override, else the measured
+    /// `completed_work_units / elapsed`. `None` until the first
+    /// completion establishes a measurement — with no basis, admission
+    /// control admits everything rather than guessing.
+    fn drain_rate(&self) -> Option<f64> {
+        if let Some(rate) = self.admission_rate {
+            return Some(rate);
+        }
+        let done = self.stats.completed_work_units.load(Ordering::Relaxed);
+        if done == 0 {
+            return None;
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if elapsed <= 0.0 {
+            return None;
+        }
+        Some(done as f64 / elapsed)
+    }
+
+    /// Deadline admission check against one worker's queued work: shed
+    /// (typed, counted in `stats.rejected`) when the estimated wait —
+    /// pending work units plus this job, over the drain rate — exceeds
+    /// the job's deadline. Jobs without a deadline always pass.
+    fn admit(&self, worker: usize, job: &GemmJob, weight: u64) -> Result<(), SubmitError> {
+        let Some(deadline) = job.deadline else { return Ok(()) };
+        let Some(rate) = self.drain_rate() else { return Ok(()) };
+        let queued = self.workers[worker].pending.load(Ordering::Relaxed);
+        let estimated_wait = Duration::from_secs_f64((queued + weight) as f64 / rate.max(1e-9));
+        if estimated_wait > deadline {
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Rejected {
+                estimated_wait,
+                retry_after_hint: estimated_wait - deadline,
+                queued_work_units: queued,
+            });
+        }
+        Ok(())
+    }
+
+    /// Deadline-aware submission: shed the job with a typed
+    /// [`SubmitError::Rejected`] if its deadline is infeasible against
+    /// the picked worker's backlog, otherwise enqueue it exactly like
+    /// [`Self::submit_typed`] (blocking while the queue is full — use
+    /// [`Self::submit_with_timeout`] to bound that wait too).
+    pub fn try_submit(
+        &self,
+        job: GemmJob,
+    ) -> Result<mpsc::Receiver<Result<GemmResponse>>, SubmitError> {
+        let weight = job.weight();
+        let worker = self.pick_worker();
+        self.admit(worker, &job, weight)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, deadline: _ } = job;
+        let req = GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id };
+        self.enqueue(worker, Job::Run(req, reply_tx), weight, 1);
+        Ok(reply_rx)
+    }
+
+    /// [`Self::try_submit`] with bounded submission blocking: if the
+    /// picked worker's queue stays full past `timeout`, give up with a
+    /// typed [`SubmitError::Timeout`] instead of blocking indefinitely.
+    /// Deadline admission (if the job carries one) is checked first.
+    pub fn submit_with_timeout(
+        &self,
+        job: GemmJob,
+        timeout: Duration,
+    ) -> Result<mpsc::Receiver<Result<GemmResponse>>, SubmitError> {
+        let t0 = Instant::now();
+        let weight = job.weight();
+        let worker = self.pick_worker();
+        self.admit(worker, &job, weight)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, deadline: _ } = job;
+        let req = GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id };
+        let mut msg = Job::Run(req, reply_tx);
+        loop {
+            match self.try_enqueue(worker, msg, weight, 1) {
+                Ok(()) => return Ok(reply_rx),
+                Err(bounced) => {
+                    if t0.elapsed() >= timeout {
+                        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        return Err(SubmitError::Timeout { waited: t0.elapsed() });
+                    }
+                    msg = bounced;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    /// Non-blocking enqueue: hand the job to the worker if its queue
+    /// has room, bounce it back (`Err`) if the queue is full. A closed
+    /// queue reports through the job's reply channel like
+    /// [`Self::enqueue`] and counts as delivered.
+    fn try_enqueue(
+        &self,
+        worker: usize,
+        job: Job,
+        weight: u64,
+        n_requests: usize,
+    ) -> std::result::Result<(), Job> {
+        let w = &self.workers[worker];
+        w.pending.fetch_add(weight, Ordering::Relaxed);
+        let depth = w.queued.fetch_add(n_requests, Ordering::Relaxed) + n_requests;
+        self.stats.peak_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
+        let send_result = w
+            .tx
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .try_send(job);
+        match send_result {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(job)) => {
+                w.pending.fetch_sub(weight, Ordering::Relaxed);
+                w.queued.fetch_sub(n_requests, Ordering::Relaxed);
+                Err(job)
+            }
+            Err(mpsc::TrySendError::Disconnected(job)) => {
+                w.pending.fetch_sub(weight, Ordering::Relaxed);
+                w.queued.fetch_sub(n_requests, Ordering::Relaxed);
+                if let Job::Run(req, reply) = job {
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Err(anyhow!(
+                        "worker {worker} queue closed; request {} dropped",
+                        req.id
+                    )));
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Submit a burst of jobs in one go: jobs are spread over the pool
@@ -1013,7 +1265,7 @@ impl GemmService {
         let mut share_weights: Vec<u64> = vec![0; self.workers.len()];
         for (i, job) in jobs.into_iter().enumerate() {
             let weight = job.weight();
-            let GemmJob { m, n, k, a, b, semiring, a_id, b_id } = job;
+            let GemmJob { m, n, k, a, b, semiring, a_id, b_id, deadline: _ } = job;
             let req =
                 GemmRequest { id: base_id + i as u64, m, n, k, a, b, semiring, a_id, b_id };
             // Least-loaded by pending work *plus* the share built so far
@@ -1197,11 +1449,14 @@ impl GemmService {
     }
 
     /// Stop accepting work and join the workers (each worker drains its
-    /// pipeline stages before exiting).
-    pub fn shutdown(mut self) {
+    /// pipeline stages before exiting). Idempotent: each worker's join
+    /// handle is taken exactly once, so a second `shutdown` (or the
+    /// `Drop` that follows one) is a no-op.
+    pub fn shutdown(&self) {
         self.send_shutdown();
-        for w in &mut self.workers {
-            if let Some(join) = w.join.take() {
+        for w in &self.workers {
+            let handle = w.join.lock().unwrap_or_else(|e| e.into_inner()).take();
+            if let Some(join) = handle {
                 let _ = join.join();
             }
         }
@@ -1210,7 +1465,10 @@ impl GemmService {
 
 impl Drop for GemmService {
     fn drop(&mut self) {
-        self.send_shutdown();
+        // Full shutdown, not just a send: a service dropped without an
+        // explicit `shutdown` must still join its workers rather than
+        // leak them. After an explicit `shutdown` this is a no-op.
+        self.shutdown();
     }
 }
 

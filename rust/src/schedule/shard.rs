@@ -294,6 +294,48 @@ impl ShardPlan {
             .map(|s| (s.rows * s.cols) as u64)
             .sum()
     }
+
+    /// Remap every shard of a quarantined device onto the surviving
+    /// devices (those still hosting at least one shard), assigning each
+    /// orphan greedily to the survivor with the least accumulated
+    /// predicted traffic (ties → lowest device id). Shard geometry,
+    /// `(di, dj, dks)` reduction order, and each shard's [`TilePlan`]
+    /// are untouched, so `predicted_transfer_elements` is invariant and
+    /// `per_device_transfer` stays the exact accounting the executors
+    /// measure. Chains cleanly: a device already excluded by an earlier
+    /// call hosts no shards and is never re-selected. Returns `None`
+    /// when excluding the device would leave no survivors.
+    pub fn replan_without(&self, device: usize) -> Option<ShardPlan> {
+        if !self.shards.iter().any(|s| s.device == device) {
+            return Some(self.clone());
+        }
+        let mut survivors: Vec<usize> = self
+            .shards
+            .iter()
+            .map(|s| s.device)
+            .filter(|&d| d != device)
+            .collect();
+        survivors.sort_unstable();
+        survivors.dedup();
+        if survivors.is_empty() {
+            return None;
+        }
+        let mut plan = self.clone();
+        // Greedy rebalance against live per-device load, mode-agnostic:
+        // the Reuse accounting orders devices the same way Roundtrip
+        // does (both are monotone in shard volume).
+        let mut load: Vec<u64> = plan.per_device_transfer(ExecMode::Reuse);
+        for s in plan.shards.iter_mut().filter(|s| s.device == device) {
+            let &target = survivors
+                .iter()
+                .min_by_key(|&&d| (load[d], d))
+                .expect("non-empty survivors");
+            load[device] -= shard_transfer(s, ExecMode::Reuse);
+            load[target] += shard_transfer(s, ExecMode::Reuse);
+            s.device = target;
+        }
+        Some(plan)
+    }
 }
 
 /// One shard's predicted traffic under an execution mode — the same
@@ -476,6 +518,62 @@ mod tests {
         let t4 = &p4.shards[0].plan;
         let t8 = &p8.shards[0].plan;
         assert!(t8.tile_m * t8.tile_n <= t4.tile_m * t4.tile_n);
+    }
+
+    #[test]
+    fn replan_without_preserves_geometry_and_total_traffic() {
+        let p = ShardPlan::with_grid(97, 83, 61, ShardGrid::new(2, 2, 2), &tiles(8, T16));
+        let q = p.replan_without(3).expect("7 survivors");
+        // No shard remains on the excluded device; everything else about
+        // each shard (geometry, coordinates, TilePlan) is unchanged.
+        assert!(q.shards.iter().all(|s| s.device != 3));
+        for (a, b) in p.shards.iter().zip(&q.shards) {
+            assert_eq!(
+                (a.di, a.dj, a.dks, a.row0, a.rows, a.col0, a.cols, a.k0, a.kdepth),
+                (b.di, b.dj, b.dks, b.row0, b.rows, b.col0, b.cols, b.k0, b.kdepth)
+            );
+            assert_eq!(a.plan, b.plan, "TilePlan accounting preserved");
+        }
+        for mode in [ExecMode::Reuse, ExecMode::Roundtrip] {
+            assert_eq!(
+                p.predicted_transfer_elements(mode),
+                q.predicted_transfer_elements(mode),
+                "total predicted traffic invariant under remapping"
+            );
+            assert_eq!(q.per_device_transfer(mode)[3], 0);
+        }
+    }
+
+    #[test]
+    fn replan_without_picks_least_loaded_survivor() {
+        // 1x3x1 over 3 devices: the orphan shard must land on the
+        // survivor with the least accumulated predicted traffic.
+        let p = ShardPlan::with_grid(64, 96, 32, ShardGrid::new(1, 3, 1), &tiles(3, T16));
+        let q = p.replan_without(1).expect("2 survivors");
+        let before = p.per_device_transfer(ExecMode::Reuse);
+        let orphan = before[1];
+        let target = q.shards.iter().find(|s| s.dj == 1).unwrap().device;
+        let expected = if before[0] <= before[2] { 0 } else { 2 };
+        assert_eq!(target, expected, "greedy least-loaded assignment");
+        let after = q.per_device_transfer(ExecMode::Reuse);
+        assert_eq!(after[target], before[target] + orphan);
+    }
+
+    #[test]
+    fn replan_without_chains_and_bottoms_out() {
+        let p = ShardPlan::with_grid(48, 48, 48, ShardGrid::new(2, 2, 1), &tiles(4, T16));
+        let q = p
+            .replan_without(0)
+            .unwrap()
+            .replan_without(1)
+            .unwrap()
+            .replan_without(2)
+            .unwrap();
+        assert!(q.shards.iter().all(|s| s.device == 3), "all work on the last survivor");
+        assert!(q.replan_without(3).is_none(), "no survivors left");
+        // Excluding a device that hosts nothing is a no-op clone.
+        let r = q.replan_without(0).unwrap();
+        assert_eq!(r.shards, q.shards);
     }
 
     #[test]

@@ -36,7 +36,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 use fcamm::coordinator::cluster::{
-    fold_partials, ClusterService, RuntimeBackend, ShardBackend, ShardOperands, ShardOutput,
+    fold_partials, ClusterService, RetryPolicy, RuntimeBackend, ShardBackend, ShardOperands,
+    ShardOutput,
 };
 use fcamm::coordinator::{GemmJob, SharedOperand};
 use fcamm::datatype::Semiring;
@@ -526,7 +527,13 @@ fn fault_cluster(
             }) as Box<dyn ShardBackend>
         })
         .collect();
-    (ClusterService::start_with_backends(backends).expect("mock cluster"), served)
+    // Retries off: these tests pin the *raw* failure surface (context
+    // strings, sibling completion, worker survival). The recovery path on
+    // top of it is exercised by `tests/fault_tolerance.rs`.
+    let cluster = ClusterService::start_with_backends(backends)
+        .expect("mock cluster")
+        .with_retry_policy(RetryPolicy::none());
+    (cluster, served)
 }
 
 #[test]

@@ -1,0 +1,520 @@
+//! Fault-tolerance property suite: retry/re-dispatch recovery, device
+//! health, deadline admission, and idempotent shutdown.
+//!
+//! The central contract: **a recovered run is bit-identical to the
+//! fault-free run**. The cluster keys its ascending-dk ⊕-reduction on
+//! shard *coordinates*, never on the device that produced a partial, so
+//! retrying a shard — on the same device or re-dispatched to a survivor
+//! — cannot change the bracketing. That is pinned here for every
+//! (semiring, dtype) the engine instantiates, k-split grids included,
+//! under deterministic fault schedules ([`FaultPlan`]) injected behind
+//! the real [`ShardBackend`] path via [`faulty_native_cluster`].
+//!
+//! The rest of the robustness surface rides the same harness:
+//! Healthy → Degraded → Quarantined transitions driven by shard
+//! outcomes, plan-time routing around quarantined devices
+//! (`replan_without` — measured per-device traffic must match the
+//! replanned plan), probe-earned re-admission, exhausted-attempt errors
+//! naming every device touched, deadline admission / load shedding with
+//! typed [`SubmitError`]s, bounded submission blocking, and
+//! double-shutdown/Drop idempotence for both services.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fcamm::coordinator::{
+    faulty_native_cluster, ClusterService, DeviceState, FaultKind, FaultPlan, FaultSite,
+    FaultSpec, FaultTrigger, GemmJob, GemmService, HealthPolicy, RecoveryStats, RetryPolicy,
+    ServiceConfig, SubmitError,
+};
+use fcamm::datatype::Semiring;
+use fcamm::runtime::HostTensor;
+use fcamm::schedule::shard::ShardGrid;
+use fcamm::schedule::{ExecMode, HostCacheProfile};
+use fcamm::util::rng::Rng;
+
+/// Small tiles (16³ under a 16 KiB budget) keep test-sized problems
+/// genuinely multi-tile — same profile the conformance suite pins.
+fn tight() -> HostCacheProfile {
+    HostCacheProfile::with_capacity(16 * 1024)
+}
+
+fn faulty(n_devices: usize, plan: &Arc<FaultPlan>) -> ClusterService {
+    faulty_native_cluster(n_devices, tight(), plan.clone()).expect("faulty cluster starts")
+}
+
+/// Fault-free control fleet: the same backends behind a plan that
+/// injects nothing.
+fn control(n_devices: usize) -> ClusterService {
+    faulty_native_cluster(n_devices, tight(), Arc::new(FaultPlan::none()))
+        .expect("control cluster starts")
+}
+
+/// The five (semiring, dtype) instantiations the engine serves.
+#[derive(Debug, Clone, Copy)]
+enum Algebra {
+    F32,
+    F64,
+    I32Wrap,
+    U32Wrap,
+    MinPlusF32,
+}
+
+const ALGEBRAS: [Algebra; 5] =
+    [Algebra::F32, Algebra::F64, Algebra::I32Wrap, Algebra::U32Wrap, Algebra::MinPlusF32];
+
+impl Algebra {
+    fn semiring(self) -> Semiring {
+        match self {
+            Algebra::MinPlusF32 => Semiring::MinPlus,
+            _ => Semiring::PlusTimes,
+        }
+    }
+
+    fn gen(self, rng: &mut Rng, len: usize) -> HostTensor {
+        match self {
+            Algebra::F32 => HostTensor::F32(rng.fill_normal_f32(len)),
+            Algebra::F64 => {
+                HostTensor::F64((0..len).map(|_| rng.next_f64() * 4.0 - 2.0).collect())
+            }
+            Algebra::I32Wrap => {
+                HostTensor::I32((0..len).map(|_| rng.next_u32() as i32).collect())
+            }
+            Algebra::U32Wrap => HostTensor::U32((0..len).map(|_| rng.next_u32()).collect()),
+            Algebra::MinPlusF32 => HostTensor::F32(
+                (0..len)
+                    .map(|_| {
+                        if rng.gen_range(0, 8) == 0 {
+                            f32::INFINITY
+                        } else {
+                            rng.next_f32() * 10.0
+                        }
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    fn job(self, rng: &mut Rng, m: usize, n: usize, k: usize) -> GemmJob {
+        GemmJob::new(m, n, k, self.gen(rng, m * k), self.gen(rng, k * n), self.semiring())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Recovery bit-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn recovered_runs_are_bit_identical_for_every_algebra_and_grid() {
+    // Two faults per run — a failure on shard (0,1) and a *panic* on
+    // shard (0,0) — each firing once, each recovered by an in-place
+    // retry. The recovered output must equal the fault-free control's
+    // bit-for-bit: same algebra, same operands, same grid, no fault.
+    let plan = Arc::new(FaultPlan::new(
+        0xFA17,
+        vec![
+            FaultSpec {
+                site: FaultSite::Shard { di: 0, dj: 1, dks: 0 },
+                trigger: FaultTrigger::Once,
+                kind: FaultKind::Fail,
+            },
+            FaultSpec {
+                site: FaultSite::Shard { di: 0, dj: 0, dks: 0 },
+                trigger: FaultTrigger::Once,
+                kind: FaultKind::Panic,
+            },
+        ],
+    ));
+    let chaos = faulty(8, &plan);
+    let clean = control(8);
+    let grids = [
+        ShardGrid { dr: 1, dc: 3, dk: 1 },
+        ShardGrid { dr: 2, dc: 2, dk: 1 },
+        ShardGrid { dr: 2, dc: 2, dk: 2 },
+    ];
+    let mut rng = Rng::new(0xB17);
+    for algebra in ALGEBRAS {
+        for grid in grids {
+            let job = algebra.job(&mut rng, 40, 25, 33);
+            plan.reset();
+            let faulted = chaos.run_on_grid(&job, grid, ExecMode::Reuse).expect("recovered run");
+            let oracle = clean.run_on_grid(&job, grid, ExecMode::Reuse).expect("control run");
+            assert_eq!(
+                faulted.c, oracle.c,
+                "{algebra:?} {grid}: recovered bits differ from fault-free"
+            );
+            // Exactly the two scheduled faults fired, each healed by one
+            // in-place retry with the base backoff accounted.
+            assert_eq!(plan.injected(), 2, "{algebra:?} {grid}");
+            assert_eq!(
+                faulted.recovery,
+                RecoveryStats {
+                    retries: 2,
+                    redispatches: 0,
+                    simulated_backoff: Duration::from_millis(20),
+                },
+                "{algebra:?} {grid}"
+            );
+            assert_eq!(oracle.recovery, RecoveryStats::default(), "control saw no faults");
+            // Traffic accounting is untouched by recovery: retried
+            // attempts that never executed ship nothing.
+            assert_eq!(
+                faulted.transfer_elements,
+                faulted.plan.predicted_transfer_elements(ExecMode::Reuse),
+                "{algebra:?} {grid}"
+            );
+            assert_eq!(faulted.transfer_elements, oracle.transfer_elements);
+        }
+    }
+    chaos.shutdown();
+    clean.shutdown();
+}
+
+#[test]
+fn delays_are_stragglers_not_failures() {
+    let plan = Arc::new(FaultPlan::new(
+        7,
+        vec![FaultSpec {
+            site: FaultSite::AnyShard,
+            trigger: FaultTrigger::FirstN(2),
+            kind: FaultKind::Delay(Duration::from_millis(5)),
+        }],
+    ));
+    let chaos = faulty(4, &plan);
+    let clean = control(4);
+    let mut rng = Rng::new(0xDE1A);
+    let job = Algebra::F32.job(&mut rng, 33, 20, 45);
+    let grid = ShardGrid { dr: 2, dc: 2, dk: 1 };
+    let run = chaos.run_on_grid(&job, grid, ExecMode::Reuse).expect("stragglers complete");
+    let oracle = clean.run_on_grid(&job, grid, ExecMode::Reuse).unwrap();
+    assert_eq!(run.c, oracle.c, "a delay never corrupts the result");
+    assert_eq!(plan.injected(), 2, "both delays fired");
+    assert_eq!(run.recovery, RecoveryStats::default(), "a delay is not a failure");
+    chaos.shutdown();
+    clean.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Health: quarantine, routing, probe-earned re-admission
+// ---------------------------------------------------------------------
+
+#[test]
+fn a_dying_device_is_quarantined_routed_around_and_probed_back() {
+    // Device 2 (hosting shard (1,0) of a 2×2 grid) fails its first
+    // three executions: two shard attempts during the first run, then
+    // one probe. The shard re-dispatches to a survivor, the device is
+    // quarantined, subsequent plans route around it, and re-admission
+    // is earned through clean probes.
+    let plan = Arc::new(FaultPlan::new(
+        0x9E41,
+        vec![FaultSpec {
+            site: FaultSite::Device(2),
+            trigger: FaultTrigger::FirstN(3),
+            kind: FaultKind::Fail,
+        }],
+    ));
+    let chaos = faulty(4, &plan).with_health_policy(HealthPolicy {
+        degrade_after: 1,
+        quarantine_after: 2,
+        probation_probes: 2,
+    });
+    let clean = control(4);
+    let mut rng = Rng::new(0x0D1E);
+    let job = Algebra::F64.job(&mut rng, 64, 64, 64);
+    let grid = ShardGrid { dr: 2, dc: 2, dk: 1 };
+
+    // Run 1: two in-place failures on device 2, then re-dispatch.
+    let run = chaos.run_on_grid(&job, grid, ExecMode::Reuse).expect("recovered run");
+    let oracle = clean.run_on_grid(&job, grid, ExecMode::Reuse).unwrap();
+    assert_eq!(run.c, oracle.c, "recovered bits match the fault-free run");
+    assert_eq!(
+        run.recovery,
+        RecoveryStats {
+            retries: 2,
+            redispatches: 1,
+            // backoff(1) + backoff(2) = 10ms + 20ms.
+            simulated_backoff: Duration::from_millis(30),
+        }
+    );
+    // The plan reflects the devices that actually executed, and the
+    // measured per-device traffic matches that replanned accounting
+    // exactly (the acceptance invariant).
+    assert!(run.plan.shards.iter().all(|s| s.device != 2), "no shard remained on device 2");
+    assert_eq!(run.per_device_transfer[2], 0);
+    assert_eq!(run.per_device_transfer, run.plan.per_device_transfer(ExecMode::Reuse));
+    assert_eq!(
+        run.transfer_elements,
+        run.plan.predicted_transfer_elements(ExecMode::Reuse),
+        "replanning preserves total predicted traffic"
+    );
+    assert_eq!(chaos.quarantined_devices(), vec![2]);
+    assert_eq!(chaos.health_snapshot()[2].state, DeviceState::Quarantined);
+
+    // Run 2: plan-time routing around the quarantined device.
+    let run2 = chaos.run_on_grid(&job, grid, ExecMode::Reuse).expect("routed run");
+    assert!(run2.plan.shards.iter().all(|s| s.device != 2), "plan routed around quarantine");
+    assert_eq!(run2.c, oracle.c, "replanned run still bit-identical");
+    assert_eq!(run2.recovery, RecoveryStats::default(), "no faults fired off-device");
+
+    // Probe 1 hits the last scheduled fault: still broken, still out.
+    assert!(!chaos.probe(2).expect("probe runs"), "broken device fails its probe");
+    assert_eq!(chaos.health_snapshot()[2].state, DeviceState::Quarantined);
+    // The device heals (schedule exhausted): probation, then Healthy.
+    assert!(chaos.probe(2).expect("probe runs"), "clean probe");
+    assert_eq!(chaos.health_snapshot()[2].state, DeviceState::Probation);
+    assert_eq!(chaos.quarantined_devices(), vec![2], "probation is still out of rotation");
+    let run3 = chaos.run_on_grid(&job, grid, ExecMode::Reuse).expect("probation run");
+    assert!(run3.plan.shards.iter().all(|s| s.device != 2));
+    assert!(chaos.probe(2).expect("probe runs"), "second clean probe re-admits");
+    assert_eq!(chaos.health_snapshot()[2].state, DeviceState::Healthy);
+
+    // Run 4: device 2 is back in the rotation and serving correctly.
+    let run4 = chaos.run_on_grid(&job, grid, ExecMode::Reuse).expect("re-admitted run");
+    assert!(run4.plan.shards.iter().any(|s| s.device == 2), "device 2 serves again");
+    assert_eq!(run4.c, oracle.c);
+    chaos.shutdown();
+    clean.shutdown();
+}
+
+#[test]
+fn exhausted_attempts_name_every_device_and_the_attempt_count() {
+    // Shard (1,0) fails wherever it runs: two attempts on its home
+    // device 2, re-dispatch to the least-loaded survivor (equal shards
+    // → lowest id, device 0), two more attempts, then a final error
+    // carrying the attempt count and the device history.
+    let plan = Arc::new(FaultPlan::new(
+        0xBAD,
+        vec![FaultSpec {
+            site: FaultSite::Shard { di: 1, dj: 0, dks: 0 },
+            trigger: FaultTrigger::Always,
+            kind: FaultKind::Fail,
+        }],
+    ));
+    let chaos = faulty(4, &plan);
+    let mut rng = Rng::new(0x6A7E);
+    let job = Algebra::F32.job(&mut rng, 64, 64, 64);
+    let grid = ShardGrid { dr: 2, dc: 2, dk: 1 };
+    let err = chaos.run_on_grid(&job, grid, ExecMode::Reuse).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "{msg}");
+    assert!(msg.contains("shard (di 1, dj 0, dk 0)"), "{msg}");
+    assert!(
+        msg.contains("gave up after 4 attempt(s) on device(s) [2, 0]"),
+        "attempts and device-reassignment history are part of the error: {msg}"
+    );
+    assert!(msg.contains("3/3 sibling shards completed"), "{msg}");
+    // Both devices that hosted the cursed shard recorded its failures.
+    let health = chaos.health_snapshot();
+    assert_eq!(health[2].total_failures, 2);
+    assert_eq!(health[0].total_failures, 2);
+    assert_eq!(health[1].total_failures, 0);
+    // The fleet stays serviceable: a fault-free job still completes.
+    plan.reset();
+    let clean_job = Algebra::F32.job(&mut rng, 32, 32, 32);
+    chaos
+        .run_on_grid(&clean_job, ShardGrid { dr: 1, dc: 2, dk: 1 }, ExecMode::Reuse)
+        .expect("fleet survives a doomed shard");
+    chaos.shutdown();
+}
+
+#[test]
+fn retry_policy_none_restores_fail_fast() {
+    let plan = Arc::new(FaultPlan::new(
+        5,
+        vec![FaultSpec {
+            site: FaultSite::Shard { di: 0, dj: 0, dks: 0 },
+            trigger: FaultTrigger::Once,
+            kind: FaultKind::Fail,
+        }],
+    ));
+    let chaos = faulty(2, &plan).with_retry_policy(RetryPolicy::none());
+    let mut rng = Rng::new(0xFF);
+    let job = Algebra::F32.job(&mut rng, 32, 32, 32);
+    let err = chaos
+        .run_on_grid(&job, ShardGrid { dr: 1, dc: 2, dk: 1 }, ExecMode::Reuse)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("gave up after 1 attempt(s)"), "{msg}");
+    assert_eq!(plan.injected(), 1);
+    chaos.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Deadline admission and load shedding
+// ---------------------------------------------------------------------
+
+fn f32_job(m: usize, n: usize, k: usize) -> GemmJob {
+    GemmJob::f32(m, n, k, vec![1.0; m * k], vec![1.0; k * n])
+}
+
+#[test]
+fn infeasible_deadlines_are_shed_with_typed_errors() {
+    // A pinned drain rate of 1 work unit/s makes a 16³ f32 job (4096
+    // units) take an estimated ~4096 s — hopeless against a 1 s
+    // deadline, and deterministic regardless of host speed.
+    let service = GemmService::start_with_config(
+        PathBuf::from("/nonexistent/artifacts"),
+        1,
+        ServiceConfig { admission_rate: Some(1.0), ..ServiceConfig::default() },
+    )
+    .expect("service starts");
+    let err = service
+        .try_submit(f32_job(16, 16, 16).with_deadline(Duration::from_secs(1)))
+        .expect_err("deadline is infeasible");
+    match err {
+        SubmitError::Rejected { estimated_wait, retry_after_hint, queued_work_units } => {
+            assert!(estimated_wait >= Duration::from_secs(4000), "{estimated_wait:?}");
+            assert_eq!(retry_after_hint, estimated_wait - Duration::from_secs(1));
+            assert_eq!(queued_work_units, 0, "nothing was queued ahead of it");
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    assert!(format!("{err}").contains("job shed"), "typed error also displays");
+    assert_eq!(service.stats.rejected.load(std::sync::atomic::Ordering::Relaxed), 1);
+    // Shed jobs never entered a queue; deadline-free (and generously
+    // deadlined) jobs flow normally through the same entry point.
+    let rx = service.try_submit(f32_job(16, 16, 16)).expect("no deadline, always admitted");
+    rx.recv().unwrap().expect("completes");
+    let rx = service
+        .try_submit(f32_job(16, 16, 16).with_deadline(Duration::from_secs(100_000)))
+        .expect("generous deadline admitted");
+    rx.recv().unwrap().expect("completes");
+    assert_eq!(service.stats.completed.load(std::sync::atomic::Ordering::Relaxed), 2);
+    assert_eq!(service.stats.failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    service.shutdown();
+}
+
+#[test]
+fn measured_drain_rate_gates_admission_after_first_completion() {
+    let service = GemmService::start_with_config(
+        PathBuf::from("/nonexistent/artifacts"),
+        1,
+        ServiceConfig::default(),
+    )
+    .expect("service starts");
+    // Cold service: no completions yet → no measured rate → admission
+    // control has no basis and admits even a 1 ns deadline.
+    let rx = service
+        .try_submit(f32_job(16, 16, 16).with_deadline(Duration::from_nanos(1)))
+        .expect("cold service admits everything");
+    rx.recv().unwrap().expect("completes");
+    // Warm service: a measured rate exists, so a zero deadline (any
+    // positive estimated wait exceeds it) is now shed.
+    let err = service
+        .try_submit(f32_job(16, 16, 16).with_deadline(Duration::ZERO))
+        .expect_err("zero deadline is infeasible once a rate is measured");
+    assert!(matches!(err, SubmitError::Rejected { .. }), "{err:?}");
+    service.shutdown();
+}
+
+#[test]
+fn submission_timeout_bounds_blocking_under_overload() {
+    // One worker, queue of one, and the first two requests stalled
+    // 300 ms each in the pack stage: the queue is jammed, so a bounded
+    // submit gives up with a typed Timeout instead of blocking.
+    let plan = Arc::new(FaultPlan::new(
+        11,
+        vec![FaultSpec {
+            site: FaultSite::AnyRequest,
+            trigger: FaultTrigger::FirstN(2),
+            kind: FaultKind::Delay(Duration::from_millis(300)),
+        }],
+    ));
+    let service = GemmService::start_with_config(
+        PathBuf::from("/nonexistent/artifacts"),
+        1,
+        ServiceConfig {
+            queue_capacity: 1,
+            pipeline_depth: 1,
+            fault_plan: Some(plan),
+            ..ServiceConfig::default()
+        },
+    )
+    .expect("service starts");
+    let rx1 = service.submit_typed(f32_job(32, 32, 32)); // straggling in pack
+    let rx2 = service.submit_typed(f32_job(32, 32, 32)); // filling the queue
+    let err = service
+        .submit_with_timeout(f32_job(32, 32, 32), Duration::from_millis(60))
+        .expect_err("queue stays full past the bound");
+    match err {
+        SubmitError::Timeout { waited } => {
+            assert!(waited >= Duration::from_millis(60), "{waited:?}")
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert_eq!(service.stats.rejected.load(std::sync::atomic::Ordering::Relaxed), 1);
+    // The stragglers were delayed, not lost.
+    rx1.recv().unwrap().expect("straggler 1 completes");
+    rx2.recv().unwrap().expect("straggler 2 completes");
+    service.shutdown();
+}
+
+#[test]
+fn service_fault_injection_is_typed_and_leaves_the_pool_serving() {
+    let plan = Arc::new(FaultPlan::new(
+        13,
+        vec![FaultSpec {
+            site: FaultSite::AnyRequest,
+            trigger: FaultTrigger::FirstN(1),
+            kind: FaultKind::Fail,
+        }],
+    ));
+    let service = GemmService::start_with_config(
+        PathBuf::from("/nonexistent/artifacts"),
+        1,
+        ServiceConfig { fault_plan: Some(plan), ..ServiceConfig::default() },
+    )
+    .expect("service starts");
+    let err = service
+        .blocking(GemmJob::f32(2, 2, 2, vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]))
+        .expect_err("first request refused");
+    assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+    let out = service
+        .blocking(GemmJob::f32(2, 2, 2, vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]))
+        .expect("worker survives the injection");
+    assert_eq!(out.c, HostTensor::F32(vec![19.0, 22.0, 43.0, 50.0]));
+    assert_eq!(service.stats.failed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    assert_eq!(service.stats.completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Idempotent shutdown
+// ---------------------------------------------------------------------
+
+#[test]
+fn double_shutdown_and_drop_are_no_ops() {
+    // Cluster: explicit shutdown twice, then Drop — every join handle is
+    // taken exactly once, so none of these blocks or panics.
+    let cluster = control(2);
+    let mut rng = Rng::new(0x51);
+    let job = Algebra::F32.job(&mut rng, 20, 20, 20);
+    cluster.run_on_grid(&job, ShardGrid { dr: 1, dc: 2, dk: 1 }, ExecMode::Reuse).unwrap();
+    cluster.shutdown();
+    cluster.shutdown();
+    // A run after shutdown is a contextual error (dead worker queues
+    // flow through the same recovery path), never a panic or a hang.
+    let err = cluster
+        .run_on_grid(&job, ShardGrid { dr: 1, dc: 2, dk: 1 }, ExecMode::Reuse)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("worker queue closed"), "{err:#}");
+    drop(cluster);
+
+    // Service: same contract.
+    let service = GemmService::start(PathBuf::from("/nonexistent/artifacts"), 1).unwrap();
+    service.matmul_blocking(4, 4, 4, vec![1.0; 16], vec![1.0; 16]).unwrap();
+    service.shutdown();
+    service.shutdown();
+    let err = service
+        .matmul_blocking(4, 4, 4, vec![1.0; 16], vec![1.0; 16])
+        .expect_err("post-shutdown submission is an error, not a panic");
+    assert!(format!("{err:#}").contains("queue closed"), "{err:#}");
+    drop(service);
+
+    // Drop without any explicit shutdown also joins workers cleanly.
+    let cluster = control(2);
+    drop(cluster);
+    let service = GemmService::start(PathBuf::from("/nonexistent/artifacts"), 1).unwrap();
+    drop(service);
+}

@@ -181,6 +181,7 @@ fn service_shared_b_records_zero_operand_bytes_on_hits() {
         queue_capacity: 8,
         pipeline_depth: 2,
         profile: tight(),
+        ..ServiceConfig::default()
     };
     let service = GemmService::start_with_config(
         PathBuf::from("/nonexistent/artifacts"),
@@ -266,6 +267,7 @@ fn service_counters_match_sim_replay_under_eviction_pressure() {
         queue_capacity: 8,
         pipeline_depth: 2,
         profile: HostCacheProfile::with_budgets(16 * 1024, budget),
+        ..ServiceConfig::default()
     };
     let service = GemmService::start_with_config(
         PathBuf::from("/nonexistent/artifacts"),
@@ -330,6 +332,7 @@ fn queues_are_bounded_and_depth_is_surfaced() {
         queue_capacity: 2,
         pipeline_depth: 1,
         profile: tight(),
+        ..ServiceConfig::default()
     };
     let service = GemmService::start_with_config(
         PathBuf::from("/nonexistent/artifacts"),

@@ -52,6 +52,13 @@ echo "== cargo test -q --test panel_cache =="
 # against the independent replay — run by name for the same reason.
 cargo test -q --test panel_cache
 
+echo "== cargo test -q --test fault_tolerance =="
+# The robustness gate: recovered runs bit-identical to fault-free runs
+# for every (semiring, dtype) × grid × fault schedule, quarantine +
+# probation re-admission, deadline admission/shedding, and idempotent
+# shutdown — run by name for the same reason.
+cargo test -q --test fault_tolerance
+
 echo "== cargo bench --bench hotpath -- --quick =="
 cargo bench --bench hotpath -- --quick
 
@@ -63,7 +70,7 @@ echo "== validate BENCH_hotpath.json =="
 # unnoticed.
 required_metrics="kernel512_speedup kernel512_naive_gflops kernel512_blocked_gflops \
 native_threads cluster_f32_512_gflops cluster_shards cluster_devices \
-panel_cache_hit_ratio shared_b_batch_speedup"
+panel_cache_hit_ratio shared_b_batch_speedup recovery_overhead_ratio shed_fraction"
 if [ ! -f BENCH_hotpath.json ]; then
   echo "BENCH_hotpath.json missing after bench run" >&2
   exit 1
@@ -85,12 +92,19 @@ if not (0.0 <= metrics["panel_cache_hit_ratio"] <= 1.0):
     sys.exit("BENCH_hotpath.json panel_cache_hit_ratio out of [0, 1]")
 if metrics["shared_b_batch_speedup"] < 1.5:
     sys.exit("BENCH_hotpath.json shared_b_batch_speedup below the 1.5x gate")
+if metrics["recovery_overhead_ratio"] > 1.25:
+    sys.exit("BENCH_hotpath.json recovery_overhead_ratio above the 1.25x gate "
+             "(one injected shard failure must stay cheap to recover)")
+if not (0.0 < metrics["shed_fraction"] < 1.0):
+    sys.exit("BENCH_hotpath.json shed_fraction degenerate (the deadline burst "
+             "must shed some jobs and admit the rest)")
 print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx, cluster %.0f shards on "
       "%.0f devices at %.2f GF/s, shared-B batch %.2fx (hit ratio %.2f), "
-      "over %d entries"
+      "recovery overhead %.3fx, shed fraction %.2f, over %d entries"
       % (metrics["kernel512_speedup"], metrics["cluster_shards"],
          metrics["cluster_devices"], metrics["cluster_f32_512_gflops"],
          metrics["shared_b_batch_speedup"], metrics["panel_cache_hit_ratio"],
+         metrics["recovery_overhead_ratio"], metrics["shed_fraction"],
          len(data["entries"])))
 PY
 else
