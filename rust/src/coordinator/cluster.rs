@@ -63,6 +63,7 @@ use crate::schedule::{
 use crate::sim::grid2d::CacheCounters;
 
 use super::health::{DeviceHealth, HealthPolicy, HealthTracker, SimClock};
+use super::net::{NetConfig, TcpBackend, WireStats};
 use super::panel_cache::{PanelCache, PanelKey};
 use super::service::GemmJob;
 
@@ -144,6 +145,12 @@ pub trait ShardBackend: Send + 'static {
     /// cache report zeros).
     fn panel_counters(&self) -> CacheCounters {
         CacheCounters::default()
+    }
+
+    /// Wire-transport ledger for network-attached backends
+    /// (`super::net::TcpBackend`); in-process backends report `None`.
+    fn wire_stats(&self) -> Option<WireStats> {
+        None
     }
 }
 
@@ -375,8 +382,9 @@ impl RetryPolicy {
     /// Exponential backoff before the next attempt of a shard that has
     /// failed `failures` times: `base · 2^(failures-1)`, capped. The
     /// cluster *accounts* this on a [`SimClock`] rather than sleeping —
-    /// deterministic recovery, full-speed tests.
-    fn backoff(&self, failures: u32) -> Duration {
+    /// deterministic recovery, full-speed tests. The TCP transport
+    /// (`super::net`) reuses the same curve between re-dial attempts.
+    pub fn backoff(&self, failures: u32) -> Duration {
         let doublings = failures.saturating_sub(1).min(20);
         self.backoff_cap.min(self.backoff_base.saturating_mul(1 << doublings))
     }
@@ -391,6 +399,9 @@ pub struct RecoveryStats {
     pub retries: u64,
     /// Retries that moved the shard to a different device.
     pub redispatches: u64,
+    /// Device links that dropped and were re-dialed during the run
+    /// (always zero for in-process backends; see `super::net`).
+    pub reconnects: u64,
     /// Total simulated backoff accounted between attempts.
     pub simulated_backoff: Duration,
 }
@@ -445,6 +456,9 @@ enum DeviceMsg {
     Shard(Box<ShardTask>),
     PanelCounters {
         reply: mpsc::Sender<CacheCounters>,
+    },
+    WireStats {
+        reply: mpsc::Sender<Option<WireStats>>,
     },
     Shutdown,
 }
@@ -504,6 +518,9 @@ fn worker_loop(mut backend: Box<dyn ShardBackend>, rx: mpsc::Receiver<DeviceMsg>
             }
             Ok(DeviceMsg::PanelCounters { reply }) => {
                 let _ = reply.send(backend.panel_counters());
+            }
+            Ok(DeviceMsg::WireStats { reply }) => {
+                let _ = reply.send(backend.wire_stats());
             }
             Ok(DeviceMsg::Shutdown) | Err(_) => break,
         }
@@ -590,6 +607,28 @@ impl ClusterService {
             devices.push(DeviceHandle { tx: Mutex::new(tx), join: Mutex::new(Some(join)) });
         }
         Ok(Self::assemble(devices))
+    }
+
+    /// Connect a coordinator to a fleet of socket workers
+    /// (`super::net::WorkerServer` or any process speaking the wire
+    /// protocol): one eagerly dialed [`TcpBackend`] link per address,
+    /// positional device ids. Shard failures on a link flow through the
+    /// same retry/re-dispatch/health machinery as in-process backends —
+    /// plus automatic reconnect with backoff underneath.
+    pub fn connect_tcp(
+        addrs: &[std::net::SocketAddr],
+        config: NetConfig,
+    ) -> Result<ClusterService> {
+        if addrs.is_empty() {
+            bail!("cluster needs at least one worker address");
+        }
+        let mut backends: Vec<Box<dyn ShardBackend>> = Vec::with_capacity(addrs.len());
+        for (device, &addr) in addrs.iter().enumerate() {
+            let backend = TcpBackend::connect(device, addr, config.clone())
+                .with_context(|| format!("connecting device {device} to worker {addr}"))?;
+            backends.push(Box::new(backend));
+        }
+        Self::start_with_backends(backends)
     }
 
     fn assemble(devices: Vec<DeviceHandle>) -> ClusterService {
@@ -696,6 +735,46 @@ impl ClusterService {
             );
         }
         Ok(counters)
+    }
+
+    /// Per-device wire-transport ledgers (`None` for in-process
+    /// backends). On a fault-free TCP fleet, link `d`'s payload
+    /// elements equal `plan.per_device_transfer(mode)[d]` — the Eq. 6
+    /// model measured on real sockets.
+    pub fn wire_stats(&self) -> Result<Vec<Option<WireStats>>> {
+        let mut pending = Vec::with_capacity(self.devices.len());
+        for device in 0..self.devices.len() {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.send(device, DeviceMsg::WireStats { reply: reply_tx })?;
+            pending.push(reply_rx);
+        }
+        let mut stats = Vec::with_capacity(pending.len());
+        for (device, reply_rx) in pending.into_iter().enumerate() {
+            stats.push(
+                reply_rx
+                    .recv()
+                    .map_err(|_| anyhow!("device {device} worker died during wire query"))?,
+            );
+        }
+        Ok(stats)
+    }
+
+    /// Sum of link reconnects across the fleet, best-effort: a dead
+    /// worker contributes nothing (its ledger died with it). Used to
+    /// attribute per-run reconnects in [`RecoveryStats`].
+    fn total_reconnects(&self) -> u64 {
+        let mut pending = Vec::new();
+        for device in 0..self.devices.len() {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            if self.send(device, DeviceMsg::WireStats { reply: reply_tx }).is_ok() {
+                pending.push(reply_rx);
+            }
+        }
+        pending
+            .into_iter()
+            .filter_map(|rx| rx.recv().ok().flatten())
+            .map(|s| s.reconnects)
+            .sum()
     }
 
     /// Model-driven decomposition of an `m×n×k` problem for this fleet
@@ -897,6 +976,9 @@ impl ClusterService {
         let mut device_history: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
         let mut clock = SimClock::default();
         let mut recovery = RecoveryStats::default();
+        // Snapshot link reconnects so this run's recovery stats report
+        // only the re-dials it caused (the ledgers are monotonic).
+        let reconnects_before = self.total_reconnects();
 
         // Dispatch/collect loop: drain the ready queue, then absorb one
         // reply; failed shards re-enter the queue (same device while the
@@ -1039,6 +1121,8 @@ impl ClusterService {
                 .with_context(|| job_context(job, self.n_devices()))?;
             i = j;
         }
+
+        recovery.reconnects = self.total_reconnects().saturating_sub(reconnects_before);
 
         Ok(ClusterRun {
             c,

@@ -306,6 +306,10 @@ impl<B: ShardBackend> ShardBackend for FaultyBackend<B> {
     fn panel_counters(&self) -> CacheCounters {
         self.inner.panel_counters()
     }
+
+    fn wire_stats(&self) -> Option<super::net::WireStats> {
+        self.inner.wire_stats()
+    }
 }
 
 /// Stand up a native-runtime cluster whose every device backend is
@@ -327,6 +331,89 @@ pub fn faulty_native_cluster(
         })
         .collect::<Result<Vec<_>>>()?;
     ClusterService::start_with_backends(backends)
+}
+
+/// What a network fault does to one proxied link — the transport
+/// analogues of [`FaultKind`], injected between coordinator and worker
+/// by `super::net::FaultProxy` so neither endpoint is modified.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFaultKind {
+    /// Close the link (both directions) after relaying `n`
+    /// coordinator→worker frames — a mid-stream connection drop.
+    DropAfterFrames(u32),
+    /// Flip one seeded payload bit of coordinator→worker frame `n`
+    /// (0-based) and relay it — caught by the frame checksum on the
+    /// worker, which drops the connection.
+    CorruptFrame(u32),
+    /// Stop relaying after `n` coordinator→worker frames but keep the
+    /// coordinator-side socket open and silent — the stall class only a
+    /// liveness deadline can detect.
+    StallAfterFrames(u32),
+}
+
+/// One link-level injection rule: fires on the proxy's `connection`-th
+/// accepted connection (0-based). Connections through a proxy are
+/// strictly sequential — the coordinator holds one link and re-dials on
+/// failure — so keying on the accept ordinal is fully deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetFaultSpec {
+    pub connection: u32,
+    pub kind: NetFaultKind,
+}
+
+/// A seeded, deterministic schedule of link faults shared with a
+/// `super::net::FaultProxy`. Drop/stall points are exact frame counts;
+/// the seed fixes which payload bit a `CorruptFrame` flips — so two
+/// runs of one plan corrupt the same bit of the same frame of the same
+/// connection, and the chaos suite's bit-identity assertions are
+/// replayable.
+#[derive(Debug)]
+pub struct NetFaultPlan {
+    seed: u64,
+    specs: Vec<NetFaultSpec>,
+    injected: std::sync::atomic::AtomicU64,
+}
+
+impl NetFaultPlan {
+    pub fn new(seed: u64, specs: Vec<NetFaultSpec>) -> NetFaultPlan {
+        NetFaultPlan { seed, specs, injected: std::sync::atomic::AtomicU64::new(0) }
+    }
+
+    /// A plan that never fires — the transparent-proxy control.
+    pub fn none() -> NetFaultPlan {
+        NetFaultPlan::new(0, Vec::new())
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Faults actually injected so far (across all connections).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub(crate) fn record_injection(&self) {
+        self.injected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// The fault scheduled for the `connection`-th accepted connection,
+    /// if any (first matching spec wins).
+    pub fn kind_for(&self, connection: u32) -> Option<NetFaultKind> {
+        self.specs.iter().find(|s| s.connection == connection).map(|s| s.kind)
+    }
+
+    /// Seeded bit position a `CorruptFrame` flips: a pure function of
+    /// `(seed, connection, frame, payload_len)` — byte index into the
+    /// payload plus a bit within it. Interleaving-independent by
+    /// construction.
+    pub fn corrupt_bit(&self, connection: u32, frame: u32, payload_len: usize) -> (usize, u8) {
+        let mut rng =
+            Rng::new(self.seed ^ ((connection as u64) << 32) ^ ((frame as u64) << 3) ^ 0x5EED);
+        let byte = if payload_len == 0 { 0 } else { rng.gen_range_usize(0, payload_len) };
+        let bit = (rng.next_u32() % 8) as u8;
+        (byte, bit)
+    }
 }
 
 #[cfg(test)]

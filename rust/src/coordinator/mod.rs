@@ -33,13 +33,20 @@
 //! * [`fault`] — the deterministic fault-injection harness: a seeded
 //!   [`FaultPlan`] of fail/panic/delay rules injectable behind
 //!   [`ShardBackend`] and into service workers, shared by the
-//!   fault-tolerance suite and the chaos bench.
+//!   fault-tolerance suite and the chaos bench; extended with network
+//!   fault classes ([`NetFaultPlan`]) driven through the proxy layer.
+//! * [`net`] — the socket transport: a checksummed frame codec, a
+//!   byte-counting [`net::TrackChannel`], the [`net::WorkerServer`]
+//!   process loop, and [`net::TcpBackend`] — the same [`ShardBackend`]
+//!   contract over TCP with heartbeats, liveness deadlines, accounted
+//!   reconnect backoff, and wire bytes pinned to the Eq. 6 model.
 
 pub mod build;
 pub mod cluster;
 pub mod fault;
 pub mod health;
 pub mod instance;
+pub mod net;
 pub mod panel_cache;
 pub mod report;
 pub mod routing;
@@ -52,9 +59,12 @@ pub use cluster::{
 };
 pub use fault::{
     faulty_native_cluster, FaultKind, FaultPlan, FaultSite, FaultSpec, FaultTrigger,
-    FaultyBackend,
+    FaultyBackend, NetFaultKind, NetFaultPlan, NetFaultSpec,
 };
 pub use health::{DeviceHealth, DeviceState, HealthPolicy, HealthTracker, SimClock};
+pub use net::{
+    loopback_available, FaultProxy, NetConfig, TcpBackend, WireCounters, WireStats, WorkerServer,
+};
 pub use instance::KernelInstance;
 pub use panel_cache::{PanelCache, PanelKey};
 pub use service::{

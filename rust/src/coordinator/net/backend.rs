@@ -1,0 +1,460 @@
+//! Coordinator-side TCP device link: a [`ShardBackend`] that streams
+//! shards to a remote worker frame by frame.
+//!
+//! The wire protocol mirrors the in-process executor's communication-
+//! avoiding schedule exactly: reuse mode ships the ⊕-identity C
+//! template once, a packed A slab per fresh `(ti, ks)`, a packed B
+//! slab per fresh `(tj, ks)`, and receives one partial C tile per step
+//! (folded host-side with the executor's ⊕-fold); round-trip mode
+//! re-ships everything per step. Wire payload elements therefore equal
+//! [`TilePlan::transfer_elements`] *by construction* — the Eq. 6 model
+//! is not approximated on the wire, it is enacted there.
+//!
+//! Robustness: the link heartbeats before reuse after idling, every
+//! read sits under a liveness deadline, a failed stream poisons the
+//! connection (dropped and re-dialed with the cluster's exponential
+//! backoff curve, accounted on a [`SimClock`]), and any shard-level
+//! error propagates into `ClusterService::execute_plan`'s
+//! retry/re-dispatch machinery, whose coordinate-keyed ascending-dk
+//! fold makes recovery bit-identical.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::datatype::Semiring;
+use crate::runtime::kernel::{
+    MinPlusF32, PlusTimesF32, PlusTimesF64, PlusTimesI32Wrap, PlusTimesU32Wrap, SemiringOps,
+};
+use crate::runtime::{Element, HostTensor};
+use crate::schedule::executor::{pack_a_slab, pack_b_slab};
+use crate::schedule::shard::Shard;
+use crate::schedule::{ExecMode, TilePlan};
+
+use super::super::cluster::{RetryPolicy, ShardBackend, ShardOperands, ShardOutput};
+use super::super::health::SimClock;
+use super::channel::{TrackChannel, WireCounters, WireStats};
+use super::frame::{JobHeader, Message, PanelRole, PROTOCOL_VERSION};
+
+/// Transport robustness knobs for one device link.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Per-dial TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Read deadline on every reply — a peer silent past this is
+    /// declared stalled and the shard attempt fails (recoverably).
+    pub liveness_deadline: Duration,
+    /// Idle age beyond which the link is heartbeat-probed (Ping/Pong
+    /// under the liveness deadline) before carrying a shard.
+    pub heartbeat_interval: Duration,
+    /// Consecutive dial failures tolerated per reconnect before the
+    /// shard attempt errors out.
+    pub connect_attempts: u32,
+    /// Backoff curve between dial attempts (accounted on a [`SimClock`],
+    /// never slept — same shape as the cluster's shard retry backoff).
+    pub backoff: RetryPolicy,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            connect_timeout: Duration::from_secs(1),
+            liveness_deadline: Duration::from_secs(2),
+            heartbeat_interval: Duration::from_millis(500),
+            connect_attempts: 3,
+            backoff: RetryPolicy::default(),
+        }
+    }
+}
+
+/// One coordinator→worker device link implementing [`ShardBackend`].
+pub struct TcpBackend {
+    device: usize,
+    addr: SocketAddr,
+    config: NetConfig,
+    conn: Option<TrackChannel<TcpStream>>,
+    counters: Arc<WireCounters>,
+    clock: SimClock,
+    last_used: Instant,
+    ever_connected: bool,
+    tiles: HashMap<(Semiring, &'static str), (usize, usize, usize)>,
+}
+
+impl TcpBackend {
+    /// Dial a worker eagerly (fail fast on an unreachable fleet) and
+    /// wrap the link as device `device`.
+    pub fn connect(device: usize, addr: SocketAddr, config: NetConfig) -> Result<TcpBackend> {
+        let mut backend = TcpBackend {
+            device,
+            addr,
+            config,
+            conn: None,
+            counters: WireCounters::new(),
+            clock: SimClock::default(),
+            last_used: Instant::now(),
+            ever_connected: false,
+            tiles: HashMap::new(),
+        };
+        backend.ensure_connected()?;
+        Ok(backend)
+    }
+
+    /// This link's transport ledger (monotonic across reconnects).
+    pub fn stats(&self) -> WireStats {
+        self.counters.snapshot()
+    }
+
+    /// Simulated backoff accounted between dial attempts so far.
+    pub fn simulated_backoff(&self) -> Duration {
+        self.clock.now()
+    }
+
+    /// A live, recently-verified connection — heartbeat an idle link,
+    /// re-dial (with accounted exponential backoff) a dead one.
+    fn ensure_connected(&mut self) -> Result<()> {
+        if self.conn.is_some() {
+            if self.last_used.elapsed() < self.config.heartbeat_interval {
+                return Ok(());
+            }
+            if self.ping().is_ok() {
+                self.last_used = Instant::now();
+                return Ok(());
+            }
+            // Stale link failed its probe: drop it and fall through to
+            // the re-dial path.
+            self.conn = None;
+        }
+        let mut dial_failures = 0u32;
+        loop {
+            match self.dial() {
+                Ok(chan) => {
+                    if self.ever_connected {
+                        self.counters.record_reconnect();
+                    }
+                    self.ever_connected = true;
+                    self.conn = Some(chan);
+                    self.last_used = Instant::now();
+                    return Ok(());
+                }
+                Err(e) => {
+                    dial_failures += 1;
+                    if dial_failures >= self.config.connect_attempts {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "device {}: worker {} unreachable after {dial_failures} dial attempt(s)",
+                                self.device, self.addr
+                            )
+                        });
+                    }
+                    self.clock.advance(self.config.backoff.backoff(dial_failures));
+                }
+            }
+        }
+    }
+
+    fn dial(&self) -> Result<TrackChannel<TcpStream>> {
+        let stream = TcpStream::connect_timeout(&self.addr, self.config.connect_timeout)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(self.config.liveness_deadline))?;
+        let mut chan = TrackChannel::new(stream, self.counters.clone());
+        // Registration handshake: version skew is a typed refusal at
+        // connect time, never a misparsed frame later.
+        match chan.recv()? {
+            Some(Message::Hello { proto }) if proto == PROTOCOL_VERSION => {}
+            Some(Message::Hello { proto }) => {
+                bail!("worker speaks protocol v{proto}, coordinator v{PROTOCOL_VERSION}")
+            }
+            Some(other) => bail!("expected Hello, got {}", other.kind().name()),
+            None => bail!("worker closed the connection before registering"),
+        }
+        chan.send(&Message::Welcome { proto: PROTOCOL_VERSION })?;
+        Ok(chan)
+    }
+
+    fn ping(&mut self) -> Result<()> {
+        let conn = self.conn.as_mut().expect("ping over a live connection");
+        let nonce = self.counters.snapshot().frames_sent;
+        conn.send(&Message::Ping { nonce })?;
+        match conn.recv()? {
+            Some(Message::Pong { nonce: echoed }) if echoed == nonce => {
+                self.counters.record_heartbeat();
+                Ok(())
+            }
+            Some(Message::Pong { nonce: echoed }) => {
+                bail!("pong nonce {echoed} does not echo ping nonce {nonce}")
+            }
+            Some(other) => bail!("expected Pong, got {}", other.kind().name()),
+            None => bail!("connection closed awaiting Pong"),
+        }
+    }
+
+    fn conn(&mut self) -> &mut TrackChannel<TcpStream> {
+        self.conn.as_mut().expect("connection verified by ensure_connected")
+    }
+
+    /// Await one non-control reply inside a shard stream.
+    fn recv_reply(&mut self, awaiting: &str) -> Result<Message> {
+        match self.conn().recv()? {
+            Some(msg) => Ok(msg),
+            None => bail!("worker closed the connection awaiting {awaiting}"),
+        }
+    }
+
+    /// Await the step-`index` partial C tile (or a typed worker error).
+    fn recv_ctile(&mut self, index: u32) -> Result<HostTensor> {
+        match self.recv_reply("a CTile")? {
+            Message::CTile { index: got, data } if got == index => Ok(data),
+            Message::CTile { index: got, .. } => {
+                bail!("worker replied for step {got}, expected step {index}")
+            }
+            Message::ShardErr { message } => bail!("worker-side shard failure: {message}"),
+            other => bail!("expected CTile, got {}", other.kind().name()),
+        }
+    }
+
+    fn stream_shard(
+        &mut self,
+        shard: &Shard,
+        semiring: Semiring,
+        ops: &ShardOperands,
+        mode: ExecMode,
+    ) -> Result<ShardOutput> {
+        self.ensure_connected()?;
+        let a_block = ops.a_block(shard)?;
+        let b_block = ops.b_block(shard)?;
+        let tp = &shard.plan;
+        let header = JobHeader {
+            semiring,
+            dtype: ops.a.dtype_name(),
+            mode,
+            tile_m: tp.tile_m as u32,
+            tile_n: tp.tile_n as u32,
+            tile_k: tp.tile_k as u32,
+            n_steps: tp.steps.len() as u32,
+            di: shard.di as u32,
+            dj: shard.dj as u32,
+            dks: shard.dks as u32,
+        };
+        self.conn().send(&Message::Job(header))?;
+        use HostTensor as H;
+        let out = match (semiring, &a_block, &b_block) {
+            (Semiring::PlusTimes, H::F32(_), H::F32(_)) => {
+                self.stream_typed(PlusTimesF32, tp, mode, &a_block, &b_block)
+            }
+            (Semiring::PlusTimes, H::F64(_), H::F64(_)) => {
+                self.stream_typed(PlusTimesF64, tp, mode, &a_block, &b_block)
+            }
+            (Semiring::PlusTimes, H::I32(_), H::I32(_)) => {
+                self.stream_typed(PlusTimesI32Wrap, tp, mode, &a_block, &b_block)
+            }
+            (Semiring::PlusTimes, H::U32(_), H::U32(_)) => {
+                self.stream_typed(PlusTimesU32Wrap, tp, mode, &a_block, &b_block)
+            }
+            (Semiring::MinPlus, H::F32(_), H::F32(_)) => {
+                self.stream_typed(MinPlusF32, tp, mode, &a_block, &b_block)
+            }
+            (semiring, a, b) => bail!(
+                "no wire instantiation for {semiring} over A {} / B {}",
+                a.dtype_name(),
+                b.dtype_name()
+            ),
+        }?;
+        self.last_used = Instant::now();
+        Ok(out)
+    }
+
+    /// Drive one shard's step stream, strictly request-response: panels
+    /// and the step marker go out, then the reply is awaited before the
+    /// next step — no unbounded pipelining, so a fault surfaces at the
+    /// step that hit it and neither side deadlocks on full buffers.
+    fn stream_typed<S>(
+        &mut self,
+        sr: S,
+        tp: &TilePlan,
+        mode: ExecMode,
+        a_block: &HostTensor,
+        b_block: &HostTensor,
+    ) -> Result<ShardOutput>
+    where
+        S: SemiringOps,
+        S::Elem: Element,
+    {
+        let (tm, tn, tk) = (tp.tile_m, tp.tile_n, tp.tile_k);
+        let (sm, sn, sk) = (tp.m, tp.n, tp.k);
+        let a = S::Elem::as_slice(a_block).ok_or_else(|| anyhow!("A block dtype mismatch"))?;
+        let b = S::Elem::as_slice(b_block).ok_or_else(|| anyhow!("B block dtype mismatch"))?;
+        let pad = sr.zero();
+        let mut c = vec![pad; sm * sn];
+        let mut transfer = 0u64;
+        let mut steps_executed = 0usize;
+
+        match mode {
+            ExecMode::Reuse => {
+                // The ⊕-identity template crosses the wire exactly once
+                // per shard — the `tm·tn` the in-process executor
+                // charges once per run really is the wire cost here.
+                self.conn().send(&Message::Panel {
+                    role: PanelRole::CTemplate,
+                    data: S::Elem::wrap(vec![pad; tm * tn]),
+                })?;
+                transfer += (tm * tn) as u64;
+                for (i, step) in tp.steps.iter().enumerate() {
+                    if !step.reuse_a {
+                        let mut buf = vec![pad; tm * tk];
+                        pack_a_slab(pad, &mut buf, a, step, sk, tm, tk);
+                        self.conn()
+                            .send(&Message::Panel { role: PanelRole::A, data: S::Elem::wrap(buf) })?;
+                        transfer += (tm * tk) as u64;
+                    }
+                    if !step.reuse_b {
+                        let mut buf = vec![pad; tk * tn];
+                        pack_b_slab(pad, &mut buf, b, step, sn, tk, tn);
+                        self.conn()
+                            .send(&Message::Panel { role: PanelRole::B, data: S::Elem::wrap(buf) })?;
+                        transfer += (tk * tn) as u64;
+                    }
+                    self.conn().send(&Message::Step { index: i as u32 })?;
+                    let tile = self.recv_ctile(i as u32)?;
+                    let out = S::Elem::as_slice(&tile)
+                        .ok_or_else(|| anyhow!("CTile dtype mismatch at step {i}"))?;
+                    if out.len() != tm * tn {
+                        bail!("CTile at step {i} has {} elements, expected {}", out.len(), tm * tn);
+                    }
+                    transfer += (tm * tn) as u64;
+                    steps_executed += 1;
+                    // Host-side ⊕-fold of the partial tile — the
+                    // executor's exact clipping and orientation, so the
+                    // remote path is bit-identical to the local one.
+                    for r in 0..step.rows {
+                        let dst = (step.row0 + r) * sn + step.col0;
+                        let src = r * tn;
+                        for j in 0..step.cols {
+                            c[dst + j] = sr.add(c[dst + j], out[src + j]);
+                        }
+                    }
+                }
+            }
+            ExecMode::Roundtrip => {
+                // Baseline accounting: fresh slabs and a C round-trip
+                // every step, accumulator tiles resident coordinator-side
+                // between steps exactly as `run_roundtrip` keeps them.
+                let tiles_m = sm.div_ceil(tm);
+                let tiles_n = sn.div_ceil(tn);
+                let mut acc: Vec<Option<HostTensor>> = Vec::new();
+                acc.resize_with(tiles_m * tiles_n, || None);
+                for (i, step) in tp.steps.iter().enumerate() {
+                    let mut a_buf = vec![pad; tm * tk];
+                    pack_a_slab(pad, &mut a_buf, a, step, sk, tm, tk);
+                    self.conn()
+                        .send(&Message::Panel { role: PanelRole::A, data: S::Elem::wrap(a_buf) })?;
+                    let mut b_buf = vec![pad; tk * tn];
+                    pack_b_slab(pad, &mut b_buf, b, step, sn, tk, tn);
+                    self.conn()
+                        .send(&Message::Panel { role: PanelRole::B, data: S::Elem::wrap(b_buf) })?;
+                    let tile = step.tj * tiles_m + step.ti;
+                    let c_in = acc[tile].take().unwrap_or_else(|| S::Elem::wrap(vec![pad; tm * tn]));
+                    self.conn().send(&Message::Panel { role: PanelRole::CIn, data: c_in })?;
+                    self.conn().send(&Message::Step { index: i as u32 })?;
+                    let out = self.recv_ctile(i as u32)?;
+                    if out.len() != tm * tn {
+                        bail!(
+                            "CTile at step {i} has {} elements, expected {}",
+                            out.len(),
+                            tm * tn
+                        );
+                    }
+                    transfer += (tm * tk + tk * tn + 2 * tm * tn) as u64;
+                    steps_executed += 1;
+                    if step.drain {
+                        let tile_out = S::Elem::as_slice(&out)
+                            .ok_or_else(|| anyhow!("CTile dtype mismatch at step {i}"))?;
+                        for r in 0..step.rows {
+                            c[(step.row0 + r) * sn + step.col0..][..step.cols]
+                                .copy_from_slice(&tile_out[r * tn..][..step.cols]);
+                        }
+                    } else {
+                        acc[tile] = Some(out);
+                    }
+                }
+            }
+        }
+
+        Ok(ShardOutput { c: S::Elem::wrap(c), transfer_elements: transfer, steps: steps_executed })
+    }
+}
+
+impl ShardBackend for TcpBackend {
+    fn device_id(&self) -> usize {
+        self.device
+    }
+
+    fn tile_shape(
+        &mut self,
+        semiring: Semiring,
+        dtype: &'static str,
+    ) -> Result<(usize, usize, usize)> {
+        if let Some(&tile) = self.tiles.get(&(semiring, dtype)) {
+            return Ok(tile);
+        }
+        let result = (|| -> Result<(usize, usize, usize)> {
+            self.ensure_connected()?;
+            self.conn().send(&Message::TileQuery { semiring, dtype })?;
+            match self.recv_reply("a TileInfo")? {
+                Message::TileInfo { tile_m, tile_n, tile_k } => {
+                    Ok((tile_m as usize, tile_n as usize, tile_k as usize))
+                }
+                Message::ShardErr { message } => {
+                    bail!("worker has no {semiring}/{dtype} executor: {message}")
+                }
+                other => bail!("expected TileInfo, got {}", other.kind().name()),
+            }
+        })();
+        match result {
+            Ok(tile) => {
+                self.tiles.insert((semiring, dtype), tile);
+                self.last_used = Instant::now();
+                Ok(tile)
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e).with_context(|| {
+                    format!("device {}: tile query over {}", self.device, self.addr)
+                })
+            }
+        }
+    }
+
+    fn run_shard(
+        &mut self,
+        shard: &Shard,
+        semiring: Semiring,
+        ops: &ShardOperands,
+        mode: ExecMode,
+    ) -> Result<ShardOutput> {
+        let result = self.stream_shard(shard, semiring, ops, mode);
+        if result.is_err() {
+            // A failed stream leaves the link in an unknown framing
+            // state — poison it. The next attempt re-dials (counted as
+            // a reconnect) and the worker resets on the fresh session.
+            self.conn = None;
+        }
+        result.with_context(|| format!("device {}: streaming over {}", self.device, self.addr))
+    }
+
+    fn wire_stats(&self) -> Option<WireStats> {
+        Some(self.counters.snapshot())
+    }
+}
+
+impl Drop for TcpBackend {
+    fn drop(&mut self) {
+        // Best-effort goodbye so the worker returns to `accept` without
+        // logging an abrupt EOF; the socket close is the real teardown.
+        if let Some(conn) = self.conn.as_mut() {
+            let _ = conn.send(&Message::Shutdown);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Byte-accounted channel wrapper: every send and recv on a device
+//! link is counted, so tracked wire traffic can be pinned against
+//! [`crate::schedule::shard::ShardPlan::per_device_transfer`] — the
+//! Eq. 6 model made measurable.
+//!
+//! [`WireCounters`] is shared (`Arc`) between a [`TrackChannel`] and
+//! its owner and survives reconnects: a link that drops and re-dials
+//! keeps one monotonic ledger, which is what lets recovery tests assert
+//! "reconnects happened, payload accounting still matches the model".
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::frame::{self, Message};
+
+/// Monotonic per-link transport ledger (lock-free; shared across
+/// reconnects of the same logical link).
+#[derive(Debug, Default)]
+pub struct WireCounters {
+    bytes_sent: AtomicU64,
+    bytes_received: AtomicU64,
+    frames_sent: AtomicU64,
+    frames_received: AtomicU64,
+    payload_elements_sent: AtomicU64,
+    payload_elements_received: AtomicU64,
+    reconnects: AtomicU64,
+    heartbeats: AtomicU64,
+}
+
+impl WireCounters {
+    pub fn new() -> Arc<WireCounters> {
+        Arc::new(WireCounters::default())
+    }
+
+    /// A successful re-dial after the link had already been up once.
+    pub fn record_reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A completed Ping → Pong liveness probe.
+    pub fn record_heartbeat(&self) {
+        self.heartbeats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time copy of the ledger.
+    pub fn snapshot(&self) -> WireStats {
+        WireStats {
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_received: self.bytes_received.load(Ordering::Relaxed),
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            frames_received: self.frames_received.load(Ordering::Relaxed),
+            payload_elements_sent: self.payload_elements_sent.load(Ordering::Relaxed),
+            payload_elements_received: self.payload_elements_received.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            heartbeats: self.heartbeats.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of one link's [`WireCounters`].
+///
+/// `payload_elements_*` count only operand elements (Panel / CTile
+/// bodies) — control frames contribute zero — so on a fault-free link
+/// `payload_elements()` equals the shard plan's per-device transfer
+/// exactly, and `bytes_*` bound it from above by the frame headers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub frames_sent: u64,
+    pub frames_received: u64,
+    pub payload_elements_sent: u64,
+    pub payload_elements_received: u64,
+    pub reconnects: u64,
+    pub heartbeats: u64,
+}
+
+impl WireStats {
+    /// Operand elements moved over the link, both directions — the
+    /// quantity the Eq. 6 model predicts.
+    pub fn payload_elements(&self) -> u64 {
+        self.payload_elements_sent + self.payload_elements_received
+    }
+
+    /// Raw bytes moved over the link, both directions.
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_sent + self.bytes_received
+    }
+
+    /// Frames moved over the link, both directions.
+    pub fn frames_total(&self) -> u64 {
+        self.frames_sent + self.frames_received
+    }
+}
+
+impl std::ops::Add for WireStats {
+    type Output = WireStats;
+
+    fn add(self, rhs: WireStats) -> WireStats {
+        WireStats {
+            bytes_sent: self.bytes_sent + rhs.bytes_sent,
+            bytes_received: self.bytes_received + rhs.bytes_received,
+            frames_sent: self.frames_sent + rhs.frames_sent,
+            frames_received: self.frames_received + rhs.frames_received,
+            payload_elements_sent: self.payload_elements_sent + rhs.payload_elements_sent,
+            payload_elements_received: self.payload_elements_received
+                + rhs.payload_elements_received,
+            reconnects: self.reconnects + rhs.reconnects,
+            heartbeats: self.heartbeats + rhs.heartbeats,
+        }
+    }
+}
+
+/// A transport wrapped so every byte in either direction lands in a
+/// shared [`WireCounters`] ledger; `send`/`recv` additionally count
+/// frames and payload elements.
+#[derive(Debug)]
+pub struct TrackChannel<T> {
+    inner: T,
+    counters: Arc<WireCounters>,
+}
+
+impl<T> TrackChannel<T> {
+    pub fn new(inner: T, counters: Arc<WireCounters>) -> TrackChannel<T> {
+        TrackChannel { inner, counters }
+    }
+
+    pub fn counters(&self) -> &Arc<WireCounters> {
+        &self.counters
+    }
+
+    pub fn get_ref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: Read> Read for TrackChannel<T> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.counters.bytes_received.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+}
+
+impl<T: Write> Write for TrackChannel<T> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.counters.bytes_sent.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl<T: Read + Write> TrackChannel<T> {
+    /// Encode, send, and account one message.
+    pub fn send(&mut self, msg: &Message) -> io::Result<()> {
+        frame::write_message(self, msg)?;
+        self.flush()?;
+        self.counters.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .payload_elements_sent
+            .fetch_add(msg.payload_elements(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Receive and account one message (`Ok(None)` = clean EOF; see
+    /// [`frame::read_message`] for the error surface).
+    pub fn recv(&mut self) -> io::Result<Option<Message>> {
+        let msg = frame::read_message(self)?;
+        if let Some(msg) = &msg {
+            self.counters.frames_received.fetch_add(1, Ordering::Relaxed);
+            self.counters
+                .payload_elements_received
+                .fetch_add(msg.payload_elements(), Ordering::Relaxed);
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    /// In-memory duplex stub: reads drain a scripted inbox, writes land
+    /// in an outbox.
+    struct Loop {
+        inbox: io::Cursor<Vec<u8>>,
+        outbox: Vec<u8>,
+    }
+
+    impl Read for Loop {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.inbox.read(buf)
+        }
+    }
+
+    impl Write for Loop {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.outbox.write(buf)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn channel_accounts_bytes_frames_and_elements() {
+        let reply = Message::CTile { index: 0, data: HostTensor::F32(vec![1.0, 2.0, 3.0]) };
+        let scripted = frame::encode(&reply);
+        let inbox_len = scripted.len() as u64;
+        let counters = WireCounters::new();
+        let mut chan = TrackChannel::new(
+            Loop { inbox: io::Cursor::new(scripted), outbox: Vec::new() },
+            counters.clone(),
+        );
+
+        let sent = Message::Panel {
+            role: frame::PanelRole::A,
+            data: HostTensor::F32(vec![0.5; 8]),
+        };
+        chan.send(&sent).unwrap();
+        assert_eq!(chan.recv().unwrap().unwrap(), reply);
+        assert!(chan.recv().unwrap().is_none(), "scripted inbox drained → clean EOF");
+
+        let stats = counters.snapshot();
+        assert_eq!(stats.bytes_sent, frame::encode(&sent).len() as u64);
+        assert_eq!(stats.bytes_received, inbox_len);
+        assert_eq!(stats.frames_sent, 1);
+        assert_eq!(stats.frames_received, 1);
+        assert_eq!(stats.payload_elements_sent, 8);
+        assert_eq!(stats.payload_elements_received, 3);
+        assert_eq!(stats.payload_elements(), 11);
+        assert_eq!(stats.reconnects, 0);
+    }
+}

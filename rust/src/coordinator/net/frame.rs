@@ -1,0 +1,735 @@
+//! Length-prefixed, checksummed wire frames for the socket cluster.
+//!
+//! One frame = a 12-byte header (magic, kind, dtype, payload length,
+//! CRC-32 of the payload) + a little-endian payload. The vocabulary is
+//! exactly what the step-streaming shard protocol needs: a registration
+//! handshake (`Hello`/`Welcome`), liveness probes (`Ping`/`Pong`), tile
+//! discovery (`TileQuery`/`TileInfo`), and the per-shard stream
+//! (`Job`, `Panel`, `Step`, `CTile`, `ShardErr`). Panels carry raw
+//! elements, so a link's payload-element count is directly comparable
+//! to the Eq. 6 transfer model — that is the pinning target.
+//!
+//! Decoding is total: truncated, corrupt, or lying frames produce a
+//! typed [`DecodeError`], never a panic and never partial state. A
+//! receiver that hits a decode error drops the connection; the sender
+//! sees EOF and recovers through the cluster's retry path.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::datatype::Semiring;
+use crate::runtime::HostTensor;
+use crate::schedule::ExecMode;
+
+/// Wire protocol revision; both ends refuse a mismatch at handshake
+/// time rather than misparse each other's frames later.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Frame header size: magic u16 | kind u8 | dtype u8 | payload_len u32
+/// | payload CRC-32 u32, all little-endian.
+pub const HEADER_BYTES: usize = 12;
+
+/// Refuse payloads past this before allocating — a lying length prefix
+/// must cost a typed error, not memory.
+pub const MAX_PAYLOAD_BYTES: u32 = 64 << 20;
+
+const MAGIC: u16 = 0xFCA7;
+
+/// How many consecutive read timeouts a partially received frame
+/// tolerates before the link is declared stalled mid-frame. At a frame
+/// boundary a timeout surfaces immediately (callers poll there); once
+/// bytes of a frame have landed, the peer gets a few more timeout
+/// windows to finish it.
+const MID_FRAME_STALL_LIMIT: u32 = 4;
+
+/// Frame discriminants (the header `kind` byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Worker → coordinator: registration, carries the protocol version.
+    Hello = 1,
+    /// Coordinator → worker: registration accepted.
+    Welcome = 2,
+    /// Liveness probe (either direction).
+    Ping = 3,
+    /// Liveness reply, echoing the probe nonce.
+    Pong = 4,
+    /// Ask the worker which tile shape its executor drives.
+    TileQuery = 5,
+    /// Tile-shape reply.
+    TileInfo = 6,
+    /// Open one shard stream: algebra, dtype, mode, tile, step count.
+    Job = 7,
+    /// One packed operand panel (A slab, B slab, or C tile in).
+    Panel = 8,
+    /// Execute the next step against the resident panels.
+    Step = 9,
+    /// Per-step partial C tile, worker → coordinator.
+    CTile = 10,
+    /// Worker-side shard failure (the link itself stays consistent).
+    ShardErr = 11,
+    /// Close the session cleanly.
+    Shutdown = 12,
+}
+
+impl FrameKind {
+    fn from_code(code: u8) -> Result<FrameKind, DecodeError> {
+        Ok(match code {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Welcome,
+            3 => FrameKind::Ping,
+            4 => FrameKind::Pong,
+            5 => FrameKind::TileQuery,
+            6 => FrameKind::TileInfo,
+            7 => FrameKind::Job,
+            8 => FrameKind::Panel,
+            9 => FrameKind::Step,
+            10 => FrameKind::CTile,
+            11 => FrameKind::ShardErr,
+            12 => FrameKind::Shutdown,
+            other => return Err(DecodeError::UnknownKind(other)),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameKind::Hello => "Hello",
+            FrameKind::Welcome => "Welcome",
+            FrameKind::Ping => "Ping",
+            FrameKind::Pong => "Pong",
+            FrameKind::TileQuery => "TileQuery",
+            FrameKind::TileInfo => "TileInfo",
+            FrameKind::Job => "Job",
+            FrameKind::Panel => "Panel",
+            FrameKind::Step => "Step",
+            FrameKind::CTile => "CTile",
+            FrameKind::ShardErr => "ShardErr",
+            FrameKind::Shutdown => "Shutdown",
+        }
+    }
+}
+
+/// Which operand a `Panel` frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PanelRole {
+    /// Packed `tm×tk` A slab.
+    A = 0,
+    /// Packed `tk×tn` B slab.
+    B = 1,
+    /// ⊕-identity C template, shipped once per reuse-mode shard.
+    CTemplate = 2,
+    /// Per-step C accumulator input (round-trip mode).
+    CIn = 3,
+}
+
+impl PanelRole {
+    fn from_code(code: u8) -> Result<PanelRole, DecodeError> {
+        Ok(match code {
+            0 => PanelRole::A,
+            1 => PanelRole::B,
+            2 => PanelRole::CTemplate,
+            3 => PanelRole::CIn,
+            _ => return Err(DecodeError::UnknownCode { field: "panel role", code }),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PanelRole::A => "A slab",
+            PanelRole::B => "B slab",
+            PanelRole::CTemplate => "C template",
+            PanelRole::CIn => "C in",
+        }
+    }
+}
+
+/// The `Job` frame body: everything a worker must pin before any panel
+/// lands — algebra, dtype, execution mode, tile shape, step count, and
+/// the shard coordinates (error context only).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobHeader {
+    pub semiring: Semiring,
+    pub dtype: &'static str,
+    pub mode: ExecMode,
+    pub tile_m: u32,
+    pub tile_n: u32,
+    pub tile_k: u32,
+    pub n_steps: u32,
+    pub di: u32,
+    pub dj: u32,
+    pub dks: u32,
+}
+
+/// A decoded wire message. `Panel` and `CTile` own their elements as a
+/// [`HostTensor`]; everything else is control traffic with zero payload
+/// elements, so summing payload elements over a link reproduces the
+/// Eq. 6 operand traffic exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Hello { proto: u32 },
+    Welcome { proto: u32 },
+    Ping { nonce: u64 },
+    Pong { nonce: u64 },
+    TileQuery { semiring: Semiring, dtype: &'static str },
+    TileInfo { tile_m: u32, tile_n: u32, tile_k: u32 },
+    Job(JobHeader),
+    Panel { role: PanelRole, data: HostTensor },
+    Step { index: u32 },
+    CTile { index: u32, data: HostTensor },
+    ShardErr { message: String },
+    Shutdown,
+}
+
+impl Message {
+    pub fn kind(&self) -> FrameKind {
+        match self {
+            Message::Hello { .. } => FrameKind::Hello,
+            Message::Welcome { .. } => FrameKind::Welcome,
+            Message::Ping { .. } => FrameKind::Ping,
+            Message::Pong { .. } => FrameKind::Pong,
+            Message::TileQuery { .. } => FrameKind::TileQuery,
+            Message::TileInfo { .. } => FrameKind::TileInfo,
+            Message::Job(_) => FrameKind::Job,
+            Message::Panel { .. } => FrameKind::Panel,
+            Message::Step { .. } => FrameKind::Step,
+            Message::CTile { .. } => FrameKind::CTile,
+            Message::ShardErr { .. } => FrameKind::ShardErr,
+            Message::Shutdown => FrameKind::Shutdown,
+        }
+    }
+
+    /// Operand elements this message carries (0 for control frames).
+    pub fn payload_elements(&self) -> u64 {
+        match self {
+            Message::Panel { data, .. } | Message::CTile { data, .. } => data.len() as u64,
+            _ => 0,
+        }
+    }
+
+    fn dtype_byte(&self) -> u8 {
+        match self {
+            Message::TileQuery { dtype, .. } => dtype_code(dtype),
+            Message::Job(job) => dtype_code(job.dtype),
+            Message::Panel { data, .. } | Message::CTile { data, .. } => {
+                dtype_code(data.dtype_name())
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// Why a frame failed to decode. Every arm is a protocol violation the
+/// receiver survives — the connection gets dropped, never the process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Fewer bytes than the header (or the declared payload) needs.
+    Truncated { needed: usize, have: usize },
+    /// First two bytes are not the frame magic — desynchronized stream.
+    BadMagic(u16),
+    /// Header `kind` byte outside the [`FrameKind`] vocabulary.
+    UnknownKind(u8),
+    /// Header `dtype` byte outside the element vocabulary.
+    UnknownDtype(u8),
+    /// A payload enum byte (semiring, mode, panel role) out of range.
+    UnknownCode { field: &'static str, code: u8 },
+    /// Length prefix claims more than [`MAX_PAYLOAD_BYTES`].
+    Oversize { len: u32, max: u32 },
+    /// Payload CRC-32 does not match the header — corrupt in flight.
+    ChecksumMismatch { expected: u32, computed: u32 },
+    /// Structurally invalid payload for the declared kind.
+    BadPayload { kind: &'static str, detail: String },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::Truncated { needed, have } => {
+                write!(f, "truncated frame: need {needed} bytes, have {have}")
+            }
+            DecodeError::BadMagic(got) => {
+                write!(f, "bad frame magic {got:#06x} (expected {MAGIC:#06x})")
+            }
+            DecodeError::UnknownKind(code) => write!(f, "unknown frame kind {code}"),
+            DecodeError::UnknownDtype(code) => write!(f, "unknown dtype code {code}"),
+            DecodeError::UnknownCode { field, code } => {
+                write!(f, "unknown {field} code {code}")
+            }
+            DecodeError::Oversize { len, max } => {
+                write!(f, "payload length {len} exceeds the {max}-byte frame cap")
+            }
+            DecodeError::ChecksumMismatch { expected, computed } => write!(
+                f,
+                "payload checksum mismatch: header says {expected:#010x}, payload hashes to {computed:#010x}"
+            ),
+            DecodeError::BadPayload { kind, detail } => {
+                write!(f, "malformed {kind} payload: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+// CRC-32 (IEEE 802.3, reflected 0xEDB88320), table built at compile
+// time so the codec stays dependency-free.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &byte in data {
+        c = CRC_TABLE[((c ^ byte as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+fn dtype_code(name: &str) -> u8 {
+    match name {
+        "float32" => 1,
+        "float64" => 2,
+        "int32" => 3,
+        "uint32" => 4,
+        _ => 0,
+    }
+}
+
+fn dtype_from_code(code: u8) -> Result<&'static str, DecodeError> {
+    Ok(match code {
+        1 => "float32",
+        2 => "float64",
+        3 => "int32",
+        4 => "uint32",
+        other => return Err(DecodeError::UnknownDtype(other)),
+    })
+}
+
+fn semiring_code(s: Semiring) -> u8 {
+    match s {
+        Semiring::PlusTimes => 0,
+        Semiring::MinPlus => 1,
+    }
+}
+
+fn semiring_from_code(code: u8) -> Result<Semiring, DecodeError> {
+    Ok(match code {
+        0 => Semiring::PlusTimes,
+        1 => Semiring::MinPlus,
+        _ => return Err(DecodeError::UnknownCode { field: "semiring", code }),
+    })
+}
+
+fn mode_code(mode: ExecMode) -> u8 {
+    match mode {
+        ExecMode::Reuse => 0,
+        ExecMode::Roundtrip => 1,
+    }
+}
+
+fn mode_from_code(code: u8) -> Result<ExecMode, DecodeError> {
+    Ok(match code {
+        0 => ExecMode::Reuse,
+        1 => ExecMode::Roundtrip,
+        _ => return Err(DecodeError::UnknownCode { field: "exec mode", code }),
+    })
+}
+
+fn encode_elements(data: &HostTensor, out: &mut Vec<u8>) {
+    match data {
+        HostTensor::F32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        HostTensor::F64(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        HostTensor::I32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        HostTensor::U32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+    }
+}
+
+fn decode_elements(
+    dtype_code: u8,
+    kind: &'static str,
+    bytes: &[u8],
+) -> Result<HostTensor, DecodeError> {
+    let width = match dtype_from_code(dtype_code)? {
+        "float64" => 8,
+        _ => 4,
+    };
+    if bytes.len() % width != 0 {
+        return Err(DecodeError::BadPayload {
+            kind,
+            detail: format!("{} element bytes, not a multiple of width {width}", bytes.len()),
+        });
+    }
+    // chunks_exact yields exactly `width`-sized slices, so the array
+    // conversions below cannot fail.
+    Ok(match dtype_code {
+        1 => HostTensor::F32(
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        2 => HostTensor::F64(
+            bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        3 => HostTensor::I32(
+            bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        _ => HostTensor::U32(
+            bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+    })
+}
+
+/// Sequential payload reader: every shortage is a typed `BadPayload`,
+/// and `finish` rejects trailing garbage so a decoded message never
+/// silently ignores bytes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    kind: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8], kind: &'static str) -> Cursor<'a> {
+        Cursor { buf, pos: 0, kind }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.buf.len() - self.pos < n {
+            return Err(DecodeError::BadPayload {
+                kind: self.kind,
+                detail: format!(
+                    "needs {n} more bytes at offset {}, payload is {} bytes",
+                    self.pos,
+                    self.buf.len()
+                ),
+            });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let out = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        out
+    }
+
+    fn finish(self) -> Result<(), DecodeError> {
+        if self.pos != self.buf.len() {
+            return Err(DecodeError::BadPayload {
+                kind: self.kind,
+                detail: format!("{} trailing bytes", self.buf.len() - self.pos),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Encode one message into a complete frame (header + payload).
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut payload = Vec::new();
+    match msg {
+        Message::Hello { proto } | Message::Welcome { proto } => {
+            payload.extend_from_slice(&proto.to_le_bytes());
+        }
+        Message::Ping { nonce } | Message::Pong { nonce } => {
+            payload.extend_from_slice(&nonce.to_le_bytes());
+        }
+        Message::TileQuery { semiring, .. } => payload.push(semiring_code(*semiring)),
+        Message::TileInfo { tile_m, tile_n, tile_k } => {
+            for v in [tile_m, tile_n, tile_k] {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Message::Job(job) => {
+            payload.push(semiring_code(job.semiring));
+            payload.push(mode_code(job.mode));
+            for v in [job.tile_m, job.tile_n, job.tile_k, job.n_steps, job.di, job.dj, job.dks] {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Message::Panel { role, data } => {
+            payload.push(*role as u8);
+            encode_elements(data, &mut payload);
+        }
+        Message::Step { index } => payload.extend_from_slice(&index.to_le_bytes()),
+        Message::CTile { index, data } => {
+            payload.extend_from_slice(&index.to_le_bytes());
+            encode_elements(data, &mut payload);
+        }
+        Message::ShardErr { message } => payload.extend_from_slice(message.as_bytes()),
+        Message::Shutdown => {}
+    }
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(msg.kind() as u8);
+    out.push(msg.dtype_byte());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn decode_payload(
+    kind: FrameKind,
+    dtype_code: u8,
+    payload: &[u8],
+) -> Result<Message, DecodeError> {
+    let mut cur = Cursor::new(payload, kind.name());
+    let msg = match kind {
+        FrameKind::Hello => Message::Hello { proto: cur.u32()? },
+        FrameKind::Welcome => Message::Welcome { proto: cur.u32()? },
+        FrameKind::Ping => Message::Ping { nonce: cur.u64()? },
+        FrameKind::Pong => Message::Pong { nonce: cur.u64()? },
+        FrameKind::TileQuery => Message::TileQuery {
+            semiring: semiring_from_code(cur.u8()?)?,
+            dtype: dtype_from_code(dtype_code)?,
+        },
+        FrameKind::TileInfo => {
+            Message::TileInfo { tile_m: cur.u32()?, tile_n: cur.u32()?, tile_k: cur.u32()? }
+        }
+        FrameKind::Job => Message::Job(JobHeader {
+            semiring: semiring_from_code(cur.u8()?)?,
+            mode: mode_from_code(cur.u8()?)?,
+            dtype: dtype_from_code(dtype_code)?,
+            tile_m: cur.u32()?,
+            tile_n: cur.u32()?,
+            tile_k: cur.u32()?,
+            n_steps: cur.u32()?,
+            di: cur.u32()?,
+            dj: cur.u32()?,
+            dks: cur.u32()?,
+        }),
+        FrameKind::Panel => {
+            let role = PanelRole::from_code(cur.u8()?)?;
+            let data = decode_elements(dtype_code, "Panel", cur.rest())?;
+            Message::Panel { role, data }
+        }
+        FrameKind::Step => Message::Step { index: cur.u32()? },
+        FrameKind::CTile => {
+            let index = cur.u32()?;
+            let data = decode_elements(dtype_code, "CTile", cur.rest())?;
+            Message::CTile { index, data }
+        }
+        FrameKind::ShardErr => {
+            let bytes = cur.rest().to_vec();
+            let message = String::from_utf8(bytes).map_err(|e| DecodeError::BadPayload {
+                kind: "ShardErr",
+                detail: format!("not valid UTF-8: {e}"),
+            })?;
+            Message::ShardErr { message }
+        }
+        FrameKind::Shutdown => Message::Shutdown,
+    };
+    cur.finish()?;
+    Ok(msg)
+}
+
+/// Decode one frame from the front of `buf`. Returns the message and
+/// the number of bytes consumed. Pure — the property-test surface.
+pub fn decode(buf: &[u8]) -> Result<(Message, usize), DecodeError> {
+    if buf.len() < HEADER_BYTES {
+        return Err(DecodeError::Truncated { needed: HEADER_BYTES, have: buf.len() });
+    }
+    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    if magic != MAGIC {
+        return Err(DecodeError::BadMagic(magic));
+    }
+    let kind = FrameKind::from_code(buf[2])?;
+    let dtype_code = buf[3];
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(DecodeError::Oversize { len, max: MAX_PAYLOAD_BYTES });
+    }
+    let total = HEADER_BYTES + len as usize;
+    if buf.len() < total {
+        return Err(DecodeError::Truncated { needed: total, have: buf.len() });
+    }
+    let expected = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    let payload = &buf[HEADER_BYTES..total];
+    let computed = crc32(payload);
+    if computed != expected {
+        return Err(DecodeError::ChecksumMismatch { expected, computed });
+    }
+    Ok((decode_payload(kind, dtype_code, payload)?, total))
+}
+
+/// Write one encoded frame.
+pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> io::Result<()> {
+    w.write_all(&encode(msg))
+}
+
+enum ReadFull {
+    Full,
+    Eof,
+}
+
+/// Fill `buf` from the reader. `at_boundary` means zero bytes of the
+/// frame have arrived yet: a clean EOF there is a normal close, and a
+/// read timeout there surfaces immediately so callers can poll their
+/// shutdown flag. Mid-frame, EOF is a protocol error and a timeout gets
+/// [`MID_FRAME_STALL_LIMIT`] extra windows before the link is declared
+/// stalled.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8], at_boundary: bool) -> io::Result<ReadFull> {
+    let mut pos = 0;
+    let mut stalls = 0u32;
+    while pos < buf.len() {
+        match r.read(&mut buf[pos..]) {
+            Ok(0) => {
+                if pos == 0 && at_boundary {
+                    return Ok(ReadFull::Eof);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("peer closed mid-frame ({pos}/{} bytes)", buf.len()),
+                ));
+            }
+            Ok(n) => {
+                pos += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if pos == 0 && at_boundary {
+                    return Err(e);
+                }
+                stalls += 1;
+                if stalls >= MID_FRAME_STALL_LIMIT {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        format!("link stalled mid-frame ({pos}/{} bytes)", buf.len()),
+                    ));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadFull::Full)
+}
+
+/// Read one message. `Ok(None)` is a clean EOF at a frame boundary;
+/// decode failures surface as `io::ErrorKind::InvalidData` wrapping the
+/// typed [`DecodeError`], and a read timeout at a frame boundary passes
+/// through (`WouldBlock`/`TimedOut`) so serving loops can poll.
+pub fn read_message<R: Read>(r: &mut R) -> io::Result<Option<Message>> {
+    let invalid = |e: DecodeError| io::Error::new(io::ErrorKind::InvalidData, e);
+    let mut header = [0u8; HEADER_BYTES];
+    if let ReadFull::Eof = read_full(r, &mut header, true)? {
+        return Ok(None);
+    }
+    let magic = u16::from_le_bytes([header[0], header[1]]);
+    if magic != MAGIC {
+        return Err(invalid(DecodeError::BadMagic(magic)));
+    }
+    let kind = FrameKind::from_code(header[2]).map_err(invalid)?;
+    let dtype_code = header[3];
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(invalid(DecodeError::Oversize { len, max: MAX_PAYLOAD_BYTES }));
+    }
+    let expected = u32::from_le_bytes([header[8], header[9], header[10], header[11]]);
+    let mut payload = vec![0u8; len as usize];
+    read_full(r, &mut payload, false)?;
+    let computed = crc32(&payload);
+    if computed != expected {
+        return Err(invalid(DecodeError::ChecksumMismatch { expected, computed }));
+    }
+    decode_payload(kind, dtype_code, &payload).map(Some).map_err(invalid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        let msgs = [
+            Message::Hello { proto: PROTOCOL_VERSION },
+            Message::Welcome { proto: PROTOCOL_VERSION },
+            Message::Ping { nonce: 0xDEAD_BEEF_0042 },
+            Message::Pong { nonce: 7 },
+            Message::TileQuery { semiring: Semiring::MinPlus, dtype: "float32" },
+            Message::TileInfo { tile_m: 64, tile_n: 48, tile_k: 32 },
+            Message::Job(JobHeader {
+                semiring: Semiring::PlusTimes,
+                dtype: "float64",
+                mode: ExecMode::Roundtrip,
+                tile_m: 16,
+                tile_n: 16,
+                tile_k: 16,
+                n_steps: 9,
+                di: 1,
+                dj: 0,
+                dks: 2,
+            }),
+            Message::Panel {
+                role: PanelRole::B,
+                data: HostTensor::I32(vec![-3, 0, 7, i32::MAX]),
+            },
+            Message::Step { index: 4 },
+            Message::CTile { index: 4, data: HostTensor::F32(vec![1.5, -0.25, f32::INFINITY]) },
+            Message::ShardErr { message: "kernel refused".into() },
+            Message::Shutdown,
+        ];
+        for msg in msgs {
+            let bytes = encode(&msg);
+            let (back, used) = decode(&bytes).unwrap();
+            assert_eq!(used, bytes.len(), "{:?}", msg.kind());
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_typed_errors() {
+        let bytes = encode(&Message::CTile { index: 0, data: HostTensor::F64(vec![2.0, 4.0]) });
+        assert!(matches!(decode(&bytes[..4]), Err(DecodeError::Truncated { .. })));
+        assert!(matches!(decode(&bytes[..bytes.len() - 1]), Err(DecodeError::Truncated { .. })));
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(matches!(decode(&bad_magic), Err(DecodeError::BadMagic(_))));
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x10;
+        assert!(matches!(decode(&flipped), Err(DecodeError::ChecksumMismatch { .. })));
+        let mut lying = bytes;
+        lying[4] = 0xFF;
+        lying[5] = 0xFF;
+        lying[6] = 0xFF;
+        lying[7] = 0xFF;
+        assert!(matches!(decode(&lying), Err(DecodeError::Oversize { .. })));
+    }
+}

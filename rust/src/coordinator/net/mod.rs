@@ -1,0 +1,39 @@
+//! Socket transport for the sharded cluster: the same [`ShardBackend`]
+//! contract as the in-process devices, lifted onto TCP with robustness
+//! as a first-class design constraint.
+//!
+//! - [`frame`] — length-prefixed, CRC-checksummed frame codec. Decoding
+//!   is total: truncated, corrupt, or lying frames yield typed
+//!   [`frame::DecodeError`]s, never a panic and never partial state.
+//! - [`channel`] — [`TrackChannel`], a byte-counting wrapper so every
+//!   send and recv lands in a [`WireCounters`] ledger. The pinning
+//!   target is *tracked wire payload elements == `ShardPlan::
+//!   per_device_transfer` == the Eq. 6 model*, faults or no faults.
+//! - [`worker`] — [`WorkerServer`], the remote process loop: owns its
+//!   own `Runtime`, serves shard steps, survives peer death.
+//! - [`backend`] — [`TcpBackend`], the coordinator side: heartbeats,
+//!   liveness deadlines, reconnect with accounted exponential backoff,
+//!   and error surfacing that routes into the cluster's existing
+//!   retry / re-dispatch / health machinery.
+//! - [`proxy`] — [`FaultProxy`], a deterministic fault-injecting relay
+//!   for chaos tests (drop at frame N, corrupt frame N, stall).
+//!
+//! [`ShardBackend`]: super::cluster::ShardBackend
+
+pub mod backend;
+pub mod channel;
+pub mod frame;
+pub mod proxy;
+pub mod worker;
+
+pub use backend::{NetConfig, TcpBackend};
+pub use channel::{TrackChannel, WireCounters, WireStats};
+pub use proxy::FaultProxy;
+pub use worker::WorkerServer;
+
+/// Whether this environment allows loopback TCP at all. Sandboxes that
+/// forbid sockets make `bind` fail; callers should skip (not fail)
+/// network paths when this returns `false`.
+pub fn loopback_available() -> bool {
+    std::net::TcpListener::bind(("127.0.0.1", 0)).is_ok()
+}

@@ -1,0 +1,287 @@
+//! A fault-injecting TCP proxy for deterministic network chaos tests.
+//!
+//! Sits between a coordinator and one worker, relaying bytes untouched
+//! until its [`NetFaultPlan`] says otherwise. The coordinator→worker
+//! direction is parsed frame by frame (the header's length prefix is
+//! all the proxy needs), so faults land on exact frame ordinals:
+//! [`NetFaultKind::DropAfterFrames`] severs the link mid-stream,
+//! [`NetFaultKind::CorruptFrame`] flips one seeded payload bit (the
+//! worker's CRC catches it), and [`NetFaultKind::StallAfterFrames`]
+//! goes silent while holding the coordinator-side socket open — the
+//! fault class only a liveness deadline can detect. Faults are keyed on
+//! the accept ordinal and frame count, both strictly sequential, so a
+//! chaos schedule replays identically run after run.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::super::fault::{NetFaultKind, NetFaultPlan};
+use super::frame::HEADER_BYTES;
+
+/// Poll granularity for shutdown-flag checks while relaying.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Dial timeout toward the proxied worker.
+const UPSTREAM_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// A loopback listener relaying to one worker under a fault plan.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    accept_join: Mutex<Option<JoinHandle<()>>>,
+    relay_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl FaultProxy {
+    /// Listen on `127.0.0.1:0` and relay every accepted connection to
+    /// `target`, applying `plan`.
+    pub fn spawn(target: SocketAddr, plan: Arc<NetFaultPlan>) -> Result<FaultProxy> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).context("binding fault proxy on loopback")?;
+        let addr = listener.local_addr().context("reading fault proxy address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let relay_joins: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let thread_stop = stop.clone();
+        let thread_accepted = accepted.clone();
+        let thread_joins = relay_joins.clone();
+        let accept_join = std::thread::Builder::new()
+            .name(format!("fault-proxy-{}", addr.port()))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if thread_stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let client = match conn {
+                        Ok(client) => client,
+                        Err(_) => continue,
+                    };
+                    let conn_idx = thread_accepted.fetch_add(1, Ordering::SeqCst) as u32;
+                    let plan = plan.clone();
+                    let stop = thread_stop.clone();
+                    // Handlers get their own threads: a stalled link must
+                    // keep stalling while the coordinator re-dials through
+                    // a fresh connection.
+                    let join = std::thread::spawn(move || {
+                        let _ = relay(client, target, conn_idx, &plan, &stop);
+                    });
+                    thread_joins.lock().unwrap_or_else(|e| e.into_inner()).push(join);
+                }
+            })
+            .context("spawning fault proxy thread")?;
+
+        Ok(FaultProxy {
+            addr,
+            stop,
+            accepted,
+            accept_join: Mutex::new(Some(accept_join)),
+            relay_joins,
+        })
+    }
+
+    /// The loopback address coordinators should dial instead of the
+    /// worker's.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections accepted so far (the fault plan's `connection` key).
+    pub fn connections_accepted(&self) -> u64 {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting and join every relay thread. Idempotent, and
+    /// half-open peers cannot wedge it — relay loops poll the stop flag
+    /// on read-timeout ticks.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect_timeout(&self.addr, POLL_INTERVAL);
+        if let Some(join) = self.accept_join.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            let _ = join.join();
+        }
+        let joins: Vec<_> =
+            self.relay_joins.lock().unwrap_or_else(|e| e.into_inner()).drain(..).collect();
+        for join in joins {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+enum Filled {
+    Full,
+    Eof,
+}
+
+/// Read exactly `buf.len()` bytes, polling the stop flag on timeout
+/// ticks. Clean EOF is only legal with nothing read yet.
+fn read_exact_poll(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> io::Result<Filled> {
+    let mut pos = 0;
+    while pos < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Err(io::Error::new(io::ErrorKind::Interrupted, "proxy shutting down"));
+        }
+        match stream.read(&mut buf[pos..]) {
+            Ok(0) => {
+                if pos == 0 {
+                    return Ok(Filled::Eof);
+                }
+                return Err(io::ErrorKind::UnexpectedEof.into());
+            }
+            Ok(n) => pos += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut
+                    || e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Filled::Full)
+}
+
+fn relay(
+    client: TcpStream,
+    target: SocketAddr,
+    conn_idx: u32,
+    plan: &NetFaultPlan,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    let mut client_rd = client;
+    client_rd.set_read_timeout(Some(POLL_INTERVAL))?;
+    client_rd.set_nodelay(true).ok();
+    let upstream = TcpStream::connect_timeout(&target, UPSTREAM_CONNECT_TIMEOUT)?;
+    upstream.set_read_timeout(Some(POLL_INTERVAL))?;
+    upstream.set_nodelay(true).ok();
+
+    let fault = plan.kind_for(conn_idx);
+    let stalled = Arc::new(AtomicBool::new(false));
+
+    // Worker→coordinator direction: a dumb byte pump. On upstream EOF it
+    // closes the client — unless the link is deliberately stalled, in
+    // which case the client-side socket must stay open and silent.
+    let mut pump_client = client_rd.try_clone()?;
+    let mut pump_upstream = upstream.try_clone()?;
+    let pump_stalled = stalled.clone();
+    let pump_done = Arc::new(AtomicBool::new(false));
+    let pump_done_flag = pump_done.clone();
+    let pump = std::thread::spawn(move || {
+        let mut buf = [0u8; 8192];
+        loop {
+            if pump_done_flag.load(Ordering::SeqCst) {
+                break;
+            }
+            match pump_upstream.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    if pump_client.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut
+                        || e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+        if !pump_stalled.load(Ordering::SeqCst) {
+            let _ = pump_client.shutdown(Shutdown::Both);
+        }
+    });
+
+    // Coordinator→worker direction: framed, so faults land on exact
+    // frame ordinals.
+    let mut upstream_wr = upstream.try_clone()?;
+    let mut frame_idx = 0u32;
+    let result: io::Result<()> = (|| {
+        loop {
+            let mut header = [0u8; HEADER_BYTES];
+            match read_exact_poll(&mut client_rd, &mut header, stop)? {
+                Filled::Eof => return Ok(()),
+                Filled::Full => {}
+            }
+            let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+            let mut payload = vec![0u8; len];
+            if len > 0 {
+                match read_exact_poll(&mut client_rd, &mut payload, stop)? {
+                    Filled::Eof => return Err(io::ErrorKind::UnexpectedEof.into()),
+                    Filled::Full => {}
+                }
+            }
+            match fault {
+                Some(NetFaultKind::DropAfterFrames(n)) if frame_idx == n => {
+                    plan.record_injection();
+                    let _ = upstream.shutdown(Shutdown::Both);
+                    let _ = client_rd.shutdown(Shutdown::Both);
+                    return Ok(());
+                }
+                Some(NetFaultKind::CorruptFrame(n)) if frame_idx == n => {
+                    plan.record_injection();
+                    if payload.is_empty() {
+                        // No payload to corrupt: flip a checksum bit so
+                        // the frame still fails validation downstream.
+                        header[8] ^= 0x01;
+                    } else {
+                        let (byte, bit) = plan.corrupt_bit(conn_idx, n, payload.len());
+                        payload[byte] ^= 1 << bit;
+                    }
+                }
+                Some(NetFaultKind::StallAfterFrames(n)) if frame_idx == n => {
+                    plan.record_injection();
+                    stalled.store(true, Ordering::SeqCst);
+                    // The worker side learns the truth (EOF → resets to
+                    // accept); the coordinator side hears nothing until
+                    // its liveness deadline fires.
+                    let _ = upstream.shutdown(Shutdown::Both);
+                    let mut sink = [0u8; 8192];
+                    loop {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        match client_rd.read(&mut sink) {
+                            Ok(0) => break,
+                            Ok(_) => {}
+                            Err(e)
+                                if e.kind() == io::ErrorKind::WouldBlock
+                                    || e.kind() == io::ErrorKind::TimedOut
+                                    || e.kind() == io::ErrorKind::Interrupted => {}
+                            Err(_) => break,
+                        }
+                    }
+                    let _ = client_rd.shutdown(Shutdown::Both);
+                    return Ok(());
+                }
+                _ => {}
+            }
+            upstream_wr.write_all(&header)?;
+            upstream_wr.write_all(&payload)?;
+            frame_idx += 1;
+        }
+    })();
+
+    // Tear down both directions and collect the pump.
+    let _ = upstream.shutdown(Shutdown::Both);
+    if !stalled.load(Ordering::SeqCst) {
+        let _ = client_rd.shutdown(Shutdown::Both);
+    }
+    pump_done.store(true, Ordering::SeqCst);
+    let _ = pump.join();
+    result
+}

@@ -1,0 +1,367 @@
+//! The worker side of the socket cluster: a listener thread that owns
+//! its own [`Runtime`] and serves shard streams over the frame
+//! protocol.
+//!
+//! One connection is served at a time (the coordinator holds exactly
+//! one link per device and re-dials on failure); per-`(semiring,
+//! dtype)` executors are cached across connections, so a reconnect
+//! costs a handshake, not an artifact reload. The serving loop is
+//! defensive at every boundary: a decode error or mid-frame stall
+//! drops the connection and returns to `accept` (the process survives
+//! any peer), a worker-side shard failure is reported as a typed
+//! `ShardErr` frame over a still-consistent link, and `shutdown` is
+//! idempotent and joins cleanly even when the peer is a half-open
+//! corpse — the serving loop polls its stop flag on a read timeout
+//! instead of blocking forever.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::datatype::Semiring;
+use crate::runtime::{HostTensor, Runtime};
+use crate::schedule::executor::identity_tensor;
+use crate::schedule::{ExecMode, HostCacheProfile, TiledExecutor};
+
+use super::channel::{TrackChannel, WireCounters, WireStats};
+use super::frame::{JobHeader, Message, PanelRole, PROTOCOL_VERSION};
+
+/// How often a blocked worker read wakes up to poll the stop flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// A shard-serving worker listening on a loopback TCP port.
+pub struct WorkerServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    counters: Arc<WireCounters>,
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl WorkerServer {
+    /// Bind `127.0.0.1:0` and serve shards from artifacts under `dir`
+    /// (falling back to the built-in native manifest when the directory
+    /// holds none — same policy as the service).
+    pub fn spawn(dir: PathBuf, profile: HostCacheProfile) -> Result<WorkerServer> {
+        WorkerServer::spawn_inner(Some(dir), profile)
+    }
+
+    /// Bind `127.0.0.1:0` and serve shards from the built-in native
+    /// runtime — the test and bench fleet constructor.
+    pub fn spawn_native(profile: HostCacheProfile) -> Result<WorkerServer> {
+        WorkerServer::spawn_inner(None, profile)
+    }
+
+    fn spawn_inner(dir: Option<PathBuf>, profile: HostCacheProfile) -> Result<WorkerServer> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).context("binding worker listener on loopback")?;
+        let addr = listener.local_addr().context("reading worker listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = WireCounters::new();
+        // The Runtime is built inside the serving thread (engines need
+        // not be Send); a ready channel surfaces construction errors to
+        // the caller instead of leaving a silently dead listener.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread_stop = stop.clone();
+        let thread_counters = counters.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("net-worker-{}", addr.port()))
+            .spawn(move || {
+                let runtime = match dir {
+                    Some(dir) => Runtime::open_or_native(dir),
+                    None => Runtime::native_default(),
+                };
+                match runtime {
+                    Ok(runtime) => {
+                        let _ = ready_tx.send(Ok(()));
+                        let mut session = WorkerSession {
+                            runtime,
+                            profile,
+                            executors: HashMap::new(),
+                            counters: thread_counters,
+                        };
+                        session.serve(listener, &thread_stop);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.context("opening worker runtime")));
+                    }
+                }
+            })
+            .context("spawning worker thread")?;
+        let server =
+            WorkerServer { addr, stop, counters, join: Mutex::new(Some(join)) };
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(server),
+            Ok(Err(e)) => Err(e),
+            Err(_) => bail!("worker thread died before reporting ready"),
+        }
+    }
+
+    /// The loopback address this worker accepts coordinators on.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// This worker's transport ledger (accumulated across connections).
+    pub fn wire_stats(&self) -> WireStats {
+        self.counters.snapshot()
+    }
+
+    /// Stop accepting, drop any live connection, and join the serving
+    /// thread. Idempotent: the second and later calls are no-ops, and a
+    /// dead or half-open peer cannot wedge the join — the serving loop
+    /// polls the stop flag on every read-timeout tick.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke a blocked `accept` awake; if the worker is mid-session
+        // instead, its read timeout delivers the flag.
+        let _ = TcpStream::connect_timeout(&self.addr, POLL_INTERVAL);
+        if let Some(join) = self.join.lock().expect("worker join lock").take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The state a serving thread owns: a runtime, cached executors, and
+/// the (connection-spanning) wire ledger.
+struct WorkerSession {
+    runtime: Runtime,
+    profile: HostCacheProfile,
+    executors: HashMap<(Semiring, &'static str), TiledExecutor>,
+    counters: Arc<WireCounters>,
+}
+
+/// Per-shard stream state: pinned job header plus resident panels.
+struct ActiveJob {
+    header: JobHeader,
+    template: Option<HostTensor>,
+    a_slab: Option<HostTensor>,
+    b_slab: Option<HostTensor>,
+    c_in: Option<HostTensor>,
+}
+
+impl WorkerSession {
+    fn serve(&mut self, listener: TcpListener, stop: &AtomicBool) {
+        for conn in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let stream = match conn {
+                Ok(stream) => stream,
+                Err(_) => continue,
+            };
+            let peer = stream.peer_addr().ok();
+            if let Err(e) = self.serve_connection(stream, stop) {
+                // A dropped/corrupt/stalled link is survivable by
+                // design: log, forget the connection, accept the next.
+                eprintln!(
+                    "net worker: connection{} ended: {e:#}",
+                    peer.map(|p| format!(" from {p}")).unwrap_or_default()
+                );
+            }
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+        }
+    }
+
+    fn serve_connection(&mut self, stream: TcpStream, stop: &AtomicBool) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(POLL_INTERVAL))
+            .context("setting worker read timeout")?;
+        let mut chan = TrackChannel::new(stream, self.counters.clone());
+        // Registration: the worker announces itself and its protocol
+        // revision; the coordinator must acknowledge before any work.
+        chan.send(&Message::Hello { proto: PROTOCOL_VERSION })?;
+        match recv_polling(&mut chan, stop)? {
+            Some(Message::Welcome { proto }) if proto == PROTOCOL_VERSION => {}
+            Some(Message::Welcome { proto }) => {
+                bail!("coordinator speaks protocol v{proto}, worker v{PROTOCOL_VERSION}")
+            }
+            Some(other) => bail!("expected Welcome, got {}", other.kind().name()),
+            None => return Ok(()),
+        }
+
+        let mut job: Option<ActiveJob> = None;
+        loop {
+            let msg = match recv_polling(&mut chan, stop)? {
+                Some(msg) => msg,
+                None => return Ok(()),
+            };
+            match msg {
+                Message::Ping { nonce } => chan.send(&Message::Pong { nonce })?,
+                Message::TileQuery { semiring, dtype } => {
+                    match self.executor(semiring, dtype) {
+                        Ok(exec) => {
+                            let (tm, tn, tk) = exec.tile_shape();
+                            chan.send(&Message::TileInfo {
+                                tile_m: tm as u32,
+                                tile_n: tn as u32,
+                                tile_k: tk as u32,
+                            })?;
+                        }
+                        Err(e) => chan.send(&Message::ShardErr { message: format!("{e:#}") })?,
+                    }
+                }
+                Message::Job(header) => match self.open_job(header) {
+                    Ok(active) => job = Some(active),
+                    Err(e) => {
+                        job = None;
+                        chan.send(&Message::ShardErr { message: format!("{e:#}") })?;
+                    }
+                },
+                Message::Panel { role, data } => {
+                    if let Err(e) = accept_panel(&mut job, role, data) {
+                        job = None;
+                        chan.send(&Message::ShardErr { message: format!("{e:#}") })?;
+                    }
+                }
+                Message::Step { index } => match self.run_step(&mut job, index) {
+                    Ok(out) => chan.send(&Message::CTile { index, data: out })?,
+                    Err(e) => {
+                        job = None;
+                        chan.send(&Message::ShardErr { message: format!("{e:#}") })?;
+                    }
+                },
+                Message::Shutdown => return Ok(()),
+                other => bail!("unexpected {} frame mid-session", other.kind().name()),
+            }
+        }
+    }
+
+    fn executor(&mut self, semiring: Semiring, dtype: &'static str) -> Result<&TiledExecutor> {
+        if !self.executors.contains_key(&(semiring, dtype)) {
+            let exec =
+                TiledExecutor::for_algebra_with(&self.runtime, semiring, dtype, &self.profile)
+                    .with_context(|| format!("building {semiring} {dtype} executor"))?;
+            self.executors.insert((semiring, dtype), exec);
+        }
+        Ok(&self.executors[&(semiring, dtype)])
+    }
+
+    fn open_job(&mut self, header: JobHeader) -> Result<ActiveJob> {
+        let exec = self.executor(header.semiring, header.dtype)?;
+        let tile = exec.tile_shape();
+        let declared =
+            (header.tile_m as usize, header.tile_n as usize, header.tile_k as usize);
+        if tile != declared {
+            bail!(
+                "job tile {}x{}x{} does not match this worker's {}x{}x{} artifact",
+                declared.0,
+                declared.1,
+                declared.2,
+                tile.0,
+                tile.1,
+                tile.2
+            );
+        }
+        Ok(ActiveJob { header, template: None, a_slab: None, b_slab: None, c_in: None })
+    }
+
+    fn run_step(&mut self, job: &mut Option<ActiveJob>, index: u32) -> Result<HostTensor> {
+        let active = job.as_mut().context("Step frame with no open Job")?;
+        let header = active.header;
+        if index >= header.n_steps {
+            bail!("step {index} past the job's {} steps", header.n_steps);
+        }
+        let a = active.a_slab.as_ref().context("Step frame with no resident A slab")?;
+        let b = active.b_slab.as_ref().context("Step frame with no resident B slab")?;
+        let c_in = match header.mode {
+            // Reuse: every step accumulates from the ⊕-identity
+            // template (shipped once); partials fold on the coordinator.
+            ExecMode::Reuse => {
+                active.template.as_ref().context("Step frame with no resident C template")?
+            }
+            // Round-trip: the coordinator ships the accumulator in
+            // before every step.
+            ExecMode::Roundtrip => {
+                active.c_in.as_ref().context("Step frame with no resident C input")?
+            }
+        };
+        let exec = &self.executors[&(header.semiring, header.dtype)];
+        let out = exec
+            .execute_tile_step(c_in, a, b)
+            .with_context(|| {
+                format!(
+                    "shard (di {}, dj {}, dks {}) step {index}",
+                    header.di, header.dj, header.dks
+                )
+            })?;
+        if header.mode == ExecMode::Roundtrip {
+            // Each round-trip C input is single-use by protocol.
+            active.c_in = None;
+        }
+        Ok(out)
+    }
+}
+
+fn accept_panel(job: &mut Option<ActiveJob>, role: PanelRole, data: HostTensor) -> Result<()> {
+    let active = job.as_mut().context("Panel frame with no open Job")?;
+    let header = active.header;
+    if data.dtype_name() != header.dtype {
+        bail!("{} panel is {}, job is {}", role.name(), data.dtype_name(), header.dtype);
+    }
+    let (tm, tn, tk) =
+        (header.tile_m as usize, header.tile_n as usize, header.tile_k as usize);
+    let expect = match role {
+        PanelRole::A => tm * tk,
+        PanelRole::B => tk * tn,
+        PanelRole::CTemplate | PanelRole::CIn => tm * tn,
+    };
+    if data.len() != expect {
+        bail!("{} panel has {} elements, expected {expect}", role.name(), data.len());
+    }
+    match role {
+        PanelRole::A => active.a_slab = Some(data),
+        PanelRole::B => active.b_slab = Some(data),
+        PanelRole::CTemplate => {
+            // The template must be the ⊕-identity — that is the zero-acc
+            // bit-identity contract. Verify rather than trust the wire.
+            let identity = identity_tensor(header.semiring, header.dtype, expect)?;
+            if data != identity {
+                bail!("C template is not the {} ⊕-identity", header.semiring);
+            }
+            active.template = Some(data);
+        }
+        PanelRole::CIn => active.c_in = Some(data),
+    }
+    Ok(())
+}
+
+/// Receive with the read-timeout poll loop: a timeout at a frame
+/// boundary re-checks the stop flag and keeps waiting; everything else
+/// passes through.
+fn recv_polling(
+    chan: &mut TrackChannel<TcpStream>,
+    stop: &AtomicBool,
+) -> Result<Option<Message>> {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match chan.recv() {
+            Ok(msg) => return Ok(msg),
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e).context("receiving frame"),
+        }
+    }
+}

@@ -968,6 +968,46 @@ impl TiledExecutor {
         }
     }
 
+    /// Execute one tile step — `C_in ⊕ (A ⊗⊕ B)` over full `tm×tk` /
+    /// `tk×tn` slabs — dispatching a [`HostTensor`] triple onto the
+    /// typed kernel path. This is the remote worker's per-step entry
+    /// (`coordinator::net::worker`): `c_in` is the ⊕-identity template
+    /// on the reuse schedule (bit-identical to the zero-acc fast path,
+    /// which the runtime suite pins) or the resident accumulator tile
+    /// on the round-trip schedule. Slab lengths are validated against
+    /// the artifact spec by the kernel itself.
+    pub fn execute_tile_step(
+        &self,
+        c_in: &HostTensor,
+        a: &HostTensor,
+        b: &HostTensor,
+    ) -> Result<HostTensor> {
+        use HostTensor as H;
+        match (self.semiring, c_in, a, b) {
+            (Semiring::PlusTimes, H::F32(cv), H::F32(av), H::F32(bv)) => {
+                Ok(H::F32(self.kernel.execute_slices(PlusTimesF32, &[cv, av, bv])?))
+            }
+            (Semiring::PlusTimes, H::F64(cv), H::F64(av), H::F64(bv)) => {
+                Ok(H::F64(self.kernel.execute_slices(PlusTimesF64, &[cv, av, bv])?))
+            }
+            (Semiring::PlusTimes, H::I32(cv), H::I32(av), H::I32(bv)) => {
+                Ok(H::I32(self.kernel.execute_slices(PlusTimesI32Wrap, &[cv, av, bv])?))
+            }
+            (Semiring::PlusTimes, H::U32(cv), H::U32(av), H::U32(bv)) => {
+                Ok(H::U32(self.kernel.execute_slices(PlusTimesU32Wrap, &[cv, av, bv])?))
+            }
+            (Semiring::MinPlus, H::F32(cv), H::F32(av), H::F32(bv)) => {
+                Ok(H::F32(self.kernel.execute_slices(MinPlusF32, &[cv, av, bv])?))
+            }
+            (semiring, c_in, a, b) => bail!(
+                "no executor instantiation for {semiring} over C {} / A {} / B {}",
+                c_in.dtype_name(),
+                a.dtype_name(),
+                b.dtype_name()
+            ),
+        }
+    }
+
     /// The communication-avoiding schedule: host-resident accumulator,
     /// slab reuse, double-buffered packing on a scoped helper thread.
     fn run_reuse<S>(

@@ -347,6 +347,49 @@ pub fn shard_transfer(shard: &Shard, mode: ExecMode) -> u64 {
     }
 }
 
+/// Data-bearing wire frames (panels out + C tiles back) one shard costs
+/// over the socket transport — control frames (job header, step
+/// markers, heartbeats) carry no elements and are excluded, so this is
+/// the frame-count twin of [`shard_transfer`]. Reuse ships the C
+/// template once and re-ships A/B only on non-reusing steps, exactly
+/// the step structure [`TilePlan::transfer_elements`] charges;
+/// Roundtrip ships A, B, and C-in and receives C-out every step.
+pub fn shard_wire_frames(shard: &Shard, mode: ExecMode) -> u64 {
+    let n_steps = shard.plan.n_steps() as u64;
+    match mode {
+        ExecMode::Reuse => {
+            let a_panels = shard.plan.steps.iter().filter(|s| !s.reuse_a).count() as u64;
+            let b_panels = shard.plan.steps.iter().filter(|s| !s.reuse_b).count() as u64;
+            1 + a_panels + b_panels + n_steps
+        }
+        ExecMode::Roundtrip => 4 * n_steps,
+    }
+}
+
+impl ShardPlan {
+    /// Data-bearing wire frames per device slot under the socket
+    /// transport (idle slots report 0) — the per-link frame budget the
+    /// network chaos tests index into.
+    pub fn per_device_wire_frames(&self, mode: ExecMode) -> Vec<u64> {
+        let mut per = vec![0u64; self.n_devices];
+        for s in &self.shards {
+            per[s.device] += shard_wire_frames(s, mode);
+        }
+        per
+    }
+
+    /// Predicted wire payload bytes per device slot: exactly
+    /// [`Self::per_device_transfer`] scaled by the element width — the
+    /// Eq. 6 model expressed in bytes, pinned against the transport's
+    /// [`crate::coordinator::net::WireStats`] ledger.
+    pub fn per_device_wire_bytes(&self, mode: ExecMode, elem_bytes: u64) -> Vec<u64> {
+        self.per_device_transfer(mode)
+            .into_iter()
+            .map(|e| e * elem_bytes)
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -19,7 +19,9 @@
 //! ([`grid2d::sharded_traffic`]) to pin the shard planner's predicted
 //! host traffic against an independent simulation; [`baseline`]
 //! implements the prior-work double-buffered-C designs (the √2 intensity
-//! penalty) plus naive/ideal reference schedules.
+//! penalty) plus naive/ideal reference schedules; [`wire`] replays the
+//! socket transport's per-link payload stream to pin tracked wire bytes
+//! against the same Eq. 6 accounting.
 
 pub mod bandwidth;
 pub mod baseline;
@@ -28,8 +30,10 @@ pub mod exact;
 pub mod fifo;
 pub mod grid2d;
 pub mod stats;
+pub mod wire;
 
 pub use chain::simulate_timeline;
 pub use exact::ExactSim;
 pub use grid2d::{sharded_traffic, ShardTraffic};
 pub use stats::SimReport;
+pub use wire::{wire_traffic, WireTraffic};

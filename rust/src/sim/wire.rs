@@ -1,0 +1,132 @@
+//! Independent replay of the socket transport's wire traffic.
+//!
+//! [`wire_traffic`] walks a [`ShardPlan`]'s step streams the way the
+//! TCP coordinator does — C template once, A/B panels on residency
+//! change, one partial C tile back per step — and counts both payload
+//! elements and data-bearing frames per device link. It deliberately
+//! re-derives residency from step identity (like
+//! [`super::grid2d::sharded_traffic`]) instead of trusting the plan's
+//! `reuse_a`/`reuse_b` flags or the transport's own ledger, so the
+//! pinning chain has three independent legs:
+//!
+//! ```text
+//! ShardPlan::per_device_transfer  (Eq. 6 closed-form model)
+//!   == sim::wire::wire_traffic    (this replay)
+//!   == net::WireStats payload elements (measured on the socket)
+//! ```
+//!
+//! faults or no faults — a recovery that re-ships anything shows up as
+//! a ledger mismatch, and a model drift shows up against the replay.
+
+use crate::schedule::shard::ShardPlan;
+use crate::schedule::ExecMode;
+
+/// Per-link wire volume of one sharded run over the socket transport.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireTraffic {
+    /// Payload elements crossing each device's link (both directions:
+    /// panels out + C tiles back). Idle slots report 0.
+    pub per_device_elements: Vec<u64>,
+    /// Data-bearing frames per link (panels + C tiles; control frames
+    /// carry no elements and are excluded).
+    pub per_device_frames: Vec<u64>,
+    /// Fleet-total payload elements.
+    pub total_elements: u64,
+    /// Fleet-total data frames.
+    pub total_frames: u64,
+}
+
+impl WireTraffic {
+    /// The element counts scaled to bytes for a dtype width — the form
+    /// the Eq. 6 tables quote.
+    pub fn per_device_bytes(&self, elem_bytes: u64) -> Vec<u64> {
+        self.per_device_elements.iter().map(|&e| e * elem_bytes).collect()
+    }
+}
+
+/// Replay every shard's step stream and count wire payload + frames.
+pub fn wire_traffic(plan: &ShardPlan, mode: ExecMode) -> WireTraffic {
+    let mut per_device_elements = vec![0u64; plan.n_devices];
+    let mut per_device_frames = vec![0u64; plan.n_devices];
+    for shard in &plan.shards {
+        let tp = &shard.plan;
+        let a_el = (tp.tile_m * tp.tile_k) as u64;
+        let b_el = (tp.tile_k * tp.tile_n) as u64;
+        let c_el = (tp.tile_m * tp.tile_n) as u64;
+        let (mut elements, mut frames) = (0u64, 0u64);
+        match mode {
+            ExecMode::Reuse => {
+                // ⊕-identity template ships once per shard stream.
+                elements += c_el;
+                frames += 1;
+                let mut resident_a: Option<(usize, usize)> = None;
+                let mut resident_b: Option<(usize, usize)> = None;
+                for s in &tp.steps {
+                    if resident_a != Some((s.ti, s.ks)) {
+                        resident_a = Some((s.ti, s.ks));
+                        elements += a_el;
+                        frames += 1;
+                    }
+                    if resident_b != Some((s.tj, s.ks)) {
+                        resident_b = Some((s.tj, s.ks));
+                        elements += b_el;
+                        frames += 1;
+                    }
+                    // Partial C tile back per step.
+                    elements += c_el;
+                    frames += 1;
+                }
+            }
+            ExecMode::Roundtrip => {
+                let n = tp.steps.len() as u64;
+                elements = n * (a_el + b_el + 2 * c_el);
+                frames = 4 * n;
+            }
+        }
+        per_device_elements[shard.device] += elements;
+        per_device_frames[shard.device] += frames;
+    }
+    let total_elements = per_device_elements.iter().sum();
+    let total_frames = per_device_frames.iter().sum();
+    WireTraffic { per_device_elements, per_device_frames, total_elements, total_frames }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::shard::{shard_wire_frames, DeviceTile, ShardGrid};
+
+    const T16: DeviceTile = DeviceTile { m: 16, n: 16, k: 16 };
+
+    #[test]
+    fn replay_matches_plan_accounting_both_modes() {
+        let plan =
+            ShardPlan::with_grid(97, 83, 61, ShardGrid::new(2, 2, 2), &vec![T16; 8]);
+        for mode in [ExecMode::Reuse, ExecMode::Roundtrip] {
+            let wire = wire_traffic(&plan, mode);
+            assert_eq!(
+                wire.per_device_elements,
+                plan.per_device_transfer(mode),
+                "{mode:?}: replay vs Eq.6 per-device elements"
+            );
+            assert_eq!(wire.total_elements, plan.predicted_transfer_elements(mode));
+            assert_eq!(
+                wire.per_device_frames,
+                plan.per_device_wire_frames(mode),
+                "{mode:?}: replay vs plan frame counts"
+            );
+            assert_eq!(
+                wire.total_frames,
+                plan.shards.iter().map(|s| shard_wire_frames(s, mode)).sum::<u64>()
+            );
+        }
+    }
+
+    #[test]
+    fn bytes_scale_elements_by_width() {
+        let plan = ShardPlan::plan(128, 96, 64, &vec![T16; 4]);
+        let wire = wire_traffic(&plan, ExecMode::Reuse);
+        assert_eq!(wire.per_device_bytes(4), plan.per_device_wire_bytes(ExecMode::Reuse, 4));
+        assert_eq!(wire.per_device_bytes(8), plan.per_device_wire_bytes(ExecMode::Reuse, 8));
+    }
+}

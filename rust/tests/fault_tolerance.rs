@@ -152,6 +152,7 @@ fn recovered_runs_are_bit_identical_for_every_algebra_and_grid() {
                 RecoveryStats {
                     retries: 2,
                     redispatches: 0,
+                    reconnects: 0,
                     simulated_backoff: Duration::from_millis(20),
                 },
                 "{algebra:?} {grid}"
@@ -233,6 +234,7 @@ fn a_dying_device_is_quarantined_routed_around_and_probed_back() {
         RecoveryStats {
             retries: 2,
             redispatches: 1,
+            reconnects: 0,
             // backoff(1) + backoff(2) = 10ms + 20ms.
             simulated_backoff: Duration::from_millis(30),
         }

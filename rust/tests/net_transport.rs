@@ -1,0 +1,538 @@
+//! Socket-transport property suite: frame-codec totality, loopback
+//! bit-identity, wire-byte == Eq. 6 pinning, and recovery from injected
+//! network faults.
+//!
+//! The central contracts, mirroring the in-process fault suite:
+//!
+//! 1. **Codec totality** — every (semiring, dtype) panel/tile/job frame
+//!    round-trips exactly, and truncation, bit-flips, and length-prefix
+//!    lies produce typed [`DecodeError`]s, never a panic and never
+//!    partial state. Socket-free, seeded, exhaustive over frame kinds.
+//! 2. **Wire pinning** — on a live loopback fleet, each link's tracked
+//!    payload elements equal `ShardPlan::per_device_transfer` equal the
+//!    independent [`sim::wire`] replay: the Eq. 6 model measured on
+//!    real sockets, faults or no faults.
+//! 3. **Recovery bit-identity** — under a dropped connection, a
+//!    corrupted frame, or a heartbeat stall (injected deterministically
+//!    through [`FaultProxy`]), the distributed result is bit-identical
+//!    to the fault-free in-process control for all five (semiring,
+//!    dtype) instantiations, with the recovery surfaced in
+//!    [`RecoveryStats`] (retries, reconnects, accounted backoff).
+//!
+//! Sandboxes that forbid sockets skip (not fail) the live-socket tests
+//! via [`loopback_available`].
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fcamm::coordinator::net::frame::{
+    self, DecodeError, JobHeader, Message, PanelRole, HEADER_BYTES, MAX_PAYLOAD_BYTES,
+    PROTOCOL_VERSION,
+};
+use fcamm::coordinator::{
+    faulty_native_cluster, loopback_available, ClusterService, DeviceState, FaultPlan,
+    FaultProxy, HealthPolicy, NetConfig, NetFaultKind, NetFaultPlan, NetFaultSpec,
+    RecoveryStats, WorkerServer,
+};
+use fcamm::datatype::Semiring;
+use fcamm::runtime::HostTensor;
+use fcamm::schedule::shard::ShardGrid;
+use fcamm::schedule::{ExecMode, HostCacheProfile};
+use fcamm::sim::wire::wire_traffic;
+use fcamm::util::rng::Rng;
+
+/// Small tiles (16³ under a 16 KiB budget) keep test-sized problems
+/// genuinely multi-tile — same profile the fault-tolerance suite pins.
+fn tight() -> HostCacheProfile {
+    HostCacheProfile::with_capacity(16 * 1024)
+}
+
+/// Fault-free in-process control fleet with the same numerics as the
+/// networked workers (native runtime, same cache profile).
+fn control(n_devices: usize) -> ClusterService {
+    faulty_native_cluster(n_devices, tight(), Arc::new(FaultPlan::none()))
+        .expect("control cluster starts")
+}
+
+fn spawn_workers(n: usize) -> Vec<WorkerServer> {
+    (0..n).map(|_| WorkerServer::spawn_native(tight()).expect("worker spawns")).collect()
+}
+
+/// Network config with heartbeats effectively off, so coordinator→worker
+/// frame ordinals are deterministic for the fault plans.
+fn quiet_config() -> NetConfig {
+    NetConfig { heartbeat_interval: Duration::from_secs(10), ..NetConfig::default() }
+}
+
+/// Skip guard for sandboxes that forbid sockets: warn and pass.
+fn loopback_or_skip(test: &str) -> bool {
+    if loopback_available() {
+        true
+    } else {
+        eprintln!("warning: skipping {test}: loopback sockets unavailable in this sandbox");
+        false
+    }
+}
+
+/// The five (semiring, dtype) instantiations the engine serves.
+#[derive(Debug, Clone, Copy)]
+enum Algebra {
+    F32,
+    F64,
+    I32Wrap,
+    U32Wrap,
+    MinPlusF32,
+}
+
+const ALGEBRAS: [Algebra; 5] =
+    [Algebra::F32, Algebra::F64, Algebra::I32Wrap, Algebra::U32Wrap, Algebra::MinPlusF32];
+
+impl Algebra {
+    fn semiring(self) -> Semiring {
+        match self {
+            Algebra::MinPlusF32 => Semiring::MinPlus,
+            _ => Semiring::PlusTimes,
+        }
+    }
+
+    fn gen(self, rng: &mut Rng, len: usize) -> HostTensor {
+        match self {
+            Algebra::F32 => HostTensor::F32(rng.fill_normal_f32(len)),
+            Algebra::F64 => {
+                HostTensor::F64((0..len).map(|_| rng.next_f64() * 4.0 - 2.0).collect())
+            }
+            Algebra::I32Wrap => {
+                HostTensor::I32((0..len).map(|_| rng.next_u32() as i32).collect())
+            }
+            Algebra::U32Wrap => HostTensor::U32((0..len).map(|_| rng.next_u32()).collect()),
+            Algebra::MinPlusF32 => HostTensor::F32(
+                (0..len)
+                    .map(|_| {
+                        if rng.gen_range(0, 8) == 0 {
+                            f32::INFINITY
+                        } else {
+                            rng.next_f32() * 10.0
+                        }
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    fn job(self, rng: &mut Rng, m: usize, n: usize, k: usize) -> fcamm::coordinator::GemmJob {
+        fcamm::coordinator::GemmJob::new(
+            m,
+            n,
+            k,
+            self.gen(rng, m * k),
+            self.gen(rng, k * n),
+            self.semiring(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame codec: round trips (socket-free)
+// ---------------------------------------------------------------------
+
+#[test]
+fn frame_codec_round_trips_every_kind_and_dtype() {
+    let mut rng = Rng::new(0xC0DEC);
+    let tensors = vec![
+        HostTensor::F32(rng.fill_normal_f32(96)),
+        HostTensor::F64((0..96).map(|_| rng.next_f64()).collect()),
+        HostTensor::I32((0..96).map(|_| rng.next_u32() as i32).collect()),
+        HostTensor::U32((0..96).map(|_| rng.next_u32()).collect()),
+        HostTensor::F32(vec![]), // empty panels must round-trip too
+    ];
+    let mut msgs = vec![
+        Message::Hello { proto: PROTOCOL_VERSION },
+        Message::Welcome { proto: PROTOCOL_VERSION },
+        Message::Ping { nonce: rng.next_u64() },
+        Message::Pong { nonce: rng.next_u64() },
+        Message::TileQuery { semiring: Semiring::MinPlus, dtype: "float32" },
+        Message::TileQuery { semiring: Semiring::PlusTimes, dtype: "uint32" },
+        Message::TileInfo { tile_m: 16, tile_n: 16, tile_k: 16 },
+        Message::Job(JobHeader {
+            semiring: Semiring::PlusTimes,
+            dtype: "float64",
+            mode: ExecMode::Reuse,
+            tile_m: 16,
+            tile_n: 8,
+            tile_k: 4,
+            n_steps: 9,
+            di: 1,
+            dj: 2,
+            dks: 0,
+        }),
+        Message::Job(JobHeader {
+            semiring: Semiring::MinPlus,
+            dtype: "float32",
+            mode: ExecMode::Roundtrip,
+            tile_m: 32,
+            tile_n: 32,
+            tile_k: 32,
+            n_steps: 1,
+            di: 0,
+            dj: 0,
+            dks: 3,
+        }),
+        Message::Step { index: 7 },
+        Message::ShardErr { message: "shard (di 0, dj 1, dk 0): tile mismatch".to_string() },
+        Message::Shutdown,
+    ];
+    for t in &tensors {
+        for role in [PanelRole::A, PanelRole::B, PanelRole::CTemplate, PanelRole::CIn] {
+            msgs.push(Message::Panel { role, data: t.clone() });
+        }
+        msgs.push(Message::CTile { index: 3, data: t.clone() });
+    }
+    for msg in &msgs {
+        let buf = frame::encode(msg);
+        // Pure decode: exact message back, whole buffer consumed.
+        let (back, used) = frame::decode(&buf).expect("round trip decodes");
+        assert_eq!(&back, msg);
+        assert_eq!(used, buf.len(), "{:?}: consumed length", msg.kind());
+        // Stream decode sees the same message, and a clean EOF after.
+        let mut cursor = std::io::Cursor::new(buf.clone());
+        let back = frame::read_message(&mut cursor).expect("stream read").expect("one frame");
+        assert_eq!(&back, msg);
+        assert!(frame::read_message(&mut cursor).expect("clean eof").is_none());
+        // Stream framing: two concatenated frames decode independently.
+        let mut two = buf.clone();
+        two.extend_from_slice(&buf);
+        let (first, used) = frame::decode(&two).expect("first of two");
+        assert_eq!(&first, msg);
+        let (second, _) = frame::decode(&two[used..]).expect("second of two");
+        assert_eq!(&second, msg);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame codec: corruption fuzz (socket-free, seeded)
+// ---------------------------------------------------------------------
+
+#[test]
+fn frame_codec_rejects_corruption_with_typed_errors() {
+    let mut rng = Rng::new(0xBAD_F00D);
+    let msgs = vec![
+        Message::Panel { role: PanelRole::A, data: HostTensor::F32(rng.fill_normal_f32(64)) },
+        Message::CTile { index: 2, data: HostTensor::F64((0..48).map(|_| rng.next_f64()).collect()) },
+        Message::Job(JobHeader {
+            semiring: Semiring::PlusTimes,
+            dtype: "int32",
+            mode: ExecMode::Reuse,
+            tile_m: 16,
+            tile_n: 16,
+            tile_k: 16,
+            n_steps: 4,
+            di: 0,
+            dj: 1,
+            dks: 0,
+        }),
+        Message::Step { index: 0 },
+        Message::ShardErr { message: "boom".to_string() },
+        Message::Shutdown,
+    ];
+    for msg in &msgs {
+        let buf = frame::encode(msg);
+        // Every strict prefix is a typed Truncated — no panic, no
+        // partial message.
+        for cut in 0..buf.len() {
+            match frame::decode(&buf[..cut]) {
+                Err(DecodeError::Truncated { needed, have }) => {
+                    assert_eq!(have, cut);
+                    assert!(needed > cut);
+                }
+                other => panic!("{:?} prefix {cut}: expected Truncated, got {other:?}", msg.kind()),
+            }
+        }
+        // Seeded payload bit-flips: the checksum catches every one.
+        if buf.len() > HEADER_BYTES {
+            for _ in 0..32 {
+                let mut bad = buf.clone();
+                let byte = HEADER_BYTES + rng.gen_range_usize(0, buf.len() - HEADER_BYTES);
+                bad[byte] ^= 1 << (rng.next_u32() % 8);
+                assert!(
+                    matches!(frame::decode(&bad), Err(DecodeError::ChecksumMismatch { .. })),
+                    "{:?}: payload flip at byte {byte} must fail the CRC",
+                    msg.kind()
+                );
+            }
+        }
+        // A flipped checksum field is itself a checksum mismatch.
+        let mut bad = buf.clone();
+        bad[8] ^= 0x40;
+        assert!(matches!(frame::decode(&bad), Err(DecodeError::ChecksumMismatch { .. })));
+        // Bad magic, unknown kind: typed, immediate.
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(frame::decode(&bad), Err(DecodeError::BadMagic(_))));
+        let mut bad = buf.clone();
+        bad[2] = 0xEE;
+        assert!(matches!(frame::decode(&bad), Err(DecodeError::UnknownKind(0xEE))));
+        // Length-prefix lies: oversize claims are rejected before any
+        // allocation; short-of-buffer claims are Truncated, not a read
+        // past the end.
+        let mut bad = buf.clone();
+        bad[4..8].copy_from_slice(&(MAX_PAYLOAD_BYTES + 1).to_le_bytes());
+        assert!(matches!(frame::decode(&bad), Err(DecodeError::Oversize { .. })));
+        let lie = (buf.len() - HEADER_BYTES + 1) as u32;
+        let mut bad = buf.clone();
+        bad[4..8].copy_from_slice(&lie.to_le_bytes());
+        assert!(matches!(frame::decode(&bad), Err(DecodeError::Truncated { .. })));
+    }
+    // A lied dtype on an element-bearing frame is typed too (the dtype
+    // byte rides the header, outside the payload CRC).
+    let buf = frame::encode(&Message::Panel {
+        role: PanelRole::B,
+        data: HostTensor::U32(vec![1, 2, 3, 4]),
+    });
+    let mut bad = buf.clone();
+    bad[3] = 9;
+    assert!(matches!(frame::decode(&bad), Err(DecodeError::UnknownDtype(9))));
+}
+
+// ---------------------------------------------------------------------
+// Loopback integration: bit-identity and wire pinning
+// ---------------------------------------------------------------------
+
+#[test]
+fn loopback_runs_are_bit_identical_and_wire_byte_pinned() {
+    if !loopback_or_skip("loopback_runs_are_bit_identical_and_wire_byte_pinned") {
+        return;
+    }
+    let workers = spawn_workers(2);
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr()).collect();
+    let cluster = ClusterService::connect_tcp(&addrs, quiet_config()).expect("fleet connects");
+    let oracle = control(2);
+    let mut rng = Rng::new(0x7C9);
+    // A column split and a k-split: the latter exercises the ascending-dk
+    // ⊕-reduction over partials that crossed the wire.
+    let grids = [ShardGrid { dr: 1, dc: 2, dk: 1 }, ShardGrid { dr: 1, dc: 1, dk: 2 }];
+    for algebra in ALGEBRAS {
+        for mode in [ExecMode::Reuse, ExecMode::Roundtrip] {
+            for grid in grids {
+                let job = algebra.job(&mut rng, 40, 25, 33);
+                let before = cluster.wire_stats().expect("wire stats");
+                let run = cluster.run_on_grid(&job, grid, mode).expect("distributed run");
+                let ctrl = oracle.run_on_grid(&job, grid, mode).expect("control run");
+                assert_eq!(
+                    run.c, ctrl.c,
+                    "{algebra:?} {mode:?} {grid}: distributed bits differ from in-process"
+                );
+                assert_eq!(run.recovery, RecoveryStats::default(), "fault-free run");
+                // The pinning chain: measured per-link payload ==
+                // plan's Eq. 6 accounting == independent sim replay.
+                assert_eq!(run.per_device_transfer, run.plan.per_device_transfer(mode));
+                assert_eq!(
+                    run.transfer_elements,
+                    run.plan.predicted_transfer_elements(mode)
+                );
+                let replay = wire_traffic(&run.plan, mode);
+                assert_eq!(replay.per_device_elements, run.per_device_transfer);
+                let after = cluster.wire_stats().expect("wire stats");
+                for d in 0..2 {
+                    let (b, a) = (before[d].expect("tcp link"), after[d].expect("tcp link"));
+                    let moved = (a.payload_elements_sent - b.payload_elements_sent)
+                        + (a.payload_elements_received - b.payload_elements_received);
+                    assert_eq!(
+                        moved, run.per_device_transfer[d],
+                        "{algebra:?} {mode:?} {grid}: link {d} tracked wire elements != Eq.6"
+                    );
+                    assert!(a.bytes_total() > b.bytes_total(), "bytes ledger advances");
+                }
+            }
+        }
+    }
+    cluster.shutdown();
+    oracle.shutdown();
+    for w in &workers {
+        w.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Injected network faults: recovery bit-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_network_faults_recover_bit_identically() {
+    if !loopback_or_skip("injected_network_faults_recover_bit_identically") {
+        return;
+    }
+    let oracle = control(2);
+    let grid = ShardGrid { dr: 1, dc: 2, dk: 1 };
+    let mut rng = Rng::new(0xFA117);
+    // Coordinator→worker frame ordinals on the first connection:
+    // 0 Welcome, 1 TileQuery, 2 Job, 3 C-template panel, 4 A panel,
+    // 5 B panel, 6 step marker — so every fault below lands mid-shard.
+    let faults = [
+        NetFaultKind::DropAfterFrames(5),
+        NetFaultKind::CorruptFrame(4),
+        NetFaultKind::StallAfterFrames(6),
+    ];
+    for algebra in ALGEBRAS {
+        for kind in faults {
+            let job = algebra.job(&mut rng, 40, 25, 33);
+            let want = oracle.run_on_grid(&job, grid, ExecMode::Reuse).expect("control run");
+            // Fresh workers, proxy, and cluster per case: connection and
+            // frame ordinals restart at zero, so the schedule is exact.
+            let workers = spawn_workers(2);
+            let plan = Arc::new(NetFaultPlan::new(
+                0x5EED,
+                vec![NetFaultSpec { connection: 0, kind }],
+            ));
+            let proxy = FaultProxy::spawn(workers[0].addr(), plan.clone()).expect("proxy");
+            let addrs = vec![proxy.addr(), workers[1].addr()];
+            let config = match kind {
+                // The stall is detectable only by a liveness deadline.
+                NetFaultKind::StallAfterFrames(_) => NetConfig {
+                    liveness_deadline: Duration::from_millis(300),
+                    ..quiet_config()
+                },
+                _ => quiet_config(),
+            };
+            let cluster = ClusterService::connect_tcp(&addrs, config).expect("fleet connects");
+            let run = cluster.run_on_grid(&job, grid, ExecMode::Reuse).expect("recovered run");
+            assert_eq!(
+                run.c, want.c,
+                "{algebra:?} {kind:?}: recovered bits differ from fault-free in-process"
+            );
+            assert_eq!(plan.injected(), 1, "{algebra:?} {kind:?}: fault fired exactly once");
+            assert!(run.recovery.retries >= 1, "{algebra:?} {kind:?}: {:?}", run.recovery);
+            assert!(run.recovery.reconnects >= 1, "{algebra:?} {kind:?}: {:?}", run.recovery);
+            assert!(run.recovery.simulated_backoff > Duration::ZERO);
+            // Accounting survives the fault: the successful attempt's
+            // stream is the only one charged, so the Eq. 6 pinning holds
+            // under recovery too.
+            assert_eq!(
+                run.per_device_transfer,
+                run.plan.per_device_transfer(ExecMode::Reuse),
+                "{algebra:?} {kind:?}"
+            );
+            assert_eq!(
+                run.transfer_elements,
+                run.plan.predicted_transfer_elements(ExecMode::Reuse)
+            );
+            cluster.shutdown();
+            proxy.shutdown();
+            for w in &workers {
+                w.shutdown();
+            }
+        }
+    }
+    oracle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Flapping link: health walk + plan-time routing
+// ---------------------------------------------------------------------
+
+#[test]
+fn a_flapping_link_is_quarantined_and_routed_around() {
+    if !loopback_or_skip("a_flapping_link_is_quarantined_and_routed_around") {
+        return;
+    }
+    let workers = spawn_workers(2);
+    // Device 0's link drops its Job frame on the first two connections
+    // (ordinal 2 on connection 0; ordinal 1 on connection 1, where the
+    // tile shape is already cached), then behaves.
+    let plan = Arc::new(NetFaultPlan::new(
+        0xF1A9,
+        vec![
+            NetFaultSpec { connection: 0, kind: NetFaultKind::DropAfterFrames(2) },
+            NetFaultSpec { connection: 1, kind: NetFaultKind::DropAfterFrames(1) },
+        ],
+    ));
+    let proxy = FaultProxy::spawn(workers[0].addr(), plan.clone()).expect("proxy");
+    let addrs = vec![proxy.addr(), workers[1].addr()];
+    let cluster = ClusterService::connect_tcp(&addrs, quiet_config())
+        .expect("fleet connects")
+        .with_health_policy(HealthPolicy {
+            degrade_after: 1,
+            quarantine_after: 2,
+            probation_probes: 2,
+        });
+    let oracle = control(2);
+    let mut rng = Rng::new(0xF1A);
+    let grid = ShardGrid { dr: 1, dc: 2, dk: 1 };
+    let job = Algebra::F32.job(&mut rng, 40, 25, 33);
+    let want = oracle.run_on_grid(&job, grid, ExecMode::Reuse).expect("control run");
+
+    // Run 1: two drops on device 0 walk it Healthy → Degraded →
+    // Quarantined; its shard re-dispatches to device 1 and the run
+    // still completes bit-identically.
+    let run = cluster.run_on_grid(&job, grid, ExecMode::Reuse).expect("re-dispatched run");
+    assert_eq!(run.c, want.c, "re-dispatched bits match the fault-free control");
+    assert_eq!(plan.injected(), 2, "both scheduled drops fired");
+    assert!(run.recovery.retries >= 1 && run.recovery.redispatches >= 1, "{:?}", run.recovery);
+    assert!(run.plan.shards.iter().all(|s| s.device != 0), "no shard remained on device 0");
+    assert_eq!(run.per_device_transfer[0], 0);
+    assert_eq!(run.per_device_transfer, run.plan.per_device_transfer(ExecMode::Reuse));
+    assert_eq!(cluster.quarantined_devices(), vec![0]);
+    assert_eq!(cluster.health_snapshot()[0].state, DeviceState::Quarantined);
+
+    // Run 2: quarantine is honored at plan time — no dial, no fault
+    // consumed, still bit-identical.
+    let run2 = cluster.run_on_grid(&job, grid, ExecMode::Reuse).expect("routed run");
+    assert!(run2.plan.shards.iter().all(|s| s.device != 0), "plan routed around quarantine");
+    assert_eq!(run2.c, want.c);
+    assert_eq!(run2.recovery, RecoveryStats::default(), "no faults off the flapping link");
+    assert_eq!(plan.injected(), 2, "the quarantined link was never re-dialed");
+
+    cluster.shutdown();
+    proxy.shutdown();
+    oracle.shutdown();
+    for w in &workers {
+        w.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shutdown: idempotent with live and dead peers
+// ---------------------------------------------------------------------
+
+#[test]
+fn networked_shutdown_is_idempotent_even_with_a_dead_peer() {
+    if !loopback_or_skip("networked_shutdown_is_idempotent_even_with_a_dead_peer") {
+        return;
+    }
+    let workers = spawn_workers(2);
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr()).collect();
+    let cluster = ClusterService::connect_tcp(&addrs, quiet_config()).expect("fleet connects");
+    let mut rng = Rng::new(0x51);
+    let grid = ShardGrid { dr: 1, dc: 2, dk: 1 };
+    let job = Algebra::F32.job(&mut rng, 40, 25, 33);
+    let warm = cluster.run_on_grid(&job, grid, ExecMode::Reuse).expect("warm run");
+
+    // Kill worker 0 out from under the cluster: its link is now dead.
+    workers[0].shutdown();
+    workers[0].shutdown(); // worker shutdown is itself idempotent
+    // The next run recovers by re-dispatching device 0's shard onto the
+    // surviving worker — dead peer, same bits.
+    let run = cluster.run_on_grid(&job, grid, ExecMode::Reuse).expect("survivor run");
+    assert_eq!(run.c, warm.c, "dead-peer recovery is bit-identical");
+    assert!(run.recovery.redispatches >= 1, "{:?}", run.recovery);
+    assert_eq!(run.per_device_transfer, run.plan.per_device_transfer(ExecMode::Reuse));
+
+    // Kill the last worker: now runs fail with a contextual error — and
+    // cluster shutdown still joins cleanly against two dead peers.
+    workers[1].shutdown();
+    let err = cluster.run_on_grid(&job, grid, ExecMode::Reuse).unwrap_err();
+    assert!(format!("{err:#}").contains("gave up after"), "{err:#}");
+    cluster.shutdown();
+    cluster.shutdown();
+    drop(cluster);
+
+    // FaultProxy shutdown is idempotent too, dead target and all.
+    let plan = Arc::new(NetFaultPlan::none());
+    let proxy = FaultProxy::spawn(workers[1].addr(), plan).expect("proxy");
+    proxy.shutdown();
+    proxy.shutdown();
+    drop(proxy);
+    for w in &workers {
+        w.shutdown();
+    }
+}

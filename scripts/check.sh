@@ -59,6 +59,14 @@ echo "== cargo test -q --test fault_tolerance =="
 # shutdown — run by name for the same reason.
 cargo test -q --test fault_tolerance
 
+echo "== cargo test -q --test net_transport =="
+# The socket-transport gate: frame-codec totality under fuzzed
+# corruption, loopback bit-identity, tracked wire bytes pinned to the
+# Eq. 6 model, and recovery from injected network faults (drop/corrupt/
+# stall) — run by name for the same reason. Tests auto-skip (warn, not
+# fail) in sandboxes that forbid loopback sockets.
+cargo test -q --test net_transport
+
 echo "== cargo bench --bench hotpath -- --quick =="
 cargo bench --bench hotpath -- --quick
 
@@ -70,7 +78,8 @@ echo "== validate BENCH_hotpath.json =="
 # unnoticed.
 required_metrics="kernel512_speedup kernel512_naive_gflops kernel512_blocked_gflops \
 native_threads cluster_f32_512_gflops cluster_shards cluster_devices \
-panel_cache_hit_ratio shared_b_batch_speedup recovery_overhead_ratio shed_fraction"
+panel_cache_hit_ratio shared_b_batch_speedup recovery_overhead_ratio shed_fraction \
+net_wire_bytes net_recovery_overhead_ratio net_reconnects"
 if [ ! -f BENCH_hotpath.json ]; then
   echo "BENCH_hotpath.json missing after bench run" >&2
   exit 1
@@ -98,14 +107,22 @@ if metrics["recovery_overhead_ratio"] > 1.25:
 if not (0.0 < metrics["shed_fraction"] < 1.0):
     sys.exit("BENCH_hotpath.json shed_fraction degenerate (the deadline burst "
              "must shed some jobs and admit the rest)")
+if metrics["net_wire_bytes"] <= 0:
+    sys.exit("BENCH_hotpath.json net_wire_bytes degenerate (the distributed "
+             "section must account its wire volume, live or model-derived)")
+if metrics["net_recovery_overhead_ratio"] > 1.5:
+    sys.exit("BENCH_hotpath.json net_recovery_overhead_ratio above the 1.5x "
+             "gate (a dropped connection must stay cheap to recover over TCP)")
 print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx, cluster %.0f shards on "
       "%.0f devices at %.2f GF/s, shared-B batch %.2fx (hit ratio %.2f), "
-      "recovery overhead %.3fx, shed fraction %.2f, over %d entries"
+      "recovery overhead %.3fx, shed fraction %.2f, net wire %.0f bytes "
+      "(net recovery %.3fx, %.0f reconnects), over %d entries"
       % (metrics["kernel512_speedup"], metrics["cluster_shards"],
          metrics["cluster_devices"], metrics["cluster_f32_512_gflops"],
          metrics["shared_b_batch_speedup"], metrics["panel_cache_hit_ratio"],
          metrics["recovery_overhead_ratio"], metrics["shed_fraction"],
-         len(data["entries"])))
+         metrics["net_wire_bytes"], metrics["net_recovery_overhead_ratio"],
+         metrics["net_reconnects"], len(data["entries"])))
 PY
 else
   # No python3: fall back to a field-presence grep.
