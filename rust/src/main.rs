@@ -16,10 +16,13 @@
 //! fcamm verify [--artifacts DIR]     run the cross-layer verification matrix
 //! fcamm service --requests N [--workers W]
 //!                                    demo the GEMM service
+//! fcamm tune [--quick] [--size N] [--threads T] [--out FILE]
+//!                                    autotune the CPU microkernel blocking
+//!                                    per (semiring, dtype) and persist the
+//!                                    verified winners to the tune cache
 //! ```
 
 use anyhow::{bail, Context, Result};
-
 
 use fcamm::coordinator::{build_kernel, report, BuildOutcome, GemmService};
 use fcamm::datatype::DataType;
@@ -43,6 +46,10 @@ impl Args {
 
     fn subcommand(&self) -> Option<&str> {
         self.argv.first().map(String::as_str)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.argv.iter().any(|a| a == name)
     }
 
     fn flag(&self, name: &str) -> Option<&str> {
@@ -100,10 +107,11 @@ fn run() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("verify") => cmd_verify(&args),
         Some("service") => cmd_service(&args),
+        Some("tune") => cmd_tune(&args),
         Some(other) => bail!("unknown subcommand {other:?} (see source docs)"),
         None => {
             println!("fcamm — flexible communication-avoiding matrix multiplication");
-            println!("subcommands: devices build instance report simulate run verify service");
+            println!("subcommands: devices build instance report simulate run verify service tune");
             Ok(())
         }
     }
@@ -322,6 +330,76 @@ fn cmd_verify(args: &Args) -> Result<()> {
         println!("  [{}] {} — {}", if c.passed { "ok" } else { "FAIL" }, c.name, c.detail);
     }
     println!("{} checks passed", checks.len());
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    use fcamm::runtime::tune;
+    use fcamm::schedule::HostCacheProfile;
+
+    let mut opts =
+        if args.has("--quick") { tune::TuneOptions::quick() } else { tune::TuneOptions::default() };
+    if let Some(size) = args.flag("--size") {
+        let n: usize = size.parse().with_context(|| format!("bad --size value {size:?}"))?;
+        (opts.m, opts.n, opts.k) = (n, n, n);
+    }
+    opts.trials = args.usize_flag("--trials", opts.trials)?.max(1);
+    opts.sweeps = args.usize_flag("--sweeps", opts.sweeps)?;
+    if let Some(t) = args.flag("--threads") {
+        let t: usize = t.parse().with_context(|| format!("bad --threads value {t:?}"))?;
+        opts.threads = Some(t.max(1));
+    }
+
+    let profile = HostCacheProfile::default();
+    println!(
+        "tuning microkernel blocking on {}³ probes ({} sweep(s), {} trial(s), simd lanes: {})",
+        opts.m,
+        opts.sweeps,
+        opts.trials,
+        if fcamm::runtime::lanes::simd_available() { "on" } else { "scalar" },
+    );
+    let (cache, reports) = tune::tune_all(&profile, &opts);
+
+    let mut t = Table::new(vec![
+        "Semiring", "Dtype", "mr×nr", "mc/kc/nc", "Threads", "G madd/s", "GF/s", "Default",
+        "Speedup",
+    ]);
+    for (semiring, dtype, out) in &reports {
+        let b = &out.best;
+        let speedup =
+            if out.default_gmadds > 0.0 { b.gmadds / out.default_gmadds } else { f64::NAN };
+        t.row(vec![
+            semiring.clone(),
+            dtype.clone(),
+            format!("{}×{}", b.mr, b.nr),
+            format!("{}/{}/{}", b.mc, b.kc, b.nc),
+            b.threads.to_string(),
+            fmt_f(b.gmadds, 2),
+            fmt_f(b.gmadds * 2.0, 2),
+            fmt_f(out.default_gmadds, 2),
+            format!("{}x", fmt_f(speedup, 2)),
+        ]);
+        if out.rejected_non_bit_exact > 0 {
+            bail!(
+                "{semiring}/{dtype}: {} candidate(s) failed bit-exact verification — kernel bug",
+                out.rejected_non_bit_exact
+            );
+        }
+    }
+    print!("{}", t.render());
+
+    let path = match args.flag("--out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => tune::cache_path().context("no writable cache location (set PALLAS_TUNE_CACHE)")?,
+    };
+    tune::store_file(&path, &cache)
+        .with_context(|| format!("writing tune cache to {}", path.display()))?;
+    println!("wrote {} verified config(s) to {}", cache.entries.len(), path.display());
+    println!(
+        "(set {}=1 to ignore the cache; {} overrides its path)",
+        tune::NO_TUNE_ENV,
+        tune::CACHE_ENV
+    );
     Ok(())
 }
 

@@ -7,10 +7,12 @@
 //! native reference backend is a measurable baseline rather than a
 //! cache-hostile stub:
 //!
-//! * **Register microtile** (`MR`×`NR` accumulators, [`microkernel`]) —
+//! * **Register microtile** (`mr`×`nr` accumulators, [`microkernel`]) —
 //!   the compute tile: one ⊕/⊗ per lane per `k` step, held in registers
-//!   across the whole packed panel depth.
-//! * **Packed panels** (`MC`×`KC` of A, `KC`×`NC` of B, [`BlockConfig`])
+//!   across the whole packed panel depth, the N dimension striped across
+//!   explicit SIMD lanes ([`super::lanes`]) like the paper's PE vector
+//!   width `W`.
+//! * **Packed panels** (`mc`×`kc` of A, `kc`×`nc` of B, [`BlockConfig`])
 //!   — the memory tile: operands are repacked into microtile-major
 //!   layout so the microkernel streams contiguously, and transposed-A
 //!   inputs are handled *by the packing routine*, not by a separate
@@ -18,6 +20,17 @@
 //! * **Row-panel thread bands** ([`gemm_with`]) — the PE grid: the `m`
 //!   dimension splits into per-thread bands under `std::thread::scope`,
 //!   `PALLAS_NATIVE_THREADS` overriding the auto width.
+//!
+//! All five blocking parameters (`mr`, `nr`, `mc`, `kc`, `nc`) are
+//! **runtime values** carried by [`BlockConfig`] — the host analogue of
+//! the paper instantiating tile sizes from the hardware model rather
+//! than hard-coding one shape. The scalar-era 8×8 microtile remains the
+//! guaranteed-available default; [`gemm`] consults the on-machine tune
+//! cache ([`super::tune`]) for a faster shape when one has been verified
+//! on this host. Microtile shapes on the [`SUPPORTED_MR`]×[`SUPPORTED_NR`]
+//! lattice run monomorphized register kernels; any other positive shape
+//! runs the same per-element schedule through a dynamic fallback, so
+//! correctness never depends on the lattice.
 //!
 //! Everything is generic over a [`SemiringOps`] instantiation, so
 //! plus-times (f32 / f64 / wrapping integers) and min-plus (the distance
@@ -28,10 +41,11 @@
 //! contributions in ascending `k` with a single accumulator, starting
 //! from the ⊕-identity (or the C input), exactly like the seed's naive
 //! triple loop — panels are visited in ascending `pc`, the microkernel
-//! walks `kk` ascending, and each row belongs to exactly one thread
+//! walks `kk` ascending, vectorization stripes only the N dimension (one
+//! lane per output element), and each row belongs to exactly one thread
 //! band. Blocked results are therefore **bit-identical** to the
-//! [`oracle`] kernels for every semiring, which the property tests pin
-//! (`rust/tests/kernel_property.rs`).
+//! [`oracle`] kernels for every semiring and every valid config, which
+//! the property tests pin (`rust/tests/kernel_property.rs`).
 
 // GEMM entry points necessarily carry (semiring, config, c0, a, layout,
 // b, m, n, k); bundling them into a struct would obscure the BLAS-shaped
@@ -41,11 +55,22 @@
 
 use crate::datatype::Semiring;
 
-/// Microtile rows (A-side register blocking).
+use super::lanes::{self, LaneElem};
+
+/// Default microtile rows (A-side register blocking).
 pub const MR: usize = 8;
-/// Microtile columns (B-side register blocking; one or two SIMD vectors
-/// after autovectorization).
+/// Default microtile columns (B-side register blocking; one or two SIMD
+/// vectors wide at f32).
 pub const NR: usize = 8;
+
+/// Microtile row counts with a monomorphized register kernel. The tuner
+/// searches this lattice; other positive values still compute correctly
+/// through the dynamic fallback.
+pub const SUPPORTED_MR: &[usize] = &[4, 8, 16];
+/// Microtile column counts with a monomorphized register kernel (whole
+/// multiples of every dtype's lane width, so the N-dimension stripe has
+/// no scalar tail on the fast path).
+pub const SUPPORTED_NR: &[usize] = &[8, 16, 32];
 
 /// Env var overriding the thread-band width (`0`/unset/invalid = auto).
 pub const THREADS_ENV: &str = "PALLAS_NATIVE_THREADS";
@@ -53,11 +78,16 @@ pub const THREADS_ENV: &str = "PALLAS_NATIVE_THREADS";
 /// Hard cap on thread bands, whatever the override says.
 const MAX_THREADS: usize = 64;
 
-/// Below this `m·n·k`, the auto thread policy stays single-threaded: a
-/// 128³ executor tile (2 Mi madds) is served faster without spawn
-/// overhead, and the executor / GEMM service already parallelize at the
-/// tile and worker level. An explicit `BlockConfig::threads` or
-/// `PALLAS_NATIVE_THREADS` override is honored exactly, bypassing this.
+/// Auto thread policy floor, calibrated for the *scalar-speed* kernel
+/// (~1 G madd/s): below this `m·n·k` a problem finishes faster on the
+/// calling thread than it takes to spawn bands — a 128³ executor tile
+/// (2 Mi madds) stays single-threaded, and the executor / GEMM service
+/// already parallelize at the tile and worker level. The live threshold
+/// scales this by the tuned kernel's measured throughput
+/// ([`par_min_ops_for`]): a faster kernel needs a proportionally larger
+/// problem before spawn overhead pays for itself. An explicit
+/// `BlockConfig::threads` or `PALLAS_NATIVE_THREADS` override is honored
+/// exactly, bypassing the policy.
 const PAR_MIN_OPS: u128 = 4 * 1024 * 1024;
 
 /// The (⊕, ⊗) algebra a microkernel lane evaluates, as a zero-sized
@@ -65,8 +95,10 @@ const PAR_MIN_OPS: u128 = 4 * 1024 * 1024;
 /// dispatch). The runtime-level [`crate::datatype::Semiring`] enum maps
 /// manifest ops onto these instantiations via `Semiring::for_op`.
 pub trait SemiringOps: Copy + Send + Sync {
-    /// Element type flowing through the kernel.
-    type Elem: Copy + Send + Sync + PartialEq + std::fmt::Debug;
+    /// Element type flowing through the kernel. The [`LaneElem`] bound
+    /// carries the SIMD lane width and the manifest dtype name (and
+    /// implies `Copy + Send + Sync + PartialEq + Debug`).
+    type Elem: LaneElem;
 
     /// ⊕-identity: the accumulator initialization (0, +∞, …).
     fn zero(self) -> Self::Elem;
@@ -187,7 +219,9 @@ impl SemiringOps for PlusTimesU32Wrap {
 /// Tropical semiring on f32: ⊕ = min, ⊗ = + (distance product). The
 /// comparison is written `cand < acc` — the exact predicate of the naive
 /// distance loop — so NaN/∞ handling and tie-breaking are bit-identical
-/// to the oracle, which `f32::min` would not guarantee.
+/// to the oracle, which `f32::min` would not guarantee. Lane-wise this
+/// select lowers to vector min on targets that have one, so min-plus
+/// rides the same vectorized N-stripe as the rings.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MinPlusF32;
 
@@ -229,12 +263,18 @@ pub enum ALayout {
     Transposed,
 }
 
-/// Cache-blocking parameters. Defaults target a ~64 KiB A panel (half an
-/// L2 way budget at f32) and a B panel that stays resident across the
-/// whole `ic` sweep; tests shrink these to single digits to force ragged
-/// panel edges on small matrices.
-#[derive(Debug, Clone)]
+/// Blocking parameters — all runtime values, so one binary can run the
+/// shape the on-machine tuner verified rather than a compile-time guess.
+/// Defaults are the scalar-era configuration (8×8 microtile, ~64 KiB A
+/// panel, B panel resident across the whole `ic` sweep); tests shrink
+/// these to single digits to force ragged panel edges on small matrices.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BlockConfig {
+    /// Microtile rows (`MR`): A-side register blocking.
+    pub mr: usize,
+    /// Microtile columns (`NR`): B-side register blocking, striped
+    /// across SIMD lanes.
+    pub nr: usize,
     /// A-panel rows (`MC`).
     pub mc: usize,
     /// Shared panel depth (`KC`).
@@ -242,14 +282,33 @@ pub struct BlockConfig {
     /// B-panel columns (`NC`).
     pub nc: usize,
     /// Exact thread-band count; `None` = `PALLAS_NATIVE_THREADS` if set,
-    /// else the auto policy (single-threaded below [`PAR_MIN_OPS`],
-    /// `available_parallelism` above).
+    /// else the auto policy (single-threaded below the
+    /// [`par_min_ops_for`] threshold, `available_parallelism` above).
     pub threads: Option<usize>,
 }
 
 impl Default for BlockConfig {
     fn default() -> Self {
-        BlockConfig { mc: 64, kc: 256, nc: 512, threads: None }
+        BlockConfig { mr: MR, nr: NR, mc: 64, kc: 256, nc: 512, threads: None }
+    }
+}
+
+impl BlockConfig {
+    /// Whether every blocking parameter is positive and small enough to
+    /// be a plausible register/cache tile — the validity gate a tune
+    /// cache entry must pass before it can replace the default. Shapes
+    /// off the monomorphized lattice are still *valid* (the dynamic
+    /// microkernel handles them); impossible shapes (zeroes, panels
+    /// larger than any cache) are not.
+    pub fn is_plausible(&self) -> bool {
+        let dims_positive = self.mr > 0 && self.nr > 0 && self.mc > 0 && self.kc > 0 && self.nc > 0;
+        dims_positive
+            && self.mr <= 64
+            && self.nr <= 128
+            && self.mc <= 1 << 16
+            && self.kc <= 1 << 16
+            && self.nc <= 1 << 20
+            && self.threads.is_none_or(|t| t >= 1 && t <= MAX_THREADS)
     }
 }
 
@@ -279,31 +338,78 @@ fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_THREADS)
 }
 
-/// Resolve how many row bands to run for an `m`×`n`×`k` problem.
-fn band_count(cfg: &BlockConfig, m: usize, n: usize, k: usize) -> usize {
-    band_count_from(cfg.threads.or_else(env_threads), m, n, k)
+/// The auto policy's go-parallel threshold in madds, derived from the
+/// tuned kernel's measured throughput (G madd/s). [`PAR_MIN_OPS`] is the
+/// calibration point — the problem size worth a thread spawn at scalar
+/// speed (~1 G madd/s) — and the threshold scales linearly with measured
+/// speed so the *wall-clock* crossover stays put: a kernel the tuner
+/// measured 8× faster finishes an 8×-larger problem in the same time the
+/// scalar kernel needed, and going parallel below that just pays spawn
+/// overhead. With no tuned measurement (or a degenerate one) the scalar
+/// calibration stands.
+pub fn par_min_ops_for(tuned_gmadds: Option<f64>) -> u128 {
+    match tuned_gmadds {
+        Some(g) if g.is_finite() && g > 0.0 => {
+            ((g * PAR_MIN_OPS as f64) as u128).clamp(1 << 16, 1 << 40)
+        }
+        _ => PAR_MIN_OPS,
+    }
+}
+
+/// Resolve how many row bands to run for an `m`×`n`×`k` problem under
+/// `cfg`, scaling the auto threshold by this instantiation's tuned
+/// throughput when the tune cache has one.
+fn band_count<S: SemiringOps>(sr: S, cfg: &BlockConfig, m: usize, n: usize, k: usize) -> usize {
+    let gmadds = super::tune::ambient_gmadds(sr.algebra(), <S::Elem as LaneElem>::NAME);
+    band_count_with(cfg.threads.or_else(env_threads), m, n, k, cfg.mr, par_min_ops_for(gmadds))
 }
 
 /// [`band_count`] with the explicit-override resolution already done
-/// (`requested` = `BlockConfig::threads` or the env var); pure, so tests
-/// pin the policy without touching process environment.
+/// (`requested` = `BlockConfig::threads` or the env var) and the scalar
+/// calibration threshold; pure, so tests pin the default policy without
+/// touching process environment or the tune cache.
+#[cfg(test)]
 fn band_count_from(requested: Option<usize>, m: usize, n: usize, k: usize) -> usize {
+    band_count_with(requested, m, n, k, MR, PAR_MIN_OPS)
+}
+
+/// Core band policy: explicit `requested` wins; otherwise problems below
+/// `par_min` madds stay on the calling thread. Either way a band never
+/// gets fewer rows than one `mr`-row microtile can cover — at large `mr`
+/// this collapses small-m problems to a single band (the 1-row-band edge
+/// case: 16 rows under a 16-row microtile is one band no matter how many
+/// threads were requested).
+fn band_count_with(
+    requested: Option<usize>,
+    m: usize,
+    n: usize,
+    k: usize,
+    mr: usize,
+    par_min: u128,
+) -> usize {
     let t = match requested {
         Some(t) => t.max(1),
         None => {
             let ops = m as u128 * n as u128 * k as u128;
-            if ops < PAR_MIN_OPS {
+            if ops < par_min {
                 1
             } else {
                 default_threads()
             }
         }
     };
-    // Never hand a band fewer rows than one microtile can cover.
-    t.min(m.div_ceil(MR)).max(1)
+    t.min(m.div_ceil(mr.max(1))).max(1)
 }
 
-/// Blocked semiring GEMM with default [`BlockConfig`]:
+/// Blocking the no-config entry points run with: the on-machine tuned
+/// config for this (semiring, dtype) when a valid, fingerprint-matching
+/// tune cache exists ([`super::tune`]); else [`BlockConfig::default`].
+/// `PALLAS_NO_TUNE` forces the default.
+pub fn tuned_config<S: SemiringOps>(sr: S) -> BlockConfig {
+    super::tune::ambient_config(sr.algebra(), <S::Elem as LaneElem>::NAME).unwrap_or_default()
+}
+
+/// Blocked semiring GEMM with the tuned (or default) [`BlockConfig`]:
 /// `out = c0 ⊕ (A ⊗ B)` element-wise over the semiring, `c0` defaulting
 /// to the ⊕-identity matrix. `a` is `m`×`k` row-major (or `k`×`m` when
 /// `layout` is [`ALayout::Transposed`]), `b` is `k`×`n` row-major.
@@ -317,11 +423,12 @@ pub fn gemm<S: SemiringOps>(
     n: usize,
     k: usize,
 ) -> Vec<S::Elem> {
-    gemm_with(sr, &BlockConfig::default(), c0, a, layout, b, m, n, k)
+    gemm_with(sr, &tuned_config(sr), c0, a, layout, b, m, n, k)
 }
 
-/// [`gemm`] with explicit blocking parameters (tests force tiny panels
-/// and exact thread counts through this).
+/// [`gemm`] with explicit blocking parameters (tests force tiny panels,
+/// off-lattice microtiles, and exact thread counts through this; the
+/// tuner times candidates through it).
 pub fn gemm_with<S: SemiringOps>(
     sr: S,
     cfg: &BlockConfig,
@@ -333,7 +440,10 @@ pub fn gemm_with<S: SemiringOps>(
     n: usize,
     k: usize,
 ) -> Vec<S::Elem> {
-    assert!(cfg.mc > 0 && cfg.kc > 0 && cfg.nc > 0, "block sizes must be positive");
+    assert!(
+        cfg.mr > 0 && cfg.nr > 0 && cfg.mc > 0 && cfg.kc > 0 && cfg.nc > 0,
+        "block sizes must be positive"
+    );
     assert_eq!(a.len(), m * k, "A buffer does not match {m}x{k}");
     assert_eq!(b.len(), k * n, "B buffer does not match {k}x{n}");
     let mut out = match c0 {
@@ -347,7 +457,7 @@ pub fn gemm_with<S: SemiringOps>(
         return out;
     }
 
-    let bands = band_count(cfg, m, n, k);
+    let bands = band_count(sr, cfg, m, n, k);
     if bands <= 1 {
         gemm_band(sr, cfg, &mut out, a, layout, b, m, 0, m, n, k);
         return out;
@@ -394,8 +504,12 @@ fn gemm_band<S: SemiringOps>(
     k: usize,
 ) {
     debug_assert_eq!(out.len(), rows * n);
-    let mut packed_a = vec![sr.zero(); cfg.mc.next_multiple_of(MR) * cfg.kc];
-    let mut packed_b = vec![sr.zero(); cfg.kc * cfg.nc.next_multiple_of(NR)];
+    let (mr, nr) = (cfg.mr, cfg.nr);
+    let mut packed_a = vec![sr.zero(); cfg.mc.next_multiple_of(mr) * cfg.kc];
+    let mut packed_b = vec![sr.zero(); cfg.kc * cfg.nc.next_multiple_of(nr)];
+    // One reusable mr×nr accumulator tile; padding lanes hold the
+    // ⊕-identity and are never stored back.
+    let mut acc = vec![sr.zero(); mr * nr];
 
     let mut jc = 0;
     while jc < n {
@@ -403,26 +517,34 @@ fn gemm_band<S: SemiringOps>(
         let mut pc = 0;
         while pc < k {
             let kc = cfg.kc.min(k - pc);
-            pack_b(sr, &mut packed_b, b, n, pc, jc, kc, nc);
+            pack_b(sr, &mut packed_b, b, n, pc, jc, kc, nc, nr);
             let mut ic = 0;
             while ic < rows {
                 let mc = cfg.mc.min(rows - ic);
-                pack_a(sr, &mut packed_a, a, layout, m, k, row0 + ic, mc, pc, kc);
-                for jrb in 0..nc.div_ceil(NR) {
-                    let j0 = jrb * NR;
-                    let jv = NR.min(nc - j0);
-                    let pb = &packed_b[jrb * kc * NR..][..kc * NR];
-                    for irb in 0..mc.div_ceil(MR) {
-                        let i0 = irb * MR;
-                        let iv = MR.min(mc - i0);
-                        let pa = &packed_a[irb * kc * MR..][..kc * MR];
-                        let mut acc = [[sr.zero(); NR]; MR];
-                        for (i, arow) in acc.iter_mut().enumerate().take(iv) {
-                            let crow = &out[(ic + i0 + i) * n + jc + j0..][..jv];
-                            arow[..jv].copy_from_slice(crow);
+                pack_a(sr, &mut packed_a, a, layout, m, k, row0 + ic, mc, pc, kc, mr);
+                for jrb in 0..nc.div_ceil(nr) {
+                    let j0 = jrb * nr;
+                    let jv = nr.min(nc - j0);
+                    let pb = &packed_b[jrb * kc * nr..][..kc * nr];
+                    for irb in 0..mc.div_ceil(mr) {
+                        let i0 = irb * mr;
+                        let iv = mr.min(mc - i0);
+                        let pa = &packed_a[irb * kc * mr..][..kc * mr];
+                        for (i, arow) in acc.chunks_exact_mut(nr).enumerate() {
+                            if i < iv {
+                                let crow = &out[(ic + i0 + i) * n + jc + j0..][..jv];
+                                arow[..jv].copy_from_slice(crow);
+                                for lane in arow[jv..].iter_mut() {
+                                    *lane = sr.zero();
+                                }
+                            } else {
+                                for lane in arow.iter_mut() {
+                                    *lane = sr.zero();
+                                }
+                            }
                         }
-                        microkernel(sr, &mut acc, pa, pb, kc);
-                        for (i, arow) in acc.iter().enumerate().take(iv) {
+                        microkernel(sr, &mut acc, pa, pb, kc, mr, nr);
+                        for (i, arow) in acc.chunks_exact(nr).enumerate().take(iv) {
                             let crow = &mut out[(ic + i0 + i) * n + jc + j0..][..jv];
                             crow.copy_from_slice(&arow[..jv]);
                         }
@@ -436,31 +558,95 @@ fn gemm_band<S: SemiringOps>(
     }
 }
 
-/// The register-tile compute kernel: `MR`×`NR` accumulators over a
-/// `kc`-deep pair of packed micropanels. Lanes beyond the valid edge
-/// carry padding; their results are simply never stored back.
-#[inline(always)]
+/// The register-tile compute kernel: `mr`×`nr` accumulators (row-major
+/// in `acc`) over a `kc`-deep pair of packed micropanels. Lanes beyond
+/// the valid edge carry padding; their results are simply never stored
+/// back. Shapes on the [`SUPPORTED_MR`]×[`SUPPORTED_NR`] lattice
+/// dispatch to monomorphized kernels whose accumulators live in fixed
+/// arrays (registers after optimization); anything else runs the same
+/// schedule with runtime bounds.
+#[inline]
 fn microkernel<S: SemiringOps>(
     sr: S,
-    acc: &mut [[S::Elem; NR]; MR],
+    acc: &mut [S::Elem],
+    pa: &[S::Elem],
+    pb: &[S::Elem],
+    kc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    debug_assert!(acc.len() == mr * nr && pa.len() >= kc * mr && pb.len() >= kc * nr);
+    macro_rules! lattice {
+        ($(($mrc:literal, $nrc:literal)),+ $(,)?) => {
+            match (mr, nr) {
+                $(($mrc, $nrc) => microkernel_sized::<S, $mrc, $nrc>(sr, acc, pa, pb, kc),)+
+                _ => microkernel_dyn(sr, acc, pa, pb, kc, mr, nr),
+            }
+        };
+    }
+    lattice!(
+        (4, 8),
+        (4, 16),
+        (4, 32),
+        (8, 8),
+        (8, 16),
+        (8, 32),
+        (16, 8),
+        (16, 16),
+        (16, 32),
+    );
+}
+
+/// Monomorphized microkernel: `MRC`×`NRC` accumulators held in fixed
+/// arrays across the whole panel depth, each row updated through the
+/// explicit lane stripe ([`lanes::fma_row`]).
+#[inline(always)]
+fn microkernel_sized<S: SemiringOps, const MRC: usize, const NRC: usize>(
+    sr: S,
+    acc: &mut [S::Elem],
     pa: &[S::Elem],
     pb: &[S::Elem],
     kc: usize,
 ) {
-    debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
+    let mut local = [[sr.zero(); NRC]; MRC];
+    for (i, row) in local.iter_mut().enumerate() {
+        row.copy_from_slice(&acc[i * NRC..(i + 1) * NRC]);
+    }
     for kk in 0..kc {
-        let av: [S::Elem; MR] = pa[kk * MR..(kk + 1) * MR].try_into().unwrap();
-        let bv: [S::Elem; NR] = pb[kk * NR..(kk + 1) * NR].try_into().unwrap();
-        for (arow, &ai) in acc.iter_mut().zip(av.iter()) {
-            for (lane, &bj) in arow.iter_mut().zip(bv.iter()) {
-                *lane = sr.fma(*lane, ai, bj);
-            }
+        let av: [S::Elem; MRC] = pa[kk * MRC..(kk + 1) * MRC].try_into().unwrap();
+        let bv = &pb[kk * NRC..(kk + 1) * NRC];
+        for (row, &ai) in local.iter_mut().zip(av.iter()) {
+            lanes::fma_row(sr, row, ai, bv);
+        }
+    }
+    for (i, row) in local.iter().enumerate() {
+        acc[i * NRC..(i + 1) * NRC].copy_from_slice(row);
+    }
+}
+
+/// Runtime-shaped fallback for off-lattice microtiles: identical
+/// per-element schedule (ascending `kk`, N-striped lane updates), just
+/// without compile-time bounds.
+fn microkernel_dyn<S: SemiringOps>(
+    sr: S,
+    acc: &mut [S::Elem],
+    pa: &[S::Elem],
+    pb: &[S::Elem],
+    kc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    for kk in 0..kc {
+        let av = &pa[kk * mr..(kk + 1) * mr];
+        let bv = &pb[kk * nr..(kk + 1) * nr];
+        for (row, &ai) in acc.chunks_exact_mut(nr).zip(av.iter()) {
+            lanes::fma_row(sr, row, ai, bv);
         }
     }
 }
 
 /// Pack an `mc`×`kc` A panel (rows `row0..row0+mc`, depth `pc..pc+kc`)
-/// into microtile-major layout: per `MR`-row block, `MR` lane values
+/// into microtile-major layout: per `mr`-row block, `mr` lane values
 /// contiguous per `k` step. Transposed-A storage is absorbed here — the
 /// two match arms read `a[row][k]` vs `a[k][row]` — and ragged lane
 /// edges pad with the ⊕-identity (padding lanes are never stored back,
@@ -476,29 +662,30 @@ fn pack_a<S: SemiringOps>(
     mc: usize,
     pc: usize,
     kc: usize,
+    mr: usize,
 ) {
-    for irb in 0..mc.div_ceil(MR) {
-        let base = irb * kc * MR;
-        let i0 = irb * MR;
-        let iv = MR.min(mc - i0);
+    for irb in 0..mc.div_ceil(mr) {
+        let base = irb * kc * mr;
+        let i0 = irb * mr;
+        let iv = mr.min(mc - i0);
         match layout {
             ALayout::RowMajor => {
                 for i in 0..iv {
                     let src = &a[(row0 + i0 + i) * k + pc..][..kc];
                     for (kk, &v) in src.iter().enumerate() {
-                        packed[base + kk * MR + i] = v;
+                        packed[base + kk * mr + i] = v;
                     }
                 }
-                for i in iv..MR {
+                for i in iv..mr {
                     for kk in 0..kc {
-                        packed[base + kk * MR + i] = sr.zero();
+                        packed[base + kk * mr + i] = sr.zero();
                     }
                 }
             }
             ALayout::Transposed => {
                 for kk in 0..kc {
                     let src = &a[(pc + kk) * m + row0 + i0..][..iv];
-                    let dst = &mut packed[base + kk * MR..][..MR];
+                    let dst = &mut packed[base + kk * mr..][..mr];
                     dst[..iv].copy_from_slice(src);
                     for lane in dst[iv..].iter_mut() {
                         *lane = sr.zero();
@@ -510,7 +697,7 @@ fn pack_a<S: SemiringOps>(
 }
 
 /// Pack a `kc`×`nc` B panel (depth `pc..pc+kc`, columns `jc..jc+nc`)
-/// into microtile-major layout: per `NR`-column block, `NR` lane values
+/// into microtile-major layout: per `nr`-column block, `nr` lane values
 /// contiguous per `k` step, ragged edges padded with the ⊕-identity.
 fn pack_b<S: SemiringOps>(
     sr: S,
@@ -521,14 +708,15 @@ fn pack_b<S: SemiringOps>(
     jc: usize,
     kc: usize,
     nc: usize,
+    nr: usize,
 ) {
-    for jrb in 0..nc.div_ceil(NR) {
-        let base = jrb * kc * NR;
-        let j0 = jrb * NR;
-        let jv = NR.min(nc - j0);
+    for jrb in 0..nc.div_ceil(nr) {
+        let base = jrb * kc * nr;
+        let j0 = jrb * nr;
+        let jv = nr.min(nc - j0);
         for kk in 0..kc {
             let src = &b[(pc + kk) * n + jc + j0..][..jv];
-            let dst = &mut packed[base + kk * NR..][..NR];
+            let dst = &mut packed[base + kk * nr..][..nr];
             dst[..jv].copy_from_slice(src);
             for lane in dst[jv..].iter_mut() {
                 *lane = sr.zero();
@@ -539,8 +727,9 @@ fn pack_b<S: SemiringOps>(
 
 /// Naive triple-loop reference kernels — the seed implementation,
 /// verbatim. **Not on any production path**: unit and property tests use
-/// them as the semantics oracle, and `benches/hotpath.rs` as the
-/// measured baseline the blocked engine is compared against.
+/// them as the semantics oracle, the tuner verifies every candidate
+/// config against them before timing it, and `benches/hotpath.rs` uses
+/// them as the measured scalar baseline.
 pub mod oracle {
     /// `out = c0 + a·b` (or `a·b` when `c0` is `None`), f32,
     /// ascending-k accumulation per element.
@@ -650,7 +839,7 @@ mod tests {
     fn tiny_cfg() -> BlockConfig {
         // Single-digit panels: every shape below exercises ragged panel
         // edges and multiple pc/ic/jc iterations.
-        BlockConfig { mc: 5, kc: 3, nc: 7, threads: Some(1) }
+        BlockConfig { mc: 5, kc: 3, nc: 7, threads: Some(1), ..BlockConfig::default() }
     }
 
     #[test]
@@ -676,6 +865,42 @@ mod tests {
     }
 
     #[test]
+    fn every_lattice_microtile_bit_identical_to_oracle() {
+        // The monomorphized (mr, nr) lattice — the tuner's search space —
+        // must be bit-identical to the oracle on ragged shapes, including
+        // n smaller than one lane vector.
+        let mut rng = Rng::new(21);
+        for &(m, n, k) in &[(1usize, 3usize, 5usize), (13, 5, 9), (33, 29, 17)] {
+            let a = rng.fill_normal_f32(m * k);
+            let b = rng.fill_normal_f32(k * n);
+            let want = oracle::gemm_f32(None, &a, &b, m, n, k);
+            for &mr in SUPPORTED_MR {
+                for &nr in SUPPORTED_NR {
+                    let cfg = BlockConfig { mr, nr, ..tiny_cfg() };
+                    let got =
+                        gemm_with(PlusTimesF32, &cfg, None, &a, ALayout::RowMajor, &b, m, n, k);
+                    assert_eq!(got, want, "shape {m}x{n}x{k} microtile {mr}x{nr}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn off_lattice_microtiles_use_dyn_fallback_bit_identically() {
+        let mut rng = Rng::new(22);
+        let (m, n, k) = (19, 11, 13);
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let want = oracle::gemm_f32(None, &a, &b, m, n, k);
+        for (mr, nr) in [(1usize, 1usize), (3, 5), (7, 9), (5, 24)] {
+            assert!(!SUPPORTED_MR.contains(&mr) || !SUPPORTED_NR.contains(&nr));
+            let cfg = BlockConfig { mr, nr, ..tiny_cfg() };
+            let got = gemm_with(PlusTimesF32, &cfg, None, &a, ALayout::RowMajor, &b, m, n, k);
+            assert_eq!(got, want, "microtile {mr}x{nr}");
+        }
+    }
+
+    #[test]
     fn c0_accumulation_bit_identical() {
         let mut rng = Rng::new(12);
         let (m, n, k) = (13, 11, 7);
@@ -695,7 +920,8 @@ mod tests {
         let at = rng.fill_normal_f32(k * m); // stored (k, m)
         let b = rng.fill_normal_f32(k * n);
         let want = oracle::gemm_at_f32(&at, &b, m, n, k);
-        for cfg in [BlockConfig::default(), tiny_cfg()] {
+        for cfg in [BlockConfig::default(), tiny_cfg(), BlockConfig { mr: 16, nr: 32, ..tiny_cfg() }]
+        {
             let got = gemm_with(PlusTimesF32, &cfg, None, &at, ALayout::Transposed, &b, m, n, k);
             assert_eq!(got, want, "cfg {cfg:?}");
         }
@@ -775,6 +1001,60 @@ mod tests {
         assert_eq!(band_count_from(Some(64), 1, 512, 512), 1);
         // Explicit overrides bypass the size threshold exactly.
         assert_eq!(band_count_from(Some(3), 128, 128, 128), 3);
+    }
+
+    #[test]
+    fn band_clamp_follows_runtime_mr() {
+        // The 1-row-band edge case at large MR: 16 rows under a 16-row
+        // microtile is a single band no matter how many threads were
+        // requested; 17 rows is exactly two.
+        assert_eq!(band_count_with(Some(64), 16, 512, 512, 16, PAR_MIN_OPS), 1);
+        assert_eq!(band_count_with(Some(64), 17, 512, 512, 16, PAR_MIN_OPS), 2);
+        // A 1-row microtile re-admits fine-grained bands.
+        assert_eq!(band_count_with(Some(64), 16, 512, 512, 1, PAR_MIN_OPS), 16);
+        // mr = 0 must not divide by zero (treated as 1).
+        assert_eq!(band_count_with(Some(4), 16, 512, 512, 0, PAR_MIN_OPS), 4);
+    }
+
+    #[test]
+    fn par_threshold_scales_with_tuned_throughput() {
+        // No measurement (or a degenerate one): the scalar calibration.
+        assert_eq!(par_min_ops_for(None), PAR_MIN_OPS);
+        assert_eq!(par_min_ops_for(Some(0.0)), PAR_MIN_OPS);
+        assert_eq!(par_min_ops_for(Some(f64::NAN)), PAR_MIN_OPS);
+        assert_eq!(par_min_ops_for(Some(-3.0)), PAR_MIN_OPS);
+        // A kernel measured 8× scalar speed needs an 8× larger problem
+        // before spawning bands pays off.
+        assert_eq!(par_min_ops_for(Some(8.0)), 8 * PAR_MIN_OPS);
+        // Scaled thresholds flip the auto decision at the same wall time.
+        let ops_512 = 512usize;
+        assert_eq!(band_count_with(None, ops_512, ops_512, ops_512, MR, par_min_ops_for(None)), {
+            default_threads().min(ops_512.div_ceil(MR))
+        });
+        assert_eq!(
+            band_count_with(None, ops_512, ops_512, ops_512, MR, par_min_ops_for(Some(64.0))),
+            1,
+            "512^3 is below the crossover of a 64x-scalar-speed kernel"
+        );
+    }
+
+    #[test]
+    fn block_config_plausibility_gate() {
+        assert!(BlockConfig::default().is_plausible());
+        assert!(BlockConfig { mr: 3, nr: 5, ..BlockConfig::default() }.is_plausible());
+        for bad in [
+            BlockConfig { mr: 0, ..BlockConfig::default() },
+            BlockConfig { nr: 0, ..BlockConfig::default() },
+            BlockConfig { mc: 0, ..BlockConfig::default() },
+            BlockConfig { kc: 0, ..BlockConfig::default() },
+            BlockConfig { nc: 0, ..BlockConfig::default() },
+            BlockConfig { mr: 1 << 20, ..BlockConfig::default() },
+            BlockConfig { kc: 1 << 20, ..BlockConfig::default() },
+            BlockConfig { threads: Some(0), ..BlockConfig::default() },
+            BlockConfig { threads: Some(MAX_THREADS + 1), ..BlockConfig::default() },
+        ] {
+            assert!(!bad.is_plausible(), "{bad:?}");
+        }
     }
 
     #[test]

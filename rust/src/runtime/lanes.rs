@@ -1,0 +1,232 @@
+//! Explicit SIMD lanes for the semiring microkernel.
+//!
+//! The paper's compute tile is a grid of PEs each folding a *vector* of
+//! `W` partial sums per cycle (Sec. 4.2: the N dimension is striped
+//! across the vector width so every element keeps its own accumulator).
+//! This module is the host-side analogue: a portable, safe
+//! [`Lanes<E, W>`] value type over `W` elements with per-lane semiring
+//! steps, used by `runtime::kernel` to vectorize **across the N/columns
+//! dimension only**. Each output element still owns exactly one lane, so
+//! its ascending-`k` fold order — and therefore bit-exactness versus the
+//! naive oracle — is untouched for every algebra.
+//!
+//! There are no intrinsics and no `unsafe` here: lane ops are fixed
+//! trip-count loops over `[E; W]` arrays, the shape LLVM's
+//! autovectorizer reliably lowers to vector instructions on any target
+//! with a SIMD feature (SSE2/AVX on x86-64, NEON on aarch64, simd128 on
+//! wasm). On targets without one, the same code *is* the scalar
+//! fallback — per-lane semantics are identical either way, which is the
+//! portability contract `std::simd` would give us without requiring
+//! nightly. Min-plus in particular stays expressible lane-wise: its
+//! `fma` is an add followed by the exact `cand < acc` select, which
+//! lowers to vector min on every target that has one.
+
+use super::kernel::SemiringOps;
+
+/// Preferred lane width per element type — the host analogue of the
+/// paper's PE vector width `W` (Table 2's `w_v`). Widths target one
+/// 256-bit vector: wider dtypes get fewer lanes, exactly how the paper's
+/// per-dtype configurations shrink as `w_c` grows.
+pub trait LaneElem: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
+    /// Lanes per vector for this element width (power of two, ≥ 1).
+    const LANES: usize;
+    /// Manifest dtype name (`"float32"`, …) — lets kernel-level code key
+    /// tuning results without threading an `Element` bound through
+    /// [`SemiringOps`].
+    const NAME: &'static str;
+}
+
+impl LaneElem for f32 {
+    const LANES: usize = 8;
+    const NAME: &'static str = "float32";
+}
+
+impl LaneElem for f64 {
+    const LANES: usize = 4;
+    const NAME: &'static str = "float64";
+}
+
+impl LaneElem for i32 {
+    const LANES: usize = 8;
+    const NAME: &'static str = "int32";
+}
+
+impl LaneElem for u32 {
+    const LANES: usize = 8;
+    const NAME: &'static str = "uint32";
+}
+
+/// Whether this build targets hardware with SIMD vector units the lane
+/// loops can lower onto. Purely a *reporting* predicate — the lane code
+/// itself is portable and correct either way — used by the bench and
+/// `scripts/check.sh` to pick the right kernel-speedup gate.
+pub const fn simd_available() -> bool {
+    cfg!(any(
+        target_arch = "x86_64",
+        target_arch = "aarch64",
+        target_feature = "sse2",
+        target_feature = "neon",
+        target_feature = "simd128",
+    ))
+}
+
+/// `W` elements processed in lockstep. A plain value type over `[E; W]`:
+/// every op is a fixed trip-count per-lane loop, branchless for the
+/// semirings we instantiate (min-plus's select compiles to vector min).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Lanes<E: Copy, const W: usize>(pub [E; W]);
+
+impl<E: Copy, const W: usize> Lanes<E, W> {
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: E) -> Self {
+        Lanes([v; W])
+    }
+
+    /// Load the first `W` elements of `src` (must have at least `W`).
+    #[inline(always)]
+    pub fn load(src: &[E]) -> Self {
+        let arr: [E; W] = src[..W].try_into().expect("lane load needs W elements");
+        Lanes(arr)
+    }
+
+    /// Store all lanes into the first `W` slots of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [E]) {
+        dst[..W].copy_from_slice(&self.0);
+    }
+
+    /// One vectorized semiring step per lane:
+    /// `self[l] = self[l] ⊕ (a ⊗ b[l])`. Exactly the scalar
+    /// [`SemiringOps::fma`] applied lane-wise — same operation, same
+    /// order, same rounding — so results are bit-identical to scalar
+    /// code by construction.
+    #[inline(always)]
+    pub fn fma<S: SemiringOps<Elem = E>>(self, sr: S, a: E, b: Self) -> Self {
+        let mut out = self.0;
+        for l in 0..W {
+            out[l] = sr.fma(out[l], a, b.0[l]);
+        }
+        Lanes(out)
+    }
+}
+
+/// Fold one A value into a row of accumulators against a packed B row:
+/// `acc[j] = acc[j] ⊕ (a ⊗ b[j])` for all `j`, the N-dimension inner
+/// loop of the microkernel. The row is walked in `LANES`-wide chunks
+/// with a scalar tail; per-element semantics are identical in both
+/// paths, so raggedness (`acc.len() < LANES`) cannot change results.
+#[inline(always)]
+pub fn fma_row<S: SemiringOps>(sr: S, acc: &mut [S::Elem], a: S::Elem, b: &[S::Elem]) {
+    debug_assert_eq!(acc.len(), b.len());
+    match <S::Elem as LaneElem>::LANES {
+        4 => fma_row_w::<S, 4>(sr, acc, a, b),
+        8 => fma_row_w::<S, 8>(sr, acc, a, b),
+        16 => fma_row_w::<S, 16>(sr, acc, a, b),
+        _ => fma_row_w::<S, 1>(sr, acc, a, b),
+    }
+}
+
+#[inline(always)]
+fn fma_row_w<S: SemiringOps, const W: usize>(
+    sr: S,
+    acc: &mut [S::Elem],
+    a: S::Elem,
+    b: &[S::Elem],
+) {
+    let mut ac = acc.chunks_exact_mut(W);
+    let mut bc = b.chunks_exact(W);
+    for (dst, src) in (&mut ac).zip(&mut bc) {
+        let bv = Lanes::<S::Elem, W>::load(src);
+        Lanes::<S::Elem, W>::load(dst).fma(sr, a, bv).store(dst);
+    }
+    for (dst, &bj) in ac.into_remainder().iter_mut().zip(bc.remainder()) {
+        *dst = sr.fma(*dst, a, bj);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kernel::{MinPlusF32, PlusTimesF32, PlusTimesI32Wrap};
+
+    #[test]
+    fn lane_widths_are_powers_of_two() {
+        for lanes in [f32::LANES, f64::LANES, i32::LANES, u32::LANES] {
+            assert!(lanes >= 1 && lanes.is_power_of_two(), "{lanes}");
+        }
+        // One 256-bit vector: wider dtypes get proportionally fewer lanes.
+        assert_eq!(f32::LANES, 2 * f64::LANES);
+    }
+
+    #[test]
+    fn splat_load_store_roundtrip() {
+        let v = Lanes::<f32, 4>::splat(1.5);
+        assert_eq!(v.0, [1.5; 4]);
+        let src = [1.0f32, 2.0, 3.0, 4.0, 99.0];
+        let mut dst = [0.0f32; 5];
+        Lanes::<f32, 4>::load(&src).store(&mut dst);
+        assert_eq!(&dst[..4], &src[..4]);
+        assert_eq!(dst[4], 0.0, "store must not spill past W lanes");
+    }
+
+    #[test]
+    fn fma_row_bit_identical_to_scalar_fold_all_lengths() {
+        // Every length from empty through several full chunks plus a
+        // ragged tail, for a float ring, the tropical semiring (select
+        // semantics with ∞/NaN-safe predicate), and a wrapping ring.
+        for n in 0..=19usize {
+            let b: Vec<f32> = (0..n).map(|j| (j as f32 * 0.7).sin()).collect();
+            let a = 1.25f32;
+
+            let mut vec_acc: Vec<f32> = (0..n).map(|j| j as f32 * 0.1).collect();
+            let mut ref_acc = vec_acc.clone();
+            fma_row(PlusTimesF32, &mut vec_acc, a, &b);
+            for j in 0..n {
+                ref_acc[j] = PlusTimesF32.fma(ref_acc[j], a, b[j]);
+            }
+            assert_eq!(vec_acc, ref_acc, "plus-times len {n}");
+
+            let mut vec_acc: Vec<f32> =
+                (0..n).map(|j| if j % 5 == 0 { f32::INFINITY } else { j as f32 }).collect();
+            let mut ref_acc = vec_acc.clone();
+            fma_row(MinPlusF32, &mut vec_acc, a, &b);
+            for j in 0..n {
+                ref_acc[j] = MinPlusF32.fma(ref_acc[j], a, b[j]);
+            }
+            assert_eq!(vec_acc, ref_acc, "min-plus len {n}");
+
+            let bi: Vec<i32> = (0..n).map(|j| (j as i32).wrapping_mul(0x0123_4567)).collect();
+            let mut vec_acc: Vec<i32> = (0..n).map(|j| i32::MAX - j as i32).collect();
+            let mut ref_acc = vec_acc.clone();
+            fma_row(PlusTimesI32Wrap, &mut vec_acc, 0x7777_7777, &bi);
+            for j in 0..n {
+                ref_acc[j] = PlusTimesI32Wrap.fma(ref_acc[j], 0x7777_7777, bi[j]);
+            }
+            assert_eq!(vec_acc, ref_acc, "wrapping i32 len {n}");
+        }
+    }
+
+    #[test]
+    fn min_plus_lane_select_keeps_nan_and_tie_semantics() {
+        // `cand < acc` is false for NaN candidates (keep acc) and ties
+        // (keep acc) — the oracle predicate, lane-wise.
+        let acc0 = [1.0f32, 1.0, f32::NAN, -0.0];
+        let b = [f32::NAN, 0.0, 0.5, 0.0];
+        let mut lanes = acc0;
+        fma_row(MinPlusF32, &mut lanes, 1.0, &b);
+        let mut scalar = acc0;
+        for j in 0..4 {
+            scalar[j] = MinPlusF32.fma(scalar[j], 1.0, b[j]);
+        }
+        assert_eq!(lanes.map(f32::to_bits), scalar.map(f32::to_bits));
+    }
+
+    #[test]
+    fn simd_available_is_a_constant_predicate() {
+        // Whatever the target, the predicate must be callable in const
+        // context and stable across calls (the bench records it once).
+        const AVAILABLE: bool = simd_available();
+        assert_eq!(AVAILABLE, simd_available());
+    }
+}

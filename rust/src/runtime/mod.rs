@@ -17,7 +17,9 @@
 pub mod artifact;
 pub mod engine;
 pub mod kernel;
+pub mod lanes;
 pub mod native;
+pub mod tune;
 
 pub use artifact::{ArtifactSpec, Manifest};
 pub use engine::{Element, Engine, HostTensor, LoadedKernel};

@@ -9,7 +9,10 @@
 //! (or no generated artifacts directory) is available.
 //!
 //! All ops execute through the blocked semiring microkernel engine
-//! ([`super::kernel`]) via **one dtype/semiring-generic entry point**
+//! ([`super::kernel`]) — under the on-machine tuned blocking when
+//! `runtime::tune` has a verified config for the (semiring, dtype), the
+//! scalar-era 8×8 default otherwise — via **one dtype/semiring-generic
+//! entry point**
 //! ([`execute_slices`]): the op string selects the structure
 //! (accumulating 3-input form, transposed-A packing, or the plain
 //! 2-input product), the [`SemiringOps`] instantiation selects algebra

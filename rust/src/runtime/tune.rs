@@ -1,0 +1,801 @@
+//! On-machine autotuning for the blocked semiring kernel.
+//!
+//! The paper's flow instantiates its tile hierarchy from a hardware
+//! model (Eq. 6/7): plug the device's fast-memory budget and vector
+//! width into the model, get the (compute tile, memory tile) shape that
+//! minimizes communication, then build exactly that configuration. This
+//! module is the host-side equivalent with one twist — instead of
+//! *predicting* the best `(MR, NR, MC, KC, NC)` blocking from the cache
+//! model alone, it **measures** candidates on the actual machine
+//! (coordinate descent over a model-seeded lattice, warmup +
+//! min-of-trials timing) and persists the fastest *bit-exact-verified*
+//! config per `(semiring, dtype, thread count)` to a small versioned
+//! JSON cache.
+//!
+//! Consumers:
+//! * [`super::kernel::gemm`] — the no-config entry point runs the tuned
+//!   blocking for its `(semiring, dtype)` when a valid cache exists.
+//! * `schedule::tiles::model_tile_shape_tuned` — the Eq. 6 cost model
+//!   aligns its memory-tile shape to the tuned kernel footprint.
+//! * `schedule::TiledExecutor::for_algebra` — artifact selection sees
+//!   the tuned-aligned model tile.
+//!
+//! Safety valves, all exercised by `rust/tests/kernel_property.rs`:
+//! a candidate that fails bit-exact verification against the naive
+//! oracle is never timed, never persisted; a cache file that is missing,
+//! unparseable, version-mismatched, fingerprint-mismatched (different
+//! CPU model, lane widths, or crate version), or carries an implausible
+//! config silently falls back to the default 8×8 scalar-era blocking —
+//! never a panic. `PALLAS_TUNE_CACHE` overrides the cache path;
+//! `PALLAS_NO_TUNE` disables consultation entirely.
+
+// The reference oracle and probe loops index with computed offsets a
+// range loop expresses most directly, like the kernel module.
+#![allow(clippy::needless_range_loop)]
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::datatype::Semiring;
+use crate::schedule::tiles::HostCacheProfile;
+use crate::util::json;
+use crate::util::rng::Rng;
+
+use super::kernel::{
+    self, ALayout, BlockConfig, MinPlusF32, PlusTimesF32, PlusTimesF64, PlusTimesI32Wrap,
+    PlusTimesU32Wrap, SemiringOps,
+};
+use super::lanes::{self, LaneElem};
+
+/// Cache schema version: bump on any layout or semantics change so stale
+/// files from older builds are ignored rather than misread.
+pub const CACHE_VERSION: u64 = 1;
+
+/// Env var overriding the tune-cache file path.
+pub const CACHE_ENV: &str = "PALLAS_TUNE_CACHE";
+
+/// Env var disabling tune-cache consultation (any non-empty value other
+/// than `0`).
+pub const NO_TUNE_ENV: &str = "PALLAS_NO_TUNE";
+
+/// One verified tuning result: the blocking that won the search plus the
+/// throughput it was measured at (units: 10⁹ multiply-add pairs per
+/// second; double it for the classical-GEMM GF/s convention).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedConfig {
+    pub mr: usize,
+    pub nr: usize,
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+    /// Thread-band count the config was tuned under.
+    pub threads: usize,
+    /// Measured throughput in G madd/s (min-of-trials on the probe).
+    pub gmadds: f64,
+}
+
+impl TunedConfig {
+    /// The kernel blocking this result describes. `threads` is left on
+    /// auto: the tuned thread count keys the cache entry, but the live
+    /// band policy (env override, per-problem threshold) still decides.
+    pub fn block_config(&self) -> BlockConfig {
+        BlockConfig {
+            mr: self.mr,
+            nr: self.nr,
+            mc: self.mc,
+            kc: self.kc,
+            nc: self.nc,
+            threads: None,
+        }
+    }
+
+    /// Whether this entry could possibly be a real tuning result —
+    /// the gate between a parsed cache file and the kernel hot path.
+    pub fn is_plausible(&self) -> bool {
+        self.block_config().is_plausible()
+            && self.threads >= 1
+            && self.threads <= 1 << 10
+            && self.gmadds.is_finite()
+            && self.gmadds >= 0.0
+    }
+}
+
+/// Cache entry key + payload: one winner per (semiring, dtype, threads).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneEntry {
+    /// `Semiring::name()` of the algebra (`"plus_times"` / `"min_plus"`).
+    pub semiring: String,
+    /// Manifest dtype name (`"float32"`, …).
+    pub dtype: String,
+    pub cfg: TunedConfig,
+}
+
+/// The persisted tune cache: fingerprinted to one machine + build.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuneCache {
+    /// CPU model + lane widths + crate version; a mismatch means the
+    /// file was tuned elsewhere (or by another build) and is ignored.
+    pub fingerprint: String,
+    pub entries: Vec<TuneEntry>,
+}
+
+impl TuneCache {
+    /// Empty cache stamped for this machine.
+    pub fn for_this_machine() -> TuneCache {
+        TuneCache { fingerprint: machine_fingerprint(), entries: Vec::new() }
+    }
+
+    /// Best entry for `(semiring, dtype)`: exact thread-count match if
+    /// present, else the entry tuned at the nearest thread count.
+    pub fn lookup(&self, semiring: &str, dtype: &str, threads: usize) -> Option<&TunedConfig> {
+        let mut best: Option<&TunedConfig> = None;
+        for e in &self.entries {
+            if e.semiring != semiring || e.dtype != dtype {
+                continue;
+            }
+            if e.cfg.threads == threads {
+                return Some(&e.cfg);
+            }
+            let better = match best {
+                None => true,
+                Some(b) => e.cfg.threads.abs_diff(threads) < b.threads.abs_diff(threads),
+            };
+            if better {
+                best = Some(&e.cfg);
+            }
+        }
+        best
+    }
+
+    /// Validated kernel blocking for `(semiring, dtype)` at a thread
+    /// count, or `None` when the cache has nothing plausible — the pure
+    /// core of [`ambient_config`], so the fallback contract is testable
+    /// without touching process environment.
+    pub fn block_config_for(
+        &self,
+        semiring: &str,
+        dtype: &str,
+        threads: usize,
+    ) -> Option<BlockConfig> {
+        let cfg = self.lookup(semiring, dtype, threads)?;
+        if cfg.is_plausible() {
+            Some(cfg.block_config())
+        } else {
+            None
+        }
+    }
+
+    /// Insert or replace the entry for `(semiring, dtype, threads)`.
+    pub fn upsert(&mut self, semiring: &str, dtype: &str, cfg: TunedConfig) {
+        if let Some(e) = self.entries.iter_mut().find(|e| {
+            e.semiring == semiring && e.dtype == dtype && e.cfg.threads == cfg.threads
+        }) {
+            e.cfg = cfg;
+        } else {
+            self.entries.push(TuneEntry {
+                semiring: semiring.to_string(),
+                dtype: dtype.to_string(),
+                cfg,
+            });
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize a cache to the versioned JSON layout [`parse`] reads.
+pub fn render(cache: &TuneCache) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"version\": {CACHE_VERSION},\n"));
+    s.push_str(&format!("  \"fingerprint\": \"{}\",\n", json_escape(&cache.fingerprint)));
+    s.push_str("  \"entries\": [\n");
+    for (i, e) in cache.entries.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"semiring\": \"{}\", \"dtype\": \"{}\", \"mr\": {}, \"nr\": {}, \
+             \"mc\": {}, \"kc\": {}, \"nc\": {}, \"threads\": {}, \"gmadds\": {}}}{}\n",
+            json_escape(&e.semiring),
+            json_escape(&e.dtype),
+            e.cfg.mr,
+            e.cfg.nr,
+            e.cfg.mc,
+            e.cfg.kc,
+            e.cfg.nc,
+            e.cfg.threads,
+            if e.cfg.gmadds.is_finite() { format!("{:.6}", e.cfg.gmadds) } else { "0".into() },
+            if i + 1 < cache.entries.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn parse_entry(v: &json::Value) -> Option<TuneEntry> {
+    Some(TuneEntry {
+        semiring: v.get("semiring")?.as_str()?.to_string(),
+        dtype: v.get("dtype")?.as_str()?.to_string(),
+        cfg: TunedConfig {
+            mr: v.get("mr")?.as_usize()?,
+            nr: v.get("nr")?.as_usize()?,
+            mc: v.get("mc")?.as_usize()?,
+            kc: v.get("kc")?.as_usize()?,
+            nc: v.get("nc")?.as_usize()?,
+            threads: v.get("threads")?.as_usize()?,
+            gmadds: v.get("gmadds")?.as_f64()?,
+        },
+    })
+}
+
+/// Parse a cache file body. `None` on malformed JSON, a missing or
+/// mismatched schema version, or a structurally wrong document — the
+/// silent-fallback contract. Individually malformed entries are dropped
+/// rather than poisoning the rest; implausible-but-parseable configs are
+/// kept here and rejected at lookup time ([`TuneCache::block_config_for`]).
+pub fn parse(text: &str) -> Option<TuneCache> {
+    let v = json::parse(text).ok()?;
+    if v.get("version")?.as_u64()? != CACHE_VERSION {
+        return None;
+    }
+    let fingerprint = v.get("fingerprint")?.as_str()?.to_string();
+    let entries = v.get("entries")?.as_array()?.iter().filter_map(parse_entry).collect();
+    Some(TuneCache { fingerprint, entries })
+}
+
+/// Load and parse a cache file; `None` (never a panic) on any failure.
+pub fn load_file(path: &Path) -> Option<TuneCache> {
+    parse(&std::fs::read_to_string(path).ok()?)
+}
+
+/// Write a cache file, creating parent directories.
+pub fn store_file(path: &Path, cache: &TuneCache) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, render(cache))
+}
+
+fn cpu_model() -> String {
+    if let Ok(info) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in info.lines() {
+            if let Some(rest) = line.strip_prefix("model name") {
+                if let Some((_, name)) = rest.split_once(':') {
+                    return name.trim().to_string();
+                }
+            }
+        }
+    }
+    std::env::consts::ARCH.to_string()
+}
+
+/// Machine + build identity a cache file is valid for: CPU model, the
+/// per-dtype lane widths this build compiled to, SIMD availability, and
+/// the crate version.
+pub fn machine_fingerprint() -> String {
+    static FP: OnceLock<String> = OnceLock::new();
+    FP.get_or_init(|| {
+        format!(
+            "{}|lanes f32x{} f64x{} i32x{} simd={}|fcamm {}",
+            cpu_model(),
+            f32::LANES,
+            f64::LANES,
+            i32::LANES,
+            lanes::simd_available(),
+            env!("CARGO_PKG_VERSION"),
+        )
+    })
+    .clone()
+}
+
+/// Whether `PALLAS_NO_TUNE` disables cache consultation.
+pub fn no_tune() -> bool {
+    match std::env::var(NO_TUNE_ENV) {
+        Ok(v) => !v.trim().is_empty() && v.trim() != "0",
+        Err(_) => false,
+    }
+}
+
+/// The cache path: `PALLAS_TUNE_CACHE` when set, else
+/// `$XDG_CACHE_HOME/pallas/tune.json`, else `$HOME/.cache/pallas/tune.json`
+/// — deliberately *outside* the repository so checkouts stay hermetic.
+pub fn cache_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var(CACHE_ENV) {
+        if !p.trim().is_empty() {
+            return Some(PathBuf::from(p));
+        }
+    }
+    let base = std::env::var("XDG_CACHE_HOME")
+        .ok()
+        .filter(|p| !p.trim().is_empty())
+        .map(PathBuf::from)
+        .or_else(|| {
+            std::env::var("HOME")
+                .ok()
+                .filter(|p| !p.trim().is_empty())
+                .map(|h| PathBuf::from(h).join(".cache"))
+        })?;
+    Some(base.join("pallas").join("tune.json"))
+}
+
+/// The fingerprint-validated ambient cache, loaded once per process.
+/// (`PALLAS_NO_TUNE` is consulted per call, not captured here, so the
+/// kill switch works even after the first load.)
+fn ambient_cache() -> Option<&'static TuneCache> {
+    static CACHE: OnceLock<Option<TuneCache>> = OnceLock::new();
+    CACHE
+        .get_or_init(|| {
+            let cache = load_file(&cache_path()?)?;
+            (cache.fingerprint == machine_fingerprint()).then_some(cache)
+        })
+        .as_ref()
+}
+
+/// Tuned kernel blocking for `(semiring, dtype)` at the live thread
+/// width, if a valid on-machine cache has one. The [`kernel::gemm`]
+/// entry point calls this; `None` means "run the default".
+pub fn ambient_config(semiring: Semiring, dtype: &str) -> Option<BlockConfig> {
+    if no_tune() {
+        return None;
+    }
+    ambient_cache()?.block_config_for(semiring.name(), dtype, kernel::native_threads())
+}
+
+/// Measured tuned throughput (G madd/s) for `(semiring, dtype)`, used to
+/// scale the kernel's go-parallel threshold.
+pub fn ambient_gmadds(semiring: Semiring, dtype: &str) -> Option<f64> {
+    ambient_tuned(semiring, dtype).map(|cfg| cfg.gmadds)
+}
+
+/// Full tuned entry for `(semiring, dtype)` (plausible entries only) —
+/// what the cost model and executor consult for the tuned footprint.
+pub fn ambient_tuned(semiring: Semiring, dtype: &str) -> Option<TunedConfig> {
+    if no_tune() {
+        return None;
+    }
+    let cfg = ambient_cache()?.lookup(semiring.name(), dtype, kernel::native_threads())?;
+    cfg.is_plausible().then(|| cfg.clone())
+}
+
+/// Search-effort knobs for [`tune_semiring`].
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Probe GEMM shape candidates are timed on.
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Untimed warmup runs per candidate.
+    pub warmup: usize,
+    /// Timed runs per candidate; the minimum is kept (spikes are noise,
+    /// the floor is the machine's capability).
+    pub trials: usize,
+    /// Full coordinate-descent sweeps over the lattice.
+    pub sweeps: usize,
+    /// Thread-band count to tune for; `None` = [`kernel::native_threads`].
+    pub threads: Option<usize>,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions { m: 256, n: 256, k: 256, warmup: 1, trials: 3, sweeps: 2, threads: None }
+    }
+}
+
+impl TuneOptions {
+    /// Cheap settings for benches and smoke tests.
+    pub fn quick() -> Self {
+        TuneOptions { m: 128, n: 128, k: 128, warmup: 1, trials: 2, sweeps: 1, threads: None }
+    }
+}
+
+/// Outcome of one `(semiring, dtype)` search.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// The winning, bit-exact-verified config.
+    pub best: TunedConfig,
+    /// Measured throughput of the default 8×8 config at the same thread
+    /// count (G madd/s) — the tuned-vs-default comparison benches report.
+    pub default_gmadds: f64,
+    /// Candidates evaluated (verified + timed).
+    pub candidates_tried: usize,
+    /// Candidates rejected for failing bit-exact verification (must stay
+    /// 0 — any other value means a kernel bug the suite will also catch).
+    pub rejected_non_bit_exact: usize,
+}
+
+/// Deterministic operand generation for verification and probes.
+pub trait TuneElem: LaneElem {
+    fn sample(rng: &mut Rng) -> Self;
+}
+
+impl TuneElem for f32 {
+    fn sample(rng: &mut Rng) -> f32 {
+        rng.next_normal_f32()
+    }
+}
+
+impl TuneElem for f64 {
+    fn sample(rng: &mut Rng) -> f64 {
+        rng.next_normal_f32() as f64
+    }
+}
+
+impl TuneElem for i32 {
+    fn sample(rng: &mut Rng) -> i32 {
+        rng.next_u32() as i32
+    }
+}
+
+impl TuneElem for u32 {
+    fn sample(rng: &mut Rng) -> u32 {
+        rng.next_u32()
+    }
+}
+
+fn sample_vec<E: TuneElem>(rng: &mut Rng, len: usize) -> Vec<E> {
+    (0..len).map(|_| E::sample(rng)).collect()
+}
+
+/// The semantics oracle the tuner verifies against: the seed's naive
+/// triple loop, generic over the semiring — ascending-`k`, single
+/// accumulator per element, row-major A.
+fn reference_gemm<S: SemiringOps>(
+    sr: S,
+    a: &[S::Elem],
+    b: &[S::Elem],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Vec<S::Elem> {
+    let mut out = vec![sr.zero(); m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            for j in 0..n {
+                out[i * n + j] = sr.fma(out[i * n + j], aik, b[kk * n + j]);
+            }
+        }
+    }
+    out
+}
+
+/// Ragged shapes every candidate must be bit-exact on before it is even
+/// timed: 1×N, M×1, n below one lane vector, k = 0, and a multi-panel
+/// shape. Small on purpose — verification runs once per candidate.
+const VERIFY_SHAPES: &[(usize, usize, usize)] =
+    &[(1, 19, 7), (23, 1, 5), (9, 3, 8), (5, 4, 0), (37, 29, 23)];
+
+/// Bit-exact verification of `cfg` against the naive reference over
+/// [`VERIFY_SHAPES`] with deterministic operands.
+pub fn verify_config<S: SemiringOps>(sr: S, cfg: &BlockConfig) -> bool
+where
+    S::Elem: TuneElem,
+{
+    let mut rng = Rng::new(0xbe57_c0f1);
+    for &(m, n, k) in VERIFY_SHAPES {
+        let a: Vec<S::Elem> = sample_vec(&mut rng, m * k);
+        let b: Vec<S::Elem> = sample_vec(&mut rng, k * n);
+        let want = reference_gemm(sr, &a, &b, m, n, k);
+        let got = kernel::gemm_with(sr, cfg, None, &a, ALayout::RowMajor, &b, m, n, k);
+        if got != want {
+            return false;
+        }
+    }
+    true
+}
+
+/// Candidate lattice per blocking coordinate, seeded from the cache
+/// profile: A panels must fit the per-step budget
+/// (`HostCacheProfile::capacity_bytes`), B panels the cross-request
+/// residency budget — the Eq. 6 feasibility constraint the model-driven
+/// search space respects before any timing happens.
+fn candidate_fits(cfg: &BlockConfig, profile: &HostCacheProfile, elem_bytes: u64) -> bool {
+    let a_panel = cfg.mc.next_multiple_of(cfg.mr) as u64 * cfg.kc as u64 * elem_bytes;
+    let b_panel = cfg.kc as u64 * cfg.nc.next_multiple_of(cfg.nr) as u64 * elem_bytes;
+    a_panel <= profile.capacity_bytes && b_panel <= profile.panel_cache_bytes.max(1 << 20)
+}
+
+const MC_CANDIDATES: &[usize] = &[32, 64, 96, 128, 256];
+const KC_CANDIDATES: &[usize] = &[64, 128, 256, 512];
+const NC_CANDIDATES: &[usize] = &[128, 256, 512, 1024];
+
+/// Coordinate-descent search for the fastest bit-exact blocking of one
+/// semiring instantiation. Returns the winner plus the default config's
+/// measured throughput for comparison. Never returns an unverified
+/// config: the default is verified first (a failure there panics — it
+/// would mean the kernel itself is broken), and every lattice move must
+/// pass [`verify_config`] before it is timed.
+pub fn tune_semiring<S: SemiringOps>(
+    sr: S,
+    profile: &HostCacheProfile,
+    opts: &TuneOptions,
+) -> TuneOutcome
+where
+    S::Elem: TuneElem,
+{
+    let threads = opts.threads.unwrap_or_else(kernel::native_threads).max(1);
+    let elem_bytes = std::mem::size_of::<S::Elem>() as u64;
+    let (m, n, k) = (opts.m.max(1), opts.n.max(1), opts.k.max(1));
+    let mut rng = Rng::new(0x7d15_c0de ^ (threads as u64));
+    let a: Vec<S::Elem> = sample_vec(&mut rng, m * k);
+    let b: Vec<S::Elem> = sample_vec(&mut rng, k * n);
+
+    let time_cfg = |cfg: &BlockConfig| -> f64 {
+        for _ in 0..opts.warmup {
+            std::hint::black_box(kernel::gemm_with(
+                sr,
+                cfg,
+                None,
+                &a,
+                ALayout::RowMajor,
+                &b,
+                m,
+                n,
+                k,
+            ));
+        }
+        let mut best_ns = f64::INFINITY;
+        for _ in 0..opts.trials.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(kernel::gemm_with(
+                sr,
+                cfg,
+                None,
+                &a,
+                ALayout::RowMajor,
+                &b,
+                m,
+                n,
+                k,
+            ));
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as f64);
+        }
+        best_ns
+    };
+    let gmadds_of = |ns: f64| (m as f64 * n as f64 * k as f64) / ns.max(1.0);
+
+    let default_cfg = BlockConfig { threads: Some(threads), ..BlockConfig::default() };
+    assert!(
+        verify_config(sr, &default_cfg),
+        "default blocking failed bit-exact verification — kernel bug"
+    );
+    let default_ns = time_cfg(&default_cfg);
+
+    let mut best_cfg = default_cfg.clone();
+    let mut best_ns = default_ns;
+    let mut tried = 1usize;
+    let mut rejected = 0usize;
+
+    for _sweep in 0..opts.sweeps.max(1) {
+        // Coordinate order: microtile shape first (it changes what the
+        // panel loops amortize), then panel depths/widths around it.
+        for coord in 0..5 {
+            let values: &[usize] = match coord {
+                0 => kernel::SUPPORTED_NR,
+                1 => kernel::SUPPORTED_MR,
+                2 => KC_CANDIDATES,
+                3 => MC_CANDIDATES,
+                _ => NC_CANDIDATES,
+            };
+            for &v in values {
+                let mut cand = best_cfg.clone();
+                match coord {
+                    0 => cand.nr = v,
+                    1 => cand.mr = v,
+                    2 => cand.kc = v,
+                    3 => cand.mc = v,
+                    _ => cand.nc = v,
+                }
+                if cand == best_cfg || !candidate_fits(&cand, profile, elem_bytes) {
+                    continue;
+                }
+                if !verify_config(sr, &cand) {
+                    rejected += 1;
+                    continue;
+                }
+                tried += 1;
+                let ns = time_cfg(&cand);
+                if ns < best_ns {
+                    best_ns = ns;
+                    best_cfg = cand;
+                }
+            }
+        }
+    }
+
+    TuneOutcome {
+        best: TunedConfig {
+            mr: best_cfg.mr,
+            nr: best_cfg.nr,
+            mc: best_cfg.mc,
+            kc: best_cfg.kc,
+            nc: best_cfg.nc,
+            threads,
+            gmadds: gmadds_of(best_ns),
+        },
+        default_gmadds: gmadds_of(default_ns),
+        candidates_tried: tried,
+        rejected_non_bit_exact: rejected,
+    }
+}
+
+/// Tune all five (semiring, dtype) instantiations and assemble a cache
+/// stamped for this machine. Returns the cache plus per-instantiation
+/// outcomes in `(semiring, dtype, outcome)` form for reporting.
+pub fn tune_all(
+    profile: &HostCacheProfile,
+    opts: &TuneOptions,
+) -> (TuneCache, Vec<(String, String, TuneOutcome)>) {
+    let mut cache = TuneCache::for_this_machine();
+    let mut reports = Vec::new();
+
+    fn record<S: SemiringOps>(
+        sr: S,
+        profile: &HostCacheProfile,
+        opts: &TuneOptions,
+        cache: &mut TuneCache,
+        reports: &mut Vec<(String, String, TuneOutcome)>,
+    ) where
+        S::Elem: TuneElem,
+    {
+        let out = tune_semiring(sr, profile, opts);
+        let semiring = sr.algebra().name().to_string();
+        let dtype = <S::Elem as LaneElem>::NAME.to_string();
+        cache.upsert(&semiring, &dtype, out.best.clone());
+        reports.push((semiring, dtype, out));
+    }
+
+    record(PlusTimesF32, profile, opts, &mut cache, &mut reports);
+    record(PlusTimesF64, profile, opts, &mut cache, &mut reports);
+    record(PlusTimesI32Wrap, profile, opts, &mut cache, &mut reports);
+    record(PlusTimesU32Wrap, profile, opts, &mut cache, &mut reports);
+    record(MinPlusF32, profile, opts, &mut cache, &mut reports);
+    (cache, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_cache() -> TuneCache {
+        let mut c = TuneCache { fingerprint: "cpu X|lanes|v0".into(), entries: Vec::new() };
+        c.upsert(
+            "plus_times",
+            "float32",
+            TunedConfig { mr: 8, nr: 16, mc: 96, kc: 256, nc: 512, threads: 8, gmadds: 6.5 },
+        );
+        c.upsert(
+            "plus_times",
+            "float32",
+            TunedConfig { mr: 16, nr: 16, mc: 64, kc: 128, nc: 256, threads: 1, gmadds: 1.5 },
+        );
+        c.upsert(
+            "min_plus",
+            "float32",
+            TunedConfig { mr: 4, nr: 32, mc: 64, kc: 256, nc: 512, threads: 8, gmadds: 4.0 },
+        );
+        c
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let cache = sample_cache();
+        let parsed = parse(&render(&cache)).expect("round trip");
+        assert_eq!(parsed, cache);
+    }
+
+    #[test]
+    fn lookup_prefers_exact_then_nearest_threads() {
+        let c = sample_cache();
+        assert_eq!(c.lookup("plus_times", "float32", 8).unwrap().mr, 8);
+        assert_eq!(c.lookup("plus_times", "float32", 1).unwrap().mr, 16);
+        // Nearest for an untuned width.
+        assert_eq!(c.lookup("plus_times", "float32", 6).unwrap().threads, 8);
+        assert_eq!(c.lookup("plus_times", "float32", 2).unwrap().threads, 1);
+        assert!(c.lookup("plus_times", "float64", 8).is_none());
+        assert!(c.lookup("min_plus", "int32", 8).is_none());
+    }
+
+    #[test]
+    fn corrupted_stale_or_impossible_caches_fall_back_silently() {
+        // Bad JSON.
+        assert_eq!(parse("{ not json"), None);
+        assert_eq!(parse(""), None);
+        // Wrong / missing schema version.
+        assert_eq!(parse("{\"version\": 999, \"fingerprint\": \"x\", \"entries\": []}"), None);
+        assert_eq!(parse("{\"fingerprint\": \"x\", \"entries\": []}"), None);
+        // Structurally wrong.
+        assert_eq!(parse("[1, 2, 3]"), None);
+        assert_eq!(parse("{\"version\": 1, \"fingerprint\": \"x\"}"), None);
+        // A malformed entry is dropped, good ones survive.
+        let mixed = format!(
+            "{{\"version\": {CACHE_VERSION}, \"fingerprint\": \"f\", \"entries\": [\
+             {{\"semiring\": \"plus_times\"}},\
+             {{\"semiring\": \"plus_times\", \"dtype\": \"float32\", \"mr\": 8, \"nr\": 8, \
+               \"mc\": 64, \"kc\": 256, \"nc\": 512, \"threads\": 4, \"gmadds\": 2.0}}]}}"
+        );
+        let cache = parse(&mixed).expect("good entry survives");
+        assert_eq!(cache.entries.len(), 1);
+        // An impossible config parses but never reaches the kernel.
+        let mut bad = TuneCache::default();
+        bad.upsert(
+            "plus_times",
+            "float32",
+            TunedConfig { mr: 0, nr: 8, mc: 64, kc: 256, nc: 512, threads: 4, gmadds: 2.0 },
+        );
+        assert_eq!(bad.block_config_for("plus_times", "float32", 4), None);
+        // Missing file: None, not a panic.
+        assert_eq!(load_file(Path::new("/nonexistent/pallas/tune.json")), None);
+    }
+
+    #[test]
+    fn store_and_load_round_trip_via_file() {
+        let dir = std::env::temp_dir().join(format!("pallas_tune_test_{}", std::process::id()));
+        let path = dir.join("nested").join("tune.json");
+        let cache = sample_cache();
+        store_file(&path, &cache).expect("store");
+        assert_eq!(load_file(&path), Some(cache));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_carries_build_identity() {
+        let fp = machine_fingerprint();
+        assert_eq!(fp, machine_fingerprint());
+        assert!(fp.contains("lanes f32x"));
+        assert!(fp.contains(env!("CARGO_PKG_VERSION")));
+    }
+
+    #[test]
+    fn tuner_smoke_produces_verified_plausible_configs() {
+        // Tiny probe: exercising the full search loop, not the clock.
+        let opts = TuneOptions {
+            m: 32,
+            n: 32,
+            k: 32,
+            warmup: 0,
+            trials: 1,
+            sweeps: 1,
+            threads: Some(1),
+        };
+        let profile = HostCacheProfile::default();
+        let out = tune_semiring(PlusTimesF32, &profile, &opts);
+        assert!(out.best.is_plausible(), "{:?}", out.best);
+        assert_eq!(out.best.threads, 1);
+        assert!(out.best.gmadds > 0.0);
+        assert_eq!(
+            out.rejected_non_bit_exact, 0,
+            "no lattice candidate may fail bit-exact verification"
+        );
+        assert!(out.candidates_tried >= 2);
+        // The winner re-verifies: the persistence gate.
+        assert!(verify_config(PlusTimesF32, &out.best.block_config()));
+        let out = tune_semiring(MinPlusF32, &profile, &opts);
+        assert!(out.best.is_plausible());
+        assert!(verify_config(MinPlusF32, &out.best.block_config()));
+    }
+
+    #[test]
+    fn candidate_filter_respects_cache_budgets() {
+        let tiny = HostCacheProfile::with_budgets(1 << 12, 1 << 20);
+        // Default A panel (64×256×4B = 64 KiB) cannot fit a 4 KiB budget.
+        assert!(!candidate_fits(&BlockConfig::default(), &tiny, 4));
+        assert!(candidate_fits(&BlockConfig::default(), &HostCacheProfile::default(), 4));
+    }
+}

@@ -75,7 +75,7 @@ use crate::runtime::kernel::{
 use crate::runtime::{Element, HostTensor, LoadedKernel, Runtime};
 
 use super::order::Order;
-use super::tiles::{model_tile_shape, HostCacheProfile, Step, TilePlan};
+use super::tiles::{model_tile_shape_tuned, HostCacheProfile, Step, TilePlan};
 
 /// Which accumulation schedule to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -396,9 +396,14 @@ impl TiledExecutor {
     /// [`Self::for_algebra`] under an explicit cache profile: among the
     /// artifacts whose working set fits the budget, pick the one whose
     /// working set is closest to the model-derived ideal tile shape for
-    /// this dtype width ([`model_tile_shape`]) — the host analogue of
-    /// sizing the memory tile to the on-chip budget (Eq. 6/7). With no
-    /// fitting artifact, fall back to the smallest available.
+    /// this dtype width ([`model_tile_shape_tuned`]) — the host analogue
+    /// of sizing the memory tile to the on-chip budget (Eq. 6/7). When
+    /// the on-machine tune cache (`runtime::tune`) carries a verified
+    /// kernel blocking for this (semiring, dtype), the ideal tile is
+    /// aligned to that tuned footprint first, so artifact choice and the
+    /// cost model see the same panel geometry the kernel will actually
+    /// run. With no fitting artifact, fall back to the smallest
+    /// available.
     pub fn for_algebra_with(
         rt: &Runtime,
         semiring: Semiring,
@@ -411,7 +416,8 @@ impl TiledExecutor {
             bail!("no {op}/{dtype} accumulation artifact in manifest ({semiring} semiring)");
         }
         let elem_bytes = DataType::manifest_bytes(dtype);
-        let (rm, rn, rk) = model_tile_shape(elem_bytes, profile);
+        let tuned = crate::runtime::tune::ambient_tuned(semiring, dtype);
+        let (rm, rn, rk) = model_tile_shape_tuned(elem_bytes, profile, tuned.as_ref());
         let ideal_ws = HostCacheProfile::working_set_bytes(rm, rn, rk, elem_bytes);
         let spec = candidates
             .iter()

@@ -112,6 +112,36 @@ pub fn model_tile_shape(elem_bytes: u64, profile: &HostCacheProfile) -> (usize, 
     (tm as usize, tn as usize, tk as usize)
 }
 
+/// [`model_tile_shape`] consulted against an on-machine tuned kernel
+/// footprint (`runtime::tune`): when the tuner has verified a blocking
+/// for this (semiring, dtype), the memory tile is aligned *down* to
+/// whole multiples of the tuned panel sizes — a tile that is an integral
+/// number of `MC`-row A panels / `NC`-column B panels / `KC`-deep slabs
+/// decomposes into the kernel's packed panels with no ragged panel edge,
+/// the same whole-multiple reasoning as Eq. 6's `x_p`/`y_c` quantization.
+/// Aligning down only shrinks the tile, so anything that fit the budget
+/// still fits; dimensions smaller than one tuned panel (or a degenerate
+/// tuned value) are left at the model's choice, and `None` reproduces
+/// [`model_tile_shape`] exactly.
+pub fn model_tile_shape_tuned(
+    elem_bytes: u64,
+    profile: &HostCacheProfile,
+    tuned: Option<&crate::runtime::tune::TunedConfig>,
+) -> (usize, usize, usize) {
+    let (tm, tn, tk) = model_tile_shape(elem_bytes, profile);
+    let Some(t) = tuned else {
+        return (tm, tn, tk);
+    };
+    let align = |v: usize, panel: usize| {
+        if panel == 0 || v < panel {
+            v
+        } else {
+            (v / panel * panel).max(TILE_QUANTUM)
+        }
+    };
+    (align(tm, t.mc), align(tn, t.nc), align(tk, t.kc))
+}
+
 /// One artifact invocation in the plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Step {
@@ -515,6 +545,36 @@ mod tests {
         let profile = HostCacheProfile::with_capacity(64);
         let (tm, tn, tk) = model_tile_shape(8, &profile);
         assert_eq!((tm, tn, tk), (TILE_QUANTUM, TILE_QUANTUM, TILE_QUANTUM));
+    }
+
+    #[test]
+    fn tuned_model_tiles_align_to_kernel_panels_and_still_fit() {
+        use crate::runtime::tune::TunedConfig;
+        let profile = HostCacheProfile::default();
+        // No tuned footprint: exactly the plain model.
+        assert_eq!(model_tile_shape_tuned(4, &profile, None), model_tile_shape(4, &profile));
+        let tuned =
+            TunedConfig { mr: 8, nr: 16, mc: 96, kc: 64, nc: 512, threads: 8, gmadds: 5.0 };
+        let (tm, tn, tk) = model_tile_shape_tuned(4, &profile, Some(&tuned));
+        let (pm, pn, pk) = model_tile_shape(4, &profile);
+        // Aligned down to whole tuned panels wherever the model tile is
+        // at least one panel wide — so executor steps decompose into the
+        // kernel's packed panels with no ragged edge…
+        if pm >= tuned.mc {
+            assert_eq!(tm % tuned.mc, 0, "tm {tm} not a multiple of MC {}", tuned.mc);
+        }
+        if pk >= tuned.kc {
+            assert_eq!(tk % tuned.kc, 0, "tk {tk} not a multiple of KC {}", tuned.kc);
+        }
+        // …never growing, so the budget still holds.
+        assert!(tm <= pm && tn <= pn && tk <= pk);
+        assert!(
+            HostCacheProfile::working_set_bytes(tm, tn, tk, 4) <= profile.capacity_bytes,
+            "tuned-aligned tile over budget"
+        );
+        // Degenerate tuned panels are ignored, not divided by.
+        let broken = TunedConfig { mc: 0, kc: 0, nc: 0, ..tuned };
+        assert_eq!(model_tile_shape_tuned(4, &profile, Some(&broken)), (pm, pn, pk));
     }
 
     #[test]

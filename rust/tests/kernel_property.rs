@@ -31,12 +31,21 @@ fn shape(rng: &mut Rng) -> (usize, usize, usize) {
 }
 
 /// Block configs from degenerate (1×1×1 panels) through a few microtiles
-/// wide, with an exact thread-band override of 1–4.
+/// wide, with an exact thread-band override of 1–4. Microtile shapes mix
+/// on-lattice widths (monomorphized SIMD microkernels) with off-lattice
+/// ones (the dynamic fallback) — the two paths must be bit-identical, so
+/// the properties below sweep both without distinguishing them.
 fn config(rng: &mut Rng) -> BlockConfig {
+    const MR_POOL: &[usize] = &[1, 2, 3, 4, 5, 8, 16];
+    const NR_POOL: &[usize] = &[1, 2, 5, 7, 8, 16, 32];
+    let mr = MR_POOL[rng.gen_range(0, MR_POOL.len() as u64) as usize];
+    let nr = NR_POOL[rng.gen_range(0, NR_POOL.len() as u64) as usize];
     BlockConfig {
-        mc: prop::small_biased(rng, 1, 3 * kernel::MR as u64) as usize,
+        mr,
+        nr,
+        mc: prop::small_biased(rng, 1, 3 * mr as u64) as usize,
         kc: prop::small_biased(rng, 1, 12) as usize,
-        nc: prop::small_biased(rng, 1, 3 * kernel::NR as u64) as usize,
+        nc: prop::small_biased(rng, 1, 3 * nr as u64) as usize,
         threads: Some(1 + rng.gen_range(0, 4) as usize),
     }
 }
@@ -169,4 +178,141 @@ fn prop_k_slab_chaining_bit_identical() {
         );
         assert_eq!(c2, full, "{m}x{n}x{k} split {split} cfg {cfg:?}");
     });
+}
+
+#[test]
+fn prop_config_sweep_all_semirings_bit_identical() {
+    // The ISSUE's config-sweep property: one random, fully-runtime
+    // blocking (mr, nr, mc, kc, nc, threads) per iteration, applied to
+    // all five (semiring, dtype) instantiations on the same ragged
+    // shape. Half the iterations force n below the widest lane width so
+    // the vector-remainder path runs constantly.
+    prop::check("random full-config sweep × all five instantiations", |rng| {
+        let (m, mut n, k) = shape(rng);
+        if rng.gen_range(0, 2) == 0 {
+            n = 1 + rng.gen_range(0, 7) as usize; // n < every lane width
+        }
+        let cfg = config(rng);
+
+        let af = rng.fill_normal_f32(m * k);
+        let bf = rng.fill_normal_f32(k * n);
+        let want = oracle::gemm_f32(None, &af, &bf, m, n, k);
+        let got = kernel::gemm_with(PlusTimesF32, &cfg, None, &af, ALayout::RowMajor, &bf, m, n, k);
+        assert_eq!(got, want, "f32 {m}x{n}x{k} cfg {cfg:?}");
+
+        let want = oracle::distance_f32(&af, &bf, m, n, k);
+        let got = kernel::gemm_with(MinPlusF32, &cfg, None, &af, ALayout::RowMajor, &bf, m, n, k);
+        assert_eq!(got, want, "min-plus {m}x{n}x{k} cfg {cfg:?}");
+
+        let ad: Vec<f64> = (0..m * k).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let bd: Vec<f64> = (0..k * n).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let want = oracle::gemm_f64(&ad, &bd, m, n, k);
+        let got = kernel::gemm_with(PlusTimesF64, &cfg, None, &ad, ALayout::RowMajor, &bd, m, n, k);
+        assert_eq!(got, want, "f64 {m}x{n}x{k} cfg {cfg:?}");
+
+        let ai: Vec<i32> = (0..m * k).map(|_| rng.next_u32() as i32).collect();
+        let bi: Vec<i32> = (0..k * n).map(|_| rng.next_u32() as i32).collect();
+        let want: Vec<i32> =
+            oracle::gemm_i64(&ai, &bi, m, n, k).iter().map(|&v| v as i32).collect();
+        let got =
+            kernel::gemm_with(PlusTimesI32Wrap, &cfg, None, &ai, ALayout::RowMajor, &bi, m, n, k);
+        assert_eq!(got, want, "i32 {m}x{n}x{k} cfg {cfg:?}");
+
+        let au: Vec<u32> = ai.iter().map(|&v| v as u32).collect();
+        let bu: Vec<u32> = bi.iter().map(|&v| v as u32).collect();
+        let want: Vec<u32> =
+            oracle::gemm_i64(&au, &bu, m, n, k).iter().map(|&v| v as u32).collect();
+        let got =
+            kernel::gemm_with(PlusTimesU32Wrap, &cfg, None, &au, ALayout::RowMajor, &bu, m, n, k);
+        assert_eq!(got, want, "u32 {m}x{n}x{k} cfg {cfg:?}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Tune-cache resilience: a corrupted, stale, or implausible cache must
+// silently degrade to the default blocking — never panic, never hand the
+// kernel an unusable config. Exercised through the same pure entry
+// points the ambient lookup uses.
+// ---------------------------------------------------------------------
+
+use fcamm::runtime::tune;
+
+#[test]
+fn corrupted_tune_cache_files_fall_back_silently() {
+    // Structurally broken JSON in every flavor → parse yields None and
+    // gemm would proceed on BlockConfig::default().
+    for bad in [
+        "",
+        "not json at all",
+        "{ \"version\": 1, ",
+        "[1, 2, 3]",
+        "{\"version\": 1}",
+        "{\"fingerprint\": \"x\", \"entries\": []}",
+        "{\"version\": 1, \"fingerprint\": \"x\", \"entries\": 7}",
+    ] {
+        assert!(tune::parse(bad).is_none(), "accepted corrupted cache {bad:?}");
+    }
+}
+
+#[test]
+fn stale_version_tune_cache_is_rejected() {
+    let mut cache = tune::TuneCache::for_this_machine();
+    cache.upsert(
+        "plus_times",
+        "float32",
+        tune::TunedConfig { mr: 8, nr: 16, mc: 64, kc: 128, nc: 256, threads: 1, gmadds: 2.0 },
+    );
+    let body = tune::render(&cache);
+    let round = tune::parse(&body).expect("fresh render must parse");
+    assert_eq!(round.block_config_for("plus_times", "float32", 1).map(|c| c.nr), Some(16));
+
+    // Same document stamped with a future schema version: rejected whole.
+    let old = format!("\"version\": {}", tune::CACHE_VERSION);
+    let new = format!("\"version\": {}", tune::CACHE_VERSION + 1);
+    let stale = body.replace(&old, &new);
+    assert_ne!(stale, body, "version stamp not found in rendered cache");
+    assert!(tune::parse(&stale).is_none(), "accepted wrong-version cache");
+}
+
+#[test]
+fn implausible_tuned_configs_never_reach_the_kernel() {
+    let mut cache = tune::TuneCache::for_this_machine();
+    for (i, cfg) in [
+        tune::TunedConfig { mr: 0, nr: 8, mc: 64, kc: 128, nc: 256, threads: 1, gmadds: 1.0 },
+        tune::TunedConfig { mr: 8, nr: 0, mc: 64, kc: 128, nc: 256, threads: 1, gmadds: 1.0 },
+        tune::TunedConfig { mr: 1 << 20, nr: 8, mc: 64, kc: 128, nc: 256, threads: 1, gmadds: 1.0 },
+        tune::TunedConfig { mr: 8, nr: 8, mc: 0, kc: 128, nc: 256, threads: 1, gmadds: 1.0 },
+        tune::TunedConfig { mr: 8, nr: 8, mc: 64, kc: 128, nc: 256, threads: 0, gmadds: 1.0 },
+        tune::TunedConfig { mr: 8, nr: 8, mc: 64, kc: 128, nc: 256, threads: 1, gmadds: f64::NAN },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        // One poisoned entry per distinct dtype key so lookups can't
+        // shadow each other.
+        cache.upsert("plus_times", &format!("dt{i}"), cfg);
+    }
+    for i in 0..6 {
+        assert_eq!(
+            cache.block_config_for("plus_times", &format!("dt{i}"), 1),
+            None,
+            "implausible entry dt{i} leaked through the lookup gate"
+        );
+    }
+    // A survivor round-trips through the file layer untouched by its
+    // poisoned neighbors.
+    let good = tune::TunedConfig { mr: 4, nr: 8, mc: 32, kc: 64, nc: 128, threads: 2, gmadds: 3.5 };
+    cache.upsert("min_plus", "float32", good);
+    let dir = std::env::temp_dir()
+        .join(format!("fcamm-tune-prop-{}", std::process::id()))
+        .join("nested");
+    let path = dir.join("tune.json");
+    tune::store_file(&path, &cache).expect("store_file creates parents");
+    let loaded = tune::load_file(&path).expect("stored cache must load");
+    let got = loaded.block_config_for("min_plus", "float32", 2).expect("plausible entry survives");
+    assert_eq!((got.mr, got.nr, got.mc, got.kc, got.nc), (4, 8, 32, 64, 128));
+    // `block_config()` leaves the band count on auto: the tuned thread
+    // count keys the cache, but the live band policy still decides.
+    assert_eq!(got.threads, None);
+    let _ = std::fs::remove_dir_all(dir.parent().unwrap());
 }

@@ -59,6 +59,13 @@ echo "== cargo test -q --test fault_tolerance =="
 # shutdown — run by name for the same reason.
 cargo test -q --test fault_tolerance
 
+echo "== cargo test -q --test kernel_property =="
+# The microkernel bit-exactness gate: random (mr, nr, mc, kc, nc,
+# threads) config sweeps across all five (semiring, dtype)
+# instantiations vs the seed oracle, plus tune-cache corruption
+# fallback — run by name for the same reason.
+cargo test -q --test kernel_property
+
 echo "== cargo test -q --test net_transport =="
 # The socket-transport gate: frame-codec totality under fuzzed
 # corruption, loopback bit-identity, tracked wire bytes pinned to the
@@ -77,7 +84,9 @@ echo "== validate BENCH_hotpath.json =="
 # a bench that silently stopped writing them would otherwise pass
 # unnoticed.
 required_metrics="kernel512_speedup kernel512_naive_gflops kernel512_blocked_gflops \
-native_threads cluster_f32_512_gflops cluster_shards cluster_devices \
+native_threads tuned_vs_scalar_speedup tuned_f32_gflops tuned_f64_gflops \
+tuned_i32_gflops tuned_u32_gflops tuned_minplus_gflops tuned_mr tuned_nr tuned_mc \
+tuned_kc tuned_nc simd_available cluster_f32_512_gflops cluster_shards cluster_devices \
 panel_cache_hit_ratio shared_b_batch_speedup recovery_overhead_ratio shed_fraction \
 net_wire_bytes net_recovery_overhead_ratio net_reconnects"
 if [ ! -f BENCH_hotpath.json ]; then
@@ -97,6 +106,25 @@ if not data.get("entries"):
     sys.exit("BENCH_hotpath.json has no bench entries")
 if metrics["cluster_shards"] < 1 or metrics["cluster_devices"] < 1:
     sys.exit("BENCH_hotpath.json cluster fields are degenerate")
+# Vectorized-kernel gate: with SIMD lanes available the blocked and
+# tuned paths must clear 6x over the seed's scalar triple loop; scalar
+# fallback builds keep the pre-vectorization 4x bar.
+gate = 6.0 if metrics.get("simd_available", 0) >= 1 else 4.0
+if metrics["kernel512_speedup"] < gate:
+    sys.exit("BENCH_hotpath.json kernel512_speedup %.2fx below the %.1fx gate"
+             % (metrics["kernel512_speedup"], gate))
+if metrics["tuned_vs_scalar_speedup"] < gate:
+    sys.exit("BENCH_hotpath.json tuned_vs_scalar_speedup %.2fx below the %.1fx gate"
+             % (metrics["tuned_vs_scalar_speedup"], gate))
+if not (metrics["tuned_mr"] >= 1 and metrics["tuned_nr"] >= 1
+        and metrics["tuned_mc"] >= 1 and metrics["tuned_kc"] >= 1
+        and metrics["tuned_nc"] >= 1):
+    sys.exit("BENCH_hotpath.json tuned blocking fields are degenerate")
+for name in ("tuned_f32_gflops", "tuned_f64_gflops", "tuned_i32_gflops",
+             "tuned_u32_gflops", "tuned_minplus_gflops"):
+    if metrics[name] <= 0:
+        sys.exit(f"BENCH_hotpath.json {name} degenerate (tuner must report a "
+                 "positive verified throughput)")
 if not (0.0 <= metrics["panel_cache_hit_ratio"] <= 1.0):
     sys.exit("BENCH_hotpath.json panel_cache_hit_ratio out of [0, 1]")
 if metrics["shared_b_batch_speedup"] < 1.5:
@@ -113,11 +141,14 @@ if metrics["net_wire_bytes"] <= 0:
 if metrics["net_recovery_overhead_ratio"] > 1.5:
     sys.exit("BENCH_hotpath.json net_recovery_overhead_ratio above the 1.5x "
              "gate (a dropped connection must stay cheap to recover over TCP)")
-print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx, cluster %.0f shards on "
+print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx (gate %.1fx, tuned %.2fx, "
+      "blocking %dx%d mc %d kc %d nc %d), cluster %.0f shards on "
       "%.0f devices at %.2f GF/s, shared-B batch %.2fx (hit ratio %.2f), "
       "recovery overhead %.3fx, shed fraction %.2f, net wire %.0f bytes "
       "(net recovery %.3fx, %.0f reconnects), over %d entries"
-      % (metrics["kernel512_speedup"], metrics["cluster_shards"],
+      % (metrics["kernel512_speedup"], gate, metrics["tuned_vs_scalar_speedup"],
+         metrics["tuned_mr"], metrics["tuned_nr"], metrics["tuned_mc"],
+         metrics["tuned_kc"], metrics["tuned_nc"], metrics["cluster_shards"],
          metrics["cluster_devices"], metrics["cluster_f32_512_gflops"],
          metrics["shared_b_batch_speedup"], metrics["panel_cache_hit_ratio"],
          metrics["recovery_overhead_ratio"], metrics["shed_fraction"],
