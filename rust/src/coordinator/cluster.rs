@@ -63,7 +63,7 @@ use crate::schedule::{
 use crate::sim::grid2d::CacheCounters;
 
 use super::health::{DeviceHealth, HealthPolicy, HealthTracker, SimClock};
-use super::net::{NetConfig, TcpBackend, WireStats};
+use super::net::{NetConfig, RegistrationServer, TcpBackend, WireStats};
 use super::panel_cache::{PanelCache, PanelKey};
 use super::service::GemmJob;
 
@@ -98,6 +98,12 @@ pub struct ShardOperands {
     pub a_id: Option<u64>,
     /// Stable operand id for cross-request sub-panel caching of B.
     pub b_id: Option<u64>,
+    /// Content epochs the ids were snapshotted at
+    /// (`SharedOperand::epoch`; 0 for anonymous operands). Every cache
+    /// layer below validates `(id, epoch)` so an updated operand misses
+    /// instead of hitting stale panels.
+    pub a_epoch: u64,
+    pub b_epoch: u64,
 }
 
 impl ShardOperands {
@@ -142,8 +148,9 @@ pub trait ShardBackend: Send + 'static {
     ) -> Result<ShardOutput>;
 
     /// Sub-panel cache counters for this device (backends without a
-    /// cache report zeros).
-    fn panel_counters(&self) -> CacheCounters {
+    /// cache report zeros). Takes `&mut self` so network-attached
+    /// backends can query their remote worker's cache over the link.
+    fn panel_counters(&mut self) -> CacheCounters {
         CacheCounters::default()
     }
 
@@ -196,11 +203,13 @@ impl RuntimeBackend {
 /// Returns the panels and the elements shipped (the packed set for a
 /// fresh pack, **zero** for a cache hit — which also skips the block
 /// extraction copy entirely).
+#[allow(clippy::too_many_arguments)]
 fn shard_panels(
     panels: &mut PanelCache,
     exec: &TiledExecutor,
     side: PanelSide,
     operand_id: Option<u64>,
+    epoch: u64,
     tensor: &HostTensor,
     stride: usize,
     region: (usize, usize, usize, usize),
@@ -232,7 +241,7 @@ fn shard_panels(
                 operand_dims: (tensor.len() / stride.max(1), stride),
                 region,
             };
-            let (p, src) = panels.get_or_pack(key, pack)?;
+            let (p, src) = panels.get_or_pack_epoch(key, epoch, pack)?;
             let shipped = if src == PanelSource::Fresh { p.elements() } else { 0 };
             Ok((p, shipped))
         }
@@ -289,6 +298,7 @@ impl ShardBackend for RuntimeBackend {
             &exec,
             PanelSide::A,
             ops.a_id,
+            ops.a_epoch,
             &ops.a,
             ops.a_stride,
             (shard.row0, shard.rows, shard.k0, shard.kdepth),
@@ -298,6 +308,7 @@ impl ShardBackend for RuntimeBackend {
             &exec,
             PanelSide::B,
             ops.b_id,
+            ops.b_epoch,
             &ops.b,
             ops.b_stride,
             (shard.k0, shard.kdepth, shard.col0, shard.cols),
@@ -310,7 +321,7 @@ impl ShardBackend for RuntimeBackend {
         })
     }
 
-    fn panel_counters(&self) -> CacheCounters {
+    fn panel_counters(&mut self) -> CacheCounters {
         self.panels.counters()
     }
 }
@@ -631,6 +642,39 @@ impl ClusterService {
         Self::start_with_backends(backends)
     }
 
+    /// Connect a coordinator to a fleet of **dial-in** workers: claim
+    /// the first `n` workers registered at `registry` (waiting up to
+    /// `deadline` for stragglers), adopting each already-handshaken
+    /// connection as a [`TcpBackend`] link with its advertised tile
+    /// inventory pre-filled. Device ids are positional in registration
+    /// order. When a link later drops, its reconnect path waits on the
+    /// registry's returning queue for the *same worker id* — so a
+    /// bounced worker resumes its device slot with its panel cache
+    /// warm, and a worker that never returns feeds the usual
+    /// retry/re-dispatch/health machinery.
+    pub fn accept_workers(
+        registry: &RegistrationServer,
+        n: usize,
+        deadline: Duration,
+        config: NetConfig,
+    ) -> Result<ClusterService> {
+        if n == 0 {
+            bail!("cluster needs at least one dial-in worker");
+        }
+        let regs = registry.wait_workers(n, deadline)?;
+        let shared = registry.shared();
+        let mut backends: Vec<Box<dyn ShardBackend>> = Vec::with_capacity(n);
+        for (device, reg) in regs.into_iter().enumerate() {
+            let worker_id = reg.worker_id;
+            let backend = TcpBackend::accept(device, reg, shared.clone(), config.clone())
+                .with_context(|| {
+                    format!("adopting dial-in worker {worker_id:#x} as device {device}")
+                })?;
+            backends.push(Box::new(backend));
+        }
+        Self::start_with_backends(backends)
+    }
+
     fn assemble(devices: Vec<DeviceHandle>) -> ClusterService {
         let n = devices.len();
         ClusterService {
@@ -907,6 +951,8 @@ impl ClusterService {
             b_stride: 2,
             a_id: None,
             b_id: None,
+            a_epoch: 0,
+            b_epoch: 0,
         };
         let (reply_tx, reply_rx) = mpsc::channel();
         self.send(
@@ -963,6 +1009,8 @@ impl ClusterService {
             b_stride: n,
             a_id: job.a_id,
             b_id: job.b_id,
+            a_epoch: job.a_epoch,
+            b_epoch: job.b_epoch,
         };
         let (reply_tx, reply_rx) = mpsc::channel::<(usize, Result<ShardOutput>)>();
 

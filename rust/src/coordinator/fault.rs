@@ -303,7 +303,7 @@ impl<B: ShardBackend> ShardBackend for FaultyBackend<B> {
         }
     }
 
-    fn panel_counters(&self) -> CacheCounters {
+    fn panel_counters(&mut self) -> CacheCounters {
         self.inner.panel_counters()
     }
 

@@ -63,10 +63,11 @@ pub use fault::{
 };
 pub use health::{DeviceHealth, DeviceState, HealthPolicy, HealthTracker, SimClock};
 pub use net::{
-    loopback_available, FaultProxy, NetConfig, TcpBackend, WireCounters, WireStats, WorkerServer,
+    loopback_available, FaultProxy, NetConfig, Registration, RegistrationServer, TcpBackend,
+    WireCounters, WireStats, WorkerServer,
 };
 pub use instance::KernelInstance;
-pub use panel_cache::{PanelCache, PanelKey};
+pub use panel_cache::{CacheWeight, PanelCache, PanelKey};
 pub use service::{
     BatchSubmission, GemmJob, GemmRequest, GemmResponse, GemmService, ServiceConfig,
     SharedOperand, SubmitError,

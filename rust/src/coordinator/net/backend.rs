@@ -10,6 +10,26 @@
 //! [`TilePlan::transfer_elements`] *by construction* — the Eq. 6 model
 //! is not approximated on the wire, it is enacted there.
 //!
+//! Identified operands (reuse mode, `ops.a_id`/`b_id` set) negotiate
+//! before shipping: the link announces the operand's [`PanelKey`] +
+//! content epoch, and the worker answers `PanelHave` (its session
+//! cache is warm — every slab re-installs via control-only `PanelRef`
+//! frames, **zero** operand payload bytes) or `PanelNeed` (each
+//! distinct slab ships exactly once this job, repeats go by ref).
+//! The accounting becomes [`shard_transfer_cached`]'s three-way model
+//! — anonymous / fresh / cached per leg — and stays pinned:
+//! ledger == `ShardPlan::per_device_transfer_cached` ==
+//! `sim::wire::wire_traffic_cached`.
+//!
+//! Links come in two flavors: classic dial-out ([`TcpBackend::connect`]
+//! — the coordinator knows the worker's address) and dial-in adoption
+//! ([`TcpBackend::accept`] — the worker registered itself at a
+//! [`RegistrationServer`] and the link waits on the registry's
+//! returning queue, keyed by worker id, when it needs to reconnect).
+//!
+//! [`shard_transfer_cached`]: crate::schedule::shard::shard_transfer_cached
+//! [`RegistrationServer`]: super::registry::RegistrationServer
+//!
 //! Robustness: the link heartbeats before reuse after idling, every
 //! read sits under a liveness deadline, a failed stream poisons the
 //! connection (dropped and re-dialed with the cluster's exponential
@@ -18,7 +38,7 @@
 //! retry/re-dispatch machinery, whose coordinate-keyed ascending-dk
 //! fold makes recovery bit-identical.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -32,12 +52,15 @@ use crate::runtime::kernel::{
 use crate::runtime::{Element, HostTensor};
 use crate::schedule::executor::{pack_a_slab, pack_b_slab};
 use crate::schedule::shard::Shard;
-use crate::schedule::{ExecMode, TilePlan};
+use crate::schedule::{ExecMode, PanelSide, TilePlan};
+use crate::sim::grid2d::CacheCounters;
 
 use super::super::cluster::{RetryPolicy, ShardBackend, ShardOperands, ShardOutput};
 use super::super::health::SimClock;
+use super::super::panel_cache::PanelKey;
 use super::channel::{TrackChannel, WireCounters, WireStats};
 use super::frame::{JobHeader, Message, PanelRole, PROTOCOL_VERSION};
+use super::registry::{Registration, RegistryShared};
 
 /// Transport robustness knobs for one device link.
 #[derive(Debug, Clone)]
@@ -70,10 +93,35 @@ impl Default for NetConfig {
     }
 }
 
+/// Where this link's connections come from.
+#[derive(Clone)]
+enum LinkSource {
+    /// Classic dial-out: the coordinator connects to a known address.
+    Dial(SocketAddr),
+    /// Dial-in adoption: connections arrive via the registration
+    /// endpoint; reconnects await the worker's re-registration on the
+    /// registry's returning queue for this id.
+    Registry { shared: Arc<RegistryShared>, worker_id: u64 },
+}
+
+/// One announced operand leg's negotiated state for the current job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WireLeg {
+    /// Not announced (no stable id, or round-trip mode): slabs ship on
+    /// every residency change, exactly the pre-cache protocol.
+    Anonymous,
+    /// Announced, worker answered `PanelNeed`: each distinct slab
+    /// ships once this job, repeats re-install by `PanelRef`.
+    Fresh,
+    /// Announced, worker answered `PanelHave`: every slab re-installs
+    /// by `PanelRef` — zero operand payload bytes.
+    Cached,
+}
+
 /// One coordinator→worker device link implementing [`ShardBackend`].
 pub struct TcpBackend {
     device: usize,
-    addr: SocketAddr,
+    source: LinkSource,
     config: NetConfig,
     conn: Option<TrackChannel<TcpStream>>,
     counters: Arc<WireCounters>,
@@ -87,9 +135,37 @@ impl TcpBackend {
     /// Dial a worker eagerly (fail fast on an unreachable fleet) and
     /// wrap the link as device `device`.
     pub fn connect(device: usize, addr: SocketAddr, config: NetConfig) -> Result<TcpBackend> {
-        let mut backend = TcpBackend {
+        let mut backend = TcpBackend::empty(device, LinkSource::Dial(addr), config);
+        backend.ensure_connected()?;
+        Ok(backend)
+    }
+
+    /// Adopt a dial-in worker's registered connection as device
+    /// `device`. The registration handshake already happened at the
+    /// [`super::registry::RegistrationServer`]; the advertised tile
+    /// inventory pre-fills the tile cache, so no `TileQuery` round
+    /// trips are needed for advertised instantiations. Reconnects wait
+    /// for the worker to re-register under the same id.
+    pub(crate) fn accept(
+        device: usize,
+        reg: Registration,
+        shared: Arc<RegistryShared>,
+        config: NetConfig,
+    ) -> Result<TcpBackend> {
+        let worker_id = reg.worker_id;
+        let mut backend =
+            TcpBackend::empty(device, LinkSource::Registry { shared, worker_id }, config);
+        let chan = backend.adopt(reg)?;
+        backend.conn = Some(chan);
+        backend.ever_connected = true;
+        backend.last_used = Instant::now();
+        Ok(backend)
+    }
+
+    fn empty(device: usize, source: LinkSource, config: NetConfig) -> TcpBackend {
+        TcpBackend {
             device,
-            addr,
+            source,
             config,
             conn: None,
             counters: WireCounters::new(),
@@ -97,9 +173,15 @@ impl TcpBackend {
             last_used: Instant::now(),
             ever_connected: false,
             tiles: HashMap::new(),
-        };
-        backend.ensure_connected()?;
-        Ok(backend)
+        }
+    }
+
+    /// Human-readable peer name for error contexts.
+    fn peer(&self) -> String {
+        match &self.source {
+            LinkSource::Dial(addr) => addr.to_string(),
+            LinkSource::Registry { worker_id, .. } => format!("dial-in worker {worker_id:#x}"),
+        }
     }
 
     /// This link's transport ledger (monotonic across reconnects).
@@ -127,9 +209,10 @@ impl TcpBackend {
             // the re-dial path.
             self.conn = None;
         }
+        let source = self.source.clone();
         let mut dial_failures = 0u32;
         loop {
-            match self.dial() {
+            match self.dial_source(&source) {
                 Ok(chan) => {
                     if self.ever_connected {
                         self.counters.record_reconnect();
@@ -145,7 +228,8 @@ impl TcpBackend {
                         return Err(e).with_context(|| {
                             format!(
                                 "device {}: worker {} unreachable after {dial_failures} dial attempt(s)",
-                                self.device, self.addr
+                                self.device,
+                                self.peer()
                             )
                         });
                     }
@@ -155,8 +239,28 @@ impl TcpBackend {
         }
     }
 
-    fn dial(&self) -> Result<TrackChannel<TcpStream>> {
-        let stream = TcpStream::connect_timeout(&self.addr, self.config.connect_timeout)?;
+    /// Produce one fresh connection from this link's source: dial the
+    /// known address, or wait (bounded by the connect timeout) for the
+    /// worker's re-registration to land on the returning queue.
+    fn dial_source(&mut self, source: &LinkSource) -> Result<TrackChannel<TcpStream>> {
+        match source {
+            LinkSource::Dial(addr) => self.dial(*addr),
+            LinkSource::Registry { shared, worker_id } => {
+                let reg = shared
+                    .take_reconnect(*worker_id, self.config.connect_timeout)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "dial-in worker {worker_id:#x} has not re-registered within {:?}",
+                            self.config.connect_timeout
+                        )
+                    })?;
+                self.adopt(reg)
+            }
+        }
+    }
+
+    fn dial(&self, addr: SocketAddr) -> Result<TrackChannel<TcpStream>> {
+        let stream = TcpStream::connect_timeout(&addr, self.config.connect_timeout)?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(self.config.liveness_deadline))?;
         let mut chan = TrackChannel::new(stream, self.counters.clone());
@@ -172,6 +276,21 @@ impl TcpBackend {
         }
         chan.send(&Message::Welcome { proto: PROTOCOL_VERSION })?;
         Ok(chan)
+    }
+
+    /// Wrap an already-handshaken registered connection (the registry
+    /// spoke Register/Welcome) and absorb its advertised tile
+    /// inventory.
+    fn adopt(&mut self, reg: Registration) -> Result<TrackChannel<TcpStream>> {
+        reg.stream.set_nodelay(true).ok();
+        reg.stream.set_read_timeout(Some(self.config.liveness_deadline))?;
+        for cap in &reg.tiles {
+            self.tiles.insert(
+                (cap.semiring, cap.dtype),
+                (cap.tile_m as usize, cap.tile_n as usize, cap.tile_k as usize),
+            );
+        }
+        Ok(TrackChannel::new(reg.stream, self.counters.clone()))
     }
 
     fn ping(&mut self) -> Result<()> {
@@ -239,22 +358,80 @@ impl TcpBackend {
             dks: shard.dks as u32,
         };
         self.conn().send(&Message::Job(header))?;
+        // Identified operands negotiate by full panel key + epoch
+        // (reuse mode only — round-trip re-ships by definition). The
+        // keys mirror the in-process cache's exactly, so a worker warm
+        // from one topology stays warm under the other.
+        let announce_a = match (mode, ops.a_id) {
+            (ExecMode::Reuse, Some(operand)) => Some((
+                PanelKey {
+                    operand,
+                    side: PanelSide::A,
+                    semiring,
+                    dtype: ops.a.dtype_name(),
+                    tile: (tp.tile_m, tp.tile_n, tp.tile_k),
+                    operand_dims: (ops.a.len() / ops.a_stride.max(1), ops.a_stride),
+                    region: (shard.row0, shard.rows, shard.k0, shard.kdepth),
+                },
+                ops.a_epoch,
+            )),
+            _ => None,
+        };
+        let announce_b = match (mode, ops.b_id) {
+            (ExecMode::Reuse, Some(operand)) => Some((
+                PanelKey {
+                    operand,
+                    side: PanelSide::B,
+                    semiring,
+                    dtype: ops.b.dtype_name(),
+                    tile: (tp.tile_m, tp.tile_n, tp.tile_k),
+                    operand_dims: (ops.b.len() / ops.b_stride.max(1), ops.b_stride),
+                    region: (shard.k0, shard.kdepth, shard.col0, shard.cols),
+                },
+                ops.b_epoch,
+            )),
+            _ => None,
+        };
         use HostTensor as H;
         let out = match (semiring, &a_block, &b_block) {
-            (Semiring::PlusTimes, H::F32(_), H::F32(_)) => {
-                self.stream_typed(PlusTimesF32, tp, mode, &a_block, &b_block)
-            }
-            (Semiring::PlusTimes, H::F64(_), H::F64(_)) => {
-                self.stream_typed(PlusTimesF64, tp, mode, &a_block, &b_block)
-            }
-            (Semiring::PlusTimes, H::I32(_), H::I32(_)) => {
-                self.stream_typed(PlusTimesI32Wrap, tp, mode, &a_block, &b_block)
-            }
-            (Semiring::PlusTimes, H::U32(_), H::U32(_)) => {
-                self.stream_typed(PlusTimesU32Wrap, tp, mode, &a_block, &b_block)
-            }
+            (Semiring::PlusTimes, H::F32(_), H::F32(_)) => self.stream_typed(
+                PlusTimesF32,
+                tp,
+                mode,
+                &a_block,
+                &b_block,
+                announce_a,
+                announce_b,
+            ),
+            (Semiring::PlusTimes, H::F64(_), H::F64(_)) => self.stream_typed(
+                PlusTimesF64,
+                tp,
+                mode,
+                &a_block,
+                &b_block,
+                announce_a,
+                announce_b,
+            ),
+            (Semiring::PlusTimes, H::I32(_), H::I32(_)) => self.stream_typed(
+                PlusTimesI32Wrap,
+                tp,
+                mode,
+                &a_block,
+                &b_block,
+                announce_a,
+                announce_b,
+            ),
+            (Semiring::PlusTimes, H::U32(_), H::U32(_)) => self.stream_typed(
+                PlusTimesU32Wrap,
+                tp,
+                mode,
+                &a_block,
+                &b_block,
+                announce_a,
+                announce_b,
+            ),
             (Semiring::MinPlus, H::F32(_), H::F32(_)) => {
-                self.stream_typed(MinPlusF32, tp, mode, &a_block, &b_block)
+                self.stream_typed(MinPlusF32, tp, mode, &a_block, &b_block, announce_a, announce_b)
             }
             (semiring, a, b) => bail!(
                 "no wire instantiation for {semiring} over A {} / B {}",
@@ -266,10 +443,29 @@ impl TcpBackend {
         Ok(out)
     }
 
+    /// Run one operand's announce round trip; `None` stays anonymous.
+    fn announce_leg(&mut self, announce: Option<(PanelKey, u64)>) -> Result<WireLeg> {
+        let (key, epoch) = match announce {
+            None => return Ok(WireLeg::Anonymous),
+            Some(pair) => pair,
+        };
+        let side = key.side;
+        self.conn().send(&Message::PanelAnnounce { key, epoch })?;
+        match self.recv_reply("a PanelHave/PanelNeed")? {
+            Message::PanelHave { side: got } if got == side => Ok(WireLeg::Cached),
+            Message::PanelNeed { side: got } if got == side => Ok(WireLeg::Fresh),
+            Message::ShardErr { message } => {
+                bail!("worker refused the {side:?} panel announce: {message}")
+            }
+            other => bail!("expected PanelHave/PanelNeed, got {}", other.kind().name()),
+        }
+    }
+
     /// Drive one shard's step stream, strictly request-response: panels
     /// and the step marker go out, then the reply is awaited before the
     /// next step — no unbounded pipelining, so a fault surfaces at the
     /// step that hit it and neither side deadlocks on full buffers.
+    #[allow(clippy::too_many_arguments)]
     fn stream_typed<S>(
         &mut self,
         sr: S,
@@ -277,6 +473,8 @@ impl TcpBackend {
         mode: ExecMode,
         a_block: &HostTensor,
         b_block: &HostTensor,
+        announce_a: Option<(PanelKey, u64)>,
+        announce_b: Option<(PanelKey, u64)>,
     ) -> Result<ShardOutput>
     where
         S: SemiringOps,
@@ -293,28 +491,74 @@ impl TcpBackend {
 
         match mode {
             ExecMode::Reuse => {
+                let a_leg = self.announce_leg(announce_a)?;
+                let b_leg = self.announce_leg(announce_b)?;
+                // Distinct slabs already shipped this job on a Fresh
+                // leg (repeats go by ref — within-job dedup).
+                let mut sent_a: HashSet<(u32, u32)> = HashSet::new();
+                let mut sent_b: HashSet<(u32, u32)> = HashSet::new();
                 // The ⊕-identity template crosses the wire exactly once
                 // per shard — the `tm·tn` the in-process executor
                 // charges once per run really is the wire cost here.
                 self.conn().send(&Message::Panel {
                     role: PanelRole::CTemplate,
+                    outer: 0,
+                    ks: 0,
                     data: S::Elem::wrap(vec![pad; tm * tn]),
                 })?;
                 transfer += (tm * tn) as u64;
                 for (i, step) in tp.steps.iter().enumerate() {
                     if !step.reuse_a {
-                        let mut buf = vec![pad; tm * tk];
-                        pack_a_slab(pad, &mut buf, a, step, sk, tm, tk);
-                        self.conn()
-                            .send(&Message::Panel { role: PanelRole::A, data: S::Elem::wrap(buf) })?;
-                        transfer += (tm * tk) as u64;
+                        let slab = (step.ti as u32, step.ks as u32);
+                        let ship = match a_leg {
+                            WireLeg::Anonymous => true,
+                            WireLeg::Fresh => sent_a.insert(slab),
+                            WireLeg::Cached => false,
+                        };
+                        if ship {
+                            let mut buf = vec![pad; tm * tk];
+                            pack_a_slab(pad, &mut buf, a, step, sk, tm, tk);
+                            self.conn().send(&Message::Panel {
+                                role: PanelRole::A,
+                                outer: slab.0,
+                                ks: slab.1,
+                                data: S::Elem::wrap(buf),
+                            })?;
+                            transfer += (tm * tk) as u64;
+                        } else {
+                            // Control frame: zero payload elements in
+                            // the ledger, zero in the model.
+                            self.conn().send(&Message::PanelRef {
+                                role: PanelRole::A,
+                                outer: slab.0,
+                                ks: slab.1,
+                            })?;
+                        }
                     }
                     if !step.reuse_b {
-                        let mut buf = vec![pad; tk * tn];
-                        pack_b_slab(pad, &mut buf, b, step, sn, tk, tn);
-                        self.conn()
-                            .send(&Message::Panel { role: PanelRole::B, data: S::Elem::wrap(buf) })?;
-                        transfer += (tk * tn) as u64;
+                        let slab = (step.tj as u32, step.ks as u32);
+                        let ship = match b_leg {
+                            WireLeg::Anonymous => true,
+                            WireLeg::Fresh => sent_b.insert(slab),
+                            WireLeg::Cached => false,
+                        };
+                        if ship {
+                            let mut buf = vec![pad; tk * tn];
+                            pack_b_slab(pad, &mut buf, b, step, sn, tk, tn);
+                            self.conn().send(&Message::Panel {
+                                role: PanelRole::B,
+                                outer: slab.0,
+                                ks: slab.1,
+                                data: S::Elem::wrap(buf),
+                            })?;
+                            transfer += (tk * tn) as u64;
+                        } else {
+                            self.conn().send(&Message::PanelRef {
+                                role: PanelRole::B,
+                                outer: slab.0,
+                                ks: slab.1,
+                            })?;
+                        }
                     }
                     self.conn().send(&Message::Step { index: i as u32 })?;
                     let tile = self.recv_ctile(i as u32)?;
@@ -348,15 +592,28 @@ impl TcpBackend {
                 for (i, step) in tp.steps.iter().enumerate() {
                     let mut a_buf = vec![pad; tm * tk];
                     pack_a_slab(pad, &mut a_buf, a, step, sk, tm, tk);
-                    self.conn()
-                        .send(&Message::Panel { role: PanelRole::A, data: S::Elem::wrap(a_buf) })?;
+                    self.conn().send(&Message::Panel {
+                        role: PanelRole::A,
+                        outer: step.ti as u32,
+                        ks: step.ks as u32,
+                        data: S::Elem::wrap(a_buf),
+                    })?;
                     let mut b_buf = vec![pad; tk * tn];
                     pack_b_slab(pad, &mut b_buf, b, step, sn, tk, tn);
-                    self.conn()
-                        .send(&Message::Panel { role: PanelRole::B, data: S::Elem::wrap(b_buf) })?;
+                    self.conn().send(&Message::Panel {
+                        role: PanelRole::B,
+                        outer: step.tj as u32,
+                        ks: step.ks as u32,
+                        data: S::Elem::wrap(b_buf),
+                    })?;
                     let tile = step.tj * tiles_m + step.ti;
                     let c_in = acc[tile].take().unwrap_or_else(|| S::Elem::wrap(vec![pad; tm * tn]));
-                    self.conn().send(&Message::Panel { role: PanelRole::CIn, data: c_in })?;
+                    self.conn().send(&Message::Panel {
+                        role: PanelRole::CIn,
+                        outer: 0,
+                        ks: 0,
+                        data: c_in,
+                    })?;
                     self.conn().send(&Message::Step { index: i as u32 })?;
                     let out = self.recv_ctile(i as u32)?;
                     if out.len() != tm * tn {
@@ -399,29 +656,44 @@ impl ShardBackend for TcpBackend {
         if let Some(&tile) = self.tiles.get(&(semiring, dtype)) {
             return Ok(tile);
         }
-        let result = (|| -> Result<(usize, usize, usize)> {
+        // A typed `ShardErr` refusal is a *healthy* reply: the worker
+        // completed a clean request-response cycle and simply lacks the
+        // capability. Only wire/framing failures may poison the link —
+        // poisoning on refusal forced a gratuitous reconnect on the
+        // next use of a perfectly good connection.
+        enum TileReply {
+            Tile((usize, usize, usize)),
+            Refused(String),
+        }
+        let result = (|| -> Result<TileReply> {
             self.ensure_connected()?;
             self.conn().send(&Message::TileQuery { semiring, dtype })?;
             match self.recv_reply("a TileInfo")? {
                 Message::TileInfo { tile_m, tile_n, tile_k } => {
-                    Ok((tile_m as usize, tile_n as usize, tile_k as usize))
+                    Ok(TileReply::Tile((tile_m as usize, tile_n as usize, tile_k as usize)))
                 }
-                Message::ShardErr { message } => {
-                    bail!("worker has no {semiring}/{dtype} executor: {message}")
-                }
+                Message::ShardErr { message } => Ok(TileReply::Refused(message)),
                 other => bail!("expected TileInfo, got {}", other.kind().name()),
             }
         })();
         match result {
-            Ok(tile) => {
+            Ok(TileReply::Tile(tile)) => {
                 self.tiles.insert((semiring, dtype), tile);
                 self.last_used = Instant::now();
                 Ok(tile)
             }
+            Ok(TileReply::Refused(message)) => {
+                self.last_used = Instant::now();
+                bail!(
+                    "device {}: worker {} has no {semiring}/{dtype} executor: {message}",
+                    self.device,
+                    self.peer()
+                )
+            }
             Err(e) => {
                 self.conn = None;
                 Err(e).with_context(|| {
-                    format!("device {}: tile query over {}", self.device, self.addr)
+                    format!("device {}: tile query over {}", self.device, self.peer())
                 })
             }
         }
@@ -441,11 +713,36 @@ impl ShardBackend for TcpBackend {
             // a reconnect) and the worker resets on the fresh session.
             self.conn = None;
         }
-        result.with_context(|| format!("device {}: streaming over {}", self.device, self.addr))
+        result.with_context(|| format!("device {}: streaming over {}", self.device, self.peer()))
     }
 
     fn wire_stats(&self) -> Option<WireStats> {
         Some(self.counters.snapshot())
+    }
+
+    fn panel_counters(&mut self) -> CacheCounters {
+        // Counters are observability, not correctness: an unreachable
+        // worker reports zeros rather than failing the caller, and the
+        // poisoned link re-dials on its next real use.
+        let result = (|| -> Result<CacheCounters> {
+            self.ensure_connected()?;
+            self.conn().send(&Message::CacheQuery)?;
+            match self.recv_reply("a CacheInfo")? {
+                Message::CacheInfo { counters } => Ok(counters),
+                Message::ShardErr { message } => bail!("worker refused CacheQuery: {message}"),
+                other => bail!("expected CacheInfo, got {}", other.kind().name()),
+            }
+        })();
+        match result {
+            Ok(counters) => {
+                self.last_used = Instant::now();
+                counters
+            }
+            Err(_) => {
+                self.conn = None;
+                CacheCounters::default()
+            }
+        }
     }
 }
 

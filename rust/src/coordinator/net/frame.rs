@@ -3,11 +3,23 @@
 //! One frame = a 12-byte header (magic, kind, dtype, payload length,
 //! CRC-32 of the payload) + a little-endian payload. The vocabulary is
 //! exactly what the step-streaming shard protocol needs: a registration
-//! handshake (`Hello`/`Welcome`), liveness probes (`Ping`/`Pong`), tile
-//! discovery (`TileQuery`/`TileInfo`), and the per-shard stream
-//! (`Job`, `Panel`, `Step`, `CTile`, `ShardErr`). Panels carry raw
-//! elements, so a link's payload-element count is directly comparable
-//! to the Eq. 6 transfer model — that is the pinning target.
+//! handshake (`Hello`/`Welcome` for dial-out links, `Register` carrying
+//! a worker id + tile inventory for dial-in ones), liveness probes
+//! (`Ping`/`Pong`), tile discovery (`TileQuery`/`TileInfo`), the
+//! per-shard stream (`Job`, `Panel`, `Step`, `CTile`, `ShardErr`), and
+//! the operand-identity negotiation that makes worker-resident panel
+//! caching possible: the coordinator announces an operand by its full
+//! [`PanelKey`] + content epoch (`PanelAnnounce`), the worker answers
+//! `PanelHave`/`PanelNeed`, payload `Panel` frames ship only on `Need`
+//! (addressed by slab coordinates so they are cacheable), `PanelRef`
+//! re-installs an already-shipped slab for zero payload bytes, and
+//! `CacheQuery`/`CacheInfo` export the worker's hit/miss/eviction
+//! counters for pinning against `sim::grid2d::replay_lru`.
+//!
+//! Panels carry raw elements and every negotiation frame is control
+//! traffic (zero payload elements), so a link's payload-element count
+//! stays directly comparable to the Eq. 6 transfer model — that is the
+//! pinning target, with caching off or on.
 //!
 //! Decoding is total: truncated, corrupt, or lying frames produce a
 //! typed [`DecodeError`], never a panic and never partial state. A
@@ -17,13 +29,17 @@
 use std::fmt;
 use std::io::{self, Read, Write};
 
+use crate::coordinator::panel_cache::PanelKey;
 use crate::datatype::Semiring;
 use crate::runtime::HostTensor;
-use crate::schedule::ExecMode;
+use crate::schedule::{ExecMode, PanelSide};
+use crate::sim::grid2d::CacheCounters;
 
 /// Wire protocol revision; both ends refuse a mismatch at handshake
-/// time rather than misparse each other's frames later.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// time rather than misparse each other's frames later. Revision 2
+/// added slab-addressed panels, the operand-identity negotiation, and
+/// dial-in registration.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Frame header size: magic u16 | kind u8 | dtype u8 | payload_len u32
 /// | payload CRC-32 u32, all little-endian.
@@ -70,6 +86,25 @@ pub enum FrameKind {
     ShardErr = 11,
     /// Close the session cleanly.
     Shutdown = 12,
+    /// Worker → coordinator on a dial-in connection: protocol version,
+    /// stable worker id, and the worker's tile inventory.
+    Register = 13,
+    /// Coordinator → worker: operand identity (full panel key + content
+    /// epoch) ahead of a shard stream.
+    PanelAnnounce = 14,
+    /// Worker → coordinator: announced operand is cache-resident at
+    /// that epoch — do not ship its payload.
+    PanelHave = 15,
+    /// Worker → coordinator: announced operand is not resident — ship
+    /// its slabs.
+    PanelNeed = 16,
+    /// Coordinator → worker: re-install an already-held slab by its
+    /// coordinates (zero payload bytes).
+    PanelRef = 17,
+    /// Ask the worker for its panel-cache counters.
+    CacheQuery = 18,
+    /// Panel-cache counter snapshot, worker → coordinator.
+    CacheInfo = 19,
 }
 
 impl FrameKind {
@@ -87,6 +122,13 @@ impl FrameKind {
             10 => FrameKind::CTile,
             11 => FrameKind::ShardErr,
             12 => FrameKind::Shutdown,
+            13 => FrameKind::Register,
+            14 => FrameKind::PanelAnnounce,
+            15 => FrameKind::PanelHave,
+            16 => FrameKind::PanelNeed,
+            17 => FrameKind::PanelRef,
+            18 => FrameKind::CacheQuery,
+            19 => FrameKind::CacheInfo,
             other => return Err(DecodeError::UnknownKind(other)),
         })
     }
@@ -105,6 +147,13 @@ impl FrameKind {
             FrameKind::CTile => "CTile",
             FrameKind::ShardErr => "ShardErr",
             FrameKind::Shutdown => "Shutdown",
+            FrameKind::Register => "Register",
+            FrameKind::PanelAnnounce => "PanelAnnounce",
+            FrameKind::PanelHave => "PanelHave",
+            FrameKind::PanelNeed => "PanelNeed",
+            FrameKind::PanelRef => "PanelRef",
+            FrameKind::CacheQuery => "CacheQuery",
+            FrameKind::CacheInfo => "CacheInfo",
         }
     }
 }
@@ -144,6 +193,18 @@ impl PanelRole {
     }
 }
 
+/// One executor instantiation a dial-in worker advertises in its
+/// `Register` frame: the coordinator can skip `TileQuery` round trips
+/// for inventoried (algebra, dtype) pairs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileCapability {
+    pub semiring: Semiring,
+    pub dtype: &'static str,
+    pub tile_m: u32,
+    pub tile_n: u32,
+    pub tile_k: u32,
+}
+
 /// The `Job` frame body: everything a worker must pin before any panel
 /// lands — algebra, dtype, execution mode, tile shape, step count, and
 /// the shard coordinates (error context only).
@@ -174,11 +235,23 @@ pub enum Message {
     TileQuery { semiring: Semiring, dtype: &'static str },
     TileInfo { tile_m: u32, tile_n: u32, tile_k: u32 },
     Job(JobHeader),
-    Panel { role: PanelRole, data: HostTensor },
+    /// One packed slab, addressed by its `(outer, ks)` coordinates in
+    /// the shard's slab grid (`outer` = `ti` for A, `tj` for B; both 0
+    /// for the C roles) so the receiver can cache and re-install it.
+    Panel { role: PanelRole, outer: u32, ks: u32, data: HostTensor },
     Step { index: u32 },
     CTile { index: u32, data: HostTensor },
     ShardErr { message: String },
     Shutdown,
+    Register { proto: u32, worker_id: u64, tiles: Vec<TileCapability> },
+    /// Operand identity + content epoch; the key's dtype travels in the
+    /// header dtype byte.
+    PanelAnnounce { key: PanelKey, epoch: u64 },
+    PanelHave { side: PanelSide },
+    PanelNeed { side: PanelSide },
+    PanelRef { role: PanelRole, outer: u32, ks: u32 },
+    CacheQuery,
+    CacheInfo { counters: CacheCounters },
 }
 
 impl Message {
@@ -196,10 +269,21 @@ impl Message {
             Message::CTile { .. } => FrameKind::CTile,
             Message::ShardErr { .. } => FrameKind::ShardErr,
             Message::Shutdown => FrameKind::Shutdown,
+            Message::Register { .. } => FrameKind::Register,
+            Message::PanelAnnounce { .. } => FrameKind::PanelAnnounce,
+            Message::PanelHave { .. } => FrameKind::PanelHave,
+            Message::PanelNeed { .. } => FrameKind::PanelNeed,
+            Message::PanelRef { .. } => FrameKind::PanelRef,
+            Message::CacheQuery => FrameKind::CacheQuery,
+            Message::CacheInfo { .. } => FrameKind::CacheInfo,
         }
     }
 
-    /// Operand elements this message carries (0 for control frames).
+    /// Operand elements this message carries. Only `Panel` and `CTile`
+    /// move elements; everything else — including the whole
+    /// announce/have/need/ref negotiation — is control traffic at 0, so
+    /// a cache hit's zero-operand-byte claim is visible directly in the
+    /// link ledger.
     pub fn payload_elements(&self) -> u64 {
         match self {
             Message::Panel { data, .. } | Message::CTile { data, .. } => data.len() as u64,
@@ -214,6 +298,7 @@ impl Message {
             Message::Panel { data, .. } | Message::CTile { data, .. } => {
                 dtype_code(data.dtype_name())
             }
+            Message::PanelAnnounce { key, .. } => dtype_code(key.dtype),
             _ => 0,
         }
     }
@@ -348,6 +433,21 @@ fn mode_from_code(code: u8) -> Result<ExecMode, DecodeError> {
     })
 }
 
+fn side_code(side: PanelSide) -> u8 {
+    match side {
+        PanelSide::A => 0,
+        PanelSide::B => 1,
+    }
+}
+
+fn side_from_code(code: u8) -> Result<PanelSide, DecodeError> {
+    Ok(match code {
+        0 => PanelSide::A,
+        1 => PanelSide::B,
+        _ => return Err(DecodeError::UnknownCode { field: "panel side", code }),
+    })
+}
+
 fn encode_elements(data: &HostTensor, out: &mut Vec<u8>) {
     match data {
         HostTensor::F32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
@@ -472,8 +572,10 @@ pub fn encode(msg: &Message) -> Vec<u8> {
                 payload.extend_from_slice(&v.to_le_bytes());
             }
         }
-        Message::Panel { role, data } => {
+        Message::Panel { role, outer, ks, data } => {
             payload.push(*role as u8);
+            payload.extend_from_slice(&outer.to_le_bytes());
+            payload.extend_from_slice(&ks.to_le_bytes());
             encode_elements(data, &mut payload);
         }
         Message::Step { index } => payload.extend_from_slice(&index.to_le_bytes()),
@@ -482,7 +584,57 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             encode_elements(data, &mut payload);
         }
         Message::ShardErr { message } => payload.extend_from_slice(message.as_bytes()),
-        Message::Shutdown => {}
+        Message::Shutdown | Message::CacheQuery => {}
+        Message::Register { proto, worker_id, tiles } => {
+            payload.extend_from_slice(&proto.to_le_bytes());
+            payload.extend_from_slice(&worker_id.to_le_bytes());
+            payload.extend_from_slice(&(tiles.len() as u32).to_le_bytes());
+            for t in tiles {
+                payload.push(semiring_code(t.semiring));
+                payload.push(dtype_code(t.dtype));
+                for v in [t.tile_m, t.tile_n, t.tile_k] {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        Message::PanelAnnounce { key, epoch } => {
+            payload.push(side_code(key.side));
+            payload.push(semiring_code(key.semiring));
+            payload.extend_from_slice(&key.operand.to_le_bytes());
+            payload.extend_from_slice(&epoch.to_le_bytes());
+            for v in [key.tile.0, key.tile.1, key.tile.2] {
+                payload.extend_from_slice(&(v as u32).to_le_bytes());
+            }
+            for v in [
+                key.operand_dims.0,
+                key.operand_dims.1,
+                key.region.0,
+                key.region.1,
+                key.region.2,
+                key.region.3,
+            ] {
+                payload.extend_from_slice(&(v as u64).to_le_bytes());
+            }
+        }
+        Message::PanelHave { side } | Message::PanelNeed { side } => {
+            payload.push(side_code(*side));
+        }
+        Message::PanelRef { role, outer, ks } => {
+            payload.push(*role as u8);
+            payload.extend_from_slice(&outer.to_le_bytes());
+            payload.extend_from_slice(&ks.to_le_bytes());
+        }
+        Message::CacheInfo { counters } => {
+            for v in [
+                counters.hits,
+                counters.misses,
+                counters.evictions,
+                counters.resident_bytes,
+                counters.resident_entries,
+            ] {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
     }
     let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
     out.extend_from_slice(&MAGIC.to_le_bytes());
@@ -526,8 +678,10 @@ fn decode_payload(
         }),
         FrameKind::Panel => {
             let role = PanelRole::from_code(cur.u8()?)?;
+            let outer = cur.u32()?;
+            let ks = cur.u32()?;
             let data = decode_elements(dtype_code, "Panel", cur.rest())?;
-            Message::Panel { role, data }
+            Message::Panel { role, outer, ks, data }
         }
         FrameKind::Step => Message::Step { index: cur.u32()? },
         FrameKind::CTile => {
@@ -544,6 +698,67 @@ fn decode_payload(
             Message::ShardErr { message }
         }
         FrameKind::Shutdown => Message::Shutdown,
+        FrameKind::Register => {
+            let proto = cur.u32()?;
+            let worker_id = cur.u64()?;
+            let count = cur.u32()?;
+            // A lying count cannot over-allocate: every capability read
+            // below bounds-checks against the real payload length.
+            let mut tiles = Vec::with_capacity(count.min(1024) as usize);
+            for _ in 0..count {
+                tiles.push(TileCapability {
+                    semiring: semiring_from_code(cur.u8()?)?,
+                    dtype: dtype_from_code(cur.u8()?)?,
+                    tile_m: cur.u32()?,
+                    tile_n: cur.u32()?,
+                    tile_k: cur.u32()?,
+                });
+            }
+            Message::Register { proto, worker_id, tiles }
+        }
+        FrameKind::PanelAnnounce => {
+            let side = side_from_code(cur.u8()?)?;
+            let semiring = semiring_from_code(cur.u8()?)?;
+            let operand = cur.u64()?;
+            let epoch = cur.u64()?;
+            let tile = (cur.u32()? as usize, cur.u32()? as usize, cur.u32()? as usize);
+            let operand_dims = (cur.u64()? as usize, cur.u64()? as usize);
+            let region = (
+                cur.u64()? as usize,
+                cur.u64()? as usize,
+                cur.u64()? as usize,
+                cur.u64()? as usize,
+            );
+            Message::PanelAnnounce {
+                key: PanelKey {
+                    operand,
+                    side,
+                    semiring,
+                    dtype: dtype_from_code(dtype_code)?,
+                    tile,
+                    operand_dims,
+                    region,
+                },
+                epoch,
+            }
+        }
+        FrameKind::PanelHave => Message::PanelHave { side: side_from_code(cur.u8()?)? },
+        FrameKind::PanelNeed => Message::PanelNeed { side: side_from_code(cur.u8()?)? },
+        FrameKind::PanelRef => Message::PanelRef {
+            role: PanelRole::from_code(cur.u8()?)?,
+            outer: cur.u32()?,
+            ks: cur.u32()?,
+        },
+        FrameKind::CacheQuery => Message::CacheQuery,
+        FrameKind::CacheInfo => Message::CacheInfo {
+            counters: CacheCounters {
+                hits: cur.u64()?,
+                misses: cur.u64()?,
+                evictions: cur.u64()?,
+                resident_bytes: cur.u64()?,
+                resident_entries: cur.u64()?,
+            },
+        },
     };
     cur.finish()?;
     Ok(msg)
@@ -698,18 +913,76 @@ mod tests {
             }),
             Message::Panel {
                 role: PanelRole::B,
+                outer: 3,
+                ks: 2,
                 data: HostTensor::I32(vec![-3, 0, 7, i32::MAX]),
             },
             Message::Step { index: 4 },
             Message::CTile { index: 4, data: HostTensor::F32(vec![1.5, -0.25, f32::INFINITY]) },
             Message::ShardErr { message: "kernel refused".into() },
             Message::Shutdown,
+            Message::Register {
+                proto: PROTOCOL_VERSION,
+                worker_id: 0x1234_5678_9ABC_DEF0,
+                tiles: vec![
+                    TileCapability {
+                        semiring: Semiring::PlusTimes,
+                        dtype: "float32",
+                        tile_m: 16,
+                        tile_n: 16,
+                        tile_k: 16,
+                    },
+                    TileCapability {
+                        semiring: Semiring::MinPlus,
+                        dtype: "float64",
+                        tile_m: 8,
+                        tile_n: 24,
+                        tile_k: 32,
+                    },
+                ],
+            },
+            Message::Register { proto: PROTOCOL_VERSION, worker_id: 1, tiles: vec![] },
+            Message::PanelAnnounce {
+                key: PanelKey {
+                    operand: u64::MAX,
+                    side: PanelSide::B,
+                    semiring: Semiring::MinPlus,
+                    dtype: "float64",
+                    tile: (16, 32, 48),
+                    operand_dims: (512, 1024),
+                    region: (0, 256, 128, 896),
+                },
+                epoch: 42,
+            },
+            Message::PanelHave { side: PanelSide::A },
+            Message::PanelNeed { side: PanelSide::B },
+            Message::PanelRef { role: PanelRole::A, outer: 7, ks: 1 },
+            Message::CacheQuery,
+            Message::CacheInfo {
+                counters: CacheCounters {
+                    hits: 10,
+                    misses: 3,
+                    evictions: 1,
+                    resident_bytes: 4096,
+                    resident_entries: 2,
+                },
+            },
         ];
         for msg in msgs {
             let bytes = encode(&msg);
             let (back, used) = decode(&bytes).unwrap();
             assert_eq!(used, bytes.len(), "{:?}", msg.kind());
             assert_eq!(back, msg);
+            assert_eq!(
+                back.payload_elements(),
+                match &back {
+                    Message::Panel { data, .. } | Message::CTile { data, .. } =>
+                        data.len() as u64,
+                    _ => 0,
+                },
+                "negotiation frames must stay control traffic: {:?}",
+                back.kind()
+            );
         }
     }
 

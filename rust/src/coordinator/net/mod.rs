@@ -15,6 +15,11 @@
 //!   liveness deadlines, reconnect with accounted exponential backoff,
 //!   and error surfacing that routes into the cluster's existing
 //!   retry / re-dispatch / health machinery.
+//! - [`registry`] — [`RegistrationServer`], the dial-in endpoint:
+//!   workers find the coordinator (Register/Welcome), accepted
+//!   connections are adopted as backend links, and re-dials route by
+//!   worker id so a returning worker resumes its device slot with its
+//!   panel cache warm.
 //! - [`proxy`] — [`FaultProxy`], a deterministic fault-injecting relay
 //!   for chaos tests (drop at frame N, corrupt frame N, stall).
 //!
@@ -24,11 +29,13 @@ pub mod backend;
 pub mod channel;
 pub mod frame;
 pub mod proxy;
+pub mod registry;
 pub mod worker;
 
 pub use backend::{NetConfig, TcpBackend};
 pub use channel::{TrackChannel, WireCounters, WireStats};
 pub use proxy::FaultProxy;
+pub use registry::{Registration, RegistrationServer};
 pub use worker::WorkerServer;
 
 /// Whether this environment allows loopback TCP at all. Sandboxes that

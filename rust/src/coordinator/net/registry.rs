@@ -1,0 +1,249 @@
+//! The coordinator's registration endpoint for dial-in workers.
+//!
+//! Deployment topology inverted: instead of the coordinator dialing a
+//! list of worker addresses ([`super::TcpBackend`]'s classic mode,
+//! still used by the tests), workers dial **in** to one well-known
+//! endpoint, present a `Register` frame (protocol revision, stable
+//! worker id, tile-capability inventory), and receive `Welcome`. The
+//! accepted connection — already handshaken — is then *adopted* by a
+//! `TcpBackend` link, so only the coordinator needs a stable address
+//! and workers can live behind NAT or ephemeral ports.
+//!
+//! Re-dials route by worker id: once a worker has been claimed by
+//! [`crate::coordinator::ClusterService::accept_workers`], any later
+//! registration under the same id lands in a per-id *returning* queue
+//! that the owning link's reconnect path drains — so a worker that
+//! lost its connection re-registers and resumes as the **same** device
+//! slot, with its session-resident panel cache still warm. A worker
+//! that never comes back simply times the reconnect out, and the
+//! failure feeds the cluster's existing health / re-dispatch
+//! machinery.
+//!
+//! The endpoint is deliberately unexcitable: junk bytes, a shutdown
+//! poke, a half-open peer, or a stale-protocol worker each cost one
+//! bounded read and are dropped (or refused with a typed `ShardErr`)
+//! without disturbing registered state, and a persistent `accept`
+//! failure backs off instead of spinning.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{read_message, write_message, Message, TileCapability, PROTOCOL_VERSION};
+
+/// How long one connection may take to present its `Register` frame
+/// before the endpoint gives up on it.
+const REGISTRATION_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Backoff between failed `accept` attempts (mirrors the worker's
+/// accept loop: an error storm must not peg a core).
+const ACCEPT_ERROR_BACKOFF: Duration = Duration::from_millis(20);
+
+/// One registered worker, ready for adoption: its identity, advertised
+/// tile inventory, and the live (already-welcomed) connection.
+pub struct Registration {
+    /// The worker's stable self-assigned id (pid << 32 | counter).
+    pub worker_id: u64,
+    /// Executor instantiations the worker advertised at registration.
+    pub tiles: Vec<TileCapability>,
+    /// The handshaken connection, ready to carry shard streams.
+    pub stream: TcpStream,
+}
+
+/// Registration state shared between the accept thread and claimants.
+struct RegistryState {
+    /// Workers no link has claimed yet, in arrival order.
+    pending: VecDeque<Registration>,
+    /// Re-registrations of already-claimed ids, drained by the owning
+    /// link's reconnect path.
+    returning: HashMap<u64, VecDeque<Registration>>,
+    /// Ids handed out by [`RegistrationServer::wait_workers`].
+    claimed: HashSet<u64>,
+}
+
+/// The synchronized half the accept thread and the backend links
+/// share (crate-internal: links hold this to await re-dials).
+pub(crate) struct RegistryShared {
+    state: Mutex<RegistryState>,
+    cv: Condvar,
+}
+
+impl RegistryShared {
+    fn new() -> RegistryShared {
+        RegistryShared {
+            state: Mutex::new(RegistryState {
+                pending: VecDeque::new(),
+                returning: HashMap::new(),
+                claimed: HashSet::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// File a fresh registration: claimed ids route to their returning
+    /// queue, unknown ids join the pending line.
+    fn push(&self, reg: Registration) {
+        let mut st = self.state.lock().expect("registry lock");
+        if st.claimed.contains(&reg.worker_id) {
+            st.returning.entry(reg.worker_id).or_default().push_back(reg);
+        } else {
+            st.pending.push_back(reg);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Await a re-registration of `worker_id`, up to `timeout`. `None`
+    /// means the worker did not come back in time — the caller's
+    /// normal reconnect-failure path applies.
+    pub(crate) fn take_reconnect(
+        &self,
+        worker_id: u64,
+        timeout: Duration,
+    ) -> Option<Registration> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("registry lock");
+        loop {
+            if let Some(queue) = st.returning.get_mut(&worker_id) {
+                if let Some(reg) = queue.pop_front() {
+                    return Some(reg);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st = self.cv.wait_timeout(st, deadline - now).expect("registry lock").0;
+        }
+    }
+}
+
+/// The dial-in endpoint: binds a loopback port, accepts and welcomes
+/// registering workers on a background thread, and hands claimed
+/// connections to the cluster.
+pub struct RegistrationServer {
+    addr: SocketAddr,
+    shared: Arc<RegistryShared>,
+    stop: Arc<AtomicBool>,
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl RegistrationServer {
+    /// Bind `127.0.0.1:0` and start accepting registrations.
+    pub fn bind() -> Result<RegistrationServer> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))
+            .context("binding registration endpoint on loopback")?;
+        let addr = listener.local_addr().context("reading registration endpoint address")?;
+        let shared = Arc::new(RegistryShared::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_shared = shared.clone();
+        let thread_stop = stop.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("net-registry-{}", addr.port()))
+            .spawn(move || accept_loop(listener, thread_shared, thread_stop))
+            .context("spawning registration thread")?;
+        Ok(RegistrationServer { addr, shared, stop, join: Mutex::new(Some(join)) })
+    }
+
+    /// The address workers dial ([`super::WorkerServer::dial`]).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub(crate) fn shared(&self) -> Arc<RegistryShared> {
+        self.shared.clone()
+    }
+
+    /// Claim the first `n` registered workers (blocking up to
+    /// `timeout`), marking their ids so later re-dials route to the
+    /// returning queue instead of the pending line.
+    pub fn wait_workers(&self, n: usize, timeout: Duration) -> Result<Vec<Registration>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().expect("registry lock");
+        loop {
+            if st.pending.len() >= n {
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let reg = st.pending.pop_front().expect("length checked above");
+                    st.claimed.insert(reg.worker_id);
+                    out.push(reg);
+                }
+                return Ok(out);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "only {} of {n} workers registered before the deadline",
+                    st.pending.len()
+                );
+            }
+            st = self.shared.cv.wait_timeout(st, deadline - now).expect("registry lock").0;
+        }
+    }
+
+    /// Stop accepting and join the endpoint thread. Idempotent;
+    /// already-claimed connections are unaffected.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke a blocked `accept` awake; the junk connection costs the
+        // loop one bounded registration read.
+        let _ = TcpStream::connect_timeout(&self.addr, REGISTRATION_TIMEOUT);
+        if let Some(join) = self.join.lock().expect("registry join lock").take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for RegistrationServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<RegistryShared>, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Registration is a single bounded read + write; a slow
+                // or bogus peer costs at most REGISTRATION_TIMEOUT.
+                let _ = register_conn(stream, &shared);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(ACCEPT_ERROR_BACKOFF),
+        }
+    }
+}
+
+/// Run the registration handshake on one accepted connection: a valid
+/// `Register` at the current protocol revision is welcomed and filed;
+/// a stale revision is refused with a typed `ShardErr`; anything else
+/// (junk, EOF, the shutdown poke) is dropped silently.
+fn register_conn(mut stream: TcpStream, shared: &RegistryShared) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(REGISTRATION_TIMEOUT))?;
+    match read_message(&mut stream)? {
+        Some(Message::Register { proto, worker_id, tiles }) if proto == PROTOCOL_VERSION => {
+            write_message(&mut stream, &Message::Welcome { proto: PROTOCOL_VERSION })?;
+            // Adopters (TcpBackend) install their own timeout policy.
+            stream.set_read_timeout(None)?;
+            shared.push(Registration { worker_id, tiles, stream });
+            Ok(())
+        }
+        Some(Message::Register { proto, .. }) => {
+            let message = format!(
+                "worker speaks protocol v{proto}, coordinator v{PROTOCOL_VERSION}"
+            );
+            let _ = write_message(&mut stream, &Message::ShardErr { message });
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}

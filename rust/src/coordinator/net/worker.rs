@@ -1,24 +1,39 @@
-//! The worker side of the socket cluster: a listener thread that owns
+//! The worker side of the socket cluster: a serving thread that owns
 //! its own [`Runtime`] and serves shard streams over the frame
-//! protocol.
+//! protocol — either by listening on a loopback port
+//! ([`WorkerServer::spawn`]) or by dialing in to a coordinator's
+//! registration endpoint ([`WorkerServer::dial`], the deployment shape:
+//! workers find the coordinator, not the other way around).
 //!
 //! One connection is served at a time (the coordinator holds exactly
 //! one link per device and re-dials on failure); per-`(semiring,
 //! dtype)` executors are cached across connections, so a reconnect
-//! costs a handshake, not an artifact reload. The serving loop is
-//! defensive at every boundary: a decode error or mid-frame stall
-//! drops the connection and returns to `accept` (the process survives
-//! any peer), a worker-side shard failure is reported as a typed
-//! `ShardErr` frame over a still-consistent link, and `shutdown` is
-//! idempotent and joins cleanly even when the peer is a half-open
-//! corpse — the serving loop polls its stop flag on a read timeout
-//! instead of blocking forever.
+//! costs a handshake, not an artifact reload. The session also owns a
+//! byte-budgeted [`PanelCache`] of **received operand slabs**: when the
+//! coordinator announces an operand by [`PanelKey`] + content epoch,
+//! a resident entry answers `PanelHave` and the whole operand ships
+//! zero payload bytes (slabs re-install via control-only `PanelRef`
+//! frames); a miss answers `PanelNeed`, records the slabs as they
+//! arrive, and commits them only when the job's last step completes —
+//! an aborted stream never caches partial state. The cache lives on
+//! the session, not the connection, so it survives jobs, reconnects,
+//! and re-dials alike.
+//!
+//! The serving loop is defensive at every boundary: a decode error or
+//! mid-frame stall drops the connection and returns to `accept` (the
+//! process survives any peer), a persistent `accept` failure backs off
+//! [`ACCEPT_ERROR_BACKOFF`] per attempt instead of busy-spinning and
+//! keeps honoring the stop flag, a worker-side shard failure is
+//! reported as a typed `ShardErr` frame over a still-consistent link,
+//! and `shutdown` is idempotent and joins cleanly even when the peer is
+//! a half-open corpse — the serving loop polls its stop flag on a read
+//! timeout instead of blocking forever.
 
 use std::collections::HashMap;
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -29,17 +44,54 @@ use anyhow::{bail, Context, Result};
 use crate::datatype::Semiring;
 use crate::runtime::{HostTensor, Runtime};
 use crate::schedule::executor::identity_tensor;
-use crate::schedule::{ExecMode, HostCacheProfile, TiledExecutor};
+use crate::schedule::{ExecMode, HostCacheProfile, PanelSide, TiledExecutor};
 
+use super::super::panel_cache::{CacheWeight, PanelCache, PanelKey};
 use super::channel::{TrackChannel, WireCounters, WireStats};
-use super::frame::{JobHeader, Message, PanelRole, PROTOCOL_VERSION};
+use super::frame::{JobHeader, Message, PanelRole, TileCapability, PROTOCOL_VERSION};
 
 /// How often a blocked worker read wakes up to poll the stop flag.
 const POLL_INTERVAL: Duration = Duration::from_millis(100);
 
-/// A shard-serving worker listening on a loopback TCP port.
+/// Sleep between failed `accept` attempts: long enough that an EMFILE
+/// or transient-error storm cannot peg a core, short enough that the
+/// next healthy connection is picked up promptly.
+const ACCEPT_ERROR_BACKOFF: Duration = Duration::from_millis(20);
+
+/// (semiring, dtype) pairs a dial-in worker tries to inventory for its
+/// `Register` frame — the five instantiations the artifact family
+/// builds.
+const INVENTORY_CANDIDATES: [(Semiring, &str); 5] = [
+    (Semiring::PlusTimes, "float32"),
+    (Semiring::PlusTimes, "float64"),
+    (Semiring::PlusTimes, "int32"),
+    (Semiring::PlusTimes, "uint32"),
+    (Semiring::MinPlus, "float32"),
+];
+
+static NEXT_DIAL_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Stable-for-the-process worker id: pid in the high half, a counter in
+/// the low half, so ids stay distinct across workers in one process
+/// *and* across worker processes on one machine.
+fn next_worker_id() -> u64 {
+    ((std::process::id() as u64) << 32) | NEXT_DIAL_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// How a worker meets its coordinator.
+enum WorkerMode {
+    /// Classic test topology: bind a port, the coordinator dials us.
+    Listen(TcpListener),
+    /// Deployment topology: dial the coordinator's registration
+    /// endpoint, present a `Register` frame, re-dial on any failure.
+    Dial(SocketAddr),
+}
+
+/// A shard-serving worker (listening on a loopback TCP port, or dialed
+/// in to a coordinator's registration endpoint).
 pub struct WorkerServer {
     addr: SocketAddr,
+    worker_id: Option<u64>,
     stop: Arc<AtomicBool>,
     counters: Arc<WireCounters>,
     join: Mutex<Option<JoinHandle<()>>>,
@@ -50,19 +102,41 @@ impl WorkerServer {
     /// (falling back to the built-in native manifest when the directory
     /// holds none — same policy as the service).
     pub fn spawn(dir: PathBuf, profile: HostCacheProfile) -> Result<WorkerServer> {
-        WorkerServer::spawn_inner(Some(dir), profile)
+        WorkerServer::spawn_inner(Some(dir), profile, None)
     }
 
     /// Bind `127.0.0.1:0` and serve shards from the built-in native
     /// runtime — the test and bench fleet constructor.
     pub fn spawn_native(profile: HostCacheProfile) -> Result<WorkerServer> {
-        WorkerServer::spawn_inner(None, profile)
+        WorkerServer::spawn_inner(None, profile, None)
     }
 
-    fn spawn_inner(dir: Option<PathBuf>, profile: HostCacheProfile) -> Result<WorkerServer> {
-        let listener =
-            TcpListener::bind(("127.0.0.1", 0)).context("binding worker listener on loopback")?;
-        let addr = listener.local_addr().context("reading worker listener address")?;
+    /// Dial in to a coordinator's registration endpoint (see
+    /// `super::registry::RegistrationServer`) with the built-in native
+    /// runtime: connect, present `Register` (worker id + tile
+    /// inventory), serve until the link drops, then re-dial — the
+    /// worker-initiated topology where only the coordinator needs a
+    /// stable address.
+    pub fn dial(coordinator: SocketAddr, profile: HostCacheProfile) -> Result<WorkerServer> {
+        WorkerServer::spawn_inner(None, profile, Some(coordinator))
+    }
+
+    fn spawn_inner(
+        dir: Option<PathBuf>,
+        profile: HostCacheProfile,
+        dial: Option<SocketAddr>,
+    ) -> Result<WorkerServer> {
+        let (mode, addr, worker_id) = match dial {
+            Some(coordinator) => {
+                (WorkerMode::Dial(coordinator), coordinator, Some(next_worker_id()))
+            }
+            None => {
+                let listener = TcpListener::bind(("127.0.0.1", 0))
+                    .context("binding worker listener on loopback")?;
+                let addr = listener.local_addr().context("reading worker listener address")?;
+                (WorkerMode::Listen(listener), addr, None)
+            }
+        };
         let stop = Arc::new(AtomicBool::new(false));
         let counters = WireCounters::new();
         // The Runtime is built inside the serving thread (engines need
@@ -81,13 +155,24 @@ impl WorkerServer {
                 match runtime {
                     Ok(runtime) => {
                         let _ = ready_tx.send(Ok(()));
+                        let panel_budget = profile.panel_cache_bytes;
                         let mut session = WorkerSession {
                             runtime,
                             profile,
                             executors: HashMap::new(),
+                            panels: PanelCache::new(panel_budget),
                             counters: thread_counters,
                         };
-                        session.serve(listener, &thread_stop);
+                        match mode {
+                            WorkerMode::Listen(listener) => {
+                                session.serve(listener, &thread_stop)
+                            }
+                            WorkerMode::Dial(coordinator) => session.serve_dial(
+                                coordinator,
+                                worker_id.expect("dial mode carries a worker id"),
+                                &thread_stop,
+                            ),
+                        }
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e.context("opening worker runtime")));
@@ -96,7 +181,7 @@ impl WorkerServer {
             })
             .context("spawning worker thread")?;
         let server =
-            WorkerServer { addr, stop, counters, join: Mutex::new(Some(join)) };
+            WorkerServer { addr, worker_id, stop, counters, join: Mutex::new(Some(join)) };
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(server),
             Ok(Err(e)) => Err(e),
@@ -104,9 +189,16 @@ impl WorkerServer {
         }
     }
 
-    /// The loopback address this worker accepts coordinators on.
+    /// The loopback address this worker accepts coordinators on — or,
+    /// for a dial-in worker, the registration endpoint it dials.
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The stable id a dial-in worker registers under (`None` for
+    /// listen-mode workers — the coordinator names those by address).
+    pub fn worker_id(&self) -> Option<u64> {
+        self.worker_id
     }
 
     /// This worker's transport ledger (accumulated across connections).
@@ -121,7 +213,7 @@ impl WorkerServer {
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
         // Poke a blocked `accept` awake; if the worker is mid-session
-        // instead, its read timeout delivers the flag.
+        // (or dialing), its read/connect timeout delivers the flag.
         let _ = TcpStream::connect_timeout(&self.addr, POLL_INTERVAL);
         if let Some(join) = self.join.lock().expect("worker join lock").take() {
             let _ = join.join();
@@ -135,12 +227,43 @@ impl Drop for WorkerServer {
     }
 }
 
-/// The state a serving thread owns: a runtime, cached executors, and
+/// One operand's received slabs, resident in the worker's panel cache:
+/// the slab map is keyed by the `(outer, ks)` coordinates the `Panel`
+/// frames carried, so a later job over the same operand re-installs
+/// them via `PanelRef` without any payload crossing the wire.
+struct CachedOperand {
+    slabs: HashMap<(u32, u32), HostTensor>,
+    bytes: u64,
+}
+
+impl CacheWeight for CachedOperand {
+    fn cache_bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// Where one side's slabs are coming from within an open job.
+enum SideCache {
+    /// Never announced: the coordinator streams anonymously, nothing is
+    /// recorded or cached.
+    Anonymous,
+    /// Announced and resident at the announced epoch: slabs install
+    /// from the cache entry, zero payload bytes ship.
+    Hit(Arc<CachedOperand>),
+    /// Announced but not resident: slabs are recorded as they arrive
+    /// and committed to the cache only when the job's last step
+    /// completes — an aborted stream drops this state uncached.
+    Building { key: PanelKey, epoch: u64, slabs: HashMap<(u32, u32), HostTensor>, bytes: u64 },
+}
+
+/// The state a serving thread owns: a runtime, cached executors, the
+/// operand slab cache (spanning jobs, connections, and re-dials), and
 /// the (connection-spanning) wire ledger.
 struct WorkerSession {
     runtime: Runtime,
     profile: HostCacheProfile,
     executors: HashMap<(Semiring, &'static str), TiledExecutor>,
+    panels: PanelCache<CachedOperand>,
     counters: Arc<WireCounters>,
 }
 
@@ -151,18 +274,46 @@ struct ActiveJob {
     a_slab: Option<HostTensor>,
     b_slab: Option<HostTensor>,
     c_in: Option<HostTensor>,
+    a_cache: SideCache,
+    b_cache: SideCache,
+    steps_done: u32,
+}
+
+/// The `accept` surface [`accept_polling`] drives — a trait so the
+/// error-path backoff is unit-testable against a mock that always
+/// fails (a real listener cannot be made to fail deterministically).
+trait Acceptor {
+    fn accept_stream(&self) -> io::Result<TcpStream>;
+}
+
+impl Acceptor for TcpListener {
+    fn accept_stream(&self) -> io::Result<TcpStream> {
+        self.accept().map(|(stream, _)| stream)
+    }
+}
+
+/// Accept the next connection, polling the stop flag. Every failed
+/// attempt (other than `Interrupted`) sleeps [`ACCEPT_ERROR_BACKOFF`]
+/// before retrying, so a persistent error storm (EMFILE, transient
+/// network errors) costs ~50 syscalls/s instead of a pegged core — and
+/// the stop flag is honored on the error path too, so shutdown cannot
+/// be delayed by a failing listener.
+fn accept_polling<A: Acceptor>(listener: &A, stop: &AtomicBool) -> Option<TcpStream> {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        match listener.accept_stream() {
+            Ok(stream) => return Some(stream),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(ACCEPT_ERROR_BACKOFF),
+        }
+    }
 }
 
 impl WorkerSession {
     fn serve(&mut self, listener: TcpListener, stop: &AtomicBool) {
-        for conn in listener.incoming() {
-            if stop.load(Ordering::SeqCst) {
-                return;
-            }
-            let stream = match conn {
-                Ok(stream) => stream,
-                Err(_) => continue,
-            };
+        while let Some(stream) = accept_polling(&listener, stop) {
             let peer = stream.peer_addr().ok();
             if let Err(e) = self.serve_connection(stream, stop) {
                 // A dropped/corrupt/stalled link is survivable by
@@ -176,6 +327,70 @@ impl WorkerSession {
                 return;
             }
         }
+    }
+
+    /// Dial-in serving loop: connect to the coordinator's registration
+    /// endpoint, register, serve the session, and re-dial on any
+    /// failure until stopped. The panel cache and executor cache live
+    /// above this loop, so a re-dial resumes with everything warm.
+    fn serve_dial(&mut self, coordinator: SocketAddr, worker_id: u64, stop: &AtomicBool) {
+        while !stop.load(Ordering::SeqCst) {
+            match TcpStream::connect_timeout(&coordinator, POLL_INTERVAL) {
+                Ok(stream) => {
+                    if let Err(e) = self.serve_dial_connection(stream, worker_id, stop) {
+                        eprintln!(
+                            "net worker {worker_id:#x}: session with {coordinator} ended: {e:#}"
+                        );
+                    }
+                }
+                Err(_) => std::thread::sleep(POLL_INTERVAL),
+            }
+        }
+    }
+
+    fn serve_dial_connection(
+        &mut self,
+        stream: TcpStream,
+        worker_id: u64,
+        stop: &AtomicBool,
+    ) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(POLL_INTERVAL))
+            .context("setting worker read timeout")?;
+        let tiles = self.tile_inventory();
+        let mut chan = TrackChannel::new(stream, self.counters.clone());
+        chan.send(&Message::Register { proto: PROTOCOL_VERSION, worker_id, tiles })?;
+        match recv_polling(&mut chan, stop)? {
+            Some(Message::Welcome { proto }) if proto == PROTOCOL_VERSION => {}
+            Some(Message::Welcome { proto }) => {
+                bail!("coordinator speaks protocol v{proto}, worker v{PROTOCOL_VERSION}")
+            }
+            Some(other) => bail!("expected Welcome, got {}", other.kind().name()),
+            None => return Ok(()),
+        }
+        self.serve_frames(&mut chan, stop)
+    }
+
+    /// The tile inventory a `Register` frame advertises: every
+    /// candidate instantiation whose executor actually builds on this
+    /// worker (failures are omitted, not fatal — the coordinator can
+    /// still `TileQuery` for anything unlisted).
+    fn tile_inventory(&mut self) -> Vec<TileCapability> {
+        let mut tiles = Vec::new();
+        for (semiring, dtype) in INVENTORY_CANDIDATES {
+            if let Ok(exec) = self.executor(semiring, dtype) {
+                let (tm, tn, tk) = exec.tile_shape();
+                tiles.push(TileCapability {
+                    semiring,
+                    dtype,
+                    tile_m: tm as u32,
+                    tile_n: tn as u32,
+                    tile_k: tk as u32,
+                });
+            }
+        }
+        tiles
     }
 
     fn serve_connection(&mut self, stream: TcpStream, stop: &AtomicBool) -> Result<()> {
@@ -195,10 +410,19 @@ impl WorkerSession {
             Some(other) => bail!("expected Welcome, got {}", other.kind().name()),
             None => return Ok(()),
         }
+        self.serve_frames(&mut chan, stop)
+    }
 
+    /// The post-handshake serving loop, shared by the listen and dial
+    /// topologies.
+    fn serve_frames(
+        &mut self,
+        chan: &mut TrackChannel<TcpStream>,
+        stop: &AtomicBool,
+    ) -> Result<()> {
         let mut job: Option<ActiveJob> = None;
         loop {
-            let msg = match recv_polling(&mut chan, stop)? {
+            let msg = match recv_polling(chan, stop)? {
                 Some(msg) => msg,
                 None => return Ok(()),
             };
@@ -224,11 +448,29 @@ impl WorkerSession {
                         chan.send(&Message::ShardErr { message: format!("{e:#}") })?;
                     }
                 },
-                Message::Panel { role, data } => {
-                    if let Err(e) = accept_panel(&mut job, role, data) {
+                Message::PanelAnnounce { key, epoch } => {
+                    match self.accept_announce(&mut job, key, epoch) {
+                        Ok(reply) => chan.send(&reply)?,
+                        Err(e) => {
+                            job = None;
+                            chan.send(&Message::ShardErr { message: format!("{e:#}") })?;
+                        }
+                    }
+                }
+                Message::Panel { role, outer, ks, data } => {
+                    if let Err(e) = accept_panel(&mut job, role, outer, ks, data) {
                         job = None;
                         chan.send(&Message::ShardErr { message: format!("{e:#}") })?;
                     }
+                }
+                Message::PanelRef { role, outer, ks } => {
+                    if let Err(e) = accept_panel_ref(&mut job, role, outer, ks) {
+                        job = None;
+                        chan.send(&Message::ShardErr { message: format!("{e:#}") })?;
+                    }
+                }
+                Message::CacheQuery => {
+                    chan.send(&Message::CacheInfo { counters: self.panels.counters() })?
                 }
                 Message::Step { index } => match self.run_step(&mut job, index) {
                     Ok(out) => chan.send(&Message::CTile { index, data: out })?,
@@ -269,7 +511,53 @@ impl WorkerSession {
                 tile.2
             );
         }
-        Ok(ActiveJob { header, template: None, a_slab: None, b_slab: None, c_in: None })
+        Ok(ActiveJob {
+            header,
+            template: None,
+            a_slab: None,
+            b_slab: None,
+            c_in: None,
+            a_cache: SideCache::Anonymous,
+            b_cache: SideCache::Anonymous,
+            steps_done: 0,
+        })
+    }
+
+    /// Handle a `PanelAnnounce`: a resident `(key, epoch)` entry
+    /// answers `PanelHave` (the operand will re-install by reference),
+    /// anything else — absent or stale-epoch, which `get_epoch` drops
+    /// on the spot — answers `PanelNeed` and starts recording the
+    /// incoming slabs for commit at job completion.
+    fn accept_announce(
+        &mut self,
+        job: &mut Option<ActiveJob>,
+        key: PanelKey,
+        epoch: u64,
+    ) -> Result<Message> {
+        let active = job.as_mut().context("PanelAnnounce frame with no open Job")?;
+        let header = active.header;
+        if key.semiring != header.semiring || key.dtype != header.dtype {
+            bail!(
+                "announced {}/{} operand inside a {}/{} job",
+                key.semiring,
+                key.dtype,
+                header.semiring,
+                header.dtype
+            );
+        }
+        let side = key.side;
+        let (reply, state) = match self.panels.get_epoch(&key, epoch) {
+            Some(entry) => (Message::PanelHave { side }, SideCache::Hit(entry)),
+            None => (
+                Message::PanelNeed { side },
+                SideCache::Building { key, epoch, slabs: HashMap::new(), bytes: 0 },
+            ),
+        };
+        match side {
+            PanelSide::A => active.a_cache = state,
+            PanelSide::B => active.b_cache = state,
+        }
+        Ok(reply)
     }
 
     fn run_step(&mut self, job: &mut Option<ActiveJob>, index: u32) -> Result<HostTensor> {
@@ -305,11 +593,38 @@ impl WorkerSession {
             // Each round-trip C input is single-use by protocol.
             active.c_in = None;
         }
+        active.steps_done += 1;
+        if header.mode == ExecMode::Reuse && active.steps_done == header.n_steps {
+            // The stream completed: announced-but-missing operands are
+            // now fully received — commit them. (Roundtrip never
+            // announces; an aborted stream never reaches this point,
+            // so partial operands never become resident.)
+            commit_side(&mut self.panels, &mut active.a_cache);
+            commit_side(&mut self.panels, &mut active.b_cache);
+        }
         Ok(out)
     }
 }
 
-fn accept_panel(job: &mut Option<ActiveJob>, role: PanelRole, data: HostTensor) -> Result<()> {
+/// Commit one side's recorded slabs into the session cache (no-op for
+/// anonymous and hit sides).
+fn commit_side(panels: &mut PanelCache<CachedOperand>, state: &mut SideCache) {
+    if matches!(state, SideCache::Building { .. }) {
+        if let SideCache::Building { key, epoch, slabs, bytes } =
+            std::mem::replace(state, SideCache::Anonymous)
+        {
+            panels.insert_epoch(key, epoch, Arc::new(CachedOperand { slabs, bytes }));
+        }
+    }
+}
+
+fn accept_panel(
+    job: &mut Option<ActiveJob>,
+    role: PanelRole,
+    outer: u32,
+    ks: u32,
+    data: HostTensor,
+) -> Result<()> {
     let active = job.as_mut().context("Panel frame with no open Job")?;
     let header = active.header;
     if data.dtype_name() != header.dtype {
@@ -326,8 +641,14 @@ fn accept_panel(job: &mut Option<ActiveJob>, role: PanelRole, data: HostTensor) 
         bail!("{} panel has {} elements, expected {expect}", role.name(), data.len());
     }
     match role {
-        PanelRole::A => active.a_slab = Some(data),
-        PanelRole::B => active.b_slab = Some(data),
+        PanelRole::A => {
+            record_slab(&mut active.a_cache, outer, ks, &data);
+            active.a_slab = Some(data);
+        }
+        PanelRole::B => {
+            record_slab(&mut active.b_cache, outer, ks, &data);
+            active.b_slab = Some(data);
+        }
         PanelRole::CTemplate => {
             // The template must be the ⊕-identity — that is the zero-acc
             // bit-identity contract. Verify rather than trust the wire.
@@ -339,6 +660,50 @@ fn accept_panel(job: &mut Option<ActiveJob>, role: PanelRole, data: HostTensor) 
         }
         PanelRole::CIn => active.c_in = Some(data),
     }
+    Ok(())
+}
+
+/// Record a shipped slab into a `Building` side (anonymous and hit
+/// sides record nothing — nothing new crossed the wire for them that
+/// the cache doesn't already hold).
+fn record_slab(state: &mut SideCache, outer: u32, ks: u32, data: &HostTensor) {
+    if let SideCache::Building { slabs, bytes, .. } = state {
+        let slab_bytes = data.len() as u64 * data.element_bytes();
+        if let Some(old) = slabs.insert((outer, ks), data.clone()) {
+            *bytes -= old.len() as u64 * old.element_bytes();
+        }
+        *bytes += slab_bytes;
+    }
+}
+
+/// Re-install an already-held slab by its coordinates: from the hit
+/// entry (a warm operand ships zero payload bytes) or from this job's
+/// own building map (the announced stream dedups repeats within a job).
+fn accept_panel_ref(
+    job: &mut Option<ActiveJob>,
+    role: PanelRole,
+    outer: u32,
+    ks: u32,
+) -> Result<()> {
+    let active = job.as_mut().context("PanelRef frame with no open Job")?;
+    let (side_cache, slot) = match role {
+        PanelRole::A => (&active.a_cache, &mut active.a_slab),
+        PanelRole::B => (&active.b_cache, &mut active.b_slab),
+        PanelRole::CTemplate | PanelRole::CIn => {
+            bail!("PanelRef for {} role (only operand slabs are cacheable)", role.name())
+        }
+    };
+    let slab = match side_cache {
+        SideCache::Hit(entry) => entry.slabs.get(&(outer, ks)),
+        SideCache::Building { slabs, .. } => slabs.get(&(outer, ks)),
+        SideCache::Anonymous => None,
+    };
+    let data = slab
+        .with_context(|| {
+            format!("PanelRef ({outer}, {ks}) names a slab this worker does not hold")
+        })?
+        .clone();
+    *slot = Some(data);
     Ok(())
 }
 
@@ -363,5 +728,54 @@ fn recv_polling(
             }
             Err(e) => return Err(e).context("receiving frame"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    /// An acceptor that always fails — the deterministic stand-in for
+    /// an EMFILE/transient-error storm.
+    struct FailingAcceptor {
+        calls: AtomicU64,
+    }
+
+    impl Acceptor for FailingAcceptor {
+        fn accept_stream(&self) -> io::Result<TcpStream> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            Err(io::Error::other("injected accept failure"))
+        }
+    }
+
+    #[test]
+    fn accept_errors_back_off_and_honor_stop() {
+        let acceptor = FailingAcceptor { calls: AtomicU64::new(0) };
+        let stop = AtomicBool::new(false);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(100));
+                stop.store(true, Ordering::SeqCst);
+            });
+            // Returns (None) promptly once the flag flips — the error
+            // path must check it, not just the success path.
+            assert!(accept_polling(&acceptor, &stop).is_none());
+        });
+        let elapsed = t0.elapsed();
+        let calls = acceptor.calls.load(Ordering::SeqCst);
+        // ~100ms of persistent failure at a 20ms backoff is ~5
+        // attempts. Leave generous slack for scheduler jitter; the
+        // pre-fix busy-spin made hundreds of thousands of calls here.
+        assert!(calls >= 1, "at least one attempt must happen");
+        assert!(
+            calls <= 50,
+            "accept error path spun {calls} times in {elapsed:?} — backoff missing"
+        );
+        assert!(
+            elapsed < Duration::from_secs(2),
+            "stop flag ignored on the accept error path ({elapsed:?})"
+        );
     }
 }

@@ -11,19 +11,32 @@
 //! is already packed ships **zero** bytes for it — the cached-operand
 //! term of `order::host_traffic_packed`.
 //!
+//! The cache is generic over the resident value: the coordinator keeps
+//! [`PackedPanels`] sets (the default), and the socket worker
+//! (`coordinator::net::worker`) keeps received wire slabs under the
+//! *same* LRU/counter semantics, so both ends pin against the one
+//! `sim::grid2d::replay_lru` contract.
+//!
 //! Policy: exact LRU under a byte budget. An access to a resident key is
-//! a hit and refreshes recency; a miss packs and inserts, evicting
+//! a hit and refreshes its recency; a miss packs and inserts, evicting
 //! least-recently-used entries until the new set fits; a panel set
 //! larger than the entire budget is returned to the caller but never
-//! cached (oversize bypass). Hit/miss/eviction counters are exported as
-//! [`CacheCounters`] and must match `sim::grid2d::replay_lru` over the
-//! same access trace exactly — the panel-cache test suite pins it.
+//! cached (oversize bypass). A zero byte budget means "caching
+//! disabled": every insert bypasses, and so does an empty (zero-byte)
+//! panel set — a degenerate k=0 region must not occupy an entry slot.
+//! Hit/miss/eviction counters are exported as [`CacheCounters`] and must
+//! match `sim::grid2d::replay_lru` over the same access trace exactly —
+//! the panel-cache test suite pins it.
 //!
 //! Keys carry everything that makes packed bytes reusable: a
 //! caller-assigned **operand id** (see `coordinator::SharedOperand`),
 //! the operand side, the algebra, the packing tile shape, and the
 //! sub-region of the operand the panels cover (the cluster layer caches
 //! per-shard sub-panels of the same operand under distinct regions).
+//! Entries additionally pin a **content epoch**
+//! (`SharedOperand::epoch`): an access under a different epoch is a
+//! stale entry — it is dropped and the access is a miss, which is what
+//! makes `SharedOperand::update` safe against every resident copy.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -57,25 +70,38 @@ pub struct PanelKey {
     pub region: (usize, usize, usize, usize),
 }
 
-struct CacheEntry {
-    panels: Arc<PackedPanels>,
+/// Byte accounting for a cacheable value — what the budget charges.
+pub trait CacheWeight {
+    fn cache_bytes(&self) -> u64;
+}
+
+impl CacheWeight for PackedPanels {
+    fn cache_bytes(&self) -> u64 {
+        self.bytes()
+    }
+}
+
+struct CacheEntry<V> {
+    value: Arc<V>,
+    epoch: u64,
     bytes: u64,
     last_use: u64,
 }
 
-/// Byte-budgeted LRU cache of packed panel sets.
-pub struct PanelCache {
+/// Byte-budgeted LRU cache of packed panel sets (or, on the socket
+/// worker, received wire slabs — any [`CacheWeight`] value).
+pub struct PanelCache<V = PackedPanels> {
     budget_bytes: u64,
     resident_bytes: u64,
     tick: u64,
-    map: HashMap<PanelKey, CacheEntry>,
+    map: HashMap<PanelKey, CacheEntry<V>>,
     hits: u64,
     misses: u64,
     evictions: u64,
 }
 
-impl PanelCache {
-    pub fn new(budget_bytes: u64) -> PanelCache {
+impl<V: CacheWeight> PanelCache<V> {
+    pub fn new(budget_bytes: u64) -> PanelCache<V> {
         PanelCache {
             budget_bytes,
             resident_bytes: 0,
@@ -91,15 +117,30 @@ impl PanelCache {
         self.budget_bytes
     }
 
-    /// Look a panel set up, counting a hit (and refreshing recency) or a
-    /// miss.
-    pub fn get(&mut self, key: &PanelKey) -> Option<Arc<PackedPanels>> {
+    /// Look a panel set up at content epoch 0 (the epoch every
+    /// un-versioned operand carries), counting a hit (and refreshing
+    /// recency) or a miss.
+    pub fn get(&mut self, key: &PanelKey) -> Option<Arc<V>> {
+        self.get_epoch(key, 0)
+    }
+
+    /// Look a panel set up at a content epoch. A resident entry under a
+    /// *different* epoch is stale — same operand id, mutated contents —
+    /// so it is dropped on the spot and the access counts as a miss
+    /// (not an eviction: nothing was displaced to make room).
+    pub fn get_epoch(&mut self, key: &PanelKey, epoch: u64) -> Option<Arc<V>> {
         self.tick += 1;
         match self.map.get_mut(key) {
-            Some(entry) => {
+            Some(entry) if entry.epoch == epoch => {
                 entry.last_use = self.tick;
                 self.hits += 1;
-                Some(entry.panels.clone())
+                Some(entry.value.clone())
+            }
+            Some(_) => {
+                let stale = self.map.remove(key).expect("entry just matched");
+                self.resident_bytes -= stale.bytes;
+                self.misses += 1;
+                None
             }
             None => {
                 self.misses += 1;
@@ -108,13 +149,20 @@ impl PanelCache {
         }
     }
 
+    /// Insert a freshly packed set at epoch 0 (see [`Self::insert_epoch`]).
+    pub fn insert(&mut self, key: PanelKey, value: Arc<V>) {
+        self.insert_epoch(key, 0, value);
+    }
+
     /// Insert a freshly packed set, evicting LRU entries until it fits.
-    /// A set larger than the whole budget is silently not cached (the
-    /// caller still owns its `Arc`), matching the replay's oversize
-    /// bypass.
-    pub fn insert(&mut self, key: PanelKey, panels: Arc<PackedPanels>) {
-        let bytes = panels.bytes();
-        if bytes > self.budget_bytes {
+    /// Bypassed unconditionally — the caller keeps its `Arc`, nothing
+    /// becomes resident — when the set is larger than the whole budget,
+    /// when the budget is zero (caching disabled), or when the set is
+    /// empty (zero bytes must not occupy an entry slot). All three match
+    /// the replay's bypass semantics.
+    pub fn insert_epoch(&mut self, key: PanelKey, epoch: u64, value: Arc<V>) {
+        let bytes = value.cache_bytes();
+        if self.budget_bytes == 0 || bytes == 0 || bytes > self.budget_bytes {
             return;
         }
         if let Some(old) = self.map.remove(&key) {
@@ -132,25 +180,36 @@ impl PanelCache {
             self.evictions += 1;
         }
         self.tick += 1;
-        self.map.insert(key, CacheEntry { panels, bytes, last_use: self.tick });
+        self.map.insert(key, CacheEntry { value, epoch, bytes, last_use: self.tick });
         self.resident_bytes += bytes;
     }
 
-    /// The serving hot path: hit returns the resident set
-    /// ([`PanelSource::Cached`] — zero bytes ship); miss runs `pack`,
-    /// caches the result, and reports [`PanelSource::Fresh`] so the
-    /// caller charges the full packed volume exactly once.
+    /// The serving hot path at epoch 0 (see [`Self::get_or_pack_epoch`]).
     pub fn get_or_pack(
         &mut self,
         key: PanelKey,
-        pack: impl FnOnce() -> Result<PackedPanels>,
-    ) -> Result<(Arc<PackedPanels>, PanelSource)> {
-        if let Some(panels) = self.get(&key) {
-            return Ok((panels, PanelSource::Cached));
+        pack: impl FnOnce() -> Result<V>,
+    ) -> Result<(Arc<V>, PanelSource)> {
+        self.get_or_pack_epoch(key, 0, pack)
+    }
+
+    /// The serving hot path: hit returns the resident set
+    /// ([`PanelSource::Cached`] — zero bytes ship); miss (including a
+    /// stale-epoch entry) runs `pack`, caches the result under the
+    /// requested epoch, and reports [`PanelSource::Fresh`] so the
+    /// caller charges the full packed volume exactly once.
+    pub fn get_or_pack_epoch(
+        &mut self,
+        key: PanelKey,
+        epoch: u64,
+        pack: impl FnOnce() -> Result<V>,
+    ) -> Result<(Arc<V>, PanelSource)> {
+        if let Some(value) = self.get_epoch(&key, epoch) {
+            return Ok((value, PanelSource::Cached));
         }
-        let panels = Arc::new(pack()?);
-        self.insert(key, panels.clone());
-        Ok((panels, PanelSource::Fresh))
+        let value = Arc::new(pack()?);
+        self.insert_epoch(key, epoch, value.clone());
+        Ok((value, PanelSource::Fresh))
     }
 
     /// Counter snapshot — comparable field-for-field with
@@ -250,5 +309,58 @@ mod tests {
             accesses.push((key(op, cols), p.bytes()));
         }
         assert_eq!(cache.counters(), replay_lru(budget, &accesses));
+    }
+
+    #[test]
+    fn zero_budget_and_empty_sets_bypass_unconditionally() {
+        use crate::sim::grid2d::replay_lru;
+        // budget = 0 ("caching disabled"): a zero-byte set must not slip
+        // in through `bytes > budget` being false for 0 > 0.
+        let mut disabled: PanelCache = PanelCache::new(0);
+        let (empty, src) = disabled.get_or_pack(key(1, 16), || Ok(panels(0))).unwrap();
+        assert_eq!(empty.bytes(), 0);
+        assert_eq!(src, PanelSource::Fresh);
+        let c = disabled.counters();
+        assert_eq!((c.resident_entries, c.resident_bytes, c.evictions), (0, 0, 0));
+        assert!(disabled.get(&key(1, 16)).is_none(), "never resident");
+        // Non-empty sets bypass a zero budget too.
+        disabled.insert(key(2, 16), Arc::new(panels(16)));
+        assert_eq!(disabled.counters().resident_entries, 0);
+        // An empty set bypasses even a roomy budget: a degenerate k=0
+        // pack must not occupy an entry slot.
+        let mut roomy: PanelCache = PanelCache::new(1 << 20);
+        roomy.insert(key(3, 16), Arc::new(panels(0)));
+        assert_eq!(roomy.counters().resident_entries, 0);
+        // Both edges replay identically in the sim.
+        for (budget, accesses) in
+            [(0u64, vec![(key(1, 16), 0u64), (key(1, 16), 0)]), (1 << 20, vec![(key(3, 16), 0)])]
+        {
+            let mut cache: PanelCache = PanelCache::new(budget);
+            let mut trace = Vec::new();
+            for (k, bytes) in &accesses {
+                let cols = if *bytes == 0 { 0 } else { 16 };
+                let _ = cache.get_or_pack(k.clone(), || Ok(panels(cols))).unwrap();
+                trace.push((k.clone(), *bytes));
+            }
+            assert_eq!(cache.counters(), replay_lru(budget, &trace));
+        }
+    }
+
+    #[test]
+    fn stale_epoch_drops_the_entry_and_misses() {
+        let mut cache: PanelCache = PanelCache::new(1 << 20);
+        let (_, s0) = cache.get_or_pack_epoch(key(1, 16), 0, || Ok(panels(16))).unwrap();
+        assert_eq!(s0, PanelSource::Fresh);
+        assert!(cache.get_epoch(&key(1, 16), 0).is_some());
+        // Same key, bumped epoch: the resident entry is stale — dropped,
+        // counted a miss (not an eviction), re-packed fresh.
+        let (_, s1) = cache.get_or_pack_epoch(key(1, 16), 1, || Ok(panels(16))).unwrap();
+        assert_eq!(s1, PanelSource::Fresh);
+        let c = cache.counters();
+        assert_eq!(c.evictions, 0, "stale drop is not an eviction");
+        assert_eq!(c.resident_entries, 1);
+        // The new epoch is now the resident one; the old misses.
+        assert!(cache.get_epoch(&key(1, 16), 1).is_some());
+        assert!(cache.get_epoch(&key(1, 16), 0).is_none());
     }
 }

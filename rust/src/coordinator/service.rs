@@ -137,9 +137,17 @@ impl std::error::Error for SubmitError {}
 /// (clones included — cloning aliases, it does not re-register) carry
 /// the same id, which is what lets the panel cache recognize the operand
 /// across requests, workers, and batches.
+///
+/// An operand also carries a **content epoch**, bumped by
+/// [`SharedOperand::update`]: caches everywhere (the in-process panel
+/// cache, per-device shard caches, socket workers' resident slabs)
+/// validate entries by `(key, epoch)`, so replacing the bytes behind a
+/// stable id invalidates every resident copy instead of silently
+/// serving stale panels.
 #[derive(Debug, Clone)]
 pub struct SharedOperand {
     id: u64,
+    epoch: u64,
     tensor: Arc<HostTensor>,
 }
 
@@ -147,6 +155,7 @@ impl SharedOperand {
     pub fn new(tensor: HostTensor) -> SharedOperand {
         SharedOperand {
             id: NEXT_OPERAND_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: 0,
             tensor: Arc::new(tensor),
         }
     }
@@ -155,8 +164,25 @@ impl SharedOperand {
         self.id
     }
 
+    /// Content epoch: 0 at registration, +1 per [`Self::update`]. Jobs
+    /// snapshot it at construction, so a job built before an update
+    /// keeps naming the bytes it was built with.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
     pub fn tensor(&self) -> &HostTensor {
         &self.tensor
+    }
+
+    /// Replace the operand's contents in place: same id, new bytes, next
+    /// epoch. Jobs already built from this handle still hold the old
+    /// `Arc` (and old epoch) and stay self-consistent; jobs built after
+    /// carry the new epoch, which misses on — and displaces — every
+    /// stale cache entry.
+    pub fn update(&mut self, tensor: HostTensor) {
+        self.tensor = Arc::new(tensor);
+        self.epoch += 1;
     }
 }
 
@@ -185,6 +211,12 @@ pub struct GemmJob {
     /// Stable id for cross-request panel caching of B (see
     /// [`GemmJob::shared_b`]).
     pub(crate) b_id: Option<u64>,
+    /// Content epochs of the shared operands at job construction
+    /// (`SharedOperand::epoch`; 0 for request-private operands). Cache
+    /// lookups validate `(id, epoch)` so an updated operand never hits
+    /// a stale resident entry.
+    pub(crate) a_epoch: u64,
+    pub(crate) b_epoch: u64,
     /// Optional completion deadline, measured from submission. The
     /// deadline-aware entry points ([`GemmService::try_submit`],
     /// [`GemmService::submit_with_timeout`]) estimate the picked
@@ -213,6 +245,8 @@ impl GemmJob {
             semiring,
             a_id: None,
             b_id: None,
+            a_epoch: 0,
+            b_epoch: 0,
             deadline: None,
         }
     }
@@ -254,6 +288,8 @@ impl GemmJob {
             semiring,
             a_id: None,
             b_id: Some(b.id),
+            a_epoch: 0,
+            b_epoch: b.epoch,
             deadline: None,
         }
     }
@@ -276,6 +312,8 @@ impl GemmJob {
             semiring,
             a_id: Some(a.id),
             b_id: None,
+            a_epoch: a.epoch,
+            b_epoch: 0,
             deadline: None,
         }
     }
@@ -288,6 +326,16 @@ impl GemmJob {
     /// Stable cache id of B, if shared (set by [`GemmJob::shared_b`]).
     pub fn b_id(&self) -> Option<u64> {
         self.b_id
+    }
+
+    /// Content epoch A's id was snapshotted at (0 if unshared).
+    pub fn a_epoch(&self) -> u64 {
+        self.a_epoch
+    }
+
+    /// Content epoch B's id was snapshotted at (0 if unshared).
+    pub fn b_epoch(&self) -> u64 {
+        self.b_epoch
     }
 
     /// Dispatch weight: pending *bytes of multiply-add work*, so neither
@@ -310,10 +358,12 @@ pub struct GemmRequest {
     /// Row-major k×n.
     pub b: Arc<HostTensor>,
     pub semiring: Semiring,
-    /// Cache ids, carried over from the job (see [`GemmJob`] — only
-    /// [`SharedOperand`]-built jobs set them).
+    /// Cache ids + content epochs, carried over from the job (see
+    /// [`GemmJob`] — only [`SharedOperand`]-built jobs set the ids).
     pub(crate) a_id: Option<u64>,
     pub(crate) b_id: Option<u64>,
+    pub(crate) a_epoch: u64,
+    pub(crate) b_epoch: u64,
 }
 
 /// Completed job.
@@ -343,6 +393,7 @@ pub struct GemmResponse {
 /// cache (or confirm they are resident) without running a GEMM.
 struct PrepackJob {
     operand: u64,
+    epoch: u64,
     tensor: Arc<HostTensor>,
     side: PanelSide,
     /// Operand dims: A → (m, k); B → (k, n).
@@ -510,11 +561,13 @@ impl ExecutorCache {
 /// fresh otherwise. The pack runs under the cache lock for identified
 /// operands so racing workers pack a given operand at most once and the
 /// counters replay deterministically.
+#[allow(clippy::too_many_arguments)]
 fn pack_operand(
     exec: &TiledExecutor,
     panel_cache: &Mutex<PanelCache>,
     side: PanelSide,
     operand_id: Option<u64>,
+    epoch: u64,
     tensor: &HostTensor,
     rows: usize,
     cols: usize,
@@ -538,7 +591,7 @@ fn pack_operand(
             panel_cache
                 .lock()
                 .unwrap_or_else(|e| e.into_inner())
-                .get_or_pack(key, pack)
+                .get_or_pack_epoch(key, epoch, pack)
         }
     }
 }
@@ -637,7 +690,7 @@ fn stage_request(
         }
     }
     let staged = (|| -> Result<PackedWork> {
-        let GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id } = req;
+        let GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch } = req;
         if m == 0 || n == 0 || k == 0 {
             bail!("empty problem {m}x{n}x{k}");
         }
@@ -649,8 +702,10 @@ fn stage_request(
         let (tm, tn, tk) = exec.tile_shape();
         let order = Order::select(m, n, k, tm, tn, tk);
         let plan = TilePlan::with_order(m, n, k, tm, tn, tk, order);
-        let (a, a_src) = pack_operand(&exec, panel_cache, PanelSide::A, a_id, &a, m, k)?;
-        let (b, b_src) = pack_operand(&exec, panel_cache, PanelSide::B, b_id, &b, k, n)?;
+        let (a, a_src) =
+            pack_operand(&exec, panel_cache, PanelSide::A, a_id, a_epoch, &a, m, k)?;
+        let (b, b_src) =
+            pack_operand(&exec, panel_cache, PanelSide::B, b_id, b_epoch, &b, k, n)?;
         let mut pre_transfer = 0u64;
         if a_src == PanelSource::Fresh {
             pre_transfer += a.elements();
@@ -854,12 +909,12 @@ fn handle_prepack(
     stats: &ServiceStats,
     job: PrepackJob,
 ) {
-    let PrepackJob { operand, tensor, side, rows, cols, semiring, weight: _, reply } = job;
+    let PrepackJob { operand, epoch, tensor, side, rows, cols, semiring, weight: _, reply } = job;
     let result = (|| -> Result<PanelSource> {
         let dtype = tensor.dtype_name();
         let exec = cache.executor(semiring, dtype)?;
         let (panels, src) =
-            pack_operand(&exec, panel_cache, side, Some(operand), &tensor, rows, cols)?;
+            pack_operand(&exec, panel_cache, side, Some(operand), epoch, &tensor, rows, cols)?;
         if src == PanelSource::Fresh {
             stats
                 .total_transfer_elements
@@ -1107,8 +1162,9 @@ impl GemmService {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
         let weight = job.weight();
-        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, deadline: _ } = job;
-        let req = GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id };
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _ } = job;
+        let req =
+            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch };
         let worker = self.pick_worker();
         self.enqueue(worker, Job::Run(req, reply_tx), weight, 1);
         reply_rx
@@ -1168,8 +1224,9 @@ impl GemmService {
         self.admit(worker, &job, weight)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, deadline: _ } = job;
-        let req = GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id };
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _ } = job;
+        let req =
+            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch };
         self.enqueue(worker, Job::Run(req, reply_tx), weight, 1);
         Ok(reply_rx)
     }
@@ -1189,8 +1246,9 @@ impl GemmService {
         self.admit(worker, &job, weight)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, deadline: _ } = job;
-        let req = GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id };
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _ } = job;
+        let req =
+            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch };
         let mut msg = Job::Run(req, reply_tx);
         loop {
             match self.try_enqueue(worker, msg, weight, 1) {
@@ -1265,9 +1323,21 @@ impl GemmService {
         let mut share_weights: Vec<u64> = vec![0; self.workers.len()];
         for (i, job) in jobs.into_iter().enumerate() {
             let weight = job.weight();
-            let GemmJob { m, n, k, a, b, semiring, a_id, b_id, deadline: _ } = job;
-            let req =
-                GemmRequest { id: base_id + i as u64, m, n, k, a, b, semiring, a_id, b_id };
+            let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _ } =
+                job;
+            let req = GemmRequest {
+                id: base_id + i as u64,
+                m,
+                n,
+                k,
+                a,
+                b,
+                semiring,
+                a_id,
+                b_id,
+                a_epoch,
+                b_epoch,
+            };
             // Least-loaded by pending work *plus* the share built so far
             // (worker counters don't move until the shares are enqueued
             // below).
@@ -1315,10 +1385,12 @@ impl GemmService {
             anyhow!("submit_shared jobs must be built with GemmJob::shared_b")
         })?;
         let (k, n, semiring) = (first.k, first.n, first.semiring);
+        let first_epoch = first.b_epoch;
         let dtype = first.b.dtype_name();
         let tensor = first.b.clone();
         for job in &jobs {
             if job.b_id != Some(operand)
+                || job.b_epoch != first_epoch
                 || job.k != k
                 || job.n != n
                 || job.semiring != semiring
@@ -1336,7 +1408,7 @@ impl GemmService {
                 );
             }
         }
-        self.prepack_raw(operand, tensor, PanelSide::B, k, n, semiring)?;
+        self.prepack_raw(operand, first_epoch, tensor, PanelSide::B, k, n, semiring)?;
         Ok(self.submit_batch(jobs))
     }
 
@@ -1352,12 +1424,22 @@ impl GemmService {
         cols: usize,
         semiring: Semiring,
     ) -> Result<PanelSource> {
-        self.prepack_raw(operand.id, operand.tensor.clone(), side, rows, cols, semiring)
+        self.prepack_raw(
+            operand.id,
+            operand.epoch,
+            operand.tensor.clone(),
+            side,
+            rows,
+            cols,
+            semiring,
+        )
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn prepack_raw(
         &self,
         operand: u64,
+        epoch: u64,
         tensor: Arc<HostTensor>,
         side: PanelSide,
         rows: usize,
@@ -1368,6 +1450,7 @@ impl GemmService {
         let weight = work_units(rows, cols, 1, tensor.element_bytes());
         let job = Box::new(PrepackJob {
             operand,
+            epoch,
             tensor,
             side,
             rows,

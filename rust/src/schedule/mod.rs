@@ -40,5 +40,5 @@ pub mod tiles;
 
 pub use executor::{ExecMode, ExecutorRun, PackedPanels, PanelSide, TiledExecutor};
 pub use order::{Order, PanelSource};
-pub use shard::{DeviceTile, Shard, ShardGrid, ShardPlan};
+pub use shard::{DeviceTile, Shard, ShardGrid, ShardPanelSources, ShardPlan};
 pub use tiles::{model_tile_shape, model_tile_shape_tuned, HostCacheProfile, Step, TilePlan};

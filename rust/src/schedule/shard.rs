@@ -26,9 +26,19 @@
 //! to the cluster's measured transfers and to the independent replay in
 //! [`crate::sim::grid2d::sharded_traffic`] by the conformance suite.
 
-use super::executor::ExecMode;
+use super::executor::{ExecMode, PanelSource};
 use super::order::{self, Order};
 use super::tiles::{model_tile_shape, HostCacheProfile, TilePlan};
+
+/// Where one operand's slabs come from for a shard stream, for the
+/// cached wire model ([`shard_transfer_cached`]): `None` — anonymous
+/// operand, never announced, re-shipped on every residency change
+/// (exactly the un-negotiated stream the uncached model prices);
+/// `Some(Fresh)` — announced but not resident at the receiver, each
+/// distinct slab ships exactly once (announced streams dedup within the
+/// job); `Some(Cached)` — announced and resident, zero operand wire
+/// bytes.
+pub type ShardPanelSources = (Option<PanelSource>, Option<PanelSource>);
 
 /// The tile shape one device's executor drives — its artifact dims, or
 /// the model-derived shape when planning without a concrete runtime.
@@ -347,6 +357,88 @@ pub fn shard_transfer(shard: &Shard, mode: ExecMode) -> u64 {
     }
 }
 
+/// Per-step slab statistics of a shard's reuse-mode stream: how many
+/// steps install a fresh A/B slab (residency changes, what an
+/// un-announced stream ships) and how many *distinct* slabs the stream
+/// touches (what an announced stream ships at most once each).
+fn slab_stats(plan: &TilePlan) -> (u64, u64, u64, u64) {
+    use std::collections::HashSet;
+    let mut distinct_a: HashSet<(usize, usize)> = HashSet::new();
+    let mut distinct_b: HashSet<(usize, usize)> = HashSet::new();
+    let (mut events_a, mut events_b) = (0u64, 0u64);
+    for s in &plan.steps {
+        distinct_a.insert((s.ti, s.ks));
+        distinct_b.insert((s.tj, s.ks));
+        if !s.reuse_a {
+            events_a += 1;
+        }
+        if !s.reuse_b {
+            events_b += 1;
+        }
+    }
+    (events_a, events_b, distinct_a.len() as u64, distinct_b.len() as u64)
+}
+
+/// One shard's predicted wire traffic (elements) with operand-identity
+/// negotiation in play — the distributed twin of
+/// [`TilePlan::transfer_elements_packed`]. C traffic (template out +
+/// one partial tile back per step) is unconditional; each operand then
+/// charges by its [`ShardPanelSources`] leg: residency-change volume
+/// when anonymous (`None`, degenerating to [`shard_transfer`]), the
+/// distinct-slab volume when announced-but-cold (`Some(Fresh)`), zero
+/// when warm (`Some(Cached)`). Roundtrip mode never negotiates, so the
+/// sources are ignored there. Pinned equal to the transport's measured
+/// `WireStats` ledger and to `sim::wire::wire_traffic_cached` by the
+/// net panel-cache suite.
+pub fn shard_transfer_cached(
+    shard: &Shard,
+    mode: ExecMode,
+    a: Option<PanelSource>,
+    b: Option<PanelSource>,
+) -> u64 {
+    if mode == ExecMode::Roundtrip {
+        return shard_transfer(shard, mode);
+    }
+    let plan = &shard.plan;
+    let a_el = (plan.tile_m * plan.tile_k) as u64;
+    let b_el = (plan.tile_k * plan.tile_n) as u64;
+    let c_el = (plan.tile_m * plan.tile_n) as u64;
+    let (events_a, events_b, distinct_a, distinct_b) = slab_stats(plan);
+    let operand = |src: Option<PanelSource>, events: u64, distinct: u64, el: u64| match src {
+        None => events * el,
+        Some(PanelSource::Fresh) => distinct * el,
+        Some(PanelSource::Cached) => 0,
+    };
+    c_el * (1 + plan.n_steps() as u64)
+        + operand(a, events_a, distinct_a, a_el)
+        + operand(b, events_b, distinct_b, b_el)
+}
+
+/// Data-bearing wire frames of [`shard_transfer_cached`]'s stream: the
+/// C template + per-step C tiles are unconditional, operand `Panel`
+/// frames count by the same three-way source split, and the whole
+/// announce/have/need/ref negotiation is control traffic — zero frames
+/// here, zero elements in the ledger.
+pub fn shard_wire_frames_cached(
+    shard: &Shard,
+    mode: ExecMode,
+    a: Option<PanelSource>,
+    b: Option<PanelSource>,
+) -> u64 {
+    if mode == ExecMode::Roundtrip {
+        return shard_wire_frames(shard, mode);
+    }
+    let (events_a, events_b, distinct_a, distinct_b) = slab_stats(&shard.plan);
+    let operand = |src: Option<PanelSource>, events: u64, distinct: u64| match src {
+        None => events,
+        Some(PanelSource::Fresh) => distinct,
+        Some(PanelSource::Cached) => 0,
+    };
+    1 + shard.plan.n_steps() as u64
+        + operand(a, events_a, distinct_a)
+        + operand(b, events_b, distinct_b)
+}
+
 /// Data-bearing wire frames (panels out + C tiles back) one shard costs
 /// over the socket transport — control frames (job header, step
 /// markers, heartbeats) carry no elements and are excluded, so this is
@@ -387,6 +479,52 @@ impl ShardPlan {
             .into_iter()
             .map(|e| e * elem_bytes)
             .collect()
+    }
+
+    /// [`Self::per_device_transfer`] with operand-identity negotiation:
+    /// `sources[i]` gives shard `i`'s `(A, B)` legs (see
+    /// [`ShardPanelSources`]). All-`None` sources reproduce the uncached
+    /// accounting exactly.
+    pub fn per_device_transfer_cached(
+        &self,
+        mode: ExecMode,
+        sources: &[ShardPanelSources],
+    ) -> Vec<u64> {
+        assert_eq!(sources.len(), self.shards.len(), "one source pair per shard");
+        let mut per = vec![0u64; self.n_devices];
+        for (s, &(a, b)) in self.shards.iter().zip(sources) {
+            per[s.device] += shard_transfer_cached(s, mode, a, b);
+        }
+        per
+    }
+
+    /// Fleet total of [`Self::per_device_transfer_cached`].
+    pub fn predicted_transfer_elements_cached(
+        &self,
+        mode: ExecMode,
+        sources: &[ShardPanelSources],
+    ) -> u64 {
+        assert_eq!(sources.len(), self.shards.len(), "one source pair per shard");
+        self.shards
+            .iter()
+            .zip(sources)
+            .map(|(s, &(a, b))| shard_transfer_cached(s, mode, a, b))
+            .sum()
+    }
+
+    /// [`Self::per_device_wire_frames`] with operand-identity
+    /// negotiation (see [`shard_wire_frames_cached`]).
+    pub fn per_device_wire_frames_cached(
+        &self,
+        mode: ExecMode,
+        sources: &[ShardPanelSources],
+    ) -> Vec<u64> {
+        assert_eq!(sources.len(), self.shards.len(), "one source pair per shard");
+        let mut per = vec![0u64; self.n_devices];
+        for (s, &(a, b)) in self.shards.iter().zip(sources) {
+            per[s.device] += shard_wire_frames_cached(s, mode, a, b);
+        }
+        per
     }
 }
 
@@ -629,5 +767,56 @@ mod tests {
     #[should_panic(expected = "devices")]
     fn with_grid_rejects_too_few_devices() {
         ShardPlan::with_grid(64, 64, 64, ShardGrid::new(2, 2, 1), &tiles(3, T16));
+    }
+
+    #[test]
+    fn cached_wire_model_degenerates_to_uncached_and_pins_the_packed_model() {
+        let plan = ShardPlan::plan(130, 70, 96, &tiles(4, T16));
+        for s in &plan.shards {
+            for mode in [ExecMode::Reuse, ExecMode::Roundtrip] {
+                // Anonymous operands reproduce the uncached accounting
+                // exactly, elements and frames both.
+                assert_eq!(shard_transfer_cached(s, mode, None, None), shard_transfer(s, mode));
+                assert_eq!(
+                    shard_wire_frames_cached(s, mode, None, None),
+                    shard_wire_frames(s, mode)
+                );
+            }
+            for a in [PanelSource::Fresh, PanelSource::Cached] {
+                for b in [PanelSource::Fresh, PanelSource::Cached] {
+                    // Announced operands price exactly like the
+                    // in-process packed model.
+                    assert_eq!(
+                        shard_transfer_cached(s, ExecMode::Reuse, Some(a), Some(b)),
+                        s.plan.transfer_elements_packed(a, b)
+                    );
+                    // Roundtrip never negotiates: sources are ignored.
+                    assert_eq!(
+                        shard_transfer_cached(s, ExecMode::Roundtrip, Some(a), Some(b)),
+                        shard_transfer(s, ExecMode::Roundtrip)
+                    );
+                }
+            }
+            // Warm on both sides ships only the C traffic.
+            let c_el = (s.plan.tile_m * s.plan.tile_n) as u64;
+            let n_steps = s.plan.n_steps() as u64;
+            let warm = (Some(PanelSource::Cached), Some(PanelSource::Cached));
+            assert_eq!(
+                shard_transfer_cached(s, ExecMode::Reuse, warm.0, warm.1),
+                c_el * (1 + n_steps)
+            );
+            assert_eq!(shard_wire_frames_cached(s, ExecMode::Reuse, warm.0, warm.1), 1 + n_steps);
+        }
+        // Per-device aggregation sums shard legs and never exceeds the
+        // uncached per-link budget.
+        let sources = vec![(None, Some(PanelSource::Cached)); plan.n_shards()];
+        let per = plan.per_device_transfer_cached(ExecMode::Reuse, &sources);
+        assert_eq!(
+            per.iter().sum::<u64>(),
+            plan.predicted_transfer_elements_cached(ExecMode::Reuse, &sources)
+        );
+        for (cached, uncached) in per.iter().zip(plan.per_device_transfer(ExecMode::Reuse)) {
+            assert!(*cached <= uncached);
+        }
     }
 }

@@ -200,7 +200,11 @@ impl CacheCounters {
 /// derivations of the same contract): an access to a resident key is a
 /// hit and refreshes its recency; a miss inserts the entry, evicting
 /// least-recently-used entries until it fits; an entry larger than the
-/// whole budget is never cached (miss, no eviction).
+/// whole budget is never cached (miss, no eviction). A zero budget
+/// disables caching entirely, and a zero-byte entry never becomes
+/// resident — both bypass like oversize entries, so `budget = 0` replays
+/// as all-miss with zero resident entries instead of accumulating
+/// weightless keys.
 pub fn replay_lru<K: std::hash::Hash + Eq + Clone>(
     budget_bytes: u64,
     accesses: &[(K, u64)],
@@ -215,8 +219,8 @@ pub fn replay_lru<K: std::hash::Hash + Eq + Clone>(
             continue;
         }
         c.misses += 1;
-        if *bytes > budget_bytes {
-            continue; // oversize bypass: never resident
+        if budget_bytes == 0 || *bytes == 0 || *bytes > budget_bytes {
+            continue; // oversize / disabled / empty bypass: never resident
         }
         while c.resident_bytes + bytes > budget_bytes {
             let (_, evicted) = order.remove(0);

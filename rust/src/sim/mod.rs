@@ -36,4 +36,4 @@ pub use chain::simulate_timeline;
 pub use exact::ExactSim;
 pub use grid2d::{sharded_traffic, ShardTraffic};
 pub use stats::SimReport;
-pub use wire::{wire_traffic, WireTraffic};
+pub use wire::{wire_traffic, wire_traffic_cached, WireTraffic};

@@ -17,9 +17,20 @@
 //!
 //! faults or no faults — a recovery that re-ships anything shows up as
 //! a ledger mismatch, and a model drift shows up against the replay.
+//!
+//! [`wire_traffic_cached`] is the same replay with operand-identity
+//! negotiation in play (worker-resident panel caching): per shard, each
+//! operand leg is either anonymous (`None` — ships on residency change,
+//! exactly as above), announced-but-cold (`Some(Fresh)` — each distinct
+//! slab ships once, the announced stream dedups within the job), or
+//! warm (`Some(Cached)` — zero operand payload; the `PanelRef`
+//! re-installs are control frames and never enter the ledger). The
+//! three-legged pin extends unchanged:
+//! `ShardPlan::per_device_transfer_cached == wire_traffic_cached ==
+//! measured WireStats`, cold or warm, faults or no faults.
 
-use crate::schedule::shard::ShardPlan;
-use crate::schedule::ExecMode;
+use crate::schedule::shard::{ShardPanelSources, ShardPlan};
+use crate::schedule::{ExecMode, PanelSource};
 
 /// Per-link wire volume of one sharded run over the socket transport.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -91,6 +102,77 @@ pub fn wire_traffic(plan: &ShardPlan, mode: ExecMode) -> WireTraffic {
     WireTraffic { per_device_elements, per_device_frames, total_elements, total_frames }
 }
 
+/// [`wire_traffic`] with operand-identity negotiation: `sources[i]`
+/// gives shard `i`'s `(A, B)` legs. Deliberately re-derives the
+/// announced streams' within-job dedup from step identity (a sent-slab
+/// set per shard, mirroring the coordinator's) instead of reusing the
+/// plan's closed-form counts, so it stays an independent pinning leg.
+pub fn wire_traffic_cached(
+    plan: &ShardPlan,
+    mode: ExecMode,
+    sources: &[ShardPanelSources],
+) -> WireTraffic {
+    use std::collections::HashSet;
+    assert_eq!(sources.len(), plan.shards.len(), "one source pair per shard");
+    let mut per_device_elements = vec![0u64; plan.n_devices];
+    let mut per_device_frames = vec![0u64; plan.n_devices];
+    for (shard, &(src_a, src_b)) in plan.shards.iter().zip(sources) {
+        let tp = &shard.plan;
+        let a_el = (tp.tile_m * tp.tile_k) as u64;
+        let b_el = (tp.tile_k * tp.tile_n) as u64;
+        let c_el = (tp.tile_m * tp.tile_n) as u64;
+        let (mut elements, mut frames) = (0u64, 0u64);
+        match mode {
+            ExecMode::Reuse => {
+                elements += c_el; // ⊕-identity template, once
+                frames += 1;
+                let mut resident_a: Option<(usize, usize)> = None;
+                let mut resident_b: Option<(usize, usize)> = None;
+                let mut sent_a: HashSet<(usize, usize)> = HashSet::new();
+                let mut sent_b: HashSet<(usize, usize)> = HashSet::new();
+                // Does installing `slab` ship payload on this leg?
+                let mut ships = |src: Option<PanelSource>,
+                                 slab: (usize, usize),
+                                 resident: &mut Option<(usize, usize)>,
+                                 sent: &mut HashSet<(usize, usize)>| {
+                    if *resident == Some(slab) {
+                        return false;
+                    }
+                    *resident = Some(slab);
+                    match src {
+                        None => true,
+                        Some(PanelSource::Fresh) => sent.insert(slab),
+                        Some(PanelSource::Cached) => false,
+                    }
+                };
+                for s in &tp.steps {
+                    if ships(src_a, (s.ti, s.ks), &mut resident_a, &mut sent_a) {
+                        elements += a_el;
+                        frames += 1;
+                    }
+                    if ships(src_b, (s.tj, s.ks), &mut resident_b, &mut sent_b) {
+                        elements += b_el;
+                        frames += 1;
+                    }
+                    elements += c_el; // partial C tile back
+                    frames += 1;
+                }
+            }
+            ExecMode::Roundtrip => {
+                // Roundtrip never negotiates; sources are ignored.
+                let n = tp.steps.len() as u64;
+                elements = n * (a_el + b_el + 2 * c_el);
+                frames = 4 * n;
+            }
+        }
+        per_device_elements[shard.device] += elements;
+        per_device_frames[shard.device] += frames;
+    }
+    let total_elements = per_device_elements.iter().sum();
+    let total_frames = per_device_frames.iter().sum();
+    WireTraffic { per_device_elements, per_device_frames, total_elements, total_frames }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +201,41 @@ mod tests {
                 wire.total_frames,
                 plan.shards.iter().map(|s| shard_wire_frames(s, mode)).sum::<u64>()
             );
+        }
+    }
+
+    #[test]
+    fn cached_replay_matches_the_cached_plan_model() {
+        let plan =
+            ShardPlan::with_grid(97, 83, 61, ShardGrid::new(2, 2, 2), &vec![T16; 8]);
+        let legs =
+            [None, Some(PanelSource::Fresh), Some(PanelSource::Cached)];
+        for a in legs {
+            for b in legs {
+                let sources = vec![(a, b); plan.n_shards()];
+                for mode in [ExecMode::Reuse, ExecMode::Roundtrip] {
+                    let wire = wire_traffic_cached(&plan, mode, &sources);
+                    assert_eq!(
+                        wire.per_device_elements,
+                        plan.per_device_transfer_cached(mode, &sources),
+                        "{mode:?} {a:?}/{b:?}: replay vs cached plan elements"
+                    );
+                    assert_eq!(
+                        wire.per_device_frames,
+                        plan.per_device_wire_frames_cached(mode, &sources),
+                        "{mode:?} {a:?}/{b:?}: replay vs cached plan frames"
+                    );
+                    assert_eq!(
+                        wire.total_elements,
+                        plan.predicted_transfer_elements_cached(mode, &sources)
+                    );
+                }
+            }
+        }
+        // All-anonymous degenerates to the uncached replay exactly.
+        let anon = vec![(None, None); plan.n_shards()];
+        for mode in [ExecMode::Reuse, ExecMode::Roundtrip] {
+            assert_eq!(wire_traffic_cached(&plan, mode, &anon), wire_traffic(&plan, mode));
         }
     }
 

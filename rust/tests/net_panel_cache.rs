@@ -1,0 +1,501 @@
+//! Distributed panel-cache suite: operand-identity negotiation over
+//! live sockets, pinned three ways.
+//!
+//! The central contracts, extending the wire pinning of
+//! `net_transport`:
+//!
+//! 1. **Warm zero-byte shipping** — a shared-B job announced by full
+//!    `PanelKey` + epoch ships its B sub-panels once per worker; every
+//!    later job over the same operand ships *zero* B payload elements,
+//!    with the measured `WireStats` ledger == the extended
+//!    `ShardPlan::per_device_transfer_cached` model == the independent
+//!    `sim::wire::wire_traffic_cached` replay.
+//! 2. **Cache survival** — worker-resident panels survive reconnects
+//!    (the cache belongs to the worker process, not the connection), so
+//!    a dropped link recovers bit-identically *without* re-shipping
+//!    panels the worker already holds; per-link hit/miss/eviction
+//!    counters are pinned against `sim::grid2d::replay_lru`.
+//! 3. **Epoch safety** — an updated shared operand (same id, bumped
+//!    epoch) invalidates the worker copy and ships fresh bytes; a
+//!    zero-budget worker never caches and never corrupts results.
+//! 4. **Dial-in registration** — workers that dial the coordinator's
+//!    `RegistrationServer` are adopted as devices and serve the same
+//!    pinned contracts as dial-out links.
+//!
+//! Sandboxes that forbid sockets skip (not fail) the live-socket tests
+//! via `loopback_available`.
+
+use std::collections::HashSet;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fcamm::coordinator::{
+    faulty_native_cluster, loopback_available, ClusterRun, ClusterService, FaultPlan, FaultProxy,
+    GemmJob, NetConfig, NetFaultKind, NetFaultPlan, NetFaultSpec, RegistrationServer,
+    ShardBackend, SharedOperand, TcpBackend, WireStats, WorkerServer,
+};
+use fcamm::datatype::Semiring;
+use fcamm::runtime::HostTensor;
+use fcamm::schedule::{
+    DeviceTile, ExecMode, HostCacheProfile, PanelSource, Shard, ShardGrid, ShardPanelSources,
+    ShardPlan,
+};
+use fcamm::sim::grid2d::{replay_lru, CacheCounters};
+use fcamm::sim::wire::wire_traffic_cached;
+use fcamm::util::rng::Rng;
+
+const M: usize = 40;
+const N: usize = 25;
+const K: usize = 33;
+const GRID2: ShardGrid = ShardGrid { dr: 1, dc: 2, dk: 1 };
+const GRID1: ShardGrid = ShardGrid { dr: 1, dc: 1, dk: 1 };
+const F32_BYTES: u64 = 4;
+
+/// Small tiles (16³ under a 16 KiB budget) keep test-sized problems
+/// genuinely multi-tile — same profile the transport suite pins.
+fn tight() -> HostCacheProfile {
+    HostCacheProfile::with_capacity(16 * 1024)
+}
+
+/// Fault-free in-process control fleet with the same numerics as the
+/// networked workers (native runtime, same cache profile).
+fn control(n_devices: usize) -> ClusterService {
+    faulty_native_cluster(n_devices, tight(), Arc::new(FaultPlan::none()))
+        .expect("control cluster starts")
+}
+
+fn spawn_workers(n: usize) -> Vec<WorkerServer> {
+    (0..n).map(|_| WorkerServer::spawn_native(tight()).expect("worker spawns")).collect()
+}
+
+/// Network config with heartbeats effectively off, so coordinator→worker
+/// frame ordinals are deterministic for the fault plans.
+fn quiet_config() -> NetConfig {
+    NetConfig { heartbeat_interval: Duration::from_secs(10), ..NetConfig::default() }
+}
+
+/// Skip guard for sandboxes that forbid sockets: warn and pass.
+fn loopback_or_skip(test: &str) -> bool {
+    if loopback_available() {
+        true
+    } else {
+        eprintln!("warning: skipping {test}: loopback sockets unavailable in this sandbox");
+        false
+    }
+}
+
+fn normal_f32(rng: &mut Rng, len: usize) -> HostTensor {
+    HostTensor::F32(rng.fill_normal_f32(len))
+}
+
+fn minplus_f32(rng: &mut Rng, len: usize) -> HostTensor {
+    HostTensor::F32(
+        (0..len)
+            .map(|_| if rng.gen_range(0, 8) == 0 { f32::INFINITY } else { rng.next_f32() * 10.0 })
+            .collect(),
+    )
+}
+
+/// Bytes one worker commits for a shard's announced B operand: the
+/// distinct `(tj, ks)` slabs its stream ships, each a full packed
+/// `tile_k × tile_n` slab.
+fn shard_b_bytes(shard: &Shard, elem_bytes: u64) -> u64 {
+    let distinct: HashSet<(usize, usize)> =
+        shard.plan.steps.iter().map(|s| (s.tj, s.ks)).collect();
+    distinct.len() as u64 * (shard.plan.tile_k * shard.plan.tile_n) as u64 * elem_bytes
+}
+
+fn uniform_sources(n: usize, b: Option<PanelSource>) -> Vec<ShardPanelSources> {
+    vec![(None, b); n]
+}
+
+/// Ledger delta per link since `before`, in payload elements (both
+/// directions: panels out + C tiles back).
+fn ledger_delta(cluster: &ClusterService, before: &[Option<WireStats>]) -> Vec<u64> {
+    let after = cluster.wire_stats().expect("wire stats");
+    before
+        .iter()
+        .zip(&after)
+        .map(|(b, a)| {
+            let (b, a) = (b.expect("tcp link"), a.expect("tcp link"));
+            (a.payload_elements_sent - b.payload_elements_sent)
+                + (a.payload_elements_received - b.payload_elements_received)
+        })
+        .collect()
+}
+
+/// Pin one run three ways: measured per-link ledger == extended plan
+/// model == independent sim replay, for the given per-shard sources.
+fn pin_cached(run: &ClusterRun, ledger: &[u64], sources: &[ShardPanelSources], ctx: &str) {
+    let model = run.plan.per_device_transfer_cached(ExecMode::Reuse, sources);
+    assert_eq!(run.per_device_transfer, model, "{ctx}: charged transfer != cached plan model");
+    assert_eq!(ledger, model.as_slice(), "{ctx}: wire ledger != cached plan model");
+    let replay = wire_traffic_cached(&run.plan, ExecMode::Reuse, sources);
+    assert_eq!(replay.per_device_elements, model, "{ctx}: sim replay != cached plan model");
+    assert_eq!(
+        run.transfer_elements,
+        run.plan.predicted_transfer_elements_cached(ExecMode::Reuse, sources),
+        "{ctx}: fleet total != cached plan model"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Warm worker caches ship zero operand payload bytes
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_worker_caches_ship_zero_operand_payload_bytes() {
+    if !loopback_or_skip("warm_worker_caches_ship_zero_operand_payload_bytes") {
+        return;
+    }
+    let workers = spawn_workers(2);
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr()).collect();
+    let cluster = ClusterService::connect_tcp(&addrs, quiet_config()).expect("fleet connects");
+    let oracle = control(2);
+    let mut rng = Rng::new(0xCAC4E);
+    // Accumulated per-device cache access trace, replayed at the end
+    // against the live worker counters: key = shared-operand id.
+    let mut traces: Vec<Vec<(u64, u64)>> = vec![Vec::new(), Vec::new()];
+    for semiring in [Semiring::PlusTimes, Semiring::MinPlus] {
+        let make: fn(&mut Rng, usize) -> HostTensor = match semiring {
+            Semiring::PlusTimes => normal_f32,
+            Semiring::MinPlus => minplus_f32,
+        };
+        let b = SharedOperand::new(make(&mut rng, K * N));
+        let jobs = [
+            GemmJob::shared_b(M, N, K, make(&mut rng, M * K), &b, semiring),
+            GemmJob::shared_b(M, N, K, make(&mut rng, M * K), &b, semiring),
+        ];
+        // Run 1 (cold): B is announced and the workers answer Need —
+        // each distinct B slab ships exactly once per worker.
+        let before = cluster.wire_stats().expect("wire stats");
+        let run1 = cluster.run_on_grid(&jobs[0], GRID2, ExecMode::Reuse).expect("cold run");
+        let ctrl1 = oracle.run_on_grid(&jobs[0], GRID2, ExecMode::Reuse).expect("control run");
+        assert_eq!(run1.c, ctrl1.c, "{semiring:?}: cold distributed bits differ");
+        let cold = uniform_sources(run1.plan.shards.len(), Some(PanelSource::Fresh));
+        pin_cached(&run1, &ledger_delta(&cluster, &before), &cold, "cold");
+
+        // Run 2 (warm): the workers answer Have — zero B payload
+        // elements cross any link; only anonymous A and C move.
+        let before = cluster.wire_stats().expect("wire stats");
+        let run2 = cluster.run_on_grid(&jobs[1], GRID2, ExecMode::Reuse).expect("warm run");
+        let ctrl2 = oracle.run_on_grid(&jobs[1], GRID2, ExecMode::Reuse).expect("control run");
+        assert_eq!(run2.c, ctrl2.c, "{semiring:?}: warm distributed bits differ");
+        let warm = uniform_sources(run2.plan.shards.len(), Some(PanelSource::Cached));
+        pin_cached(&run2, &ledger_delta(&cluster, &before), &warm, "warm");
+        let cold_model = run2.plan.per_device_transfer_cached(ExecMode::Reuse, &cold);
+        for d in 0..2 {
+            assert!(
+                run2.per_device_transfer[d] < cold_model[d],
+                "{semiring:?}: link {d} warm traffic not below cold"
+            );
+        }
+        for shard in &run1.plan.shards {
+            let bytes = shard_b_bytes(shard, F32_BYTES);
+            traces[shard.device].push((b.id(), bytes)); // run 1: miss
+            traces[shard.device].push((b.id(), bytes)); // run 2: hit
+        }
+    }
+    // Live per-worker counters == the independent LRU replay of the
+    // same access trace under the same byte budget.
+    let counters = cluster.panel_counters().expect("panel counters");
+    for d in 0..2 {
+        let want = replay_lru(tight().panel_cache_bytes, &traces[d]);
+        assert_eq!(counters[d], want, "device {d}: live counters != replay_lru");
+        assert_eq!(counters[d].hits, 2, "device {d}: one hit per warm run");
+        assert_eq!(counters[d].misses, 2, "device {d}: one miss per cold run");
+        assert_eq!(counters[d].evictions, 0, "device {d}: budget never pressed");
+    }
+    cluster.shutdown();
+    oracle.shutdown();
+    for w in &workers {
+        w.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reconnect resumes with a warm cache
+// ---------------------------------------------------------------------
+
+#[test]
+fn reconnect_resumes_with_a_warm_cache() {
+    if !loopback_or_skip("reconnect_resumes_with_a_warm_cache") {
+        return;
+    }
+    // Coordinator→worker frame ordinals on connection 0, computable from
+    // the deterministic plan: 0 Welcome, 1 TileQuery, then per job
+    // [Job, B-announce, C-template, per-step (¬reuse_a → A panel) +
+    // (¬reuse_b → B panel-or-ref) + step marker]. Drop three frames
+    // into job 2 — after its announce was answered (a counted cache
+    // hit) but before its stream completes.
+    let plan = ShardPlan::with_grid(M, N, K, GRID1, &[DeviceTile::new(16, 16, 16)]);
+    let tp = &plan.shards[0].plan;
+    let per_job: u32 = 3
+        + tp.steps
+            .iter()
+            .map(|s| 1 + u32::from(!s.reuse_a) + u32::from(!s.reuse_b))
+            .sum::<u32>();
+    let drop_at = 2 + per_job + 3;
+
+    let workers = spawn_workers(1);
+    let fault_plan = Arc::new(NetFaultPlan::new(
+        0x5EED,
+        vec![NetFaultSpec { connection: 0, kind: NetFaultKind::DropAfterFrames(drop_at) }],
+    ));
+    let proxy = FaultProxy::spawn(workers[0].addr(), fault_plan.clone()).expect("proxy");
+    let cluster =
+        ClusterService::connect_tcp(&[proxy.addr()], quiet_config()).expect("fleet connects");
+    let oracle = control(1);
+    let mut rng = Rng::new(0xD1A1);
+    let b = SharedOperand::new(normal_f32(&mut rng, K * N));
+    let jobs = [
+        GemmJob::shared_b(M, N, K, normal_f32(&mut rng, M * K), &b, Semiring::PlusTimes),
+        GemmJob::shared_b(M, N, K, normal_f32(&mut rng, M * K), &b, Semiring::PlusTimes),
+    ];
+
+    let run1 = cluster.run_on_grid(&jobs[0], GRID1, ExecMode::Reuse).expect("cold run");
+    let ctrl1 = oracle.run_on_grid(&jobs[0], GRID1, ExecMode::Reuse).expect("control run");
+    assert_eq!(run1.c, ctrl1.c, "cold bits differ");
+    assert_eq!(fault_plan.injected(), 0, "job 1 completes before the drop");
+
+    // Job 2's first attempt dies mid-stream; the retry reconnects and
+    // the worker — same process, same cache — answers Have again.
+    let run2 = cluster.run_on_grid(&jobs[1], GRID1, ExecMode::Reuse).expect("recovered run");
+    let ctrl2 = oracle.run_on_grid(&jobs[1], GRID1, ExecMode::Reuse).expect("control run");
+    assert_eq!(run2.c, ctrl2.c, "recovered bits differ from fault-free in-process");
+    assert_eq!(fault_plan.injected(), 1, "the scheduled drop fired exactly once");
+    assert!(run2.recovery.retries >= 1, "{:?}", run2.recovery);
+    assert!(run2.recovery.reconnects >= 1, "{:?}", run2.recovery);
+    // Only the successful attempt is charged, and it rode the warm
+    // cache: the B operand never re-crossed the wire.
+    let warm = uniform_sources(run2.plan.shards.len(), Some(PanelSource::Cached));
+    assert_eq!(
+        run2.per_device_transfer,
+        run2.plan.per_device_transfer_cached(ExecMode::Reuse, &warm),
+        "post-reconnect transfer != warm cached model"
+    );
+    assert!(
+        run2.per_device_transfer[0] < run1.per_device_transfer[0],
+        "warm recovered run should move less than the cold run"
+    );
+
+    // Counter pin: job 1 missed, then *both* job-2 attempts hit — the
+    // aborted attempt's announce was answered from cache before the
+    // drop, and an aborted stream installs nothing new.
+    let bytes = shard_b_bytes(&run1.plan.shards[0], F32_BYTES);
+    let trace = vec![(b.id(), bytes), (b.id(), bytes), (b.id(), bytes)];
+    let counters = cluster.panel_counters().expect("panel counters");
+    let want = replay_lru(tight().panel_cache_bytes, &trace);
+    assert_eq!(counters[0], want, "live counters != replay_lru across the reconnect");
+    assert_eq!((counters[0].hits, counters[0].misses, counters[0].evictions), (2, 1, 0));
+    assert_eq!(counters[0].resident_bytes, bytes);
+    assert_eq!(counters[0].resident_entries, 1);
+
+    cluster.shutdown();
+    proxy.shutdown();
+    oracle.shutdown();
+    for w in &workers {
+        w.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stale epochs invalidate; fresh bytes ship
+// ---------------------------------------------------------------------
+
+#[test]
+fn updated_shared_operand_invalidates_the_worker_cache() {
+    if !loopback_or_skip("updated_shared_operand_invalidates_the_worker_cache") {
+        return;
+    }
+    let workers = spawn_workers(1);
+    let cluster = ClusterService::connect_tcp(&[workers[0].addr()], quiet_config())
+        .expect("fleet connects");
+    let oracle = control(1);
+    let mut rng = Rng::new(0xE90C4);
+    let mut b = SharedOperand::new(normal_f32(&mut rng, K * N));
+
+    // Warm the cache at epoch 0.
+    let job0 = GemmJob::shared_b(M, N, K, normal_f32(&mut rng, M * K), &b, Semiring::PlusTimes);
+    let run0 = cluster.run_on_grid(&job0, GRID1, ExecMode::Reuse).expect("cold run");
+    let bytes = shard_b_bytes(&run0.plan.shards[0], F32_BYTES);
+
+    // Update the operand: same id, epoch 0 → 1. The worker's resident
+    // copy is now stale; announcing the new epoch must drop it and ship
+    // the fresh bytes — anything else silently computes on old data.
+    b.update(normal_f32(&mut rng, K * N));
+    assert_eq!(b.epoch(), 1);
+    let job1 = GemmJob::shared_b(M, N, K, normal_f32(&mut rng, M * K), &b, Semiring::PlusTimes);
+    let before = cluster.wire_stats().expect("wire stats");
+    let run1 = cluster.run_on_grid(&job1, GRID1, ExecMode::Reuse).expect("stale run");
+    let ctrl1 = oracle.run_on_grid(&job1, GRID1, ExecMode::Reuse).expect("control run");
+    assert_eq!(run1.c, ctrl1.c, "post-update bits differ — stale panels were used");
+    let fresh = uniform_sources(run1.plan.shards.len(), Some(PanelSource::Fresh));
+    pin_cached(&run1, &ledger_delta(&cluster, &before), &fresh, "stale-invalidated");
+
+    // A stale drop is a miss, not an eviction — and the new epoch is
+    // resident afterwards, so a third job runs warm again.
+    let counters = cluster.panel_counters().expect("panel counters");
+    assert_eq!(
+        counters[0],
+        CacheCounters {
+            hits: 0,
+            misses: 2,
+            evictions: 0,
+            resident_bytes: bytes,
+            resident_entries: 1,
+        },
+        "stale invalidation should count a miss, not an eviction"
+    );
+    let job2 = GemmJob::shared_b(M, N, K, normal_f32(&mut rng, M * K), &b, Semiring::PlusTimes);
+    let before = cluster.wire_stats().expect("wire stats");
+    let run2 = cluster.run_on_grid(&job2, GRID1, ExecMode::Reuse).expect("re-warmed run");
+    let warm = uniform_sources(run2.plan.shards.len(), Some(PanelSource::Cached));
+    pin_cached(&run2, &ledger_delta(&cluster, &before), &warm, "re-warmed");
+    assert_eq!(cluster.panel_counters().expect("panel counters")[0].hits, 1);
+
+    cluster.shutdown();
+    oracle.shutdown();
+    for w in &workers {
+        w.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite pin: a refused TileQuery keeps the link
+// ---------------------------------------------------------------------
+
+#[test]
+fn refused_tile_query_keeps_the_connection() {
+    if !loopback_or_skip("refused_tile_query_keeps_the_connection") {
+        return;
+    }
+    let workers = spawn_workers(1);
+    let mut backend =
+        TcpBackend::connect(0, workers[0].addr(), quiet_config()).expect("backend connects");
+    // MinPlus/float64 has no artifact on the native runtime: the worker
+    // answers with a *typed* refusal over a perfectly healthy link. The
+    // old behavior poisoned the connection and burned a reconnect.
+    let err = backend.tile_shape(Semiring::MinPlus, "float64");
+    assert!(err.is_err(), "unsupported algebra must refuse");
+    assert_eq!(backend.stats().reconnects, 0, "typed refusal must not poison the link");
+    // The same connection keeps serving: a supported query succeeds
+    // with zero reconnects, and a repeated refusal still costs none.
+    let shape = backend.tile_shape(Semiring::PlusTimes, "float32").expect("supported query");
+    assert_eq!(shape, (16, 16, 16));
+    assert!(backend.tile_shape(Semiring::MinPlus, "float64").is_err());
+    assert_eq!(backend.stats().reconnects, 0, "healthy link survives refusals");
+    for w in &workers {
+        w.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Zero budget: announced operands always re-ship, never corrupt
+// ---------------------------------------------------------------------
+
+#[test]
+fn zero_budget_worker_never_caches_and_stays_correct() {
+    if !loopback_or_skip("zero_budget_worker_never_caches_and_stays_correct") {
+        return;
+    }
+    let worker = WorkerServer::spawn_native(HostCacheProfile::with_budgets(16 * 1024, 0))
+        .expect("worker spawns");
+    let cluster =
+        ClusterService::connect_tcp(&[worker.addr()], quiet_config()).expect("fleet connects");
+    let oracle = control(1);
+    let mut rng = Rng::new(0x0B5);
+    let b = SharedOperand::new(normal_f32(&mut rng, K * N));
+    let mut bytes = 0;
+    for round in 0..2u32 {
+        let job = GemmJob::shared_b(M, N, K, normal_f32(&mut rng, M * K), &b, Semiring::PlusTimes);
+        let before = cluster.wire_stats().expect("wire stats");
+        let run = cluster.run_on_grid(&job, GRID1, ExecMode::Reuse).expect("run");
+        let ctrl = oracle.run_on_grid(&job, GRID1, ExecMode::Reuse).expect("control run");
+        assert_eq!(run.c, ctrl.c, "round {round}: bits differ");
+        // Announced but never cached: every round is a Fresh leg.
+        let fresh = uniform_sources(run.plan.shards.len(), Some(PanelSource::Fresh));
+        pin_cached(&run, &ledger_delta(&cluster, &before), &fresh, "zero-budget");
+        bytes = shard_b_bytes(&run.plan.shards[0], F32_BYTES);
+    }
+    let counters = cluster.panel_counters().expect("panel counters");
+    let want = replay_lru(0, &[(b.id(), bytes), (b.id(), bytes)]);
+    assert_eq!(counters[0], want, "live zero-budget counters != replay_lru");
+    assert_eq!((counters[0].hits, counters[0].misses), (0, 2));
+    assert_eq!(counters[0].resident_bytes, 0, "nothing may be resident under a zero budget");
+    cluster.shutdown();
+    oracle.shutdown();
+    worker.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Dial-in registration
+// ---------------------------------------------------------------------
+
+#[test]
+fn dial_in_workers_register_and_serve_the_same_contracts() {
+    if !loopback_or_skip("dial_in_workers_register_and_serve_the_same_contracts") {
+        return;
+    }
+    let registry = RegistrationServer::bind().expect("registry binds");
+    let workers: Vec<WorkerServer> = (0..2)
+        .map(|_| WorkerServer::dial(registry.addr(), tight()).expect("worker dials in"))
+        .collect();
+    for w in &workers {
+        assert!(w.worker_id().is_some(), "dial-in workers carry a worker id");
+    }
+    let cluster =
+        ClusterService::accept_workers(&registry, 2, Duration::from_secs(10), quiet_config())
+            .expect("registered fleet assembles");
+    let oracle = control(2);
+    let mut rng = Rng::new(0xD1A7);
+
+    // An anonymous job over adopted links: bit-identity and the plain
+    // Eq. 6 wire pinning, exactly as for dial-out connections.
+    let a = normal_f32(&mut rng, M * K);
+    let bt = normal_f32(&mut rng, K * N);
+    let job = GemmJob::new(M, N, K, a, bt, Semiring::PlusTimes);
+    let run = cluster.run_on_grid(&job, GRID2, ExecMode::Reuse).expect("dial-in run");
+    let ctrl = oracle.run_on_grid(&job, GRID2, ExecMode::Reuse).expect("control run");
+    assert_eq!(run.c, ctrl.c, "dial-in bits differ from in-process");
+    assert_eq!(run.per_device_transfer, run.plan.per_device_transfer(ExecMode::Reuse));
+
+    // Announced shared-B jobs negotiate over adopted links too: cold
+    // then warm, warm shipping zero B payload.
+    let b = SharedOperand::new(normal_f32(&mut rng, K * N));
+    for (round, src) in [PanelSource::Fresh, PanelSource::Cached].into_iter().enumerate() {
+        let job = GemmJob::shared_b(M, N, K, normal_f32(&mut rng, M * K), &b, Semiring::PlusTimes);
+        let before = cluster.wire_stats().expect("wire stats");
+        let run = cluster.run_on_grid(&job, GRID2, ExecMode::Reuse).expect("shared-B run");
+        let ctrl = oracle.run_on_grid(&job, GRID2, ExecMode::Reuse).expect("control run");
+        assert_eq!(run.c, ctrl.c, "round {round}: shared-B bits differ");
+        let sources = uniform_sources(run.plan.shards.len(), Some(src));
+        pin_cached(&run, &ledger_delta(&cluster, &before), &sources, "dial-in shared-B");
+    }
+    cluster.shutdown();
+    for w in &workers {
+        w.shutdown();
+    }
+    registry.shutdown();
+}
+
+#[test]
+fn registration_deadline_errors_cleanly() {
+    if !loopback_or_skip("registration_deadline_errors_cleanly") {
+        return;
+    }
+    let registry = RegistrationServer::bind().expect("registry binds");
+    let err = ClusterService::accept_workers(
+        &registry,
+        1,
+        Duration::from_millis(100),
+        quiet_config(),
+    )
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("registered before the deadline"),
+        "unexpected error: {err:#}"
+    );
+    registry.shutdown();
+}

@@ -184,7 +184,7 @@ fn frame_codec_round_trips_every_kind_and_dtype() {
     ];
     for t in &tensors {
         for role in [PanelRole::A, PanelRole::B, PanelRole::CTemplate, PanelRole::CIn] {
-            msgs.push(Message::Panel { role, data: t.clone() });
+            msgs.push(Message::Panel { role, outer: 3, ks: 1, data: t.clone() });
         }
         msgs.push(Message::CTile { index: 3, data: t.clone() });
     }
@@ -217,7 +217,12 @@ fn frame_codec_round_trips_every_kind_and_dtype() {
 fn frame_codec_rejects_corruption_with_typed_errors() {
     let mut rng = Rng::new(0xBAD_F00D);
     let msgs = vec![
-        Message::Panel { role: PanelRole::A, data: HostTensor::F32(rng.fill_normal_f32(64)) },
+        Message::Panel {
+            role: PanelRole::A,
+            outer: 0,
+            ks: 0,
+            data: HostTensor::F32(rng.fill_normal_f32(64)),
+        },
         Message::CTile { index: 2, data: HostTensor::F64((0..48).map(|_| rng.next_f64()).collect()) },
         Message::Job(JobHeader {
             semiring: Semiring::PlusTimes,
@@ -287,6 +292,8 @@ fn frame_codec_rejects_corruption_with_typed_errors() {
     // byte rides the header, outside the payload CRC).
     let buf = frame::encode(&Message::Panel {
         role: PanelRole::B,
+        outer: 0,
+        ks: 0,
         data: HostTensor::U32(vec![1, 2, 3, 4]),
     });
     let mut bad = buf.clone();

@@ -74,6 +74,15 @@ echo "== cargo test -q --test net_transport =="
 # fail) in sandboxes that forbid loopback sockets.
 cargo test -q --test net_transport
 
+echo "== cargo test -q --test net_panel_cache =="
+# The distributed panel-cache gate: warm worker caches shipping zero
+# operand payload bytes with the ledger == the extended cached-wire
+# plan model == the sim replay, cache survival across reconnects,
+# stale-epoch invalidation, and dial-in registration — run by name for
+# the same reason. Tests auto-skip (warn, not fail) in sandboxes that
+# forbid loopback sockets.
+cargo test -q --test net_panel_cache
+
 echo "== cargo bench --bench hotpath -- --quick =="
 cargo bench --bench hotpath -- --quick
 
@@ -88,7 +97,8 @@ native_threads tuned_vs_scalar_speedup tuned_f32_gflops tuned_f64_gflops \
 tuned_i32_gflops tuned_u32_gflops tuned_minplus_gflops tuned_mr tuned_nr tuned_mc \
 tuned_kc tuned_nc simd_available cluster_f32_512_gflops cluster_shards cluster_devices \
 panel_cache_hit_ratio shared_b_batch_speedup recovery_overhead_ratio shed_fraction \
-net_wire_bytes net_recovery_overhead_ratio net_reconnects"
+net_wire_bytes net_recovery_overhead_ratio net_reconnects net_cold_wire_bytes \
+net_warm_wire_bytes net_panel_hit_ratio"
 if [ ! -f BENCH_hotpath.json ]; then
   echo "BENCH_hotpath.json missing after bench run" >&2
   exit 1
@@ -141,6 +151,15 @@ if metrics["net_wire_bytes"] <= 0:
 if metrics["net_recovery_overhead_ratio"] > 1.5:
     sys.exit("BENCH_hotpath.json net_recovery_overhead_ratio above the 1.5x "
              "gate (a dropped connection must stay cheap to recover over TCP)")
+if not (0.0 <= metrics["net_panel_hit_ratio"] <= 1.0):
+    sys.exit("BENCH_hotpath.json net_panel_hit_ratio out of [0, 1]")
+if metrics["net_cold_wire_bytes"] <= 0:
+    sys.exit("BENCH_hotpath.json net_cold_wire_bytes degenerate (the shared-B "
+             "batch must account its cold wire volume, live or model-derived)")
+if metrics["net_warm_wire_bytes"] > 0.6 * metrics["net_cold_wire_bytes"]:
+    sys.exit("BENCH_hotpath.json warm/cold wire-byte ratio %.3f above the 0.6 "
+             "gate (warm shared-B jobs must ride the worker panel cache)"
+             % (metrics["net_warm_wire_bytes"] / metrics["net_cold_wire_bytes"]))
 print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx (gate %.1fx, tuned %.2fx, "
       "blocking %dx%d mc %d kc %d nc %d), cluster %.0f shards on "
       "%.0f devices at %.2f GF/s, shared-B batch %.2fx (hit ratio %.2f), "
