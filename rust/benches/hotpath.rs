@@ -20,6 +20,16 @@
 //! `kernel512_*` / `distance256_*` metrics in `BENCH_hotpath.json` are
 //! the regression tripwire for the native compute path.
 //!
+//! The Strassen section times the fast-algorithm recursion
+//! (`schedule::strassen`) against the classical path on square f32
+//! GEMMs (512³–2048³ full, 256³ quick), re-asserts the measured ==
+//! predict == sim traffic identity at bench scale, and records the
+//! model's predicted crossover size plus the empirical error against
+//! the classical result — `strassen_crossover_n`,
+//! `strassen_depth1_speedup` (gated ≥1.0 at 2048³ unless
+//! `strassen_speedup_waived` logs a reason), and `strassen_max_rel_err`
+//! (gated ≤1e-4) in `BENCH_hotpath.json`.
+//!
 //! The serving section measures the cross-request reuse layer: a batch
 //! of GEMMs sharing one B operand run as a per-request blocking loop vs
 //! `submit_shared` over the pipelined worker pool with the panel cache.
@@ -72,8 +82,11 @@ use fcamm::runtime::{lanes, tune};
 use fcamm::runtime::Runtime;
 use fcamm::schedule::executor::{pack_a_slab, pack_b_slab};
 use fcamm::schedule::loopnest;
-use fcamm::schedule::{order, ExecMode, Order, PanelSource, ShardGrid, TiledExecutor, TilePlan};
+use fcamm::schedule::{
+    order, strassen, Algo, ExecMode, Order, PanelSource, ShardGrid, TiledExecutor, TilePlan,
+};
 use fcamm::sim::exact::ExactSim;
+use fcamm::sim::strassen_traffic;
 use fcamm::sim::simulate_timeline;
 use fcamm::util::bench::{self, Bench, Stats};
 use fcamm::util::rng::Rng;
@@ -458,6 +471,132 @@ fn main() {
             oracle::distance_f32(&amp, &bmp, sz, sz, sz),
             "min-plus executor must be bit-identical to the distance oracle"
         );
+    }
+
+    // --- Strassen layer: classical vs depth-1/2 crossover --------------
+    // The fast-algorithm recursion over the tile schedule
+    // (schedule::strassen): single-shot walls for the classical path vs
+    // forced depth-1/2 Strassen on square f32 GEMMs, the model-predicted
+    // crossover size, and the empirical error vs the classical result
+    // (normalized by k·max|A|·max|B|; `strassen_max_rel_err` gated ≤1e-4
+    // by scripts/check.sh). Every benched Strassen run re-asserts the
+    // three-legged traffic identity measured == predict == sim at full
+    // scale. `strassen_depth1_speedup` at 2048³ is gated ≥1.0 unless
+    // `strassen_speedup_waived` records a logged reason (quick mode
+    // stops below the crossover; a tuned kernel fast enough that the
+    // model itself keeps classical at 2048³ waives too).
+    {
+        let rt = Runtime::native_default().expect("native runtime");
+        let exec = TiledExecutor::for_algebra(&rt, Semiring::PlusTimes, "float32")
+            .expect("f32 executor");
+        let tile = exec.tile_shape();
+        let params = strassen::CostParams::for_algebra(Semiring::PlusTimes, "float32");
+        let crossover = strassen::predicted_crossover_n(tile, 4, &params, 64, 4096);
+        println!(
+            "strassen cost model: tile {}x{}x{}, tuned {:.2} Gmadd/s, predicted crossover {}",
+            tile.0,
+            tile.1,
+            tile.2,
+            params.gmadds,
+            crossover.map_or_else(|| "none <= 4096".to_string(), |v| format!("{v}^3")),
+        );
+        let sizes: &[usize] = if quick { &[256] } else { &[512, 1024, 2048] };
+        let mut max_rel_err = 0f64;
+        let mut depth1_speedup = 0f64;
+        let mut depth2_speedup = f64::NAN;
+        for &n in sizes {
+            let sa = rng.fill_normal_f32(n * n);
+            let sb = rng.fill_normal_f32(n * n);
+            let classical = strassen::run(&exec, PlusTimesF32, &sa, &sb, n, n, n, 0).unwrap();
+            let classical_wall = classical.wall.as_secs_f64();
+            let amax = sa.iter().fold(0f64, |acc, &x| acc.max((x as f64).abs()));
+            let bmax = sb.iter().fold(0f64, |acc, &x| acc.max(x.abs() as f64));
+            let norm = n as f64 * amax * bmax;
+            let max_depth = strassen::max_feasible_depth(n, n, n, tile).min(2);
+            for depth in 1..=max_depth {
+                let run = strassen::run(&exec, PlusTimesF32, &sa, &sb, n, n, n, depth).unwrap();
+                let wall = run.wall.as_secs_f64();
+                // Three-legged pinning at bench scale: measured ==
+                // cost model == recursion-aware sim replay.
+                let cost = strassen::predict(n, n, n, tile, 4, depth, &params);
+                assert_eq!(
+                    run.transfer_elements, cost.device_traffic_elements,
+                    "strassen {n}^3 depth {depth}: measured vs predicted traffic"
+                );
+                assert_eq!(
+                    run.transfer_elements,
+                    strassen_traffic(n, n, n, tile, depth).total,
+                    "strassen {n}^3 depth {depth}: measured vs sim replay"
+                );
+                let err = run
+                    .c
+                    .iter()
+                    .zip(&classical.c)
+                    .fold(0f64, |acc, (&x, &y)| acc.max((x as f64 - y as f64).abs()))
+                    / norm;
+                // The documented componentwise bound (Higham §23.2),
+                // normalized the same way, with a k-term for the
+                // classical yardstick's own rounding.
+                let u = f32::EPSILON as f64 / 2.0;
+                let bound = (3f64.powi(depth as i32)
+                    * (n as f64 + 5.0 * 2f64.powi(depth as i32))
+                    + n as f64)
+                    * u;
+                assert!(
+                    err <= bound,
+                    "strassen {n}^3 depth {depth}: normalized error {err:.3e} above the \
+                     documented bound {bound:.3e}"
+                );
+                let speedup = classical_wall / wall;
+                println!(
+                    "strassen {n}^3 depth {depth}: {:.1}ms vs classical {:.1}ms ({:.2}x), \
+                     {} sub-products, normalized err {err:.2e}",
+                    wall * 1e3,
+                    classical_wall * 1e3,
+                    speedup,
+                    run.base_products,
+                );
+                max_rel_err = max_rel_err.max(err);
+                if depth == 1 {
+                    depth1_speedup = speedup;
+                } else {
+                    depth2_speedup = speedup;
+                }
+            }
+        }
+        let n_top = *sizes.last().unwrap();
+        let auto_depth = strassen::resolve(Algo::Auto, &exec, n_top, n_top, n_top);
+        let (waived, reason) = if n_top < 2048 {
+            (true, format!("quick mode benches {n_top}^3, below the 2048^3 gate size"))
+        } else if auto_depth == 0 {
+            (
+                true,
+                format!(
+                    "cost model keeps classical at {n_top}^3 on this machine \
+                     (tuned {:.2} Gmadd/s)",
+                    params.gmadds
+                ),
+            )
+        } else {
+            (false, String::new())
+        };
+        if waived {
+            println!("strassen speedup gate waived: {reason}");
+        }
+        metrics.push((
+            "strassen_crossover_n".to_string(),
+            crossover.map_or(-1.0, |v| v as f64),
+        ));
+        metrics.push(("strassen_depth1_speedup".to_string(), depth1_speedup));
+        if depth2_speedup.is_finite() {
+            metrics.push(("strassen_depth2_speedup".to_string(), depth2_speedup));
+        }
+        metrics.push(("strassen_max_rel_err".to_string(), max_rel_err));
+        metrics.push((
+            "strassen_speedup_waived".to_string(),
+            if waived { 1.0 } else { 0.0 },
+        ));
+        metrics.push(("strassen_auto_depth_top".to_string(), auto_depth as f64));
     }
 
     // --- Sharded multi-device layer: 1-device vs 4-device fleet --------

@@ -51,7 +51,16 @@
 //! a burst with one channel round-trip per worker;
 //! [`GemmService::submit_shared`] additionally sweeps a shared B operand
 //! into the panel cache **once** before the fan-out, so every job in the
-//! batch — on any worker — hits.
+//! batch — on any worker — hits; [`GemmService::submit_shared_a`] is the
+//! side-symmetric A mirror.
+//!
+//! **Fast algorithms**: each job carries an [`Algo`] knob. Large
+//! plus-times f32/f64 requests the cost model (or an explicit
+//! `Strassen { depth }`) resolves to depth ≥ 1 divert at the pack stage
+//! to [`crate::schedule::strassen`], which drives the same executor's
+//! packed path through the seven-product recursion; non-ring algebras
+//! and shared-operand jobs always run the classical pipeline,
+//! bit-identically to a job with `Algo::Classical`.
 //!
 //! Built on std threads + channels (the offline environment provides no
 //! tokio; a thread-per-stage pool is also the more faithful analogue of
@@ -77,7 +86,7 @@ use crate::datatype::Semiring;
 use crate::runtime::{HostTensor, Runtime};
 use crate::schedule::executor::{fold_tile, identity_tensor};
 use crate::schedule::{
-    Order, PackedPanels, PanelSide, PanelSource, Step, TiledExecutor, TilePlan,
+    strassen, Algo, Order, PackedPanels, PanelSide, PanelSource, Step, TiledExecutor, TilePlan,
 };
 use crate::sim::grid2d::CacheCounters;
 
@@ -225,6 +234,15 @@ pub struct GemmJob {
     /// load-shedding instead of unbounded blocking. `None` (the
     /// default) means best-effort: never shed.
     pub deadline: Option<Duration>,
+    /// How the GEMM is evaluated above the tile schedule
+    /// ([`crate::schedule::strassen`]): `Auto` (default) lets the cost
+    /// model pick classical vs Strassen per shape, `Classical` forces
+    /// the tiled schedule, `Strassen { depth }` forces a recursion
+    /// depth. Non-ring algebras (min-plus, wrapping ints) and
+    /// shared-operand jobs always run classical regardless — the former
+    /// by the bit-identity contract, the latter so panel-cache reuse is
+    /// never traded away.
+    pub algo: Algo,
 }
 
 impl GemmJob {
@@ -248,12 +266,19 @@ impl GemmJob {
             a_epoch: 0,
             b_epoch: 0,
             deadline: None,
+            algo: Algo::Auto,
         }
     }
 
     /// Attach a completion deadline (see [`GemmJob::deadline`]).
     pub fn with_deadline(mut self, deadline: Duration) -> GemmJob {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Pin the evaluation algorithm (see [`GemmJob::algo`]).
+    pub fn with_algo(mut self, algo: Algo) -> GemmJob {
+        self.algo = algo;
         self
     }
 
@@ -291,6 +316,7 @@ impl GemmJob {
             a_epoch: 0,
             b_epoch: b.epoch,
             deadline: None,
+            algo: Algo::Auto,
         }
     }
 
@@ -315,6 +341,7 @@ impl GemmJob {
             a_epoch: a.epoch,
             b_epoch: 0,
             deadline: None,
+            algo: Algo::Auto,
         }
     }
 
@@ -364,6 +391,8 @@ pub struct GemmRequest {
     pub(crate) b_id: Option<u64>,
     pub(crate) a_epoch: u64,
     pub(crate) b_epoch: u64,
+    /// Evaluation algorithm, carried over from the job.
+    pub algo: Algo,
 }
 
 /// Completed job.
@@ -643,9 +672,23 @@ enum ReduceMsg {
     Abort(anyhow::Error),
 }
 
+/// Outcome of the pack stage: hand the request down the pack → compute
+/// → reduce pipeline, or — when the Strassen layer served it whole —
+/// the finished response.
+enum Staged {
+    Pipeline(PackedWork),
+    Done(Box<GemmResponse>),
+}
+
 /// Pack stage for one request: validate, resolve the executor, pack (or
 /// cache-hit) both operands, and hand the work to the compute stage.
-/// Failures are replied immediately with full request context.
+/// Large ring-semiring requests the [`Algo`] knob resolves to depth ≥ 1
+/// divert to the Strassen layer instead, completing right here (the
+/// recursion drives the same executor through its packed path
+/// internally); shared-operand jobs never divert, so panel-cache reuse
+/// is never traded for madd savings. Failures are replied immediately
+/// with full request context.
+#[allow(clippy::too_many_arguments)]
 fn stage_request(
     cache: &mut ExecutorCache,
     panel_cache: &Mutex<PanelCache>,
@@ -653,10 +696,12 @@ fn stage_request(
     pending: &AtomicU64,
     fault_plan: &Option<Arc<FaultPlan>>,
     compute_tx: &mpsc::SyncSender<PackedWork>,
+    worker_id: usize,
     req: GemmRequest,
     reply: mpsc::Sender<Result<GemmResponse>>,
 ) {
     let weight = work_units(req.m, req.n, req.k, req.a.element_bytes());
+    let madds = (req.m as u64) * (req.n as u64) * (req.k as u64);
     let t0 = Instant::now();
     let id = req.id;
     let ctx = format!(
@@ -689,8 +734,8 @@ fn stage_request(
             None => {}
         }
     }
-    let staged = (|| -> Result<PackedWork> {
-        let GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch } = req;
+    let staged = (|| -> Result<Staged> {
+        let GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, algo } = req;
         if m == 0 || n == 0 || k == 0 {
             bail!("empty problem {m}x{n}x{k}");
         }
@@ -699,6 +744,27 @@ fn stage_request(
         }
         let dtype = a.dtype_name();
         let exec = cache.executor(semiring, dtype)?;
+        // Strassen divert: request-private ring-semiring operands only.
+        // `resolve` returns 0 for every non-ring algebra and whenever
+        // the model (or an explicit `Classical`) keeps the tiled
+        // schedule, so everything else falls through bit-identically.
+        if a_id.is_none() && b_id.is_none() {
+            let depth = strassen::resolve(algo, &exec, m, n, k);
+            if depth > 0 {
+                let run =
+                    strassen::run_tensor(&exec, &a, &b, m, n, k, Algo::Strassen { depth })?;
+                return Ok(Staged::Done(Box::new(GemmResponse {
+                    id,
+                    c: run.c,
+                    latency: t0.elapsed(),
+                    steps: run.steps_executed,
+                    transfer_elements: run.transfer_elements,
+                    worker: worker_id,
+                    a_panels: PanelSource::Fresh,
+                    b_panels: PanelSource::Fresh,
+                })));
+            }
+        }
         let (tm, tn, tk) = exec.tile_shape();
         let order = Order::select(m, n, k, tm, tn, tk);
         let plan = TilePlan::with_order(m, n, k, tm, tn, tk, order);
@@ -713,7 +779,7 @@ fn stage_request(
         if b_src == PanelSource::Fresh {
             pre_transfer += b.elements();
         }
-        Ok(PackedWork {
+        Ok(Staged::Pipeline(PackedWork {
             id,
             m,
             n,
@@ -730,11 +796,11 @@ fn stage_request(
             weight,
             t0,
             reply: reply.clone(),
-        })
+        }))
     })()
     .with_context(|| ctx);
     match staged {
-        Ok(work) => {
+        Ok(Staged::Pipeline(work)) => {
             if compute_tx.send(work).is_err() {
                 stats.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = reply.send(Err(anyhow!(
@@ -742,6 +808,19 @@ fn stage_request(
                 )));
                 pending.fetch_sub(weight, Ordering::Relaxed);
             }
+        }
+        Ok(Staged::Done(resp)) => {
+            // Same accounting the reduce stage performs on Finish — a
+            // Strassen-served request is indistinguishable in the stats.
+            stats.completed.fetch_add(1, Ordering::Relaxed);
+            stats.completed_work_units.fetch_add(weight, Ordering::Relaxed);
+            stats.total_steps.fetch_add(resp.steps as u64, Ordering::Relaxed);
+            stats.total_madds.fetch_add(madds, Ordering::Relaxed);
+            stats
+                .total_transfer_elements
+                .fetch_add(resp.transfer_elements, Ordering::Relaxed);
+            pending.fetch_sub(weight, Ordering::Relaxed);
+            let _ = reply.send(Ok(*resp));
         }
         Err(e) => {
             stats.failed.fetch_add(1, Ordering::Relaxed);
@@ -1016,6 +1095,7 @@ impl GemmService {
                                 &worker_pending,
                                 &fault_plan,
                                 &compute_tx,
+                                worker_id,
                                 req,
                                 reply,
                             );
@@ -1030,6 +1110,7 @@ impl GemmService {
                                     &worker_pending,
                                     &fault_plan,
                                     &compute_tx,
+                                    worker_id,
                                     req,
                                     reply.clone(),
                                 );
@@ -1162,9 +1243,10 @@ impl GemmService {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
         let weight = job.weight();
-        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _ } = job;
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _, algo } =
+            job;
         let req =
-            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch };
+            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, algo };
         let worker = self.pick_worker();
         self.enqueue(worker, Job::Run(req, reply_tx), weight, 1);
         reply_rx
@@ -1224,9 +1306,10 @@ impl GemmService {
         self.admit(worker, &job, weight)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _ } = job;
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _, algo } =
+            job;
         let req =
-            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch };
+            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, algo };
         self.enqueue(worker, Job::Run(req, reply_tx), weight, 1);
         Ok(reply_rx)
     }
@@ -1246,9 +1329,10 @@ impl GemmService {
         self.admit(worker, &job, weight)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _ } = job;
+        let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _, algo } =
+            job;
         let req =
-            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch };
+            GemmRequest { id, m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, algo };
         let mut msg = Job::Run(req, reply_tx);
         loop {
             match self.try_enqueue(worker, msg, weight, 1) {
@@ -1323,8 +1407,20 @@ impl GemmService {
         let mut share_weights: Vec<u64> = vec![0; self.workers.len()];
         for (i, job) in jobs.into_iter().enumerate() {
             let weight = job.weight();
-            let GemmJob { m, n, k, a, b, semiring, a_id, b_id, a_epoch, b_epoch, deadline: _ } =
-                job;
+            let GemmJob {
+                m,
+                n,
+                k,
+                a,
+                b,
+                semiring,
+                a_id,
+                b_id,
+                a_epoch,
+                b_epoch,
+                deadline: _,
+                algo,
+            } = job;
             let req = GemmRequest {
                 id: base_id + i as u64,
                 m,
@@ -1337,6 +1433,7 @@ impl GemmService {
                 b_id,
                 a_epoch,
                 b_epoch,
+                algo,
             };
             // Least-loaded by pending work *plus* the share built so far
             // (worker counters don't move until the shares are enqueued
@@ -1409,6 +1506,51 @@ impl GemmService {
             }
         }
         self.prepack_raw(operand, first_epoch, tensor, PanelSide::B, k, n, semiring)?;
+        Ok(self.submit_batch(jobs))
+    }
+
+    /// The A-side mirror of [`Self::submit_shared`]: a batch of jobs
+    /// that all share one A operand (built with [`GemmJob::shared_a`]).
+    /// A's panels are prepacked into the cache **once** before the
+    /// fan-out, so every job in the batch — on any worker — reuses the
+    /// resident panels and ships zero A bytes. The side-symmetric
+    /// PanelAnnounce protocol underneath (panel keys carry
+    /// [`PanelSide`]) has served both sides since PR 9; this makes the A
+    /// leg reachable from the public batch API. The transpose serving
+    /// shape: one weight/adjacency matrix on the left, many per-request
+    /// right-hand sides.
+    pub fn submit_shared_a(&self, jobs: Vec<GemmJob>) -> Result<BatchSubmission> {
+        let first = jobs
+            .first()
+            .ok_or_else(|| anyhow!("submit_shared_a needs at least one job"))?;
+        let operand = first.a_id.ok_or_else(|| {
+            anyhow!("submit_shared_a jobs must be built with GemmJob::shared_a")
+        })?;
+        let (m, k, semiring) = (first.m, first.k, first.semiring);
+        let first_epoch = first.a_epoch;
+        let dtype = first.a.dtype_name();
+        let tensor = first.a.clone();
+        for job in &jobs {
+            if job.a_id != Some(operand)
+                || job.a_epoch != first_epoch
+                || job.m != m
+                || job.k != k
+                || job.semiring != semiring
+                || job.a.dtype_name() != dtype
+            {
+                bail!(
+                    "submit_shared_a jobs must share one A operand: got {}x{}x{} {} {} \
+                     (operand {:?}) against shared {m}x{k} {dtype} {semiring} (operand {operand})",
+                    job.m,
+                    job.n,
+                    job.k,
+                    job.a.dtype_name(),
+                    job.semiring,
+                    job.a_id,
+                );
+            }
+        }
+        self.prepack_raw(operand, first_epoch, tensor, PanelSide::A, m, k, semiring)?;
         Ok(self.submit_batch(jobs))
     }
 

@@ -363,6 +363,15 @@ pub fn ambient_gmadds(semiring: Semiring, dtype: &str) -> Option<f64> {
     ambient_tuned(semiring, dtype).map(|cfg| cfg.gmadds)
 }
 
+/// Tuned throughput with a neutral fallback: the measured G madd/s for
+/// `(semiring, dtype)` when a valid on-machine cache has one, else 1.0.
+/// Cost models that rescale madds into seconds (the Strassen depth
+/// selector) call this so untuned machines still get a finite, ordered
+/// estimate rather than an `Option` to thread through.
+pub fn ambient_throughput(semiring: Semiring, dtype: &str) -> f64 {
+    ambient_gmadds(semiring, dtype).unwrap_or(1.0)
+}
+
 /// Full tuned entry for `(semiring, dtype)` (plausible entries only) —
 /// what the cost model and executor consult for the tuned footprint.
 pub fn ambient_tuned(semiring: Semiring, dtype: &str) -> Option<TunedConfig> {

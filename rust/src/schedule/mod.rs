@@ -30,15 +30,24 @@
 //!   k-split with a fixed-order reduction), choosing the split that
 //!   minimizes the maximum per-device host traffic under the same Eq.6
 //!   cost model — the paper's PE-grid decomposition replayed at fleet
-//!   scale, executed by [`crate::coordinator::cluster`].
+//!   scale, executed by [`crate::coordinator::cluster`];
+//! * [`strassen`] — one level *above* the tile schedule: Strassen
+//!   recursion for large ring-semiring GEMMs (plus-times f32/f64, where
+//!   ⊕ has inverses), splitting down to a cost-model-chosen cutoff and
+//!   dispatching the seven sub-products through the packed executor
+//!   path. [`strassen::predict`] scores classical-vs-Strassen per
+//!   (shape, depth) by Eq.6 traffic plus tuned-throughput-rescaled
+//!   madds; non-ring algebras route classical bit-identically.
 
 pub mod executor;
 pub mod loopnest;
 pub mod order;
 pub mod shard;
+pub mod strassen;
 pub mod tiles;
 
 pub use executor::{ExecMode, ExecutorRun, PackedPanels, PanelSide, TiledExecutor};
 pub use order::{Order, PanelSource};
 pub use shard::{DeviceTile, Shard, ShardGrid, ShardPanelSources, ShardPlan};
+pub use strassen::{Algo, RingOps, StrassenRun};
 pub use tiles::{model_tile_shape, model_tile_shape_tuned, HostCacheProfile, Step, TilePlan};

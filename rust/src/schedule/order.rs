@@ -153,6 +153,14 @@ pub fn host_traffic(
     total
 }
 
+/// The minimum of [`host_traffic`] over every traversal order — the
+/// traffic the executor actually pays, since [`Order::select`] is an
+/// argmin over the same model. The shard planner scores candidate
+/// device grids with this.
+pub fn host_traffic_best(m: usize, n: usize, k: usize, tm: usize, tn: usize, tk: usize) -> u64 {
+    Order::ALL.iter().map(|&o| host_traffic(o, m, n, k, tm, tn, tk)).min().unwrap_or(0)
+}
+
 /// Modeled traffic for the seed's no-reuse round-trip schedule: every
 /// step ships A, B, and the C accumulator in *and* out. This is the
 /// baseline the reuse-aware executor is measured against.
@@ -346,6 +354,18 @@ mod tests {
         assert_eq!(packed_b_elements(256, 256, 128, 128), 4 * 16384);
         // Ragged operands pay the padded slab, exactly once per slab.
         assert_eq!(packed_a_elements(130, 100, 128, 128), 2 * 16384);
+    }
+
+    #[test]
+    fn best_matches_selected_order_cost() {
+        for (m, n, k) in [(200, 100, 300), (512, 384, 256), (64, 640, 64), (13, 21, 5)] {
+            let best = Order::select(m, n, k, 128, 64, 32);
+            assert_eq!(
+                host_traffic_best(m, n, k, 128, 64, 32),
+                host_traffic(best, m, n, k, 128, 64, 32),
+                "{m}x{n}x{k}"
+            );
+        }
     }
 
     #[test]

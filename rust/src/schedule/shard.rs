@@ -19,6 +19,12 @@
 //! by fewest k-splits (cheapest reduction, least bracketing), then by
 //! fewest row splits (the enumeration keeps the smallest `dr`, so a
 //! tied pure column split like 1×4×1 wins over its 4×1×1 transpose).
+//! Heterogeneous fleets balance by *device-seconds* instead of raw
+//! elements: [`ShardPlan::plan_weighted`] divides each device's modeled
+//! traffic by a per-device throughput weight (default 1.0; sourced from
+//! the [`crate::runtime::tune`] cache via [`tuned_throughput`]), so a
+//! 2× device absorbs 2× the elements before it becomes the critical
+//! path.
 //!
 //! The resulting [`ShardPlan`] embeds one [`TilePlan`] per shard, so its
 //! predicted traffic is *the same accounting* the per-device executors
@@ -26,8 +32,11 @@
 //! to the cluster's measured transfers and to the independent replay in
 //! [`crate::sim::grid2d::sharded_traffic`] by the conformance suite.
 
+use crate::datatype::Semiring;
+use crate::runtime::tune;
+
 use super::executor::{ExecMode, PanelSource};
-use super::order::{self, Order};
+use super::order;
 use super::tiles::{model_tile_shape, HostCacheProfile, TilePlan};
 
 /// Where one operand's slabs come from for a shard stream, for the
@@ -149,13 +158,20 @@ fn chunk(extent: usize, parts: usize, idx: usize) -> (usize, usize) {
 
 /// Minimal modeled host traffic (elements) of one device executing a
 /// `sub_m × sub_n × sub_k` sub-problem on `tile` — the Eq.6-style cost
-/// [`Order::select`] minimizes, evaluated without building a plan.
+/// [`order::host_traffic_best`] computes (what `Order::select`
+/// minimizes), evaluated without building a plan.
 fn device_traffic(sub_m: usize, sub_n: usize, sub_k: usize, tile: DeviceTile) -> u64 {
-    Order::ALL
-        .iter()
-        .map(|&o| order::host_traffic(o, sub_m, sub_n, sub_k, tile.m, tile.n, tile.k))
-        .min()
-        .expect("non-empty order set")
+    order::host_traffic_best(sub_m, sub_n, sub_k, tile.m, tile.n, tile.k)
+}
+
+/// Per-device throughput weights for [`ShardPlan::plan_weighted`] from
+/// the on-machine autotune cache: the measured G madd/s for `(semiring,
+/// dtype)` when a valid entry exists, else the neutral 1.0 — replicated
+/// across `n_devices` slots (local fleets share one machine's
+/// measurement; genuinely heterogeneous fleets supply their own
+/// per-device vector).
+pub fn tuned_throughput(semiring: Semiring, dtype: &str, n_devices: usize) -> Vec<f64> {
+    vec![tune::ambient_throughput(semiring, dtype); n_devices]
 }
 
 impl ShardPlan {
@@ -219,15 +235,40 @@ impl ShardPlan {
     /// 4×1×1). With one device this degenerates to a 1×1×1 grid — the
     /// single-device [`TilePlan`] path.
     pub fn plan(m: usize, n: usize, k: usize, tiles: &[DeviceTile]) -> ShardPlan {
+        let uniform = vec![1.0f64; tiles.len()];
+        Self::plan_weighted(m, n, k, tiles, &uniform)
+    }
+
+    /// [`Self::plan`] for heterogeneous fleets: each device's modeled
+    /// traffic is divided by its `throughput` weight before the
+    /// busiest-device argmin, so the critical path is measured in
+    /// *device-seconds* rather than elements and a 2× device absorbs 2×
+    /// the volume before it binds. Uniform weights reproduce
+    /// [`Self::plan`] exactly (same enumeration, same tie-breaks);
+    /// weights come from [`tuned_throughput`] when the autotune cache
+    /// has measured this machine, or from the caller's own fleet
+    /// calibration.
+    pub fn plan_weighted(
+        m: usize,
+        n: usize,
+        k: usize,
+        tiles: &[DeviceTile],
+        throughput: &[f64],
+    ) -> ShardPlan {
         assert!(m > 0 && n > 0 && k > 0, "empty problem");
         assert!(!tiles.is_empty(), "no devices");
+        assert_eq!(throughput.len(), tiles.len(), "one throughput weight per device slot");
+        assert!(
+            throughput.iter().all(|w| w.is_finite() && *w > 0.0),
+            "throughput weights must be positive and finite"
+        );
         let n_dev = tiles.len();
-        let mut best: Option<(u64, u64, ShardGrid)> = None;
+        let mut best: Option<(f64, f64, ShardGrid)> = None;
         for dk in 1..=n_dev.min(k) {
             for dr in 1..=(n_dev / dk).min(m) {
                 for dc in 1..=(n_dev / (dk * dr)).min(n) {
                     let grid = ShardGrid { dr, dc, dk };
-                    let (mut max_t, mut total_t) = (0u64, 0u64);
+                    let (mut max_t, mut total_t) = (0f64, 0f64);
                     for di in 0..dr {
                         let (_, rows) = chunk(m, dr, di);
                         for dj in 0..dc {
@@ -235,7 +276,8 @@ impl ShardPlan {
                             for dks in 0..dk {
                                 let (_, kdepth) = chunk(k, dk, dks);
                                 let device = (di * dc + dj) * dk + dks;
-                                let t = device_traffic(rows, cols, kdepth, tiles[device]);
+                                let t = device_traffic(rows, cols, kdepth, tiles[device]) as f64
+                                    / throughput[device];
                                 max_t = max_t.max(t);
                                 total_t += t;
                             }
@@ -659,6 +701,32 @@ mod tests {
         let p = ShardPlan::plan(512, 512, 512, &tiles(4, T128));
         assert_eq!(p.grid.dk, 1, "ties keep k unsplit (got {})", p.grid);
         assert_eq!(p.reduction_elements(), 0);
+    }
+
+    #[test]
+    fn weighted_planner_steers_work_to_the_fast_device() {
+        // 64³ over two 16³-tile devices. Unweighted, splitting columns
+        // halves the critical path (18688 < 37120 elements), so the
+        // planner picks 1×2×1. With device 0 measured twice as fast,
+        // the whole problem on it costs 37120/2 = 18560 device-seconds
+        // — less than the 18688 the slow device would pay for its half
+        // — so the weighted argmin must flip to 1×1×1 on the fast slot.
+        let devs = tiles(2, T16);
+        let un = ShardPlan::plan_weighted(64, 64, 64, &devs, &[1.0, 1.0]);
+        assert_eq!(un.grid, ShardGrid::new(1, 2, 1));
+        assert_eq!(un, ShardPlan::plan(64, 64, 64, &devs), "uniform weights == plan()");
+        let w = ShardPlan::plan_weighted(64, 64, 64, &devs, &[2.0, 1.0]);
+        assert_eq!(w.grid, ShardGrid::new(1, 1, 1), "1:2 fleet keeps the fast device busy");
+        assert_eq!(w.shards[0].device, 0);
+    }
+
+    #[test]
+    fn tuned_throughput_covers_every_device_slot() {
+        let w = tuned_throughput(Semiring::PlusTimes, "float32", 3);
+        assert_eq!(w.len(), 3);
+        assert!(w.iter().all(|x| x.is_finite() && *x > 0.0));
+        // One machine measurement (or the 1.0 fallback), fleet-wide.
+        assert!(w.iter().all(|x| *x == w[0]));
     }
 
     #[test]

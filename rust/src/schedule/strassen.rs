@@ -1,0 +1,774 @@
+//! Strassen recursion layered over the tiled executor — a *fast
+//! algorithm* above the communication-avoiding schedule.
+//!
+//! The paper's Eq. 6/7 model minimizes data movement for the classical
+//! O(mnk) GEMM; with the tile schedule, the SIMD microkernel, and the
+//! panel caches in place, the remaining multiplicative lever on large
+//! plus-times GEMMs is the *madd count itself*. Strassen's identity
+//! trades one sub-multiplication for O(n²) additions per split — but
+//! the additions need ⊕-inverses (subtraction), so it applies only to
+//! **ring** semirings. Min-plus has no inverse for `min` (once folded,
+//! a minimum cannot be un-taken), and the wrapping integer dtypes are
+//! pinned bit-identical to the classical fold by contract, so all of
+//! them route to the classical path unchanged ([`is_ring`] /
+//! [`resolve`]).
+//!
+//! Structure ("Fast and Practical Strassen's Matrix Multiplication
+//! using FPGAs", arXiv 2406.02088 — Strassen composes cleanly with a
+//! tiled, communication-avoiding substrate):
+//!
+//! * Operands are zero-padded to a multiple of `2^depth` (zero is both
+//!   the ⊕-identity and the ⊗-annihilator of a ring, so padded lanes
+//!   never perturb a result), split into quadrants, and the seven
+//!   Strassen products are dispatched through the **existing packed
+//!   executor path**: each T-operand (a ± linear combination of
+//!   quadrants) packs once into [`PackedPanels`](super::PackedPanels)
+//!   and multiplies via [`TiledExecutor::run_packed`]; the C-quadrant
+//!   combinations fold host-side in a fixed order (deterministic
+//!   floats).
+//! * [`predict`] extends the cost model one level up: per (shape,
+//!   depth) it scores predicted host↔device traffic (Eq. 6 per
+//!   sub-product, `order::host_traffic_packed` at every leaf — the
+//!   seven-fold fresh T-operand shipping *is* the extra T-matrix
+//!   movement), host-side combine traffic, and madds rescaled by the
+//!   tuned per-(semiring, dtype) throughput from `runtime::tune` — so
+//!   the planner picks the algorithm and recursion depth the same way
+//!   it already picks traversal order and tile shape.
+//! * Three-legged pinning carries over: the measured
+//!   `transfer_elements` of a depth-d run, `predict`'s
+//!   `device_traffic_elements`, and the independent recursion-aware
+//!   replay [`crate::sim::strassen_traffic`] are all pinned equal by
+//!   the `strassen` test suite.
+//!
+//! Error contract: floating-point Strassen is *not* bit-identical to
+//! classical — the documented componentwise bound (Higham, *Accuracy
+//! and Stability of Numerical Algorithms*, §23.2) is
+//! `max|Ĉ−C| ≤ 3^d·(k + 5·2^d)·u·k·max|A|·max|B|` for depth `d` with
+//! unit roundoff `u`; the conformance suite asserts it and the bench
+//! gates a far tighter empirical threshold.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::datatype::Semiring;
+use crate::runtime::kernel::{PlusTimesF32, PlusTimesF64, SemiringOps};
+use crate::runtime::tune;
+use crate::runtime::{Element, HostTensor};
+
+use super::executor::TiledExecutor;
+use super::order::{self, Order, PanelSource};
+
+/// Algorithm knob carried by jobs and configs: how a GEMM is evaluated
+/// above the tile schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Algo {
+    /// Let [`predict`] choose: classical, or Strassen at the depth with
+    /// the lowest predicted cost (ring semirings only).
+    #[default]
+    Auto,
+    /// Force the classical tiled schedule (always available).
+    Classical,
+    /// Force Strassen at the given recursion depth, clamped to what the
+    /// problem/tile geometry supports ([`max_feasible_depth`]); depth 0
+    /// — or any non-ring algebra — degenerates to classical.
+    Strassen { depth: usize },
+}
+
+/// Ring extension of [`SemiringOps`]: ⊕ has inverses, i.e. subtraction
+/// exists. Only the true arithmetic rings among the kernel's
+/// instantiations implement it — plus-times f32/f64. Min-plus cannot
+/// (min has no inverse), and the wrapping integer dtypes deliberately
+/// do not: they are rings arithmetically, but their contract is
+/// bit-identity with the classical ascending-k fold, which Strassen's
+/// re-association cannot honor.
+pub trait RingOps: SemiringOps {
+    /// `a ⊖ b` — the ⊕-inverse composition Strassen's T-operands need.
+    fn sub(self, a: Self::Elem, b: Self::Elem) -> Self::Elem;
+}
+
+impl RingOps for PlusTimesF32 {
+    #[inline(always)]
+    fn sub(self, a: f32, b: f32) -> f32 {
+        a - b
+    }
+}
+
+impl RingOps for PlusTimesF64 {
+    #[inline(always)]
+    fn sub(self, a: f64, b: f64) -> f64 {
+        a - b
+    }
+}
+
+/// Whether `(semiring, dtype)` supports Strassen splits (see
+/// [`RingOps`]). Everything else routes to classical bit-identically.
+pub fn is_ring(semiring: Semiring, dtype: &str) -> bool {
+    semiring == Semiring::PlusTimes && matches!(dtype, "float32" | "float64")
+}
+
+/// Deepest recursion [`Algo::Auto`] will consider. Beyond two levels
+/// the error constant (3^d) and the 7^d sub-product dispatch overhead
+/// outgrow the (7/8)^d madd savings on every shape the bench covers;
+/// an explicit [`Algo::Strassen`] may still request more.
+pub const MAX_AUTO_DEPTH: usize = 2;
+
+/// Hard cap on any recursion depth (a 7^8-product plan is never
+/// sensible; this bounds the clamp loop, not a real use case).
+const MAX_DEPTH: usize = 8;
+
+/// Manifest element width for the dtypes the executor serves.
+fn dtype_bytes(dtype: &str) -> u64 {
+    match dtype {
+        "float64" => 8,
+        _ => 4,
+    }
+}
+
+/// Calibration constants of [`predict`]'s time model. The absolute
+/// scale hardly matters — the classical-vs-Strassen choice depends on
+/// the *ratios* between movement and madd throughput — but each knob
+/// has a measurable meaning and `gmadds` is fed from the autotuner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostParams {
+    /// Host↔device boundary bandwidth, bytes/second (Eq. 6 traffic).
+    pub device_bytes_per_sec: f64,
+    /// Host-memory bandwidth for T-operand forms and C-quadrant folds,
+    /// bytes/second.
+    pub host_bytes_per_sec: f64,
+    /// Kernel throughput in G madd/s — [`tune::ambient_gmadds`] when a
+    /// tuned entry exists for the algebra, else the scalar-era 1.0
+    /// calibration.
+    pub gmadds: f64,
+    /// Fixed cost per base product (plan + pack allocation + kernel
+    /// dispatch), seconds. This is what keeps [`Algo::Auto`] classical
+    /// on small problems where 7^d dispatches cannot amortize.
+    pub dispatch_seconds: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            device_bytes_per_sec: 8.0e9,
+            host_bytes_per_sec: 16.0e9,
+            gmadds: 1.0,
+            dispatch_seconds: 50.0e-6,
+        }
+    }
+}
+
+impl CostParams {
+    /// Defaults with the madd throughput the autotuner measured for
+    /// `(semiring, dtype)` on this machine, when a cache entry exists.
+    pub fn for_algebra(semiring: Semiring, dtype: &str) -> CostParams {
+        CostParams {
+            gmadds: tune::ambient_throughput(semiring, dtype),
+            ..CostParams::default()
+        }
+    }
+}
+
+/// Predicted cost of one (shape, depth) evaluation — depth 0 is the
+/// classical packed schedule, the common yardstick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrassenCost {
+    pub depth: usize,
+    /// Classical sub-products executed: 7^depth.
+    pub base_products: u64,
+    /// Host↔device elements: Eq. 6 packed traffic summed over every
+    /// leaf sub-product (each ships its T-operand panel sets fresh).
+    pub device_traffic_elements: u64,
+    /// Host-side elements written forming quadrants, T-operands, and
+    /// C-quadrant combinations (zero at depth 0).
+    pub host_combine_elements: u64,
+    /// Multiply-adds across all leaves: (7/8)^depth of the padded
+    /// classical count.
+    pub madds: u64,
+    /// The scalar the planner minimizes.
+    pub predicted_seconds: f64,
+}
+
+/// Problem dims rounded up to a multiple of `2^depth` — the zero-padded
+/// geometry every split level halves exactly.
+pub fn padded_dims(m: usize, n: usize, k: usize, depth: usize) -> (usize, usize, usize) {
+    let q = 1usize << depth;
+    (m.div_ceil(q) * q, n.div_ceil(q) * q, k.div_ceil(q) * q)
+}
+
+/// Deepest split for which every leaf sub-product still covers at least
+/// one full tile per dimension — recursing past the tile shape would
+/// hand the executor sub-tile problems and pay pure padding.
+pub fn max_feasible_depth(m: usize, n: usize, k: usize, tile: (usize, usize, usize)) -> usize {
+    let (tm, tn, tk) = tile;
+    let mut depth = 0;
+    while depth < MAX_DEPTH {
+        let next = depth + 1;
+        let (mp, np, kp) = padded_dims(m, n, k, next);
+        if (mp >> next) >= tm && (np >> next) >= tn && (kp >> next) >= tk {
+            depth = next;
+        } else {
+            break;
+        }
+    }
+    depth
+}
+
+/// Eq. 6 packed traffic of the recursion: each leaf ships its (T-)
+/// operand panel sets fresh plus the per-step C partials. Dims must be
+/// divisible by `2^depth` (use [`padded_dims`] first).
+fn device_traffic_rec(m: usize, n: usize, k: usize, tile: (usize, usize, usize), depth: usize) -> u64 {
+    if depth == 0 {
+        let (tm, tn, tk) = tile;
+        order::host_traffic_packed(m, n, k, tm, tn, tk, PanelSource::Fresh, PanelSource::Fresh)
+    } else {
+        7 * device_traffic_rec(m / 2, n / 2, k / 2, tile, depth - 1)
+    }
+}
+
+/// Host-side elements written per recursion node: 4 quadrant extracts
+/// plus 5 T-operand forms per operand side, 8 C-combination folds plus
+/// 4 quadrant pastes — exactly what [`run`] materializes, so the run's
+/// measured `host_combine_elements` pins against this.
+fn combine_elements_rec(m: usize, n: usize, k: usize, depth: usize) -> u64 {
+    if depth == 0 {
+        return 0;
+    }
+    let (m2, n2, k2) = (m / 2, n / 2, k / 2);
+    let here = 9 * (m2 * k2) as u64 + 9 * (k2 * n2) as u64 + 12 * (m2 * n2) as u64;
+    here + 7 * combine_elements_rec(m2, n2, k2, depth - 1)
+}
+
+/// Multiply-adds of the recursion: 7^depth leaves of 1/8^depth volume.
+fn madds_rec(m: usize, n: usize, k: usize, depth: usize) -> u64 {
+    if depth == 0 {
+        (m as u64) * (n as u64) * (k as u64)
+    } else {
+        7 * madds_rec(m / 2, n / 2, k / 2, depth - 1)
+    }
+}
+
+/// Score one (shape, depth): predicted traffic at both memory
+/// boundaries plus madds over the tuned throughput, plus per-product
+/// dispatch. Depth 0 scores the classical packed schedule.
+pub fn predict(
+    m: usize,
+    n: usize,
+    k: usize,
+    tile: (usize, usize, usize),
+    elem_bytes: u64,
+    depth: usize,
+    params: &CostParams,
+) -> StrassenCost {
+    let (mp, np, kp) = padded_dims(m, n, k, depth);
+    let base_products = 7u64.pow(depth as u32);
+    let device_traffic_elements = device_traffic_rec(mp, np, kp, tile, depth);
+    let host_combine_elements = combine_elements_rec(mp, np, kp, depth);
+    let madds = madds_rec(mp, np, kp, depth);
+    let bytes = elem_bytes as f64;
+    let predicted_seconds = device_traffic_elements as f64 * bytes / params.device_bytes_per_sec
+        + host_combine_elements as f64 * bytes / params.host_bytes_per_sec
+        + madds as f64 / (params.gmadds * 1e9)
+        + base_products as f64 * params.dispatch_seconds;
+    StrassenCost {
+        depth,
+        base_products,
+        device_traffic_elements,
+        host_combine_elements,
+        madds,
+        predicted_seconds,
+    }
+}
+
+/// [`predict`] for every feasible depth `0..=min(feasible,
+/// MAX_AUTO_DEPTH)`, ascending.
+pub fn predict_all(
+    m: usize,
+    n: usize,
+    k: usize,
+    tile: (usize, usize, usize),
+    elem_bytes: u64,
+    params: &CostParams,
+) -> Vec<StrassenCost> {
+    let max_depth = max_feasible_depth(m, n, k, tile).min(MAX_AUTO_DEPTH);
+    (0..=max_depth).map(|d| predict(m, n, k, tile, elem_bytes, d, params)).collect()
+}
+
+/// Depth with minimal predicted cost; ties keep the shallower depth
+/// (smaller error constant, fewer dispatches). 0 means classical.
+pub fn select_depth(
+    m: usize,
+    n: usize,
+    k: usize,
+    tile: (usize, usize, usize),
+    elem_bytes: u64,
+    params: &CostParams,
+) -> usize {
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    for cost in predict_all(m, n, k, tile, elem_bytes, params) {
+        if cost.predicted_seconds < best_cost {
+            best = cost.depth;
+            best_cost = cost.predicted_seconds;
+        }
+    }
+    best
+}
+
+/// Smallest square size (multiples of `step`, up to `max_n`) where
+/// [`Algo::Auto`] would leave the classical path — the model-predicted
+/// crossover the bench reports. `None` if classical wins everywhere in
+/// range.
+pub fn predicted_crossover_n(
+    tile: (usize, usize, usize),
+    elem_bytes: u64,
+    params: &CostParams,
+    step: usize,
+    max_n: usize,
+) -> Option<usize> {
+    let step = step.max(1);
+    let mut n = step;
+    while n <= max_n {
+        if select_depth(n, n, n, tile, elem_bytes, params) >= 1 {
+            return Some(n);
+        }
+        n += step;
+    }
+    None
+}
+
+/// Resolve an [`Algo`] to a concrete recursion depth for this executor
+/// and shape. 0 means the classical path — guaranteed for every
+/// non-ring algebra (bit-identity contract) and whenever the geometry
+/// cannot fit a single split.
+pub fn resolve(algo: Algo, exec: &TiledExecutor, m: usize, n: usize, k: usize) -> usize {
+    if !is_ring(exec.semiring(), exec.dtype()) {
+        return 0;
+    }
+    let tile = exec.tile_shape();
+    match algo {
+        Algo::Classical => 0,
+        Algo::Strassen { depth } => depth.min(max_feasible_depth(m, n, k, tile)),
+        Algo::Auto => {
+            let params = CostParams::for_algebra(exec.semiring(), exec.dtype());
+            select_depth(m, n, k, tile, dtype_bytes(exec.dtype()), &params)
+        }
+    }
+}
+
+/// Result of a Strassen-layer run: the output plus the measurements the
+/// three-legged pinning compares (and the service folds into its
+/// stats).
+#[derive(Debug)]
+pub struct StrassenRun<C> {
+    pub c: C,
+    /// Recursion depth actually applied (0 = classical).
+    pub depth: usize,
+    /// Classical sub-products executed (7^depth; 1 when classical).
+    pub base_products: usize,
+    /// Artifact invocations across all sub-products.
+    pub steps_executed: usize,
+    /// Measured host↔device elements: every leaf's fresh packed panel
+    /// sets plus its C-partial traffic — pinned equal to
+    /// [`predict`]'s `device_traffic_elements` and to
+    /// [`crate::sim::strassen_traffic`].
+    pub transfer_elements: u64,
+    /// Host-side elements written for quadrant/T/C combines — pinned
+    /// equal to [`predict`]'s `host_combine_elements`.
+    pub host_combine_elements: u64,
+    pub wall: Duration,
+}
+
+impl<C> StrassenRun<C> {
+    /// Repackage the output container, keeping every measurement.
+    pub fn map_c<U>(self, f: impl FnOnce(C) -> U) -> StrassenRun<U> {
+        StrassenRun {
+            c: f(self.c),
+            depth: self.depth,
+            base_products: self.base_products,
+            steps_executed: self.steps_executed,
+            transfer_elements: self.transfer_elements,
+            host_combine_elements: self.host_combine_elements,
+            wall: self.wall,
+        }
+    }
+}
+
+#[derive(Default)]
+struct RunStats {
+    transfer: u64,
+    steps: usize,
+    base_products: usize,
+    host_combine: u64,
+}
+
+/// Copy a `rows×cols` block out of a row-major matrix.
+fn block<E: Copy>(
+    src: &[E],
+    stride: usize,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+) -> Vec<E> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        let off = (row0 + r) * stride + col0;
+        out.extend_from_slice(&src[off..off + cols]);
+    }
+    out
+}
+
+/// Paste a `rows×cols` block into a row-major matrix.
+fn paste<E: Copy>(
+    dst: &mut [E],
+    stride: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    blk: &[E],
+) {
+    for r in 0..rows {
+        let off = (row0 + r) * stride + col0;
+        dst[off..off + cols].copy_from_slice(&blk[r * cols..(r + 1) * cols]);
+    }
+}
+
+fn add_v<S: RingOps>(sr: S, x: &[S::Elem], y: &[S::Elem]) -> Vec<S::Elem> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&p, &q)| sr.add(p, q)).collect()
+}
+
+fn sub_v<S: RingOps>(sr: S, x: &[S::Elem], y: &[S::Elem]) -> Vec<S::Elem> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&p, &q)| sr.sub(p, q)).collect()
+}
+
+/// Zero-pad a `rows×cols` matrix to `prows×pcols`.
+fn pad_matrix<E: Copy>(
+    src: &[E],
+    rows: usize,
+    cols: usize,
+    prows: usize,
+    pcols: usize,
+    zero: E,
+) -> Vec<E> {
+    let mut out = vec![zero; prows * pcols];
+    for r in 0..rows {
+        out[r * pcols..r * pcols + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// The recursion: dims are divisible by `2^depth` by construction. At
+/// depth 0 the sub-product runs the packed executor path end to end —
+/// pack both (T-)operands, multiply under the traffic-minimal order —
+/// so each leaf's measured traffic is exactly the Eq. 6 packed model.
+fn recurse<S>(
+    exec: &TiledExecutor,
+    sr: S,
+    a: &[S::Elem],
+    b: &[S::Elem],
+    m: usize,
+    n: usize,
+    k: usize,
+    depth: usize,
+    stats: &mut RunStats,
+) -> Result<Vec<S::Elem>>
+where
+    S: RingOps,
+    S::Elem: Element,
+{
+    if depth == 0 {
+        let pa = exec.pack_a(sr, a, m, k)?;
+        let pb = exec.pack_b(sr, b, k, n)?;
+        let (tm, tn, tk) = exec.tile_shape();
+        let order = Order::select(m, n, k, tm, tn, tk);
+        let leaf = exec.run_packed(sr, &pa, &pb, order)?;
+        stats.transfer += pa.elements() + pb.elements() + leaf.transfer_elements;
+        stats.steps += leaf.steps_executed;
+        stats.base_products += 1;
+        return Ok(leaf.c);
+    }
+    let (m2, n2, k2) = (m / 2, n / 2, k / 2);
+
+    // Quadrants (4 extracts per side — counted in host_combine).
+    let a11 = block(a, k, 0, m2, 0, k2);
+    let a12 = block(a, k, 0, m2, k2, k2);
+    let a21 = block(a, k, m2, m2, 0, k2);
+    let a22 = block(a, k, m2, m2, k2, k2);
+    let b11 = block(b, n, 0, k2, 0, n2);
+    let b12 = block(b, n, 0, k2, n2, n2);
+    let b21 = block(b, n, k2, k2, 0, n2);
+    let b22 = block(b, n, k2, k2, n2, n2);
+    stats.host_combine += 4 * (m2 * k2) as u64 + 4 * (k2 * n2) as u64;
+
+    // T-operands (5 forms per side — counted in host_combine). The
+    // leaves below pack each of these into fresh PackedPanels: that
+    // seven-fold fresh shipping is the "extra T-matrix movement" the
+    // cost model charges.
+    let ta1 = add_v(sr, &a11, &a22); // P1 left
+    let ta2 = add_v(sr, &a21, &a22); // P2 left
+    let ta5 = add_v(sr, &a11, &a12); // P5 left
+    let ta6 = sub_v(sr, &a21, &a11); // P6 left
+    let ta7 = sub_v(sr, &a12, &a22); // P7 left
+    let tb1 = add_v(sr, &b11, &b22); // P1 right
+    let tb3 = sub_v(sr, &b12, &b22); // P3 right
+    let tb4 = sub_v(sr, &b21, &b11); // P4 right
+    let tb6 = add_v(sr, &b11, &b12); // P6 right
+    let tb7 = add_v(sr, &b21, &b22); // P7 right
+    stats.host_combine += 5 * (m2 * k2) as u64 + 5 * (k2 * n2) as u64;
+
+    // The seven products, each one level shallower.
+    let p1 = recurse(exec, sr, &ta1, &tb1, m2, n2, k2, depth - 1, stats)?;
+    let p2 = recurse(exec, sr, &ta2, &b11, m2, n2, k2, depth - 1, stats)?;
+    let p3 = recurse(exec, sr, &a11, &tb3, m2, n2, k2, depth - 1, stats)?;
+    let p4 = recurse(exec, sr, &a22, &tb4, m2, n2, k2, depth - 1, stats)?;
+    let p5 = recurse(exec, sr, &ta5, &b22, m2, n2, k2, depth - 1, stats)?;
+    let p6 = recurse(exec, sr, &ta6, &tb6, m2, n2, k2, depth - 1, stats)?;
+    let p7 = recurse(exec, sr, &ta7, &tb7, m2, n2, k2, depth - 1, stats)?;
+
+    // C-quadrant combinations, in a fixed association order so float
+    // results are deterministic (8 folds + 4 pastes in host_combine).
+    let c11 = add_v(sr, &sub_v(sr, &add_v(sr, &p1, &p4), &p5), &p7);
+    let c12 = add_v(sr, &p3, &p5);
+    let c21 = add_v(sr, &p2, &p4);
+    let c22 = add_v(sr, &add_v(sr, &sub_v(sr, &p1, &p2), &p3), &p6);
+    stats.host_combine += 8 * (m2 * n2) as u64;
+    let mut c = vec![sr.zero(); m * n];
+    paste(&mut c, n, 0, 0, m2, n2, &c11);
+    paste(&mut c, n, 0, n2, m2, n2, &c12);
+    paste(&mut c, n, m2, 0, m2, n2, &c21);
+    paste(&mut c, n, m2, n2, m2, n2, &c22);
+    stats.host_combine += 4 * (m2 * n2) as u64;
+    Ok(c)
+}
+
+/// Run a GEMM through the Strassen layer at an explicit depth (clamped
+/// to the feasible maximum). Depth 0 is **exactly** the classical
+/// [`TiledExecutor::run`] — same code path, bit-identical results —
+/// which is how sub-cutoff shapes and forced-classical jobs keep the
+/// executor's contracts untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn run<S>(
+    exec: &TiledExecutor,
+    sr: S,
+    a: &[S::Elem],
+    b: &[S::Elem],
+    m: usize,
+    n: usize,
+    k: usize,
+    depth: usize,
+) -> Result<StrassenRun<Vec<S::Elem>>>
+where
+    S: RingOps,
+    S::Elem: Element,
+{
+    if m == 0 || n == 0 || k == 0 {
+        bail!("empty problem {m}x{n}x{k}");
+    }
+    if a.len() != m * k {
+        bail!("A is {} elements, expected {m}x{k}", a.len());
+    }
+    if b.len() != k * n {
+        bail!("B is {} elements, expected {k}x{n}", b.len());
+    }
+    let t0 = Instant::now();
+    let depth = depth.min(max_feasible_depth(m, n, k, exec.tile_shape()));
+    if depth == 0 {
+        let classical = exec.run(sr, a, b, m, n, k)?;
+        return Ok(StrassenRun {
+            c: classical.c,
+            depth: 0,
+            base_products: 1,
+            steps_executed: classical.steps_executed,
+            transfer_elements: classical.transfer_elements,
+            host_combine_elements: 0,
+            wall: t0.elapsed(),
+        });
+    }
+    let (mp, np, kp) = padded_dims(m, n, k, depth);
+    let (ap_store, bp_store);
+    let ap: &[S::Elem] = if (mp, kp) == (m, k) {
+        a
+    } else {
+        ap_store = pad_matrix(a, m, k, mp, kp, sr.zero());
+        &ap_store
+    };
+    let bp: &[S::Elem] = if (kp, np) == (k, n) {
+        b
+    } else {
+        bp_store = pad_matrix(b, k, n, kp, np, sr.zero());
+        &bp_store
+    };
+    let mut stats = RunStats::default();
+    let cp = recurse(exec, sr, ap, bp, mp, np, kp, depth, &mut stats)?;
+    let c = if (mp, np) == (m, n) { cp } else { block(&cp, np, 0, m, 0, n) };
+    Ok(StrassenRun {
+        c,
+        depth,
+        base_products: stats.base_products,
+        steps_executed: stats.steps,
+        transfer_elements: stats.transfer,
+        host_combine_elements: stats.host_combine,
+        wall: t0.elapsed(),
+    })
+}
+
+/// Enum-level entry the service dispatches through: resolve the
+/// [`Algo`] against the executor's algebra and the problem geometry,
+/// then run Strassen (ring semirings at depth ≥ 1) or fall through to
+/// the classical [`TiledExecutor::run_tensor`] — the **same call** the
+/// classical service path makes, so non-ring algebras and
+/// depth-0 resolutions are bit-identical to it by construction.
+pub fn run_tensor(
+    exec: &TiledExecutor,
+    a: &HostTensor,
+    b: &HostTensor,
+    m: usize,
+    n: usize,
+    k: usize,
+    algo: Algo,
+) -> Result<StrassenRun<HostTensor>> {
+    let depth = resolve(algo, exec, m, n, k);
+    if depth == 0 {
+        let t0 = Instant::now();
+        let classical = exec.run_tensor(a, b, m, n, k)?;
+        return Ok(StrassenRun {
+            c: classical.c,
+            depth: 0,
+            base_products: 1,
+            steps_executed: classical.steps_executed,
+            transfer_elements: classical.transfer_elements,
+            host_combine_elements: 0,
+            wall: t0.elapsed(),
+        });
+    }
+    use HostTensor as H;
+    match (exec.semiring(), a, b) {
+        (Semiring::PlusTimes, H::F32(av), H::F32(bv)) => {
+            run(exec, PlusTimesF32, av, bv, m, n, k, depth).map(|r| r.map_c(H::F32))
+        }
+        (Semiring::PlusTimes, H::F64(av), H::F64(bv)) => {
+            run(exec, PlusTimesF64, av, bv, m, n, k, depth).map(|r| r.map_c(H::F64))
+        }
+        (semiring, a, b) => bail!(
+            "no Strassen instantiation for {semiring} over {}/{} operands",
+            a.dtype_name(),
+            b.dtype_name()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TILE16: (usize, usize, usize) = (16, 16, 16);
+
+    #[test]
+    fn ring_predicate_matches_contract() {
+        assert!(is_ring(Semiring::PlusTimes, "float32"));
+        assert!(is_ring(Semiring::PlusTimes, "float64"));
+        assert!(!is_ring(Semiring::PlusTimes, "int32"));
+        assert!(!is_ring(Semiring::PlusTimes, "uint32"));
+        assert!(!is_ring(Semiring::MinPlus, "float32"));
+    }
+
+    #[test]
+    fn padded_dims_round_up_to_power_of_two_multiples() {
+        assert_eq!(padded_dims(100, 75, 33, 0), (100, 75, 33));
+        assert_eq!(padded_dims(100, 75, 33, 1), (100, 76, 34));
+        assert_eq!(padded_dims(100, 75, 33, 2), (100, 76, 36));
+        assert_eq!(padded_dims(128, 128, 128, 2), (128, 128, 128));
+    }
+
+    #[test]
+    fn feasible_depth_respects_tile_floor() {
+        // 64³ over 16³ tiles: halves of 32 and 16 still cover a tile;
+        // a third split (8) would not.
+        assert_eq!(max_feasible_depth(64, 64, 64, TILE16), 2);
+        // 16³ cannot split at all.
+        assert_eq!(max_feasible_depth(16, 16, 16, TILE16), 0);
+        // The narrowest dimension limits the whole recursion.
+        assert_eq!(max_feasible_depth(1024, 1024, 16, TILE16), 0);
+        // 2048 >> 4 = 128: leaves bottom out at exactly one tile.
+        assert_eq!(max_feasible_depth(2048, 2048, 2048, (128, 128, 128)), 4);
+    }
+
+    #[test]
+    fn predict_depth0_is_classical_packed_traffic() {
+        let params = CostParams::default();
+        let c = predict(96, 80, 112, TILE16, 4, 0, &params);
+        assert_eq!(c.base_products, 1);
+        assert_eq!(c.host_combine_elements, 0);
+        assert_eq!(c.madds, 96 * 80 * 112);
+        assert_eq!(
+            c.device_traffic_elements,
+            order::host_traffic_packed(
+                96,
+                80,
+                112,
+                16,
+                16,
+                16,
+                PanelSource::Fresh,
+                PanelSource::Fresh
+            )
+        );
+    }
+
+    #[test]
+    fn predict_depth1_is_seven_half_problems() {
+        let params = CostParams::default();
+        let d1 = predict(128, 128, 128, TILE16, 4, 1, &params);
+        assert_eq!(d1.base_products, 7);
+        assert_eq!(
+            d1.device_traffic_elements,
+            7 * order::host_traffic_packed(
+                64,
+                64,
+                64,
+                16,
+                16,
+                16,
+                PanelSource::Fresh,
+                PanelSource::Fresh
+            )
+        );
+        // 7/8 of the classical madds.
+        assert_eq!(d1.madds, 7 * 64 * 64 * 64);
+        // One split level: 9 A-side + 9 B-side + 12 C-side quadrant
+        // volumes.
+        assert_eq!(d1.host_combine_elements, (9 + 9 + 12) * 64 * 64);
+    }
+
+    #[test]
+    fn auto_depth_prefers_classical_small_and_strassen_large() {
+        let params = CostParams::default();
+        // Tiny problem: 7 dispatches can never amortize.
+        assert_eq!(select_depth(32, 32, 32, TILE16, 4, &params), 0);
+        // Large plus-times GEMM: the madd savings dominate.
+        assert!(select_depth(2048, 2048, 2048, (128, 128, 128), 4, &params) >= 1);
+        // A fast tuned kernel shifts the crossover up but not away.
+        let fast = CostParams { gmadds: 50.0, ..CostParams::default() };
+        assert!(select_depth(2048, 2048, 2048, (128, 128, 128), 4, &fast) >= 1);
+    }
+
+    #[test]
+    fn crossover_scan_finds_a_finite_threshold() {
+        let params = CostParams::default();
+        let n = predicted_crossover_n((128, 128, 128), 4, &params, 64, 4096)
+            .expect("crossover in range");
+        assert!(n >= 256, "crossover {n} below first feasible split");
+        assert_eq!(select_depth(n - 64, n - 64, n - 64, (128, 128, 128), 4, &params), 0);
+    }
+
+    #[test]
+    fn combine_accounting_matches_hand_count_depth2() {
+        // Depth 2 on 64³: level 1 contributes 30·32², each of the 7
+        // children contributes 30·16².
+        let per = |h: usize| (30 * h * h) as u64;
+        assert_eq!(combine_elements_rec(64, 64, 64, 2), per(32) + 7 * per(16));
+    }
+}

@@ -21,7 +21,9 @@
 //! implements the prior-work double-buffered-C designs (the √2 intensity
 //! penalty) plus naive/ideal reference schedules; [`wire`] replays the
 //! socket transport's per-link payload stream to pin tracked wire bytes
-//! against the same Eq. 6 accounting.
+//! against the same Eq. 6 accounting; [`strassen`] walks the Strassen
+//! layer's recursion tree and replays every leaf's step stream, the
+//! independent third leg of the fast-algorithm traffic pinning.
 
 pub mod bandwidth;
 pub mod baseline;
@@ -30,10 +32,12 @@ pub mod exact;
 pub mod fifo;
 pub mod grid2d;
 pub mod stats;
+pub mod strassen;
 pub mod wire;
 
 pub use chain::simulate_timeline;
 pub use exact::ExactSim;
 pub use grid2d::{sharded_traffic, ShardTraffic};
 pub use stats::SimReport;
+pub use strassen::{strassen_traffic, StrassenTraffic};
 pub use wire::{wire_traffic, wire_traffic_cached, WireTraffic};

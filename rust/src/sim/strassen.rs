@@ -1,0 +1,142 @@
+//! Recursion-aware replay of the Strassen layer's host↔device traffic.
+//!
+//! The third leg of the Strassen pinning: `schedule::strassen` predicts
+//! its device traffic with the closed-form Eq. 6 packed model summed
+//! over leaves, and the run measures what it actually shipped; this
+//! module re-derives the same number by *simulation* — it walks the
+//! recursion tree the way the layer dispatches it (seven sub-products
+//! per split, each one level shallower) and replays every leaf's
+//! [`TilePlan`] step stream through [`grid2d::packed_traffic`], which
+//! charges slabs by step identity rather than by formula. The padding
+//! geometry is re-derived here too, so a bug in the layer's rounding
+//! cannot cancel against the model's.
+//!
+//! Leaves replay with both panel sources `Fresh`: every T-operand is a
+//! new linear combination, packed and shipped for exactly one
+//! sub-product — the "extra T-matrix movement" the cost model charges.
+
+use crate::schedule::{PanelSource, TilePlan};
+
+use super::grid2d;
+
+/// What the replay measured for one (shape, depth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StrassenTraffic {
+    /// Recursion depth replayed (0 = the classical packed run).
+    pub depth: usize,
+    /// Leaf sub-products dispatched: 7^depth.
+    pub base_products: u64,
+    /// Host↔device elements across every leaf's step replay.
+    pub total: u64,
+}
+
+/// Round `x` up to a multiple of `q`.
+fn pad_up(x: usize, q: usize) -> usize {
+    x.div_ceil(q) * q
+}
+
+fn replay(
+    m: usize,
+    n: usize,
+    k: usize,
+    tile: (usize, usize, usize),
+    depth: usize,
+    out: &mut StrassenTraffic,
+) {
+    if depth == 0 {
+        let (tm, tn, tk) = tile;
+        let plan = TilePlan::auto(m, n, k, tm, tn, tk);
+        out.total += grid2d::packed_traffic(&plan, PanelSource::Fresh, PanelSource::Fresh);
+        out.base_products += 1;
+        return;
+    }
+    // Seven sub-products per split, each replayed individually — the
+    // dispatch structure, not a 7× shortcut, so a miscounted recursion
+    // would show up here.
+    for _ in 0..7 {
+        replay(m / 2, n / 2, k / 2, tile, depth - 1, out);
+    }
+}
+
+/// Replay a depth-`depth` Strassen evaluation of an `m×n×k` GEMM over
+/// `tile`-shaped leaf plans and measure its host↔device traffic by
+/// step-stream simulation. Pinned equal to
+/// `schedule::strassen::predict(..).device_traffic_elements` and to the
+/// run's measured `transfer_elements` by the `strassen` test suite.
+pub fn strassen_traffic(
+    m: usize,
+    n: usize,
+    k: usize,
+    tile: (usize, usize, usize),
+    depth: usize,
+) -> StrassenTraffic {
+    let q = 1usize << depth;
+    let (mp, np, kp) = (pad_up(m, q), pad_up(n, q), pad_up(k, q));
+    let mut out = StrassenTraffic { depth, base_products: 0, total: 0 };
+    replay(mp, np, kp, tile, depth, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::order;
+
+    #[test]
+    fn depth0_replay_is_the_classical_packed_run() {
+        let t = strassen_traffic(96, 80, 112, (16, 16, 16), 0);
+        assert_eq!(t.base_products, 1);
+        assert_eq!(
+            t.total,
+            order::host_traffic_packed(
+                96,
+                80,
+                112,
+                16,
+                16,
+                16,
+                PanelSource::Fresh,
+                PanelSource::Fresh
+            )
+        );
+    }
+
+    #[test]
+    fn depth1_replay_is_seven_half_leaves() {
+        let t = strassen_traffic(128, 128, 128, (16, 16, 16), 1);
+        assert_eq!(t.base_products, 7);
+        assert_eq!(
+            t.total,
+            7 * order::host_traffic_packed(
+                64,
+                64,
+                64,
+                16,
+                16,
+                16,
+                PanelSource::Fresh,
+                PanelSource::Fresh
+            )
+        );
+    }
+
+    #[test]
+    fn ragged_shapes_pad_before_splitting() {
+        // 100×75×33 at depth 2 pads to 100×76×36; leaves are quarters.
+        let t = strassen_traffic(100, 75, 33, (16, 16, 16), 2);
+        assert_eq!(t.base_products, 49);
+        assert_eq!(
+            t.total,
+            49 * order::host_traffic_packed(
+                25,
+                19,
+                9,
+                16,
+                16,
+                16,
+                PanelSource::Fresh,
+                PanelSource::Fresh
+            )
+        );
+    }
+}

@@ -254,6 +254,84 @@ fn service_shared_b_records_zero_operand_bytes_on_hits() {
 }
 
 #[test]
+fn service_shared_a_records_zero_operand_bytes_on_hits() {
+    // The transpose deployment: one shared A swept by per-request Bs.
+    // submit_shared_a prepacks A once; every job then hits, shipping
+    // zero A bytes — the mirror of the shared-B contract above.
+    let config = ServiceConfig {
+        queue_capacity: 8,
+        pipeline_depth: 2,
+        profile: tight(),
+        ..ServiceConfig::default()
+    };
+    let service = GemmService::start_with_config(
+        PathBuf::from("/nonexistent/artifacts"),
+        1,
+        config,
+    )
+    .expect("service");
+    let mut rng = Rng::new(0xFACE);
+    let (m, n, k) = (40usize, 25usize, 33usize);
+    let a: Vec<f32> = rng.fill_normal_f32(m * k);
+    let a_op = SharedOperand::new(HostTensor::F32(a.clone()));
+
+    let rt = Runtime::native_default().unwrap();
+    let exec = TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float32", &tight())
+        .unwrap();
+    let (tm, tn, tk) = exec.tile_shape();
+    let order = Order::select(m, n, k, tm, tn, tk);
+    let plan = TilePlan::with_order(m, n, k, tm, tn, tk, order);
+    let pa = exec.pack_a_tensor(&HostTensor::F32(a.clone()), m, k).unwrap();
+
+    let b_mats: Vec<Vec<f32>> = (0..4).map(|_| rng.fill_normal_f32(k * n)).collect();
+    let jobs: Vec<GemmJob> = b_mats
+        .iter()
+        .map(|b| {
+            GemmJob::shared_a(m, n, k, &a_op, HostTensor::F32(b.clone()), Semiring::PlusTimes)
+        })
+        .collect();
+    let (rx, base_id, count) = service.submit_shared_a(jobs).expect("submit_shared_a");
+    assert_eq!(count, 4);
+    use PanelSource::{Cached, Fresh};
+    for _ in 0..count {
+        let resp = rx.recv().expect("response").expect("success");
+        assert_eq!(resp.a_panels, Cached, "prepack swept A before the fan-out");
+        assert_eq!(resp.b_panels, Fresh, "per-request B packs fresh");
+        // Zero A wire bytes on every request: measured == plan.
+        assert_eq!(resp.transfer_elements, plan.transfer_elements_packed(Cached, Fresh));
+        // Bit-identity with the fused single-executor run.
+        let b = &b_mats[(resp.id - base_id) as usize];
+        let fused = exec
+            .run_tensor_with(
+                &HostTensor::F32(a.clone()),
+                &HostTensor::F32(b.clone()),
+                m,
+                n,
+                k,
+                order,
+                ExecMode::Reuse,
+            )
+            .unwrap();
+        assert_eq!(resp.c, fused.c, "cached-A response vs fused executor");
+    }
+    // Aggregate: the prepack's fresh A panels plus four C+fresh-B
+    // request transfers — A counted exactly once.
+    let total = service
+        .stats
+        .total_transfer_elements
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(
+        total,
+        pa.elements() + count as u64 * plan.transfer_elements_packed(Cached, Fresh)
+    );
+    let c = service.panel_counters();
+    assert_eq!(c.misses, 1, "{c:?}");
+    assert_eq!(c.hits, count as u64, "{c:?}");
+    assert_eq!(c.evictions, 0, "{c:?}");
+    service.shutdown();
+}
+
+#[test]
 fn service_counters_match_sim_replay_under_eviction_pressure() {
     // Panel budget sized for exactly two resident B panel sets: a
     // three-operand round-robin forces evictions, and the live counters

@@ -1,0 +1,311 @@
+//! Strassen-layer conformance: the fast-algorithm recursion over the
+//! tiled executor, pinned three ways.
+//!
+//! * **Bit-identity** — every non-ring algebra (min-plus, wrapping
+//!   integers) and every sub-cutoff shape routes through the classical
+//!   path bit-identically, whatever [`Algo`] a job asks for. Strassen
+//!   never perturbs the executor's existing contracts.
+//! * **Error bound** — ring (plus-times float) Strassen results sit
+//!   inside the documented componentwise bound
+//!   `max|Ĉ−C| ≤ 3^d·(k + 5·2^d)·u·k·max|A|·max|B|` (Higham §23.2)
+//!   against a naive oracle, across ragged/odd shapes at depths 1–2,
+//!   and are themselves deterministic run to run.
+//! * **Traffic** — a depth-d run's measured `transfer_elements`, the
+//!   cost model's `predict(..).device_traffic_elements`, and the
+//!   independent recursion replay `sim::strassen_traffic(..).total`
+//!   are all equal, and host-side combine volume pins the same way.
+//!
+//! The service-level test pins the [`GemmService`] wiring: a forced
+//! Strassen job on private ring operands ships exactly the replayed
+//! traffic, while classical and non-ring jobs keep the packed plan's
+//! accounting untouched.
+
+use std::path::PathBuf;
+
+use fcamm::coordinator::{GemmJob, GemmService, ServiceConfig};
+use fcamm::datatype::Semiring;
+use fcamm::runtime::kernel::{oracle, PlusTimesF32, PlusTimesF64};
+use fcamm::runtime::{HostTensor, Runtime};
+use fcamm::schedule::strassen::{self, max_feasible_depth, predict, CostParams};
+use fcamm::schedule::{Algo, HostCacheProfile, Order, PanelSource, TiledExecutor, TilePlan};
+use fcamm::sim::strassen_traffic;
+use fcamm::util::rng::Rng;
+
+/// The 16 KiB profile every conformance suite uses: 16³ tiles, so
+/// test-sized problems are multi-tile and depth-2 splits stay feasible.
+fn tight() -> HostCacheProfile {
+    HostCacheProfile::with_capacity(16 * 1024)
+}
+
+const TILE16: (usize, usize, usize) = (16, 16, 16);
+
+fn max_abs_f32(v: &[f32]) -> f64 {
+    v.iter().fold(0f64, |acc, &x| acc.max((x as f64).abs()))
+}
+
+fn max_abs_f64(v: &[f64]) -> f64 {
+    v.iter().fold(0f64, |acc, &x| acc.max(x.abs()))
+}
+
+/// Componentwise tolerance for a depth-`d` Strassen result compared to
+/// the naive ascending-k oracle: the Higham §23.2 Strassen bound plus a
+/// `k`-term covering the oracle's own classical rounding.
+fn strassen_tol(d: usize, k: usize, u: f64, amax: f64, bmax: f64) -> f64 {
+    let three_d = 3f64.powi(d as i32);
+    let two_d = 2f64.powi(d as i32);
+    (three_d * (k as f64 + 5.0 * two_d) + k as f64) * u * k as f64 * amax * bmax
+}
+
+#[test]
+fn non_ring_algebras_route_classical_bit_identically() {
+    let rt = Runtime::native_default().unwrap();
+    let mut rng = Rng::new(0x57A5);
+    let (m, n, k) = (96usize, 80usize, 112usize); // deep enough for 2 ring splits
+    let cases: [(Semiring, &str); 3] = [
+        (Semiring::MinPlus, "float32"),
+        (Semiring::PlusTimes, "int32"),
+        (Semiring::PlusTimes, "uint32"),
+    ];
+    for (semiring, dtype) in cases {
+        let exec = TiledExecutor::for_algebra_with(&rt, semiring, dtype, &tight()).unwrap();
+        let (a, b) = match dtype {
+            "int32" => (
+                HostTensor::I32((0..m * k).map(|_| rng.next_u32() as i32).collect()),
+                HostTensor::I32((0..k * n).map(|_| rng.next_u32() as i32).collect()),
+            ),
+            "uint32" => (
+                HostTensor::U32((0..m * k).map(|_| rng.next_u32()).collect()),
+                HostTensor::U32((0..k * n).map(|_| rng.next_u32()).collect()),
+            ),
+            _ => (
+                HostTensor::F32(rng.fill_normal_f32(m * k)),
+                HostTensor::F32(rng.fill_normal_f32(k * n)),
+            ),
+        };
+        let classical = exec.run_tensor(&a, &b, m, n, k).unwrap();
+        for algo in [Algo::Auto, Algo::Classical, Algo::Strassen { depth: 2 }] {
+            assert_eq!(
+                strassen::resolve(algo, &exec, m, n, k),
+                0,
+                "{semiring}/{dtype} {algo:?}: non-ring must resolve classical"
+            );
+            let run = strassen::run_tensor(&exec, &a, &b, m, n, k, algo).unwrap();
+            assert_eq!(run.depth, 0);
+            assert_eq!(run.base_products, 1);
+            assert_eq!(run.host_combine_elements, 0);
+            assert_eq!(run.c, classical.c, "{semiring}/{dtype} {algo:?}: bit-identity");
+            assert_eq!(run.transfer_elements, classical.transfer_elements);
+            assert_eq!(run.steps_executed, classical.steps_executed);
+        }
+    }
+}
+
+#[test]
+fn sub_cutoff_ring_shapes_degenerate_to_classical() {
+    let rt = Runtime::native_default().unwrap();
+    let exec =
+        TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float32", &tight()).unwrap();
+    let mut rng = Rng::new(0x5CA1E);
+    // One single tile, and a ragged shape whose halves undercut the
+    // tile floor (40×25×33 pads to 40×26×34; 13 < 16): neither admits
+    // even one split.
+    for (m, n, k) in [(16usize, 16usize, 16usize), (40, 25, 33)] {
+        assert_eq!(max_feasible_depth(m, n, k, exec.tile_shape()), 0);
+        let a = HostTensor::F32(rng.fill_normal_f32(m * k));
+        let b = HostTensor::F32(rng.fill_normal_f32(k * n));
+        let classical = exec.run_tensor(&a, &b, m, n, k).unwrap();
+        // Even a forced deep request clamps to the classical path.
+        let run =
+            strassen::run_tensor(&exec, &a, &b, m, n, k, Algo::Strassen { depth: 3 }).unwrap();
+        assert_eq!(run.depth, 0, "{m}x{n}x{k}: infeasible split must clamp to 0");
+        assert_eq!(run.c, classical.c, "{m}x{n}x{k}: sub-cutoff bit-identity");
+        assert_eq!(run.transfer_elements, classical.transfer_elements);
+    }
+}
+
+#[test]
+fn ring_strassen_f32_within_documented_error_bound() {
+    let rt = Runtime::native_default().unwrap();
+    let exec =
+        TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float32", &tight()).unwrap();
+    let mut rng = Rng::new(0xE44);
+    let u = f32::EPSILON as f64 / 2.0;
+    for (m, n, k) in [(96usize, 80usize, 112usize), (100, 75, 33), (64, 64, 64)] {
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        // Near-exact reference: the product in f64.
+        let a64: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+        let b64: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+        let exact = oracle::gemm_f64(&a64, &b64, m, n, k);
+        let (amax, bmax) = (max_abs_f32(&a), max_abs_f32(&b));
+        for depth in [1usize, 2] {
+            let want_depth = depth.min(max_feasible_depth(m, n, k, exec.tile_shape()));
+            let run = strassen::run(&exec, PlusTimesF32, &a, &b, m, n, k, depth).unwrap();
+            assert_eq!(run.depth, want_depth, "{m}x{n}x{k} depth {depth}: clamp");
+            assert_eq!(run.base_products, 7usize.pow(want_depth as u32));
+            let tol = strassen_tol(run.depth, k, u, amax, bmax);
+            for (i, (&got, &want)) in run.c.iter().zip(&exact).enumerate() {
+                let err = (got as f64 - want).abs();
+                assert!(
+                    err <= tol,
+                    "{m}x{n}x{k} depth {}: |Ĉ−C| = {err:.3e} > {tol:.3e} at element {i}",
+                    run.depth
+                );
+            }
+            // Fixed combine association: results are deterministic bits.
+            let again = strassen::run(&exec, PlusTimesF32, &a, &b, m, n, k, depth).unwrap();
+            assert_eq!(again.c, run.c, "{m}x{n}x{k} depth {depth}: determinism");
+        }
+    }
+}
+
+#[test]
+fn ring_strassen_f64_within_documented_error_bound() {
+    let rt = Runtime::native_default().unwrap();
+    let exec =
+        TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float64", &tight()).unwrap();
+    let mut rng = Rng::new(0xF644);
+    let u = f64::EPSILON / 2.0;
+    for (m, n, k) in [(96usize, 80usize, 112usize), (100, 75, 33)] {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let exact = oracle::gemm_f64(&a, &b, m, n, k);
+        let (amax, bmax) = (max_abs_f64(&a), max_abs_f64(&b));
+        for depth in [1usize, 2] {
+            let run = strassen::run(&exec, PlusTimesF64, &a, &b, m, n, k, depth).unwrap();
+            let tol = strassen_tol(run.depth, k, u, amax, bmax);
+            for (&got, &want) in run.c.iter().zip(&exact) {
+                assert!(
+                    (got - want).abs() <= tol,
+                    "{m}x{n}x{k} depth {}: f64 bound violated",
+                    run.depth
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn measured_traffic_equals_predict_equals_sim_replay() {
+    let rt = Runtime::native_default().unwrap();
+    let exec =
+        TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float32", &tight()).unwrap();
+    assert_eq!(exec.tile_shape(), TILE16);
+    let mut rng = Rng::new(0x3A55);
+    let params = CostParams::default();
+    // Ragged shapes exercise the padding geometry; depth 2 on 96×80×112
+    // quarters down to 24×20×28 leaves, still above the tile floor.
+    for (m, n, k, depth) in [
+        (96usize, 80usize, 112usize, 1usize),
+        (96, 80, 112, 2),
+        (100, 75, 33, 1),
+        (128, 128, 128, 1),
+    ] {
+        let a = rng.fill_normal_f32(m * k);
+        let b = rng.fill_normal_f32(k * n);
+        let run = strassen::run(&exec, PlusTimesF32, &a, &b, m, n, k, depth).unwrap();
+        assert_eq!(run.depth, depth, "{m}x{n}x{k}: requested depth is feasible");
+        let cost = predict(m, n, k, TILE16, 4, depth, &params);
+        let sim = strassen_traffic(m, n, k, TILE16, depth);
+        // The three legs: measured == model == replay.
+        assert_eq!(
+            run.transfer_elements, cost.device_traffic_elements,
+            "{m}x{n}x{k} depth {depth}: measured vs predict"
+        );
+        assert_eq!(
+            run.transfer_elements, sim.total,
+            "{m}x{n}x{k} depth {depth}: measured vs sim replay"
+        );
+        // And the host-side combine volume pins against the model too.
+        assert_eq!(
+            run.host_combine_elements, cost.host_combine_elements,
+            "{m}x{n}x{k} depth {depth}: combine accounting"
+        );
+        assert_eq!(run.base_products as u64, cost.base_products);
+        assert_eq!(cost.base_products, sim.base_products);
+    }
+    // Traffic is counted in elements: the f64 instantiation replays to
+    // the same numbers.
+    let exec64 =
+        TiledExecutor::for_algebra_with(&rt, Semiring::PlusTimes, "float64", &tight()).unwrap();
+    let (m, n, k) = (96usize, 80usize, 112usize);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.next_f64()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.next_f64()).collect();
+    let run = strassen::run(&exec64, PlusTimesF64, &a, &b, m, n, k, 1).unwrap();
+    assert_eq!(run.transfer_elements, strassen_traffic(m, n, k, TILE16, 1).total);
+}
+
+#[test]
+fn service_strassen_jobs_divert_and_pin_traffic() {
+    let config = ServiceConfig {
+        queue_capacity: 8,
+        pipeline_depth: 2,
+        profile: tight(),
+        ..ServiceConfig::default()
+    };
+    let service =
+        GemmService::start_with_config(PathBuf::from("/nonexistent/artifacts"), 1, config)
+            .expect("service");
+    let mut rng = Rng::new(0x5E44);
+    let (m, n, k) = (96usize, 80usize, 112usize);
+    let a: Vec<f32> = rng.fill_normal_f32(m * k);
+    let b: Vec<f32> = rng.fill_normal_f32(k * n);
+
+    // The worker's classical accounting, rebuilt locally.
+    let (tm, tn, tk) = (16usize, 16usize, 16usize);
+    let order = Order::select(m, n, k, tm, tn, tk);
+    let plan = TilePlan::with_order(m, n, k, tm, tn, tk, order);
+    use PanelSource::Fresh;
+
+    // Forced-classical job: the packed pipeline, plan-pinned traffic.
+    let classical = service
+        .submit_typed(GemmJob::f32(m, n, k, a.clone(), b.clone()).with_algo(Algo::Classical))
+        .recv()
+        .expect("reply")
+        .expect("classical job");
+    assert_eq!(classical.transfer_elements, plan.transfer_elements_packed(Fresh, Fresh));
+
+    // Forced-Strassen job on private ring operands: diverted through
+    // the recursion, traffic pinned against the independent replay.
+    let fast = service
+        .submit_typed(
+            GemmJob::f32(m, n, k, a.clone(), b.clone()).with_algo(Algo::Strassen { depth: 1 }),
+        )
+        .recv()
+        .expect("reply")
+        .expect("strassen job");
+    assert_eq!(
+        fast.transfer_elements,
+        strassen_traffic(m, n, k, (tm, tn, tk), 1).total,
+        "service Strassen run vs recursion replay"
+    );
+    assert_eq!(fast.a_panels, Fresh);
+    assert_eq!(fast.b_panels, Fresh);
+    // Within the depth-1 bound of the classical result.
+    let (amax, bmax) = (max_abs_f32(&a), max_abs_f32(&b));
+    let tol = strassen_tol(1, k, f32::EPSILON as f64 / 2.0, amax, bmax);
+    let (cf, cc) = (fast.c.as_f32().unwrap(), classical.c.as_f32().unwrap());
+    for (&got, &want) in cf.iter().zip(cc) {
+        assert!((got as f64 - want as f64).abs() <= tol, "service Strassen vs classical");
+    }
+
+    // A non-ring job asking for Strassen stays classical — same result
+    // bits and same packed-plan traffic as its unforced twin.
+    let mp_a: Vec<f32> = (0..m * k).map(|_| rng.next_f32() * 10.0).collect();
+    let mp_b: Vec<f32> = (0..k * n).map(|_| rng.next_f32() * 10.0).collect();
+    let plain = service
+        .submit_typed(GemmJob::min_plus(m, n, k, mp_a.clone(), mp_b.clone()))
+        .recv()
+        .expect("reply")
+        .expect("min-plus job");
+    let forced = service
+        .submit_typed(
+            GemmJob::min_plus(m, n, k, mp_a, mp_b).with_algo(Algo::Strassen { depth: 2 }),
+        )
+        .recv()
+        .expect("reply")
+        .expect("forced min-plus job");
+    assert_eq!(forced.c, plain.c, "min-plus ignores the Strassen request bit-identically");
+    assert_eq!(forced.transfer_elements, plain.transfer_elements);
+    service.shutdown();
+}

@@ -83,6 +83,14 @@ echo "== cargo test -q --test net_panel_cache =="
 # forbid loopback sockets.
 cargo test -q --test net_panel_cache
 
+echo "== cargo test -q --test strassen =="
+# The fast-algorithm gate: non-ring algebras and sub-cutoff shapes
+# bit-identical to classical, ring Strassen inside the documented
+# error bound vs the naive oracle, and depth-1/2 traffic pinned
+# measured == cost model == recursion-aware sim replay — run by name
+# for the same reason.
+cargo test -q --test strassen
+
 echo "== cargo bench --bench hotpath -- --quick =="
 cargo bench --bench hotpath -- --quick
 
@@ -98,7 +106,8 @@ tuned_i32_gflops tuned_u32_gflops tuned_minplus_gflops tuned_mr tuned_nr tuned_m
 tuned_kc tuned_nc simd_available cluster_f32_512_gflops cluster_shards cluster_devices \
 panel_cache_hit_ratio shared_b_batch_speedup recovery_overhead_ratio shed_fraction \
 net_wire_bytes net_recovery_overhead_ratio net_reconnects net_cold_wire_bytes \
-net_warm_wire_bytes net_panel_hit_ratio"
+net_warm_wire_bytes net_panel_hit_ratio strassen_crossover_n \
+strassen_depth1_speedup strassen_max_rel_err strassen_speedup_waived"
 if [ ! -f BENCH_hotpath.json ]; then
   echo "BENCH_hotpath.json missing after bench run" >&2
   exit 1
@@ -160,11 +169,28 @@ if metrics["net_warm_wire_bytes"] > 0.6 * metrics["net_cold_wire_bytes"]:
     sys.exit("BENCH_hotpath.json warm/cold wire-byte ratio %.3f above the 0.6 "
              "gate (warm shared-B jobs must ride the worker panel cache)"
              % (metrics["net_warm_wire_bytes"] / metrics["net_cold_wire_bytes"]))
+# Strassen gates: the depth-1 run must beat classical at the full
+# 2048^3 bench size unless the bench logged an explicit waiver (quick
+# mode stops below the crossover; a tuned kernel fast enough that the
+# cost model itself keeps classical waives too), the empirical error
+# against the classical result must stay inside the 1e-4 normalized
+# threshold, and the predicted crossover must be either absent (-1) or
+# a sane size.
+if metrics["strassen_speedup_waived"] < 1.0 and metrics["strassen_depth1_speedup"] < 1.0:
+    sys.exit("BENCH_hotpath.json strassen_depth1_speedup %.2fx below 1.0 at the "
+             "full bench size with no logged waiver"
+             % metrics["strassen_depth1_speedup"])
+if metrics["strassen_max_rel_err"] > 1e-4:
+    sys.exit("BENCH_hotpath.json strassen_max_rel_err %.3e above the 1e-4 gate"
+             % metrics["strassen_max_rel_err"])
+if metrics["strassen_crossover_n"] != -1 and metrics["strassen_crossover_n"] < 64:
+    sys.exit("BENCH_hotpath.json strassen_crossover_n degenerate")
 print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx (gate %.1fx, tuned %.2fx, "
       "blocking %dx%d mc %d kc %d nc %d), cluster %.0f shards on "
       "%.0f devices at %.2f GF/s, shared-B batch %.2fx (hit ratio %.2f), "
       "recovery overhead %.3fx, shed fraction %.2f, net wire %.0f bytes "
-      "(net recovery %.3fx, %.0f reconnects), over %d entries"
+      "(net recovery %.3fx, %.0f reconnects), strassen d1 %.2fx "
+      "(err %.1e, waived %.0f, crossover %.0f), over %d entries"
       % (metrics["kernel512_speedup"], gate, metrics["tuned_vs_scalar_speedup"],
          metrics["tuned_mr"], metrics["tuned_nr"], metrics["tuned_mc"],
          metrics["tuned_kc"], metrics["tuned_nc"], metrics["cluster_shards"],
@@ -172,7 +198,9 @@ print("BENCH_hotpath.json OK: kernel512_speedup=%.2fx (gate %.1fx, tuned %.2fx, 
          metrics["shared_b_batch_speedup"], metrics["panel_cache_hit_ratio"],
          metrics["recovery_overhead_ratio"], metrics["shed_fraction"],
          metrics["net_wire_bytes"], metrics["net_recovery_overhead_ratio"],
-         metrics["net_reconnects"], len(data["entries"])))
+         metrics["net_reconnects"], metrics["strassen_depth1_speedup"],
+         metrics["strassen_max_rel_err"], metrics["strassen_speedup_waived"],
+         metrics["strassen_crossover_n"], len(data["entries"])))
 PY
 else
   # No python3: fall back to a field-presence grep.
